@@ -1,0 +1,90 @@
+//! Flocking visualizer: renders the paper's Figure-1 heatmap as ASCII in
+//! the terminal — relative FF activation magnitudes for a sequence, with
+//! the vertical streaks (= flocking) visible directly.
+//!
+//!     cargo run --release --example flocking_viz [model] [layer]
+
+use griffin::coordinator::engine::Engine;
+use griffin::runtime::DeviceTensor;
+use griffin::test_support::artifact_path;
+use griffin::tokenizer::Tokenizer;
+use griffin::workload::{corpus, tasks};
+
+const SHADES: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1)
+        .unwrap_or_else(|| "small-swiglu".to_string());
+    let dir = artifact_path(&model);
+    let trained = griffin::config::Manifest::load(&dir)?
+        .trained_weights_file
+        .is_some();
+    let engine = Engine::load(&dir, trained)?;
+    let cfg = engine.config().clone();
+    let layer: usize = std::env::args()
+        .nth(2)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(cfg.n_layers / 2);
+
+    let spec = engine
+        .session
+        .manifest
+        .executables
+        .values()
+        .find(|e| e.kind == "activations")
+        .expect("activations artifact (make artifacts)")
+        .clone();
+    let s_bucket = spec.seq.unwrap();
+
+    let tok = Tokenizer::new();
+    let text = corpus::corpus(tasks::HELDOUT_SEED + 3, 2, 24);
+    let ids = tok.encode(&text);
+    let (row, real) = engine.tokenizer.fit(&ids, s_bucket);
+    let toks = engine.session.upload_i32(&[1, s_bucket], &row)?;
+    let lens = engine.session.upload_i32(&[1], &[real as i32])?;
+    let mut args: Vec<&DeviceTensor> = engine.weights.ordered();
+    args.push(&toks);
+    args.push(&lens);
+    let outs = engine.session.run(&spec.name, &args)?;
+    let zbar = outs[0].to_f32()?;
+    let f = cfg.d_ff;
+
+    // terminal raster: rows = tokens (subsampled), cols = neurons
+    let max_rows = 48usize;
+    let max_cols = 120usize;
+    let row_step = (real / max_rows).max(1);
+    let col_step = (f / max_cols).max(1);
+    // normalize by the global max for a stable ramp
+    let mut vmax = 0f32;
+    for t in 0..real {
+        for j in 0..f {
+            vmax = vmax.max(zbar[(layer * s_bucket + t) * f + j]);
+        }
+    }
+    println!(
+        "relative FF activation magnitudes — {model}, layer {layer} \
+         ({} tokens x {} neurons; darker = stronger)\n",
+        real, f
+    );
+    for t in (0..real).step_by(row_step).take(max_rows) {
+        let mut line = String::with_capacity(max_cols);
+        for j in (0..f).step_by(col_step).take(max_cols) {
+            // max-pool the block so streaks survive subsampling
+            let mut v = 0f32;
+            for tt in t..(t + row_step).min(real) {
+                for jj in j..(j + col_step).min(f) {
+                    v = v.max(zbar[(layer * s_bucket + tt) * f + jj]);
+                }
+            }
+            let idx = ((v / vmax).powf(0.5) * (SHADES.len() - 1) as f32)
+                .round() as usize;
+            line.push(SHADES[idx.min(SHADES.len() - 1)]);
+        }
+        println!("{line}");
+    }
+    println!(
+        "\nvertical streaks = neurons consistently active across the \
+         sequence (flocking, paper §4.1)."
+    );
+    Ok(())
+}

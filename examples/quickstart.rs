@@ -1,0 +1,53 @@
+//! Quickstart: load a model, generate with the full model and with
+//! GRIFFIN at 50% FF sparsity, compare output + latency.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the paper's Figure-3 flow in ~40 lines of user code:
+//! prompt phase (full model, statistic s collected) → top-k expert
+//! selection → gather → generation phase with the pruned FF blocks.
+
+use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::sequence::GenRequest;
+use griffin::test_support::artifact_path;
+use griffin::tokenizer::Tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1)
+        .unwrap_or_else(|| "small-swiglu".to_string());
+    let dir = artifact_path(&model);
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("run `make artifacts` first (no artifacts for {model})");
+    }
+    // trained weights if the trainer has produced them
+    let trained = griffin::config::Manifest::load(&dir)?
+        .trained_weights_file
+        .is_some();
+    let mut engine = Engine::load(&dir, trained)?;
+    println!(
+        "model {model}: {:.2}M params, activation={}, d_ff={}",
+        engine.config().param_count as f64 / 1e6,
+        engine.config().activation,
+        engine.config().d_ff
+    );
+
+    let tok = Tokenizer::new();
+    let prompt = "= doc 7 : rivers =\nthe quiet river joins the deep lake . \
+                  the deep lake feeds the old mill . the quiet river";
+
+    for mode in [Mode::Full, Mode::griffin(0.5)] {
+        let req = GenRequest::greedy(
+            1, tok.encode_with_bos(prompt), 48, mode);
+        let resp = engine.generate(&req)?;
+        println!("\n--- {} (active params {:.2}M) ---",
+            mode.label(),
+            engine.config().active_params_at_k(
+                resp.k_used.unwrap_or(engine.config().d_ff)) as f64 / 1e6);
+        println!("{}", resp.text);
+        println!(
+            "prefill {:.0}ms | select {:.1}ms | decode {:.0}ms",
+            resp.prefill_ms, resp.select_ms, resp.decode_ms
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! End-to-end serving driver (DESIGN.md §5 / EXPERIMENTS.md §E2E):
+//! starts the TCP server, replays a request trace from concurrent client
+//! threads against the GRIFFIN engine, and reports latency/throughput —
+//! proving all layers compose: JSON protocol → router/backpressure →
+//! wave scheduler → prefill/select/gather/decode over PJRT.
+//!
+//!     cargo run --release --example serve_e2e [model] [n_requests]
+//!
+//! Defaults: small-swiglu (trained), 24 requests, mixed prompt lengths,
+//! half full-model / half GRIFFIN@50%.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use griffin::coordinator::engine::Engine;
+use griffin::json::{n, obj, s, Value};
+use griffin::test_support::artifact_path;
+use griffin::util::percentile;
+use griffin::workload::trace;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1)
+        .unwrap_or_else(|| "small-swiglu".to_string());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(24);
+    let dir = artifact_path(&model);
+    let trained = griffin::config::Manifest::load(&dir)?
+        .trained_weights_file
+        .is_some();
+    let engine = Engine::load(&dir, trained)?;
+    let cfg = engine.config().clone();
+    let metrics = engine.metrics.clone();
+
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(engine, "127.0.0.1:0", 256)?;
+    let addr = handle.addr.to_string();
+    println!("serving {model} on {addr}; replaying {n_requests} requests");
+
+    let reqs = trace::generate(&trace::TraceSpec {
+        seed: 42,
+        n_requests,
+        prompt_len: cfg.prefill_buckets[cfg.prefill_buckets.len() / 2],
+        gen_len: 24,
+        mean_gap_ms: 0,
+        mixed_lengths: true,
+    });
+
+    let done = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut client_threads = Vec::new();
+    let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let tokens_out = Arc::new(AtomicUsize::new(0));
+    // 4 concurrent client connections, each sending its slice of the trace
+    for (ci, chunk) in reqs.chunks(n_requests.div_ceil(4)).enumerate() {
+        let addr = addr.clone();
+        let chunk: Vec<trace::TraceRequest> = chunk.to_vec();
+        let done = done.clone();
+        let latencies = latencies.clone();
+        let tokens_out = tokens_out.clone();
+        client_threads.push(std::thread::spawn(move || {
+            let tok = griffin::tokenizer::Tokenizer::new();
+            let mut client =
+                griffin::server::Client::connect(&addr).unwrap();
+            for (i, r) in chunk.iter().enumerate() {
+                let mode =
+                    if (ci + i) % 2 == 0 { "griffin" } else { "full" };
+                let prompt_text = tok.decode(&r.prompt);
+                let t = Instant::now();
+                let resp = client
+                    .call(&obj(vec![
+                        ("op", s("generate")),
+                        ("prompt", s(&prompt_text)),
+                        ("max_new_tokens", n(r.max_new_tokens as f64)),
+                        ("mode", s(mode)),
+                    ]))
+                    .unwrap();
+                let dt = t.elapsed().as_secs_f64() * 1e3;
+                latencies.lock().unwrap().push(dt);
+                if let Some(Value::Arr(toks)) =
+                    resp.get("tokens").cloned()
+                {
+                    tokens_out.fetch_add(toks.len(), Ordering::Relaxed);
+                }
+                assert_eq!(
+                    resp.get("op").and_then(Value::as_str),
+                    Some("generate"),
+                    "bad reply: {resp:?}"
+                );
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+
+    // engine loop on the main thread until all requests completed
+    {
+        let waiters = waiters.clone();
+        let done = done.clone();
+        scheduler.serve(
+            move |resp| {
+                let tx = waiters.lock().unwrap().remove(&resp.id);
+                if let Some(tx) = tx {
+                    let _ = tx.send(resp);
+                }
+            },
+            &move || done.load(Ordering::Relaxed) >= n_requests,
+        )?;
+    }
+    for t in client_threads {
+        t.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+
+    let lat = latencies.lock().unwrap().clone();
+    let toks = tokens_out.load(Ordering::Relaxed);
+    println!("\n=== end-to-end serving report ===");
+    println!("requests      : {n_requests} ({} ok)", lat.len());
+    println!("wall time     : {wall:.2}s");
+    println!("throughput    : {:.2} req/s, {:.1} gen tok/s",
+             n_requests as f64 / wall, toks as f64 / wall);
+    println!("latency p50   : {:.0} ms", percentile(&lat, 50.0));
+    println!("latency p90   : {:.0} ms", percentile(&lat, 90.0));
+    println!("latency p99   : {:.0} ms", percentile(&lat, 99.0));
+    let snap = metrics.prefill_latency.snapshot();
+    println!("prefill p50   : {:.0} ms (count {})",
+             snap.p50_us / 1e3, snap.count);
+    let snap = metrics.decode_step_latency.snapshot();
+    println!("decode-step p50: {:.2} ms (count {})",
+             snap.p50_us / 1e3, snap.count);
+
+    // machine-readable record for EXPERIMENTS.md
+    let report = obj(vec![
+        ("model", s(&model)),
+        ("requests", n(n_requests as f64)),
+        ("wall_s", n(wall)),
+        ("req_per_s", n(n_requests as f64 / wall)),
+        ("gen_tok_per_s", n(toks as f64 / wall)),
+        ("latency_p50_ms", n(percentile(&lat, 50.0))),
+        ("latency_p90_ms", n(percentile(&lat, 90.0))),
+    ]);
+    let path = griffin::test_support::results_path(
+        &format!("e2e_serving_{model}.json"));
+    std::fs::write(&path, griffin::json::to_string(&report))?;
+    println!("-> {}", path.display());
+    Ok(())
+}

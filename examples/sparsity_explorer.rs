@@ -1,0 +1,83 @@
+//! Sparsity explorer: for one prompt, walk the compiled k-bucket ladder
+//! and print generation quality + latency at each FF width — the
+//! interactive version of the paper's Figure 4 trade-off.
+//!
+//!     cargo run --release --example sparsity_explorer [model] ["prompt"]
+
+use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::sequence::GenRequest;
+use griffin::eval;
+use griffin::test_support::artifact_path;
+use griffin::tokenizer::Tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1)
+        .unwrap_or_else(|| "small-swiglu".to_string());
+    let prompt = std::env::args().nth(2).unwrap_or_else(|| {
+        "= doc 3 : hills =\nthe old hill shadows the green meadow . \
+         the green meadow feeds the old hill . the old hill"
+            .to_string()
+    });
+    let dir = artifact_path(&model);
+    let trained = griffin::config::Manifest::load(&dir)?
+        .trained_weights_file
+        .is_some();
+    let mut engine = Engine::load(&dir, trained)?;
+    let cfg = engine.config().clone();
+    let tok = Tokenizer::new();
+
+    // reference generation from the full model
+    let mut req =
+        GenRequest::greedy(1, tok.encode_with_bos(&prompt), 48, Mode::Full);
+    req.stop_at_eos = false;
+    let full = engine.generate(&req)?;
+    println!("prompt: {prompt}\n");
+    println!(
+        "{:<10} {:>8} {:>12} {:>12} {:>10}  completion",
+        "keep", "k", "decode_ms", "agree@48", "rouge1"
+    );
+    println!(
+        "{:<10} {:>8} {:>12.0} {:>12} {:>10}  {}",
+        "full",
+        cfg.d_ff,
+        full.decode_ms,
+        "1.00",
+        "1.00",
+        full.text.replace('\n', "\\n")
+    );
+
+    for &k in cfg.keep_ks.iter().rev() {
+        if k >= cfg.d_ff {
+            continue;
+        }
+        let keep = k as f64 / cfg.d_ff as f64;
+        let mut req = GenRequest::greedy(
+            1, tok.encode_with_bos(&prompt), 48, Mode::griffin(keep));
+        req.stop_at_eos = false;
+        let resp = engine.generate(&req)?;
+        // token-level agreement with the full model's generation
+        let agree = resp
+            .tokens
+            .iter()
+            .zip(&full.tokens)
+            .take_while(|(a, b)| a == b)
+            .count() as f64
+            / full.tokens.len() as f64;
+        let r1 = eval::rouge_n(&resp.text, &full.text, 1).f1;
+        println!(
+            "{:<10.3} {:>8} {:>12.0} {:>12.2} {:>10.2}  {}",
+            keep,
+            k,
+            resp.decode_ms,
+            agree,
+            r1,
+            resp.text.replace('\n', "\\n")
+        );
+    }
+    println!(
+        "\nagree@48 = length of the shared greedy prefix with the full \
+         model;\nrouge1 vs the full model's own completion (not a gold \
+         reference)."
+    );
+    Ok(())
+}

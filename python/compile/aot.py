@@ -1,0 +1,398 @@
+"""AOT emitter: lowers every Layer-2 executable to HLO text + manifest.
+
+Interchange format is HLO **text** (not serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --configs tiny-swiglu ...
+
+Outputs, per config:
+    artifacts/<name>/manifest.json     executable + ABI description
+    artifacts/<name>/weights.bin       random-init weights (GWT1)
+    artifacts/<name>/*.hlo.txt         one per executable
+
+plus shared artifacts:
+    artifacts/corpus.txt               deterministic tiny-lang corpus
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs as cfgs
+from . import corpus as corpus_mod
+from . import model, tensorfile
+
+F32 = "f32"
+I32 = "i32"
+
+# Fused-generation step buckets (lax.scan trip counts). Scan lowers to a
+# while-loop so HLO size is G-independent; more buckets cost only lowering
+# time.
+GEN_BUCKETS = {"tiny": [16, 64, 128], "small": [16, 64, 128],
+               "wide": [16, 64, 128], "base": [32]}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def io_entry(name, shape, dtype=F32):
+    return {"name": name, "shape": [int(d) for d in shape], "dtype": dtype}
+
+
+class Emitter:
+    def __init__(self, cfg: cfgs.ModelConfig, out_dir: str,
+                 use_pallas: bool = False):
+        self.cfg = cfg
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.use_pallas = use_pallas
+        self.executables = {}
+        self.param_names = [n for n, _ in model.param_specs(cfg)]
+        self.param_shapes = dict(model.param_specs(cfg))
+        self.nonff_names = [
+            n for n in self.param_names
+            if n not in model.ff_param_names(cfg)
+        ]
+
+    # -- helpers ----------------------------------------------------------
+
+    def param_specs_args(self, names):
+        return [spec(self.param_shapes[n]) for n in names]
+
+    def cache_spec(self, B):
+        c = self.cfg
+        return spec((c.n_layers, B, c.n_heads, c.max_seq, c.head_dim))
+
+    def pruned_names(self):
+        return ["w1p", "w2p"] + (["wgp"] if self.cfg.is_glu else [])
+
+    def pruned_specs(self, K):
+        c = self.cfg
+        shapes = {
+            "w1p": (c.n_layers, K, c.d_model),
+            "w2p": (c.n_layers, c.d_model, K),
+            "wgp": (c.n_layers, K, c.d_model),
+        }
+        return [spec(shapes[n]) for n in self.pruned_names()]
+
+    def emit(self, name, fn, arg_specs, inputs, outputs, meta):
+        t0 = time.time()
+        # keep_unused: the manifest ABI passes the full param list to every
+        # executable; without it jax prunes unused params from the lowered
+        # signature (e.g. activation_map never touches head/ln_f) and the
+        # runtime's argument count no longer matches.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.dir, fname), "w") as f:
+            f.write(text)
+        self.executables[name] = {
+            "file": fname, "inputs": inputs, "outputs": outputs, **meta,
+        }
+        print(f"  [{self.cfg.name}] {name}: {len(text)/1e3:.0f}kB "
+              f"({time.time()-t0:.1f}s)")
+
+    # -- executables ------------------------------------------------------
+
+    def emit_prefill(self, B, S):
+        cfg, names = self.cfg, self.param_names
+        up = self.use_pallas
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            tokens, lengths = args[len(names)], args[len(names) + 1]
+            return model.prefill(cfg, params, tokens, lengths, up)
+
+        arg_specs = self.param_specs_args(names) + [
+            spec((B, S), jnp.int32), spec((B,), jnp.int32)]
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("tokens", (B, S), I32),
+                     io_entry("lengths", (B,), I32)])
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        outputs = [
+            io_entry("logits", (B, S, cfg.vocab_size)),
+            io_entry("kcache", cshape),
+            io_entry("vcache", cshape),
+            io_entry("stats", (cfg.n_layers, B, cfg.d_ff)),
+            io_entry("xnorms", (cfg.n_layers, B, cfg.d_model)),
+            io_entry("znorms", (cfg.n_layers, B, cfg.d_ff)),
+        ]
+        self.emit(f"prefill_b{B}_s{S}", fn, arg_specs, inputs, outputs,
+                  {"kind": "prefill", "batch": B, "seq": S})
+
+    def emit_decode(self, B):
+        cfg, names = self.cfg, self.param_names
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            kc, vc, tok, pos = args[len(names):len(names) + 4]
+            return model.decode(cfg, params, kc, vc, tok, pos)
+
+        cspec = self.cache_spec(B)
+        arg_specs = self.param_specs_args(names) + [
+            cspec, cspec, spec((B,), jnp.int32), spec((B,), jnp.int32)]
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)])
+        outputs = [io_entry("logits", (B, cfg.vocab_size)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape)]
+        self.emit(f"decode_b{B}", fn, arg_specs, inputs, outputs,
+                  {"kind": "decode", "batch": B})
+
+    def emit_decode_pruned(self, B, K):
+        cfg = self.cfg
+        nonff, pn = self.nonff_names, self.pruned_names()
+
+        def fn(*args):
+            params = dict(zip(nonff, args))
+            pruned = dict(zip(pn, args[len(nonff):len(nonff) + len(pn)]))
+            kc, vc, tok, pos = args[len(nonff) + len(pn):]
+            return model.decode_pruned(cfg, params, pruned, kc, vc, tok, pos)
+
+        cspec = self.cache_spec(B)
+        pspecs = self.pruned_specs(K)
+        arg_specs = (self.param_specs_args(nonff) + pspecs
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)])
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in nonff]
+                  + [io_entry(n, s.shape) for n, s in zip(pn, pspecs)]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)])
+        outputs = [io_entry("logits", (B, cfg.vocab_size)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape)]
+        self.emit(f"decode_pruned_b{B}_k{K}", fn, arg_specs, inputs, outputs,
+                  {"kind": "decode_pruned", "batch": B, "k": K})
+
+    def emit_gather(self, K):
+        cfg = self.cfg
+        ffn = model.ff_param_names(cfg)  # e.g. [w1, w2, wg]
+
+        def fn(*args):
+            params = dict(zip(ffn, args))
+            idx = args[len(ffn)]
+            out = model.gather_experts(cfg, params, idx)
+            return tuple(out[n] for n in self.pruned_names())
+
+        arg_specs = self.param_specs_args(ffn) + [
+            spec((cfg.n_layers, K), jnp.int32)]
+        pspecs = self.pruned_specs(K)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in ffn]
+                  + [io_entry("idx", (cfg.n_layers, K), I32)])
+        outputs = [io_entry(n, s.shape)
+                   for n, s in zip(self.pruned_names(), pspecs)]
+        self.emit(f"gather_k{K}", fn, arg_specs, inputs, outputs,
+                  {"kind": "gather", "k": K})
+
+    def emit_gather_masked(self, K):
+        cfg = self.cfg
+        ffn = model.ff_param_names(cfg)
+
+        def fn(*args):
+            params = dict(zip(ffn, args))
+            idx, mask = args[len(ffn)], args[len(ffn) + 1]
+            out = model.gather_experts_masked(cfg, params, idx, mask)
+            return tuple(out[n] for n in self.pruned_names())
+
+        arg_specs = self.param_specs_args(ffn) + [
+            spec((cfg.n_layers, K), jnp.int32),
+            spec((cfg.n_layers, K))]
+        pspecs = self.pruned_specs(K)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in ffn]
+                  + [io_entry("idx", (cfg.n_layers, K), I32),
+                     io_entry("mask", (cfg.n_layers, K))])
+        outputs = [io_entry(n, s.shape)
+                   for n, s in zip(self.pruned_names(), pspecs)]
+        self.emit(f"gather_masked_k{K}", fn, arg_specs, inputs, outputs,
+                  {"kind": "gather_masked", "k": K})
+
+    def emit_generate_scan(self, B, G, K=None):
+        """K=None -> full-model scan; K -> pruned scan."""
+        cfg = self.cfg
+        pruned = K is not None
+        names = self.nonff_names if pruned else self.param_names
+        pn = self.pruned_names() if pruned else []
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            off = len(names)
+            if pruned:
+                pd = dict(zip(pn, args[off:off + len(pn)]))
+                wg = pd.get("wgp") if cfg.is_glu else None
+                ffw = (wg, pd["w1p"], pd["w2p"])
+                off += len(pn)
+            else:
+                wg = params["wg"] if cfg.is_glu else None
+                ffw = (wg, params["w1"], params["w2"])
+            kc, vc, tok, pos = args[off:off + 4]
+            return model.generate_scan(cfg, params, ffw, kc, vc, tok, pos, G)
+
+        cspec = self.cache_spec(B)
+        pspecs = self.pruned_specs(K) if pruned else []
+        arg_specs = (self.param_specs_args(names) + pspecs
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)])
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry(n, s.shape) for n, s in zip(pn, pspecs)]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)])
+        outputs = [io_entry("tokens", (G, B), I32),
+                   io_entry("logprobs", (G, B)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape),
+                   io_entry("last_token", (B,), I32),
+                   io_entry("last_pos", (B,), I32)]
+        name = (f"generate_scan_pruned_b{B}_k{K}_g{G}" if pruned
+                else f"generate_scan_b{B}_g{G}")
+        self.emit(name, fn, arg_specs, inputs, outputs,
+                  {"kind": "generate_scan_pruned" if pruned
+                   else "generate_scan",
+                   "batch": B, "gen": G, **({"k": K} if pruned else {})})
+
+    def emit_activations(self, S):
+        """Per-token relative FF activations (Figs 1/7 flocking maps)."""
+        cfg, names = self.cfg, self.param_names
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            tokens, lengths = args[len(names)], args[len(names) + 1]
+            return model.activation_map(cfg, params, tokens, lengths)
+
+        arg_specs = self.param_specs_args(names) + [
+            spec((1, S), jnp.int32), spec((1,), jnp.int32)]
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("tokens", (1, S), I32),
+                     io_entry("lengths", (1,), I32)])
+        outputs = [io_entry("zbar", (cfg.n_layers, S, cfg.d_ff))]
+        self.emit(f"activations_s{S}", fn, arg_specs, inputs, outputs,
+                  {"kind": "activations", "batch": 1, "seq": S})
+
+    def emit_kernel_parity(self, S):
+        cfg = self.cfg
+        D, F = cfg.d_model, cfg.d_ff
+
+        def fn(x, wg, w1, w2):
+            return model.kernel_parity(cfg, x, wg, w1, w2)
+
+        arg_specs = [spec((S, D)), spec((F, D)), spec((F, D)), spec((D, F))]
+        inputs = [io_entry("x", (S, D)), io_entry("wg", (F, D)),
+                  io_entry("w1", (F, D)), io_entry("w2", (D, F))]
+        outputs = [io_entry("ff_pallas", (S, D)), io_entry("ff_ref", (S, D)),
+                   io_entry("s_pallas", (F,)), io_entry("s_ref", (F,))]
+        self.emit(f"kernel_parity_s{S}", fn, arg_specs, inputs, outputs,
+                  {"kind": "kernel_parity", "seq": S})
+
+    # -- top-level --------------------------------------------------------
+
+    def emit_all(self, full_sweep: bool = True, parity: bool = True):
+        cfg = self.cfg
+        ks = cfg.keep_ks()
+        k_half = min(ks, key=lambda k: abs(k - cfg.d_ff // 2))
+        size = cfg.name.split("-")[0]
+        gens = GEN_BUCKETS.get(size, [32])
+
+        for B in cfg.batch_buckets:
+            for S in cfg.prefill_buckets:
+                if S <= cfg.max_seq:
+                    self.emit_prefill(B, S)
+            self.emit_decode(B)
+            bks = ks if (B == 1 and full_sweep) else [k_half]
+            for K in bks:
+                if K < cfg.d_ff:
+                    self.emit_decode_pruned(B, K)
+        for K in ks:
+            if K < cfg.d_ff:
+                self.emit_gather(K)
+        # masked gather only at the headline bucket (layer-adaptive mode)
+        if k_half < cfg.d_ff:
+            self.emit_gather_masked(k_half)
+        for G in gens:
+            self.emit_generate_scan(1, G)
+            if k_half < cfg.d_ff:
+                self.emit_generate_scan(1, G, K=k_half)
+        if parity:
+            self.emit_kernel_parity(S=min(cfg.prefill_buckets))
+        self.emit_activations(S=max(cfg.prefill_buckets))
+
+    def write_weights(self, seed: int = 0):
+        params = model.init_params(self.cfg, seed)
+        tensors = {k: np.asarray(v) for k, v in params.items()}
+        tensorfile.write(os.path.join(self.dir, "weights.bin"), tensors)
+
+    def write_manifest(self):
+        manifest = {
+            "format": 1,
+            "config": self.cfg.to_dict(),
+            "param_order": self.param_names,
+            "nonff_param_order": self.nonff_names,
+            "pruned_param_order": self.pruned_names(),
+            "weights": "weights.bin",
+            "executables": self.executables,
+        }
+        if os.path.exists(os.path.join(self.dir, "weights_trained.bin")):
+            manifest["trained_weights"] = "weights_trained.bin"
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+DEFAULT_CONFIGS = ["tiny-swiglu", "tiny-relu", "small-swiglu"]
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--configs", nargs="*", default=DEFAULT_CONFIGS)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--pallas", action="store_true",
+                   help="lower the model through the Pallas kernels "
+                        "(interpret mode) instead of the jnp path")
+    p.add_argument("--no-sweep", action="store_true",
+                   help="only emit the 50%%-sparsity operating point")
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cpath = os.path.join(args.out_dir, "corpus.txt")
+    if not os.path.exists(cpath):
+        text = corpus_mod.corpus(seed=7, n_docs=96)
+        with open(cpath, "w") as f:
+            f.write(text)
+        print(f"corpus: {len(text)} bytes")
+
+    t0 = time.time()
+    for name in args.configs:
+        cfg = cfgs.get(name)
+        em = Emitter(cfg, args.out_dir, use_pallas=args.pallas)
+        print(f"{name}: {cfg.param_count()/1e6:.1f}M params")
+        em.emit_all(full_sweep=not args.no_sweep)
+        em.write_weights(args.seed)
+        em.write_manifest()
+    print(f"total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Model configuration registry (Layer 2).
+
+Each config describes a decoder-only transformer LM. The rust coordinator
+mirrors this structure via artifacts/<name>/manifest.json — python is the
+single source of truth at build time.
+
+Activation zoo (paper §3): the paper evaluates GRIFFIN across SwiGLU
+(Llama 2 / Mistral), GEGLU (Gemma), ReGLU (ReluLlama-style) and plain ReLU
+(OPT-style, non-GLU). We expose the same four FF variants.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+# Byte-level tokenizer: 256 bytes + BOS/EOS/PAD specials.
+VOCAB_SIZE = 259
+BOS_ID = 256
+EOS_ID = 257
+PAD_ID = 258
+
+GLU_ACTIVATIONS = ("swiglu", "geglu", "reglu")
+ACTIVATIONS = GLU_ACTIVATIONS + ("relu",)
+
+
+@dataclass
+class ModelConfig:
+    name: str
+    activation: str  # one of ACTIVATIONS
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    max_seq: int
+    vocab_size: int = VOCAB_SIZE
+    rope_theta: float = 10000.0
+    # serving buckets compiled by aot.py
+    batch_buckets: List[int] = field(default_factory=lambda: [1])
+    prefill_buckets: List[int] = field(default_factory=lambda: [128])
+    # FF keep-fractions for which decode_pruned executables are emitted.
+    # 0.5 is the paper's headline operating point (50% FF sparsity).
+    keep_fractions: List[float] = field(default_factory=lambda: [0.5])
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_glu(self) -> bool:
+        return self.activation in GLU_ACTIVATIONS
+
+    def keep_ks(self) -> List[int]:
+        """FF widths k (number of expert neurons) per keep fraction."""
+        ks = []
+        for f in self.keep_fractions:
+            k = max(8, int(round(self.d_ff * f)))
+            k = min(k, self.d_ff)
+            # round to a multiple of 8 for tiling friendliness
+            k = (k // 8) * 8
+            ks.append(k)
+        return sorted(set(ks))
+
+    def param_count(self) -> int:
+        d, f, l, v = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        per_layer = 4 * d * d + (3 if self.is_glu else 2) * d * f + 2 * d
+        return v * d * 2 + l * per_layer + d
+
+    def to_dict(self) -> dict:
+        out = asdict(self)
+        out["head_dim"] = self.head_dim
+        out["is_glu"] = self.is_glu
+        out["keep_ks"] = self.keep_ks()
+        out["param_count"] = self.param_count()
+        return out
+
+
+def _mk(name, act, d, h, l, dff, smax, bb, pb, kf) -> ModelConfig:
+    return ModelConfig(
+        name=name, activation=act, d_model=d, n_heads=h, n_layers=l,
+        d_ff=dff, max_seq=smax, batch_buckets=bb, prefill_buckets=pb,
+        keep_fractions=kf,
+    )
+
+
+# Fine-grained sparsity sweep used by the Fig-4 driver.
+SWEEP = [0.1, 0.2, 0.3, 0.4, 0.5, 0.625, 0.75, 0.9, 1.0]
+
+CONFIGS = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+# --- test-scale zoo: one per activation function (Table 1/2 model axis) ---
+for _act in ACTIVATIONS:
+    register(_mk(
+        f"tiny-{_act}", _act, d=64, h=4, l=4, dff=256, smax=256,
+        bb=[1, 4, 16], pb=[32, 64, 128], kf=SWEEP,
+    ))
+
+# --- trained quality model (used by the quality tables/figures) ---
+register(_mk(
+    "small-swiglu", "swiglu", d=96, h=6, l=4, dff=384, smax=512,
+    bb=[1, 4, 16], pb=[64, 128, 256], kf=SWEEP,
+))
+register(_mk(
+    "small-geglu", "geglu", d=96, h=6, l=4, dff=384, smax=512,
+    bb=[1, 4], pb=[64, 128, 256], kf=[0.5, 0.75],
+))
+
+# --- latency-study model: FF-dominated like production LLMs ---
+# Real LLMs spend ~2/3 of decode FLOPs in FF (D_ff/D = 4-8, §1); the tiny
+# configs above are attention-dominated (large Smax relative to D_ff), so
+# Table-3-style latency runs use this wide-FF config where the paper's
+# FF-pruning speedup is visible at CPU scale.
+register(_mk(
+    "wide-swiglu", "swiglu", d=128, h=8, l=4, dff=1024, smax=256,
+    bb=[1], pb=[64, 128], kf=[0.25, 0.5, 0.75],
+))
+
+# --- ~110M-parameter serving model for the end-to-end example ---
+register(_mk(
+    "base-swiglu", "swiglu", d=768, h=12, l=12, dff=3072, smax=512,
+    bb=[1], pb=[128], kf=[0.5, 0.75],
+))
+
+
+def get(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

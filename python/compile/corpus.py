@@ -1,0 +1,127 @@
+"""Deterministic synthetic corpus ("tiny-lang") generator.
+
+Substitute for the paper's WikiText / PG-19 / XSum corpora (no network in
+this environment). Design goals:
+
+* **learnable**: a small char-LM reaches low perplexity quickly, so
+  Full-vs-pruned comparisons have signal;
+* **topical**: each document draws its content words from a per-document
+  *topic* (a sparse subset of the lexicon) so that, like natural text,
+  sequence-level feature reuse exists — the property flocking feeds on;
+* **bit-reproducible across languages**: the PRNG is xorshift64*, also
+  implemented in rust/src/workload/corpus.rs; both sides generate the
+  *identical byte stream* for the same seed (tested cross-language).
+
+Documents look like:
+
+    = doc 17 : rivers =
+    the quiet river joins the deep lake . the deep lake feeds the old
+    mill . ...
+
+with a closing summary sentence, which the synthetic summarization task
+(rust workload/) uses as a rouge target.
+"""
+
+from typing import List, Tuple
+
+MASK64 = (1 << 64) - 1
+
+
+class XorShift64Star:
+    """xorshift64* PRNG; mirrored bit-for-bit in rust (workload/rng.rs)."""
+
+    def __init__(self, seed: int):
+        self.state = (seed or 0x9E3779B97F4A7C15) & MASK64
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x &= MASK64
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x & MASK64
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) via 64-bit multiply-shift."""
+        return ((self.next_u64() >> 11) * n) >> 53
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+
+# Lexicon: fixed word lists (ASCII only so the byte tokenizer is trivial).
+ADJECTIVES = [
+    "quiet", "deep", "old", "bright", "cold", "warm", "late", "early",
+    "small", "great", "dark", "pale", "swift", "slow", "young", "grey",
+    "green", "dry", "wet", "long", "short", "high", "low", "wide",
+]
+NOUNS = [
+    "river", "lake", "mill", "forest", "meadow", "harbor", "tower",
+    "garden", "bridge", "valley", "market", "castle", "road", "field",
+    "village", "mountain", "island", "cliff", "shore", "cabin", "barn",
+    "orchard", "well", "gate", "wall", "path", "stream", "grove",
+    "hill", "pond", "quarry", "dock",
+]
+VERBS = [
+    "joins", "feeds", "borders", "shadows", "guards", "faces", "follows",
+    "crosses", "circles", "meets", "holds", "shelters", "watches",
+    "touches", "skirts", "splits",
+]
+TOPICS = [
+    "rivers", "hills", "towns", "coasts", "farms", "woods", "roads",
+    "stones",
+]
+
+TOPIC_NOUN_COUNT = 6
+TOPIC_ADJ_COUNT = 5
+TOPIC_VERB_COUNT = 5
+
+
+def doc_topic(rng: XorShift64Star) -> Tuple[str, List[str], List[str], List[str]]:
+    """Sample a topic: a name and sparse noun/adjective/verb subsets."""
+    name = rng.choice(TOPICS)
+    nouns = [rng.choice(NOUNS) for _ in range(TOPIC_NOUN_COUNT)]
+    adjs = [rng.choice(ADJECTIVES) for _ in range(TOPIC_ADJ_COUNT)]
+    verbs = [rng.choice(VERBS) for _ in range(TOPIC_VERB_COUNT)]
+    return name, nouns, adjs, verbs
+
+
+def sentence(rng: XorShift64Star, nouns, adjs, verbs) -> str:
+    a1, n1 = rng.choice(adjs), rng.choice(nouns)
+    v = rng.choice(verbs)
+    a2, n2 = rng.choice(adjs), rng.choice(nouns)
+    return f"the {a1} {n1} {v} the {a2} {n2} ."
+
+
+def document(rng: XorShift64Star, index: int, n_sentences: int) -> str:
+    name, nouns, adjs, verbs = doc_topic(rng)
+    body = " ".join(sentence(rng, nouns, adjs, verbs) for _ in range(n_sentences))
+    # summary sentence: most repeated subject noun of the doc would need
+    # counting; tiny-lang uses the first topic noun as the canonical
+    # subject, which the generator repeats most often by construction.
+    summary = f"in short , the {adjs[0]} {nouns[0]} stands first ."
+    return f"= doc {index} : {name} =\n{body}\n{summary}\n"
+
+
+def corpus(seed: int, n_docs: int, sentences_per_doc: int = 24) -> str:
+    rng = XorShift64Star(seed)
+    return "\n".join(document(rng, i, sentences_per_doc) for i in range(n_docs))
+
+
+def main():
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--docs", type=int, default=64)
+    p.add_argument("--out", type=str, required=True)
+    args = p.parse_args()
+    text = corpus(args.seed, args.docs)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} bytes to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

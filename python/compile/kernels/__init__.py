@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels + pure-jnp reference oracles."""
+from . import attention, flock_stats, griffin_ffn, ref  # noqa: F401

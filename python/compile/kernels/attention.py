@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: causal flash-style attention (prefill path).
+
+Online-softmax attention with a grid over (head, query tile); K/V are
+streamed block-by-block inside the kernel with a fori_loop carrying the
+running (max, denominator, accumulator) triple — the FlashAttention
+recurrence. On TPU the q/o tiles live in VMEM and K/V blocks are staged
+through VMEM per iteration; on CPU we run interpret=True (see
+griffin_ffn.py for why).
+
+Decode-time attention (a single query over the KV cache) is a tiny
+matvec and is left to XLA fusion in the L2 model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, scale,
+                  q_offset):
+    """Grid step (head h, query tile iq): online softmax over K/V blocks."""
+    iq = pl.program_id(1)
+    q = q_ref[0] * scale  # [bq, dh]
+    bq = q.shape[0]
+    Sk = k_ref.shape[1]
+    dh = q.shape[-1]
+    n_kb = Sk // block_k
+
+    # absolute positions of the queries in this tile
+    qpos = q_offset + iq * bq + jax.lax.iota(jnp.int32, bq)  # [bq]
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (kb * block_k, 0), (block_k, dh))
+        v = jax.lax.dynamic_slice(v_ref[0], (kb * block_k, 0), (block_k, dh))
+        logits = q @ k.T  # [bq, bk]
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + jnp.sum(p, axis=1)
+        acc_new = acc * correction[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((bq,), dtype=q.dtype)
+    acc0 = jnp.zeros((bq, dh), dtype=q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-20)[:, None]
+
+
+def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128):
+    """Causal multi-head attention.
+
+    q: [H, S, dh]; k, v: [H, Sk, dh] with Sk >= S; query i sits at
+    absolute position (Sk - S + i). Returns [H, S, dh].
+    """
+    H, S, dh = q.shape
+    Sk = k.shape[1]
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(Sk, block_k)
+    scale = 1.0 / (dh ** 0.5)
+    kern = functools.partial(
+        _flash_kernel, block_q=bq, block_k=bk, scale=scale, q_offset=Sk - S
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(H, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Sk, dh), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, Sk, dh), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, S, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

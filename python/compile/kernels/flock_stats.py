@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernels for the GRIFFIN selection statistic (paper eq. 6).
+
+Two-pass schedule over the FF activation matrix Z [S, D_ff]:
+
+  pass 1 (`row_norms`):   r_i = ||Z_i||_2          — grid over S tiles,
+                           reduction over D_ff tiles accumulated in the
+                           output block (sum of squares, sqrt at the end).
+  pass 2 (`col_stat`):    s_j = sqrt( sum_i (Z_ij / r_i)^2 )
+                           — grid (D_ff tiles, S tiles), S is the inner
+                           (reduction) axis accumulated in the s block.
+
+The paper computes s once per FF block at the end of the prompt phase;
+its cost is O(S * D_ff) — negligible next to the O(S * D * D_ff) FF GEMMs
+(the "negligible overhead" claim of §1, which Table 3 confirms and our
+bench table3 re-measures).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _row_sq_kernel(z_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    z = z_ref[...]
+    o_ref[...] += jnp.sum(z * z, axis=1)
+
+
+def row_norms(z, block_s: int = 128, block_f: int = 128):
+    """r [S]: l2 norm of each row of z [S, F]."""
+    S, F = z.shape
+    bs = _pick_block(S, block_s)
+    bf = _pick_block(F, block_f)
+    sq = pl.pallas_call(
+        _row_sq_kernel,
+        grid=(S // bs, F // bf),
+        in_specs=[pl.BlockSpec((bs, bf), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bs,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((S,), z.dtype),
+        interpret=True,
+    )(z)
+    return jnp.sqrt(sq)
+
+
+def _col_stat_kernel(z_ref, r_ref, o_ref, *, eps):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    z = z_ref[...]  # [bs, bf]
+    r = jnp.maximum(r_ref[...], eps)[:, None]  # [bs, 1]
+    zbar = z / r
+    o_ref[...] += jnp.sum(zbar * zbar, axis=0)
+
+
+def flock_stat(z, eps: float = 1e-8, block_s: int = 128, block_f: int = 128):
+    """GRIFFIN statistic s [F] from FF activations z [S, F] (eq. 6)."""
+    import functools
+
+    S, F = z.shape
+    r = row_norms(z, block_s, block_f)
+    bs = _pick_block(S, block_s)
+    bf = _pick_block(F, block_f)
+    kern = functools.partial(_col_stat_kernel, eps=eps)
+    sq = pl.pallas_call(
+        kern,
+        # j (FF tiles) outer, i (S tiles) inner: accumulate over S per block
+        grid=(F // bf, S // bs),
+        in_specs=[
+            pl.BlockSpec((bs, bf), lambda j, i: (i, j)),
+            pl.BlockSpec((bs,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bf,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((F,), z.dtype),
+        interpret=True,
+    )(z, r)
+    return jnp.sqrt(sq)
+
+
+def flock_stat_batched(z, eps: float = 1e-8):
+    """s for a batch: z [B, S, F] -> [B, F]."""
+    return jax.vmap(lambda zz: flock_stat(zz, eps=eps))(z)

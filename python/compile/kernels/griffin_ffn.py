@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: gated feedforward block (the GRIFFIN hot path).
+
+This is the compute hot-spot the paper prunes: for GLU blocks
+``FF(x) = (sigma(x Wg^T) * (x W1^T)) @ W2^T`` — three GEMMs over the FF
+dimension D_ff. GRIFFIN's structured pruning shrinks D_ff to k, which in
+this kernel is literally a smaller grid along the D_ff axis: the pruned
+block runs ``k/bf`` instead of ``D_ff/bf`` tiles. Nothing else changes —
+that is the whole point of *structured* pruning, and why the speedup is
+~D_ff/k for FF-dominated steps.
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation): the CUDA implementation
+tiles over threadblocks with shared-memory staging; here BlockSpec
+expresses the HBM→VMEM schedule. Default tiles (bs=block_s, bf=block_f)
+are multiples of the 128x128 MXU systolic shape when dims allow; the
+accumulator for the FF_2 partial sums lives in the output VMEM block and
+is revisited across the D_ff grid axis (sequential `arbitrary` dimension
+semantics).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO. See
+python/tests/test_kernels.py for the hypothesis sweep against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (block sizes must tile n)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _ff_kernel_glu(x_ref, wg_ref, w1_ref, w2_ref, o_ref, *, activation):
+    """One (i, j) grid step: x tile [bs, D] x FF tile j -> accumulate o."""
+    j = pl.program_id(1)
+    act = ref.activation_fn(activation)
+    x = x_ref[...]
+    z = act(x @ wg_ref[...].T) * (x @ w1_ref[...].T)  # [bs, bf]
+    partial = z @ w2_ref[...].T  # [bs, D]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def _ff_kernel_plain(x_ref, w1_ref, w2_ref, o_ref, *, activation):
+    j = pl.program_id(1)
+    act = ref.activation_fn(activation)
+    x = x_ref[...]
+    z = act(x @ w1_ref[...].T)
+    partial = z @ w2_ref[...].T
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def gated_ff(x, wg, w1, w2, activation: str,
+             block_s: int = 128, block_f: int = 128):
+    """Pallas gated FF block. x: [S, D]; wg/w1: [F, D]; w2: [D, F] -> [S, D].
+
+    For pruned (GRIFFIN) execution, pass the gathered expert weights: the
+    same kernel runs with F = k and a proportionally smaller grid.
+    """
+    S, D = x.shape
+    F = w1.shape[0]
+    bs = _pick_block(S, block_s)
+    bf = _pick_block(F, block_f)
+    grid = (S // bs, F // bf)
+    kern = functools.partial(_ff_kernel_glu, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, D), x.dtype),
+        interpret=True,
+    )(x, wg, w1, w2)
+
+
+def plain_ff(x, w1, w2, activation: str,
+             block_s: int = 128, block_f: int = 128):
+    """Pallas non-GLU FF block (OPT-style). Shapes as gated_ff, no wg."""
+    S, D = x.shape
+    F = w1.shape[0]
+    bs = _pick_block(S, block_s)
+    bf = _pick_block(F, block_f)
+    grid = (S // bs, F // bf)
+    kern = functools.partial(_ff_kernel_plain, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, D), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def grid_shape(S: int, F: int, block_s: int = 128, block_f: int = 128):
+    """The kernel's grid — exported so the perf harness can assert the
+    structural speedup: pruned grid = ceil(k/bf) vs full ceil(D_ff/bf)."""
+    return (S // _pick_block(S, block_s), F // _pick_block(F, block_f))
+
+
+def vmem_bytes(S: int, D: int, F: int, dtype_bytes: int = 4,
+               block_s: int = 128, block_f: int = 128) -> int:
+    """Estimated per-step VMEM footprint of the kernel (DESIGN.md §7):
+    x tile + wg tile + w1 tile + w2 tile + out tile + z scratch."""
+    bs = _pick_block(S, block_s)
+    bf = _pick_block(F, block_f)
+    elems = bs * D + 2 * bf * D + D * bf + bs * D + bs * bf
+    return elems * dtype_bytes

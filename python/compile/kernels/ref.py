@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (Layer 1 correctness signal).
+
+These are the *reference semantics*; pytest (python/tests/) sweeps shapes,
+dtypes and activations with hypothesis and asserts the Pallas kernels
+match to float tolerance. The L2 model can be lowered against either
+implementation (`use_pallas` flag in model.py) — both produce the same
+HLO-visible math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def activation_fn(name: str):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        # tanh-approx gelu matches Gemma's GEGLU
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name in ("reglu", "relu"):
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def gated_ff_act(x, wg, w1, activation: str):
+    """FF_1 for GLU blocks (paper eq. 3): z = sigma(x Wg^T) * (x W1^T)."""
+    act = activation_fn(activation)
+    return act(x @ wg.T) * (x @ w1.T)
+
+
+def plain_ff_act(x, w1, activation: str):
+    """FF_1 for non-GLU blocks (paper eq. 2): z = sigma(x W1^T)."""
+    act = activation_fn(activation)
+    return act(x @ w1.T)
+
+
+def gated_ff(x, wg, w1, w2, activation: str):
+    """Full gated FF block: FF_2(FF_1(x)) = z @ W2^T (paper eq. 1)."""
+    return gated_ff_act(x, wg, w1, activation) @ w2.T
+
+
+def plain_ff(x, w1, w2, activation: str):
+    return plain_ff_act(x, w1, activation) @ w2.T
+
+
+def flock_stat(z, eps: float = 1e-8):
+    """GRIFFIN selection statistic s (paper eq. 6).
+
+    z: [S, D_ff] FF activations for a sequence.
+    Rows are normalized to unit l2 norm (relative activations Z-bar),
+    then s_j = || Zbar[:, j] ||_2.
+    """
+    norms = jnp.linalg.norm(z, axis=-1, keepdims=True)
+    zbar = z / jnp.maximum(norms, eps)
+    return jnp.linalg.norm(zbar, axis=0)
+
+
+def flock_stat_batched(z, eps: float = 1e-8):
+    """s for a batch: z [B, S, D_ff] -> [B, D_ff]."""
+    return jax.vmap(lambda zz: flock_stat(zz, eps))(z)
+
+
+def causal_attention(q, k, v, scale=None):
+    """Causal softmax attention for one head.
+
+    q: [S, dh], k: [Sk, dh], v: [Sk, dh]; queries at positions
+    (Sk - S + i) attend to keys [0 .. Sk - S + i].
+    """
+    S, dh = q.shape
+    Sk = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = (q @ k.T) * scale
+    qpos = jnp.arange(S)[:, None] + (Sk - S)
+    kpos = jnp.arange(Sk)[None, :]
+    logits = jnp.where(kpos <= qpos, logits, jnp.finfo(logits.dtype).min)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+def causal_attention_mh(q, k, v):
+    """Multi-head wrapper: q [H, S, dh], k/v [H, Sk, dh]."""
+    return jax.vmap(causal_attention)(q, k, v)

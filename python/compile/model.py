@@ -1,0 +1,425 @@
+"""Layer-2 JAX model: decoder-only transformer LM with GRIFFIN support.
+
+Everything the rust coordinator executes is defined here and lowered by
+aot.py to HLO text. The flat parameter dict (sorted key order) is the ABI
+between python and rust — manifest.json records it explicitly.
+
+Executable kinds (see DESIGN.md §1):
+
+  prefill         full model over a [B, S] prompt; also emits the GRIFFIN
+                  statistic s per FF block (paper eq. 6) and the Wanda
+                  input norms, so Layer 3 can run any selection strategy
+                  without touching python.
+  decode          one full-model generation step with device-resident KV.
+  decode_pruned   one generation step using gathered expert weights of FF
+                  width k (the GRIFFIN generation phase, paper §4.2).
+  gather          index-select FF weights for a chosen expert set E.
+  generate_scan   G fused greedy decode steps via lax.scan (throughput
+                  path — the whole generation phase in one PJRT call).
+
+KV-cache convention: one stacked tensor per K and V, [L, B, H, Smax, dh].
+Each sequence in a batch carries its own write position `pos[B]`; decode
+masks attention with kpos <= pos_b, so right-padded prompts stay correct
+(pad K/V slots are overwritten before they ever become attendable).
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import flock_stats as flock_k
+from .kernels import griffin_ffn as ffn_k
+from .kernels import ref
+
+Params = Dict[str, jax.Array]
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Name/shape of every parameter, in ABI (sorted-name) order."""
+    d, f, l, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    specs = {
+        "tok_emb": (v, d),
+        "head": (v, d),
+        "ln_f": (d,),
+        "ln1": (l, d),
+        "ln2": (l, d),
+        "wq": (l, d, d),
+        "wk": (l, d, d),
+        "wv": (l, d, d),
+        "wo": (l, d, d),
+        "w1": (l, f, d),
+        "w2": (l, d, f),
+    }
+    if cfg.is_glu:
+        specs["wg"] = (l, f, d)
+    return sorted(specs.items())
+
+
+def ff_param_names(cfg: ModelConfig) -> List[str]:
+    """Parameters replaced by gathered expert weights in decode_pruned."""
+    return ["w1", "w2", "wg"] if cfg.is_glu else ["w1", "w2"]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    n_res = 2 * cfg.n_layers
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("wo", "w2"):
+            std = 0.02 / (n_res ** 0.5)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS) * g
+
+
+def rope_angles(pos, dh: int, theta: float):
+    """pos [...] -> cos/sin tables [..., dh/2]."""
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, dh] rotated pairwise; cos/sin [..., S, dh/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def split_heads(x, n_heads: int):
+    """[B, S, D] -> [B, H, S, dh]"""
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """[B, H, S, dh] -> [B, S, D]"""
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def ff_forward(cfg: ModelConfig, x, wg, w1, w2, use_pallas: bool):
+    """FF block on [B, S, D] (wg is None for non-GLU); returns (out, z)."""
+    if cfg.is_glu:
+        z = jax.vmap(lambda xx: ref.gated_ff_act(xx, wg, w1, cfg.activation))(x)
+    else:
+        z = jax.vmap(lambda xx: ref.plain_ff_act(xx, w1, cfg.activation))(x)
+    if use_pallas:
+        if cfg.is_glu:
+            out = jax.vmap(
+                lambda xx: ffn_k.gated_ff(xx, wg, w1, w2, cfg.activation)
+            )(x)
+        else:
+            out = jax.vmap(
+                lambda xx: ffn_k.plain_ff(xx, w1, w2, cfg.activation)
+            )(x)
+    else:
+        out = jnp.einsum("bsf,df->bsd", z, w2)
+    return out, z
+
+
+def masked_flock_stat(z, lengths, use_pallas: bool):
+    """Paper eq. 6 over valid (non-pad) prompt rows only.
+
+    z [B, S, F], lengths [B] -> s [B, F]. Pad rows are zeroed before row
+    normalization, contributing nothing to the column norms.
+    """
+    B, S, F = z.shape
+    valid = (jnp.arange(S)[None, :] < lengths[:, None]).astype(z.dtype)
+    zm = z * valid[..., None]
+    if use_pallas:
+        return flock_k.flock_stat_batched(zm)
+    return ref.flock_stat_batched(zm)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, tokens, lengths,
+            use_pallas: bool = False):
+    """Prompt phase over tokens [B, S] (i32), lengths [B] (i32).
+
+    Returns:
+      logits  [B, S, V]
+      kcache  [L, B, H, Smax, dh]   (positions [0, S) filled)
+      vcache  [L, B, H, Smax, dh]
+      stats   [L, B, F]   GRIFFIN statistic s per FF block (eq. 6)
+      xnorms  [L, B, D]   column l2-norms of each FF input (Adaptive-Wanda
+                          scores for W_1/W_g)
+      znorms  [L, B, F]   column l2-norms of the raw FF activations Z
+                          (Adaptive-Wanda scores for W_2)
+    """
+    B, S = tokens.shape
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    Smax = cfg.max_seq
+
+    x = params["tok_emb"][tokens]  # [B, S, D]
+    pos = jnp.arange(S)
+    cos, sin = rope_angles(pos, dh, cfg.rope_theta)  # [S, dh/2]
+
+    kcache = jnp.zeros((L, B, H, Smax, dh), jnp.float32)
+    vcache = jnp.zeros((L, B, H, Smax, dh), jnp.float32)
+    stats = []
+    xnorms = []
+    znorms = []
+
+    for l in range(L):
+        h = rmsnorm(x, params["ln1"][l])
+        q = split_heads(h @ params["wq"][l].T, H)
+        k = split_heads(h @ params["wk"][l].T, H)
+        v = split_heads(h @ params["wv"][l].T, H)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if use_pallas:
+            o = jax.vmap(attn_k.flash_attention)(q, k, v)
+        else:
+            o = jax.vmap(ref.causal_attention_mh)(q, k, v)
+        x = x + merge_heads(o) @ params["wo"][l].T
+
+        kcache = kcache.at[l, :, :, :S, :].set(k)
+        vcache = vcache.at[l, :, :, :S, :].set(v)
+
+        h2 = rmsnorm(x, params["ln2"][l])
+        wg = params["wg"][l] if cfg.is_glu else None
+        ff_out, z = ff_forward(cfg, h2, wg, params["w1"][l],
+                               params["w2"][l], use_pallas)
+        x = x + ff_out
+
+        stats.append(masked_flock_stat(z, lengths, use_pallas))
+        valid = (jnp.arange(S)[None, :] < lengths[:, None]).astype(x.dtype)
+        hm = h2 * valid[..., None]
+        xnorms.append(jnp.sqrt(jnp.sum(hm * hm, axis=1)))  # [B, D]
+        zm = z * valid[..., None]
+        znorms.append(jnp.sqrt(jnp.sum(zm * zm, axis=1)))  # [B, F]
+
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"].T
+    return (logits, kcache, vcache, jnp.stack(stats), jnp.stack(xnorms),
+            jnp.stack(znorms))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _write_cache(cache_l, new, pos):
+    """cache_l [B, H, Smax, dh], new [B, H, dh], pos [B] -> updated cache."""
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, p, 0))
+    return jax.vmap(one)(cache_l, new, pos)
+
+
+def _decode_attend(q, kc, vc, pos):
+    """q [B, H, dh]; kc/vc [B, H, Smax, dh]; pos [B] — mask kpos <= pos."""
+    Smax = kc.shape[2]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhd,bhsd->bhs", q, kc) * scale
+    kpos = jnp.arange(Smax)[None, None, :]
+    mask = kpos <= pos[:, None, None]
+    logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", w, vc)
+
+
+def _decode_step(cfg: ModelConfig, params: Params, ff_weights,
+                 kcache, vcache, token, pos):
+    """Shared body for decode / decode_pruned.
+
+    ff_weights: (wg, w1, w2) stacks — full [L,F,D]/[L,D,F] or pruned
+    [L,K,D]/[L,D,K]; wg is None for non-GLU configs.
+    token [B] i32, pos [B] i32 (slot where this token is written).
+    """
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    wg_s, w1_s, w2_s = ff_weights
+
+    x = params["tok_emb"][token]  # [B, D]
+    cos, sin = rope_angles(pos, dh, cfg.rope_theta)  # [B, dh/2]
+    cos_h, sin_h = cos[:, None, :], sin[:, None, :]  # broadcast over heads
+
+    for l in range(L):
+        h = rmsnorm(x, params["ln1"][l])
+        q = (h @ params["wq"][l].T).reshape(-1, H, dh)
+        k = (h @ params["wk"][l].T).reshape(-1, H, dh)
+        v = (h @ params["wv"][l].T).reshape(-1, H, dh)
+        q = apply_rope(q, cos_h, sin_h)
+        k = apply_rope(k, cos_h, sin_h)
+
+        kc = _write_cache(kcache[l], k, pos)
+        vc = _write_cache(vcache[l], v, pos)
+        kcache = kcache.at[l].set(kc)
+        vcache = vcache.at[l].set(vc)
+
+        o = _decode_attend(q, kc, vc, pos)  # [B, H, dh]
+        x = x + o.reshape(-1, H * dh) @ params["wo"][l].T
+
+        h2 = rmsnorm(x, params["ln2"][l])
+        if cfg.is_glu:
+            act = ref.activation_fn(cfg.activation)
+            z = act(h2 @ wg_s[l].T) * (h2 @ w1_s[l].T)
+        else:
+            act = ref.activation_fn(cfg.activation)
+            z = act(h2 @ w1_s[l].T)
+        x = x + z @ w2_s[l].T
+
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"].T  # [B, V]
+    return logits, kcache, vcache
+
+
+def decode(cfg: ModelConfig, params: Params, kcache, vcache, token, pos):
+    """Full-model single-token decode step."""
+    wg = params["wg"] if cfg.is_glu else None
+    ff = (wg, params["w1"], params["w2"])
+    return _decode_step(cfg, params, ff, kcache, vcache, token, pos)
+
+
+def decode_pruned(cfg: ModelConfig, params: Params, pruned, kcache, vcache,
+                  token, pos):
+    """GRIFFIN generation step: FF width k expert weights in `pruned`.
+
+    pruned: dict with keys w1p [L,K,D], w2p [L,D,K] (+ wgp for GLU).
+    """
+    wg = pruned.get("wgp") if cfg.is_glu else None
+    ff = (wg, pruned["w1p"], pruned["w2p"])
+    return _decode_step(cfg, params, ff, kcache, vcache, token, pos)
+
+
+def activation_map(cfg: ModelConfig, params: Params, tokens, lengths):
+    """Relative FF activation magnitudes |Z-bar| per layer/token (the raw
+    material of the paper's flocking visualizations, Figs 1/7/9-12).
+
+    tokens [1, S] -> zbar_abs [L, S, F]; pad rows are zeroed.
+    """
+    B, S = tokens.shape
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    x = params["tok_emb"][tokens]
+    pos = jnp.arange(S)
+    cos, sin = rope_angles(pos, dh, cfg.rope_theta)
+    maps = []
+    valid = (jnp.arange(S)[None, :] < lengths[:, None]).astype(x.dtype)
+    for l in range(L):
+        h = rmsnorm(x, params["ln1"][l])
+        q = split_heads(h @ params["wq"][l].T, H)
+        k = split_heads(h @ params["wk"][l].T, H)
+        v = split_heads(h @ params["wv"][l].T, H)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        o = jax.vmap(ref.causal_attention_mh)(q, k, v)
+        x = x + merge_heads(o) @ params["wo"][l].T
+        h2 = rmsnorm(x, params["ln2"][l])
+        wg = params["wg"][l] if cfg.is_glu else None
+        ff_out, z = ff_forward(cfg, h2, wg, params["w1"][l],
+                               params["w2"][l], use_pallas=False)
+        x = x + ff_out
+        zm = z * valid[..., None]
+        norms = jnp.maximum(
+            jnp.linalg.norm(zm, axis=-1, keepdims=True), 1e-8)
+        maps.append(jnp.abs(zm / norms)[0])  # [S, F]
+    return jnp.stack(maps)
+
+
+# ---------------------------------------------------------------------------
+# expert gather (paper §4.2: rows/cols of W_g, W_1, W_2 indexed by E)
+# ---------------------------------------------------------------------------
+
+def gather_experts(cfg: ModelConfig, params: Params, idx):
+    """idx [L, K] i32 -> pruned FF weight stacks.
+
+    Selecting rows of W_1/W_g and columns of W_2 for the expert set E of
+    each layer (paper §4.2 "Prompt Phase Expert Neuron Selection").
+    """
+    w1p = jax.vmap(lambda w, i: w[i])(params["w1"], idx)       # [L, K, D]
+    w2p = jax.vmap(lambda w, i: w[:, i])(params["w2"], idx)    # [L, D, K]
+    out = {"w1p": w1p, "w2p": w2p}
+    if cfg.is_glu:
+        out["wgp"] = jax.vmap(lambda w, i: w[i])(params["wg"], idx)
+    return out
+
+
+def gather_experts_masked(cfg: ModelConfig, params: Params, idx, mask):
+    """Gather with per-slot validity mask [L, K] (0.0 or 1.0).
+
+    Enables LAYER-ADAPTIVE expert budgets with a single compiled K: layers
+    that want k_l < K pad idx with repeats and zero the pad slots' W_1
+    (and W_g) rows, making their FF contribution exactly zero:
+    GLU: sigma(x*0) * (x*0) = 0; ReLU: relu(x*0) = 0. W_2 stays intact.
+    """
+    out = gather_experts(cfg, params, idx)
+    m = mask[:, :, None]
+    out["w1p"] = out["w1p"] * m
+    if cfg.is_glu:
+        out["wgp"] = out["wgp"] * m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused greedy generation (lax.scan over decode steps)
+# ---------------------------------------------------------------------------
+
+def generate_scan(cfg: ModelConfig, params: Params, ff_weights,
+                  kcache, vcache, token, pos, n_steps: int):
+    """Run `n_steps` greedy decode steps inside one executable.
+
+    Returns (tokens [G, B], logprobs [G, B], kcache, vcache, last_token,
+    last_pos). `ff_weights` selects full vs pruned generation.
+    """
+
+    def step(carry, _):
+        kc, vc, tok, p = carry
+        logits, kc, vc = _decode_step(cfg, params, ff_weights, kc, vc, tok, p)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        chosen = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+        return (kc, vc, nxt, p + 1), (nxt, chosen)
+
+    carry0 = (kcache, vcache, token, pos)
+    (kc, vc, tok, p), (toks, lps) = jax.lax.scan(
+        step, carry0, None, length=n_steps)
+    return toks, lps, kc, vc, tok, p
+
+
+# ---------------------------------------------------------------------------
+# kernel parity computation (compiled into an artifact for rust-side tests)
+# ---------------------------------------------------------------------------
+
+def kernel_parity(cfg: ModelConfig, x, wg, w1, w2):
+    """Runs the pallas kernels and the jnp oracles on the same input and
+    returns all outputs, so the rust integration tests can assert parity
+    through the full AOT+PJRT path (not just in pytest)."""
+    if cfg.is_glu:
+        ff_pal = ffn_k.gated_ff(x, wg, w1, w2, cfg.activation)
+        ff_ref = ref.gated_ff(x, wg, w1, w2, cfg.activation)
+        z = ref.gated_ff_act(x, wg, w1, cfg.activation)
+    else:
+        ff_pal = ffn_k.plain_ff(x, w1, w2, cfg.activation)
+        ff_ref = ref.plain_ff(x, w1, w2, cfg.activation)
+        z = ref.plain_ff_act(x, w1, cfg.activation)
+    s_pal = flock_k.flock_stat(z)
+    s_ref = ref.flock_stat(z)
+    return ff_pal, ff_ref, s_pal, s_ref

@@ -1,0 +1,90 @@
+"""GWT1 tensor container: the weights interchange format python → rust.
+
+Layout (little-endian):
+
+    magic   b"GWT1"
+    u32     n_tensors
+    per tensor:
+        u16  name_len, name (utf-8)
+        u8   dtype   (0 = f32, 1 = i32)
+        u8   ndim
+        u32  dims[ndim]
+        u64  offset  (bytes, from start of data section)
+        u64  nbytes
+    u64     data_section_size
+    data    raw tensor bytes, C-order, in header order
+
+rust/src/tensorfile/ implements the reader (and a writer used by the
+round-trip property tests).
+"""
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"GWT1"
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+_DTYPES = {DTYPE_F32: np.float32, DTYPE_I32: np.int32}
+_CODES = {np.dtype(np.float32): DTYPE_F32, np.dtype(np.int32): DTYPE_I32}
+
+
+def write(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    names = sorted(tensors)
+    header = bytearray()
+    header += MAGIC
+    header += struct.pack("<I", len(names))
+    offset = 0
+    blobs = []
+    for name in names:
+        shape = tuple(np.shape(tensors[name]))
+        # ascontiguousarray promotes 0-d to 1-d; keep the original shape
+        arr = np.ascontiguousarray(tensors[name])
+        if arr.dtype not in _CODES:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        nb = arr.nbytes
+        raw = name.encode("utf-8")
+        header += struct.pack("<H", len(raw)) + raw
+        header += struct.pack("<BB", _CODES[arr.dtype], len(shape))
+        header += struct.pack(f"<{len(shape)}I", *shape)
+        header += struct.pack("<QQ", offset, nb)
+        offset += nb
+        blobs.append(arr.tobytes())
+    header += struct.pack("<Q", offset)
+    with open(path, "wb") as f:
+        f.write(bytes(header))
+        for b in blobs:
+            f.write(b)
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != MAGIC:
+        raise ValueError("bad magic")
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off)
+    off += 4
+    metas = []
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nl].decode("utf-8")
+        off += nl
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        toff, nb = struct.unpack_from("<QQ", data, off)
+        off += 16
+        metas.append((name, code, dims, toff, nb))
+    (_total,) = struct.unpack_from("<Q", data, off)
+    off += 8
+    out = {}
+    for name, code, dims, toff, nb in metas:
+        arr = np.frombuffer(data, dtype=_DTYPES[code], count=nb // 4,
+                            offset=off + toff)
+        out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,141 @@
+"""Build-time char-LM trainer (pure JAX; optax unavailable offline).
+
+Trains a config from configs.py on the deterministic tiny-lang corpus with
+hand-rolled AdamW and saves `weights_trained.bin` next to the random-init
+weights. Flocking is a property of *trained* FF blocks (paper §4.1), so
+the quality tables/figures (Tables 1-5, Figs 1-2, 4-7) run against this
+checkpoint; random-init weights serve the latency/structure studies.
+
+Usage:
+    python -m compile.train --config small-swiglu --steps 400 \
+        --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs as cfgs
+from . import corpus as corpus_mod
+from . import model, tensorfile
+from .configs import BOS_ID, PAD_ID
+
+
+def encode_bytes(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def batches(data: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    """Deterministic random crops of the token stream."""
+    rng = np.random.RandomState(seed)
+    n = len(data) - seq - 1
+    for _ in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        x = np.stack([data[i:i + seq] for i in idx])
+        y = np.stack([data[i + 1:i + seq + 1] for i in idx])
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(cfg, params, x, y):
+    lengths = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    logits, _, _, _, _, _ = model.prefill(cfg, params, x, lengths)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adamw_update(params, grads, m, v, step, lr, beta1=0.9, beta2=0.999,
+                 eps=1e-8, wd=0.01):
+    """One AdamW step over the flat param dict."""
+    new_p, new_m, new_v = {}, {}, {}
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    for k in params:
+        g = grads[k]
+        m_k = beta1 * m[k] + (1 - beta1) * g
+        v_k = beta2 * v[k] + (1 - beta2) * g * g
+        mh = m_k / bc1
+        vh = v_k / bc2
+        decay = 0.0 if k.startswith("ln") else wd
+        new_p[k] = params[k] - lr * (mh / (jnp.sqrt(vh) + eps)
+                                     + decay * params[k])
+        new_m[k], new_v[k] = m_k, v_k
+    return new_p, new_m, new_v
+
+
+def train(cfg, steps: int, batch: int, seq: int, lr: float, seed: int,
+          corpus_text: str, log_every: int = 20):
+    data = encode_bytes(corpus_text)
+    params = model.init_params(cfg, seed)
+    m = {k: jnp.zeros_like(p) for k, p in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    @jax.jit
+    def step_fn(params, m, v, step, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, x, y))(params)
+        # cosine decay with warmup
+        warm = jnp.minimum(step.astype(jnp.float32) / 20.0, 1.0)
+        prog = jnp.clip(step.astype(jnp.float32) / steps, 0.0, 1.0)
+        lr_t = lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        params, m, v = adamw_update(params, grads, m, v, step, lr_t)
+        return params, m, v, loss
+
+    t0 = time.time()
+    losses = []
+    for i, (x, y) in enumerate(batches(data, batch, seq, steps, seed + 1)):
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(i), x, y)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return params, losses
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--config", default="small-swiglu")
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--docs", type=int, default=0,
+                   help="train on a freshly generated corpus of this many "
+                        "docs instead of artifacts/corpus.txt (more docs = "
+                        "less memorization, stronger in-context binding)")
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+
+    cfg = cfgs.get(args.config)
+    cpath = os.path.join(args.out_dir, "corpus.txt")
+    if args.docs > 0:
+        corpus_text = corpus_mod.corpus(seed=7, n_docs=args.docs)
+    elif os.path.exists(cpath):
+        corpus_text = open(cpath).read()
+    else:
+        corpus_text = corpus_mod.corpus(seed=7, n_docs=96)
+
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.2f}M params) "
+          f"for {args.steps} steps on {len(corpus_text)} corpus bytes")
+    params, losses = train(cfg, args.steps, args.batch, args.seq, args.lr,
+                           args.seed, corpus_text)
+
+    out = os.path.join(args.out_dir, cfg.name, "weights_trained.bin")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    tensorfile.write(out, {k: np.asarray(p) for k, p in params.items()})
+    loss_path = os.path.join(args.out_dir, cfg.name, "train_loss.csv")
+    with open(loss_path, "w") as f:
+        f.write("step,loss\n")
+        for i, l in enumerate(losses):
+            f.write(f"{i},{l}\n")
+    print(f"saved {out} (final loss {losses[-1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

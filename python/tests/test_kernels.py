@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes/activations; every property asserts
+allclose against the reference implementation — this is the core
+correctness signal for the kernels that get lowered into the serving
+artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import flock_stats as flock_k
+from compile.kernels import griffin_ffn as ffn_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64])
+FF_DIMS = st.sampled_from([16, 32, 64, 96, 128, 160])
+SEQ = st.sampled_from([1, 4, 8, 16, 32, 64])
+ACTS = st.sampled_from(["swiglu", "geglu", "reglu"])
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, scale=0.5, dtype=jnp.float32):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+            ).astype(dtype)
+
+
+class TestGatedFF:
+    @settings(**SETTINGS)
+    @given(s=SEQ, d=DIMS, f=FF_DIMS, act=ACTS, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, s, d, f, act, seed):
+        x = rand(seed, (s, d))
+        wg = rand(seed + 1, (f, d))
+        w1 = rand(seed + 2, (f, d))
+        w2 = rand(seed + 3, (d, f))
+        got = ffn_k.gated_ff(x, wg, w1, w2, act)
+        want = ref.gated_ff(x, wg, w1, w2, act)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(s=SEQ, d=DIMS, f=FF_DIMS, seed=st.integers(0, 2**16))
+    def test_plain_matches_ref(self, s, d, f, seed):
+        x = rand(seed, (s, d))
+        w1 = rand(seed + 2, (f, d))
+        w2 = rand(seed + 3, (d, f))
+        got = ffn_k.plain_ff(x, w1, w2, "relu")
+        want = ref.plain_ff(x, w1, w2, "relu")
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_small_blocks_force_multi_tile_grid(self):
+        # accumulation across the D_ff grid axis must be exact
+        x = rand(0, (32, 16))
+        wg, w1 = rand(1, (64, 16)), rand(2, (64, 16))
+        w2 = rand(3, (16, 64))
+        got = ffn_k.gated_ff(x, wg, w1, w2, "swiglu", block_s=8, block_f=8)
+        want = ref.gated_ff(x, wg, w1, w2, "swiglu")
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_pruned_equals_sliced_full(self):
+        # structured pruning semantics: running the kernel on gathered
+        # expert weights == slicing the reference FF
+        x = rand(0, (16, 32))
+        wg, w1 = rand(1, (128, 32)), rand(2, (128, 32))
+        w2 = rand(3, (32, 128))
+        idx = jnp.array(sorted(np.random.RandomState(0)
+                               .choice(128, 64, replace=False)))
+        got = ffn_k.gated_ff(x, wg[idx], w1[idx], w2[:, idx], "swiglu")
+        want = ref.gated_ff(x, wg[idx], w1[idx], w2[:, idx], "swiglu")
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_grid_shrinks_linearly_with_k(self):
+        # the structural speedup claim: pruned grid is k/bf tiles
+        full = ffn_k.grid_shape(256, 1024, block_s=64, block_f=128)
+        half = ffn_k.grid_shape(256, 512, block_s=64, block_f=128)
+        assert full[1] == 2 * half[1]
+
+    def test_vmem_estimate_positive_and_monotone(self):
+        a = ffn_k.vmem_bytes(128, 64, 256)
+        b = ffn_k.vmem_bytes(128, 64, 512)
+        assert 0 < a <= b
+
+
+class TestFlockStat:
+    @settings(**SETTINGS)
+    @given(s=SEQ, f=FF_DIMS, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, s, f, seed):
+        z = rand(seed, (s, f), scale=1.0)
+        got = flock_k.flock_stat(z)
+        want = ref.flock_stat(z)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(s=SEQ, f=FF_DIMS, seed=st.integers(0, 2**16))
+    def test_row_norms(self, s, f, seed):
+        z = rand(seed, (s, f), scale=1.0)
+        got = flock_k.row_norms(z)
+        want = jnp.linalg.norm(z, axis=-1)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_zero_rows_are_safe(self):
+        z = jnp.zeros((8, 32))
+        s = flock_k.flock_stat(z)
+        assert bool(jnp.isfinite(s).all()) and float(s.max()) == 0.0
+
+    def test_scale_invariance_per_row(self):
+        # s is computed on row-normalized activations: scaling any row
+        # must not change s (the "relative magnitude" property, §4.1)
+        z = rand(0, (16, 64), scale=1.0)
+        scales = jnp.linspace(0.1, 10.0, 16)[:, None]
+        np.testing.assert_allclose(flock_k.flock_stat(z * scales),
+                                   flock_k.flock_stat(z),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_batched(self):
+        z = rand(0, (3, 16, 64), scale=1.0)
+        got = flock_k.flock_stat_batched(z)
+        want = ref.flock_stat_batched(z)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+class TestFlashAttention:
+    @settings(**SETTINGS)
+    @given(h=st.sampled_from([1, 2, 4]), s=st.sampled_from([8, 16, 32, 64]),
+           dh=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16))
+    def test_matches_ref_square(self, h, s, dh, seed):
+        q = rand(seed, (h, s, dh))
+        k = rand(seed + 1, (h, s, dh))
+        v = rand(seed + 2, (h, s, dh))
+        got = attn_k.flash_attention(q, k, v)
+        want = ref.causal_attention_mh(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_small_kv_blocks_online_softmax(self):
+        q = rand(0, (2, 32, 16))
+        k = rand(1, (2, 32, 16))
+        v = rand(2, (2, 32, 16))
+        got = attn_k.flash_attention(q, k, v, block_q=8, block_k=8)
+        want = ref.causal_attention_mh(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_causality(self):
+        # future key perturbation must not change earlier outputs
+        q = rand(0, (1, 16, 8))
+        k = rand(1, (1, 16, 8))
+        v = rand(2, (1, 16, 8))
+        out1 = attn_k.flash_attention(q, k, v)
+        k2 = k.at[:, -1].add(100.0)
+        v2 = v.at[:, -1].add(100.0)
+        out2 = attn_k.flash_attention(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :-1], out2[:, :-1],
+                                   rtol=1e-5, atol=1e-6)

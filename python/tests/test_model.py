@@ -1,0 +1,178 @@
+"""L2 model invariants: prefill/decode consistency, GRIFFIN semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=["tiny-swiglu", "tiny-relu"])
+def setup(request):
+    cfg = configs.get(request.param)
+    params = model.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def make_prompt(cfg, B, S, seed=0):
+    rng = np.random.RandomState(seed)
+    toks = jnp.asarray(rng.randint(0, 256, (B, S)), jnp.int32)
+    lens = jnp.full((B,), S, jnp.int32)
+    return toks, lens
+
+
+class TestPrefillDecodeConsistency:
+    def test_decode_continues_prefill(self, setup):
+        """prefill(S tokens) then decode(token S) must equal
+        prefill(S+1 tokens) at the last position."""
+        cfg, params = setup
+        B, S = 2, 16
+        toks, _ = make_prompt(cfg, B, S + 1)
+        lens_s = jnp.full((B,), S, jnp.int32)
+        lg_full, _, _, _, _, _ = model.prefill(
+            cfg, params, toks, jnp.full((B,), S + 1, jnp.int32))
+
+        lg_p, kc, vc, _, _, _ = model.prefill(cfg, params, toks[:, :S], lens_s)
+        lg_d, _, _ = model.decode(cfg, params, kc, vc, toks[:, S], lens_s)
+        np.testing.assert_allclose(lg_d, lg_full[:, S], rtol=2e-4, atol=2e-5)
+
+    def test_prefill_logits_match_incremental_decode(self, setup):
+        cfg, params = setup
+        B, S = 1, 8
+        toks, lens = make_prompt(cfg, B, S)
+        lg, _, _, _, _, _ = model.prefill(cfg, params, toks, lens)
+
+        # decode token-by-token from a length-1 prefill
+        lg0, kc, vc, _, _, _ = model.prefill(
+            cfg, params, toks[:, :1], jnp.ones((B,), jnp.int32))
+        got = [lg0[:, 0]]
+        for t in range(1, S):
+            lgt, kc, vc = model.decode(
+                cfg, params, kc, vc, toks[:, t],
+                jnp.full((B,), t, jnp.int32))
+            got.append(lgt)
+        got = jnp.stack(got, axis=1)
+        np.testing.assert_allclose(got, lg, rtol=5e-4, atol=5e-5)
+
+    def test_right_padding_does_not_change_valid_rows(self, setup):
+        cfg, params = setup
+        toks, _ = make_prompt(cfg, 1, 12)
+        full = jnp.pad(toks, ((0, 0), (0, 4)),
+                       constant_values=configs.PAD_ID)
+        lens = jnp.array([12], jnp.int32)
+        lg_a, _, _, st_a, _, _ = model.prefill(cfg, params, toks, lens)
+        lg_b, _, _, st_b, _, _ = model.prefill(cfg, params, full, lens)
+        np.testing.assert_allclose(lg_b[:, :12], lg_a, rtol=2e-4, atol=2e-5)
+        # GRIFFIN statistic must be pad-invariant (pad rows masked)
+        np.testing.assert_allclose(st_b, st_a, rtol=2e-4, atol=2e-5)
+
+
+class TestGriffin:
+    def test_full_k_pruned_decode_is_exact(self, setup):
+        cfg, params = setup
+        B, S = 2, 16
+        toks, lens = make_prompt(cfg, B, S)
+        _, kc, vc, _, _, _ = model.prefill(cfg, params, toks, lens)
+        tok = toks[:, -1]
+        idx = jnp.tile(jnp.arange(cfg.d_ff, dtype=jnp.int32)[None],
+                       (cfg.n_layers, 1))
+        pruned = model.gather_experts(cfg, params, idx)
+        lg_f, _, _ = model.decode(cfg, params, kc, vc, tok, lens)
+        lg_p, _, _ = model.decode_pruned(cfg, params, pruned, kc, vc, tok,
+                                         lens)
+        np.testing.assert_array_equal(np.asarray(lg_f), np.asarray(lg_p))
+
+    def test_gather_selects_rows_and_cols(self, setup):
+        cfg, params = setup
+        K = cfg.d_ff // 2
+        rng = np.random.RandomState(0)
+        idx = jnp.asarray(np.stack([
+            np.sort(rng.choice(cfg.d_ff, K, replace=False))
+            for _ in range(cfg.n_layers)]), jnp.int32)
+        pr = model.gather_experts(cfg, params, idx)
+        l = 1
+        np.testing.assert_array_equal(
+            np.asarray(pr["w1p"][l]), np.asarray(params["w1"][l][idx[l]]))
+        np.testing.assert_array_equal(
+            np.asarray(pr["w2p"][l]), np.asarray(params["w2"][l][:, idx[l]]))
+        if cfg.is_glu:
+            np.testing.assert_array_equal(
+                np.asarray(pr["wgp"][l]),
+                np.asarray(params["wg"][l][idx[l]]))
+
+    def test_stat_matches_standalone_ref(self, setup):
+        """stats returned by prefill == eq.6 applied to the activations of
+        an independent forward pass."""
+        cfg, params = setup
+        B, S = 1, 16
+        toks, lens = make_prompt(cfg, B, S)
+        _, _, _, stats, _, _ = model.prefill(cfg, params, toks, lens)
+
+        # manual forward replicating the residual stream
+        x = params["tok_emb"][toks]
+        pos = jnp.arange(S)
+        cos, sin = model.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+        for l in range(cfg.n_layers):
+            h = model.rmsnorm(x, params["ln1"][l])
+            q = model.split_heads(h @ params["wq"][l].T, cfg.n_heads)
+            k = model.split_heads(h @ params["wk"][l].T, cfg.n_heads)
+            v = model.split_heads(h @ params["wv"][l].T, cfg.n_heads)
+            q = model.apply_rope(q, cos, sin)
+            k = model.apply_rope(k, cos, sin)
+            o = jax.vmap(ref.causal_attention_mh)(q, k, v)
+            x = x + model.merge_heads(o) @ params["wo"][l].T
+            h2 = model.rmsnorm(x, params["ln2"][l])
+            if cfg.is_glu:
+                z = ref.gated_ff_act(h2[0], params["wg"][l], params["w1"][l],
+                                     cfg.activation)
+            else:
+                z = ref.plain_ff_act(h2[0], params["w1"][l], cfg.activation)
+            s_ref = ref.flock_stat(z)
+            np.testing.assert_allclose(stats[l, 0], s_ref,
+                                       rtol=2e-4, atol=2e-5)
+            x = x + (jnp.stack([z]) @ params["w2"][l].T)
+
+    def test_generate_scan_matches_stepwise_decode(self, setup):
+        cfg, params = setup
+        B, S, G = 1, 16, 6
+        toks, lens = make_prompt(cfg, B, S)
+        _, kc, vc, _, _, _ = model.prefill(cfg, params, toks, lens)
+        tok, pos = toks[:, -1], lens
+
+        wg = params["wg"] if cfg.is_glu else None
+        ffw = (wg, params["w1"], params["w2"])
+        scan_toks, _, _, _, _, _ = model.generate_scan(
+            cfg, params, ffw, kc, vc, tok, pos, G)
+
+        cur, p, kcc, vcc = tok, pos, kc, vc
+        step_toks = []
+        for _ in range(G):
+            lg, kcc, vcc = model.decode(cfg, params, kcc, vcc, cur, p)
+            cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            p = p + 1
+            step_toks.append(cur)
+        np.testing.assert_array_equal(np.asarray(scan_toks),
+                                      np.asarray(jnp.stack(step_toks)))
+
+
+class TestParamABI:
+    def test_param_specs_sorted_and_complete(self, setup):
+        cfg, params = setup
+        names = [n for n, _ in model.param_specs(cfg)]
+        assert names == sorted(names)
+        assert set(names) == set(params)
+        for n, shape in model.param_specs(cfg):
+            assert tuple(params[n].shape) == tuple(shape)
+
+    def test_glu_configs_have_wg(self):
+        assert "wg" in dict(model.param_specs(configs.get("tiny-swiglu")))
+        assert "wg" not in dict(model.param_specs(configs.get("tiny-relu")))
+
+    def test_param_count_matches_config_estimate(self, setup):
+        cfg, params = setup
+        total = sum(int(np.prod(p.shape)) for p in params.values())
+        assert total == cfg.param_count()

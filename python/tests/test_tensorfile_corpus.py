@@ -1,0 +1,92 @@
+"""GWT1 container round-trip + corpus determinism (python side of the
+cross-language invariants; rust mirrors both in its own test suite)."""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, tensorfile
+
+
+class TestTensorFile:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(
+        st.tuples(
+            st.text(alphabet="abcdefgh._", min_size=1, max_size=12),
+            st.lists(st.integers(1, 5), min_size=0, max_size=3),
+            st.booleans(),
+        ),
+        min_size=1, max_size=6, unique_by=lambda t: t[0],
+    ))
+    def test_roundtrip(self, specs):
+        rng = np.random.RandomState(0)
+        tensors = {}
+        for name, dims, is_int in specs:
+            if is_int:
+                tensors[name] = rng.randint(-5, 5, dims).astype(np.int32)
+            else:
+                tensors[name] = np.asarray(rng.randn(*dims),
+                                           dtype=np.float32)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "t.bin")
+            tensorfile.write(path, tensors)
+            got = tensorfile.read(path)
+        assert set(got) == set(tensors)
+        for k in tensors:
+            assert got[k].dtype == tensors[k].dtype
+            np.testing.assert_array_equal(got[k], tensors[k])
+
+    def test_scalar_tensor(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "t.bin")
+            tensorfile.write(path, {"s": np.array(3.5, dtype=np.float32)})
+            got = tensorfile.read(path)
+        assert got["s"].shape == ()
+        assert float(got["s"]) == 3.5
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        assert corpus.corpus(7, 4) == corpus.corpus(7, 4)
+        assert corpus.corpus(7, 4) != corpus.corpus(8, 4)
+
+    def test_ascii_only(self):
+        text = corpus.corpus(7, 8)
+        assert all(ord(c) < 128 for c in text)
+
+    def test_doc_structure(self):
+        text = corpus.corpus(7, 8)
+        assert text.count("= doc") == 8
+        assert text.count("in short ,") == 8
+
+    # Pinned values — rust workload/rng.rs and workload/corpus.rs assert
+    # the IDENTICAL sequences (cross-language corpus reproducibility).
+    PIN_SEED7 = [15130880334998875822, 17123930943180875438,
+                 1648209070578717474, 1985375592982671918]
+    PIN_SEED12345 = [10977518812293740004, 13893246733018840292,
+                     1412386850724336324, 13578198927181985541]
+    CORPUS_7_96_SHA256 = \
+        "40f430586d5510470c490a1af3e4bbf49e7ec39083c3248a5fda1f56747e69c7"
+
+    def test_prng_reference_values(self):
+        rng = corpus.XorShift64Star(7)
+        assert [rng.next_u64() for _ in range(4)] == self.PIN_SEED7
+        rng = corpus.XorShift64Star(12345)
+        assert [rng.next_u64() for _ in range(4)] == self.PIN_SEED12345
+
+    def test_corpus_hash_pinned(self):
+        import hashlib
+        h = hashlib.sha256(corpus.corpus(7, 96).encode()).hexdigest()
+        assert h == self.CORPUS_7_96_SHA256
+
+    def test_corpus_prefix_pinned(self):
+        assert corpus.corpus(7, 2).startswith(
+            "= doc 0 : roads =\nthe dry forest faces the small mill .")
+
+    def test_below_is_in_range(self):
+        rng = corpus.XorShift64Star(3)
+        for n in (1, 2, 7, 100):
+            for _ in range(50):
+                assert 0 <= rng.below(n) < n

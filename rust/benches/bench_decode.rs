@@ -1,0 +1,152 @@
+//! Bench: decode-step + generation-phase latency (paper Table 3 shape).
+//!
+//! Measures, per model:
+//!   - prefill latency per prompt bucket
+//!   - single decode step: full vs GRIFFIN-pruned at each compiled k
+//!   - end-to-end generation P+G: full / magnitude / griffin
+//!   - fused-scan vs stepwise decode (L3 overhead quantification)
+//!
+//! Run: cargo bench --bench bench_decode [-- <model>]
+
+use griffin::bench_harness::{bench_for, Reporter};
+use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::sequence::GenRequest;
+use griffin::coordinator::selection::Strategy;
+use griffin::test_support::{artifact_path, have_artifacts};
+use griffin::workload::{tasks, trace};
+
+fn main() {
+    let model = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "small-swiglu".to_string());
+    if !have_artifacts(&model) {
+        eprintln!("skipping bench: artifacts for {model} missing");
+        return;
+    }
+    let mut engine = Engine::load(&artifact_path(&model), false).unwrap();
+    let cfg = engine.config().clone();
+    println!("bench_decode on {model} ({} params)", cfg.param_count);
+    let mut rep = Reporter::new(&format!("bench_decode_{model}.csv"));
+
+    // -- prefill buckets --------------------------------------------------
+    for &s in &cfg.prefill_buckets {
+        let prompt = tasks::lm_windows(3, 1, s.min(cfg.max_seq))
+            .pop()
+            .unwrap();
+        rep.add(bench_for(
+            &format!("prefill_b1_s{s}"),
+            1,
+            2000.0,
+            20,
+            || {
+                engine.prefill(std::slice::from_ref(&prompt), false)
+                    .unwrap();
+            },
+        ));
+    }
+
+    // -- single decode step: full vs pruned k sweep -----------------------
+    let prompt = tasks::lm_windows(5, 1, 64).pop().unwrap();
+    let pre = engine.prefill(std::slice::from_ref(&prompt), false).unwrap();
+    let idx_for = |k: usize| -> Vec<Vec<i32>> {
+        griffin::coordinator::selection::select_experts(
+            &pre.stats[0], k, Strategy::TopK)
+    };
+    {
+        let mut state = engine
+            .prefill(std::slice::from_ref(&prompt), false)
+            .unwrap()
+            .state;
+        let toks = vec![65i32];
+        rep.add(bench_for("decode_step_full", 3, 2000.0, 200, || {
+            engine.decode_step(&mut state, &toks, None, None).unwrap();
+        }));
+    }
+    for &k in &cfg.keep_ks {
+        if k >= cfg.d_ff {
+            continue;
+        }
+        let pruned = engine.gather(&idx_for(k)).unwrap();
+        let mut state = engine
+            .prefill(std::slice::from_ref(&prompt), false)
+            .unwrap()
+            .state;
+        let toks = vec![65i32];
+        rep.add(bench_for(
+            &format!("decode_step_pruned_k{k}"),
+            3,
+            2000.0,
+            200,
+            || {
+                engine
+                    .decode_step(&mut state, &toks, Some(&pruned), None)
+                    .unwrap();
+            },
+        ));
+    }
+
+    // -- selection + gather overhead (the "no-cost" claim) ----------------
+    rep.add(bench_for("select_topk_50pct", 3, 1000.0, 500, || {
+        let _ = griffin::coordinator::selection::select_experts(
+            &pre.stats[0], cfg.d_ff / 2, Strategy::TopK);
+    }));
+    {
+        let idx = idx_for(engine.k_for(0.5).unwrap());
+        rep.add(bench_for("gather_k50pct", 3, 1000.0, 100, || {
+            engine.gather(&idx).unwrap();
+        }));
+    }
+
+    // -- end-to-end P+G (Table 3) -----------------------------------------
+    let p = cfg.max_seq / 2;
+    let g = cfg.max_seq / 4;
+    let reqs = trace::generate(&trace::TraceSpec {
+        seed: 11,
+        n_requests: 1,
+        prompt_len: p,
+        gen_len: g,
+        mean_gap_ms: 0,
+        mixed_lengths: false,
+    });
+    for (label, mode) in [
+        ("full", Mode::Full),
+        ("magnitude50", Mode::Magnitude { keep: 0.5 }),
+        ("griffin50", Mode::griffin(0.5)),
+        ("griffin25", Mode::griffin(0.25)),
+    ] {
+        let req = GenRequest {
+            id: 0,
+            prompt: reqs[0].prompt.clone(),
+            max_new_tokens: g,
+            mode,
+            sampler: griffin::sampling::SamplerSpec::Greedy,
+            seed: 1,
+            stop_at_eos: false,
+        };
+        rep.add(bench_for(
+            &format!("e2e_p{p}_g{g}_{label}"),
+            1,
+            6000.0,
+            5,
+            || {
+                engine.generate(&req).unwrap();
+            },
+        ));
+    }
+
+    // -- fused scan vs stepwise (L3/FFI overhead) --------------------------
+    {
+        let mut req = GenRequest::greedy(0, reqs[0].prompt.clone(),
+                                         g.min(64), Mode::Full);
+        req.stop_at_eos = false;
+        rep.add(bench_for("gen64_stepwise_full", 1, 6000.0, 5, || {
+            engine.generate(&req).unwrap();
+        }));
+        rep.add(bench_for("gen64_scan_full", 1, 6000.0, 5, || {
+            engine.generate_scan(&req).unwrap();
+        }));
+    }
+
+    rep.finish();
+}

@@ -1,0 +1,81 @@
+//! Bench: serving throughput under batching (extends Table 3 to the
+//! coordinator level — batch-bucket scaling and queue behavior).
+//!
+//! Run: cargo bench --bench bench_serving [-- <model>]
+
+use std::sync::Arc;
+
+use griffin::bench_harness::{summarize, Reporter};
+use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::router::Router;
+use griffin::coordinator::scheduler::Scheduler;
+use griffin::coordinator::sequence::GenRequest;
+use griffin::test_support::{artifact_path, have_artifacts};
+use griffin::workload::trace;
+
+fn main() {
+    let model = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "tiny-swiglu".to_string());
+    if !have_artifacts(&model) {
+        eprintln!("skipping bench: artifacts for {model} missing");
+        return;
+    }
+    let engine = Engine::load(&artifact_path(&model), false).unwrap();
+    let cfg = engine.config().clone();
+    println!("bench_serving on {model}");
+    let mut rep = Reporter::new(&format!("bench_serving_{model}.csv"));
+
+    let router = Arc::new(Router::new(256, cfg.max_seq));
+    let mut sched = Scheduler::new(engine, router.clone());
+
+    let g = 16usize;
+    for &b in &cfg.batch_buckets {
+        for mode in [Mode::Full, Mode::griffin(0.5)] {
+            let reqs = trace::generate(&trace::TraceSpec {
+                seed: 7,
+                n_requests: b,
+                prompt_len: cfg.prefill_buckets[0],
+                gen_len: g,
+                mean_gap_ms: 0,
+                mixed_lengths: false,
+            });
+            // warmup (compilation)
+            for r in &reqs {
+                router
+                    .admit(GenRequest::greedy(0, r.prompt.clone(), 2, mode))
+                    .unwrap();
+            }
+            sched.run_until_idle().unwrap();
+
+            let mut samples = Vec::new();
+            let iters = 3;
+            for _ in 0..iters {
+                for r in &reqs {
+                    let mut q =
+                        GenRequest::greedy(0, r.prompt.clone(), g, mode);
+                    q.stop_at_eos = false;
+                    router.admit(q).unwrap();
+                }
+                let t = std::time::Instant::now();
+                let responses = sched.run_until_idle().unwrap();
+                let dt = t.elapsed().as_secs_f64();
+                assert_eq!(responses.len(), b);
+                let tokens: usize =
+                    responses.iter().map(|r| r.tokens.len()).sum();
+                samples.push(dt * 1e3);
+                println!(
+                    "  wave b={b} {}: {:.1} tok/s",
+                    mode.label(),
+                    tokens as f64 / dt
+                );
+            }
+            rep.add(summarize(
+                &format!("wave_b{b}_{}", mode.label()),
+                &samples,
+            ));
+        }
+    }
+    rep.finish();
+}

@@ -1,0 +1,75 @@
+//! Bench: host-side substrate hot paths — selection (top-k over s),
+//! sampling, JSON codec, rouge scoring. These quantify the paper's
+//! "negligible overhead" claim for selection (§1, §5.2) at the host level
+//! and guard against L3 becoming the bottleneck.
+//!
+//! Run: cargo bench --bench bench_substrates
+
+use griffin::bench_harness::{bench, Reporter};
+use griffin::coordinator::selection::{self, Strategy};
+use griffin::sampling::{Sampler, SamplerSpec};
+use griffin::workload::rng::XorShift64Star;
+
+fn main() {
+    let mut rep = Reporter::new("bench_substrates.csv");
+    let mut rng = XorShift64Star::new(1);
+
+    // selection over a realistic s: 32 layers x 11008 neurons (Llama-2-7B
+    // scale) — the paper's selection must be negligible vs decode (~ms)
+    let stats: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..11008).map(|_| rng.unit_f64() as f32).collect())
+        .collect();
+    rep.add(bench("select_topk_llama7b_scale_50pct", 2, 20, || {
+        let _ = selection::select_experts(&stats, 5504, Strategy::TopK);
+    }));
+    rep.add(bench("select_sampling_llama7b_scale", 1, 5, || {
+        let _ = selection::select_experts(
+            &stats, 5504, Strategy::Sampling { seed: 3 });
+    }));
+
+    // eq.7 aggregation across a batch of 16
+    let batch: Vec<(Vec<Vec<f32>>, usize)> =
+        (0..16).map(|i| (stats.clone(), 128 + i)).collect();
+    rep.add(bench("aggregate_eq7_batch16", 2, 10, || {
+        let _ = selection::aggregate_stats(&batch);
+    }));
+
+    // sampling over a 32k vocab
+    let logits: Vec<f32> =
+        (0..32000).map(|_| rng.unit_f64() as f32 * 10.0).collect();
+    let mut greedy = Sampler::new(SamplerSpec::Greedy, 1);
+    rep.add(bench("sample_greedy_32k", 10, 200, || {
+        let _ = greedy.sample(&logits);
+    }));
+    let mut topp = Sampler::new(
+        SamplerSpec::TopP { p: 0.9, temperature: 0.8 }, 1);
+    rep.add(bench("sample_topp_32k", 10, 100, || {
+        let _ = topp.sample(&logits);
+    }));
+
+    // json round trip of a generate response-sized payload
+    let payload = format!(
+        r#"{{"op":"generate","id":1,"text":"{}","tokens":[{}]}}"#,
+        "x".repeat(512),
+        (0..128).map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    );
+    rep.add(bench("json_parse_response", 10, 500, || {
+        let _ = griffin::json::parse(&payload).unwrap();
+    }));
+
+    // rouge on summary-sized strings
+    let a = "the quiet river joins the deep lake and the old mill";
+    let b = "in short the quiet river stands first near the old mill";
+    rep.add(bench("rouge_all_summary", 10, 1000, || {
+        let _ = griffin::eval::rouge_all(a, b);
+    }));
+
+    // magnitude metric at small-model scale
+    let w1: Vec<f32> =
+        (0..4 * 384 * 96).map(|_| rng.unit_f64() as f32).collect();
+    rep.add(bench("magnitude_metric_small", 2, 50, || {
+        let _ = selection::magnitude_metric(&w1, None, 4, 384, 96);
+    }));
+
+    rep.finish();
+}

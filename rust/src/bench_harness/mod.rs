@@ -1,0 +1,162 @@
+//! Timing/statistics harness (substrate: criterion is unavailable in the
+//! offline environment). cargo-bench targets use `harness = false` and
+//! call into this module.
+//!
+//! Methodology: warmup runs (excluded), then timed iterations with
+//! mean/stddev/p50/p90; results are printed as a table and appended to
+//! results/bench_*.csv so EXPERIMENTS.md can reference them.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, stddev};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>6} it  {:>10.3} ±{:>8.3} ms  p50 {:>9.3}  p90 {:>9.3}",
+            self.name, self.iters, self.mean_ms, self.stddev_ms,
+            self.p50_ms, self.p90_ms
+        )
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            self.name, self.iters, self.mean_ms, self.stddev_ms,
+            self.p50_ms, self.p90_ms, self.min_ms, self.max_ms
+        )
+    }
+}
+
+pub const CSV_HEADER: &str =
+    "name,iters,mean_ms,stddev_ms,p50_ms,p90_ms,min_ms,max_ms";
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive: run until `budget_ms` of measurement time or `max_iters`.
+pub fn bench_for<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64,
+                             max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (samples.len() < 3
+            || start.elapsed().as_secs_f64() * 1e3 < budget_ms)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, &samples)
+}
+
+pub fn summarize(name: &str, samples_ms: &[f64]) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ms.len(),
+        mean_ms: mean(samples_ms),
+        stddev_ms: stddev(samples_ms),
+        p50_ms: percentile(samples_ms, 50.0),
+        p90_ms: percentile(samples_ms, 90.0),
+        min_ms: samples_ms.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ms: samples_ms.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Collects results, prints rows as they come, saves CSV at the end.
+pub struct Reporter {
+    pub results: Vec<BenchResult>,
+    csv_name: String,
+}
+
+impl Reporter {
+    pub fn new(csv_name: &str) -> Self {
+        println!("{:-<100}", "");
+        Reporter { results: Vec::new(), csv_name: csv_name.to_string() }
+    }
+
+    pub fn add(&mut self, r: BenchResult) {
+        println!("{}", r.row());
+        self.results.push(r);
+    }
+
+    pub fn finish(self) {
+        let path = crate::test_support::results_path(&self.csv_name);
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for r in &self.results {
+            out.push_str(&r.csv_row());
+            out.push('\n');
+        }
+        if let Err(e) = std::fs::write(&path, out) {
+            eprintln!("warning: could not write {path:?}: {e}");
+        } else {
+            println!("-> {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + iters
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.max_ms);
+    }
+
+    #[test]
+    fn bench_for_respects_budget() {
+        let r = bench_for("sleepy", 0, 30.0, 1000, || {
+            std::thread::sleep(std::time::Duration::from_millis(5))
+        });
+        assert!(r.iters >= 3 && r.iters < 20, "iters = {}", r.iters);
+    }
+
+    #[test]
+    fn summarize_known_values() {
+        let r = summarize("x", &[1.0, 2.0, 3.0]);
+        assert!((r.mean_ms - 2.0).abs() < 1e-12);
+        assert_eq!(r.min_ms, 1.0);
+        assert_eq!(r.max_ms, 3.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let r = summarize("a,b", &[1.0]); // comma in name is naughty but
+        let row = r.csv_row();            // must not panic
+        assert!(row.contains("a,b"));
+    }
+}

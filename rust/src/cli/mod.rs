@@ -1,0 +1,183 @@
+//! Tiny CLI argument parser (substrate: clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Unknown flags are errors; every command declares its
+//! accepted options so `--help` output is generated consistently.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+    let mut args = Args::default();
+    for spec in specs {
+        if let Some(d) = spec.default {
+            args.values.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let find = |name: &str| specs.iter().find(|s| s.name == name);
+
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(rest) = a.strip_prefix("--") {
+            let (name, inline) = match rest.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (rest, None),
+            };
+            let spec = match find(name) {
+                Some(s) => s,
+                None => bail!("unknown option --{name}"),
+            };
+            if spec.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        if i >= argv.len() {
+                            bail!("--{name} expects a value");
+                        }
+                        argv[i].clone()
+                    }
+                };
+                args.values.insert(name.to_string(), v);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                args.flags.insert(name.to_string(), true);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in specs {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "model", takes_value: true,
+                      default: Some("tiny-swiglu"), help: "model config" },
+            OptSpec { name: "steps", takes_value: true, default: None,
+                      help: "step count" },
+            OptSpec { name: "verbose", takes_value: false, default: None,
+                      help: "chatty" },
+        ]
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("model"), Some("tiny-swiglu"));
+        assert_eq!(a.get("steps"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = parse(
+            &argv(&["--model", "small-swiglu", "--verbose", "pos1",
+                    "--steps=10", "pos2"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.get("model"), Some("small-swiglu"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&argv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&argv(&["--steps"]), &specs()).is_err());
+        assert!(parse(&argv(&["--verbose=1"]), &specs()).is_err());
+        let a = parse(&argv(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("serve", "run the server", &specs());
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: tiny-swiglu"));
+    }
+}

@@ -1,0 +1,368 @@
+//! Manifest + model configuration (rust mirror of python/compile/configs.py
+//! and the manifest.json emitted by aot.py — python is the source of truth
+//! at build time, this module validates and exposes it at runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub activation: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab_size: usize,
+    pub head_dim: usize,
+    pub is_glu: bool,
+    pub batch_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub keep_ks: Vec<usize>,
+    pub param_count: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub k: Option<usize>,
+    pub gen: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub param_order: Vec<String>,
+    pub nonff_param_order: Vec<String>,
+    pub pruned_param_order: Vec<String>,
+    pub weights_file: String,
+    pub trained_weights_file: Option<String>,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+}
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).with_context(|| format!("manifest missing key {key:?}"))
+}
+
+fn str_list(v: &Value) -> Result<Vec<String>> {
+    v.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|x| {
+            x.as_str().map(str::to_string).context("expected string")
+        })
+        .collect()
+}
+
+fn usize_list(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|x| x.as_usize().context("expected non-negative int"))
+        .collect()
+}
+
+fn io_list(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: req(e, "name")?.as_str().context("name")?.to_string(),
+                shape: usize_list(req(e, "shape")?)?,
+                dtype: req(e, "dtype")?
+                    .as_str()
+                    .context("dtype")?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ModelConfig {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelConfig {
+            name: req(v, "name")?.as_str().context("name")?.to_string(),
+            activation: req(v, "activation")?
+                .as_str()
+                .context("activation")?
+                .to_string(),
+            d_model: req(v, "d_model")?.as_usize().context("d_model")?,
+            n_heads: req(v, "n_heads")?.as_usize().context("n_heads")?,
+            n_layers: req(v, "n_layers")?.as_usize().context("n_layers")?,
+            d_ff: req(v, "d_ff")?.as_usize().context("d_ff")?,
+            max_seq: req(v, "max_seq")?.as_usize().context("max_seq")?,
+            vocab_size: req(v, "vocab_size")?
+                .as_usize()
+                .context("vocab_size")?,
+            head_dim: req(v, "head_dim")?.as_usize().context("head_dim")?,
+            is_glu: req(v, "is_glu")?.as_bool().context("is_glu")?,
+            batch_buckets: usize_list(req(v, "batch_buckets")?)?,
+            prefill_buckets: usize_list(req(v, "prefill_buckets")?)?,
+            keep_ks: usize_list(req(v, "keep_ks")?)?,
+            param_count: req(v, "param_count")?
+                .as_i64()
+                .context("param_count")? as u64,
+        })
+    }
+
+    /// Active parameter count during GRIFFIN generation at FF width k
+    /// (paper §4.2: e.g. Llama-2 13B -> 8.8B at 50% FF sparsity).
+    pub fn active_params_at_k(&self, k: usize) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        let kk = k as u64;
+        let ff_mats = if self.is_glu { 3 } else { 2 };
+        let full_ff = self.n_layers as u64 * ff_mats * d * f;
+        let pruned_ff = self.n_layers as u64 * ff_mats * d * kk;
+        self.param_count - full_ff + pruned_ff
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let mut executables = BTreeMap::new();
+        for (name, e) in
+            req(&v, "executables")?.as_obj().context("executables")?
+        {
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    name: name.clone(),
+                    file: req(e, "file")?
+                        .as_str()
+                        .context("file")?
+                        .to_string(),
+                    kind: req(e, "kind")?
+                        .as_str()
+                        .context("kind")?
+                        .to_string(),
+                    batch: e.get("batch").and_then(Value::as_usize),
+                    seq: e.get("seq").and_then(Value::as_usize),
+                    k: e.get("k").and_then(Value::as_usize),
+                    gen: e.get("gen").and_then(Value::as_usize),
+                    inputs: io_list(req(e, "inputs")?)?,
+                    outputs: io_list(req(e, "outputs")?)?,
+                },
+            );
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            config: ModelConfig::from_json(req(&v, "config")?)?,
+            param_order: str_list(req(&v, "param_order")?)?,
+            nonff_param_order: str_list(req(&v, "nonff_param_order")?)?,
+            pruned_param_order: str_list(req(&v, "pruned_param_order")?)?,
+            weights_file: req(&v, "weights")?
+                .as_str()
+                .context("weights")?
+                .to_string(),
+            trained_weights_file: v
+                .get("trained_weights")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            executables,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.param_order.is_empty() {
+            bail!("empty param_order");
+        }
+        let mut sorted = self.param_order.clone();
+        sorted.sort();
+        if sorted != self.param_order {
+            bail!("param_order must be sorted (ABI contract with aot.py)");
+        }
+        for e in self.executables.values() {
+            if e.inputs.is_empty() || e.outputs.is_empty() {
+                bail!("{}: empty io list", e.name);
+            }
+            for io in e.inputs.iter().chain(&e.outputs) {
+                if io.dtype != "f32" && io.dtype != "i32" {
+                    bail!("{}: bad dtype {}", e.name, io.dtype);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn hlo_path(&self, exe: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&exe.file)
+    }
+
+    pub fn weights_path(&self, trained: bool) -> Result<PathBuf> {
+        if trained {
+            match &self.trained_weights_file {
+                Some(f) => Ok(self.dir.join(f)),
+                None => bail!(
+                    "{}: no trained weights (run make artifacts)",
+                    self.config.name
+                ),
+            }
+        } else {
+            Ok(self.dir.join(&self.weights_file))
+        }
+    }
+
+    // -- executable lookup helpers (bucket selection policy lives here) --
+
+    pub fn find(&self, kind: &str, batch: Option<usize>, seq: Option<usize>,
+                k: Option<usize>, gen: Option<usize>)
+                -> Option<&ExecutableSpec> {
+        self.executables.values().find(|e| {
+            e.kind == kind
+                && (batch.is_none() || e.batch == batch)
+                && (seq.is_none() || e.seq == seq)
+                && (k.is_none() || e.k == k)
+                && (gen.is_none() || e.gen == gen)
+        })
+    }
+
+    /// Smallest prefill bucket that fits (batch, prompt_len).
+    pub fn prefill_bucket(&self, batch: usize, prompt_len: usize)
+                          -> Option<&ExecutableSpec> {
+        self.executables
+            .values()
+            .filter(|e| {
+                e.kind == "prefill"
+                    && e.batch == Some(batch)
+                    && e.seq.map_or(false, |s| s >= prompt_len)
+            })
+            .min_by_key(|e| e.seq.unwrap())
+    }
+
+    /// Smallest batch bucket >= n with a prefill for prompt_len.
+    pub fn batch_bucket(&self, n: usize) -> Option<usize> {
+        self.config
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+    }
+
+    /// The k bucket closest to `keep_fraction * d_ff` (paper operating
+    /// points are emitted by aot.py; exact match preferred).
+    pub fn nearest_k(&self, keep_fraction: f64) -> Option<usize> {
+        let target = (self.config.d_ff as f64 * keep_fraction).round();
+        self.config
+            .keep_ks
+            .iter()
+            .copied()
+            .min_by_key(|&k| (k as f64 - target).abs() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::test_support::artifact_path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = artifact_path("tiny-swiglu");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts missing (run make artifacts)");
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.config.name, "tiny-swiglu");
+        assert_eq!(m.config.d_model, 64);
+        assert!(m.config.is_glu);
+        assert!(m.executables.len() > 10);
+        assert!(m.param_order.contains(&"wg".to_string()));
+        assert!(!m.nonff_param_order.contains(&"w1".to_string()));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        // prompt of 40 tokens, batch 1 -> smallest bucket >= 40 (64)
+        let p = m.prefill_bucket(1, 40).unwrap();
+        assert_eq!(p.seq, Some(64));
+        // too-long prompt has no bucket
+        assert!(m.prefill_bucket(1, 100_000).is_none());
+        assert_eq!(m.batch_bucket(3), Some(4));
+        assert_eq!(m.batch_bucket(17), None);
+        // 50% of d_ff=256 -> 128
+        assert_eq!(m.nearest_k(0.5), Some(128));
+    }
+
+    #[test]
+    fn io_specs_consistent() {
+        let Some(m) = manifest() else { return };
+        for e in m.executables.values() {
+            for io in e.inputs.iter().chain(&e.outputs) {
+                assert!(!io.shape.iter().any(|&d| d == 0 && io.shape.len() > 1),
+                        "{}: zero dim in {:?}", e.name, io);
+            }
+        }
+        // decode inputs start with params in ABI order
+        let d = m.find("decode", Some(1), None, None, None).unwrap();
+        let names: Vec<_> =
+            d.inputs.iter().map(|i| i.name.as_str()).collect();
+        for (i, p) in m.param_order.iter().enumerate() {
+            assert_eq!(names[i], p);
+        }
+        assert!(names.ends_with(&["kcache", "vcache", "token", "pos"]));
+    }
+
+    #[test]
+    fn active_params_shrink_with_k() {
+        let Some(m) = manifest() else { return };
+        let full = m.config.active_params_at_k(m.config.d_ff);
+        assert_eq!(full, m.config.param_count);
+        let half = m.config.active_params_at_k(m.config.d_ff / 2);
+        assert!(half < full);
+    }
+
+    #[test]
+    fn rejects_unsorted_param_order() {
+        // synthetic manifest exercising validate()
+        let dir = std::env::temp_dir().join("griffin_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = r#"{
+          "config": {"name":"x","activation":"swiglu","d_model":8,
+            "n_heads":2,"n_layers":1,"d_ff":16,"max_seq":32,
+            "vocab_size":259,"head_dim":4,"is_glu":true,
+            "batch_buckets":[1],"prefill_buckets":[16],"keep_ks":[8],
+            "param_count":1000},
+          "param_order": ["b", "a"],
+          "nonff_param_order": [],
+          "pruned_param_order": [],
+          "weights": "w.bin",
+          "executables": {}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

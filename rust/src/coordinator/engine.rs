@@ -1,0 +1,844 @@
+//! The serving engine: ties runtime + selection + sampling into the
+//! prompt-phase / generation-phase flow of the paper (Fig. 3).
+//!
+//!   prompt  →  prefill executable (full model, emits s per FF block)
+//!   select  →  host-side strategy over s (GRIFFIN §4.2 / baselines)
+//!   gather  →  gather_k executable builds Ŵ_g, Ŵ_1, Ŵ_2 on device
+//!   generate→  decode_pruned steps (or full decode / masked-weight decode
+//!              for the baselines), KV-cache device-resident throughout.
+//!
+//! Everything here is single-threaded by design: `PjRtBuffer` is not
+//! `Send`, so the engine owns all device state and the server hands it
+//! work through channels (server/).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::selection::{self, LayerStats, Strategy};
+use crate::coordinator::sequence::{FinishReason, GenRequest};
+use crate::metrics::{MetricsRegistry, Timer};
+use crate::runtime::{DeviceTensor, Session, WeightStore};
+use crate::sampling::{log_softmax_at, Sampler};
+use crate::tensorfile::TensorMap;
+use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
+
+/// How the generation phase runs (paper §5.1 comparison set).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// original model (upper baseline)
+    Full,
+    /// the paper's method: prompt-prompted expert selection
+    Griffin { keep: f64, strategy: Strategy },
+    /// static neuron pruning by weight magnitude (structured baseline)
+    Magnitude { keep: f64 },
+    /// Adaptive Wanda: unstructured masking from prompt activations
+    Wanda { keep: f64 },
+}
+
+impl Mode {
+    pub fn griffin(keep: f64) -> Mode {
+        Mode::Griffin { keep, strategy: Strategy::TopK }
+    }
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Full => "full".into(),
+            Mode::Griffin { keep, strategy } => match strategy {
+                Strategy::TopK => format!("griffin@{keep}"),
+                Strategy::Sampling { .. } => format!("sampling@{keep}"),
+                Strategy::TopKPlusSampling { .. } => {
+                    format!("topk+sampling@{keep}")
+                }
+            },
+            Mode::Magnitude { keep } => format!("magnitude@{keep}"),
+            Mode::Wanda { keep } => format!("wanda@{keep}"),
+        }
+    }
+}
+
+/// Device-resident pruned FF weights for one expert set.
+pub struct PrunedWeights {
+    /// in manifest pruned_param_order (w1p, w2p[, wgp])
+    pub tensors: Vec<DeviceTensor>,
+    pub k: usize,
+}
+
+/// Device-resident per-batch decode state.
+pub struct DecodeState {
+    pub kcache: DeviceTensor,
+    pub vcache: DeviceTensor,
+    /// per-slot next write position (== tokens seen so far)
+    pub pos: Vec<i32>,
+    pub batch: usize,
+}
+
+/// Host-side results of the prompt phase.
+pub struct PrefillOut {
+    pub state: DecodeState,
+    /// per-sequence, per-layer GRIFFIN statistic s
+    pub stats: Vec<LayerStats>,
+    /// per-sequence, per-layer FF input column norms (Wanda W1/Wg scores)
+    pub xnorms: Vec<LayerStats>,
+    /// per-sequence, per-layer raw-activation column norms (Wanda W2)
+    pub znorms: Vec<LayerStats>,
+    /// logits at each sequence's last real prompt token
+    pub last_logits: Vec<Vec<f32>>,
+    /// full prompt logits [B][S][V] (kept only when score_prompt)
+    pub prompt_logits: Option<Vec<f32>>,
+    pub bucket_seq: usize,
+    pub lengths: Vec<usize>,
+}
+
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub logprobs: Vec<f32>,
+    pub finish: FinishReason,
+    pub k_used: Option<usize>,
+    pub prefill_ms: f64,
+    pub select_ms: f64,
+    pub decode_ms: f64,
+    pub tokens_per_sec: f64,
+}
+
+pub struct Engine {
+    pub session: Session,
+    pub weights: WeightStore,
+    /// host copy (magnitude / wanda baselines need raw weight values)
+    pub host_weights: TensorMap,
+    pub tokenizer: Tokenizer,
+    pub metrics: Arc<MetricsRegistry>,
+    magnitude_cache: Option<Vec<Vec<i32>>>, // per keep-k gather idx cache
+    magnitude_keep: f64,
+}
+
+impl Engine {
+    pub fn load(artifact_dir: &Path, trained: bool) -> Result<Engine> {
+        let session = Session::load(artifact_dir)?;
+        let weights = WeightStore::load(&session, trained)?;
+        let host_weights =
+            crate::tensorfile::read(session.manifest.weights_path(trained)?)?;
+        Ok(Engine {
+            session,
+            weights,
+            host_weights,
+            tokenizer: Tokenizer::new(),
+            metrics: Arc::new(MetricsRegistry::default()),
+            magnitude_cache: None,
+            magnitude_keep: -1.0,
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.session.manifest.config
+    }
+
+    // ------------------------------------------------------------------
+    // prompt phase
+    // ------------------------------------------------------------------
+
+    /// Run the prompt phase for a batch of prompts (padded to buckets).
+    pub fn prefill(&self, prompts: &[Vec<i32>], score_prompt: bool)
+                   -> Result<PrefillOut> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let n = prompts.len();
+        let batch = self
+            .session
+            .manifest
+            .batch_bucket(n)
+            .with_context(|| format!("no batch bucket >= {n}"))?;
+        let longest = prompts.iter().map(Vec::len).max().unwrap_or(1).max(1);
+        // over-long prompts are clamped to the largest compiled bucket
+        // (tokenizer::fit keeps the suffix — most recent context)
+        let exe = match self.session.manifest.prefill_bucket(batch, longest)
+        {
+            Some(e) => e.name.clone(),
+            None => self
+                .session
+                .manifest
+                .executables
+                .values()
+                .filter(|e| e.kind == "prefill" && e.batch == Some(batch))
+                .max_by_key(|e| e.seq.unwrap_or(0))
+                .with_context(|| {
+                    format!("no prefill executable for batch={batch}")
+                })?
+                .name
+                .clone(),
+        };
+        let bucket_seq = self.session.manifest.executables[&exe]
+            .seq
+            .unwrap();
+
+        // pad the token matrix: real sequences then dummy rows
+        let mut tokens = Vec::with_capacity(batch * bucket_seq);
+        let mut lengths = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let ids: &[i32] = if i < n { &prompts[i] } else { &[] };
+            let (row, real) = self.tokenizer.fit(ids, bucket_seq);
+            // empty dummy rows still need length >= 1 for valid attention
+            lengths.push(real.max(1));
+            tokens.extend(if real == 0 {
+                vec![PAD_ID; bucket_seq]
+            } else {
+                row
+            });
+        }
+        let toks_dev = self
+            .session
+            .upload_i32(&[batch, bucket_seq], &tokens)?;
+        let lens_i32: Vec<i32> = lengths.iter().map(|&l| l as i32).collect();
+        let lens_dev = self.session.upload_i32(&[batch], &lens_i32)?;
+
+        let mut args: Vec<&DeviceTensor> = self.weights.ordered();
+        args.push(&toks_dev);
+        args.push(&lens_dev);
+        let mut outs = self.session.run(&exe, &args)?;
+        // outputs: logits, kcache, vcache, stats, xnorms, znorms
+        let znorms_t = outs.pop().unwrap();
+        let xnorms_t = outs.pop().unwrap();
+        let stats_t = outs.pop().unwrap();
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        let logits_t = outs.pop().unwrap();
+
+        let v = cfg.vocab_size;
+        let logits = logits_t.to_f32()?;
+        let last_logits: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let row = (i * bucket_seq + (lengths[i] - 1)) * v;
+                logits[row..row + v].to_vec()
+            })
+            .collect();
+
+        let split = |t: &DeviceTensor, width: usize| -> Result<Vec<LayerStats>> {
+            // [L, B, width] -> per-seq [L][width]
+            let host = t.to_f32()?;
+            let l_count = cfg.n_layers;
+            Ok((0..n)
+                .map(|i| {
+                    (0..l_count)
+                        .map(|l| {
+                            let base = (l * batch + i) * width;
+                            host[base..base + width].to_vec()
+                        })
+                        .collect()
+                })
+                .collect())
+        };
+        let stats = split(&stats_t, cfg.d_ff)?;
+        let xnorms = split(&xnorms_t, cfg.d_model)?;
+        let znorms = split(&znorms_t, cfg.d_ff)?;
+
+        self.metrics.prompt_tokens.add(
+            lengths.iter().take(n).sum::<usize>() as u64);
+        t.record_into(&self.metrics.prefill_latency);
+
+        Ok(PrefillOut {
+            state: DecodeState {
+                kcache,
+                vcache,
+                pos: lens_i32,
+                batch,
+            },
+            stats,
+            xnorms,
+            znorms,
+            last_logits,
+            prompt_logits: if score_prompt { Some(logits) } else { None },
+            bucket_seq,
+            lengths,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // expert selection + gather
+    // ------------------------------------------------------------------
+
+    /// Round a keep fraction to the nearest compiled k bucket.
+    pub fn k_for(&self, keep: f64) -> Result<usize> {
+        self.session
+            .manifest
+            .nearest_k(keep)
+            .context("config has no keep_ks")
+    }
+
+    /// Build device-resident pruned FF weights for an expert index set.
+    pub fn gather(&self, idx: &[Vec<i32>]) -> Result<PrunedWeights> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let k = idx[0].len();
+        if idx.len() != cfg.n_layers || idx.iter().any(|l| l.len() != k) {
+            bail!("gather: idx must be [L][k]");
+        }
+        let name = format!("gather_k{k}");
+        if !self.session.manifest.executables.contains_key(&name) {
+            bail!("no gather executable for k={k} \
+                   (available: {:?})", cfg.keep_ks);
+        }
+        let flat: Vec<i32> = idx.iter().flatten().copied().collect();
+        let idx_dev = self.session.upload_i32(&[cfg.n_layers, k], &flat)?;
+        // ff params in the order aot emitted them: w1, w2 [, wg]
+        let mut args: Vec<&DeviceTensor> = vec![
+            self.weights.get("w1"),
+            self.weights.get("w2"),
+        ];
+        if cfg.is_glu {
+            args.push(self.weights.get("wg"));
+        }
+        args.push(&idx_dev);
+        let outs = self.session.run(&name, &args)?;
+        t.record_into(&self.metrics.gather_latency);
+        Ok(PrunedWeights { tensors: outs, k })
+    }
+
+    /// Layer-adaptive gather (extension; DESIGN.md §6): per-layer budgets
+    /// under a global average keep fraction, padded slots masked to zero.
+    pub fn gather_adaptive(&self, stats: &LayerStats, keep: f64)
+                           -> Result<PrunedWeights> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let k_bucket = self.k_for(keep.min(0.5).max(0.5))?; // masked gather
+        // is emitted at the headline (50%) bucket only
+        let k_avg = ((cfg.d_ff as f64 * keep).round() as usize)
+            .min(k_bucket);
+        let (idx, mask) = selection::adaptive_layer_allocation(
+            stats, k_avg, k_bucket);
+        let name = format!("gather_masked_k{k_bucket}");
+        if !self.session.manifest.executables.contains_key(&name) {
+            bail!("no {name} artifact (re-run make artifacts)");
+        }
+        let flat_idx: Vec<i32> = idx.iter().flatten().copied().collect();
+        let flat_mask: Vec<f32> = mask.iter().flatten().copied().collect();
+        let idx_dev = self
+            .session
+            .upload_i32(&[cfg.n_layers, k_bucket], &flat_idx)?;
+        let mask_dev = self
+            .session
+            .upload_f32(&[cfg.n_layers, k_bucket], &flat_mask)?;
+        let mut args: Vec<&DeviceTensor> =
+            vec![self.weights.get("w1"), self.weights.get("w2")];
+        if cfg.is_glu {
+            args.push(self.weights.get("wg"));
+        }
+        args.push(&idx_dev);
+        args.push(&mask_dev);
+        let outs = self.session.run(&name, &args)?;
+        t.record_into(&self.metrics.gather_latency);
+        Ok(PrunedWeights { tensors: outs, k: k_bucket })
+    }
+
+    /// GRIFFIN selection for one sequence (paper §4.2) or any stats set.
+    pub fn select(&self, stats: &LayerStats, keep: f64, strategy: Strategy)
+                  -> Result<Vec<Vec<i32>>> {
+        let t = Timer::start();
+        let k = self.k_for(keep)?;
+        let idx = selection::select_experts(stats, k, strategy);
+        t.record_into(&self.metrics.selection_latency);
+        Ok(idx)
+    }
+
+    /// Static magnitude expert set (cached; prompt-independent).
+    pub fn magnitude_experts(&mut self, keep: f64) -> Result<Vec<Vec<i32>>> {
+        if self.magnitude_keep == keep {
+            if let Some(idx) = &self.magnitude_cache {
+                return Ok(idx.clone());
+            }
+        }
+        let cfg = self.config().clone();
+        let w1 = self.host_weights["w1"].to_f32()?;
+        let wg = if cfg.is_glu {
+            Some(self.host_weights["wg"].to_f32()?)
+        } else {
+            None
+        };
+        let metric = selection::magnitude_metric(
+            &w1, wg.as_deref(), cfg.n_layers, cfg.d_ff, cfg.d_model);
+        let k = self.k_for(keep)?;
+        let idx = selection::select_experts(&metric, k, Strategy::TopK);
+        self.magnitude_cache = Some(idx.clone());
+        self.magnitude_keep = keep;
+        Ok(idx)
+    }
+
+    /// Adaptive-Wanda masked FF weights for one sequence (uploads
+    /// full-size masked copies; unstructured baseline, §5.1).
+    pub fn wanda_weights(&self, xnorm: &LayerStats, znorm: &LayerStats,
+                         keep: f64) -> Result<Vec<DeviceTensor>> {
+        let cfg = self.config();
+        let (l_n, f, d) = (cfg.n_layers, cfg.d_ff, cfg.d_model);
+        let mask_stack = |w: &mut Vec<f32>, norms: &LayerStats,
+                          rows: usize, cols: usize| {
+            for l in 0..l_n {
+                selection::wanda_mask_rows(
+                    &mut w[l * rows * cols..(l + 1) * rows * cols],
+                    &norms[l], rows, cols, keep);
+            }
+        };
+        let mut out = Vec::new();
+        let mut w1 = self.host_weights["w1"].to_f32()?;
+        mask_stack(&mut w1, xnorm, f, d);
+        out.push(self.session.upload_f32(&[l_n, f, d], &w1)?);
+        let mut w2 = self.host_weights["w2"].to_f32()?;
+        mask_stack(&mut w2, znorm, d, f);
+        out.push(self.session.upload_f32(&[l_n, d, f], &w2)?);
+        if cfg.is_glu {
+            let mut wg = self.host_weights["wg"].to_f32()?;
+            mask_stack(&mut wg, xnorm, f, d);
+            out.push(self.session.upload_f32(&[l_n, f, d], &wg)?);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // generation phase
+    // ------------------------------------------------------------------
+
+    /// One decode step (low-level; the experiment drivers also use this
+    /// directly for fixed-expert ablations). `ff` selects the weight set:
+    ///   None -> full model decode_b{B}
+    ///   Some(pruned) -> decode_pruned_b{B}_k{K}
+    /// `override_ff` (Wanda) replaces the full FF stacks in-place.
+    pub fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        ff: Option<&PrunedWeights>,
+        override_ff: Option<&[DeviceTensor]>,
+    ) -> Result<Vec<f32>> {
+        let t = Timer::start();
+        let b = state.batch;
+        let tok_dev = self.session.upload_i32(&[b], tokens)?;
+        let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
+
+        let name;
+        let mut args: Vec<&DeviceTensor> = Vec::new();
+        match ff {
+            Some(pruned) => {
+                name = format!("decode_pruned_b{b}_k{}", pruned.k);
+                args.extend(self.weights.ordered_nonff());
+                args.extend(pruned.tensors.iter());
+            }
+            None => {
+                name = format!("decode_b{b}");
+                match override_ff {
+                    None => args.extend(self.weights.ordered()),
+                    Some(ffw) => {
+                        // replace w1/w2/wg slots in ABI order
+                        for pname in &self.weights.param_order {
+                            args.push(match pname.as_str() {
+                                "w1" => &ffw[0],
+                                "w2" => &ffw[1],
+                                "wg" => &ffw[2],
+                                _ => self.weights.get(pname),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        args.push(&state.kcache);
+        args.push(&state.vcache);
+        args.push(&tok_dev);
+        args.push(&pos_dev);
+
+        let mut outs = self.session.run(&name, &args)?;
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_f32()?;
+        state.kcache = kcache;
+        state.vcache = vcache;
+        for p in state.pos.iter_mut() {
+            *p += 1;
+        }
+        t.record_into(&self.metrics.decode_step_latency);
+        Ok(logits)
+    }
+
+    /// Full request: prompt → (select → gather) → generation (paper Fig 3).
+    pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
+        let e2e = Timer::start();
+        let responses = self.generate_batch(std::slice::from_ref(req))?;
+        let mut r = responses.into_iter().next().unwrap();
+        r.tokens_per_sec =
+            r.tokens.len() as f64 / e2e.elapsed().as_secs_f64();
+        Ok(r)
+    }
+
+    /// Batched generation. GRIFFIN batches share one expert set via the
+    /// eq.7 aggregate (paper §5.3); Full shares nothing; Magnitude is
+    /// static; Wanda masks from the aggregate norms. All requests in the
+    /// batch must use the same mode.
+    pub fn generate_batch(&mut self, reqs: &[GenRequest])
+                          -> Result<Vec<GenResponse>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let e2e = Timer::start();
+        let mode = reqs[0].mode;
+        if reqs.iter().any(|r| r.mode != mode) {
+            bail!("generate_batch: mixed modes");
+        }
+        let cfg = self.config().clone();
+        let prompts: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.prompt.clone()).collect();
+
+        let pre_t = Timer::start();
+        let mut pre = self.prefill(&prompts, false)?;
+        let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
+
+        // --- selection phase ------------------------------------------
+        let sel_t = Timer::start();
+        let (pruned, wanda_ffw, k_used): (Option<PrunedWeights>,
+                                          Option<Vec<DeviceTensor>>,
+                                          Option<usize>) = match mode {
+            Mode::Full => (None, None, None),
+            Mode::Griffin { keep, strategy } => {
+                let agg = selection::aggregate_stats(
+                    &pre.stats
+                        .iter()
+                        .cloned()
+                        .zip(pre.lengths.iter().copied())
+                        .collect::<Vec<_>>(),
+                );
+                let idx = self.select(&agg, keep, strategy)?;
+                let pw = self.gather(&idx)?;
+                let k = pw.k;
+                (Some(pw), None, Some(k))
+            }
+            Mode::Magnitude { keep } => {
+                let idx = self.magnitude_experts(keep)?;
+                let pw = self.gather(&idx)?;
+                let k = pw.k;
+                (Some(pw), None, Some(k))
+            }
+            Mode::Wanda { keep } => {
+                // aggregate norms across the batch (rms over sequences)
+                let agg_x = aggregate_norms(&pre.xnorms);
+                let agg_z = aggregate_norms(&pre.znorms);
+                (None, Some(self.wanda_weights(&agg_x, &agg_z, keep)?),
+                 None)
+            }
+        };
+        let select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
+
+        // --- generation phase -----------------------------------------
+        let dec_t = Timer::start();
+        let n = reqs.len();
+        let b = pre.state.batch;
+        let max_new = reqs.iter().map(|r| r.max_new_tokens).max().unwrap();
+        let mut samplers: Vec<Sampler> = reqs
+            .iter()
+            .map(|r| Sampler::new(r.sampler, r.seed))
+            .collect();
+
+        // first token comes from the prompt's last logits
+        let mut cur: Vec<i32> = vec![PAD_ID; b];
+        let mut done = vec![false; b];
+        let mut out_tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut out_lps: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut finish = vec![FinishReason::Length; n];
+        for i in 0..n {
+            let t = samplers[i].sample(&pre.last_logits[i]) as i32;
+            let lp = log_softmax_at(&pre.last_logits[i], t as usize);
+            cur[i] = t;
+            out_tokens[i].push(t);
+            out_lps[i].push(lp);
+            if reqs[i].stop_at_eos && t == EOS_ID {
+                done[i] = true;
+                finish[i] = FinishReason::Eos;
+            }
+        }
+        for slot in n..b {
+            done[slot] = true; // padding slots never produce output
+        }
+
+        let v = cfg.vocab_size;
+        for _step in 1..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // context-full guard
+            for i in 0..n {
+                if !done[i]
+                    && (pre.state.pos[i] as usize) >= cfg.max_seq
+                {
+                    done[i] = true;
+                    finish[i] = FinishReason::ContextFull;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let logits = self.decode_step(
+                &mut pre.state, &cur, pruned.as_ref(),
+                wanda_ffw.as_deref())?;
+            for i in 0..n {
+                if done[i] || out_tokens[i].len() >= reqs[i].max_new_tokens
+                {
+                    done[i] = done[i]
+                        || out_tokens[i].len() >= reqs[i].max_new_tokens;
+                    continue;
+                }
+                let row = &logits[i * v..(i + 1) * v];
+                let t = samplers[i].sample(row) as i32;
+                out_lps[i].push(log_softmax_at(row, t as usize));
+                out_tokens[i].push(t);
+                cur[i] = t;
+                if reqs[i].stop_at_eos && t == EOS_ID {
+                    done[i] = true;
+                    finish[i] = FinishReason::Eos;
+                }
+            }
+        }
+        let decode_ms = dec_t.elapsed().as_secs_f64() * 1e3;
+
+        let total_new: usize = out_tokens.iter().map(Vec::len).sum();
+        self.metrics.tokens_generated.add(total_new as u64);
+        e2e.record_into(&self.metrics.e2e_latency);
+        self.metrics.requests_completed.add(n as u64);
+
+        Ok((0..n)
+            .map(|i| GenResponse {
+                id: reqs[i].id,
+                text: self.tokenizer.decode(&out_tokens[i]),
+                tokens: std::mem::take(&mut out_tokens[i]),
+                logprobs: std::mem::take(&mut out_lps[i]),
+                finish: finish[i],
+                k_used,
+                prefill_ms,
+                select_ms,
+                decode_ms,
+                tokens_per_sec: total_new as f64
+                    / (decode_ms / 1e3).max(1e-9),
+            })
+            .collect())
+    }
+
+    /// Fused-scan greedy generation (throughput path): one PJRT call for
+    /// the whole generation phase. Only batch=1, greedy, fixed G buckets.
+    pub fn generate_scan(&mut self, req: &GenRequest) -> Result<GenResponse> {
+        let e2e = Timer::start();
+        let cfg = self.config().clone();
+        let pre_t = Timer::start();
+        let pre = self.prefill(std::slice::from_ref(&req.prompt), false)?;
+        let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
+        if pre.state.batch != 1 {
+            bail!("generate_scan requires batch bucket 1");
+        }
+
+        let sel_t = Timer::start();
+        let (exe_name, pruned, k_used) = match req.mode {
+            Mode::Full => {
+                let g = self.scan_bucket("generate_scan", None,
+                                         req.max_new_tokens)?;
+                (format!("generate_scan_b1_g{g}"), None, None)
+            }
+            Mode::Griffin { keep, strategy } => {
+                let idx = self.select(&pre.stats[0], keep, strategy)?;
+                let pw = self.gather(&idx)?;
+                let k = pw.k;
+                let g = self.scan_bucket("generate_scan_pruned", Some(k),
+                                         req.max_new_tokens)?;
+                (format!("generate_scan_pruned_b1_k{k}_g{g}"), Some(pw),
+                 Some(k))
+            }
+            _ => bail!("generate_scan supports Full and Griffin modes"),
+        };
+        let select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
+
+        let dec_t = Timer::start();
+        let first = crate::sampling::argmax(&pre.last_logits[0]) as i32;
+        let tok_dev = self.session.upload_i32(&[1], &[first])?;
+        let pos_dev = self.session.upload_i32(&[1], &pre.state.pos)?;
+        let mut args: Vec<&DeviceTensor> = Vec::new();
+        match &pruned {
+            Some(pw) => {
+                args.extend(self.weights.ordered_nonff());
+                args.extend(pw.tensors.iter());
+            }
+            None => args.extend(self.weights.ordered()),
+        }
+        args.push(&pre.state.kcache);
+        args.push(&pre.state.vcache);
+        args.push(&tok_dev);
+        args.push(&pos_dev);
+        let outs = self.session.run(&exe_name, &args)?;
+        let scan_tokens = outs[0].to_i32()?;
+        let scan_lps = outs[1].to_f32()?;
+        let decode_ms = dec_t.elapsed().as_secs_f64() * 1e3;
+
+        // assemble: first sampled token + scan outputs, truncated at EOS
+        let mut tokens = vec![first];
+        let mut lps = vec![log_softmax_at(&pre.last_logits[0],
+                                          first as usize)];
+        let mut finish = FinishReason::Length;
+        if req.stop_at_eos && first == EOS_ID {
+            finish = FinishReason::Eos;
+        } else {
+            for (t, lp) in scan_tokens.iter().zip(&scan_lps) {
+                if tokens.len() >= req.max_new_tokens {
+                    break;
+                }
+                tokens.push(*t);
+                lps.push(*lp);
+                if req.stop_at_eos && *t == EOS_ID {
+                    finish = FinishReason::Eos;
+                    break;
+                }
+            }
+        }
+        let _ = cfg;
+        self.metrics.tokens_generated.add(tokens.len() as u64);
+        e2e.record_into(&self.metrics.e2e_latency);
+        self.metrics.requests_completed.inc();
+        Ok(GenResponse {
+            id: req.id,
+            text: self.tokenizer.decode(&tokens),
+            tokens,
+            logprobs: lps,
+            finish,
+            k_used,
+            prefill_ms,
+            select_ms,
+            decode_ms,
+            tokens_per_sec: 0.0,
+        })
+    }
+
+    /// Smallest compiled scan bucket with G >= needed-1 (the first token
+    /// comes from prefill logits).
+    fn scan_bucket(&self, kind: &str, k: Option<usize>, max_new: usize)
+                   -> Result<usize> {
+        let need = max_new.saturating_sub(1).max(1);
+        self.session
+            .manifest
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == kind
+                    && e.batch == Some(1)
+                    && (k.is_none() || e.k == k)
+                    && e.gen.map_or(false, |g| g >= need)
+            })
+            .filter_map(|e| e.gen)
+            .min()
+            .with_context(|| {
+                format!("no {kind} bucket >= {need} (k={k:?})")
+            })
+    }
+
+    // ------------------------------------------------------------------
+    // teacher-forced scoring (perplexity experiments, Figs 4/5)
+    // ------------------------------------------------------------------
+
+    /// Score `continuation` under the model given `prompt`, with the
+    /// generation-phase weights chosen by `mode` (experts from the prompt,
+    /// as in the paper's language-modeling "simulated generation" setup).
+    /// Returns per-token negative log-likelihoods of the continuation.
+    pub fn score_continuation(&mut self, prompt: &[i32],
+                              continuation: &[i32], mode: Mode)
+                              -> Result<Vec<f64>> {
+        if prompt.is_empty() || continuation.is_empty() {
+            bail!("score_continuation: empty input");
+        }
+        let mut pre =
+            self.prefill(std::slice::from_ref(&prompt.to_vec()), false)?;
+        let (pruned, wanda_ffw) = match mode {
+            Mode::Full => (None, None),
+            Mode::Griffin { keep, strategy } => {
+                let idx = self.select(&pre.stats[0], keep, strategy)?;
+                (Some(self.gather(&idx)?), None)
+            }
+            Mode::Magnitude { keep } => {
+                let idx = self.magnitude_experts(keep)?;
+                (Some(self.gather(&idx)?), None)
+            }
+            Mode::Wanda { keep } => {
+                let ffw = self.wanda_weights(
+                    &pre.xnorms[0], &pre.znorms[0], keep)?;
+                (None, Some(ffw))
+            }
+        };
+
+        // teacher-forced pass: feed continuation[i], score its logits
+        // against continuation[i+1]; the first continuation token is
+        // scored from the prompt's last logits.
+        let v = self.config().vocab_size;
+        let mut nll = Vec::with_capacity(continuation.len());
+        nll.push(-log_softmax_at(&pre.last_logits[0],
+                                 continuation[0] as usize) as f64);
+        let b = pre.state.batch;
+        let mut cur = vec![0i32; b];
+        for i in 0..continuation.len() - 1 {
+            cur[0] = continuation[i];
+            let logits = self.decode_step(
+                &mut pre.state, &cur, pruned.as_ref(),
+                wanda_ffw.as_deref())?;
+            nll.push(-log_softmax_at(&logits[..v],
+                                     continuation[i + 1] as usize) as f64);
+        }
+        Ok(nll)
+    }
+}
+
+/// RMS-combine per-sequence norm stacks (Wanda batch aggregation):
+/// norms are l2 over tokens, so the batch aggregate is the l2 over the
+/// concatenated token axis = sqrt(sum of squares).
+fn aggregate_norms(per_seq: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    let l_n = per_seq[0].len();
+    let width = per_seq[0][0].len();
+    let mut out = vec![vec![0f32; width]; l_n];
+    for seq in per_seq {
+        for l in 0..l_n {
+            for j in 0..width {
+                out[l][j] += seq[l][j] * seq[l][j];
+            }
+        }
+    }
+    for row in &mut out {
+        for v in row {
+            *v = v.sqrt();
+        }
+    }
+    out
+}
+
+/// Convenience: decode state + engine pair used by integration tests.
+pub type EngineRc = Rc<std::cell::RefCell<Engine>>;
+
+pub fn mode_table() -> BTreeMap<&'static str, Mode> {
+    let mut m = BTreeMap::new();
+    m.insert("full", Mode::Full);
+    m.insert("griffin", Mode::griffin(0.5));
+    m.insert("magnitude", Mode::Magnitude { keep: 0.5 });
+    m.insert("wanda", Mode::Wanda { keep: 0.5 });
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_norms_is_rms() {
+        let a = vec![vec![3.0f32, 0.0]];
+        let b = vec![vec![4.0f32, 1.0]];
+        let agg = aggregate_norms(&[a, b]);
+        assert!((agg[0][0] - 5.0).abs() < 1e-6);
+        assert!((agg[0][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mode_labels() {
+        assert_eq!(Mode::Full.label(), "full");
+        assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
+        assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 coordinator: the paper's serving-side contribution.
+//!
+//! - `selection`  — GRIFFIN expert selection + baselines (§4.2, Tables 4-5)
+//! - `sequence`   — request/sequence state machine
+//! - `router`     — admission, backpressure
+//! - `scheduler`  — wave batching over compiled buckets
+//! - `engine`     — prefill/select/gather/decode orchestration over PJRT
+
+pub mod engine;
+pub mod router;
+pub mod scheduler;
+pub mod selection;
+pub mod sequence;

@@ -1,0 +1,188 @@
+//! Request admission: bounded queue with backpressure + request ids.
+//!
+//! The router is the thread-safe front door (requests may arrive from many
+//! server threads); the scheduler drains it on the engine thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::sequence::{GenRequest, RequestId};
+
+#[derive(Debug)]
+pub enum AdmitError {
+    QueueFull { capacity: usize },
+    PromptTooLong { len: usize, max: usize },
+    EmptyPrompt,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity})")
+            }
+            AdmitError::PromptTooLong { len, max } => {
+                write!(f, "prompt too long ({len} > {max})")
+            }
+            AdmitError::EmptyPrompt => write!(f, "empty prompt"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+pub struct Router {
+    queue: Mutex<VecDeque<GenRequest>>,
+    not_empty: Condvar,
+    next_id: AtomicU64,
+    pub capacity: usize,
+    pub max_prompt: usize,
+}
+
+impl Router {
+    pub fn new(capacity: usize, max_prompt: usize) -> Self {
+        Router {
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            capacity,
+            max_prompt,
+        }
+    }
+
+    pub fn fresh_id(&self) -> RequestId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Admit a request (validates + applies backpressure).
+    pub fn admit(&self, mut req: GenRequest) -> Result<RequestId, AdmitError> {
+        if req.prompt.is_empty() {
+            return Err(AdmitError::EmptyPrompt);
+        }
+        if req.prompt.len() > self.max_prompt {
+            return Err(AdmitError::PromptTooLong {
+                len: req.prompt.len(),
+                max: self.max_prompt,
+            });
+        }
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(AdmitError::QueueFull { capacity: self.capacity });
+        }
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        let id = req.id;
+        q.push_back(req);
+        self.not_empty.notify_one();
+        Ok(id)
+    }
+
+    /// Pop up to `n` requests that share the mode of the queue head
+    /// (batches must be mode-homogeneous; see engine::generate_batch).
+    pub fn take_wave(&self, n: usize) -> Vec<GenRequest> {
+        let mut q = self.queue.lock().unwrap();
+        let Some(head_mode) = q.front().map(|r| r.mode) else {
+            return Vec::new();
+        };
+        let mut wave = Vec::new();
+        while wave.len() < n {
+            match q.front() {
+                Some(r) if r.mode == head_mode => {
+                    wave.push(q.pop_front().unwrap())
+                }
+                _ => break,
+            }
+        }
+        wave
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until at least one request is queued (with timeout).
+    pub fn wait_nonempty(&self, timeout: std::time::Duration) -> bool {
+        let q = self.queue.lock().unwrap();
+        if !q.is_empty() {
+            return true;
+        }
+        let (q, _) = self.not_empty.wait_timeout(q, timeout).unwrap();
+        !q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Mode;
+
+    fn req(mode: Mode) -> GenRequest {
+        let mut r = GenRequest::greedy(0, vec![1, 2], 4, mode);
+        r.id = 0;
+        r
+    }
+
+    #[test]
+    fn admit_assigns_ids() {
+        let r = Router::new(4, 128);
+        let a = r.admit(req(Mode::Full)).unwrap();
+        let b = r.admit(req(Mode::Full)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn backpressure() {
+        let r = Router::new(2, 128);
+        r.admit(req(Mode::Full)).unwrap();
+        r.admit(req(Mode::Full)).unwrap();
+        let e = r.admit(req(Mode::Full)).unwrap_err();
+        assert!(matches!(e, AdmitError::QueueFull { capacity: 2 }));
+    }
+
+    #[test]
+    fn validation() {
+        let r = Router::new(4, 3);
+        let mut bad = req(Mode::Full);
+        bad.prompt = vec![];
+        assert!(matches!(r.admit(bad), Err(AdmitError::EmptyPrompt)));
+        let mut long = req(Mode::Full);
+        long.prompt = vec![0; 10];
+        assert!(matches!(r.admit(long),
+                         Err(AdmitError::PromptTooLong { .. })));
+    }
+
+    #[test]
+    fn wave_is_mode_homogeneous() {
+        let r = Router::new(8, 128);
+        r.admit(req(Mode::Full)).unwrap();
+        r.admit(req(Mode::Full)).unwrap();
+        r.admit(req(Mode::griffin(0.5))).unwrap();
+        r.admit(req(Mode::Full)).unwrap();
+        let w1 = r.take_wave(8);
+        assert_eq!(w1.len(), 2);
+        assert!(w1.iter().all(|x| x.mode == Mode::Full));
+        let w2 = r.take_wave(8);
+        assert_eq!(w2.len(), 1);
+        assert_eq!(w2[0].mode, Mode::griffin(0.5));
+        let w3 = r.take_wave(8);
+        assert_eq!(w3.len(), 1); // trailing Full request
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn wave_respects_limit() {
+        let r = Router::new(8, 128);
+        for _ in 0..5 {
+            r.admit(req(Mode::Full)).unwrap();
+        }
+        assert_eq!(r.take_wave(3).len(), 3);
+        assert_eq!(r.len(), 2);
+    }
+}

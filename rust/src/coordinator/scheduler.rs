@@ -1,0 +1,102 @@
+//! Wave scheduler: drains the router into mode-homogeneous batches sized
+//! to the compiled batch buckets and drives the engine.
+//!
+//! Policy: take the largest wave the bucket set admits (batch bucket =
+//! smallest compiled B >= wave size); GRIFFIN waves share one expert set
+//! via the eq.7 aggregate (paper §5.3 shows the quality decay with batch
+//! size is slow, Table 4). Sequence-level continuous batching across
+//! waves is intentionally not done — DESIGN.md §4 records this as the
+//! bucket-static simplification.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, GenResponse};
+use crate::coordinator::router::Router;
+use crate::coordinator::sequence::{Phase, Sequence};
+
+pub struct Scheduler {
+    pub engine: Engine,
+    pub router: Arc<Router>,
+    /// max requests per wave (clamped to the largest compiled bucket)
+    pub max_wave: usize,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, router: Arc<Router>) -> Self {
+        let max_bucket = engine
+            .config()
+            .batch_buckets
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1);
+        Scheduler { engine, router, max_wave: max_bucket }
+    }
+
+    /// Process one wave if any requests are queued. Returns completed
+    /// responses (empty when idle).
+    pub fn step(&mut self) -> Result<Vec<GenResponse>> {
+        let wave = self.router.take_wave(self.max_wave);
+        if wave.is_empty() {
+            return Ok(Vec::new());
+        }
+        // track sequence state machines for observability + invariants
+        let mut seqs: Vec<Sequence> =
+            wave.iter().cloned().map(Sequence::new).collect();
+        for s in &mut seqs {
+            self.engine
+                .metrics
+                .queue_wait
+                .record(s.admitted_at.elapsed());
+            s.advance(Phase::Prefilling);
+        }
+        let responses = self.engine.generate_batch(&wave)?;
+        for (s, r) in seqs.iter_mut().zip(&responses) {
+            s.advance(Phase::Decoding);
+            s.generated = r.tokens.clone();
+            s.finish(r.finish);
+            debug_assert!(s.is_done());
+        }
+        Ok(responses)
+    }
+
+    /// Drain the queue completely.
+    pub fn run_until_idle(&mut self) -> Result<Vec<GenResponse>> {
+        let mut all = Vec::new();
+        loop {
+            let batch = self.step()?;
+            if batch.is_empty() && self.router.is_empty() {
+                return Ok(all);
+            }
+            all.extend(batch);
+        }
+    }
+
+    /// Serve loop: block for work, process, repeat until `stop` returns
+    /// true. Used by the TCP server's engine thread.
+    pub fn serve<F>(&mut self, mut on_response: F,
+                    stop: &dyn Fn() -> bool) -> Result<()>
+    where
+        F: FnMut(GenResponse),
+    {
+        while !stop() {
+            if !self.router.wait_nonempty(Duration::from_millis(50)) {
+                continue;
+            }
+            for r in self.step()? {
+                on_response(r);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Scheduler integration tests live in rust/tests/integration.rs —
+    // they need compiled artifacts. Here we only test the pure policy
+    // helpers via the Router (see router.rs tests).
+}

@@ -1,0 +1,476 @@
+//! GRIFFIN expert selection (paper §4.2) + every baseline/ablation the
+//! evaluation needs (Tables 1, 2, 4, 5).
+//!
+//! All selection is host-side over the per-layer statistic `s` returned by
+//! the prefill executable, so strategies are swappable without touching
+//! the compiled graphs. Selected index sets are uploaded once per sequence
+//! and the `gather_k*` executable builds the pruned weight stacks.
+
+use crate::workload::rng::XorShift64Star;
+
+/// How to choose the expert set E from the statistic s (paper Table 5 +
+/// baselines of §5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// paper default: indices of the top-k of s
+    TopK,
+    /// ablation: sample k experts with probability proportional to s
+    Sampling { seed: u64 },
+    /// ablation: top-k/2 then weighted-sample the rest
+    TopKPlusSampling { seed: u64 },
+}
+
+/// Per-layer statistics for one sequence: `stats[l]` is s for FF block l
+/// (length d_ff).
+pub type LayerStats = Vec<Vec<f32>>;
+
+/// Select per-layer expert sets. Returns `idx[l]` sorted ascending,
+/// exactly k unique in-range indices per layer.
+pub fn select_experts(stats: &LayerStats, k: usize, strategy: Strategy)
+                      -> Vec<Vec<i32>> {
+    stats
+        .iter()
+        .map(|s| {
+            let mut idx = match strategy {
+                Strategy::TopK => crate::util::top_k_indices(s, k),
+                Strategy::Sampling { seed } => {
+                    let mut rng = XorShift64Star::new(seed);
+                    weighted_sample_without_replacement(s, k, &mut rng)
+                }
+                Strategy::TopKPlusSampling { seed } => {
+                    let mut rng = XorShift64Star::new(seed);
+                    let half = k / 2;
+                    let mut chosen = crate::util::top_k_indices(s, half);
+                    let mut masked = s.to_vec();
+                    for &i in &chosen {
+                        masked[i] = 0.0;
+                    }
+                    chosen.extend(weighted_sample_without_replacement(
+                        &masked, k - half, &mut rng));
+                    chosen
+                }
+            };
+            idx.sort_unstable();
+            idx.dedup();
+            debug_assert_eq!(idx.len(), k.min(s.len()));
+            idx.into_iter().map(|i| i as i32).collect()
+        })
+        .collect()
+}
+
+/// Weighted sampling without replacement (probabilities ∝ weights).
+/// Zero-weight items are only used when positive-weight items run out.
+fn weighted_sample_without_replacement(
+    weights: &[f32],
+    k: usize,
+    rng: &mut XorShift64Star,
+) -> Vec<usize> {
+    let k = k.min(weights.len());
+    let mut w: Vec<f64> = weights.iter().map(|&x| x.max(0.0) as f64).collect();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            // fall back to uniform over remaining items
+            let remaining: Vec<usize> = (0..w.len())
+                .filter(|&i| !w[i].is_nan() && w[i] >= 0.0 && !out.contains(&i))
+                .collect();
+            let pick = remaining[rng.below(remaining.len())];
+            out.push(pick);
+            continue;
+        }
+        let mut r = rng.unit_f64() * total;
+        let mut pick = w.len() - 1;
+        for (i, &wi) in w.iter().enumerate() {
+            r -= wi;
+            if r <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        out.push(pick);
+        w[pick] = 0.0;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// batch / static aggregation (paper eq. 7, §5.3 "Sharing Selected FF Neurons")
+// ---------------------------------------------------------------------------
+
+/// Aggregate per-sample statistics into a shared s̄ (paper eq. 7):
+/// s̄ = Σ_i s_i / sqrt(S_i), with S_i the prompt length of sample i.
+/// Used both for batched GRIFFIN and for the "Global" static baseline.
+pub fn aggregate_stats(per_sample: &[(LayerStats, usize)]) -> LayerStats {
+    assert!(!per_sample.is_empty());
+    let layers = per_sample[0].0.len();
+    let d_ff = per_sample[0].0[0].len();
+    let mut out = vec![vec![0f32; d_ff]; layers];
+    for (stats, prompt_len) in per_sample {
+        let scale = 1.0 / (*prompt_len as f32).sqrt().max(1e-6);
+        for (l, s) in stats.iter().enumerate() {
+            for (j, &v) in s.iter().enumerate() {
+                out[l][j] += v * scale;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// layer-adaptive budgets (extension; motivated by paper Fig. 6 — the mass
+// concentration of s differs per layer, so a uniform per-layer k is not
+// the best spend of a global expert budget)
+// ---------------------------------------------------------------------------
+
+/// Per-layer expert sets under a GLOBAL budget of `L * k_avg` experts,
+/// with at most `k_max` per layer (the compiled gather bucket): every
+/// layer's statistic is normalized to unit mass, then the globally
+/// largest normalized entries win. Layers whose s is concentrated get
+/// fewer (but sufficient) experts; diffuse layers get more.
+///
+/// Returns (idx, mask): idx[l] is sorted and PADDED to k_max by repeating
+/// its first entry; mask[l][j] is 1.0 for real slots, 0.0 for padding
+/// (consumed by the gather_masked executable, which zeroes the padded
+/// slots' W1/Wg rows so their FF contribution is exactly zero).
+pub fn adaptive_layer_allocation(
+    stats: &LayerStats,
+    k_avg: usize,
+    k_max: usize,
+) -> (Vec<Vec<i32>>, Vec<Vec<f32>>) {
+    let layers = stats.len();
+    let budget = (layers * k_avg).min(layers * k_max);
+
+    // normalized per-layer mass; entries carry their within-layer rank so
+    // exact value ties break round-robin across layers instead of filling
+    // one layer to its cap first
+    let mut entries: Vec<(f32, usize, usize, usize)> = Vec::new();
+    for (l, s) in stats.iter().enumerate() {
+        let total: f32 = s.iter().map(|v| v.max(0.0)).sum::<f32>().max(1e-12);
+        let order = crate::util::top_k_indices(s, s.len());
+        for (rank, &j) in order.iter().enumerate() {
+            entries.push((s[j].max(0.0) / total, rank, l, j));
+        }
+    }
+    entries.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+    });
+
+    let mut chosen: Vec<Vec<i32>> = vec![Vec::new(); layers];
+    let mut taken = 0usize;
+    // first pass: global greedy under per-layer cap; second pass ensures
+    // every layer keeps at least 1 expert (an all-zero FF block would
+    // change the residual stream discontinuously)
+    for &(_, _, l, j) in &entries {
+        if taken >= budget {
+            break;
+        }
+        if chosen[l].len() < k_max {
+            chosen[l].push(j as i32);
+            taken += 1;
+        }
+    }
+    for l in 0..layers {
+        if chosen[l].is_empty() {
+            let best = crate::util::top_k_indices(&stats[l], 1)[0];
+            chosen[l].push(best as i32);
+        }
+    }
+
+    let mut idx = Vec::with_capacity(layers);
+    let mut mask = Vec::with_capacity(layers);
+    for mut layer in chosen {
+        layer.sort_unstable();
+        layer.dedup();
+        let real = layer.len();
+        // pad with the LAST index so the padded row stays non-decreasing
+        let pad = layer[real - 1];
+        layer.resize(k_max, pad);
+        let mut m = vec![1.0f32; real];
+        m.resize(k_max, 0.0);
+        idx.push(layer);
+        mask.push(m);
+    }
+    (idx, mask)
+}
+
+// ---------------------------------------------------------------------------
+// static baselines
+// ---------------------------------------------------------------------------
+
+/// Magnitude neuron pruning metric (paper §5.1 baseline): neuron-wise l2
+/// norms of W_1 rows; for GLU variants, elementwise product with the W_g
+/// row norms. Input tensors are host-side `[L, F, D]` stacks.
+pub fn magnitude_metric(
+    w1: &[f32],
+    wg: Option<&[f32]>,
+    n_layers: usize,
+    d_ff: usize,
+    d_model: usize,
+) -> LayerStats {
+    assert_eq!(w1.len(), n_layers * d_ff * d_model);
+    let row_norms = |w: &[f32], l: usize, j: usize| -> f32 {
+        let base = (l * d_ff + j) * d_model;
+        w[base..base + d_model]
+            .iter()
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt()
+    };
+    (0..n_layers)
+        .map(|l| {
+            (0..d_ff)
+                .map(|j| {
+                    let n1 = row_norms(w1, l, j);
+                    match wg {
+                        Some(wg) => n1 * row_norms(wg, l, j),
+                        None => n1,
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive Wanda baseline (paper §5.1): unstructured pruning of FF weights
+// using prompt activation norms — |W_ij| * ||x_j|| scores, per-row top
+// fraction kept. Produces *masked full-size* weights (no dim reduction).
+// ---------------------------------------------------------------------------
+
+/// Mask one [F, D] weight matrix in place: per output row, keep the
+/// `keep_fraction` highest |w_ij| * xnorm_j entries.
+pub fn wanda_mask_rows(
+    w: &mut [f32],
+    xnorm: &[f32],
+    rows: usize,
+    cols: usize,
+    keep_fraction: f64,
+) {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(xnorm.len(), cols);
+    let keep = ((cols as f64 * keep_fraction).round() as usize).min(cols);
+    let mut scores: Vec<f32> = vec![0.0; cols];
+    let mut order: Vec<usize> = Vec::with_capacity(cols);
+    for r in 0..rows {
+        let row = &mut w[r * cols..(r + 1) * cols];
+        for j in 0..cols {
+            scores[j] = row[j].abs() * xnorm[j];
+        }
+        order.clear();
+        order.extend(0..cols);
+        order.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for &j in &order[keep..] {
+            row[j] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats2() -> LayerStats {
+        vec![
+            vec![0.1, 0.9, 0.5, 0.3, 0.8, 0.05, 0.2, 0.6],
+            vec![0.7, 0.2, 0.4, 0.9, 0.1, 0.3, 0.8, 0.0],
+        ]
+    }
+
+    #[test]
+    fn topk_picks_largest_sorted_unique() {
+        let idx = select_experts(&stats2(), 3, Strategy::TopK);
+        assert_eq!(idx[0], vec![1, 4, 7]); // values .9 .8 .6
+        assert_eq!(idx[1], vec![0, 3, 6]); // values .7 .9 .8
+    }
+
+    #[test]
+    fn invariants_hold_for_all_strategies() {
+        let stats = stats2();
+        for strat in [
+            Strategy::TopK,
+            Strategy::Sampling { seed: 3 },
+            Strategy::TopKPlusSampling { seed: 3 },
+        ] {
+            for k in [1, 2, 4, 8] {
+                let idx = select_experts(&stats, k, strat);
+                assert_eq!(idx.len(), stats.len());
+                for layer in &idx {
+                    assert_eq!(layer.len(), k, "{strat:?} k={k}");
+                    let mut sorted = layer.clone();
+                    sorted.sort();
+                    sorted.dedup();
+                    assert_eq!(&sorted, layer, "sorted unique");
+                    assert!(layer.iter().all(|&i| (i as usize) < 8));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_prefers_heavy_neurons() {
+        // neuron 1 has 100x the weight of others; over many seeds it must
+        // be selected almost always
+        let stats = vec![vec![0.01, 1.0, 0.01, 0.01]];
+        let mut hits = 0;
+        for seed in 0..100 {
+            let idx =
+                select_experts(&stats, 2, Strategy::Sampling { seed });
+            if idx[0].contains(&1) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 90, "heavy neuron selected {hits}/100");
+    }
+
+    #[test]
+    fn topk_plus_sampling_keeps_top_half() {
+        let stats = stats2();
+        for seed in 0..20 {
+            let idx = select_experts(
+                &stats, 4, Strategy::TopKPlusSampling { seed });
+            // top-2 of layer 0 are {1, 4}; they must always be present
+            assert!(idx[0].contains(&1) && idx[0].contains(&4));
+        }
+    }
+
+    #[test]
+    fn aggregate_eq7_weights_by_inv_sqrt_len() {
+        let a: LayerStats = vec![vec![1.0, 0.0]];
+        let b: LayerStats = vec![vec![0.0, 1.0]];
+        let agg = aggregate_stats(&[(a, 4), (b, 16)]);
+        assert!((agg[0][0] - 0.5).abs() < 1e-6);
+        assert!((agg[0][1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_is_permutation_invariant() {
+        let a: LayerStats = vec![vec![1.0, 2.0, 3.0]];
+        let b: LayerStats = vec![vec![0.5, 0.1, 0.9]];
+        let ab = aggregate_stats(&[(a.clone(), 7), (b.clone(), 13)]);
+        let ba = aggregate_stats(&[(b, 13), (a, 7)]);
+        for (x, y) in ab[0].iter().zip(&ba[0]) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batch_of_one_equals_per_sequence_topk() {
+        let stats = stats2();
+        let agg = aggregate_stats(&[(stats.clone(), 9)]);
+        assert_eq!(
+            select_experts(&agg, 3, Strategy::TopK),
+            select_experts(&stats, 3, Strategy::TopK),
+            "eq.7 with one sample is a monotone rescale of s"
+        );
+    }
+
+    #[test]
+    fn adaptive_allocation_respects_budget_and_caps() {
+        let stats = stats2(); // 2 layers x 8 neurons
+        for (k_avg, k_max) in [(2usize, 4usize), (3, 4), (4, 6), (1, 2)] {
+            let (idx, mask) = adaptive_layer_allocation(&stats, k_avg,
+                                                        k_max);
+            assert_eq!(idx.len(), 2);
+            let mut real_total = 0usize;
+            for (layer, m) in idx.iter().zip(&mask) {
+                assert_eq!(layer.len(), k_max, "padded to k_max");
+                assert_eq!(m.len(), k_max);
+                let real = m.iter().filter(|&&x| x == 1.0).count();
+                assert!(real >= 1, "every layer keeps >= 1 expert");
+                assert!(real <= k_max);
+                real_total += real;
+                // real slots are the sorted unique prefix invariants
+                let mut sorted = layer.clone();
+                sorted.sort();
+                assert_eq!(&sorted, layer);
+                // padded entries replicate the last real index
+                for (j, &mm) in m.iter().enumerate() {
+                    if mm == 0.0 {
+                        assert_eq!(layer[j], layer[real - 1]);
+                    }
+                }
+            }
+            assert!(real_total <= 2 * k_avg.min(k_max) + 2,
+                    "budget roughly respected: {real_total}");
+        }
+    }
+
+    #[test]
+    fn adaptive_allocation_shifts_budget_to_diffuse_layers() {
+        // layer 0: one dominant neuron; layer 1: uniform -> under a
+        // shared budget, layer 1 should receive more experts
+        let stats: LayerStats = vec![
+            vec![10.0, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01],
+            vec![1.0; 8],
+        ];
+        let (_, mask) = adaptive_layer_allocation(&stats, 3, 6);
+        let real = |l: usize| {
+            mask[l].iter().filter(|&&x| x == 1.0).count()
+        };
+        assert!(real(1) > real(0),
+                "diffuse layer gets more: {} vs {}", real(1), real(0));
+    }
+
+    #[test]
+    fn adaptive_with_uniform_stats_reduces_to_uniform_k() {
+        let stats: LayerStats = vec![vec![1.0; 8], vec![1.0; 8]];
+        let (_, mask) = adaptive_layer_allocation(&stats, 4, 8);
+        for m in &mask {
+            assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 4);
+        }
+    }
+
+    #[test]
+    fn magnitude_metric_known_values() {
+        // L=1, F=2, D=2: rows [3,4] (norm 5) and [1,0] (norm 1)
+        let w1 = vec![3.0, 4.0, 1.0, 0.0];
+        let m = magnitude_metric(&w1, None, 1, 2, 2);
+        assert!((m[0][0] - 5.0).abs() < 1e-6);
+        assert!((m[0][1] - 1.0).abs() < 1e-6);
+        // GLU: multiply by wg row norms [1, 2]
+        let wg = vec![1.0, 0.0, 0.0, 2.0];
+        let mg = magnitude_metric(&w1, Some(&wg), 1, 2, 2);
+        assert!((mg[0][0] - 5.0).abs() < 1e-6);
+        assert!((mg[0][1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn magnitude_is_prompt_independent() {
+        // trivially true by construction; assert the metric only uses
+        // weights (same input -> same output, no hidden state)
+        let w1 = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(magnitude_metric(&w1, None, 1, 2, 2),
+                   magnitude_metric(&w1, None, 1, 2, 2));
+    }
+
+    #[test]
+    fn wanda_keeps_high_score_entries() {
+        // row [1, 10, 2, 3] with xnorm [10, 0.1, 1, 1]:
+        // scores [10, 1, 2, 3] -> keep 50% = {0, 3}
+        let mut w = vec![1.0, 10.0, 2.0, 3.0];
+        wanda_mask_rows(&mut w, &[10.0, 0.1, 1.0, 1.0], 1, 4, 0.5);
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn wanda_keep_all_is_identity() {
+        let orig = vec![1.0f32, -2.0, 3.0, -4.0, 5.0, 6.0];
+        let mut w = orig.clone();
+        wanda_mask_rows(&mut w, &[1.0, 1.0, 1.0], 2, 3, 1.0);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn wanda_zero_fraction_zeroes_everything() {
+        let mut w = vec![1.0f32; 8];
+        wanda_mask_rows(&mut w, &[1.0; 4], 2, 4, 0.0);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+}

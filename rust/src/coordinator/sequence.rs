@@ -1,0 +1,158 @@
+//! Per-request sequence state machine.
+//!
+//! Queued → Prefilling → Selecting → Decoding → Finished. The scheduler
+//! drives transitions; invalid transitions are programming errors and
+//! panic in debug (property-tested in scheduler tests: every admitted
+//! sequence finishes exactly once, never decodes before selection).
+
+use std::time::Instant;
+
+use crate::coordinator::engine::Mode;
+use crate::sampling::SamplerSpec;
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    /// prompt done; expert selection / gather pending (GRIFFIN modes)
+    Selecting,
+    Decoding,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub mode: Mode,
+    pub sampler: SamplerSpec,
+    pub seed: u64,
+    pub stop_at_eos: bool,
+}
+
+impl GenRequest {
+    pub fn greedy(id: RequestId, prompt: Vec<i32>, max_new: usize,
+                  mode: Mode) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            mode,
+            sampler: SamplerSpec::Greedy,
+            seed: id,
+            stop_at_eos: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Sequence {
+    pub req: GenRequest,
+    pub phase: Phase,
+    pub generated: Vec<i32>,
+    pub logprobs: Vec<f32>,
+    pub admitted_at: Instant,
+    pub prefill_started_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// why generation stopped
+    pub finish_reason: Option<FinishReason>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    Eos,
+    ContextFull,
+}
+
+impl Sequence {
+    pub fn new(req: GenRequest) -> Self {
+        Sequence {
+            req,
+            phase: Phase::Queued,
+            generated: Vec::new(),
+            logprobs: Vec::new(),
+            admitted_at: Instant::now(),
+            prefill_started_at: None,
+            finished_at: None,
+            finish_reason: None,
+        }
+    }
+
+    pub fn advance(&mut self, to: Phase) {
+        let ok = matches!(
+            (self.phase, to),
+            (Phase::Queued, Phase::Prefilling)
+                | (Phase::Prefilling, Phase::Selecting)
+                | (Phase::Prefilling, Phase::Decoding)
+                | (Phase::Selecting, Phase::Decoding)
+                | (Phase::Prefilling, Phase::Finished)
+                | (Phase::Decoding, Phase::Finished)
+        );
+        debug_assert!(ok, "illegal transition {:?} -> {:?}", self.phase, to);
+        if to == Phase::Prefilling {
+            self.prefill_started_at = Some(Instant::now());
+        }
+        if to == Phase::Finished {
+            self.finished_at = Some(Instant::now());
+        }
+        self.phase = to;
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.finish_reason = Some(reason);
+        self.advance(Phase::Finished);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq() -> Sequence {
+        Sequence::new(GenRequest::greedy(1, vec![1, 2, 3], 8, Mode::Full))
+    }
+
+    #[test]
+    fn normal_lifecycle() {
+        let mut s = seq();
+        assert_eq!(s.phase, Phase::Queued);
+        s.advance(Phase::Prefilling);
+        s.advance(Phase::Selecting);
+        s.advance(Phase::Decoding);
+        s.generated.push(42);
+        s.finish(FinishReason::Length);
+        assert!(s.is_done());
+        assert_eq!(s.finish_reason, Some(FinishReason::Length));
+        assert!(s.finished_at.is_some());
+        assert_eq!(s.total_len(), 4);
+    }
+
+    #[test]
+    fn full_mode_skips_selection() {
+        let mut s = seq();
+        s.advance(Phase::Prefilling);
+        s.advance(Phase::Decoding);
+        s.finish(FinishReason::Eos);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transition")]
+    #[cfg(debug_assertions)]
+    fn illegal_transition_panics_in_debug() {
+        let mut s = seq();
+        s.advance(Phase::Decoding); // skipped prefill
+    }
+}

@@ -1,0 +1,270 @@
+//! Evaluation metrics: ROUGE-1/2/L, token F1 / exact match, perplexity
+//! helpers, and Jaccard similarity over expert sets (paper Fig. 2).
+//!
+//! These mirror the metrics of the paper's task suite (XSum/CNN-DM use
+//! ROUGE, CoQA uses F1/EM, the WikiText ablations use perplexity).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Whitespace word tokenization with ascii lowercasing (standard for
+/// rouge-style scoring of our ascii corpus).
+pub fn words(text: &str) -> Vec<String> {
+    text.split_whitespace()
+        .map(|w| {
+            w.chars()
+                .filter(|c| c.is_ascii_alphanumeric())
+                .collect::<String>()
+                .to_ascii_lowercase()
+        })
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+fn counts(ws: &[String]) -> BTreeMap<&str, usize> {
+    let mut m = BTreeMap::new();
+    for w in ws {
+        *m.entry(w.as_str()).or_insert(0) += 1;
+    }
+    m
+}
+
+fn overlap(a: &[String], b: &[String]) -> usize {
+    let ca = counts(a);
+    let cb = counts(b);
+    ca.iter()
+        .map(|(w, n)| n.min(cb.get(w).unwrap_or(&0)))
+        .sum()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PRF {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+fn prf(match_count: usize, cand_len: usize, ref_len: usize) -> PRF {
+    if cand_len == 0 || ref_len == 0 || match_count == 0 {
+        return PRF::default();
+    }
+    let p = match_count as f64 / cand_len as f64;
+    let r = match_count as f64 / ref_len as f64;
+    PRF { precision: p, recall: r, f1: 2.0 * p * r / (p + r) }
+}
+
+/// ROUGE-N for n = 1 or 2 (f1 of n-gram overlap).
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> PRF {
+    let cw = words(candidate);
+    let rw = words(reference);
+    if cw.len() < n || rw.len() < n {
+        return PRF::default();
+    }
+    let grams = |ws: &[String]| -> Vec<String> {
+        ws.windows(n).map(|w| w.join(" ")).collect()
+    };
+    let cg = grams(&cw);
+    let rg = grams(&rw);
+    prf(overlap(&cg, &rg), cg.len(), rg.len())
+}
+
+/// ROUGE-L (f1 over longest common subsequence of words).
+pub fn rouge_l(candidate: &str, reference: &str) -> PRF {
+    let cw = words(candidate);
+    let rw = words(reference);
+    let l = lcs_len(&cw, &rw);
+    prf(l, cw.len(), rw.len())
+}
+
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        for j in 1..=b.len() {
+            cur[j] = if a[i - 1] == b[j - 1] {
+                prev[j - 1] + 1
+            } else {
+                prev[j].max(cur[j - 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RougeScores {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rougel: f64,
+}
+
+pub fn rouge_all(candidate: &str, reference: &str) -> RougeScores {
+    RougeScores {
+        rouge1: rouge_n(candidate, reference, 1).f1,
+        rouge2: rouge_n(candidate, reference, 2).f1,
+        rougel: rouge_l(candidate, reference).f1,
+    }
+}
+
+/// SQuAD-style token F1 (CoQA metric).
+pub fn token_f1(candidate: &str, reference: &str) -> f64 {
+    let cw = words(candidate);
+    let rw = words(reference);
+    prf(overlap(&cw, &rw), cw.len(), rw.len()).f1
+}
+
+/// Exact match after normalization.
+pub fn exact_match(candidate: &str, reference: &str) -> bool {
+    words(candidate) == words(reference)
+}
+
+/// Jaccard similarity of two index sets (paper Fig. 2: similarity of
+/// top-k expert sets between sequences).
+pub fn jaccard(a: &[usize], b: &[usize]) -> f64 {
+    let sa: BTreeSet<_> = a.iter().collect();
+    let sb: BTreeSet<_> = b.iter().collect();
+    let inter = sa.intersection(&sb).count();
+    let union = sa.union(&sb).count();
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+/// Mean pairwise Jaccard similarity over many sets.
+pub fn mean_pairwise_jaccard(sets: &[Vec<usize>]) -> f64 {
+    let mut total = 0.0;
+    let mut pairs = 0usize;
+    for i in 0..sets.len() {
+        for j in (i + 1)..sets.len() {
+            total += jaccard(&sets[i], &sets[j]);
+            pairs += 1;
+        }
+    }
+    if pairs == 0 {
+        1.0
+    } else {
+        total / pairs as f64
+    }
+}
+
+/// Perplexity from summed negative log-likelihood over `n` tokens.
+pub fn perplexity(total_nll: f64, n: usize) -> f64 {
+    if n == 0 {
+        f64::NAN
+    } else {
+        (total_nll / n as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_normalizes() {
+        assert_eq!(words("The quick, BROWN fox!"),
+                   vec!["the", "quick", "brown", "fox"]);
+        assert_eq!(words("  "), Vec::<String>::new());
+    }
+
+    #[test]
+    fn rouge1_identical_is_one() {
+        let s = "the river joins the lake";
+        let r = rouge_n(s, s, 1);
+        assert!((r.f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge1_disjoint_is_zero() {
+        assert_eq!(rouge_n("aa bb", "cc dd", 1).f1, 0.0);
+    }
+
+    #[test]
+    fn rouge1_known_value() {
+        // cand: "the cat sat", ref: "the cat ate fish"
+        // overlap = 2 (the, cat); p = 2/3, r = 2/4 -> f1 = 4/7
+        let r = rouge_n("the cat sat", "the cat ate fish", 1);
+        assert!((r.f1 - 4.0 / 7.0).abs() < 1e-12, "{r:?}");
+    }
+
+    #[test]
+    fn rouge2_bigram_overlap() {
+        // shared bigram: "the cat"
+        let r = rouge_n("the cat sat", "the cat ate", 2);
+        // cand bigrams: [the cat, cat sat]; ref: [the cat, cat ate]
+        // overlap 1; p = r = 1/2 -> f1 = 1/2
+        assert!((r.f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_l_subsequence() {
+        // LCS("a b c d", "a x c d") = [a c d] = 3; p=r=3/4
+        let r = rouge_l("a b c d", "a x c d");
+        assert!((r.f1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_multiset_clipping() {
+        // candidate repeats "the" 5x but reference has it twice
+        let r = rouge_n("the the the the the", "the lake the", 1);
+        // overlap clipped to 2; p = 2/5, r = 2/3
+        let expect = 2.0 * (2.0 / 5.0) * (2.0 / 3.0) / (2.0 / 5.0 + 2.0 / 3.0);
+        assert!((r.f1 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_and_em() {
+        assert_eq!(token_f1("the lake", "the lake"), 1.0);
+        assert!(exact_match("The Lake!", "the lake"));
+        assert!(!exact_match("the lake", "the river"));
+        assert_eq!(token_f1("x y", "a b"), 0.0);
+    }
+
+    #[test]
+    fn jaccard_cases() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert_eq!(jaccard(&[1, 2, 3], &[2, 3, 4]), 0.5);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn mean_pairwise() {
+        let sets = vec![vec![1, 2], vec![1, 2], vec![3, 4]];
+        // pairs: (1.0, 0.0, 0.0) -> 1/3
+        let m = mean_pairwise_jaccard(&sets);
+        assert!((m - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // NLL of uniform over 4 symbols = ln(4) per token -> PPL = 4
+        let nll = (4.0f64).ln() * 10.0;
+        assert!((perplexity(nll, 10) - 4.0).abs() < 1e-9);
+        assert!(perplexity(0.0, 0).is_nan());
+    }
+
+    #[test]
+    fn lcs_property_bounds() {
+        let mut rng = crate::workload::rng::XorShift64Star::new(2);
+        for _ in 0..50 {
+            let gen = |rng: &mut crate::workload::rng::XorShift64Star| {
+                let n = rng.below(8);
+                (0..n)
+                    .map(|_| format!("w{}", rng.below(4)))
+                    .collect::<Vec<_>>()
+            };
+            let a = gen(&mut rng);
+            let b = gen(&mut rng);
+            let l = lcs_len(&a, &b);
+            assert!(l <= a.len().min(b.len()));
+            let l_self = lcs_len(&a, &a);
+            assert_eq!(l_self, a.len());
+        }
+    }
+}

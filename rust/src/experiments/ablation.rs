@@ -1,0 +1,185 @@
+//! Ablation: the selection-statistic design choice (DESIGN.md §6).
+//!
+//! Paper eq. 6 row-normalizes Z before taking column norms ("relative"
+//! activations) — giving every token an equal vote. The obvious
+//! alternative is the raw activation column norm ||Z_:,j|| (our prefill
+//! already exports it as znorms for the Wanda baseline), where
+//! high-magnitude tokens dominate. This driver quantifies the gap on
+//! held-out LM scoring, which the paper asserts but does not plot.
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::engine::Mode;
+use crate::coordinator::selection::Strategy;
+use crate::eval;
+use crate::experiments::common::{engine_auto, write_results};
+use crate::workload::tasks;
+
+/// Extension ablation: uniform per-layer k (paper) vs layer-adaptive
+/// budgets under the same global expert count (selection.rs
+/// adaptive_layer_allocation; motivated by the per-layer concentration
+/// differences Fig. 6 shows). Teacher-forced LM PPL on held-out text.
+pub fn ablation_adaptive(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small-swiglu").to_string();
+    let mut engine = engine_auto(&model)?;
+    let n = args.usize_or("samples", 8)?;
+    let (p, g) = (96usize, 48usize);
+    let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 29, n, p + g);
+    let k_bucket = engine.k_for(0.5)?;
+    let d_ff = engine.config().d_ff;
+
+    let mut csv = String::from("mode,keep_avg,ppl\n");
+    println!("uniform vs layer-adaptive budgets (LM PPL):");
+    for keep in [0.3, 0.4, 0.5] {
+        let k_avg = (d_ff as f64 * keep).round() as usize;
+        if k_avg > k_bucket {
+            continue;
+        }
+        let mut ppls = Vec::new();
+        for adaptive in [false, true] {
+            let mut nll_total = 0.0;
+            let mut count = 0usize;
+            for w in &windows {
+                let mut pre = engine
+                    .prefill(std::slice::from_ref(&w[..p].to_vec()),
+                             false)?;
+                let pruned = if adaptive {
+                    engine.gather_adaptive(&pre.stats[0].clone(), keep)?
+                } else {
+                    // uniform: per-layer top-k_avg, padded to the same
+                    // k_bucket executable (fair shape comparison)
+                    let base = crate::coordinator::selection::
+                        select_experts(
+                            &pre.stats[0], k_avg,
+                            crate::coordinator::selection::Strategy::TopK);
+                    let mut idx = Vec::new();
+                    let mut mask = Vec::new();
+                    for layer in base {
+                        let real = layer.len();
+                        let pad = layer[0];
+                        let mut l = layer;
+                        l.resize(k_bucket, pad);
+                        let mut m = vec![1.0f32; real];
+                        m.resize(k_bucket, 0.0);
+                        idx.push(l);
+                        mask.push(m);
+                    }
+                    engine_gather_masked(&mut engine, &idx, &mask)?
+                };
+                let v = engine.config().vocab_size;
+                nll_total += -crate::sampling::log_softmax_at(
+                    &pre.last_logits[0], w[p] as usize) as f64;
+                count += 1;
+                let mut cur = vec![0i32; pre.state.batch];
+                for i in p..p + g - 1 {
+                    cur[0] = w[i];
+                    let logits = engine.decode_step(
+                        &mut pre.state, &cur, Some(&pruned), None)?;
+                    nll_total += -crate::sampling::log_softmax_at(
+                        &logits[..v], w[i + 1] as usize) as f64;
+                    count += 1;
+                }
+            }
+            let ppl = eval::perplexity(nll_total, count);
+            ppls.push(ppl);
+            let label = if adaptive { "adaptive" } else { "uniform" };
+            let _ = writeln!(csv, "{label},{keep},{ppl:.4}");
+        }
+        println!("  keep_avg={keep}: uniform {:.3} | adaptive {:.3}",
+                 ppls[0], ppls[1]);
+    }
+    write_results(&format!("ablation_adaptive_{model}.csv"), &csv)
+}
+
+/// Run the masked gather executable with explicit idx/mask (helper for
+/// the uniform arm of the adaptive ablation).
+fn engine_gather_masked(
+    engine: &mut crate::coordinator::engine::Engine,
+    idx: &[Vec<i32>],
+    mask: &[Vec<f32>],
+) -> Result<crate::coordinator::engine::PrunedWeights> {
+    let cfg = engine.config().clone();
+    let k = idx[0].len();
+    let name = format!("gather_masked_k{k}");
+    let flat_idx: Vec<i32> = idx.iter().flatten().copied().collect();
+    let flat_mask: Vec<f32> = mask.iter().flatten().copied().collect();
+    let idx_dev = engine.session.upload_i32(&[cfg.n_layers, k], &flat_idx)?;
+    let mask_dev =
+        engine.session.upload_f32(&[cfg.n_layers, k], &flat_mask)?;
+    let mut args: Vec<&crate::runtime::DeviceTensor> =
+        vec![engine.weights.get("w1"), engine.weights.get("w2")];
+    if cfg.is_glu {
+        args.push(engine.weights.get("wg"));
+    }
+    args.push(&idx_dev);
+    args.push(&mask_dev);
+    let outs = engine.session.run(&name, &args)?;
+    Ok(crate::coordinator::engine::PrunedWeights { tensors: outs, k })
+}
+
+pub fn ablation_stat(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small-swiglu").to_string();
+    let mut engine = engine_auto(&model)?;
+    let n = args.usize_or("samples", 8)?;
+    let (p, g) = (96usize, 48usize);
+    let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 23, n, p + g);
+
+    let mut csv = String::from("metric,keep,ppl\n");
+    println!("selection metric ablation (LM PPL, lower is better):");
+    for keep in [0.25, 0.5] {
+        let k = engine.k_for(keep)?;
+        let mut ppl = std::collections::BTreeMap::new();
+        for metric in ["eq6_relative", "raw_znorm", "full"] {
+            let mut nll_total = 0.0;
+            let mut count = 0usize;
+            for w in &windows {
+                if metric == "full" {
+                    let v = engine.score_continuation(
+                        &w[..p], &w[p..], Mode::Full)?;
+                    nll_total += v.iter().sum::<f64>();
+                    count += v.len();
+                    continue;
+                }
+                let mut pre = engine
+                    .prefill(std::slice::from_ref(&w[..p].to_vec()),
+                             false)?;
+                let stats = if metric == "eq6_relative" {
+                    &pre.stats[0]
+                } else {
+                    &pre.znorms[0]
+                };
+                let idx = crate::coordinator::selection::select_experts(
+                    stats, k, Strategy::TopK);
+                let pruned = engine.gather(&idx)?;
+                // teacher-forced scoring under the pruned weights
+                let v = engine.config().vocab_size;
+                nll_total += -crate::sampling::log_softmax_at(
+                    &pre.last_logits[0], w[p] as usize)
+                    as f64;
+                count += 1;
+                let mut cur = vec![0i32; pre.state.batch];
+                for i in p..p + g - 1 {
+                    cur[0] = w[i];
+                    let logits = engine.decode_step(
+                        &mut pre.state, &cur, Some(&pruned), None)?;
+                    nll_total += -crate::sampling::log_softmax_at(
+                        &logits[..v], w[i + 1] as usize)
+                        as f64;
+                    count += 1;
+                }
+            }
+            ppl.insert(metric, eval::perplexity(nll_total, count));
+        }
+        println!(
+            "  keep={keep}: full {:.3} | eq6 {:.3} | raw-znorm {:.3}",
+            ppl["full"], ppl["eq6_relative"], ppl["raw_znorm"]
+        );
+        for (m, v) in &ppl {
+            let _ = writeln!(csv, "{m},{keep},{v:.4}");
+        }
+    }
+    write_results(&format!("ablation_stat_{model}.csv"), &csv)
+}

@@ -1,0 +1,217 @@
+//! Shared experiment machinery: engine loading, task evaluation loops,
+//! CSV/markdown output.
+
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::{Engine, Mode};
+use crate::coordinator::sequence::GenRequest;
+use crate::eval;
+use crate::test_support::{artifact_path, results_path};
+use crate::tokenizer::Tokenizer;
+use crate::util::mean;
+use crate::workload::tasks;
+
+/// Load an engine for a config; prefers trained weights when available
+/// unless `trained=false` is forced.
+pub fn load_engine(config: &str, trained: bool) -> Result<Engine> {
+    let dir = artifact_path(config);
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!(
+            "artifacts for {config:?} missing — run `make artifacts`"
+        );
+    }
+    Engine::load(&dir, trained)
+}
+
+pub fn engine_auto(config: &str) -> Result<Engine> {
+    let dir = artifact_path(config);
+    let manifest = crate::config::Manifest::load(&dir)?;
+    load_engine(config, manifest.trained_weights_file.is_some())
+}
+
+/// Configs that have artifacts on disk, in a stable order.
+pub fn available_configs() -> Vec<String> {
+    let root = artifact_path("");
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(root) {
+        for e in rd.flatten() {
+            if e.path().join("manifest.json").exists() {
+                out.push(e.file_name().to_string_lossy().into_owned());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+pub fn write_results(name: &str, content: &str) -> Result<()> {
+    let path = results_path(name);
+    std::fs::write(&path, content)
+        .with_context(|| format!("writing {path:?}"))?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// task evaluation loops (shared by Figs 4-5 and Tables 1-5)
+// ---------------------------------------------------------------------------
+
+fn trim_generation(text: &str) -> &str {
+    // generations continue past the target sentence; cut at the first
+    // newline (document separator in tiny-lang)
+    match text.find('\n') {
+        Some(i) if i > 0 => &text[..i],
+        _ => text,
+    }
+}
+
+/// Summarization: greedy-generate the summary line, ROUGE vs reference.
+pub fn eval_summarization(engine: &mut Engine, mode: Mode, n: usize,
+                          max_new: usize) -> Result<eval::RougeScores> {
+    let tok = Tokenizer::new();
+    let samples = tasks::summarization(tasks::HELDOUT_SEED, n, 14);
+    let (mut r1, mut r2, mut rl) = (0.0, 0.0, 0.0);
+    for s in &samples {
+        let req = GenRequest::greedy(
+            0, tok.encode_with_bos(&s.prompt), max_new, mode);
+        let resp = engine.generate(&req)?;
+        let scores =
+            eval::rouge_all(trim_generation(&resp.text), &s.reference);
+        r1 += scores.rouge1;
+        r2 += scores.rouge2;
+        rl += scores.rougel;
+    }
+    let n = samples.len() as f64;
+    Ok(eval::RougeScores {
+        rouge1: 100.0 * r1 / n,
+        rouge2: 100.0 * r2 / n,
+        rougel: 100.0 * rl / n,
+    })
+}
+
+/// QA: greedy-generate a short answer, token-F1/EM vs gold.
+pub fn eval_qa(engine: &mut Engine, mode: Mode, n: usize)
+               -> Result<(f64, f64)> {
+    let tok = Tokenizer::new();
+    let samples = tasks::qa(tasks::HELDOUT_SEED + 1, n, 10);
+    let (mut f1, mut em) = (0.0, 0.0);
+    for s in &samples {
+        let req =
+            GenRequest::greedy(0, tok.encode_with_bos(&s.prompt), 16, mode);
+        let resp = engine.generate(&req)?;
+        // answer continues "in short , the" -> prepend "the"
+        let raw = trim_generation(&resp.text);
+        let answer = format!("the{}", raw
+            .split(" stands").next().unwrap_or(raw));
+        f1 += eval::token_f1(&answer, &s.answer);
+        em += eval::exact_match(&answer, &s.answer) as u8 as f64;
+    }
+    let n = samples.len() as f64;
+    Ok((100.0 * f1 / n, 100.0 * em / n))
+}
+
+/// Multiple-choice accuracy: per choice, teacher-forced logprob under the
+/// mode's generation-phase weights (the paper's "simulate generation for
+/// one step" adaptation of classification, §5.1).
+pub fn eval_classification(engine: &mut Engine, mode: Mode, n: usize,
+                           n_choices: usize) -> Result<f64> {
+    let tok = Tokenizer::new();
+    let samples =
+        tasks::classification(tasks::HELDOUT_SEED + 2, n, n_choices, 8);
+    let mut correct = 0usize;
+    for s in &samples {
+        // continuations follow the in-training format: sentences are
+        // space-separated within a document body
+        let prompt = tok.encode_with_bos(&s.context);
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, choice) in s.choices.iter().enumerate() {
+            let cont = tok.encode(&format!(" {choice}"));
+            let nll = engine.score_continuation(&prompt, &cont, mode)?;
+            let mean_lp = -mean(&nll); // length-normalized logprob
+            if mean_lp > best.0 {
+                best = (mean_lp, ci);
+            }
+        }
+        correct += (best.1 == s.label) as usize;
+    }
+    Ok(100.0 * correct as f64 / samples.len() as f64)
+}
+
+/// Language-modeling perplexity over held-out windows: prompt part P
+/// selects experts, continuation part G is teacher-forced-scored under
+/// the generation-phase weights (paper Fig. 5 protocol).
+pub fn eval_lm_ppl(engine: &mut Engine, mode: Mode, n: usize, p: usize,
+                   g: usize) -> Result<f64> {
+    let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 3, n, p + g);
+    let mut total_nll = 0.0;
+    let mut count = 0usize;
+    for w in &windows {
+        let nll =
+            engine.score_continuation(&w[..p], &w[p..], mode)?;
+        total_nll += nll.iter().sum::<f64>();
+        count += nll.len();
+    }
+    Ok(eval::perplexity(total_nll, count))
+}
+
+// ---------------------------------------------------------------------------
+// markdown table builder
+// ---------------------------------------------------------------------------
+
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        MdTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn md_table_renders() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("| 1 | 2 |"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn trim_generation_cuts_newline() {
+        assert_eq!(trim_generation("abc\ndef"), "abc");
+        assert_eq!(trim_generation("abc"), "abc");
+        assert_eq!(trim_generation("\nabc"), "\nabc");
+    }
+}

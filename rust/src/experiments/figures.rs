@@ -1,0 +1,288 @@
+//! Figure drivers (paper Figs 1, 2, 4, 5, 6, 7). Each writes CSV into
+//! results/ with exactly the series the paper plots.
+
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::coordinator::engine::{Engine, Mode};
+use crate::eval;
+use crate::experiments::common::{self, engine_auto, write_results};
+use crate::runtime::DeviceTensor;
+use crate::tokenizer::Tokenizer;
+use crate::util::top_k_indices;
+use crate::workload::{corpus, rng::XorShift64Star, tasks};
+
+fn default_model(args: &Args) -> String {
+    args.get_or("model", "small-swiglu").to_string()
+}
+
+/// Run the activations executable on a token sequence -> zbar [L][S][F].
+fn activation_map(engine: &Engine, ids: &[i32])
+                  -> Result<(Vec<f32>, usize, usize, usize)> {
+    let spec = engine
+        .session
+        .manifest
+        .executables
+        .values()
+        .find(|e| e.kind == "activations")
+        .context("no activations artifact (re-run make artifacts)")?
+        .clone();
+    let s_bucket = spec.seq.unwrap();
+    let (row, real) = engine.tokenizer.fit(ids, s_bucket);
+    let toks = engine.session.upload_i32(&[1, s_bucket], &row)?;
+    let lens = engine.session.upload_i32(&[1], &[real as i32])?;
+    let mut argv: Vec<&DeviceTensor> = engine.weights.ordered();
+    argv.push(&toks);
+    argv.push(&lens);
+    let outs = engine.session.run(&spec.name, &argv)?;
+    let cfg = engine.config();
+    Ok((outs[0].to_f32()?, cfg.n_layers, s_bucket, cfg.d_ff))
+}
+
+fn zbar_csv(zbar: &[f32], layer: usize, s: usize, f: usize,
+            max_rows: usize, max_cols: usize) -> String {
+    let mut out = String::from("token,neuron,value\n");
+    for t in 0..s.min(max_rows) {
+        for j in 0..f.min(max_cols) {
+            let v = zbar[(layer * s + t) * f + j];
+            let _ = writeln!(out, "{t},{j},{v:.5}");
+        }
+    }
+    out
+}
+
+/// Quantify flocking in one map: mean Jaccard between each token's
+/// top-k(|zbar| row) set and the sequence-level top-k set. 1.0 = every
+/// token shares the sequence's expert set (perfect vertical streaks).
+pub fn flocking_score(zbar: &[f32], layer: usize, s_real: usize, s: usize,
+                      f: usize, k: usize) -> f64 {
+    // sequence-level stat: column l2 over tokens
+    let mut col = vec![0f32; f];
+    for t in 0..s_real {
+        for j in 0..f {
+            let v = zbar[(layer * s + t) * f + j];
+            col[j] += v * v;
+        }
+    }
+    let seq_set = top_k_indices(&col, k);
+    let mut total = 0.0;
+    for t in 0..s_real {
+        let row = &zbar[(layer * s + t) * f..(layer * s + t) * f + f];
+        let tok_set = top_k_indices(row, k);
+        total += eval::jaccard(&tok_set, &seq_set);
+    }
+    total / s_real as f64
+}
+
+// ---------------------------------------------------------------------------
+
+/// Fig 1: flocking heatmaps — relative FF activation magnitudes for a
+/// held-out sequence; CSV per layer slice + per-layer flocking scores.
+pub fn fig1(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let engine = engine_auto(&model)?;
+    let tok = Tokenizer::new();
+    let text = corpus::corpus(tasks::HELDOUT_SEED + 7, 4, 24);
+    let ids = tok.encode(&text);
+    let (zbar, l_n, s, f) = activation_map(&engine, &ids)?;
+    let s_real = ids.len().min(s);
+
+    let mid = l_n / 2;
+    write_results(&format!("fig1_heatmap_{model}_layer{mid}.csv"),
+                  &zbar_csv(&zbar, mid, s, f, 512, 512))?;
+
+    let mut summary = String::from("layer,flocking_score@10%\n");
+    let k = (f / 10).max(1);
+    println!("flocking score (mean Jaccard of per-token vs sequence \
+              top-{k} sets):");
+    for l in 0..l_n {
+        let score = flocking_score(&zbar, l, s_real, s, f, k);
+        println!("  layer {l:2}: {score:.3}");
+        let _ = writeln!(summary, "{l},{score:.4}");
+    }
+    write_results(&format!("fig1_flocking_scores_{model}.csv"), &summary)
+}
+
+/// Fig 2: mean pairwise Jaccard similarity between samples' top-k expert
+/// sets, per layer, for a sweep of k fractions.
+pub fn fig2(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let engine = engine_auto(&model)?;
+    let n_samples = args.usize_or("samples", 16)?;
+    let tok = Tokenizer::new();
+    let cfg = engine.config().clone();
+
+    // per-sample stats from prefill
+    let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 11, n_samples, 96);
+    let mut per_sample = Vec::new();
+    for w in &windows {
+        let pre = engine.prefill(std::slice::from_ref(w), false)?;
+        per_sample.push(pre.stats[0].clone());
+        let _ = tok;
+    }
+
+    let fracs = [0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9];
+    let mut csv = String::from("layer,k_fraction,mean_jaccard\n");
+    println!("layer x keep-fraction mean pairwise Jaccard:");
+    for l in 0..cfg.n_layers {
+        print!("  layer {l:2}:");
+        for &frac in &fracs {
+            let k = ((cfg.d_ff as f64 * frac) as usize).max(1);
+            let sets: Vec<Vec<usize>> = per_sample
+                .iter()
+                .map(|stats| top_k_indices(&stats[l], k))
+                .collect();
+            let j = eval::mean_pairwise_jaccard(&sets);
+            print!(" {frac:.2}:{j:.3}");
+            let _ = writeln!(csv, "{l},{frac},{j:.4}");
+        }
+        println!();
+    }
+    write_results(&format!("fig2_jaccard_{model}.csv"), &csv)
+}
+
+/// Fig 4: relative performance vs FF sparsity (GRIFFIN / full ratio per
+/// task across the keep-fraction sweep).
+pub fn fig4(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let mut engine = engine_auto(&model)?;
+    let n = args.usize_or("samples", 12)?;
+    let cfg = engine.config().clone();
+
+    // full-model baselines
+    let full_ppl = common::eval_lm_ppl(&mut engine, Mode::Full, n, 96, 32)?;
+    let full_rouge =
+        common::eval_summarization(&mut engine, Mode::Full, n, 48)?;
+    let (full_f1, _) = common::eval_qa(&mut engine, Mode::Full, n)?;
+    let full_acc =
+        common::eval_classification(&mut engine, Mode::Full, n, 4)?;
+
+    let mut csv = String::from(
+        "keep_fraction,k,ppl_ratio,rouge1_ratio,qa_f1_ratio,cls_acc_ratio\n",
+    );
+    println!("keep |   PPL-ratio  rouge1-ratio  qaF1-ratio  clsAcc-ratio");
+    for &k in &cfg.keep_ks {
+        if k >= cfg.d_ff {
+            continue;
+        }
+        let keep = k as f64 / cfg.d_ff as f64;
+        let mode = Mode::griffin(keep);
+        let ppl = common::eval_lm_ppl(&mut engine, mode, n, 96, 32)?;
+        let rouge = common::eval_summarization(&mut engine, mode, n, 48)?;
+        let (f1, _) = common::eval_qa(&mut engine, mode, n)?;
+        let acc = common::eval_classification(&mut engine, mode, n, 4)?;
+        // for PPL lower is better: ratio = full/griffin so 1.0 = parity
+        let rows = (
+            full_ppl / ppl,
+            rouge.rouge1 / full_rouge.rouge1.max(1e-9),
+            f1 / full_f1.max(1e-9),
+            acc / full_acc.max(1e-9),
+        );
+        println!(
+            "{keep:.3} | {:>10.3} {:>12.3} {:>11.3} {:>12.3}",
+            rows.0, rows.1, rows.2, rows.3
+        );
+        let _ = writeln!(
+            csv,
+            "{keep:.4},{k},{:.4},{:.4},{:.4},{:.4}",
+            rows.0, rows.1, rows.2, rows.3
+        );
+    }
+    write_results(&format!("fig4_sparsity_sweep_{model}.csv"), &csv)
+}
+
+/// Fig 5: prompt length vs generation length — PPL increase over the full
+/// model on held-out text at 50% FF sparsity.
+pub fn fig5(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let mut engine = engine_auto(&model)?;
+    let n = args.usize_or("samples", 8)?;
+    let grid_p = [16usize, 32, 64, 128];
+    let grid_g = [16usize, 32, 64, 128];
+    let mode = Mode::griffin(0.5);
+
+    let mut csv = String::from("prompt_len,gen_len,ppl_full,ppl_griffin,\
+                                ppl_increase\n");
+    println!("P \\ G     " );
+    for &p in &grid_p {
+        for &g in &grid_g {
+            if p + g > engine.config().max_seq {
+                continue;
+            }
+            let full = common::eval_lm_ppl(&mut engine, Mode::Full,
+                                           n, p, g)?;
+            let grif = common::eval_lm_ppl(&mut engine, mode, n, p, g)?;
+            let inc = grif - full;
+            println!("P={p:<4} G={g:<4} full={full:>8.3} \
+                      griffin={grif:>8.3} ΔPPL={inc:>7.3}");
+            let _ = writeln!(csv,
+                             "{p},{g},{full:.4},{grif:.4},{inc:.4}");
+        }
+    }
+    write_results(&format!("fig5_prompt_vs_gen_{model}.csv"), &csv)
+}
+
+/// Fig 6: sorted entries of the statistic s per layer (normalized 0..1).
+pub fn fig6(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let engine = engine_auto(&model)?;
+    let w = tasks::lm_windows(tasks::HELDOUT_SEED + 13, 1, 96);
+    let pre = engine.prefill(&w, false)?;
+    let stats = &pre.stats[0];
+
+    let mut csv = String::from("layer,rank,value\n");
+    for (l, s) in stats.iter().enumerate() {
+        let mut v = s.clone();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let (lo, hi) = (v[v.len() - 1], v[0].max(1e-9));
+        for (r, x) in v.iter().enumerate() {
+            let norm = (x - lo) / (hi - lo).max(1e-9);
+            let _ = writeln!(csv, "{l},{r},{norm:.5}");
+        }
+        // concentration summary: fraction of mass in the top 10%
+        let total: f32 = v.iter().sum();
+        let top: f32 = v[..v.len() / 10].iter().sum();
+        println!("layer {l:2}: top-10% neurons hold {:.1}% of s mass",
+                 100.0 * top / total.max(1e-9));
+    }
+    write_results(&format!("fig6_sorted_stat_{model}.csv"), &csv)
+}
+
+/// Fig 7: flocking under original vs permuted vs uniform-random token
+/// sequences (appendix C): same activation-map pipeline as Fig 1, plus
+/// the quantitative flocking score per input type.
+pub fn fig7(args: &Args) -> Result<()> {
+    let model = default_model(args);
+    let engine = engine_auto(&model)?;
+    let tok = Tokenizer::new();
+    let text = corpus::corpus(tasks::HELDOUT_SEED + 17, 4, 24);
+    let original = tok.encode(&text);
+    let mut rng = XorShift64Star::new(99);
+    let mut permuted = original.clone();
+    rng.shuffle(&mut permuted);
+    let random: Vec<i32> =
+        (0..original.len()).map(|_| rng.below(256) as i32).collect();
+
+    let cfg = engine.config().clone();
+    let k = (cfg.d_ff / 10).max(1);
+    let mut csv = String::from("input,layer,flocking_score@10%\n");
+    for (name, ids) in [("original", &original), ("permuted", &permuted),
+                        ("random", &random)] {
+        let (zbar, l_n, s, f) = activation_map(&engine, ids)?;
+        let s_real = ids.len().min(s);
+        let mid = l_n / 2;
+        write_results(
+            &format!("fig7_heatmap_{model}_{name}_layer{mid}.csv"),
+            &zbar_csv(&zbar, mid, s, f, 512, 512))?;
+        print!("{name:>9}:");
+        for l in 0..l_n {
+            let score = flocking_score(&zbar, l, s_real, s, f, k);
+            print!(" L{l}:{score:.3}");
+            let _ = writeln!(csv, "{name},{l},{score:.4}");
+        }
+        println!();
+    }
+    write_results(&format!("fig7_flocking_scores_{model}.csv"), &csv)
+}

@@ -1,0 +1,52 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5).
+//! Each driver writes CSV (+ a markdown summary) into results/ and prints
+//! the same rows the paper reports. EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+pub mod ablation;
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+pub struct Experiment {
+    pub id: &'static str,
+    pub about: &'static str,
+    pub run: fn(&crate::cli::Args) -> Result<()>,
+}
+
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig1", about: "flocking heatmaps (relative FF activations)", run: figures::fig1 },
+        Experiment { id: "fig2", about: "inter-sample Jaccard similarity of top-k expert sets", run: figures::fig2 },
+        Experiment { id: "fig4", about: "relative performance vs FF sparsity sweep", run: figures::fig4 },
+        Experiment { id: "fig5", about: "prompt length vs generation length PPL grid", run: figures::fig5 },
+        Experiment { id: "fig6", about: "sorted selection statistic s per layer", run: figures::fig6 },
+        Experiment { id: "fig7", about: "flocking under permuted / random inputs", run: figures::fig7 },
+        Experiment { id: "table1", about: "classification accuracy at 50% FF sparsity", run: tables::table1 },
+        Experiment { id: "table2", about: "generation tasks: full vs magnitude vs wanda vs griffin", run: tables::table2 },
+        Experiment { id: "table3", about: "generation-phase latency (P+G setups)", run: tables::table3 },
+        Experiment { id: "table4", about: "shared/batched expert selection (eq.7)", run: tables::table4 },
+        Experiment { id: "table5", about: "expert selection strategies (top-k vs sampling)", run: tables::table5 },
+        Experiment { id: "ablation-stat", about: "eq.6 relative statistic vs raw activation norms", run: ablation::ablation_stat },
+        Experiment { id: "ablation-adaptive", about: "uniform vs layer-adaptive expert budgets (extension)", run: ablation::ablation_adaptive },
+    ]
+}
+
+pub fn run(id: &str, args: &crate::cli::Args) -> Result<()> {
+    if id == "all" {
+        for e in registry() {
+            println!("\n=== {} — {} ===", e.id, e.about);
+            (e.run)(args)?;
+        }
+        return Ok(());
+    }
+    for e in registry() {
+        if e.id == id {
+            return (e.run)(args);
+        }
+    }
+    bail!("unknown experiment {id:?}; have {:?} or 'all'",
+          registry().iter().map(|e| e.id).collect::<Vec<_>>())
+}

@@ -1,0 +1,28 @@
+//! GRIFFIN: prompt-prompted adaptive structured pruning for efficient LLM
+//! generation (Dong, Chen, Chi 2024) — Rust coordinator (Layer 3).
+//!
+//! Architecture (DESIGN.md):
+//! - `runtime`     — PJRT client; loads AOT-compiled HLO artifacts.
+//! - `coordinator` — the serving engine: router, scheduler, sequence
+//!   state, GRIFFIN expert selection.
+//! - `config`, `tensorfile`, `tokenizer`, `json`, `cli`, `metrics`,
+//!   `sampling`, `eval`, `workload` — substrates (all hand-rolled; the
+//!   build environment is offline).
+//! - `experiments`, `bench_harness` — paper table/figure regeneration.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod tensorfile;
+pub mod test_support;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

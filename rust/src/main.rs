@@ -1,0 +1,204 @@
+//! griffin — CLI entrypoint for the serving coordinator.
+//!
+//! Subcommands:
+//!   serve        run the JSON-lines TCP server
+//!   generate     one-shot generation from the command line
+//!   exp <id>     regenerate a paper table/figure (or `all`)
+//!   configs      list available model artifacts
+//!   compile      eagerly compile all executables of a config (timing)
+
+use anyhow::{bail, Result};
+use griffin::cli::{self, OptSpec};
+use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::selection::Strategy;
+use griffin::coordinator::sequence::GenRequest;
+use griffin::experiments;
+use griffin::sampling::SamplerSpec;
+use griffin::test_support::artifact_path;
+use griffin::tokenizer::Tokenizer;
+
+const GLOBAL_OPTS: &[OptSpec] = &[
+    OptSpec { name: "model", takes_value: true, default: None,
+              help: "model config (artifacts/<name>); default \
+                     small-swiglu, table experiments default to the \
+                     whole trained zoo" },
+    OptSpec { name: "random-weights", takes_value: false, default: None,
+              help: "use random-init weights even if trained exist" },
+    OptSpec { name: "bind", takes_value: true, default: Some("127.0.0.1:7071"),
+              help: "serve: listen address" },
+    OptSpec { name: "queue", takes_value: true, default: Some("64"),
+              help: "serve: admission queue capacity" },
+    OptSpec { name: "prompt", takes_value: true, default: None,
+              help: "generate: prompt text" },
+    OptSpec { name: "max-new-tokens", takes_value: true, default: Some("48"),
+              help: "generate: generation budget" },
+    OptSpec { name: "mode", takes_value: true, default: Some("griffin"),
+              help: "full | griffin | magnitude | wanda" },
+    OptSpec { name: "keep", takes_value: true, default: Some("0.5"),
+              help: "FF keep fraction (1 - sparsity)" },
+    OptSpec { name: "temperature", takes_value: true, default: Some("0"),
+              help: "generate: 0 = greedy" },
+    OptSpec { name: "seed", takes_value: true, default: Some("0"),
+              help: "sampling seed" },
+    OptSpec { name: "scan", takes_value: false, default: None,
+              help: "generate: use the fused-scan generation path" },
+    OptSpec { name: "samples", takes_value: true, default: None,
+              help: "experiments: per-task sample count" },
+    OptSpec { name: "reps", takes_value: true, default: None,
+              help: "table3: repetitions per cell" },
+];
+
+fn load_engine(args: &cli::Args) -> Result<Engine> {
+    let model = args.get_or("model", "small-swiglu");
+    let dir = artifact_path(model);
+    if !dir.join("manifest.json").exists() {
+        bail!("no artifacts for {model:?} — run `make artifacts` \
+               (have: {:?})",
+              griffin::experiments::common::available_configs());
+    }
+    let manifest = griffin::config::Manifest::load(&dir)?;
+    let trained = manifest.trained_weights_file.is_some()
+        && !args.flag("random-weights");
+    let engine = Engine::load(&dir, trained)?;
+    eprintln!(
+        "loaded {} ({:.1}M params, {} activation, {} weights, {} \
+         executables)",
+        model,
+        engine.config().param_count as f64 / 1e6,
+        engine.config().activation,
+        if trained { "trained" } else { "random" },
+        engine.session.manifest.executables.len()
+    );
+    Ok(engine)
+}
+
+fn mode_from_args(args: &cli::Args) -> Result<Mode> {
+    let keep = args.f64_or("keep", 0.5)?;
+    let seed = args.u64_or("seed", 0)?;
+    Ok(match args.get("mode").unwrap() {
+        "full" => Mode::Full,
+        "griffin" => Mode::Griffin { keep, strategy: Strategy::TopK },
+        "griffin-sampling" => {
+            Mode::Griffin { keep, strategy: Strategy::Sampling { seed } }
+        }
+        "magnitude" => Mode::Magnitude { keep },
+        "wanda" => Mode::Wanda { keep },
+        other => bail!("unknown mode {other:?}"),
+    })
+}
+
+fn cmd_generate(args: &cli::Args) -> Result<()> {
+    let mut engine = load_engine(args)?;
+    let tok = Tokenizer::new();
+    let prompt = match args.get("prompt") {
+        Some(p) => p.to_string(),
+        None => "the quiet river joins the deep lake . the deep lake"
+            .to_string(),
+    };
+    let temperature = args.f64_or("temperature", 0.0)? as f32;
+    let req = GenRequest {
+        id: 1,
+        prompt: tok.encode_with_bos(&prompt),
+        max_new_tokens: args.usize_or("max-new-tokens", 48)?,
+        mode: mode_from_args(args)?,
+        sampler: if temperature > 0.0 {
+            SamplerSpec::Temperature(temperature)
+        } else {
+            SamplerSpec::Greedy
+        },
+        seed: args.u64_or("seed", 0)?,
+        stop_at_eos: true,
+    };
+    let resp = if args.flag("scan") {
+        engine.generate_scan(&req)?
+    } else {
+        engine.generate(&req)?
+    };
+    println!("--- prompt ---\n{prompt}");
+    println!("--- completion ({}, k={:?}) ---\n{}",
+             req.mode.label(), resp.k_used, resp.text);
+    println!(
+        "--- timing: prefill {:.1}ms select {:.1}ms decode {:.1}ms \
+         ({:.1} tok/s)",
+        resp.prefill_ms,
+        resp.select_ms,
+        resp.decode_ms,
+        resp.tokens.len() as f64 / (resp.decode_ms / 1e3).max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_configs() -> Result<()> {
+    let configs = griffin::experiments::common::available_configs();
+    if configs.is_empty() {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    }
+    for c in configs {
+        let m = griffin::config::Manifest::load(&artifact_path(&c))?;
+        println!(
+            "{:<16} {:>6.1}M params  act={:<7} d={} L={} d_ff={} \
+             buckets: B{:?} S{:?} k{:?}{}",
+            c,
+            m.config.param_count as f64 / 1e6,
+            m.config.activation,
+            m.config.d_model,
+            m.config.n_layers,
+            m.config.d_ff,
+            m.config.batch_buckets,
+            m.config.prefill_buckets,
+            m.config.keep_ks,
+            if m.trained_weights_file.is_some() { "  [trained]" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &cli::Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let names: Vec<String> =
+        engine.session.manifest.executables.keys().cloned().collect();
+    for n in names {
+        let t = std::time::Instant::now();
+        engine.session.executable(&n)?;
+        println!("{n:<44} compiled in {:>8.1} ms",
+                 t.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        println!(
+            "griffin — GRIFFIN serving coordinator (paper reproduction)\n\n\
+             usage: griffin <serve|generate|exp|configs|compile> [options]\n\
+             \n{}",
+            cli::usage("griffin", "options apply per subcommand",
+                       GLOBAL_OPTS)
+        );
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = cli::parse(&argv[1..], GLOBAL_OPTS)?;
+    match cmd.as_str() {
+        "serve" => {
+            let engine = load_engine(&args)?;
+            let bind = args.get("bind").unwrap().to_string();
+            let queue = args.usize_or("queue", 64)?;
+            griffin::server::run(engine, &bind, queue)
+        }
+        "generate" => cmd_generate(&args),
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            experiments::run(id, &args)
+        }
+        "configs" => cmd_configs(),
+        "compile" => cmd_compile(&args),
+        other => bail!("unknown command {other:?}; try --help"),
+    }
+}

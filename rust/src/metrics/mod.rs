@@ -1,0 +1,317 @@
+//! Serving metrics: latency histograms, counters, throughput meters.
+//!
+//! Lock-free-ish (a Mutex per histogram is fine at our request rates);
+//! the engine exposes a `MetricsRegistry` snapshot over the server's
+//! `metrics` endpoint and the bench harness prints the same numbers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Log-bucketed latency histogram (microsecond resolution, ~7% buckets).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Mutex<Vec<u64>>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const BUCKETS: usize = 256;
+/// bucket i covers [GROWTH^i, GROWTH^(i+1)) microseconds
+const GROWTH: f64 = 1.07;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: Mutex::new(vec![0; BUCKETS]),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_for(us: u64) -> usize {
+        if us == 0 {
+            return 0;
+        }
+        let b = (us as f64).ln() / GROWTH.ln();
+        (b as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        GROWTH.powi(i as i32 + 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        let mut b = self.buckets.lock().unwrap();
+        b[Self::bucket_for(us)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile from the log buckets (upper bound of the
+    /// bucket containing the rank).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0 * total as f64).ceil() as u64;
+        let b = self.buckets.lock().unwrap();
+        let mut seen = 0u64;
+        for (i, &c) in b.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(50.0),
+            p90_us: self.percentile_us(90.0),
+            p99_us: self.percentile_us(99.0),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: u64,
+}
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Tokens/sec style meter.
+#[derive(Debug)]
+pub struct Meter {
+    start: Instant,
+    events: Counter,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Meter { start: Instant::now(), events: Counter::default() }
+    }
+}
+
+impl Meter {
+    pub fn add(&self, n: u64) {
+        self.events.add(n)
+    }
+    pub fn rate_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.events.get() as f64 / dt
+        }
+    }
+    pub fn total(&self) -> u64 {
+        self.events.get()
+    }
+}
+
+/// All serving metrics in one place.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    pub prefill_latency: Histogram,
+    pub decode_step_latency: Histogram,
+    pub selection_latency: Histogram,
+    pub gather_latency: Histogram,
+    pub e2e_latency: Histogram,
+    pub queue_wait: Histogram,
+    pub requests_admitted: Counter,
+    pub requests_completed: Counter,
+    pub requests_rejected: Counter,
+    pub tokens_generated: Meter,
+    pub prompt_tokens: Meter,
+}
+
+impl MetricsRegistry {
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::{n, obj, Value};
+        let hist = |h: &Histogram| {
+            let s = h.snapshot();
+            obj(vec![
+                ("count", n(s.count as f64)),
+                ("mean_us", n(s.mean_us)),
+                ("p50_us", n(s.p50_us)),
+                ("p90_us", n(s.p90_us)),
+                ("p99_us", n(s.p99_us)),
+                ("max_us", n(s.max_us as f64)),
+            ])
+        };
+        obj(vec![
+            ("prefill_latency", hist(&self.prefill_latency)),
+            ("decode_step_latency", hist(&self.decode_step_latency)),
+            ("selection_latency", hist(&self.selection_latency)),
+            ("gather_latency", hist(&self.gather_latency)),
+            ("e2e_latency", hist(&self.e2e_latency)),
+            ("queue_wait", hist(&self.queue_wait)),
+            (
+                "requests",
+                obj(vec![
+                    ("admitted", n(self.requests_admitted.get() as f64)),
+                    ("completed", n(self.requests_completed.get() as f64)),
+                    ("rejected", n(self.requests_rejected.get() as f64)),
+                ]),
+            ),
+            (
+                "throughput",
+                obj(vec![
+                    (
+                        "tokens_per_sec",
+                        n(self.tokens_generated.rate_per_sec()),
+                    ),
+                    (
+                        "tokens_total",
+                        Value::Num(self.tokens_generated.total() as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn record_into(&self, h: &Histogram) {
+        h.record(self.0.elapsed());
+    }
+}
+
+/// Export a table of named snapshots as CSV rows.
+pub fn histograms_csv(rows: &BTreeMap<String, HistogramSnapshot>) -> String {
+    let mut out =
+        String::from("name,count,mean_us,p50_us,p90_us,p99_us,max_us\n");
+    for (name, s) in rows {
+        out.push_str(&format!(
+            "{},{},{:.1},{:.1},{:.1},{:.1},{}\n",
+            name, s.count, s.mean_us, s.p50_us, s.p90_us, s.p99_us, s.max_us
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 4, 5] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 3000.0).abs() < 1.0);
+        assert_eq!(h.max_us(), 5000);
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 >= 2500.0 && p50 <= 3500.0, "p50 = {p50}");
+    }
+
+    #[test]
+    fn histogram_percentile_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 17));
+        }
+        let (p50, p90, p99) = (
+            h.percentile_us(50.0),
+            h.percentile_us(90.0),
+            h.percentile_us(99.0),
+        );
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn counter_and_meter() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let m = Meter::default();
+        m.add(100);
+        assert_eq!(m.total(), 100);
+        assert!(m.rate_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn registry_json_shape() {
+        let r = MetricsRegistry::default();
+        r.prefill_latency.record(Duration::from_millis(10));
+        let v = r.to_json();
+        assert!(v.get("prefill_latency").unwrap().get("count").is_some());
+        assert!(v.get("throughput").is_some());
+        // serializes without panicking
+        let s = crate::json::to_string(&v);
+        assert!(crate::json::parse(&s).is_ok());
+    }
+}

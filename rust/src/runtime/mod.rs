@@ -1,0 +1,355 @@
+//! PJRT runtime (Layer 3 ↔ artifacts bridge).
+//!
+//! Loads `artifacts/<config>/*.hlo.txt`, compiles them on the PJRT CPU
+//! client (lazily, cached), uploads weights once, and dispatches
+//! executions with **device-resident buffers** (`execute_b`): between
+//! decode steps neither weights nor KV-cache cross the host boundary.
+//!
+//! Safety note: xla_extension *aborts the process* on shape-mismatched
+//! buffer arguments (fatal CHECK, observed in rust/tests/derisk_runtime.rs),
+//! so `Session::run` validates every argument's shape/dtype against the
+//! manifest before dispatch and returns a proper error instead.
+//!
+//! Threading: `PjRtBuffer` is not `Send` (raw pointer wrapper), so all
+//! runtime interaction stays on the engine thread; the server hands work
+//! over via channels (see server/).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::{ExecutableSpec, IoSpec, Manifest};
+use crate::tensorfile::{self, DType, Tensor};
+
+/// A device buffer plus the host-side metadata needed for shape checking.
+pub struct DeviceTensor {
+    pub buffer: PjRtBuffer,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl DeviceTensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Download to host as f32 (decode logits, stats, ...).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("device tensor is {:?}, not f32", self.dtype);
+        }
+        let lit = self.buffer.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("device tensor is {:?}, not i32", self.dtype);
+        }
+        let lit = self.buffer.to_literal_sync()?;
+        Ok(lit.to_vec::<i32>()?)
+    }
+}
+
+fn dtype_of(io: &IoSpec) -> DType {
+    if io.dtype == "i32" {
+        DType::I32
+    } else {
+        DType::F32
+    }
+}
+
+/// Compilation + weight store + dispatch for one model config.
+pub struct Session {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    compiled: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
+    pub compile_times_ms: RefCell<BTreeMap<String, f64>>,
+}
+
+impl Session {
+    pub fn load(artifact_dir: &Path) -> Result<Session> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Session {
+            client,
+            manifest,
+            compiled: RefCell::new(BTreeMap::new()),
+            compile_times_ms: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?;
+        let path = self.manifest.hlo_path(spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.compile_times_ms.borrow_mut().insert(name.to_string(), ms);
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    // -- host -> device -------------------------------------------------
+
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<DeviceTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("upload_f32: shape {shape:?} != {} elements", data.len());
+        }
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, shape, &bytes)?;
+        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype: DType::F32 })
+    }
+
+    pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<DeviceTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("upload_i32: shape {shape:?} != {} elements", data.len());
+        }
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32, shape, &bytes)?;
+        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype: DType::I32 })
+    }
+
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let ty = match t.dtype {
+            DType::F32 => ElementType::F32,
+            DType::I32 => ElementType::S32,
+        };
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ty, &t.shape, &t.data)?;
+        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceTensor {
+            buffer,
+            shape: t.shape.clone(),
+            dtype: t.dtype,
+        })
+    }
+
+    // -- dispatch ---------------------------------------------------------
+
+    /// Execute by manifest name with shape-checked device arguments.
+    pub fn run(&self, name: &str, args: &[&DeviceTensor])
+               -> Result<Vec<DeviceTensor>> {
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?
+            .clone();
+        self.check_args(&spec, args)?;
+        let exe = self.executable(name)?;
+        let bufs: Vec<&PjRtBuffer> =
+            args.iter().map(|a| &a.buffer).collect();
+        let mut outs = exe.execute_b::<&PjRtBuffer>(&bufs)?;
+        if outs.is_empty() {
+            bail!("{name}: no replica outputs");
+        }
+        let row = outs.remove(0);
+        if row.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {} — was the xla crate \
+                 patch (untuple_result) applied?",
+                spec.outputs.len(),
+                row.len()
+            );
+        }
+        Ok(row
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(buffer, io)| DeviceTensor {
+                buffer,
+                shape: io.shape.clone(),
+                dtype: dtype_of(io),
+            })
+            .collect())
+    }
+
+    fn check_args(&self, spec: &ExecutableSpec, args: &[&DeviceTensor])
+                  -> Result<()> {
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{}: expected {} args ({:?}...), got {}",
+                spec.name,
+                spec.inputs.len(),
+                spec.inputs.iter().take(3).map(|i| &i.name).collect::<Vec<_>>(),
+                args.len()
+            );
+        }
+        for (arg, io) in args.iter().zip(&spec.inputs) {
+            if arg.shape != io.shape || arg.dtype != dtype_of(io) {
+                bail!(
+                    "{}: arg {:?} expects {:?} {:?}, got {:?} {:?}",
+                    spec.name, io.name, io.dtype, io.shape,
+                    arg.dtype, arg.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Device-resident model weights in manifest ABI order.
+pub struct WeightStore {
+    /// name -> device tensor (full parameter set)
+    pub params: BTreeMap<String, Rc<DeviceTensor>>,
+    pub param_order: Vec<String>,
+    pub nonff_order: Vec<String>,
+}
+
+impl WeightStore {
+    /// Upload weights.bin (or weights_trained.bin) once at startup.
+    pub fn load(session: &Session, trained: bool) -> Result<WeightStore> {
+        let path = session.manifest.weights_path(trained)?;
+        let tensors = tensorfile::read(&path)?;
+        let mut params = BTreeMap::new();
+        for name in &session.manifest.param_order {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("weights missing {name:?}"))?;
+            params.insert(name.clone(), Rc::new(session.upload_tensor(t)?));
+        }
+        Ok(WeightStore {
+            params,
+            param_order: session.manifest.param_order.clone(),
+            nonff_order: session.manifest.nonff_param_order.clone(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> &DeviceTensor {
+        &self.params[name]
+    }
+
+    /// All params in ABI order (prefill/decode/full-scan argument prefix).
+    pub fn ordered(&self) -> Vec<&DeviceTensor> {
+        self.param_order.iter().map(|n| &*self.params[n]).collect()
+    }
+
+    /// Non-FF params in ABI order (decode_pruned argument prefix).
+    pub fn ordered_nonff(&self) -> Vec<&DeviceTensor> {
+        self.nonff_order.iter().map(|n| &*self.params[n]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::test_support::artifact_path;
+
+    fn session() -> Option<Session> {
+        let dir = artifact_path("tiny-swiglu");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts missing");
+            return None;
+        }
+        Some(Session::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn upload_roundtrip() {
+        let _g = crate::test_support::pjrt_lock();
+        let Some(s) = session() else { return };
+        let dt = s.upload_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(dt.to_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let it = s.upload_i32(&[4], &[7, -1, 0, 3]).unwrap();
+        assert_eq!(it.to_i32().unwrap(), vec![7, -1, 0, 3]);
+        assert!(s.upload_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn run_rejects_bad_args() {
+        let _g = crate::test_support::pjrt_lock();
+        let Some(s) = session() else { return };
+        let dt = s.upload_f32(&[1], &[0.0]).unwrap();
+        // wrong arity
+        let err = match s.run("decode_b1", &[&dt]) {
+            Ok(_) => panic!("expected arity error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("expected"), "{err}");
+        // unknown name
+        assert!(s.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn weight_store_uploads_all_params() {
+        let _g = crate::test_support::pjrt_lock();
+        let Some(s) = session() else { return };
+        let ws = WeightStore::load(&s, false).unwrap();
+        assert_eq!(ws.ordered().len(), s.manifest.param_order.len());
+        assert_eq!(
+            ws.get("tok_emb").shape,
+            vec![s.manifest.config.vocab_size, s.manifest.config.d_model]
+        );
+        assert!(ws.ordered_nonff().len() < ws.ordered().len());
+    }
+
+    #[test]
+    fn kernel_parity_through_pjrt() {
+        let _g = crate::test_support::pjrt_lock();
+        // end-to-end L1 check THROUGH the artifact + PJRT path: the
+        // pallas kernel outputs inside the compiled HLO must match the
+        // jnp reference outputs computed in the same executable.
+        let Some(s) = session() else { return };
+        let name = s
+            .manifest
+            .executables
+            .values()
+            .find(|e| e.kind == "kernel_parity")
+            .map(|e| e.name.clone());
+        let Some(name) = name else {
+            eprintln!("skipping: no kernel_parity artifact");
+            return;
+        };
+        let spec = s.manifest.executables[&name].clone();
+        let mut rng = crate::workload::rng::XorShift64Star::new(3);
+        let mut args = Vec::new();
+        for io in &spec.inputs {
+            let n: usize = io.shape.iter().product();
+            let vals: Vec<f32> =
+                (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+            args.push(s.upload_f32(&io.shape, &vals).unwrap());
+        }
+        let refs: Vec<&DeviceTensor> = args.iter().collect();
+        let outs = s.run(&name, &refs).unwrap();
+        let ff_pal = outs[0].to_f32().unwrap();
+        let ff_ref = outs[1].to_f32().unwrap();
+        let s_pal = outs[2].to_f32().unwrap();
+        let s_ref = outs[3].to_f32().unwrap();
+        for (a, b) in ff_pal.iter().zip(&ff_ref) {
+            assert!((a - b).abs() < 1e-4, "ff mismatch {a} vs {b}");
+        }
+        for (a, b) in s_pal.iter().zip(&s_ref) {
+            assert!((a - b).abs() < 1e-4, "stat mismatch {a} vs {b}");
+        }
+    }
+}

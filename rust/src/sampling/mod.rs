@@ -1,0 +1,207 @@
+//! Token sampling over logits (Layer-3 hot path — the decode loop calls
+//! this once per step per sequence).
+//!
+//! Greedy / temperature / top-k / top-p, plus a composable `SamplerSpec`.
+//! The PRNG is the same xorshift64* used everywhere else, so sampled
+//! generations are reproducible given a request seed.
+
+use crate::workload::rng::XorShift64Star;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerSpec {
+    Greedy,
+    /// temperature > 0; 1.0 = raw distribution
+    Temperature(f32),
+    /// top-k truncation then temperature
+    TopK { k: usize, temperature: f32 },
+    /// nucleus sampling then temperature
+    TopP { p: f32, temperature: f32 },
+}
+
+impl Default for SamplerSpec {
+    fn default() -> Self {
+        SamplerSpec::Greedy
+    }
+}
+
+pub struct Sampler {
+    pub spec: SamplerSpec,
+    rng: XorShift64Star,
+    /// scratch buffer reused across steps (no allocation in the hot loop)
+    scratch: Vec<(usize, f32)>,
+}
+
+impl Sampler {
+    pub fn new(spec: SamplerSpec, seed: u64) -> Self {
+        Sampler { spec, rng: XorShift64Star::new(seed), scratch: Vec::new() }
+    }
+
+    /// Pick the next token id from a logits slice.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        match self.spec {
+            SamplerSpec::Greedy => argmax(logits),
+            SamplerSpec::Temperature(t) => {
+                self.sample_truncated(logits, logits.len(), 1.0, t)
+            }
+            SamplerSpec::TopK { k, temperature } => {
+                self.sample_truncated(logits, k.max(1), 1.0, temperature)
+            }
+            SamplerSpec::TopP { p, temperature } => {
+                self.sample_truncated(logits, logits.len(), p, temperature)
+            }
+        }
+    }
+
+    fn sample_truncated(
+        &mut self,
+        logits: &[f32],
+        k: usize,
+        p: f32,
+        temperature: f32,
+    ) -> usize {
+        if temperature <= 1e-6 {
+            return argmax(logits);
+        }
+        let inv_t = 1.0 / temperature;
+        self.scratch.clear();
+        self.scratch
+            .extend(logits.iter().enumerate().map(|(i, &l)| (i, l)));
+        self.scratch.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let k = k.min(self.scratch.len());
+
+        // softmax over the temperature-scaled top-k, accumulating until
+        // the nucleus mass p is covered
+        let max_l = self.scratch[0].1;
+        let mut cum = 0.0f64;
+        let mut cut = k;
+        let mut weights = Vec::with_capacity(k);
+        let denom: f64 = self.scratch[..k]
+            .iter()
+            .map(|(_, l)| (((l - max_l) * inv_t) as f64).exp())
+            .sum();
+        for (j, (_, l)) in self.scratch[..k].iter().enumerate() {
+            let w = (((l - max_l) * inv_t) as f64).exp() / denom;
+            weights.push(w);
+            cum += w;
+            if cum >= p as f64 {
+                cut = j + 1;
+                break;
+            }
+        }
+        let total: f64 = weights[..cut].iter().sum();
+        let mut r = self.rng.unit_f64() * total;
+        for (j, w) in weights[..cut].iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return self.scratch[j].0;
+            }
+        }
+        self.scratch[cut - 1].0
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax value of one index (perplexity scoring).
+pub fn log_softmax_at(logits: &[f32], index: usize) -> f32 {
+    let max_l = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = logits
+        .iter()
+        .map(|&l| ((l - max_l) as f64).exp())
+        .sum::<f64>()
+        .ln()
+        + max_l as f64;
+    logits[index] as f64 as f32 - lse as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn greedy_deterministic() {
+        let mut s = Sampler::new(SamplerSpec::Greedy, 1);
+        let logits = vec![0.0, 3.0, 1.0];
+        for _ in 0..10 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn zero_temperature_degenerates_to_greedy() {
+        let mut s = Sampler::new(SamplerSpec::Temperature(0.0), 1);
+        assert_eq!(s.sample(&[0.0, 5.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s =
+            Sampler::new(SamplerSpec::TopK { k: 2, temperature: 1.0 }, 7);
+        let logits = vec![10.0, 9.5, -50.0, -60.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        // token 0 has ~all the mass; p=0.5 keeps only it
+        let mut s =
+            Sampler::new(SamplerSpec::TopP { p: 0.5, temperature: 1.0 }, 7);
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits), 0);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut s = Sampler::new(SamplerSpec::Temperature(1.0), 3);
+        let logits = vec![1.0, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..300 {
+            seen[s.sample(&logits)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "uniform logits reach all tokens");
+    }
+
+    #[test]
+    fn sampling_reproducible_by_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let run = |seed| {
+            let mut s =
+                Sampler::new(SamplerSpec::Temperature(0.8), seed);
+            (0..32).map(|_| s.sample(&logits)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3)
+            .map(|i| (log_softmax_at(&logits, i) as f64).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

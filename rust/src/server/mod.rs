@@ -1,0 +1,356 @@
+//! JSON-lines TCP server (substrate: tokio unavailable — std::net +
+//! threads; the PJRT engine is single-threaded by necessity, so handler
+//! threads only do admission + IO and the engine thread owns the device).
+//!
+//! Protocol (one JSON object per line):
+//!   {"op":"generate","prompt":"...","max_new_tokens":32,
+//!    "mode":"griffin","keep":0.5,"temperature":0.0,"seed":1}
+//!   {"op":"metrics"}
+//!   {"op":"config"}
+//!   {"op":"shutdown"}
+//!
+//! Responses mirror the request op; generate returns text/tokens/timings.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::{Engine, GenResponse, Mode};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::selection::Strategy;
+use crate::coordinator::sequence::{FinishReason, GenRequest};
+use crate::json::{self, n, obj, s, Value};
+use crate::sampling::SamplerSpec;
+use crate::tokenizer::Tokenizer;
+
+type Waiters = Arc<Mutex<HashMap<u64, Sender<GenResponse>>>>;
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Parse a generate request body into a GenRequest.
+pub fn parse_generate(v: &Value, tok: &Tokenizer) -> Result<GenRequest> {
+    let prompt_text =
+        v.get("prompt").and_then(Value::as_str).context("missing prompt")?;
+    let max_new = v
+        .get("max_new_tokens")
+        .and_then(Value::as_usize)
+        .unwrap_or(32);
+    let keep = v.get("keep").and_then(Value::as_f64).unwrap_or(0.5);
+    let seed = v
+        .get("seed")
+        .and_then(Value::as_i64)
+        .map(|x| x as u64)
+        .unwrap_or(0);
+    let mode = match v.get("mode").and_then(Value::as_str).unwrap_or("full") {
+        "full" => Mode::Full,
+        "griffin" => Mode::Griffin { keep, strategy: Strategy::TopK },
+        "griffin-sampling" => {
+            Mode::Griffin { keep, strategy: Strategy::Sampling { seed } }
+        }
+        "magnitude" => Mode::Magnitude { keep },
+        "wanda" => Mode::Wanda { keep },
+        other => anyhow::bail!("unknown mode {other:?}"),
+    };
+    let temperature = v
+        .get("temperature")
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0) as f32;
+    let sampler = if temperature <= 0.0 {
+        SamplerSpec::Greedy
+    } else if let Some(k) = v.get("top_k").and_then(Value::as_usize) {
+        SamplerSpec::TopK { k, temperature }
+    } else if let Some(p) = v.get("top_p").and_then(Value::as_f64) {
+        SamplerSpec::TopP { p: p as f32, temperature }
+    } else {
+        SamplerSpec::Temperature(temperature)
+    };
+    Ok(GenRequest {
+        id: 0,
+        prompt: tok.encode_with_bos(prompt_text),
+        max_new_tokens: max_new,
+        mode,
+        sampler,
+        seed,
+        stop_at_eos: true,
+    })
+}
+
+pub fn response_json(r: &GenResponse) -> Value {
+    obj(vec![
+        ("op", s("generate")),
+        ("id", n(r.id as f64)),
+        ("text", s(&r.text)),
+        (
+            "tokens",
+            Value::Arr(r.tokens.iter().map(|&t| n(t as f64)).collect()),
+        ),
+        (
+            "finish",
+            s(match r.finish {
+                FinishReason::Length => "length",
+                FinishReason::Eos => "eos",
+                FinishReason::ContextFull => "context_full",
+            }),
+        ),
+        (
+            "k_used",
+            r.k_used.map(|k| n(k as f64)).unwrap_or(Value::Null),
+        ),
+        (
+            "timing",
+            obj(vec![
+                ("prefill_ms", n(r.prefill_ms)),
+                ("select_ms", n(r.select_ms)),
+                ("decode_ms", n(r.decode_ms)),
+            ]),
+        ),
+    ])
+}
+
+fn err_json(msg: &str) -> String {
+    json::to_string(&obj(vec![("op", s("error")), ("message", s(msg))]))
+}
+
+/// Run the server. Blocks the calling thread with the ENGINE loop (PJRT
+/// state must stay on this thread); accept/handler threads do IO only.
+pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
+    let (handle, mut scheduler, waiters) =
+        start_listener(engine, bind, queue_capacity)?;
+    eprintln!("griffin server listening on {}", handle.addr);
+    let stop = handle.stop.clone();
+    scheduler.serve(
+        |resp: GenResponse| {
+            let tx = waiters.lock().unwrap().remove(&resp.id);
+            if let Some(tx) = tx {
+                let _ = tx.send(resp);
+            }
+        },
+        &|| stop.load(Ordering::SeqCst),
+    )?;
+    handle.shutdown();
+    Ok(())
+}
+
+/// Split construction so tests can drive the engine loop themselves.
+pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
+                      -> Result<(ServerHandle, Scheduler, Waiters)> {
+    let max_prompt = engine.config().max_seq;
+    let router = Arc::new(Router::new(queue_capacity, max_prompt));
+    let metrics = engine.metrics.clone();
+    let listener = TcpListener::bind(bind)
+        .with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+    let config_json = {
+        let c = engine.config();
+        json::to_string(&obj(vec![
+            ("op", s("config")),
+            ("model", s(&c.name)),
+            ("activation", s(&c.activation)),
+            ("params", n(c.param_count as f64)),
+            ("d_ff", n(c.d_ff as f64)),
+            ("max_seq", n(c.max_seq as f64)),
+        ]))
+    };
+
+    let accept_thread = {
+        let router = router.clone();
+        let stop = stop.clone();
+        let waiters = waiters.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let router = router.clone();
+                let stop = stop.clone();
+                let waiters = waiters.clone();
+                let metrics = metrics.clone();
+                let config_json = config_json.clone();
+                std::thread::spawn(move || {
+                    handle_conn(stream, router, waiters, metrics,
+                                config_json, stop);
+                });
+            }
+        })
+    };
+
+    let scheduler_router = router;
+    // engine scheduler runs on the CALLER's thread (PJRT not Send)
+    let scheduler = Scheduler::new(engine, scheduler_router);
+    Ok((
+        ServerHandle { addr, stop, accept_thread: Some(accept_thread) },
+        scheduler,
+        waiters,
+    ))
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Arc<Router>,
+    waiters: Waiters,
+    metrics: Arc<crate::metrics::MetricsRegistry>,
+    config_json: String,
+    stop: Arc<AtomicBool>,
+) {
+    let tok = Tokenizer::new();
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match json::parse(&line) {
+            Err(e) => err_json(&format!("bad json: {e}")),
+            Ok(v) => match v.get("op").and_then(Value::as_str) {
+                Some("generate") => match parse_generate(&v, &tok) {
+                    Err(e) => {
+                        metrics.requests_rejected.inc();
+                        err_json(&e.to_string())
+                    }
+                    Ok(mut req) => {
+                        req.id = router.fresh_id();
+                        let (tx, rx) = channel();
+                        waiters.lock().unwrap().insert(req.id, tx);
+                        let id = req.id;
+                        match router.admit(req) {
+                            Err(e) => {
+                                waiters.lock().unwrap().remove(&id);
+                                metrics.requests_rejected.inc();
+                                err_json(&e.to_string())
+                            }
+                            Ok(_) => {
+                                metrics.requests_admitted.inc();
+                                match rx.recv() {
+                                    Ok(resp) => json::to_string(
+                                        &response_json(&resp)),
+                                    Err(_) => err_json("engine dropped"),
+                                }
+                            }
+                        }
+                    }
+                },
+                Some("metrics") => json::to_string(&metrics.to_json()),
+                Some("config") => config_json.clone(),
+                Some("shutdown") => {
+                    stop.store(true, Ordering::SeqCst);
+                    json::to_string(&obj(vec![("op", s("shutdown"))]))
+                }
+                _ => err_json("unknown op"),
+            },
+        };
+        if writer.write_all(reply.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        let line = json::to_string(req);
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Ok(json::parse(buf.trim())
+            .map_err(|e| anyhow::anyhow!("bad server reply: {e}"))?)
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize, mode: &str)
+                    -> Result<Value> {
+        self.call(&obj(vec![
+            ("op", s("generate")),
+            ("prompt", s(prompt)),
+            ("max_new_tokens", n(max_new as f64)),
+            ("mode", s(mode)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_modes() {
+        let tok = Tokenizer::new();
+        let v = json::parse(
+            r#"{"op":"generate","prompt":"hi","mode":"griffin",
+                "keep":0.75,"max_new_tokens":8}"#,
+        )
+        .unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert_eq!(r.max_new_tokens, 8);
+        assert!(matches!(r.mode, Mode::Griffin { keep, .. }
+                         if (keep - 0.75).abs() < 1e-9));
+        assert_eq!(r.prompt.len(), 3); // BOS + 2 bytes
+
+        let bad = json::parse(r#"{"op":"generate","prompt":"x",
+                                  "mode":"nope"}"#).unwrap();
+        assert!(parse_generate(&bad, &tok).is_err());
+        let nop = json::parse(r#"{"op":"generate"}"#).unwrap();
+        assert!(parse_generate(&nop, &tok).is_err());
+    }
+
+    #[test]
+    fn parse_sampler_variants() {
+        let tok = Tokenizer::new();
+        let v = json::parse(
+            r#"{"prompt":"x","temperature":0.8,"top_k":5}"#).unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert!(matches!(r.sampler, SamplerSpec::TopK { k: 5, .. }));
+        let v = json::parse(
+            r#"{"prompt":"x","temperature":0.8,"top_p":0.9}"#).unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert!(matches!(r.sampler, SamplerSpec::TopP { .. }));
+        let v = json::parse(r#"{"prompt":"x"}"#).unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert_eq!(r.sampler, SamplerSpec::Greedy);
+    }
+}

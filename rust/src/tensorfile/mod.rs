@@ -1,0 +1,310 @@
+//! GWT1 tensor container reader/writer — rust side of the weights
+//! interchange format (python/compile/tensorfile.py documents the layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"GWT1";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+    fn from_code(c: u8) -> Result<Self> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            _ => bail!("unknown dtype code {c}"),
+        }
+    }
+}
+
+/// A host tensor: raw little-endian data + shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape, data }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is not f32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is not i32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+pub fn read<P: AsRef<Path>>(path: P) -> Result<TensorMap> {
+    let mut file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    parse(&buf)
+}
+
+pub fn parse(buf: &[u8]) -> Result<TensorMap> {
+    let mut r = Cursor { b: buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let n = r.u32()? as usize;
+    let mut metas = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let dtype = DType::from_code(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let offset = r.u64()? as usize;
+        let nbytes = r.u64()? as usize;
+        metas.push((name, dtype, shape, offset, nbytes));
+    }
+    let total = r.u64()? as usize;
+    let data_start = r.pos;
+    if data_start + total > buf.len() {
+        bail!(
+            "data section truncated: need {} bytes, have {}",
+            total,
+            buf.len() - data_start
+        );
+    }
+    let mut out = TensorMap::new();
+    for (name, dtype, shape, offset, nbytes) in metas {
+        let want = shape.iter().product::<usize>() * 4;
+        if want != nbytes {
+            bail!("{name}: shape {shape:?} implies {want} bytes, \
+                   header says {nbytes}");
+        }
+        let start = data_start + offset;
+        if start + nbytes > buf.len() {
+            bail!("{name}: data out of range");
+        }
+        out.insert(
+            name,
+            Tensor { dtype, shape, data: buf[start..start + nbytes].to_vec() },
+        );
+    }
+    Ok(out)
+}
+
+pub fn write<P: AsRef<Path>>(path: P, tensors: &TensorMap) -> Result<()> {
+    let bytes = serialize(tensors);
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn serialize(tensors: &TensorMap) -> Vec<u8> {
+    let mut header = Vec::new();
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    let mut offset = 0u64;
+    for (name, t) in tensors {
+        let raw = name.as_bytes();
+        header.extend_from_slice(&(raw.len() as u16).to_le_bytes());
+        header.extend_from_slice(raw);
+        header.push(t.dtype.code());
+        header.push(t.shape.len() as u8);
+        for d in &t.shape {
+            header.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        header.extend_from_slice(&offset.to_le_bytes());
+        header.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        offset += t.data.len() as u64;
+    }
+    header.extend_from_slice(&offset.to_le_bytes());
+    for t in tensors.values() {
+        header.extend_from_slice(&t.data);
+    }
+    header
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("unexpected eof at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::rng::XorShift64Star;
+
+    fn sample() -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("a".into(), Tensor::from_f32(vec![2, 3],
+                                              &[1., 2., 3., 4., 5., 6.]));
+        m.insert("b.idx".into(), Tensor::from_i32(vec![4], &[-1, 0, 7, 42]));
+        m.insert("empty".into(), Tensor::from_f32(vec![0], &[]));
+        m
+    }
+
+    #[test]
+    fn roundtrip_memory() {
+        let m = sample();
+        let bytes = serialize(&m);
+        let got = parse(&bytes).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("griffin_tf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let m = sample();
+        write(&path, &m).unwrap();
+        assert_eq!(read(&path).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = sample();
+        let mut bytes = serialize(&m);
+        bytes[0] = b'X'; // magic
+        assert!(parse(&bytes).is_err());
+
+        let bytes = serialize(&m);
+        assert!(parse(&bytes[..bytes.len() - 2]).is_err(), "truncated");
+    }
+
+    #[test]
+    fn f32_i32_accessors() {
+        let t = Tensor::from_f32(vec![3], &[1.5, -2.0, 0.0]);
+        assert_eq!(t.to_f32().unwrap(), vec![1.5, -2.0, 0.0]);
+        assert!(t.to_i32().is_err());
+    }
+
+    /// Property: random tensor maps survive serialize→parse.
+    #[test]
+    fn prop_roundtrip_generated() {
+        let mut rng = XorShift64Star::new(42);
+        for _ in 0..50 {
+            let mut m = TensorMap::new();
+            let n = rng.below(5) + 1;
+            for i in 0..n {
+                let ndim = rng.below(4);
+                let shape: Vec<usize> =
+                    (0..ndim).map(|_| rng.below(5) + 1).collect();
+                let count: usize = shape.iter().product();
+                if rng.below(2) == 0 {
+                    let vals: Vec<f32> = (0..count)
+                        .map(|_| rng.unit_f64() as f32 - 0.5)
+                        .collect();
+                    m.insert(format!("t{i}"),
+                             Tensor::from_f32(shape, &vals));
+                } else {
+                    let vals: Vec<i32> = (0..count)
+                        .map(|_| rng.below(100) as i32 - 50)
+                        .collect();
+                    m.insert(format!("t{i}"),
+                             Tensor::from_i32(shape, &vals));
+                }
+            }
+            let bytes = serialize(&m);
+            assert_eq!(parse(&bytes).unwrap(), m);
+        }
+    }
+
+    /// Cross-language: read a file written by python (if artifacts exist).
+    #[test]
+    fn reads_python_weights_if_present() {
+        let path = crate::test_support::artifact_path(
+            "tiny-swiglu/weights.bin");
+        if !path.exists() {
+            eprintln!("skipping: {path:?} missing (run make artifacts)");
+            return;
+        }
+        let m = read(&path).unwrap();
+        assert!(m.contains_key("tok_emb"));
+        assert!(m.contains_key("w1"));
+        let w1 = &m["w1"];
+        assert_eq!(w1.shape.len(), 3); // [L, F, D]
+        assert_eq!(w1.dtype, DType::F32);
+        let vals = w1.to_f32().unwrap();
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+}

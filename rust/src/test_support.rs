@@ -1,0 +1,36 @@
+//! Shared helpers for unit/integration tests and the experiment drivers.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serializes tests that create PJRT clients: concurrent client
+/// construction/destruction in the test harness's thread pool segfaults
+/// inside xla_extension. Hold the guard for the whole test body.
+pub fn pjrt_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Repository root (the directory containing Cargo.toml).
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Path inside artifacts/ (built by `make artifacts`).
+pub fn artifact_path(rel: &str) -> PathBuf {
+    repo_root().join("artifacts").join(rel)
+}
+
+/// Path inside results/ (created on demand).
+pub fn results_path(rel: &str) -> PathBuf {
+    let p = repo_root().join("results");
+    std::fs::create_dir_all(&p).ok();
+    p.join(rel)
+}
+
+/// True when a model's artifacts are available.
+pub fn have_artifacts(config: &str) -> bool {
+    artifact_path(&format!("{config}/manifest.json")).exists()
+}

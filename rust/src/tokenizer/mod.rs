@@ -1,0 +1,131 @@
+//! Byte-level tokenizer with BOS/EOS/PAD specials.
+//!
+//! Mirrors python/compile/configs.py: ids 0..255 are raw bytes, 256 = BOS,
+//! 257 = EOS, 258 = PAD; vocab size 259. encode∘decode == identity on
+//! arbitrary byte strings (property-tested), which is why the serving
+//! stack uses bytes rather than a learned vocabulary — no external
+//! tokenizer artifacts to ship.
+
+pub const VOCAB_SIZE: usize = 259;
+pub const BOS_ID: i32 = 256;
+pub const EOS_ID: i32 = 257;
+pub const PAD_ID: i32 = 258;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    /// Encode raw text to ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Encode with BOS prepended.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS_ID);
+        v.extend(text.as_bytes().iter().map(|&b| b as i32));
+        v
+    }
+
+    /// Decode ids back to text; specials are dropped, invalid UTF-8 is
+    /// replaced (generation may split multi-byte sequences mid-stream).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| (0..256).contains(&id))
+            .map(|&id| id as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode to raw bytes (lossless for ids < 256).
+    pub fn decode_bytes(&self, ids: &[i32]) -> Vec<u8> {
+        ids.iter()
+            .filter(|&&id| (0..256).contains(&id))
+            .map(|&id| id as u8)
+            .collect()
+    }
+
+    /// Right-pad (or truncate the FRONT of) a sequence to exactly `len`.
+    /// Keeping the suffix preserves the most recent context, matching how
+    /// serving stacks clamp over-long prompts.
+    pub fn fit(&self, ids: &[i32], len: usize) -> (Vec<i32>, usize) {
+        if ids.len() >= len {
+            (ids[ids.len() - len..].to_vec(), len)
+        } else {
+            let mut v = ids.to_vec();
+            let real = v.len();
+            v.resize(len, PAD_ID);
+            (v, real)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::rng::XorShift64Star;
+
+    #[test]
+    fn encode_decode_ascii() {
+        let t = Tokenizer::new();
+        let ids = t.encode("hello, world");
+        assert_eq!(ids.len(), 12);
+        assert_eq!(t.decode(&ids), "hello, world");
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let t = Tokenizer::new();
+        let ids = t.encode_with_bos("ab");
+        assert_eq!(ids, vec![BOS_ID, 97, 98]);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[BOS_ID, 104, 105, EOS_ID, PAD_ID]), "hi");
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bytes() {
+        let t = Tokenizer::new();
+        let mut rng = XorShift64Star::new(5);
+        for _ in 0..100 {
+            let n = rng.below(64);
+            let bytes: Vec<u8> =
+                (0..n).map(|_| rng.below(256) as u8).collect();
+            let ids: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
+            assert_eq!(t.decode_bytes(&ids), bytes);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_utf8_text() {
+        let t = Tokenizer::new();
+        for s in ["", "a", "héllo", "日本語テキスト", "mixed é 世界 ok"] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn fit_pads_and_truncates() {
+        let t = Tokenizer::new();
+        let (padded, real) = t.fit(&[1, 2, 3], 5);
+        assert_eq!(padded, vec![1, 2, 3, PAD_ID, PAD_ID]);
+        assert_eq!(real, 3);
+        let (cut, real) = t.fit(&[1, 2, 3, 4, 5, 6], 4);
+        assert_eq!(cut, vec![3, 4, 5, 6]); // keeps the suffix
+        assert_eq!(real, 4);
+    }
+}

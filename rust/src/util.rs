@@ -1,0 +1,116 @@
+//! Small shared helpers.
+
+use sha2::{Digest, Sha256};
+
+/// Hex-encoded SHA-256 of a byte slice (cross-language corpus pinning).
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    let out = h.finalize();
+    out.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Mean of an f64 slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Indices of the top-k values (descending), ties broken by lower index.
+///
+/// Perf (EXPERIMENTS.md §Perf): O(n + k log k) partition on
+/// order-preserving integer keys instead of a full float sort — selection
+/// over Llama-7B-scale statistics (32 x 11008) dropped 75.7 ms → 5.9 ms
+/// (12.8x), keeping the paper's "negligible selection overhead" claim true
+/// in the coordinator (vs seconds of prefill at that scale).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // Branchless integer keys: map f32 bits to an order-preserving u32
+    // (sign-flip trick; NaN treated as -inf), pack value-desc/index-asc
+    // into one u64 so partition + sort run on plain integer compares.
+    let order_bits = |v: f32| -> u32 {
+        let v = if v.is_nan() { f32::NEG_INFINITY } else { v };
+        let b = v.to_bits();
+        if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 }
+    };
+    let mut keys: Vec<u64> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            ((!order_bits(v) as u64) << 32) | (i as u32 as u64)
+        })
+        .collect();
+    if k < keys.len() {
+        keys.select_nth_unstable(k - 1);
+        keys.truncate(k);
+    }
+    keys.sort_unstable();
+    keys.into_iter().map(|key| (key & 0xFFFF_FFFF) as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(stddev(&[1.0, 1.0, 1.0]) < 1e-12);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.5);
+        assert_eq!(percentile(&[5.0], 99.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn top_k() {
+        let xs = [0.1f32, 0.9, 0.5, 0.9, 0.2];
+        assert_eq!(top_k_indices(&xs, 2), vec![1, 3]); // tie -> lower index
+        assert_eq!(top_k_indices(&xs, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&xs, 10).len(), 5);
+    }
+}

@@ -1,0 +1,148 @@
+//! tiny-lang corpus generator — bit-for-bit mirror of
+//! python/compile/corpus.py (same lexicon, same PRNG draws, same
+//! formatting). The pinned sha256 test guarantees the two stay in sync.
+
+use super::rng::XorShift64Star;
+
+pub const ADJECTIVES: [&str; 24] = [
+    "quiet", "deep", "old", "bright", "cold", "warm", "late", "early",
+    "small", "great", "dark", "pale", "swift", "slow", "young", "grey",
+    "green", "dry", "wet", "long", "short", "high", "low", "wide",
+];
+pub const NOUNS: [&str; 32] = [
+    "river", "lake", "mill", "forest", "meadow", "harbor", "tower",
+    "garden", "bridge", "valley", "market", "castle", "road", "field",
+    "village", "mountain", "island", "cliff", "shore", "cabin", "barn",
+    "orchard", "well", "gate", "wall", "path", "stream", "grove",
+    "hill", "pond", "quarry", "dock",
+];
+pub const VERBS: [&str; 16] = [
+    "joins", "feeds", "borders", "shadows", "guards", "faces", "follows",
+    "crosses", "circles", "meets", "holds", "shelters", "watches",
+    "touches", "skirts", "splits",
+];
+pub const TOPICS: [&str; 8] = [
+    "rivers", "hills", "towns", "coasts", "farms", "woods", "roads",
+    "stones",
+];
+
+pub const TOPIC_NOUN_COUNT: usize = 6;
+pub const TOPIC_ADJ_COUNT: usize = 5;
+pub const TOPIC_VERB_COUNT: usize = 5;
+
+pub struct Topic {
+    pub name: &'static str,
+    pub nouns: Vec<&'static str>,
+    pub adjs: Vec<&'static str>,
+    pub verbs: Vec<&'static str>,
+}
+
+pub fn doc_topic(rng: &mut XorShift64Star) -> Topic {
+    let name = *rng.choice(&TOPICS);
+    let nouns = (0..TOPIC_NOUN_COUNT).map(|_| *rng.choice(&NOUNS)).collect();
+    let adjs = (0..TOPIC_ADJ_COUNT).map(|_| *rng.choice(&ADJECTIVES)).collect();
+    let verbs = (0..TOPIC_VERB_COUNT).map(|_| *rng.choice(&VERBS)).collect();
+    Topic { name, nouns, adjs, verbs }
+}
+
+pub fn sentence(rng: &mut XorShift64Star, t: &Topic) -> String {
+    let a1 = rng.choice(&t.adjs);
+    let n1 = rng.choice(&t.nouns);
+    let v = rng.choice(&t.verbs);
+    let a2 = rng.choice(&t.adjs);
+    let n2 = rng.choice(&t.nouns);
+    format!("the {a1} {n1} {v} the {a2} {n2} .")
+}
+
+pub fn document(rng: &mut XorShift64Star, index: usize,
+                n_sentences: usize) -> String {
+    let topic = doc_topic(rng);
+    let body: Vec<String> =
+        (0..n_sentences).map(|_| sentence(rng, &topic)).collect();
+    let summary = format!(
+        "in short , the {} {} stands first .",
+        topic.adjs[0], topic.nouns[0]
+    );
+    format!(
+        "= doc {index} : {} =\n{}\n{summary}\n",
+        topic.name,
+        body.join(" ")
+    )
+}
+
+pub fn corpus(seed: u64, n_docs: usize, sentences_per_doc: usize) -> String {
+    let mut rng = XorShift64Star::new(seed);
+    let docs: Vec<String> = (0..n_docs)
+        .map(|i| document(&mut rng, i, sentences_per_doc))
+        .collect();
+    docs.join("\n")
+}
+
+/// The default corpus used by `make artifacts` (python writes
+/// artifacts/corpus.txt with the same parameters).
+pub fn default_corpus() -> String {
+    corpus(7, 96, 24)
+}
+
+/// Split the corpus into its documents (used by workload generators).
+pub fn split_documents(text: &str) -> Vec<&str> {
+    let mut docs = Vec::new();
+    let mut start = None;
+    for (pos, _) in text.match_indices("= doc ") {
+        if let Some(s) = start {
+            docs.push(text[s..pos].trim_end());
+        }
+        start = Some(pos);
+    }
+    if let Some(s) = start {
+        docs.push(text[s..].trim_end());
+    }
+    docs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_matches_python() {
+        let text = corpus(7, 2, 24);
+        assert!(text.starts_with(
+            "= doc 0 : roads =\nthe dry forest faces the small mill ."
+        ), "got prefix: {}", &text[..60]);
+    }
+
+    /// Cross-language pin: sha256(corpus(7, 96, 24)) must equal the value
+    /// asserted by python/tests/test_tensorfile_corpus.py.
+    #[test]
+    fn sha256_matches_python() {
+        let text = default_corpus();
+        let digest = crate::util::sha256_hex(text.as_bytes());
+        assert_eq!(
+            digest,
+            "40f430586d5510470c490a1af3e4bbf49e7ec39083c3248a5fda1f56747e69c7"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(corpus(7, 4, 24), corpus(7, 4, 24));
+        assert_ne!(corpus(7, 4, 24), corpus(8, 4, 24));
+    }
+
+    #[test]
+    fn split_documents_roundtrip() {
+        let text = corpus(7, 8, 24);
+        let docs = split_documents(&text);
+        assert_eq!(docs.len(), 8);
+        for (i, d) in docs.iter().enumerate() {
+            assert!(d.starts_with(&format!("= doc {i} ")));
+            assert!(d.contains("in short ,"));
+        }
+    }
+
+    #[test]
+    fn ascii_only() {
+        assert!(default_corpus().bytes().all(|b| b < 128));
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload generation: deterministic corpus, synthetic task suites, and
+//! request traces for the serving benchmarks.
+
+pub mod corpus;
+pub mod rng;
+pub mod tasks;
+pub mod trace;

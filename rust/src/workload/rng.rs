@@ -1,0 +1,127 @@
+//! xorshift64* PRNG — bit-for-bit mirror of python/compile/corpus.py.
+//!
+//! Both languages generate the *identical* corpus for the same seed
+//! (pinned-value tests on both sides), so rust evaluation workloads line
+//! up exactly with what the python trainer saw.
+
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        let s = if seed == 0 { 0x9E3779B97F4A7C15 } else { seed };
+        Self { state: s }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform integer in [0, n) via 64-bit multiply-shift (mirrors
+    /// python's `below`).
+    pub fn below(&mut self, n: usize) -> usize {
+        (((self.next_u64() >> 11) as u128 * n as u128) >> 53) as usize
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinned against python/tests/test_tensorfile_corpus.py — the two
+    /// implementations must never drift.
+    #[test]
+    fn matches_python_pinned_values() {
+        let mut r = XorShift64Star::new(7);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [
+                15130880334998875822,
+                17123930943180875438,
+                1648209070578717474,
+                1985375592982671918
+            ]
+        );
+        let mut r = XorShift64Star::new(12345);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [
+                10977518812293740004,
+                13893246733018840292,
+                1412386850724336324,
+                13578198927181985541
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let a = XorShift64Star::new(0).next_u64();
+        let b = XorShift64Star::new(0x9E3779B97F4A7C15).next_u64();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn below_in_range_property() {
+        let mut r = XorShift64Star::new(3);
+        for n in [1usize, 2, 7, 100, 12345] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn below_covers_small_ranges() {
+        let mut r = XorShift64Star::new(11);
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            seen[r.below(8)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "all residues reachable");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift64Star::new(5);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>(), "shuffled");
+    }
+
+    #[test]
+    fn unit_f64_in_range() {
+        let mut r = XorShift64Star::new(9);
+        for _ in 0..1000 {
+            let x = r.unit_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

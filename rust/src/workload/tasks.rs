@@ -1,0 +1,214 @@
+//! Synthetic task suites — same-metric analogues of the paper's
+//! evaluation datasets (DESIGN.md §2 Substitutions):
+//!
+//! * language modeling on held-out tiny-lang (↔ WikiText PPL, Figs 4/5)
+//! * summarization: predict a document's closing summary sentence
+//!   (↔ XSum/CNN-DM, ROUGE)
+//! * QA: "which <category> appears in doc?" with short answers
+//!   (↔ CoQA, F1/EM)
+//! * classification: multiple-choice next-sentence selection scored by
+//!   logprob (↔ HellaSwag/PIQA/COPA accuracy)
+//!
+//! All tasks are generated deterministically from held-out corpus seeds
+//! (seed ≠ 7 ⇒ never seen in training).
+
+use crate::tokenizer::Tokenizer;
+use crate::workload::corpus::{self, Topic};
+use crate::workload::rng::XorShift64Star;
+
+/// Held-out generation seed space (training corpus used seed 7).
+pub const HELDOUT_SEED: u64 = 1001;
+
+#[derive(Debug, Clone)]
+pub struct SummarizationSample {
+    /// document body (prompt)
+    pub prompt: String,
+    /// target summary sentence
+    pub reference: String,
+}
+
+/// Summarization: the model saw `... <body> \n in short , the <adj>
+/// <noun> stands first .` during training; the prompt ends right after
+/// "\n" and the reference is the summary line.
+pub fn summarization(seed: u64, n: usize, sentences: usize)
+                     -> Vec<SummarizationSample> {
+    let mut rng = XorShift64Star::new(seed);
+    (0..n)
+        .map(|i| {
+            let doc = corpus::document(&mut rng, i, sentences);
+            // split at the summary line
+            let cut = doc.rfind("in short ,").expect("summary line");
+            SummarizationSample {
+                prompt: doc[..cut].to_string(),
+                reference: doc[cut..].trim().to_string(),
+            }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct QaSample {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// QA: ask for the document's topic-opening subject. The training corpus
+/// always formats the summary as "the <adj0> <noun0> stands first", so the
+/// answer is recoverable from the document body.
+pub fn qa(seed: u64, n: usize, sentences: usize) -> Vec<QaSample> {
+    let mut rng = XorShift64Star::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = corpus::doc_topic(&mut rng);
+            let body: Vec<String> = (0..sentences)
+                .map(|_| corpus::sentence(&mut rng, &topic))
+                .collect();
+            let answer = format!("the {} {}", topic.adjs[0], topic.nouns[0]);
+            let prompt = format!(
+                "= doc {i} : {} =\n{}\nin short , the",
+                topic.name,
+                body.join(" ")
+            );
+            QaSample { prompt, answer }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassificationSample {
+    /// shared context
+    pub context: String,
+    /// candidate continuations; `label` indexes the correct one
+    pub choices: Vec<String>,
+    pub label: usize,
+}
+
+/// Multiple-choice: given a document prefix, pick the sentence that uses
+/// the document's own topic lexicon over distractors drawn from other
+/// topics (the model should assign it higher likelihood).
+pub fn classification(seed: u64, n: usize, n_choices: usize,
+                      sentences: usize) -> Vec<ClassificationSample> {
+    let mut rng = XorShift64Star::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = corpus::doc_topic(&mut rng);
+            let body: Vec<String> = (0..sentences)
+                .map(|_| corpus::sentence(&mut rng, &topic))
+                .collect();
+            let correct = corpus::sentence(&mut rng, &topic);
+            let mut choices = vec![correct];
+            for _ in 1..n_choices {
+                // distractors use a lexicon disjoint from the context
+                // topic, so an in-context model can separate them
+                let mut other: Topic = corpus::doc_topic(&mut rng);
+                other.nouns.retain(|w| !topic.nouns.contains(w));
+                other.adjs.retain(|w| !topic.adjs.contains(w));
+                while other.nouns.len() < corpus::TOPIC_NOUN_COUNT {
+                    let w = rng.choice(&corpus::NOUNS);
+                    if !topic.nouns.contains(w) {
+                        other.nouns.push(w);
+                    }
+                }
+                while other.adjs.len() < corpus::TOPIC_ADJ_COUNT {
+                    let w = rng.choice(&corpus::ADJECTIVES);
+                    if !topic.adjs.contains(w) {
+                        other.adjs.push(w);
+                    }
+                }
+                choices.push(corpus::sentence(&mut rng, &other));
+            }
+            // deterministic shuffle of the label position
+            let label = rng.below(n_choices);
+            choices.swap(0, label);
+            ClassificationSample {
+                context: format!(
+                    "= doc {i} : {} =\n{}",
+                    topic.name,
+                    body.join(" ")
+                ),
+                choices,
+                label,
+            }
+        })
+        .collect()
+}
+
+/// Token windows of held-out text for language-modeling PPL (prompt part
+/// P + continuation part G, paper Fig. 5 setup).
+pub fn lm_windows(seed: u64, n: usize, window: usize)
+                  -> Vec<Vec<i32>> {
+    let text = corpus::corpus(seed, (n * window) / 600 + 4, 24);
+    let tok = Tokenizer::new();
+    let ids = tok.encode(&text);
+    (0..n)
+        .map(|i| {
+            let start = (i * 131) % (ids.len().saturating_sub(window + 1));
+            ids[start..start + window].to_vec()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarization_has_targets() {
+        let s = summarization(HELDOUT_SEED, 8, 12);
+        assert_eq!(s.len(), 8);
+        for x in &s {
+            assert!(x.reference.starts_with("in short ,"), "{}", x.reference);
+            assert!(!x.prompt.contains("in short ,"));
+            assert!(x.prompt.len() > 100);
+        }
+    }
+
+    #[test]
+    fn qa_answers_follow_prompt_format() {
+        let s = qa(HELDOUT_SEED, 8, 10);
+        for x in &s {
+            assert!(x.prompt.ends_with("in short , the"));
+            assert!(x.answer.starts_with("the "));
+            assert_eq!(x.answer.split_whitespace().count(), 3);
+        }
+    }
+
+    #[test]
+    fn classification_labels_in_range() {
+        let s = classification(HELDOUT_SEED, 16, 4, 8);
+        for x in &s {
+            assert_eq!(x.choices.len(), 4);
+            assert!(x.label < 4);
+            assert!(!x.context.is_empty());
+        }
+        // labels are not all identical (shuffled)
+        let labels: std::collections::BTreeSet<_> =
+            s.iter().map(|x| x.label).collect();
+        assert!(labels.len() > 1);
+    }
+
+    #[test]
+    fn tasks_are_deterministic() {
+        let a = summarization(5, 3, 8);
+        let b = summarization(5, 3, 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+        }
+    }
+
+    #[test]
+    fn lm_windows_sized() {
+        let w = lm_windows(HELDOUT_SEED, 6, 96);
+        assert_eq!(w.len(), 6);
+        assert!(w.iter().all(|x| x.len() == 96));
+    }
+
+    #[test]
+    fn heldout_differs_from_training_corpus() {
+        let train = corpus::corpus(7, 2, 24);
+        let heldout = corpus::corpus(HELDOUT_SEED, 2, 24);
+        assert_ne!(train, heldout);
+    }
+}

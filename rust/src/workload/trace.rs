@@ -1,0 +1,115 @@
+//! Request-trace generator for the serving benchmarks: arrival times,
+//! prompt/generation length distributions (the synthetic "identical
+//! lengths" setup of the paper's Table 3, plus mixed traces for the
+//! end-to-end example).
+
+use crate::tokenizer::Tokenizer;
+use crate::workload::corpus;
+use crate::workload::rng::XorShift64Star;
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// offset from trace start, milliseconds
+    pub arrival_ms: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// fixed prompt length (paper Table 3 style) or max for mixed traces
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// mean inter-arrival gap; 0 = all at t=0 (closed-loop)
+    pub mean_gap_ms: u64,
+    /// when true, prompt/gen lengths vary uniformly in [len/2, len]
+    pub mixed_lengths: bool,
+}
+
+/// Cut prompts out of held-out corpus text so the trained model sees
+/// in-distribution input.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceRequest> {
+    let mut rng = XorShift64Star::new(spec.seed);
+    let text = corpus::corpus(
+        spec.seed + 500,
+        (spec.n_requests * spec.prompt_len) / 600 + 4,
+        24,
+    );
+    let tok = Tokenizer::new();
+    let ids = tok.encode(&text);
+    let mut t = 0u64;
+    (0..spec.n_requests)
+        .map(|_| {
+            let plen = if spec.mixed_lengths {
+                spec.prompt_len / 2 + rng.below(spec.prompt_len / 2 + 1)
+            } else {
+                spec.prompt_len
+            };
+            let glen = if spec.mixed_lengths {
+                spec.gen_len / 2 + rng.below(spec.gen_len / 2 + 1)
+            } else {
+                spec.gen_len
+            };
+            let start = rng.below(ids.len().saturating_sub(plen + 1));
+            let req = TraceRequest {
+                arrival_ms: t,
+                prompt: ids[start..start + plen].to_vec(),
+                max_new_tokens: glen.max(1),
+            };
+            if spec.mean_gap_ms > 0 {
+                // geometric-ish gap
+                t += rng.below(2 * spec.mean_gap_ms as usize + 1) as u64;
+            }
+            req
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        TraceSpec {
+            seed: 3,
+            n_requests: 10,
+            prompt_len: 64,
+            gen_len: 16,
+            mean_gap_ms: 0,
+            mixed_lengths: false,
+        }
+    }
+
+    #[test]
+    fn fixed_lengths() {
+        let t = generate(&spec());
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|r| r.prompt.len() == 64));
+        assert!(t.iter().all(|r| r.max_new_tokens == 16));
+        assert!(t.iter().all(|r| r.arrival_ms == 0));
+    }
+
+    #[test]
+    fn mixed_lengths_vary_within_bounds() {
+        let mut s = spec();
+        s.mixed_lengths = true;
+        s.mean_gap_ms = 5;
+        let t = generate(&s);
+        assert!(t.iter().all(|r| (32..=64).contains(&r.prompt.len())));
+        assert!(t.iter().all(|r| (8..=16).contains(&r.max_new_tokens)));
+        // arrivals are non-decreasing
+        assert!(t.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&spec());
+        let b = generate(&spec());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}
