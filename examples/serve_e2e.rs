@@ -2,7 +2,10 @@
 //! starts the TCP server, replays a request trace from concurrent client
 //! threads against the GRIFFIN engine, and reports latency/throughput —
 //! proving all layers compose: JSON protocol → router/backpressure →
-//! wave scheduler → prefill/select/gather/decode over PJRT.
+//! continuous-batching slot scheduler → prefill/select/gather/decode
+//! over PJRT. Half the clients use the streaming protocol, so
+//! time-to-first-token is measured both client-side (first token line on
+//! the wire) and engine-side (the ttft histogram).
 //!
 //!     cargo run --release --example serve_e2e [model] [n_requests]
 //!
@@ -52,14 +55,18 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let mut client_threads = Vec::new();
     let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let ttfts = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
     let tokens_out = Arc::new(AtomicUsize::new(0));
-    // 4 concurrent client connections, each sending its slice of the trace
+    // 4 concurrent client connections, each sending its slice of the
+    // trace; even-numbered connections use the streaming protocol
     for (ci, chunk) in reqs.chunks(n_requests.div_ceil(4)).enumerate() {
         let addr = addr.clone();
         let chunk: Vec<trace::TraceRequest> = chunk.to_vec();
         let done = done.clone();
         let latencies = latencies.clone();
+        let ttfts = ttfts.clone();
         let tokens_out = tokens_out.clone();
+        let streaming = ci % 2 == 0;
         client_threads.push(std::thread::spawn(move || {
             let tok = griffin::tokenizer::Tokenizer::new();
             let mut client =
@@ -69,21 +76,46 @@ fn main() -> anyhow::Result<()> {
                     if (ci + i) % 2 == 0 { "griffin" } else { "full" };
                 let prompt_text = tok.decode(&r.prompt);
                 let t = Instant::now();
-                let resp = client
-                    .call(&obj(vec![
-                        ("op", s("generate")),
-                        ("prompt", s(&prompt_text)),
-                        ("max_new_tokens", n(r.max_new_tokens as f64)),
-                        ("mode", s(mode)),
-                    ]))
-                    .unwrap();
+                let resp = if streaming {
+                    let mut first_token_ms = None;
+                    let mut n_tokens = 0usize;
+                    let resp = client
+                        .generate_stream(
+                            &prompt_text,
+                            r.max_new_tokens,
+                            mode,
+                            |_tok_event| {
+                                if first_token_ms.is_none() {
+                                    first_token_ms = Some(
+                                        t.elapsed().as_secs_f64() * 1e3);
+                                }
+                                n_tokens += 1;
+                            },
+                        )
+                        .unwrap();
+                    if let Some(ms) = first_token_ms {
+                        ttfts.lock().unwrap().push(ms);
+                    }
+                    tokens_out.fetch_add(n_tokens, Ordering::Relaxed);
+                    resp
+                } else {
+                    let resp = client
+                        .call(&obj(vec![
+                            ("op", s("generate")),
+                            ("prompt", s(&prompt_text)),
+                            ("max_new_tokens", n(r.max_new_tokens as f64)),
+                            ("mode", s(mode)),
+                        ]))
+                        .unwrap();
+                    if let Some(Value::Arr(toks)) =
+                        resp.get("tokens").cloned()
+                    {
+                        tokens_out.fetch_add(toks.len(), Ordering::Relaxed);
+                    }
+                    resp
+                };
                 let dt = t.elapsed().as_secs_f64() * 1e3;
                 latencies.lock().unwrap().push(dt);
-                if let Some(Value::Arr(toks)) =
-                    resp.get("tokens").cloned()
-                {
-                    tokens_out.fetch_add(toks.len(), Ordering::Relaxed);
-                }
                 assert_eq!(
                     resp.get("op").and_then(Value::as_str),
                     Some("generate"),
@@ -99,12 +131,7 @@ fn main() -> anyhow::Result<()> {
         let waiters = waiters.clone();
         let done = done.clone();
         scheduler.serve(
-            move |resp| {
-                let tx = waiters.lock().unwrap().remove(&resp.id);
-                if let Some(tx) = tx {
-                    let _ = tx.send(resp);
-                }
-            },
+            move |ev| griffin::server::forward(&waiters, ev),
             &move || done.load(Ordering::Relaxed) >= n_requests,
         )?;
     }
@@ -115,6 +142,7 @@ fn main() -> anyhow::Result<()> {
     handle.shutdown();
 
     let lat = latencies.lock().unwrap().clone();
+    let ttft = ttfts.lock().unwrap().clone();
     let toks = tokens_out.load(Ordering::Relaxed);
     println!("\n=== end-to-end serving report ===");
     println!("requests      : {n_requests} ({} ok)", lat.len());
@@ -124,12 +152,25 @@ fn main() -> anyhow::Result<()> {
     println!("latency p50   : {:.0} ms", percentile(&lat, 50.0));
     println!("latency p90   : {:.0} ms", percentile(&lat, 90.0));
     println!("latency p99   : {:.0} ms", percentile(&lat, 99.0));
+    if !ttft.is_empty() {
+        println!("client TTFT p50: {:.0} ms ({} streamed)",
+                 percentile(&ttft, 50.0), ttft.len());
+    }
+    let snap = metrics.ttft.snapshot();
+    println!("engine TTFT p50: {:.0} ms (count {})",
+             snap.p50_us / 1e3, snap.count);
+    let snap = metrics.inter_token_latency.snapshot();
+    println!("inter-token p50: {:.2} ms (count {})",
+             snap.p50_us / 1e3, snap.count);
     let snap = metrics.prefill_latency.snapshot();
     println!("prefill p50   : {:.0} ms (count {})",
              snap.p50_us / 1e3, snap.count);
     let snap = metrics.decode_step_latency.snapshot();
     println!("decode-step p50: {:.2} ms (count {})",
              snap.p50_us / 1e3, snap.count);
+    let occ = metrics.slot_occupancy.snapshot();
+    println!("slot occupancy: mean {:.2} of {} (over {} ticks)",
+             occ.mean_us, metrics.slots_total.get(), occ.count);
 
     // machine-readable record for EXPERIMENTS.md
     let report = obj(vec![
@@ -140,6 +181,16 @@ fn main() -> anyhow::Result<()> {
         ("gen_tok_per_s", n(toks as f64 / wall)),
         ("latency_p50_ms", n(percentile(&lat, 50.0))),
         ("latency_p90_ms", n(percentile(&lat, 90.0))),
+        (
+            "client_ttft_p50_ms",
+            if ttft.is_empty() {
+                Value::Null
+            } else {
+                n(percentile(&ttft, 50.0))
+            },
+        ),
+        ("engine_ttft_p50_us", n(metrics.ttft.snapshot().p50_us)),
+        ("slot_occupancy_mean", n(occ.mean_us)),
     ]);
     let path = griffin::test_support::results_path(
         &format!("e2e_serving_{model}.json"));

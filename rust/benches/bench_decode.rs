@@ -123,6 +123,7 @@ fn main() {
             sampler: griffin::sampling::SamplerSpec::Greedy,
             seed: 1,
             stop_at_eos: false,
+            admitted_at: std::time::Instant::now(),
         };
         rep.add(bench_for(
             &format!("e2e_p{p}_g{g}_{label}"),

@@ -1,5 +1,17 @@
 //! Bench: serving throughput under batching (extends Table 3 to the
-//! coordinator level — batch-bucket scaling and queue behavior).
+//! coordinator level — batch-bucket scaling, plus the wave-vs-continuous
+//! comparison on a mixed-length workload).
+//!
+//! Two sections:
+//!   * bucket scaling (`wave_b{b}_*`): run-to-completion batches through
+//!     `Engine::generate_batch` at each compiled batch bucket — this is
+//!     the only path that actually exercises `decode_b{b}` for b < bmax;
+//!     the continuous scheduler always decodes at the largest bucket.
+//!   * mixed lengths (`wave_mixed_*` vs `cont_mixed_*`): half the
+//!     requests want 4 tokens, half want 32. The wave baseline holds
+//!     every short sequence hostage until the straggler finishes; the
+//!     slot scheduler retires short sequences immediately and back-fills
+//!     their slots from the queue, so aggregate tokens/sec goes up.
 //!
 //! Run: cargo bench --bench bench_serving [-- <model>]
 
@@ -13,6 +25,21 @@ use griffin::coordinator::sequence::GenRequest;
 use griffin::test_support::{artifact_path, have_artifacts};
 use griffin::workload::trace;
 
+const SHORT_G: usize = 4;
+const LONG_G: usize = 32;
+
+fn mixed_reqs(reqs: &[trace::TraceRequest], mode: Mode) -> Vec<GenRequest> {
+    reqs.iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let g = if i % 2 == 0 { SHORT_G } else { LONG_G };
+            let mut q = GenRequest::greedy(0, r.prompt.clone(), g, mode);
+            q.stop_at_eos = false;
+            q
+        })
+        .collect()
+}
+
 fn main() {
     let model = std::env::args()
         .skip(1)
@@ -22,18 +49,20 @@ fn main() {
         eprintln!("skipping bench: artifacts for {model} missing");
         return;
     }
-    let engine = Engine::load(&artifact_path(&model), false).unwrap();
+    let mut engine = Engine::load(&artifact_path(&model), false).unwrap();
     let cfg = engine.config().clone();
-    println!("bench_serving on {model}");
+    let bmax = cfg.batch_buckets.iter().copied().max().unwrap_or(1);
+    println!("bench_serving on {model} (slot pool = {bmax})");
     let mut rep = Reporter::new(&format!("bench_serving_{model}.csv"));
 
-    let router = Arc::new(Router::new(256, cfg.max_seq));
-    let mut sched = Scheduler::new(engine, router.clone());
-
+    // ------------------------------------------------------------------
+    // scenario 1: uniform-length bucket scaling (Table 3 style) through
+    // run-to-completion waves — exercises decode_b{b} at every bucket
+    // ------------------------------------------------------------------
     let g = 16usize;
     for &b in &cfg.batch_buckets {
         for mode in [Mode::Full, Mode::griffin(0.5)] {
-            let reqs = trace::generate(&trace::TraceSpec {
+            let traced = trace::generate(&trace::TraceSpec {
                 seed: 7,
                 n_requests: b,
                 prompt_len: cfg.prefill_buckets[0],
@@ -41,25 +70,25 @@ fn main() {
                 mean_gap_ms: 0,
                 mixed_lengths: false,
             });
-            // warmup (compilation)
-            for r in &reqs {
-                router
-                    .admit(GenRequest::greedy(0, r.prompt.clone(), 2, mode))
-                    .unwrap();
-            }
-            sched.run_until_idle().unwrap();
+            let mk = |max_new: usize| -> Vec<GenRequest> {
+                traced
+                    .iter()
+                    .map(|r| {
+                        let mut q = GenRequest::greedy(
+                            0, r.prompt.clone(), max_new, mode);
+                        q.stop_at_eos = false;
+                        q
+                    })
+                    .collect()
+            };
+            // warmup (compilation of this bucket's executables)
+            engine.generate_batch(&mk(2)).unwrap();
 
             let mut samples = Vec::new();
-            let iters = 3;
-            for _ in 0..iters {
-                for r in &reqs {
-                    let mut q =
-                        GenRequest::greedy(0, r.prompt.clone(), g, mode);
-                    q.stop_at_eos = false;
-                    router.admit(q).unwrap();
-                }
+            for _ in 0..3 {
+                let reqs = mk(g);
                 let t = std::time::Instant::now();
-                let responses = sched.run_until_idle().unwrap();
+                let responses = engine.generate_batch(&reqs).unwrap();
                 let dt = t.elapsed().as_secs_f64();
                 assert_eq!(responses.len(), b);
                 let tokens: usize =
@@ -76,6 +105,82 @@ fn main() {
                 &samples,
             ));
         }
+    }
+
+    // ------------------------------------------------------------------
+    // scenario 2: mixed-length workload — wave baseline
+    // ------------------------------------------------------------------
+    let base_trace = trace::generate(&trace::TraceSpec {
+        seed: 11,
+        n_requests: 2 * bmax,
+        prompt_len: cfg.prefill_buckets[0],
+        gen_len: LONG_G,
+        mean_gap_ms: 0,
+        mixed_lengths: false,
+    });
+    let mut wave_tps = std::collections::BTreeMap::new();
+    for mode in [Mode::Full, Mode::griffin(0.5)] {
+        let mut samples = Vec::new();
+        let mut tps = 0.0;
+        for _ in 0..3 {
+            let reqs = mixed_reqs(&base_trace, mode);
+            let t = std::time::Instant::now();
+            let mut tokens = 0usize;
+            for chunk in reqs.chunks(bmax) {
+                let responses = engine.generate_batch(chunk).unwrap();
+                tokens +=
+                    responses.iter().map(|r| r.tokens.len()).sum::<usize>();
+            }
+            let dt = t.elapsed().as_secs_f64();
+            tps = tokens as f64 / dt;
+            samples.push(dt * 1e3);
+            println!("  wave_mixed {}: {:.1} tok/s", mode.label(), tps);
+        }
+        wave_tps.insert(mode.label(), tps);
+        rep.add(summarize(&format!("wave_mixed_{}", mode.label()),
+                          &samples));
+    }
+
+    // ------------------------------------------------------------------
+    // scenario 2 continued: same mixed-length workload through the
+    // continuous-batching scheduler (owns the engine from here on)
+    // ------------------------------------------------------------------
+    let router = Arc::new(Router::new(256, cfg.max_seq));
+    let mut sched = Scheduler::new(engine, router.clone());
+    for mode in [Mode::Full, Mode::griffin(0.5)] {
+        // warmup: one untimed pass compiles the smaller prefill buckets
+        // that back-fill admissions hit
+        for q in mixed_reqs(&base_trace, mode) {
+            router.admit(q).unwrap();
+        }
+        sched.run_until_idle().unwrap();
+
+        let mut samples = Vec::new();
+        let mut tps = 0.0;
+        for _ in 0..3 {
+            for q in mixed_reqs(&base_trace, mode) {
+                router.admit(q).unwrap();
+            }
+            let t = std::time::Instant::now();
+            let responses = sched.run_until_idle().unwrap();
+            let dt = t.elapsed().as_secs_f64();
+            assert_eq!(responses.len(), 2 * bmax);
+            let tokens: usize =
+                responses.iter().map(|r| r.tokens.len()).sum();
+            tps = tokens as f64 / dt;
+            samples.push(dt * 1e3);
+            println!("  cont_mixed {}: {:.1} tok/s", mode.label(), tps);
+        }
+        let wave = wave_tps.get(&mode.label()).copied().unwrap_or(0.0);
+        if wave > 0.0 {
+            println!(
+                "  => continuous vs wave ({}): {:.2}x tokens/sec",
+                mode.label(),
+                tps / wave
+            );
+        }
+        rep.add(summarize(&format!("cont_mixed_{}", mode.label()),
+                          &samples));
     }
     rep.finish();
 }

@@ -93,6 +93,7 @@ pub struct PrefillOut {
     pub lengths: Vec<usize>,
 }
 
+#[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
     pub tokens: Vec<i32>,
@@ -103,6 +104,8 @@ pub struct GenResponse {
     pub prefill_ms: f64,
     pub select_ms: f64,
     pub decode_ms: f64,
+    /// time-to-first-token (admission → first emitted token)
+    pub ttft_ms: f64,
     pub tokens_per_sec: f64,
 }
 
@@ -461,6 +464,86 @@ impl Engine {
         Ok(logits)
     }
 
+    // ------------------------------------------------------------------
+    // slot-state management (continuous batching; scheduler.rs)
+    // ------------------------------------------------------------------
+
+    /// KV-cache shape of the compiled decode executable for `batch`
+    /// ([L, B, H, Smax, dh] — aot.py cache_spec).
+    pub fn decode_cache_shape(&self, batch: usize) -> Result<Vec<usize>> {
+        let name = format!("decode_b{batch}");
+        let spec = self
+            .session
+            .manifest
+            .executables
+            .get(&name)
+            .with_context(|| format!("no decode executable for b={batch}"))?;
+        spec.inputs
+            .iter()
+            .find(|io| io.name == "kcache")
+            .map(|io| io.shape.clone())
+            .with_context(|| format!("{name}: no kcache input"))
+    }
+
+    /// Allocate an empty persistent decode state for a slot pool of
+    /// `batch` slots (zeroed KV cache, all positions 0).
+    pub fn new_decode_state(&self, batch: usize) -> Result<DecodeState> {
+        let shape = self.decode_cache_shape(batch)?;
+        let zeros = vec![0f32; shape.iter().product()];
+        Ok(DecodeState {
+            kcache: self.session.upload_f32(&shape, &zeros)?,
+            vcache: self.session.upload_f32(&shape, &zeros)?,
+            pos: vec![0; batch],
+            batch,
+        })
+    }
+
+    /// Copy freshly prefilled sequences into slots of a persistent decode
+    /// state: for each `(src_row, dst_slot)` pair the whole KV row
+    /// [L, :, H, Smax, dh] and the write position move from `src` to
+    /// `dst`. Host-staged (PJRT CPU exposes no device-side slice update
+    /// across differently-batched executables); fine at our model sizes —
+    /// admission is already dominated by the prefill itself.
+    pub fn splice_slots(&self, dst: &mut DecodeState, src: &DecodeState,
+                        pairs: &[(usize, usize)]) -> Result<()> {
+        let t = Timer::start();
+        let ds = dst.kcache.shape.clone();
+        let ss = src.kcache.shape.clone();
+        if ds.len() != 5 || ss.len() != 5 {
+            bail!("splice_slots: expected [L,B,H,S,dh] caches");
+        }
+        if ds[0] != ss[0] || ds[2..] != ss[2..] {
+            bail!("splice_slots: incompatible cache shapes {ds:?} vs {ss:?}");
+        }
+        let (layers, db, sb) = (ds[0], ds[1], ss[1]);
+        let row: usize = ds[2..].iter().product();
+        for &(si, di) in pairs {
+            if si >= sb || di >= db {
+                bail!("splice_slots: pair ({si},{di}) out of range \
+                       (src b={sb}, dst b={db})");
+            }
+        }
+        let mut dk = dst.kcache.to_f32()?;
+        let mut dv = dst.vcache.to_f32()?;
+        let sk = src.kcache.to_f32()?;
+        let sv = src.vcache.to_f32()?;
+        for l in 0..layers {
+            for &(si, di) in pairs {
+                let s0 = (l * sb + si) * row;
+                let d0 = (l * db + di) * row;
+                dk[d0..d0 + row].copy_from_slice(&sk[s0..s0 + row]);
+                dv[d0..d0 + row].copy_from_slice(&sv[s0..s0 + row]);
+            }
+        }
+        dst.kcache = self.session.upload_f32(&ds, &dk)?;
+        dst.vcache = self.session.upload_f32(&ds, &dv)?;
+        for &(si, di) in pairs {
+            dst.pos[di] = src.pos[si];
+        }
+        t.record_into(&self.metrics.kv_splice_latency);
+        Ok(())
+    }
+
     /// Full request: prompt → (select → gather) → generation (paper Fig 3).
     pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
         let e2e = Timer::start();
@@ -544,9 +627,14 @@ impl Engine {
         let mut out_tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
         let mut out_lps: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut finish = vec![FinishReason::Length; n];
+        let mut ttft_ms = vec![0f64; n];
         for i in 0..n {
             let t = samplers[i].sample(&pre.last_logits[i]) as i32;
             let lp = log_softmax_at(&pre.last_logits[i], t as usize);
+            // first emitted token: TTFT from admission, like the slot
+            // scheduler measures it
+            ttft_ms[i] =
+                reqs[i].admitted_at.elapsed().as_secs_f64() * 1e3;
             cur[i] = t;
             out_tokens[i].push(t);
             out_lps[i].push(lp);
@@ -615,6 +703,7 @@ impl Engine {
                 prefill_ms,
                 select_ms,
                 decode_ms,
+                ttft_ms: ttft_ms[i],
                 tokens_per_sec: total_new as f64
                     / (decode_ms / 1e3).max(1e-9),
             })
@@ -655,6 +744,7 @@ impl Engine {
 
         let dec_t = Timer::start();
         let first = crate::sampling::argmax(&pre.last_logits[0]) as i32;
+        let ttft_ms = req.admitted_at.elapsed().as_secs_f64() * 1e3;
         let tok_dev = self.session.upload_i32(&[1], &[first])?;
         let pos_dev = self.session.upload_i32(&[1], &pre.state.pos)?;
         let mut args: Vec<&DeviceTensor> = Vec::new();
@@ -708,6 +798,7 @@ impl Engine {
             prefill_ms,
             select_ms,
             decode_ms,
+            ttft_ms,
             tokens_per_sec: 0.0,
         })
     }
@@ -790,8 +881,10 @@ impl Engine {
 
 /// RMS-combine per-sequence norm stacks (Wanda batch aggregation):
 /// norms are l2 over tokens, so the batch aggregate is the l2 over the
-/// concatenated token axis = sqrt(sum of squares).
-fn aggregate_norms(per_seq: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+/// concatenated token axis = sqrt(sum of squares). Public because the
+/// continuous-batching scheduler re-aggregates over occupied slots
+/// whenever slot membership changes.
+pub fn aggregate_norms(per_seq: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
     let l_n = per_seq[0].len();
     let width = per_seq[0][0].len();
     let mut out = vec![vec![0f32; width]; l_n];

@@ -2,8 +2,9 @@
 //!
 //! - `selection`  — GRIFFIN expert selection + baselines (§4.2, Tables 4-5)
 //! - `sequence`   — request/sequence state machine
-//! - `router`     — admission, backpressure
-//! - `scheduler`  — wave batching over compiled buckets
+//! - `router`     — admission control, backpressure, condvar wakeup
+//! - `slots`      — slot pool (continuous-batching bookkeeping)
+//! - `scheduler`  — continuous batching over the compiled batch buckets
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
 
 pub mod engine;
@@ -11,3 +12,4 @@ pub mod router;
 pub mod scheduler;
 pub mod selection;
 pub mod sequence;
+pub mod slots;

@@ -1,12 +1,21 @@
-//! Request admission: bounded queue with backpressure + request ids.
+//! Request admission: bounded FIFO queue with backpressure + request ids.
 //!
 //! The router is the thread-safe front door (requests may arrive from many
-//! server threads); the scheduler drains it on the engine thread.
+//! server threads); the scheduler drains it on the engine thread. Admission
+//! control is FIFO with a hard queue-depth cap: when the queue is full the
+//! caller gets `AdmitError::QueueFull` immediately (surfaced to TCP clients
+//! as a `queue_full` error response) instead of blocking.
+//!
+//! The condvar `not_empty` wakes the engine thread the moment work arrives,
+//! so an idle server parks instead of polling; `wake_all` lets shutdown
+//! paths interrupt a parked engine thread immediately.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
+use crate::coordinator::engine::Mode;
 use crate::coordinator::sequence::{GenRequest, RequestId};
 
 #[derive(Debug)]
@@ -14,6 +23,18 @@ pub enum AdmitError {
     QueueFull { capacity: usize },
     PromptTooLong { len: usize, max: usize },
     EmptyPrompt,
+}
+
+impl AdmitError {
+    /// Stable machine-readable code (the server's error responses carry
+    /// this so clients can distinguish backpressure from bad input).
+    pub fn code(&self) -> &'static str {
+        match self {
+            AdmitError::QueueFull { .. } => "queue_full",
+            AdmitError::PromptTooLong { .. } => "prompt_too_long",
+            AdmitError::EmptyPrompt => "empty_prompt",
+        }
+    }
 }
 
 impl std::fmt::Display for AdmitError {
@@ -55,7 +76,8 @@ impl Router {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Admit a request (validates + applies backpressure).
+    /// Admit a request (validates + applies backpressure). Stamps the
+    /// admission time — TTFT and queue-wait metrics measure from here.
     pub fn admit(&self, mut req: GenRequest) -> Result<RequestId, AdmitError> {
         if req.prompt.is_empty() {
             return Err(AdmitError::EmptyPrompt);
@@ -73,29 +95,35 @@ impl Router {
         if req.id == 0 {
             req.id = self.fresh_id();
         }
+        req.admitted_at = Instant::now();
         let id = req.id;
         q.push_back(req);
         self.not_empty.notify_one();
         Ok(id)
     }
 
-    /// Pop up to `n` requests that share the mode of the queue head
-    /// (batches must be mode-homogeneous; see engine::generate_batch).
-    pub fn take_wave(&self, n: usize) -> Vec<GenRequest> {
+    /// Pop up to `n` requests from the queue head that match `mode`
+    /// (None = adopt whatever mode the head has). Popping stops at the
+    /// first non-matching request, preserving FIFO order — a minority
+    /// mode is never starved, it just waits for the current continuous
+    /// run to drain.
+    pub fn take_compatible(&self, mode: Option<Mode>, n: usize)
+                           -> Vec<GenRequest> {
         let mut q = self.queue.lock().unwrap();
-        let Some(head_mode) = q.front().map(|r| r.mode) else {
-            return Vec::new();
+        let mode = match mode.or_else(|| q.front().map(|r| r.mode)) {
+            Some(m) => m,
+            None => return Vec::new(),
         };
-        let mut wave = Vec::new();
-        while wave.len() < n {
+        let mut out = Vec::new();
+        while out.len() < n {
             match q.front() {
-                Some(r) if r.mode == head_mode => {
-                    wave.push(q.pop_front().unwrap())
+                Some(r) if r.mode == mode => {
+                    out.push(q.pop_front().unwrap())
                 }
                 _ => break,
             }
         }
-        wave
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -106,7 +134,8 @@ impl Router {
         self.len() == 0
     }
 
-    /// Block until at least one request is queued (with timeout).
+    /// Block until at least one request is queued (with timeout). Returns
+    /// immediately when woken by `admit` or `wake_all`.
     pub fn wait_nonempty(&self, timeout: std::time::Duration) -> bool {
         let q = self.queue.lock().unwrap();
         if !q.is_empty() {
@@ -114,6 +143,13 @@ impl Router {
         }
         let (q, _) = self.not_empty.wait_timeout(q, timeout).unwrap();
         !q.is_empty()
+    }
+
+    /// Wake every thread parked in `wait_nonempty` (used by shutdown so
+    /// the engine loop re-checks its stop flag immediately).
+    pub fn wake_all(&self) {
+        let _q = self.queue.lock().unwrap();
+        self.not_empty.notify_all();
     }
 }
 
@@ -144,6 +180,7 @@ mod tests {
         r.admit(req(Mode::Full)).unwrap();
         let e = r.admit(req(Mode::Full)).unwrap_err();
         assert!(matches!(e, AdmitError::QueueFull { capacity: 2 }));
+        assert_eq!(e.code(), "queue_full");
     }
 
     #[test]
@@ -159,30 +196,58 @@ mod tests {
     }
 
     #[test]
-    fn wave_is_mode_homogeneous() {
+    fn take_is_mode_homogeneous() {
         let r = Router::new(8, 128);
         r.admit(req(Mode::Full)).unwrap();
         r.admit(req(Mode::Full)).unwrap();
         r.admit(req(Mode::griffin(0.5))).unwrap();
         r.admit(req(Mode::Full)).unwrap();
-        let w1 = r.take_wave(8);
+        let w1 = r.take_compatible(None, 8);
         assert_eq!(w1.len(), 2);
         assert!(w1.iter().all(|x| x.mode == Mode::Full));
-        let w2 = r.take_wave(8);
+        let w2 = r.take_compatible(None, 8);
         assert_eq!(w2.len(), 1);
         assert_eq!(w2[0].mode, Mode::griffin(0.5));
-        let w3 = r.take_wave(8);
+        let w3 = r.take_compatible(None, 8);
         assert_eq!(w3.len(), 1); // trailing Full request
         assert!(r.is_empty());
     }
 
     #[test]
-    fn wave_respects_limit() {
+    fn take_respects_limit() {
         let r = Router::new(8, 128);
         for _ in 0..5 {
             r.admit(req(Mode::Full)).unwrap();
         }
-        assert_eq!(r.take_wave(3).len(), 3);
+        assert_eq!(r.take_compatible(None, 3).len(), 3);
         assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn take_compatible_filters_by_active_mode() {
+        let r = Router::new(8, 128);
+        r.admit(req(Mode::griffin(0.5))).unwrap();
+        r.admit(req(Mode::Full)).unwrap();
+        // an in-flight Full run must not steal the griffin head
+        assert!(r.take_compatible(Some(Mode::Full), 4).is_empty());
+        // ...but the griffin run drains its own head
+        let g = r.take_compatible(Some(Mode::griffin(0.5)), 4);
+        assert_eq!(g.len(), 1);
+        // and now the Full request is reachable
+        assert_eq!(r.take_compatible(Some(Mode::Full), 4).len(), 1);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn wait_wakes_on_admit() {
+        use std::sync::Arc;
+        let r = Arc::new(Router::new(4, 128));
+        let r2 = r.clone();
+        let t = std::thread::spawn(move || {
+            r2.wait_nonempty(std::time::Duration::from_secs(5))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.admit(req(Mode::Full)).unwrap();
+        assert!(t.join().unwrap(), "admit must wake the waiter");
     }
 }

@@ -1,95 +1,542 @@
-//! Wave scheduler: drains the router into mode-homogeneous batches sized
-//! to the compiled batch buckets and drives the engine.
+//! Continuous-batching scheduler: a persistent slot pool sized to the
+//! largest compiled batch bucket, drained tick by tick.
 //!
-//! Policy: take the largest wave the bucket set admits (batch bucket =
-//! smallest compiled B >= wave size); GRIFFIN waves share one expert set
-//! via the eq.7 aggregate (paper §5.3 shows the quality decay with batch
-//! size is slow, Table 4). Sequence-level continuous batching across
-//! waves is intentionally not done — DESIGN.md §4 records this as the
-//! bucket-static simplification.
+//! Every tick: (1) finished slots were already retired, so free slots are
+//! back-filled from the router — the new prompts are prefilled as one
+//! batch and their KV rows spliced into the persistent decode state at
+//! the slot's position; (2) one decode step runs over the whole bucket
+//! and every occupied slot samples, streams, and possibly retires its
+//! sequence. Short sequences therefore release their slot immediately
+//! instead of waiting for the batch straggler (the seed's "bucket-static
+//! simplification" — a wave scheduler that ran every batch to
+//! completion — is gone; `Engine::generate_batch` remains as the
+//! non-serving, run-to-completion path used by experiments).
+//!
+//! Mode homogeneity: the compiled decode executables bind one FF weight
+//! set per batch, so a continuous run stays mode-homogeneous. Admission
+//! pops the queue head only while it matches the active mode; when the
+//! pool drains, the next head's mode is adopted (FIFO, no starvation).
+//!
+//! GRIFFIN state: each slot keeps its own prompt statistics and
+//! slot-private expert selection (gathered at admission, dropped at
+//! retirement). With a single occupied slot the private selection is
+//! used exactly (the paper's per-sequence path); with several, the
+//! shared eq. 7 aggregate over the occupied slots is re-gathered on
+//! every membership change — slot-private pruned weights cannot fit the
+//! bucket, which takes one weight set for all rows.
+//!
+//! Bucket note: decode always runs at the pool's compiled bucket; rows
+//! of free slots are dead weight in the matmul but never sampled, never
+//! emitted, and their write positions are pinned to 0. Only occupied
+//! slots are decoded in the scheduling sense — sampled, streamed,
+//! retired.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coordinator::engine::{Engine, GenResponse};
+use crate::coordinator::engine::{
+    aggregate_norms, DecodeState, Engine, GenResponse, Mode, PrunedWeights,
+};
 use crate::coordinator::router::Router;
-use crate::coordinator::sequence::{Phase, Sequence};
+use crate::coordinator::selection::{aggregate_stats, LayerStats};
+use crate::coordinator::sequence::{FinishReason, GenRequest, Phase, Sequence};
+use crate::coordinator::slots::{SlotEntry, SlotPool};
+use crate::runtime::DeviceTensor;
+use crate::sampling::{log_softmax_at, Sampler};
+use crate::tokenizer::{EOS_ID, PAD_ID};
+
+/// Streamed engine output: one event per generated token, one per
+/// completed request. The server forwards these to waiting connections;
+/// `run_until_idle` collects only the `Done` responses.
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    Token { id: u64, index: usize, token: i32, text: String },
+    Done(GenResponse),
+}
+
+impl EngineEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            EngineEvent::Token { id, .. } => *id,
+            EngineEvent::Done(r) => r.id,
+        }
+    }
+}
+
+/// Batch-shared generation-phase FF weights (one set per compiled decode
+/// executable). Rebuilt lazily whenever slot membership changes.
+#[derive(Default)]
+struct SharedFf {
+    pruned: Option<PrunedWeights>,
+    wanda: Option<Vec<DeviceTensor>>,
+    k: Option<usize>,
+    built_for: Option<Mode>,
+    dirty: bool,
+}
 
 pub struct Scheduler {
     pub engine: Engine,
     pub router: Arc<Router>,
-    /// max requests per wave (clamped to the largest compiled bucket)
-    pub max_wave: usize,
+    pool: SlotPool,
+    /// persistent KV cache at the pool's bucket (lazily allocated)
+    state: Option<DecodeState>,
+    shared: SharedFf,
+    /// per-slot last sampled token (decode input); PAD for free slots
+    cur: Vec<i32>,
+    /// slot count == largest compiled batch bucket
+    pub slot_count: usize,
 }
 
 impl Scheduler {
     pub fn new(engine: Engine, router: Arc<Router>) -> Self {
-        let max_bucket = engine
+        let slot_count = engine
             .config()
             .batch_buckets
             .iter()
             .copied()
             .max()
             .unwrap_or(1);
-        Scheduler { engine, router, max_wave: max_bucket }
+        engine.metrics.slots_total.set(slot_count as u64);
+        Scheduler {
+            engine,
+            router,
+            pool: SlotPool::new(slot_count),
+            state: None,
+            shared: SharedFf::default(),
+            cur: vec![PAD_ID; slot_count],
+            slot_count,
+        }
     }
 
-    /// Process one wave if any requests are queued. Returns completed
-    /// responses (empty when idle).
-    pub fn step(&mut self) -> Result<Vec<GenResponse>> {
-        let wave = self.router.take_wave(self.max_wave);
-        if wave.is_empty() {
-            return Ok(Vec::new());
-        }
-        // track sequence state machines for observability + invariants
-        let mut seqs: Vec<Sequence> =
-            wave.iter().cloned().map(Sequence::new).collect();
-        for s in &mut seqs {
-            self.engine
-                .metrics
-                .queue_wait
-                .record(s.admitted_at.elapsed());
-            s.advance(Phase::Prefilling);
-        }
-        let responses = self.engine.generate_batch(&wave)?;
-        for (s, r) in seqs.iter_mut().zip(&responses) {
-            s.advance(Phase::Decoding);
-            s.generated = r.tokens.clone();
-            s.finish(r.finish);
-            debug_assert!(s.is_done());
-        }
-        Ok(responses)
+    pub fn occupied(&self) -> usize {
+        self.pool.occupied()
     }
 
-    /// Drain the queue completely.
+    /// One scheduling step: back-fill free slots from the queue, then run
+    /// one decode tick over the occupied slots. Returns false when there
+    /// was nothing to do (pool empty, no admissible request).
+    pub fn tick(&mut self, on_event: &mut dyn FnMut(EngineEvent))
+                -> Result<bool> {
+        let admitted = self.admit_from_queue(on_event)?;
+        if self.pool.is_empty() {
+            return Ok(admitted);
+        }
+        self.decode_tick(on_event)?;
+        Ok(true)
+    }
+
+    /// Drain the queue completely, returning completed responses (token
+    /// events are dropped here — callers that want streaming use `serve`).
     pub fn run_until_idle(&mut self) -> Result<Vec<GenResponse>> {
         let mut all = Vec::new();
         loop {
-            let batch = self.step()?;
-            if batch.is_empty() && self.router.is_empty() {
+            let mut sink = |ev: EngineEvent| {
+                if let EngineEvent::Done(r) = ev {
+                    all.push(r);
+                }
+            };
+            let worked = self.tick(&mut sink)?;
+            if !worked && self.router.is_empty() && self.pool.is_empty() {
                 return Ok(all);
             }
-            all.extend(batch);
         }
     }
 
-    /// Serve loop: block for work, process, repeat until `stop` returns
-    /// true. Used by the TCP server's engine thread.
-    pub fn serve<F>(&mut self, mut on_response: F,
-                    stop: &dyn Fn() -> bool) -> Result<()>
+    /// Serve loop: process work, streaming events to `on_event`, until
+    /// `stop` returns true. When fully idle the thread parks on the
+    /// router's condvar — `Router::admit` wakes it immediately (admission
+    /// latency is not quantized to a poll interval) and `Router::wake_all`
+    /// interrupts the wait on shutdown; the timeout only bounds stop-flag
+    /// staleness for callers that never wake the router.
+    pub fn serve<F>(&mut self, mut on_event: F, stop: &dyn Fn() -> bool)
+                    -> Result<()>
     where
-        F: FnMut(GenResponse),
+        F: FnMut(EngineEvent),
     {
         while !stop() {
-            if !self.router.wait_nonempty(Duration::from_millis(50)) {
-                continue;
-            }
-            for r in self.step()? {
-                on_response(r);
+            let worked = self.tick(&mut on_event)?;
+            if !worked {
+                self.router.wait_nonempty(Duration::from_millis(250));
             }
         }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // admission
+    // ------------------------------------------------------------------
+
+    /// Pull queue-head requests that match the active mode into free
+    /// slots. Returns true if anything was admitted.
+    fn admit_from_queue(&mut self, on_event: &mut dyn FnMut(EngineEvent))
+                        -> Result<bool> {
+        let free = self.pool.free_indices();
+        if free.is_empty() {
+            return Ok(false);
+        }
+        let reqs = self
+            .router
+            .take_compatible(self.pool.active_mode(), free.len());
+        if reqs.is_empty() {
+            return Ok(false);
+        }
+        if self.pool.is_empty() {
+            self.pool.set_mode(reqs[0].mode);
+            if self.shared.built_for != Some(reqs[0].mode) {
+                self.shared.dirty = true;
+            }
+        }
+        self.prefill_into_slots(&reqs, &free[..reqs.len()], on_event)?;
+        Ok(true)
+    }
+
+    /// Prefill a batch of newly admitted requests and install each into
+    /// its slot: KV rows spliced into the persistent state, per-slot
+    /// selection state captured, and the first token (sampled from the
+    /// prompt's last logits) emitted immediately — this is where TTFT is
+    /// measured.
+    fn prefill_into_slots(
+        &mut self,
+        reqs: &[GenRequest],
+        slots: &[usize],
+        on_event: &mut dyn FnMut(EngineEvent),
+    ) -> Result<()> {
+        debug_assert_eq!(reqs.len(), slots.len());
+        // queue wait ends here — the admission prefill is work, not wait
+        for req in reqs {
+            self.engine.metrics.queue_wait.record(req.admitted_at.elapsed());
+        }
+        let pre_t = Instant::now();
+        let prompts: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.prompt.clone()).collect();
+        let pre = self.engine.prefill(&prompts, false)?;
+        let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
+
+        if self.state.is_none() {
+            self.state = Some(self.engine.new_decode_state(self.slot_count)?);
+        }
+        let pairs: Vec<(usize, usize)> =
+            slots.iter().enumerate().map(|(i, &s)| (i, s)).collect();
+        self.engine.splice_slots(
+            self.state.as_mut().unwrap(), &pre.state, &pairs)?;
+
+        for (i, req) in reqs.iter().enumerate() {
+            let slot = slots[i];
+            let mut seq = Sequence::new(req.clone());
+            seq.slot = Some(slot);
+            seq.advance(Phase::Prefilling);
+            let mut entry = SlotEntry::new(
+                seq, Sampler::new(req.sampler, req.seed), pre.lengths[i]);
+            entry.prefill_ms = prefill_ms;
+
+            let sel_t = Instant::now();
+            match req.mode {
+                Mode::Griffin { keep, strategy } => {
+                    entry.seq.advance(Phase::Selecting);
+                    let stats = pre.stats[i].clone();
+                    entry.expert_idx =
+                        Some(self.engine.select(&stats, keep, strategy)?);
+                    entry.stats = Some(stats);
+                    entry.seq.advance(Phase::Decoding);
+                }
+                Mode::Wanda { .. } => {
+                    entry.xnorm = Some(pre.xnorms[i].clone());
+                    entry.znorm = Some(pre.znorms[i].clone());
+                    entry.seq.advance(Phase::Decoding);
+                }
+                Mode::Full | Mode::Magnitude { .. } => {
+                    entry.seq.advance(Phase::Decoding);
+                }
+            }
+            entry.select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
+
+            // first token comes straight from the prefill logits
+            let row = &pre.last_logits[i];
+            let t = entry.sampler.sample(row) as i32;
+            entry.seq.generated.push(t);
+            entry.seq.logprobs.push(log_softmax_at(row, t as usize));
+            entry.last_token = t;
+            entry.last_token_at = Instant::now();
+            entry.seq.advance(Phase::Streaming);
+            if let Some(d) = entry.seq.ttft() {
+                self.engine.metrics.ttft.record(d);
+            }
+            self.engine.metrics.tokens_generated.add(1);
+            self.cur[slot] = t;
+            let finished = if req.stop_at_eos && t == EOS_ID {
+                Some(FinishReason::Eos)
+            } else if req.max_new_tokens <= 1 {
+                Some(FinishReason::Length)
+            } else {
+                None
+            };
+            let id = req.id;
+            let text = self.engine.tokenizer.decode(&[t]);
+            on_event(EngineEvent::Token { id, index: 0, token: t, text });
+            self.pool.assign(slot, entry)?;
+            self.shared.dirty = true;
+            if let Some(reason) = finished {
+                self.retire_slot(slot, reason, on_event)?;
+            }
+        }
+        self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // decode
+    // ------------------------------------------------------------------
+
+    /// One decode step over the bucket: sample every occupied slot,
+    /// stream its token, retire sequences that hit EOS / their token
+    /// budget / the context limit.
+    fn decode_tick(&mut self, on_event: &mut dyn FnMut(EngineEvent))
+                   -> Result<()> {
+        let max_seq = self.engine.config().max_seq;
+        // context-full guard before stepping (the decode would write past
+        // the compiled cache otherwise)
+        let ctx_full: Vec<usize> = {
+            let state = self.state.as_ref().unwrap();
+            self.pool
+                .occupied_indices()
+                .into_iter()
+                .filter(|&i| state.pos[i] as usize >= max_seq)
+                .collect()
+        };
+        for slot in ctx_full {
+            self.retire_slot(slot, FinishReason::ContextFull, on_event)?;
+        }
+        if self.pool.is_empty() {
+            return Ok(());
+        }
+        if self.shared.dirty {
+            self.rebuild_shared()?;
+        }
+
+        let occ = self.pool.occupied_indices();
+        {
+            // free slots are dead rows: pin their write position to 0 so
+            // it cannot creep toward the cache bound across long runs
+            let state = self.state.as_mut().unwrap();
+            for i in 0..self.slot_count {
+                if self.pool.get(i).is_none() {
+                    state.pos[i] = 0;
+                    self.cur[i] = PAD_ID;
+                }
+            }
+        }
+
+        let logits = {
+            let Scheduler { engine, state, cur, shared, .. } = &mut *self;
+            engine.decode_step(
+                state.as_mut().unwrap(),
+                cur,
+                shared.pruned.as_ref(),
+                shared.wanda.as_deref(),
+            )?
+        };
+        let v = self.engine.config().vocab_size;
+
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for &slot in &occ {
+            let row = &logits[slot * v..(slot + 1) * v];
+            let entry = self.pool.get_mut(slot).unwrap();
+            let t = entry.sampler.sample(row) as i32;
+            entry.seq.generated.push(t);
+            entry.seq.logprobs.push(log_softmax_at(row, t as usize));
+            entry.last_token = t;
+            let now = Instant::now();
+            self.engine
+                .metrics
+                .inter_token_latency
+                .record(now.duration_since(entry.last_token_at));
+            entry.last_token_at = now;
+            self.cur[slot] = t;
+            self.engine.metrics.tokens_generated.add(1);
+            let id = entry.seq.req.id;
+            let index = entry.seq.generated.len() - 1;
+            if entry.seq.req.stop_at_eos && t == EOS_ID {
+                finished.push((slot, FinishReason::Eos));
+            } else if entry.seq.generated.len()
+                >= entry.seq.req.max_new_tokens
+            {
+                finished.push((slot, FinishReason::Length));
+            }
+            let text = self.engine.tokenizer.decode(&[t]);
+            on_event(EngineEvent::Token { id, index, token: t, text });
+        }
+        for (slot, reason) in finished {
+            self.retire_slot(slot, reason, on_event)?;
+        }
+        self.engine.metrics.decode_ticks.inc();
+        self.engine
+            .metrics
+            .slot_occupancy
+            .record_value(occ.len() as u64);
+        self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
+        Ok(())
+    }
+
+    /// Free a slot and emit the final response for its sequence.
+    fn retire_slot(
+        &mut self,
+        slot: usize,
+        reason: FinishReason,
+        on_event: &mut dyn FnMut(EngineEvent),
+    ) -> Result<()> {
+        let mut entry = self.pool.retire(slot)?;
+        entry.seq.finish(reason);
+        self.cur[slot] = PAD_ID;
+        if let Some(state) = self.state.as_mut() {
+            state.pos[slot] = 0;
+        }
+        // the shared expert set must forget this sequence's statistics
+        if matches!(entry.seq.req.mode,
+                    Mode::Griffin { .. } | Mode::Wanda { .. })
+        {
+            self.shared.dirty = true;
+        }
+        if let Some(fin) = entry.seq.finished_at {
+            self.engine
+                .metrics
+                .e2e_latency
+                .record(fin.duration_since(entry.seq.admitted_at));
+        }
+        let resp = self.response_from(entry)?;
+        self.engine.metrics.requests_completed.inc();
+        self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
+        on_event(EngineEvent::Done(resp));
+        Ok(())
+    }
+
+    fn response_from(&self, entry: SlotEntry) -> Result<GenResponse> {
+        let SlotEntry { seq, prefill_ms, select_ms, expert_idx, .. } = entry;
+        let decode_s = match (seq.first_token_at, seq.finished_at) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        // rate over the whole work span (prefill start → finish):
+        // decode_s alone degenerates for sequences that finish on their
+        // first token, where it is mere microseconds
+        let work_s = match (seq.prefill_started_at, seq.finished_at) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => decode_s,
+        };
+        let k_used = match seq.req.mode {
+            Mode::Griffin { .. } => expert_idx
+                .as_ref()
+                .and_then(|ix| ix.first().map(Vec::len))
+                .or(self.shared.k),
+            Mode::Magnitude { keep } => {
+                self.shared.k.or_else(|| self.engine.k_for(keep).ok())
+            }
+            _ => None,
+        };
+        let n = seq.generated.len();
+        Ok(GenResponse {
+            id: seq.req.id,
+            text: self.engine.tokenizer.decode(&seq.generated),
+            tokens: seq.generated,
+            logprobs: seq.logprobs,
+            finish: seq.finish_reason.unwrap_or(FinishReason::Length),
+            k_used,
+            prefill_ms,
+            select_ms,
+            decode_ms: decode_s * 1e3,
+            ttft_ms: seq
+                .ttft()
+                .map(|d| d.as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+            tokens_per_sec: n as f64 / work_s.max(1e-9),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // shared generation-phase weights
+    // ------------------------------------------------------------------
+
+    /// Rebuild the batch-shared FF weight set from the occupied slots'
+    /// saved prompt state. Called lazily on the first decode tick after a
+    /// membership change.
+    fn rebuild_shared(&mut self) -> Result<()> {
+        let mode = match self.pool.active_mode() {
+            Some(m) => m,
+            None => {
+                self.shared = SharedFf::default();
+                return Ok(());
+            }
+        };
+        match mode {
+            Mode::Full => {
+                self.shared.pruned = None;
+                self.shared.wanda = None;
+                self.shared.k = None;
+            }
+            Mode::Magnitude { keep } => {
+                // static expert set: survives membership changes
+                if self.shared.built_for != Some(mode)
+                    || self.shared.pruned.is_none()
+                {
+                    let idx = self.engine.magnitude_experts(keep)?;
+                    let pw = self.engine.gather(&idx)?;
+                    self.shared.k = Some(pw.k);
+                    self.shared.pruned = Some(pw);
+                    self.shared.wanda = None;
+                }
+            }
+            Mode::Griffin { keep, strategy } => {
+                let occ = self.pool.occupied_indices();
+                let idx = if occ.len() == 1 {
+                    // slot-private selection fits the bucket: use the
+                    // paper's exact per-sequence expert set
+                    match &self.pool.get(occ[0]).unwrap().expert_idx {
+                        Some(ix) => ix.clone(),
+                        None => bail!("griffin slot without selection"),
+                    }
+                } else {
+                    let per: Vec<(LayerStats, usize)> = occ
+                        .iter()
+                        .filter_map(|&i| {
+                            let e = self.pool.get(i).unwrap();
+                            e.stats.clone().map(|s| (s, e.prompt_len))
+                        })
+                        .collect();
+                    if per.is_empty() {
+                        bail!("griffin slots without statistics");
+                    }
+                    let agg = aggregate_stats(&per);
+                    self.engine.select(&agg, keep, strategy)?
+                };
+                let pw = self.engine.gather(&idx)?;
+                self.shared.k = Some(pw.k);
+                self.shared.pruned = Some(pw);
+                self.shared.wanda = None;
+            }
+            Mode::Wanda { keep } => {
+                let occ = self.pool.occupied_indices();
+                let xs: Vec<LayerStats> = occ
+                    .iter()
+                    .filter_map(|&i| self.pool.get(i).unwrap().xnorm.clone())
+                    .collect();
+                let zs: Vec<LayerStats> = occ
+                    .iter()
+                    .filter_map(|&i| self.pool.get(i).unwrap().znorm.clone())
+                    .collect();
+                if xs.is_empty() || zs.is_empty() {
+                    bail!("wanda slots without norms");
+                }
+                let ax = aggregate_norms(&xs);
+                let az = aggregate_norms(&zs);
+                self.shared.wanda =
+                    Some(self.engine.wanda_weights(&ax, &az, keep)?);
+                self.shared.pruned = None;
+                self.shared.k = None;
+            }
+        }
+        self.shared.built_for = Some(mode);
+        self.shared.dirty = false;
         Ok(())
     }
 }
@@ -97,6 +544,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     // Scheduler integration tests live in rust/tests/integration.rs —
-    // they need compiled artifacts. Here we only test the pure policy
-    // helpers via the Router (see router.rs tests).
+    // they need compiled artifacts. The pure slot state machine
+    // (admission / back-fill / retirement invariants) is property-tested
+    // in slots.rs, and the Router policy in router.rs.
 }

@@ -1,9 +1,14 @@
 //! Per-request sequence state machine.
 //!
-//! Queued → Prefilling → Selecting → Decoding → Finished. The scheduler
-//! drives transitions; invalid transitions are programming errors and
-//! panic in debug (property-tested in scheduler tests: every admitted
+//! Queued → Prefilling → Selecting → Decoding → Streaming → Finished.
+//! The scheduler drives transitions; invalid transitions are programming
+//! errors and panic in debug (property-tested in slots.rs: every admitted
 //! sequence finishes exactly once, never decodes before selection).
+//!
+//! `Streaming` is entered when the first generated token has been emitted
+//! to the client — from that point on the sequence occupies a decode slot
+//! and every subsequent token is streamed as it is sampled (see
+//! scheduler.rs / server.rs).
 
 use std::time::Instant;
 
@@ -19,6 +24,8 @@ pub enum Phase {
     /// prompt done; expert selection / gather pending (GRIFFIN modes)
     Selecting,
     Decoding,
+    /// first token emitted; slot-resident, tokens stream out per tick
+    Streaming,
     Finished,
 }
 
@@ -31,6 +38,8 @@ pub struct GenRequest {
     pub sampler: SamplerSpec,
     pub seed: u64,
     pub stop_at_eos: bool,
+    /// stamped by `Router::admit`; TTFT is measured from here
+    pub admitted_at: Instant,
 }
 
 impl GenRequest {
@@ -44,6 +53,7 @@ impl GenRequest {
             sampler: SamplerSpec::Greedy,
             seed: id,
             stop_at_eos: true,
+            admitted_at: Instant::now(),
         }
     }
 }
@@ -54,8 +64,11 @@ pub struct Sequence {
     pub phase: Phase,
     pub generated: Vec<i32>,
     pub logprobs: Vec<f32>,
+    /// decode slot currently holding this sequence (None while queued)
+    pub slot: Option<usize>,
     pub admitted_at: Instant,
     pub prefill_started_at: Option<Instant>,
+    pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
     /// why generation stopped
     pub finish_reason: Option<FinishReason>,
@@ -70,13 +83,16 @@ pub enum FinishReason {
 
 impl Sequence {
     pub fn new(req: GenRequest) -> Self {
+        let admitted_at = req.admitted_at;
         Sequence {
             req,
             phase: Phase::Queued,
             generated: Vec::new(),
             logprobs: Vec::new(),
-            admitted_at: Instant::now(),
+            slot: None,
+            admitted_at,
             prefill_started_at: None,
+            first_token_at: None,
             finished_at: None,
             finish_reason: None,
         }
@@ -89,12 +105,17 @@ impl Sequence {
                 | (Phase::Prefilling, Phase::Selecting)
                 | (Phase::Prefilling, Phase::Decoding)
                 | (Phase::Selecting, Phase::Decoding)
+                | (Phase::Decoding, Phase::Streaming)
                 | (Phase::Prefilling, Phase::Finished)
                 | (Phase::Decoding, Phase::Finished)
+                | (Phase::Streaming, Phase::Finished)
         );
         debug_assert!(ok, "illegal transition {:?} -> {:?}", self.phase, to);
         if to == Phase::Prefilling {
             self.prefill_started_at = Some(Instant::now());
+        }
+        if to == Phase::Streaming && self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
         }
         if to == Phase::Finished {
             self.finished_at = Some(Instant::now());
@@ -114,6 +135,12 @@ impl Sequence {
     pub fn total_len(&self) -> usize {
         self.req.prompt.len() + self.generated.len()
     }
+
+    /// Time-to-first-token (admission → first emitted token), if reached.
+    pub fn ttft(&self) -> Option<std::time::Duration> {
+        self.first_token_at
+            .map(|t| t.duration_since(self.admitted_at))
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +159,8 @@ mod tests {
         s.advance(Phase::Selecting);
         s.advance(Phase::Decoding);
         s.generated.push(42);
+        s.advance(Phase::Streaming);
+        assert!(s.ttft().is_some());
         s.finish(FinishReason::Length);
         assert!(s.is_done());
         assert_eq!(s.finish_reason, Some(FinishReason::Length));
@@ -146,6 +175,18 @@ mod tests {
         s.advance(Phase::Decoding);
         s.finish(FinishReason::Eos);
         assert!(s.is_done());
+    }
+
+    #[test]
+    fn streaming_records_first_token_once() {
+        let mut s = seq();
+        s.advance(Phase::Prefilling);
+        s.advance(Phase::Decoding);
+        s.advance(Phase::Streaming);
+        let first = s.first_token_at;
+        assert!(first.is_some());
+        s.finish(FinishReason::Length);
+        assert_eq!(s.first_token_at, first);
     }
 
     #[test]

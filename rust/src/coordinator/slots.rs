@@ -1,0 +1,350 @@
+//! Slot pool: the bookkeeping core of continuous batching.
+//!
+//! A fixed pool of decode slots (sized to the largest compiled batch
+//! bucket) holds one in-flight sequence per slot. The scheduler admits
+//! queued requests into free slots, decodes all occupied slots each tick,
+//! and retires slots the moment their sequence finishes — freed slots are
+//! back-filled from the queue on the next tick, so a straggler never
+//! holds the whole batch hostage.
+//!
+//! This module is pure host-side state (no PJRT): invariants are
+//! property-tested here without artifacts. The pool enforces:
+//!   * a slot is never double-assigned,
+//!   * every admitted sequence is retired exactly once,
+//!   * occupancy accounting (`occupied()`) always matches the slot map.
+//!
+//! Per-slot GRIFFIN state: each slot keeps the prompt statistics (eq. 6)
+//! and the slot-private expert selection computed at admission, and drops
+//! both at retirement. The scheduler uses the private selection when a
+//! single sequence occupies the pool and falls back to the shared eq. 7
+//! aggregate over all occupied slots otherwise (the compiled
+//! `decode_pruned` buckets take one pruned weight set per batch).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::engine::Mode;
+use crate::coordinator::selection::LayerStats;
+use crate::coordinator::sequence::Sequence;
+use crate::sampling::Sampler;
+
+/// One occupied decode slot: the sequence plus everything needed to keep
+/// sampling it across ticks.
+pub struct SlotEntry {
+    pub seq: Sequence,
+    pub sampler: Sampler,
+    /// prompt length as seen by the prefill bucket (for eq. 7 weighting)
+    pub prompt_len: usize,
+    /// GRIFFIN: per-sequence prompt statistic s (eq. 6)
+    pub stats: Option<LayerStats>,
+    /// GRIFFIN: slot-private expert selection from `stats`
+    pub expert_idx: Option<Vec<Vec<i32>>>,
+    /// Wanda: per-sequence FF input / activation column norms
+    pub xnorm: Option<LayerStats>,
+    pub znorm: Option<LayerStats>,
+    /// last token fed to decode (the most recently sampled one)
+    pub last_token: i32,
+    /// when the previous token was emitted (inter-token latency)
+    pub last_token_at: Instant,
+    /// wall time of the admission prefill batch this sequence rode in
+    pub prefill_ms: f64,
+    /// wall time of this sequence's selection at admission
+    pub select_ms: f64,
+}
+
+impl SlotEntry {
+    pub fn new(seq: Sequence, sampler: Sampler, prompt_len: usize) -> Self {
+        SlotEntry {
+            seq,
+            sampler,
+            prompt_len,
+            stats: None,
+            expert_idx: None,
+            xnorm: None,
+            znorm: None,
+            last_token: 0,
+            last_token_at: Instant::now(),
+            prefill_ms: 0.0,
+            select_ms: 0.0,
+        }
+    }
+}
+
+/// Fixed-size pool of decode slots with occupancy invariants.
+pub struct SlotPool {
+    slots: Vec<Option<SlotEntry>>,
+    /// mode of the current continuous run; decode batches must stay
+    /// mode-homogeneous because the compiled decode executables bind one
+    /// FF weight set per batch
+    active_mode: Option<Mode>,
+    occupied: usize,
+    admitted_total: u64,
+    retired_total: u64,
+}
+
+impl SlotPool {
+    pub fn new(capacity: usize) -> Self {
+        SlotPool {
+            slots: (0..capacity).map(|_| None).collect(),
+            active_mode: None,
+            occupied: 0,
+            admitted_total: 0,
+            retired_total: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.occupied
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupied == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.occupied == self.slots.len()
+    }
+
+    /// Mode of the in-flight run. Meaningless (stale) when the pool is
+    /// empty — the scheduler adopts the queue head's mode on next admit.
+    pub fn active_mode(&self) -> Option<Mode> {
+        if self.is_empty() {
+            None
+        } else {
+            self.active_mode
+        }
+    }
+
+    pub fn set_mode(&mut self, mode: Mode) {
+        self.active_mode = Some(mode);
+    }
+
+    pub fn free_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn occupied_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&SlotEntry> {
+        self.slots.get(slot).and_then(Option::as_ref)
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut SlotEntry> {
+        self.slots.get_mut(slot).and_then(Option::as_mut)
+    }
+
+    /// Place a sequence into a free slot. Double-assignment is a
+    /// scheduling bug and is rejected (never silently overwrites).
+    pub fn assign(&mut self, slot: usize, entry: SlotEntry) -> Result<()> {
+        if slot >= self.slots.len() {
+            bail!("slot {slot} out of range (capacity {})",
+                  self.slots.len());
+        }
+        if self.slots[slot].is_some() {
+            bail!(
+                "slot {slot} already holds request {}",
+                self.slots[slot].as_ref().unwrap().seq.req.id
+            );
+        }
+        self.slots[slot] = Some(entry);
+        self.occupied += 1;
+        self.admitted_total += 1;
+        Ok(())
+    }
+
+    /// Free a slot, returning its entry (the scheduler turns it into the
+    /// final response). Retiring an empty slot is a scheduling bug.
+    pub fn retire(&mut self, slot: usize) -> Result<SlotEntry> {
+        if slot >= self.slots.len() {
+            bail!("slot {slot} out of range (capacity {})",
+                  self.slots.len());
+        }
+        match self.slots[slot].take() {
+            Some(e) => {
+                self.occupied -= 1;
+                self.retired_total += 1;
+                Ok(e)
+            }
+            None => bail!("retire of unoccupied slot {slot}"),
+        }
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted_total
+    }
+
+    pub fn retired_total(&self) -> u64 {
+        self.retired_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::{FinishReason, GenRequest, Phase};
+    use crate::sampling::SamplerSpec;
+    use crate::workload::rng::XorShift64Star;
+
+    fn entry(id: u64) -> SlotEntry {
+        let seq =
+            Sequence::new(GenRequest::greedy(id, vec![1, 2], 8, Mode::Full));
+        SlotEntry::new(seq, Sampler::new(SamplerSpec::Greedy, id), 2)
+    }
+
+    #[test]
+    fn assign_and_retire_roundtrip() {
+        let mut p = SlotPool::new(4);
+        assert_eq!(p.capacity(), 4);
+        assert!(p.is_empty());
+        p.assign(2, entry(7)).unwrap();
+        assert_eq!(p.occupied(), 1);
+        assert_eq!(p.free_indices(), vec![0, 1, 3]);
+        assert_eq!(p.occupied_indices(), vec![2]);
+        assert_eq!(p.get(2).unwrap().seq.req.id, 7);
+        let e = p.retire(2).unwrap();
+        assert_eq!(e.seq.req.id, 7);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn double_assign_rejected() {
+        let mut p = SlotPool::new(2);
+        p.assign(0, entry(1)).unwrap();
+        let err = p.assign(0, entry(2)).unwrap_err();
+        assert!(err.to_string().contains("already holds"), "{err}");
+        // pool state unchanged by the failed assign
+        assert_eq!(p.occupied(), 1);
+        assert_eq!(p.get(0).unwrap().seq.req.id, 1);
+    }
+
+    #[test]
+    fn retire_empty_rejected() {
+        let mut p = SlotPool::new(2);
+        assert!(p.retire(1).is_err());
+        assert!(p.assign(5, entry(1)).is_err());
+        assert!(p.retire(5).is_err());
+    }
+
+    #[test]
+    fn active_mode_is_none_when_empty() {
+        let mut p = SlotPool::new(2);
+        p.set_mode(Mode::griffin(0.5));
+        assert_eq!(p.active_mode(), None, "stale mode hidden when empty");
+        p.assign(0, entry(1)).unwrap();
+        assert_eq!(p.active_mode(), Some(Mode::griffin(0.5)));
+        p.retire(0).unwrap();
+        assert_eq!(p.active_mode(), None);
+    }
+
+    /// Property test: a randomized continuous-batching run where every
+    /// sequence has its own length. Every admitted id must retire exactly
+    /// once, slots never double-assign, and short sequences must free
+    /// their slot (and have it back-filled) while long ones still run.
+    #[test]
+    fn continuous_run_admits_and_retires_exactly_once() {
+        let mut rng = XorShift64Star::new(42);
+        let capacity = 4;
+        let mut pool = SlotPool::new(capacity);
+        // queue of (id, remaining_tokens); lengths vary 1..=12
+        let mut queue: std::collections::VecDeque<(u64, usize)> =
+            (1..=40u64).map(|id| (id, 1 + rng.below(12))).collect();
+        let mut remaining: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        let mut retired_ids: Vec<u64> = Vec::new();
+        let mut max_occupied = 0usize;
+
+        while !(queue.is_empty() && pool.is_empty()) {
+            // admission: back-fill every free slot
+            for slot in pool.free_indices() {
+                let Some((id, len)) = queue.pop_front() else { break };
+                let mut e = entry(id);
+                e.seq.advance(Phase::Prefilling);
+                e.seq.advance(Phase::Decoding);
+                e.seq.advance(Phase::Streaming);
+                e.seq.slot = Some(slot);
+                pool.assign(slot, e).unwrap();
+                remaining.insert(slot, len);
+            }
+            max_occupied = max_occupied.max(pool.occupied());
+            // decode tick: every occupied slot produces one token
+            for slot in pool.occupied_indices() {
+                let left = remaining.get_mut(&slot).unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    remaining.remove(&slot);
+                    let mut e = pool.retire(slot).unwrap();
+                    e.seq.finish(FinishReason::Length);
+                    retired_ids.push(e.seq.req.id);
+                }
+            }
+        }
+
+        retired_ids.sort();
+        let expect: Vec<u64> = (1..=40).collect();
+        assert_eq!(retired_ids, expect,
+                   "every admitted sequence retires exactly once");
+        assert_eq!(pool.admitted_total(), 40);
+        assert_eq!(pool.retired_total(), 40);
+        assert_eq!(max_occupied, capacity,
+                   "back-fill keeps the pool saturated");
+    }
+
+    /// A short and a long sequence share the pool: the short one finishes
+    /// early and its slot is reused by a queued request while the long
+    /// one is still streaming — the defining behavior of continuous
+    /// batching (the wave scheduler would have blocked on the straggler).
+    #[test]
+    fn short_sequence_frees_slot_before_straggler_finishes() {
+        let mut pool = SlotPool::new(2);
+        pool.assign(0, entry(1)).unwrap(); // short: 2 tokens
+        pool.assign(1, entry(2)).unwrap(); // long: 10 tokens
+        let mut lens = vec![(0usize, 2usize), (1, 10)];
+        let mut backfilled_at_tick = None;
+        let mut long_alive_at_backfill = false;
+        for tick in 0..10 {
+            let mut done = Vec::new();
+            for (slot, left) in lens.iter_mut() {
+                *left -= 1;
+                if *left == 0 {
+                    done.push(*slot);
+                }
+            }
+            for slot in done {
+                pool.retire(slot).unwrap();
+                lens.retain(|(s, _)| *s != slot);
+                if backfilled_at_tick.is_none() {
+                    // back-fill from the "queue" immediately
+                    pool.assign(slot, entry(3)).unwrap();
+                    lens.push((slot, 3));
+                    backfilled_at_tick = Some(tick);
+                    long_alive_at_backfill = pool.get(1).is_some();
+                }
+            }
+            if pool.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(backfilled_at_tick, Some(1),
+                   "short sequence retires at its own length");
+        assert!(long_alive_at_backfill,
+                "straggler keeps decoding while the freed slot is reused");
+        assert_eq!(pool.retired_total(), 3);
+    }
+}

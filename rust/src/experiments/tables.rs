@@ -152,6 +152,7 @@ pub fn table3(args: &Args) -> Result<()> {
                 sampler: crate::sampling::SamplerSpec::Greedy,
                 seed: 1,
                 stop_at_eos: false,
+                admitted_at: std::time::Instant::now(),
             };
             engine.generate(&warm)?;
             let mut total = 0.0;
@@ -164,6 +165,7 @@ pub fn table3(args: &Args) -> Result<()> {
                     sampler: crate::sampling::SamplerSpec::Greedy,
                     seed: 1,
                     stop_at_eos: false,
+                    admitted_at: std::time::Instant::now(),
                 };
                 let resp = engine.generate(&req)?;
                 total += resp.decode_ms / 1e3;
@@ -279,6 +281,7 @@ pub fn table4(args: &Args) -> Result<()> {
                     sampler: crate::sampling::SamplerSpec::Greedy,
                     seed: 1,
                     stop_at_eos: false,
+                    admitted_at: std::time::Instant::now(),
                 })
                 .collect();
             let resps = engine.generate_batch(&reqs)?;

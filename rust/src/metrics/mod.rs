@@ -51,12 +51,18 @@ impl Histogram {
     }
 
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros() as u64;
+        self.record_value(d.as_micros() as u64);
+    }
+
+    /// Record a raw value. The histogram is unit-agnostic: latency
+    /// histograms store microseconds, the slot-occupancy histogram stores
+    /// occupied-slot counts per decode tick.
+    pub fn record_value(&self, v: u64) {
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+        self.max_us.fetch_max(v, Ordering::Relaxed);
         let mut b = self.buckets.lock().unwrap();
-        b[Self::bucket_for(us)] += 1;
+        b[Self::bucket_for(v)] += 1;
     }
 
     pub fn count(&self) -> u64 {
@@ -133,6 +139,19 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge (slot occupancy, pool size).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Tokens/sec style meter.
 #[derive(Debug)]
 pub struct Meter {
@@ -170,11 +189,21 @@ pub struct MetricsRegistry {
     pub decode_step_latency: Histogram,
     pub selection_latency: Histogram,
     pub gather_latency: Histogram,
+    pub kv_splice_latency: Histogram,
     pub e2e_latency: Histogram,
     pub queue_wait: Histogram,
+    /// admission → first streamed token, per request
+    pub ttft: Histogram,
+    /// gap between consecutive streamed tokens of one sequence
+    pub inter_token_latency: Histogram,
+    /// occupied-slot count per decode tick (values, not latencies)
+    pub slot_occupancy: Histogram,
     pub requests_admitted: Counter,
     pub requests_completed: Counter,
     pub requests_rejected: Counter,
+    pub decode_ticks: Counter,
+    pub slots_busy: Gauge,
+    pub slots_total: Gauge,
     pub tokens_generated: Meter,
     pub prompt_tokens: Meter,
 }
@@ -193,13 +222,27 @@ impl MetricsRegistry {
                 ("max_us", n(s.max_us as f64)),
             ])
         };
+        let occ = self.slot_occupancy.snapshot();
         obj(vec![
             ("prefill_latency", hist(&self.prefill_latency)),
             ("decode_step_latency", hist(&self.decode_step_latency)),
             ("selection_latency", hist(&self.selection_latency)),
             ("gather_latency", hist(&self.gather_latency)),
+            ("kv_splice_latency", hist(&self.kv_splice_latency)),
             ("e2e_latency", hist(&self.e2e_latency)),
             ("queue_wait", hist(&self.queue_wait)),
+            ("ttft", hist(&self.ttft)),
+            ("inter_token_latency", hist(&self.inter_token_latency)),
+            (
+                "slot_occupancy",
+                obj(vec![
+                    ("ticks", n(occ.count as f64)),
+                    ("mean", n(occ.mean_us)),
+                    ("max", n(occ.max_us as f64)),
+                    ("busy", n(self.slots_busy.get() as f64)),
+                    ("total", n(self.slots_total.get() as f64)),
+                ]),
+            ),
             (
                 "requests",
                 obj(vec![
@@ -219,6 +262,7 @@ impl MetricsRegistry {
                         "tokens_total",
                         Value::Num(self.tokens_generated.total() as f64),
                     ),
+                    ("decode_ticks", n(self.decode_ticks.get() as f64)),
                 ]),
             ),
         ])
@@ -310,8 +354,27 @@ mod tests {
         let v = r.to_json();
         assert!(v.get("prefill_latency").unwrap().get("count").is_some());
         assert!(v.get("throughput").is_some());
+        assert!(v.get("ttft").is_some());
+        assert!(v.get("inter_token_latency").is_some());
+        assert!(v.get("slot_occupancy").unwrap().get("mean").is_some());
         // serializes without panicking
         let s = crate::json::to_string(&v);
         assert!(crate::json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn gauge_and_value_histogram() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        let h = Histogram::new();
+        for v in [2u64, 4, 4, 8] {
+            h.record_value(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_us() - 4.5).abs() < 1e-9);
+        assert_eq!(h.max_us(), 8);
     }
 }

@@ -2,14 +2,34 @@
 //! threads; the PJRT engine is single-threaded by necessity, so handler
 //! threads only do admission + IO and the engine thread owns the device).
 //!
-//! Protocol (one JSON object per line):
+//! ## Line protocol (one JSON object per line, both directions)
+//!
+//! Requests:
 //!   {"op":"generate","prompt":"...","max_new_tokens":32,
-//!    "mode":"griffin","keep":0.5,"temperature":0.0,"seed":1}
+//!    "mode":"griffin","keep":0.5,"temperature":0.0,"seed":1,
+//!    "stop_at_eos":true,"stream":false}
 //!   {"op":"metrics"}
 //!   {"op":"config"}
 //!   {"op":"shutdown"}
 //!
-//! Responses mirror the request op; generate returns text/tokens/timings.
+//! Modes: full | griffin | griffin-sampling | topk+sampling | magnitude
+//! | wanda.
+//!
+//! Non-streaming generate (default) answers with a single line:
+//!   {"op":"generate","id":7,"text":...,"tokens":[...],"finish":"eos",
+//!    "k_used":128,"timing":{...}}
+//!
+//! With "stream":true the connection receives one event line per token
+//! as the continuous-batching engine emits it, then a final done event —
+//! time-to-first-token is the gap to the first token line:
+//!   {"event":"token","id":7,"index":0,"token":104,"text":"h"}
+//!   {"event":"token","id":7,"index":1,"token":105,"text":"i"}
+//!   {"event":"done","op":"generate","id":7,"text":"hi",...}
+//!
+//! Errors carry a machine-readable code; a request hitting a full
+//! admission queue gets {"op":"error","code":"queue_full",...}
+//! immediately instead of blocking:
+//!   {"op":"error","code":"queue_full","message":"queue full (capacity 64)"}
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -22,25 +42,56 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::engine::{Engine, GenResponse, Mode};
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::scheduler::{EngineEvent, Scheduler};
 use crate::coordinator::selection::Strategy;
 use crate::coordinator::sequence::{FinishReason, GenRequest};
 use crate::json::{self, n, obj, s, Value};
 use crate::sampling::SamplerSpec;
 use crate::tokenizer::Tokenizer;
 
-type Waiters = Arc<Mutex<HashMap<u64, Sender<GenResponse>>>>;
+/// A connection waiting for engine events of one request.
+pub struct Waiter {
+    pub tx: Sender<EngineEvent>,
+    pub stream: bool,
+}
+
+pub type Waiters = Arc<Mutex<HashMap<u64, Waiter>>>;
+
+/// Route an engine event to the connection waiting on its request id.
+/// Token events only reach streaming waiters; the done event removes the
+/// waiter. Shared by `run`, the integration tests, and examples.
+pub fn forward(waiters: &Waiters, ev: EngineEvent) {
+    let id = ev.id();
+    match ev {
+        EngineEvent::Done(_) => {
+            let w = waiters.lock().unwrap().remove(&id);
+            if let Some(w) = w {
+                let _ = w.tx.send(ev);
+            }
+        }
+        EngineEvent::Token { .. } => {
+            let g = waiters.lock().unwrap();
+            if let Some(w) = g.get(&id) {
+                if w.stream {
+                    let _ = w.tx.send(ev);
+                }
+            }
+        }
+    }
+}
 
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    router: Arc<Router>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the accept loop
+        // wake a parked engine thread and poke the accept loop
+        self.router.wake_all();
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -68,6 +119,10 @@ pub fn parse_generate(v: &Value, tok: &Tokenizer) -> Result<GenRequest> {
         "griffin-sampling" => {
             Mode::Griffin { keep, strategy: Strategy::Sampling { seed } }
         }
+        "topk+sampling" => Mode::Griffin {
+            keep,
+            strategy: Strategy::TopKPlusSampling { seed },
+        },
         "magnitude" => Mode::Magnitude { keep },
         "wanda" => Mode::Wanda { keep },
         other => anyhow::bail!("unknown mode {other:?}"),
@@ -85,6 +140,10 @@ pub fn parse_generate(v: &Value, tok: &Tokenizer) -> Result<GenRequest> {
     } else {
         SamplerSpec::Temperature(temperature)
     };
+    let stop_at_eos = v
+        .get("stop_at_eos")
+        .and_then(Value::as_bool)
+        .unwrap_or(true);
     Ok(GenRequest {
         id: 0,
         prompt: tok.encode_with_bos(prompt_text),
@@ -92,7 +151,8 @@ pub fn parse_generate(v: &Value, tok: &Tokenizer) -> Result<GenRequest> {
         mode,
         sampler,
         seed,
-        stop_at_eos: true,
+        stop_at_eos,
+        admitted_at: std::time::Instant::now(),
     })
 }
 
@@ -123,13 +183,39 @@ pub fn response_json(r: &GenResponse) -> Value {
                 ("prefill_ms", n(r.prefill_ms)),
                 ("select_ms", n(r.select_ms)),
                 ("decode_ms", n(r.decode_ms)),
+                ("ttft_ms", n(r.ttft_ms)),
+                ("tokens_per_sec", n(r.tokens_per_sec)),
             ]),
         ),
     ])
 }
 
-fn err_json(msg: &str) -> String {
-    json::to_string(&obj(vec![("op", s("error")), ("message", s(msg))]))
+fn token_json(id: u64, index: usize, token: i32, text: &str) -> String {
+    json::to_string(&obj(vec![
+        ("event", s("token")),
+        ("id", n(id as f64)),
+        ("index", n(index as f64)),
+        ("token", n(token as f64)),
+        ("text", s(text)),
+    ]))
+}
+
+fn done_json(r: &GenResponse, stream: bool) -> String {
+    let mut v = response_json(r);
+    if stream {
+        if let Value::Obj(ref mut o) = v {
+            o.insert(0, ("event".to_string(), s("done")));
+        }
+    }
+    json::to_string(&v)
+}
+
+fn err_json(code: &str, msg: &str) -> String {
+    json::to_string(&obj(vec![
+        ("op", s("error")),
+        ("code", s(code)),
+        ("message", s(msg)),
+    ]))
 }
 
 /// Run the server. Blocks the calling thread with the ENGINE loop (PJRT
@@ -140,12 +226,7 @@ pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
     eprintln!("griffin server listening on {}", handle.addr);
     let stop = handle.stop.clone();
     scheduler.serve(
-        |resp: GenResponse| {
-            let tx = waiters.lock().unwrap().remove(&resp.id);
-            if let Some(tx) = tx {
-                let _ = tx.send(resp);
-            }
-        },
+        |ev: EngineEvent| forward(&waiters, ev),
         &|| stop.load(Ordering::SeqCst),
     )?;
     handle.shutdown();
@@ -198,11 +279,11 @@ pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
         })
     };
 
-    let scheduler_router = router;
+    let scheduler_router = router.clone();
     // engine scheduler runs on the CALLER's thread (PJRT not Send)
     let scheduler = Scheduler::new(engine, scheduler_router);
     Ok((
-        ServerHandle { addr, stop, accept_thread: Some(accept_thread) },
+        ServerHandle { addr, stop, router, accept_thread: Some(accept_thread) },
         scheduler,
         waiters,
     ))
@@ -217,63 +298,126 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
 ) {
     let tok = Tokenizer::new();
-    let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
+    let send = |w: &mut TcpStream, line: &str| -> bool {
+        w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
+    };
+    'conn: for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match json::parse(&line) {
-            Err(e) => err_json(&format!("bad json: {e}")),
-            Ok(v) => match v.get("op").and_then(Value::as_str) {
-                Some("generate") => match parse_generate(&v, &tok) {
-                    Err(e) => {
-                        metrics.requests_rejected.inc();
-                        err_json(&e.to_string())
+        let v = match json::parse(&line) {
+            Err(e) => {
+                if !send(&mut writer,
+                         &err_json("bad_json", &format!("bad json: {e}"))) {
+                    break;
+                }
+                continue;
+            }
+            Ok(v) => v,
+        };
+        match v.get("op").and_then(Value::as_str) {
+            Some("generate") => match parse_generate(&v, &tok) {
+                Err(e) => {
+                    metrics.requests_rejected.inc();
+                    if !send(&mut writer,
+                             &err_json("bad_request", &e.to_string())) {
+                        break 'conn;
                     }
-                    Ok(mut req) => {
-                        req.id = router.fresh_id();
-                        let (tx, rx) = channel();
-                        waiters.lock().unwrap().insert(req.id, tx);
-                        let id = req.id;
-                        match router.admit(req) {
-                            Err(e) => {
-                                waiters.lock().unwrap().remove(&id);
-                                metrics.requests_rejected.inc();
-                                err_json(&e.to_string())
+                }
+                Ok(mut req) => {
+                    let stream_tokens = v
+                        .get("stream")
+                        .and_then(Value::as_bool)
+                        .unwrap_or(false);
+                    req.id = router.fresh_id();
+                    let id = req.id;
+                    let (tx, rx) = channel();
+                    waiters
+                        .lock()
+                        .unwrap()
+                        .insert(id, Waiter { tx, stream: stream_tokens });
+                    match router.admit(req) {
+                        Err(e) => {
+                            waiters.lock().unwrap().remove(&id);
+                            metrics.requests_rejected.inc();
+                            if !send(&mut writer,
+                                     &err_json(e.code(), &e.to_string())) {
+                                break 'conn;
                             }
-                            Ok(_) => {
-                                metrics.requests_admitted.inc();
+                        }
+                        Ok(_) => {
+                            metrics.requests_admitted.inc();
+                            loop {
                                 match rx.recv() {
-                                    Ok(resp) => json::to_string(
-                                        &response_json(&resp)),
-                                    Err(_) => err_json("engine dropped"),
+                                    Ok(EngineEvent::Token {
+                                        id, index, token, text,
+                                    }) => {
+                                        if !send(&mut writer, &token_json(
+                                            id, index, token, &text)) {
+                                            break 'conn;
+                                        }
+                                    }
+                                    Ok(EngineEvent::Done(r)) => {
+                                        if !send(&mut writer, &done_json(
+                                            &r, stream_tokens)) {
+                                            break 'conn;
+                                        }
+                                        break;
+                                    }
+                                    Err(_) => {
+                                        let _ = send(&mut writer, &err_json(
+                                            "engine_dropped",
+                                            "engine dropped"));
+                                        break 'conn;
+                                    }
                                 }
                             }
                         }
                     }
-                },
-                Some("metrics") => json::to_string(&metrics.to_json()),
-                Some("config") => config_json.clone(),
-                Some("shutdown") => {
-                    stop.store(true, Ordering::SeqCst);
-                    json::to_string(&obj(vec![("op", s("shutdown"))]))
                 }
-                _ => err_json("unknown op"),
             },
-        };
-        if writer.write_all(reply.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
-            break;
+            Some("metrics") => {
+                let mut m = metrics.to_json();
+                if let Value::Obj(ref mut o) = m {
+                    o.push((
+                        "queue".to_string(),
+                        obj(vec![
+                            ("depth", n(router.len() as f64)),
+                            ("capacity", n(router.capacity as f64)),
+                        ]),
+                    ));
+                }
+                if !send(&mut writer, &json::to_string(&m)) {
+                    break 'conn;
+                }
+            }
+            Some("config") => {
+                if !send(&mut writer, &config_json) {
+                    break 'conn;
+                }
+            }
+            Some("shutdown") => {
+                stop.store(true, Ordering::SeqCst);
+                router.wake_all();
+                let _ = send(&mut writer,
+                             &json::to_string(&obj(vec![
+                                 ("op", s("shutdown")),
+                             ])));
+            }
+            _ => {
+                if !send(&mut writer, &err_json("unknown_op", "unknown op"))
+                {
+                    break 'conn;
+                }
+            }
         }
     }
-    let _ = peer;
 }
 
 /// Minimal blocking client for examples/tests.
@@ -292,14 +436,24 @@ impl Client {
         })
     }
 
-    pub fn call(&mut self, req: &Value) -> Result<Value> {
+    fn send(&mut self, req: &Value) -> Result<()> {
         let line = json::to_string(req);
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Value> {
         let mut buf = String::new();
         self.reader.read_line(&mut buf)?;
-        Ok(json::parse(buf.trim())
-            .map_err(|e| anyhow::anyhow!("bad server reply: {e}"))?)
+        json::parse(buf.trim())
+            .map_err(|e| anyhow::anyhow!("bad server reply: {e}"))
+    }
+
+    /// One request, one response line (non-streaming ops).
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        self.send(req)?;
+        self.recv()
     }
 
     pub fn generate(&mut self, prompt: &str, max_new: usize, mode: &str)
@@ -310,6 +464,29 @@ impl Client {
             ("max_new_tokens", n(max_new as f64)),
             ("mode", s(mode)),
         ]))
+    }
+
+    /// Streaming generate: `on_token` sees every token event as it
+    /// arrives; returns the final done (or error) line.
+    pub fn generate_stream<F>(&mut self, prompt: &str, max_new: usize,
+                              mode: &str, mut on_token: F) -> Result<Value>
+    where
+        F: FnMut(&Value),
+    {
+        self.send(&obj(vec![
+            ("op", s("generate")),
+            ("prompt", s(prompt)),
+            ("max_new_tokens", n(max_new as f64)),
+            ("mode", s(mode)),
+            ("stream", Value::Bool(true)),
+        ]))?;
+        loop {
+            let v = self.recv()?;
+            match v.get("event").and_then(Value::as_str) {
+                Some("token") => on_token(&v),
+                _ => return Ok(v),
+            }
+        }
     }
 }
 
@@ -330,12 +507,44 @@ mod tests {
         assert!(matches!(r.mode, Mode::Griffin { keep, .. }
                          if (keep - 0.75).abs() < 1e-9));
         assert_eq!(r.prompt.len(), 3); // BOS + 2 bytes
+        assert!(r.stop_at_eos, "stop_at_eos defaults to true");
 
         let bad = json::parse(r#"{"op":"generate","prompt":"x",
                                   "mode":"nope"}"#).unwrap();
         assert!(parse_generate(&bad, &tok).is_err());
         let nop = json::parse(r#"{"op":"generate"}"#).unwrap();
         assert!(parse_generate(&nop, &tok).is_err());
+    }
+
+    #[test]
+    fn parse_generate_topk_plus_sampling() {
+        let tok = Tokenizer::new();
+        let v = json::parse(
+            r#"{"prompt":"x","mode":"topk+sampling","keep":0.5,"seed":9}"#,
+        )
+        .unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert!(matches!(
+            r.mode,
+            Mode::Griffin {
+                strategy: Strategy::TopKPlusSampling { seed: 9 },
+                ..
+            }
+        ));
+        // round-trips with Mode::label
+        assert_eq!(r.mode.label(), "topk+sampling@0.5");
+    }
+
+    #[test]
+    fn parse_generate_stop_at_eos() {
+        let tok = Tokenizer::new();
+        let v = json::parse(
+            r#"{"prompt":"x","stop_at_eos":false}"#).unwrap();
+        let r = parse_generate(&v, &tok).unwrap();
+        assert!(!r.stop_at_eos);
+        let v = json::parse(
+            r#"{"prompt":"x","stop_at_eos":true}"#).unwrap();
+        assert!(parse_generate(&v, &tok).unwrap().stop_at_eos);
     }
 
     #[test]
@@ -352,5 +561,40 @@ mod tests {
         let v = json::parse(r#"{"prompt":"x"}"#).unwrap();
         let r = parse_generate(&v, &tok).unwrap();
         assert_eq!(r.sampler, SamplerSpec::Greedy);
+    }
+
+    #[test]
+    fn error_json_carries_code() {
+        let e = err_json("queue_full", "queue full (capacity 4)");
+        let v = json::parse(&e).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("error"));
+        assert_eq!(v.get("code").unwrap().as_str(), Some("queue_full"));
+    }
+
+    #[test]
+    fn stream_event_shapes() {
+        let t = token_json(3, 1, 104, "h");
+        let v = json::parse(&t).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("token"));
+        assert_eq!(v.get("index").unwrap().as_usize(), Some(1));
+        let resp = GenResponse {
+            id: 3,
+            tokens: vec![104],
+            text: "h".into(),
+            logprobs: vec![-0.1],
+            finish: FinishReason::Length,
+            k_used: None,
+            prefill_ms: 1.0,
+            select_ms: 0.0,
+            decode_ms: 2.0,
+            ttft_ms: 1.5,
+            tokens_per_sec: 500.0,
+        };
+        let d = json::parse(&done_json(&resp, true)).unwrap();
+        assert_eq!(d.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(d.get("op").unwrap().as_str(), Some("generate"));
+        let nd = json::parse(&done_json(&resp, false)).unwrap();
+        assert!(nd.get("event").is_none());
+        assert!(nd.get("timing").unwrap().get("ttft_ms").is_some());
     }
 }

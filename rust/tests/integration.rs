@@ -229,6 +229,50 @@ fn scheduler_completes_all_requests_exactly_once() {
 }
 
 #[test]
+fn continuous_batching_backfills_freed_slots() {
+    // Mixed-length workload through the slot scheduler: short sequences
+    // must finish at their own length while stragglers keep running, and
+    // the total decode-tick count must beat what run-to-completion waves
+    // would need — the whole point of continuous batching.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    let router = std::sync::Arc::new(Router::new(256, 256));
+    let n = 2 * bmax + 1;
+    let (short_g, long_g) = (2usize, 17usize);
+    let mut expected = std::collections::HashMap::new();
+    for i in 0..n {
+        let g = if i % 2 == 0 { short_g } else { long_g };
+        let mut q = GenRequest::greedy(
+            0, prompt_ids(16 + (i % 8)), g, Mode::Full);
+        q.stop_at_eos = false;
+        let id = router.admit(q).unwrap();
+        expected.insert(id, g);
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), n);
+    let mut seen = std::collections::HashSet::new();
+    for r in &responses {
+        assert!(seen.insert(r.id), "request {} finished twice", r.id);
+        assert_eq!(r.tokens.len(), expected[&r.id],
+                   "request {} got the wrong token budget", r.id);
+        assert!(r.ttft_ms >= 0.0);
+    }
+    // run-to-completion waves: ceil(n / bmax) batches, each paying the
+    // straggler's full decode length
+    let wave_ticks = n.div_ceil(bmax) * (long_g - 1);
+    let cont_ticks = sched.engine.metrics.decode_ticks.get() as usize;
+    assert!(
+        cont_ticks < wave_ticks,
+        "continuous batching should need fewer decode ticks than waves \
+         ({cont_ticks} vs {wave_ticks})"
+    );
+    assert!(sched.engine.metrics.ttft.count() as usize >= n);
+    assert!(sched.engine.metrics.slot_occupancy.count() > 0);
+}
+
+#[test]
 fn server_round_trip_over_tcp() {
     let _g = pjrt_lock();
     let Some(e) = engine("tiny-swiglu") else { return };
@@ -247,37 +291,124 @@ fn server_round_trip_over_tcp() {
         let r = c.generate("the quiet river joins", 6, "griffin").unwrap();
         assert_eq!(r.get("op").unwrap().as_str().unwrap(), "generate");
         assert!(r.get("text").unwrap().as_str().is_some());
+        assert!(r.get("timing").unwrap().get("ttft_ms").is_some());
         let m = c
             .call(&griffin::json::parse(r#"{"op":"metrics"}"#).unwrap())
             .unwrap();
         assert!(m.get("throughput").is_some());
+        assert!(m.get("queue").unwrap().get("capacity").is_some());
         let s = c
             .call(&griffin::json::parse(r#"{"op":"shutdown"}"#).unwrap())
             .unwrap();
         assert_eq!(s.get("op").unwrap().as_str().unwrap(), "shutdown");
     });
 
-    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    {
-        let waiters = waiters.clone();
-        // drive the engine until the client thread is done
-        while !client_thread.is_finished() {
-            scheduler
-                .serve(
-                    |resp| {
-                        let tx =
-                            waiters.lock().unwrap().remove(&resp.id);
-                        if let Some(tx) = tx {
-                            let _ = tx.send(resp);
-                        }
-                    },
-                    &|| client_thread.is_finished(),
-                )
-                .unwrap();
-        }
-    }
-    let _ = stop;
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
     client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn server_streams_token_events() {
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let mut events = Vec::new();
+        let done = c
+            .generate_stream("the quiet river joins", 6, "full", |ev| {
+                events.push((
+                    ev.get("index").unwrap().as_usize().unwrap(),
+                    ev.get("token").unwrap().as_i64().unwrap() as i32,
+                ));
+            })
+            .unwrap();
+        assert_eq!(done.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(done.get("op").unwrap().as_str(), Some("generate"));
+        let toks: Vec<i32> = done
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        assert!(!events.is_empty(), "no token events streamed");
+        assert_eq!(events.len(), toks.len(),
+                   "one event per generated token");
+        for (i, (idx, tok)) in events.iter().enumerate() {
+            assert_eq!(*idx, i, "token events arrive in order");
+            assert_eq!(*tok, toks[i],
+                       "streamed tokens match the final response");
+        }
+        // engine-side TTFT must have been recorded
+        let m = c
+            .call(&griffin::json::parse(r#"{"op":"metrics"}"#).unwrap())
+            .unwrap();
+        let ttft_count =
+            m.get("ttft").unwrap().get("count").unwrap().as_usize();
+        assert!(ttft_count.unwrap() >= 1, "ttft histogram empty");
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn full_queue_rejects_with_queue_full_code() {
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    // queue capacity 1 and the engine loop NOT running: the first
+    // request parks in the queue, the second must be rejected
+    // immediately with code=queue_full instead of blocking.
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 1).unwrap();
+    let addr = handle.addr.to_string();
+
+    let addr1 = addr.clone();
+    let first = std::thread::spawn(move || {
+        let mut c = griffin::server::Client::connect(&addr1).unwrap();
+        let r = c.generate("the quiet river joins", 4, "full").unwrap();
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+    });
+    // wait (deterministically) for the first request to occupy the queue
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while scheduler.router.len() < 1 {
+        assert!(std::time::Instant::now() < deadline,
+                "first request never reached the queue");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let mut c2 = griffin::server::Client::connect(&addr).unwrap();
+    let r = c2.generate("another prompt", 4, "full").unwrap();
+    assert_eq!(r.get("op").unwrap().as_str(), Some("error"));
+    assert_eq!(r.get("code").unwrap().as_str(), Some("queue_full"),
+               "full queue must reject, not block: {r:?}");
+
+    // now drain the first request and shut down
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| first.is_finished(),
+        )
+        .unwrap();
+    first.join().unwrap();
     handle.shutdown();
 }
 
