@@ -187,6 +187,77 @@ class Emitter:
         self.emit(f"decode_pruned_b{B}_k{K}", fn, arg_specs, inputs, outputs,
                   {"kind": "decode_pruned", "batch": B, "k": K})
 
+    def _sampling_io(self, B):
+        """Shared tail of the fused-sampling ABI (see model.sample_tokens)."""
+        arg_specs = [spec((B,), jnp.float32), spec((B,), jnp.int32),
+                     spec((B,), jnp.int32)]
+        inputs = [io_entry("temp", (B,)), io_entry("topk", (B,), I32),
+                  io_entry("rng", (B,), I32)]
+        return arg_specs, inputs
+
+    def emit_decode_sample(self, B):
+        """decode fused with on-device sampling: logits never reach the
+        host; outputs are token i32[B] + logprob f32[B] + KV + rng."""
+        cfg, names = self.cfg, self.param_names
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            kc, vc, tok, pos, temp, topk, rng = args[len(names):]
+            return model.decode_sample(
+                cfg, params, kc, vc, tok, pos, temp, topk, rng)
+
+        cspec = self.cache_spec(B)
+        s_specs, s_inputs = self._sampling_io(B)
+        arg_specs = (self.param_specs_args(names)
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)] + s_specs)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)] + s_inputs)
+        outputs = [io_entry("token", (B,), I32),
+                   io_entry("logprob", (B,)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape),
+                   io_entry("rng", (B,), I32)]
+        self.emit(f"decode_sample_b{B}", fn, arg_specs, inputs, outputs,
+                  {"kind": "decode_sample", "batch": B,
+                   "sample_topk": model.SAMPLE_TOPK})
+
+    def emit_decode_pruned_sample(self, B, K):
+        cfg = self.cfg
+        nonff, pn = self.nonff_names, self.pruned_names()
+
+        def fn(*args):
+            params = dict(zip(nonff, args))
+            pruned = dict(zip(pn, args[len(nonff):len(nonff) + len(pn)]))
+            kc, vc, tok, pos, temp, topk, rng = args[len(nonff) + len(pn):]
+            return model.decode_pruned_sample(
+                cfg, params, pruned, kc, vc, tok, pos, temp, topk, rng)
+
+        cspec = self.cache_spec(B)
+        pspecs = self.pruned_specs(K)
+        s_specs, s_inputs = self._sampling_io(B)
+        arg_specs = (self.param_specs_args(nonff) + pspecs
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)] + s_specs)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in nonff]
+                  + [io_entry(n, s.shape) for n, s in zip(pn, pspecs)]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)] + s_inputs)
+        outputs = [io_entry("token", (B,), I32),
+                   io_entry("logprob", (B,)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape),
+                   io_entry("rng", (B,), I32)]
+        self.emit(f"decode_pruned_sample_b{B}_k{K}", fn, arg_specs, inputs,
+                  outputs,
+                  {"kind": "decode_pruned_sample", "batch": B, "k": K,
+                   "sample_topk": model.SAMPLE_TOPK})
+
     def emit_gather(self, K):
         cfg = self.cfg
         ffn = model.ff_param_names(cfg)  # e.g. [w1, w2, wg]
@@ -321,10 +392,12 @@ class Emitter:
                 if S <= cfg.max_seq:
                     self.emit_prefill(B, S)
             self.emit_decode(B)
+            self.emit_decode_sample(B)
             bks = ks if (B == 1 and full_sweep) else [k_half]
             for K in bks:
                 if K < cfg.d_ff:
                     self.emit_decode_pruned(B, K)
+                    self.emit_decode_pruned_sample(B, K)
         for K in ks:
             if K < cfg.d_ff:
                 self.emit_gather(K)

@@ -16,6 +16,21 @@ Executable kinds (see DESIGN.md §1):
   gather          index-select FF weights for a chosen expert set E.
   generate_scan   G fused greedy decode steps via lax.scan (throughput
                   path — the whole generation phase in one PJRT call).
+  decode_sample   decode fused with ON-DEVICE token sampling: the [B, V]
+                  logits never cross the host boundary; only the sampled
+                  token ids i32[B] and their logprobs f32[B] come back.
+  decode_pruned_sample  the same fusion over gathered expert weights.
+
+Fused-sampling ABI (mirrored by rust/src/sampling/mod.rs DeviceSampler —
+keep the two in lockstep):
+  inputs  (after params/kv/token/pos): temp f32[B], topk i32[B],
+          rng i32[B] (bitcast of a xorshift32 u32 state, never 0)
+  per slot b:  temp[b] <= 1e-6  ->  greedy argmax
+               else             ->  top-k(min(topk[b], SAMPLE_TOPK))
+                                    temperature sampling
+  The RNG advances exactly once per call for every slot (data-
+  independent), so host mirrors can track the stream without reading
+  the state back.
 
 KV-cache convention: one stacked tensor per K and V, [L, B, H, Smax, dh].
 Each sequence in a batch carries its own write position `pos[B]`; decode
@@ -342,6 +357,80 @@ def activation_map(cfg: ModelConfig, params: Params, tokens, lengths):
             jnp.linalg.norm(zm, axis=-1, keepdims=True), 1e-8)
         maps.append(jnp.abs(zm / norms)[0])  # [S, F]
     return jnp.stack(maps)
+
+
+# ---------------------------------------------------------------------------
+# on-device sampling (fused decode_sample / decode_pruned_sample)
+# ---------------------------------------------------------------------------
+
+# Static top-k truncation bucket compiled into every decode_sample
+# executable. Per-slot `topk` is clamped to it; sampler specs with a
+# larger k fall back to the host-logits path (Engine fused-eligibility).
+SAMPLE_TOPK = 32
+
+
+def _xorshift32(state):
+    """One xorshift32 step over a uint32 array (wraps mod 2^32)."""
+    state = state ^ (state << jnp.uint32(13))
+    state = state ^ (state >> jnp.uint32(17))
+    state = state ^ (state << jnp.uint32(5))
+    return state
+
+
+def sample_tokens(logits, temp, topk, rng):
+    """On-device sampling over decode logits (the fused-sampling ABI).
+
+    logits [B, V] f32; temp [B] f32; topk [B] i32; rng [B] i32 (bitcast
+    xorshift32 state). Returns (token i32[B], logprob f32[B],
+    new_rng i32[B]). temp <= 1e-6 selects greedy argmax for that slot;
+    otherwise top-min(topk, SAMPLE_TOPK) temperature sampling. The RNG
+    advances once per call per slot regardless of the path taken.
+    """
+    B, V = logits.shape
+    kk = min(SAMPLE_TOPK, V)
+
+    state = jax.lax.bitcast_convert_type(rng, jnp.uint32)
+    state = _xorshift32(state)
+    # 24 high-ish bits -> uniform in [0, 1); exactly representable in f32
+    u = (state >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24))
+
+    vals, idxs = jax.lax.top_k(logits, kk)  # sorted desc, ties keep order
+    safe_t = jnp.maximum(temp, 1e-6)[:, None]
+    scaled = (vals - vals[:, :1]) / safe_t
+    keep = jnp.arange(kk)[None, :] < jnp.maximum(topk, 1)[:, None]
+    w = jnp.where(keep, jnp.exp(scaled), 0.0)
+    cum = jnp.cumsum(w, axis=-1)
+    r = u * cum[:, -1]
+    chosen = jnp.argmax(cum >= r[:, None], axis=-1)  # first j: cum >= r
+    sampled = jnp.take_along_axis(idxs, chosen[:, None], axis=-1)[:, 0]
+
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where(temp > 1e-6, sampled, greedy).astype(jnp.int32)
+    lp_all = jax.nn.log_softmax(logits, axis=-1)
+    lp = jnp.take_along_axis(lp_all, tok[:, None], axis=-1)[:, 0]
+    return tok, lp, jax.lax.bitcast_convert_type(state, jnp.int32)
+
+
+def decode_sample(cfg: ModelConfig, params: Params, kcache, vcache, token,
+                  pos, temp, topk, rng):
+    """Full-model decode step fused with on-device sampling.
+
+    Returns (token i32[B], logprob f32[B], kcache, vcache, rng i32[B]) —
+    the [B, V] logits tensor stays device-resident.
+    """
+    logits, kcache, vcache = decode(cfg, params, kcache, vcache, token, pos)
+    tok, lp, rng = sample_tokens(logits, temp, topk, rng)
+    return tok, lp, kcache, vcache, rng
+
+
+def decode_pruned_sample(cfg: ModelConfig, params: Params, pruned, kcache,
+                         vcache, token, pos, temp, topk, rng):
+    """GRIFFIN pruned decode step fused with on-device sampling."""
+    logits, kcache, vcache = decode_pruned(
+        cfg, params, pruned, kcache, vcache, token, pos)
+    tok, lp, rng = sample_tokens(logits, temp, topk, rng)
+    return tok, lp, kcache, vcache, rng
 
 
 # ---------------------------------------------------------------------------

@@ -115,6 +115,135 @@ class TestActivationMap:
                                    rtol=2e-4, atol=2e-5)
 
 
+class TestFusedSampling:
+    """model.sample_tokens is the python half of the fused-sampling ABI
+    (rust/src/sampling/mod.rs DeviceSampler mirrors it bit-for-bit at the
+    integer level; these tests pin the semantics both sides rely on)."""
+
+    def _logits(self, seed, b=3, v=64):
+        return jnp.asarray(
+            np.random.RandomState(seed).randn(b, v), jnp.float32)
+
+    def test_greedy_when_temp_zero(self):
+        logits = self._logits(0)
+        temp = jnp.zeros(3, jnp.float32)
+        topk = jnp.full((3,), 8, jnp.int32)
+        rng = jnp.array([1, 2, 3], jnp.int32)
+        tok, lp, rng2 = model.sample_tokens(logits, temp, topk, rng)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.argmax(np.asarray(logits), axis=-1))
+        # logprob is log_softmax at the chosen token
+        ref = jax.nn.log_softmax(logits, axis=-1)
+        want = np.take_along_axis(
+            np.asarray(ref), np.asarray(tok)[:, None], axis=-1)[:, 0]
+        np.testing.assert_allclose(np.asarray(lp), want, rtol=1e-5)
+        # rng advances even on the greedy path (data-independent stream)
+        assert not np.array_equal(np.asarray(rng), np.asarray(rng2))
+
+    def test_topk_restricts_support(self):
+        logits = self._logits(1, b=1)
+        temp = jnp.ones(1, jnp.float32)
+        topk = jnp.full((1,), 4, jnp.int32)
+        allowed = set(np.argsort(-np.asarray(logits)[0])[:4].tolist())
+        rng = jnp.array([7], jnp.int32)
+        seen = set()
+        for _ in range(64):
+            tok, _, rng = model.sample_tokens(logits, temp, topk, rng)
+            seen.add(int(tok[0]))
+        assert seen <= allowed, f"sampled outside top-4: {seen - allowed}"
+        assert len(seen) > 1, "temperature sampling should move around"
+
+    def test_deterministic_given_state(self):
+        logits = self._logits(2)
+        temp = jnp.full((3,), 0.8, jnp.float32)
+        topk = jnp.full((3,), 8, jnp.int32)
+        rng = jnp.array([11, 12, 13], jnp.int32)
+        a = model.sample_tokens(logits, temp, topk, rng)
+        b = model.sample_tokens(logits, temp, topk, rng)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_xorshift32_matches_reference(self):
+        """Pin the exact RNG recurrence the rust mirror implements."""
+        def ref_step(s):
+            s ^= (s << 13) & 0xFFFFFFFF
+            s ^= s >> 17
+            s ^= (s << 5) & 0xFFFFFFFF
+            return s & 0xFFFFFFFF
+        s0 = np.uint32(0x9E3779B9)
+        got = model._xorshift32(jnp.asarray([s0], jnp.uint32))
+        assert int(got[0]) == ref_step(int(s0))
+
+    def test_decode_sample_matches_decode_plus_sampling(self):
+        """The fused executable is exactly decode + sample_tokens."""
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        B = 2
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        kc = jnp.zeros(cshape, jnp.float32)
+        vc = jnp.zeros(cshape, jnp.float32)
+        tok = jnp.array([5, 9], jnp.int32)
+        pos = jnp.array([0, 0], jnp.int32)
+        temp = jnp.array([0.0, 0.9], jnp.float32)
+        topk = jnp.array([1, 8], jnp.int32)
+        rng = jnp.array([3, 4], jnp.int32)
+        logits, kc1, vc1 = model.decode(cfg, params, kc, vc, tok, pos)
+        want_tok, want_lp, want_rng = model.sample_tokens(
+            logits, temp, topk, rng)
+        got = model.decode_sample(
+            cfg, params, kc, vc, tok, pos, temp, topk, rng)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want_tok))
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want_lp),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(kc1))
+        np.testing.assert_array_equal(np.asarray(got[4]),
+                                      np.asarray(want_rng))
+
+    def test_emitter_writes_fused_executables(self, tmp_path):
+        """Artifact-free end-to-end: the emitter lowers the fused
+        executables and records the ABI the rust runtime expects."""
+        cfg = configs.get("tiny-swiglu")
+        em = aot.Emitter(cfg, str(tmp_path))
+        em.emit_decode_sample(1)
+        em.emit_decode_pruned_sample(1, cfg.keep_ks()[len(cfg.keep_ks()) // 2])
+        e = em.executables["decode_sample_b1"]
+        assert e["kind"] == "decode_sample"
+        assert e["sample_topk"] == model.SAMPLE_TOPK
+        in_names = [i["name"] for i in e["inputs"]]
+        assert in_names[-7:] == ["kcache", "vcache", "token", "pos",
+                                 "temp", "topk", "rng"]
+        out_names = [o["name"] for o in e["outputs"]]
+        assert out_names == ["token", "logprob", "kcache", "vcache", "rng"]
+        for e in em.executables.values():
+            with open(os.path.join(em.dir, e["file"])) as f:
+                assert f.read(9) == "HloModule", e["file"]
+
+    def test_manifest_fused_abi(self):
+        m = manifest("tiny-swiglu")
+        fused = [e for e in m["executables"].values()
+                 if e["kind"] == "decode_sample"]
+        assert fused, "no decode_sample executables in manifest"
+        for e in fused:
+            in_names = [i["name"] for i in e["inputs"]]
+            assert in_names[:len(m["param_order"])] == m["param_order"]
+            assert in_names[-7:] == ["kcache", "vcache", "token", "pos",
+                                     "temp", "topk", "rng"]
+            out_names = [o["name"] for o in e["outputs"]]
+            assert out_names == ["token", "logprob", "kcache", "vcache",
+                                 "rng"]
+            assert e["sample_topk"] == model.SAMPLE_TOPK
+        pruned = [e for e in m["executables"].values()
+                  if e["kind"] == "decode_pruned_sample"]
+        assert pruned, "no decode_pruned_sample executables"
+        for e in pruned:
+            in_names = [i["name"] for i in e["inputs"]]
+            want_prefix = m["nonff_param_order"] + m["pruned_param_order"]
+            assert in_names[:len(want_prefix)] == want_prefix
+            assert in_names[-7:] == ["kcache", "vcache", "token", "pos",
+                                     "temp", "topk", "rng"]
+
+
 class TestHloText:
     def test_lowering_keeps_unused_params(self):
         """keep_unused contract: every emitted executable's HLO has

@@ -86,6 +86,76 @@ fn main() {
         ));
     }
 
+    // -- fused decode+sample vs decode + host sampling --------------------
+    // (the device-resident decode loop: logits never cross the host
+    // boundary on the fused path)
+    if engine.fused_decode_spec(1, None).is_some() {
+        use griffin::sampling::{seed_state, Sampler, SamplerSpec};
+        let spec = SamplerSpec::TopK { k: 8, temperature: 0.8 };
+        {
+            let mut state = engine
+                .prefill(std::slice::from_ref(&prompt), false)
+                .unwrap()
+                .state;
+            let toks = vec![65i32];
+            let mut sampler = Sampler::new(spec, 7);
+            rep.add(bench_for("decode_step_host_sample", 3, 2000.0, 200,
+                              || {
+                let logits = engine
+                    .decode_step(&mut state, &toks, None, None)
+                    .unwrap();
+                let _ = sampler.sample(&logits);
+            }));
+        }
+        {
+            let mut state = engine
+                .prefill(std::slice::from_ref(&prompt), false)
+                .unwrap()
+                .state;
+            let mut samp = engine
+                .new_sampling_state(&[(spec, seed_state(7))])
+                .unwrap();
+            let mut first = Some(vec![65i32]);
+            rep.add(bench_for("decode_step_fused_sample", 3, 2000.0, 200,
+                              || {
+                engine
+                    .decode_sample_step(&mut state, &mut samp,
+                                        first.as_deref(), None)
+                    .unwrap();
+                first = None; // chain tokens on device from here on
+            }));
+        }
+        let k = engine.k_for(0.5).unwrap();
+        if engine.fused_decode_spec(1, Some(k)).is_some() {
+            let pruned = engine.gather(&idx_for(k)).unwrap();
+            let mut state = engine
+                .prefill(std::slice::from_ref(&prompt), false)
+                .unwrap()
+                .state;
+            let mut samp = engine
+                .new_sampling_state(&[(spec, seed_state(7))])
+                .unwrap();
+            let mut first = Some(vec![65i32]);
+            rep.add(bench_for(
+                &format!("decode_step_fused_sample_pruned_k{k}"),
+                3,
+                2000.0,
+                200,
+                || {
+                    engine
+                        .decode_sample_step(&mut state, &mut samp,
+                                            first.as_deref(),
+                                            Some(&pruned))
+                        .unwrap();
+                    first = None;
+                },
+            ));
+        }
+    } else {
+        eprintln!("skipping fused-sampling benches: artifacts predate \
+                   decode_sample");
+    }
+
     // -- selection + gather overhead (the "no-cost" claim) ----------------
     rep.add(bench_for("select_topk_50pct", 3, 1000.0, 500, || {
         let _ = griffin::coordinator::selection::select_experts(
@@ -96,6 +166,16 @@ fn main() {
         rep.add(bench_for("gather_k50pct", 3, 1000.0, 100, || {
             engine.gather(&idx).unwrap();
         }));
+        // unchanged selection through the reuse cache: after the first
+        // miss every call is a hash + LRU touch, zero gather executions
+        rep.add(bench_for("gather_k50pct_cached", 3, 1000.0, 500, || {
+            engine.gather_cached(&idx).unwrap();
+        }));
+        println!(
+            "  gather cache: {} hits / {} misses",
+            engine.metrics.gather_cache_hits.get(),
+            engine.metrics.gather_cache_misses.get()
+        );
     }
 
     // -- end-to-end P+G (Table 3) -----------------------------------------

@@ -182,5 +182,67 @@ fn main() {
         rep.add(summarize(&format!("cont_mixed_{}", mode.label()),
                           &samples));
     }
+
+    // ------------------------------------------------------------------
+    // scenario 3: fused (on-device) vs host sampling through the
+    // continuous scheduler, IDENTICAL top-k workload both times — the
+    // host run just flips `fused_enabled` off, so the delta isolates
+    // the host-boundary cost (logits download + host sampling) rather
+    // than comparing different sampler algorithms.
+    // ------------------------------------------------------------------
+    let have_fused = sched
+        .engine
+        .fused_decode_spec(bmax, None)
+        .is_some();
+    if !have_fused {
+        eprintln!("skipping fused-vs-host scenario: artifacts predate \
+                   decode_sample");
+    }
+    let spec = griffin::sampling::SamplerSpec::TopK { k: 8, temperature: 0.8 };
+    for (label, fused) in [("fused_topk", true), ("host_topk", false)] {
+        if !have_fused {
+            break;
+        }
+        sched.fused_enabled = fused;
+        let m = sched.engine.metrics.clone();
+        let (ticks0, fused0, down0) = (
+            m.decode_ticks.get(),
+            m.fused_decode_ticks.get(),
+            m.host_bytes_to_host.get(),
+        );
+        let mut samples = Vec::new();
+        for round in 0..3 {
+            for (i, mut q) in
+                mixed_reqs(&base_trace, Mode::Full).into_iter().enumerate()
+            {
+                q.sampler = spec;
+                q.seed = (round * 1000 + i) as u64;
+                router.admit(q).unwrap();
+            }
+            let t = std::time::Instant::now();
+            let responses = sched.run_until_idle().unwrap();
+            let dt = t.elapsed().as_secs_f64();
+            let tokens: usize =
+                responses.iter().map(|r| r.tokens.len()).sum();
+            samples.push(dt * 1e3);
+            println!("  cont_mixed_{label}: {:.1} tok/s",
+                     tokens as f64 / dt);
+        }
+        let ticks = m.decode_ticks.get() - ticks0;
+        let fused = m.fused_decode_ticks.get() - fused0;
+        let down_mb =
+            (m.host_bytes_to_host.get() - down0) as f64 / 1e6;
+        println!(
+            "  => {label}: {fused}/{ticks} fused ticks, \
+             {down_mb:.2} MB device->host"
+        );
+        rep.add(summarize(&format!("cont_mixed_{label}"), &samples));
+    }
+    sched.fused_enabled = true;
+    println!(
+        "  gather cache: {} hits / {} misses",
+        sched.engine.metrics.gather_cache_hits.get(),
+        sched.engine.metrics.gather_cache_misses.get()
+    );
     rep.finish();
 }

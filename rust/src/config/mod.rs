@@ -43,6 +43,9 @@ pub struct ExecutableSpec {
     pub seq: Option<usize>,
     pub k: Option<usize>,
     pub gen: Option<usize>,
+    /// decode_sample*: static top-k truncation bucket compiled into the
+    /// fused sampler (model.SAMPLE_TOPK); per-slot k is clamped to it
+    pub sample_topk: Option<usize>,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
 }
@@ -138,6 +141,21 @@ impl ModelConfig {
     }
 }
 
+/// Nearest candidate k to `target` by true f64 absolute distance
+/// (`total_cmp`, no integer truncation of sub-unit differences). Shared
+/// by `Manifest::nearest_k` and `Engine::bucket_keep` so the snapping
+/// rule cannot diverge between the two paths.
+pub fn nearest_k_of(
+    target: f64,
+    ks: impl IntoIterator<Item = usize>,
+) -> Option<usize> {
+    ks.into_iter().min_by(|&a, &b| {
+        (a as f64 - target)
+            .abs()
+            .total_cmp(&(b as f64 - target).abs())
+    })
+}
+
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
@@ -164,6 +182,9 @@ impl Manifest {
                     seq: e.get("seq").and_then(Value::as_usize),
                     k: e.get("k").and_then(Value::as_usize),
                     gen: e.get("gen").and_then(Value::as_usize),
+                    sample_topk: e
+                        .get("sample_topk")
+                        .and_then(Value::as_usize),
                     inputs: io_list(req(e, "inputs")?)?,
                     outputs: io_list(req(e, "outputs")?)?,
                 },
@@ -270,11 +291,7 @@ impl Manifest {
     /// points are emitted by aot.py; exact match preferred).
     pub fn nearest_k(&self, keep_fraction: f64) -> Option<usize> {
         let target = (self.config.d_ff as f64 * keep_fraction).round();
-        self.config
-            .keep_ks
-            .iter()
-            .copied()
-            .min_by_key(|&k| (k as f64 - target).abs() as u64)
+        nearest_k_of(target, self.config.keep_ks.iter().copied())
     }
 }
 

@@ -7,10 +7,23 @@
 //!   generate→  decode_pruned steps (or full decode / masked-weight decode
 //!              for the baselines), KV-cache device-resident throughout.
 //!
+//! Decode runs through prepared [`DispatchPlan`]s (runtime/): the
+//! ~full-parameter argument vector is bound once per (executable,
+//! weight-set) and per-step calls supply only the dynamic tail. The
+//! fused generation path (`decode_sample_step`) additionally samples
+//! ON DEVICE — greedy / seeded top-k via the compiled sampler ABI
+//! (model.sample_tokens ↔ sampling::DeviceSampler) — so the `[B, vocab]`
+//! logits tensor never crosses the host boundary during steady-state
+//! generation; only token ids and logprobs (O(B) bytes/step) come back.
+//! Pruned weight sets are reused through an LRU keyed by the expert
+//! selection (`gather_cached`), so unchanged selections skip
+//! `gather_k{K}` entirely.
+//!
 //! Everything here is single-threaded by design: `PjRtBuffer` is not
 //! `Send`, so the engine owns all device state and the server hands it
 //! work through channels (server/).
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -18,14 +31,39 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::ModelConfig;
+use crate::config::{ExecutableSpec, ModelConfig};
+use crate::coordinator::gather_cache::{GatherCache, GatherKey};
 use crate::coordinator::selection::{self, LayerStats, Strategy};
 use crate::coordinator::sequence::{FinishReason, GenRequest};
 use crate::metrics::{MetricsRegistry, Timer};
-use crate::runtime::{DeviceTensor, Session, WeightStore};
-use crate::sampling::{log_softmax_at, Sampler};
+use crate::runtime::{DeviceTensor, DispatchPlan, Session, WeightStore};
+use crate::sampling::{device_params, log_softmax_at, Sampler, SamplerSpec};
 use crate::tensorfile::TensorMap;
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
+
+/// Device-resident pruned weight sets kept for reuse (gather_cached).
+const GATHER_CACHE_CAP: usize = 8;
+
+/// Non-base-weight dispatch plans kept alive (each pins one pruned /
+/// override weight set via `Rc`). A weight set can own up to TWO plans
+/// (the fused decode_*_sample variant and the host decode_* variant),
+/// so the cap is twice the gather cache: a pool cycling through every
+/// cached selection on both routing paths never thrashes plan rebuilds.
+const PLAN_CACHE_CAP: usize = 2 * GATHER_CACHE_CAP;
+
+/// Masked (layer-adaptive) gather artifacts are emitted only at the
+/// paper's headline 50% operating point (aot.py `emit_gather_masked` at
+/// k_half), so the layer-adaptive path always gathers at this bucket and
+/// realizes smaller per-layer budgets through the validity mask.
+pub const ADAPTIVE_HEADLINE_KEEP: f64 = 0.5;
+
+/// Keep fraction whose compiled bucket hosts a layer-adaptive gather:
+/// constant (the headline bucket), independent of the requested average
+/// keep — that only shapes the per-layer budget allocation. Replaces a
+/// former `keep.min(0.5).max(0.5)` no-op clamp that obscured this.
+pub fn adaptive_bucket_keep(_requested_keep: f64) -> f64 {
+    ADAPTIVE_HEADLINE_KEEP
+}
 
 /// How the generation phase runs (paper §5.1 comparison set).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +82,27 @@ impl Mode {
     pub fn griffin(keep: f64) -> Mode {
         Mode::Griffin { keep, strategy: Strategy::TopK }
     }
+
+    /// Batching compatibility: requests can share a continuous run when
+    /// they decode through the same executable family and weight-set
+    /// shape. Strategy seeds (`Strategy::Sampling`/`TopKPlusSampling`)
+    /// are per-request selection inputs — the batch-shared eq.7
+    /// aggregate uses the run head's seed — so they must NOT fragment
+    /// batches (full `==` would serialize seeded-sampling traffic into
+    /// batches of one).
+    pub fn compatible(&self, other: &Mode) -> bool {
+        match (self, other) {
+            (
+                Mode::Griffin { keep: a, strategy: sa },
+                Mode::Griffin { keep: b, strategy: sb },
+            ) => {
+                a == b
+                    && std::mem::discriminant(sa)
+                        == std::mem::discriminant(sb)
+            }
+            _ => self == other,
+        }
+    }
     pub fn label(&self) -> String {
         match self {
             Mode::Full => "full".into(),
@@ -60,11 +119,36 @@ impl Mode {
     }
 }
 
-/// Device-resident pruned FF weights for one expert set.
+/// Device-resident pruned FF weights for one expert set. Shared handles
+/// (`Rc`) so the same set can live in the gather cache, a dispatch
+/// plan's static prefix, and the scheduler's batch-shared state at once.
 pub struct PrunedWeights {
     /// in manifest pruned_param_order (w1p, w2p[, wgp])
-    pub tensors: Vec<DeviceTensor>,
+    pub tensors: Vec<Rc<DeviceTensor>>,
     pub k: usize,
+    /// unique weight-set id — keys the prepared-dispatch-plan cache
+    id: u64,
+}
+
+/// Full-size replacement FF stacks (the Wanda baseline): w1, w2 [, wg]
+/// uploaded as masked copies. Carries a weight-set id for the same
+/// plan-cache reasons as [`PrunedWeights`].
+pub struct FfOverride {
+    pub tensors: Vec<Rc<DeviceTensor>>,
+    id: u64,
+}
+
+/// Device-resident per-slot sampling state for the fused decode path:
+/// per-slot temperature/top-k parameters and the xorshift32 RNG stream
+/// (see the fused-sampling ABI in python/compile/model.py). `tokens`
+/// holds the previous step's sampled ids so steady-state ticks chain
+/// decode input on device without a host upload.
+pub struct SamplingState {
+    pub temp: DeviceTensor,
+    pub topk: DeviceTensor,
+    pub rng: DeviceTensor,
+    pub tokens: Option<DeviceTensor>,
+    pub batch: usize,
 }
 
 /// Device-resident per-batch decode state.
@@ -115,7 +199,17 @@ pub struct Engine {
     /// host copy (magnitude / wanda baselines need raw weight values)
     pub host_weights: TensorMap,
     pub tokenizer: Tokenizer,
+    /// shared with the session (host-transfer counters land there too)
     pub metrics: Arc<MetricsRegistry>,
+    /// prepared dispatch plans keyed by (executable, weight-set id);
+    /// value carries an LRU tick. Non-base entries are capped at
+    /// PLAN_CACHE_CAP because each pins a weight set via Rc.
+    plans: RefCell<BTreeMap<(String, u64), (u64, Rc<DispatchPlan>)>>,
+    plan_ticks: Cell<u64>,
+    /// pruned-weight reuse, keyed by (k, expert-index hash)
+    gather_cache: GatherCache<Rc<PrunedWeights>>,
+    /// monotonically increasing weight-set ids (0 = base WeightStore)
+    set_ids: Cell<u64>,
     magnitude_cache: Option<Vec<Vec<i32>>>, // per keep-k gather idx cache
     magnitude_keep: f64,
 }
@@ -126,15 +220,26 @@ impl Engine {
         let weights = WeightStore::load(&session, trained)?;
         let host_weights =
             crate::tensorfile::read(session.manifest.weights_path(trained)?)?;
+        let metrics = session.metrics.clone();
         Ok(Engine {
             session,
             weights,
             host_weights,
             tokenizer: Tokenizer::new(),
-            metrics: Arc::new(MetricsRegistry::default()),
+            metrics,
+            plans: RefCell::new(BTreeMap::new()),
+            plan_ticks: Cell::new(0),
+            gather_cache: GatherCache::new(GATHER_CACHE_CAP),
+            set_ids: Cell::new(1),
             magnitude_cache: None,
             magnitude_keep: -1.0,
         })
+    }
+
+    fn next_set_id(&self) -> u64 {
+        let id = self.set_ids.get();
+        self.set_ids.set(id + 1);
+        id
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -212,7 +317,7 @@ impl Engine {
         let logits_t = outs.pop().unwrap();
 
         let v = cfg.vocab_size;
-        let logits = logits_t.to_f32()?;
+        let logits = self.session.download_f32(&logits_t)?;
         let last_logits: Vec<Vec<f32>> = (0..n)
             .map(|i| {
                 let row = (i * bucket_seq + (lengths[i] - 1)) * v;
@@ -222,7 +327,7 @@ impl Engine {
 
         let split = |t: &DeviceTensor, width: usize| -> Result<Vec<LayerStats>> {
             // [L, B, width] -> per-seq [L][width]
-            let host = t.to_f32()?;
+            let host = self.session.download_f32(t)?;
             let l_count = cfg.n_layers;
             Ok((0..n)
                 .map(|i| {
@@ -272,6 +377,68 @@ impl Engine {
             .context("config has no keep_ks")
     }
 
+    /// The keep fraction actually servable at `batch`: the continuous
+    /// scheduler always decodes at the pool's compiled bucket, and
+    /// aot.py emits the full k sweep only at B=1 (larger buckets get
+    /// the headline k). Requests whose keep has no decode_pruned
+    /// executable at this bucket are snapped to the nearest one instead
+    /// of failing deep in the decode loop with "unknown executable".
+    /// Batching compatibility at a given pool batch size: like
+    /// [`Mode::compatible`], but Griffin/Magnitude keeps that snap to
+    /// the same compiled decode bucket (`bucket_keep`) batch together —
+    /// e.g. griffin@0.75 and griffin@0.5 are served identically at a
+    /// bucket that only compiles k_half, so splitting them into
+    /// separate waves would waste the batch for nothing.
+    pub fn modes_batchable(&self, batch: usize, a: &Mode, b: &Mode)
+                           -> bool {
+        if a.compatible(b) {
+            return true;
+        }
+        let snap = |m: &Mode| -> Option<Mode> {
+            match *m {
+                Mode::Griffin { keep, strategy } => self
+                    .bucket_keep(batch, keep)
+                    .ok()
+                    .map(|k| Mode::Griffin { keep: k, strategy }),
+                Mode::Magnitude { keep } => self
+                    .bucket_keep(batch, keep)
+                    .ok()
+                    .map(|k| Mode::Magnitude { keep: k }),
+                // Full has no keep; Wanda masks a continuous fraction
+                // that is not bucketed — no snapping for either
+                _ => None,
+            }
+        };
+        match (snap(a), snap(b)) {
+            (Some(x), Some(y)) => x.compatible(&y),
+            _ => false,
+        }
+    }
+
+    pub fn bucket_keep(&self, batch: usize, keep: f64) -> Result<f64> {
+        self.snap_keep("decode_pruned", batch, keep)
+    }
+
+    /// Snap `keep` to the nearest k compiled for `kind` at `batch`
+    /// (shared by the decode and fused-scan paths — aot.py emits
+    /// different k coverage per executable kind).
+    fn snap_keep(&self, kind: &str, batch: usize, keep: f64)
+                 -> Result<f64> {
+        let cfg = self.config();
+        let candidates = self
+            .session
+            .manifest
+            .executables
+            .values()
+            .filter(|e| e.kind == kind && e.batch == Some(batch))
+            .filter_map(|e| e.k);
+        crate::config::nearest_k_of(cfg.d_ff as f64 * keep, candidates)
+            .map(|k| k as f64 / cfg.d_ff as f64)
+            .with_context(|| {
+                format!("no {kind} executables for batch={batch}")
+            })
+    }
+
     /// Build device-resident pruned FF weights for an expert index set.
     pub fn gather(&self, idx: &[Vec<i32>]) -> Result<PrunedWeights> {
         let t = Timer::start();
@@ -298,7 +465,39 @@ impl Engine {
         args.push(&idx_dev);
         let outs = self.session.run(&name, &args)?;
         t.record_into(&self.metrics.gather_latency);
-        Ok(PrunedWeights { tensors: outs, k })
+        Ok(self.make_pruned(outs, k))
+    }
+
+    /// Wrap raw gather outputs as a [`PrunedWeights`] set with a fresh
+    /// weight-set id (also used by experiment drivers running custom
+    /// gather executables).
+    pub fn make_pruned(&self, tensors: Vec<DeviceTensor>, k: usize)
+                       -> PrunedWeights {
+        PrunedWeights {
+            tensors: tensors.into_iter().map(Rc::new).collect(),
+            k,
+            id: self.next_set_id(),
+        }
+    }
+
+    /// `gather` through the pruned-weight reuse cache: an expert index
+    /// set that is already resident on device (keyed by (k, index hash))
+    /// is returned without running `gather_k{K}`. Hit/miss counts land
+    /// in `metrics.gather_cache_{hits,misses}` — the scheduler leans on
+    /// this so slot back-fill with an unchanged selection (magnitude
+    /// mode, stable eq.7 aggregates, re-admitted single-slot prompts)
+    /// costs zero gather executions.
+    pub fn gather_cached(&mut self, idx: &[Vec<i32>])
+                         -> Result<Rc<PrunedWeights>> {
+        let key = GatherKey::new(idx);
+        if let Some(pw) = self.gather_cache.get(&key, idx) {
+            self.metrics.gather_cache_hits.inc();
+            return Ok(pw.clone());
+        }
+        self.metrics.gather_cache_misses.inc();
+        let pw = Rc::new(self.gather(idx)?);
+        self.gather_cache.insert(key, idx.to_vec(), pw.clone());
+        Ok(pw)
     }
 
     /// Layer-adaptive gather (extension; DESIGN.md §6): per-layer budgets
@@ -307,8 +506,7 @@ impl Engine {
                            -> Result<PrunedWeights> {
         let t = Timer::start();
         let cfg = self.config();
-        let k_bucket = self.k_for(keep.min(0.5).max(0.5))?; // masked gather
-        // is emitted at the headline (50%) bucket only
+        let k_bucket = self.k_for(adaptive_bucket_keep(keep))?;
         let k_avg = ((cfg.d_ff as f64 * keep).round() as usize)
             .min(k_bucket);
         let (idx, mask) = selection::adaptive_layer_allocation(
@@ -334,7 +532,7 @@ impl Engine {
         args.push(&mask_dev);
         let outs = self.session.run(&name, &args)?;
         t.record_into(&self.metrics.gather_latency);
-        Ok(PrunedWeights { tensors: outs, k: k_bucket })
+        Ok(self.make_pruned(outs, k_bucket))
     }
 
     /// GRIFFIN selection for one sequence (paper §4.2) or any stats set.
@@ -373,7 +571,7 @@ impl Engine {
     /// Adaptive-Wanda masked FF weights for one sequence (uploads
     /// full-size masked copies; unstructured baseline, §5.1).
     pub fn wanda_weights(&self, xnorm: &LayerStats, znorm: &LayerStats,
-                         keep: f64) -> Result<Vec<DeviceTensor>> {
+                         keep: f64) -> Result<FfOverride> {
         let cfg = self.config();
         let (l_n, f, d) = (cfg.n_layers, cfg.d_ff, cfg.d_model);
         let mask_stack = |w: &mut Vec<f32>, norms: &LayerStats,
@@ -387,16 +585,16 @@ impl Engine {
         let mut out = Vec::new();
         let mut w1 = self.host_weights["w1"].to_f32()?;
         mask_stack(&mut w1, xnorm, f, d);
-        out.push(self.session.upload_f32(&[l_n, f, d], &w1)?);
+        out.push(Rc::new(self.session.upload_f32(&[l_n, f, d], &w1)?));
         let mut w2 = self.host_weights["w2"].to_f32()?;
         mask_stack(&mut w2, znorm, d, f);
-        out.push(self.session.upload_f32(&[l_n, d, f], &w2)?);
+        out.push(Rc::new(self.session.upload_f32(&[l_n, d, f], &w2)?));
         if cfg.is_glu {
             let mut wg = self.host_weights["wg"].to_f32()?;
             mask_stack(&mut wg, xnorm, f, d);
-            out.push(self.session.upload_f32(&[l_n, f, d], &wg)?);
+            out.push(Rc::new(self.session.upload_f32(&[l_n, f, d], &wg)?));
         }
-        Ok(out)
+        Ok(FfOverride { tensors: out, id: self.next_set_id() })
     }
 
     // ------------------------------------------------------------------
@@ -408,53 +606,27 @@ impl Engine {
     ///   None -> full model decode_b{B}
     ///   Some(pruned) -> decode_pruned_b{B}_k{K}
     /// `override_ff` (Wanda) replaces the full FF stacks in-place.
+    ///
+    /// Downloads the full `[B, vocab]` logits for host-side sampling —
+    /// the generality/eval path. The serving hot loop prefers
+    /// `decode_sample_step`, which keeps logits on device.
     pub fn decode_step(
         &self,
         state: &mut DecodeState,
         tokens: &[i32],
         ff: Option<&PrunedWeights>,
-        override_ff: Option<&[DeviceTensor]>,
+        override_ff: Option<&FfOverride>,
     ) -> Result<Vec<f32>> {
         let t = Timer::start();
         let b = state.batch;
         let tok_dev = self.session.upload_i32(&[b], tokens)?;
         let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
-
-        let name;
-        let mut args: Vec<&DeviceTensor> = Vec::new();
-        match ff {
-            Some(pruned) => {
-                name = format!("decode_pruned_b{b}_k{}", pruned.k);
-                args.extend(self.weights.ordered_nonff());
-                args.extend(pruned.tensors.iter());
-            }
-            None => {
-                name = format!("decode_b{b}");
-                match override_ff {
-                    None => args.extend(self.weights.ordered()),
-                    Some(ffw) => {
-                        // replace w1/w2/wg slots in ABI order
-                        for pname in &self.weights.param_order {
-                            args.push(match pname.as_str() {
-                                "w1" => &ffw[0],
-                                "w2" => &ffw[1],
-                                "wg" => &ffw[2],
-                                _ => self.weights.get(pname),
-                            });
-                        }
-                    }
-                }
-            }
-        }
-        args.push(&state.kcache);
-        args.push(&state.vcache);
-        args.push(&tok_dev);
-        args.push(&pos_dev);
-
-        let mut outs = self.session.run(&name, &args)?;
+        let plan = self.decode_plan(b, ff, override_ff, false)?;
+        let mut outs = self.session.run_prepared(
+            &plan, &[&state.kcache, &state.vcache, &tok_dev, &pos_dev])?;
         let vcache = outs.pop().unwrap();
         let kcache = outs.pop().unwrap();
-        let logits = outs.pop().unwrap().to_f32()?;
+        let logits = self.session.download_f32(&outs.pop().unwrap())?;
         state.kcache = kcache;
         state.vcache = vcache;
         for p in state.pos.iter_mut() {
@@ -462,6 +634,209 @@ impl Engine {
         }
         t.record_into(&self.metrics.decode_step_latency);
         Ok(logits)
+    }
+
+    /// One fused decode+sample step (`decode_sample_b{B}` /
+    /// `decode_pruned_sample_b{B}_k{K}`): sampling runs on device, so
+    /// the `[B, vocab]` logits never cross the host boundary — only the
+    /// sampled token ids and their logprobs (O(B) bytes) come back.
+    ///
+    /// `host_tokens` supplies the decode input when the device-resident
+    /// tokens from the previous step are stale (first step after
+    /// prefill, or any slot-membership change); pass `None` to chain
+    /// the previous step's sampled tokens without any token upload.
+    pub fn decode_sample_step(
+        &self,
+        state: &mut DecodeState,
+        samp: &mut SamplingState,
+        host_tokens: Option<&[i32]>,
+        ff: Option<&PrunedWeights>,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let t = Timer::start();
+        let b = state.batch;
+        if samp.batch != b {
+            bail!("sampling state batch {} != decode batch {b}",
+                  samp.batch);
+        }
+        let uploaded;
+        let tok_dev: &DeviceTensor = match host_tokens {
+            Some(toks) => {
+                uploaded = self.session.upload_i32(&[b], toks)?;
+                &uploaded
+            }
+            None => samp.tokens.as_ref().context(
+                "no device-resident tokens; pass host_tokens after a \
+                 membership change")?,
+        };
+        let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
+        let plan = self.decode_plan(b, ff, None, true)?;
+        let mut outs = self.session.run_prepared(
+            &plan,
+            &[&state.kcache, &state.vcache, tok_dev, &pos_dev,
+              &samp.temp, &samp.topk, &samp.rng],
+        )?;
+        // outputs: token, logprob, kcache, vcache, rng
+        let rng = outs.pop().unwrap();
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        let lp_t = outs.pop().unwrap();
+        let tok_t = outs.pop().unwrap();
+        let tokens = self.session.download_i32(&tok_t)?;
+        let logprobs = self.session.download_f32(&lp_t)?;
+        state.kcache = kcache;
+        state.vcache = vcache;
+        for p in state.pos.iter_mut() {
+            *p += 1;
+        }
+        samp.rng = rng;
+        samp.tokens = Some(tok_t);
+        t.record_into(&self.metrics.decode_step_latency);
+        Ok((tokens, logprobs))
+    }
+
+    /// The fused decode executable for this (batch, k) combination, if
+    /// the artifacts provide one (older artifact sets predate the
+    /// fused-sampling ABI — callers fall back to the host path).
+    pub fn fused_decode_spec(&self, batch: usize, k: Option<usize>)
+                             -> Option<&ExecutableSpec> {
+        let name = match k {
+            Some(k) => format!("decode_pruned_sample_b{batch}_k{k}"),
+            None => format!("decode_sample_b{batch}"),
+        };
+        self.session.manifest.executables.get(&name)
+    }
+
+    /// Build the device-resident per-slot sampling state: one
+    /// (spec, xorshift32 state) pair per slot (pad free slots with
+    /// `(SamplerSpec::Greedy, sampling::seed_state(0))`).
+    pub fn new_sampling_state(&self, slots: &[(SamplerSpec, u32)])
+                              -> Result<SamplingState> {
+        let b = slots.len();
+        let mut temp = vec![0f32; b];
+        let mut topk = vec![1i32; b];
+        let mut rng = vec![0i32; b];
+        for (i, (spec, state)) in slots.iter().enumerate() {
+            let (t, k) = device_params(*spec);
+            temp[i] = t;
+            topk[i] = k;
+            rng[i] = *state as i32;
+        }
+        Ok(SamplingState {
+            temp: self.session.upload_f32(&[b], &temp)?,
+            topk: self.session.upload_i32(&[b], &topk)?,
+            rng: self.session.upload_i32(&[b], &rng)?,
+            tokens: None,
+            batch: b,
+        })
+    }
+
+    /// Resolve (and cache) the prepared dispatch plan for one decode
+    /// variant. Plans are keyed by (executable, weight-set id), so a
+    /// steady-state decode loop re-binds nothing and a pool alternating
+    /// between cached selections reuses both plans; non-base entries
+    /// are LRU-bounded (each pins its weight set via Rc).
+    fn decode_plan(&self, b: usize, ff: Option<&PrunedWeights>,
+                   override_ff: Option<&FfOverride>, fused: bool)
+                   -> Result<Rc<DispatchPlan>> {
+        let (name, set_id) = match ff {
+            Some(p) => (
+                if fused {
+                    format!("decode_pruned_sample_b{b}_k{}", p.k)
+                } else {
+                    format!("decode_pruned_b{b}_k{}", p.k)
+                },
+                p.id,
+            ),
+            None => (
+                if fused {
+                    format!("decode_sample_b{b}")
+                } else {
+                    format!("decode_b{b}")
+                },
+                override_ff.map_or(0, |o| o.id),
+            ),
+        };
+        let tick = self.plan_ticks.get() + 1;
+        self.plan_ticks.set(tick);
+        let key = (name.clone(), set_id);
+        if let Some(entry) = self.plans.borrow_mut().get_mut(&key) {
+            entry.0 = tick;
+            return Ok(entry.1.clone());
+        }
+        let static_args: Vec<Rc<DeviceTensor>> = match ff {
+            Some(p) => {
+                let mut v = self.weights.ordered_rc_nonff();
+                v.extend(p.tensors.iter().cloned());
+                v
+            }
+            None => match override_ff {
+                None => self.weights.ordered_rc(),
+                Some(o) => self
+                    .weights
+                    .param_order
+                    .iter()
+                    .map(|pname| match pname.as_str() {
+                        "w1" => o.tensors[0].clone(),
+                        "w2" => o.tensors[1].clone(),
+                        "wg" => o.tensors[2].clone(),
+                        _ => self.weights.get_rc(pname),
+                    })
+                    .collect(),
+            },
+        };
+        let plan = Rc::new(self.session.prepare(&name, static_args)?);
+        let mut plans = self.plans.borrow_mut();
+        // non-base plans pin a whole pruned/override weight set via Rc.
+        // First drop plans whose set is owned ONLY by cached plans —
+        // several plans (fused + host variant) can co-own one set, so
+        // liveness is strong_count vs the number of referencing plans,
+        // not strong_count == 1 — then bound the survivors with a small
+        // LRU so executables that are never dispatched again cannot
+        // hold weights for the engine's lifetime. Base-weight plans
+        // (set 0) pin nothing extra: the WeightStore co-owns those
+        // tensors, so they never look dead.
+        let plan_refs: BTreeMap<*const DeviceTensor, usize> = {
+            let mut m = BTreeMap::new();
+            for (_, p) in plans.values() {
+                for t in p.static_args() {
+                    *m.entry(Rc::as_ptr(t)).or_insert(0) += 1;
+                }
+            }
+            m
+        };
+        // two-pass: decide liveness on this consistent snapshot FIRST,
+        // then remove — removing inside a single retain would decrement
+        // strong_counts mid-sweep and let the second co-owning plan of
+        // a dead set survive the pass
+        let dead: Vec<(String, u64)> = plans
+            .iter()
+            .filter(|((_, id), _)| *id != 0)
+            .filter(|(_, (_, p))| {
+                p.static_args().iter().any(|t| {
+                    Rc::strong_count(t) == plan_refs[&Rc::as_ptr(t)]
+                })
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &dead {
+            plans.remove(k);
+        }
+        if set_id != 0 {
+            let nonbase =
+                plans.keys().filter(|(_, id)| *id != 0).count();
+            if nonbase >= PLAN_CACHE_CAP {
+                if let Some(victim) = plans
+                    .iter()
+                    .filter(|((_, id), _)| *id != 0)
+                    .min_by_key(|(_, (t, _))| *t)
+                    .map(|(k, _)| k.clone())
+                {
+                    plans.remove(&victim);
+                }
+            }
+        }
+        plans.insert(key, (tick, plan.clone()));
+        Ok(plan)
     }
 
     // ------------------------------------------------------------------
@@ -523,10 +898,10 @@ impl Engine {
                        (src b={sb}, dst b={db})");
             }
         }
-        let mut dk = dst.kcache.to_f32()?;
-        let mut dv = dst.vcache.to_f32()?;
-        let sk = src.kcache.to_f32()?;
-        let sv = src.vcache.to_f32()?;
+        let mut dk = self.session.download_f32(&dst.kcache)?;
+        let mut dv = self.session.download_f32(&dst.vcache)?;
+        let sk = self.session.download_f32(&src.kcache)?;
+        let sv = self.session.download_f32(&src.vcache)?;
         for l in 0..layers {
             for &(si, di) in pairs {
                 let s0 = (l * sb + si) * row;
@@ -578,8 +953,8 @@ impl Engine {
 
         // --- selection phase ------------------------------------------
         let sel_t = Timer::start();
-        let (pruned, wanda_ffw, k_used): (Option<PrunedWeights>,
-                                          Option<Vec<DeviceTensor>>,
+        let (pruned, wanda_ffw, k_used): (Option<Rc<PrunedWeights>>,
+                                          Option<FfOverride>,
                                           Option<usize>) = match mode {
             Mode::Full => (None, None, None),
             Mode::Griffin { keep, strategy } => {
@@ -590,14 +965,19 @@ impl Engine {
                         .zip(pre.lengths.iter().copied())
                         .collect::<Vec<_>>(),
                 );
+                // snap to a keep whose decode_pruned executable exists
+                // at this batch bucket (aot.py emits the full k sweep
+                // only at B=1)
+                let keep = self.bucket_keep(pre.state.batch, keep)?;
                 let idx = self.select(&agg, keep, strategy)?;
-                let pw = self.gather(&idx)?;
+                let pw = self.gather_cached(&idx)?;
                 let k = pw.k;
                 (Some(pw), None, Some(k))
             }
             Mode::Magnitude { keep } => {
+                let keep = self.bucket_keep(pre.state.batch, keep)?;
                 let idx = self.magnitude_experts(keep)?;
-                let pw = self.gather(&idx)?;
+                let pw = self.gather_cached(&idx)?;
                 let k = pw.k;
                 (Some(pw), None, Some(k))
             }
@@ -665,8 +1045,8 @@ impl Engine {
                 break;
             }
             let logits = self.decode_step(
-                &mut pre.state, &cur, pruned.as_ref(),
-                wanda_ffw.as_deref())?;
+                &mut pre.state, &cur, pruned.as_deref(),
+                wanda_ffw.as_ref())?;
             for i in 0..n {
                 if done[i] || out_tokens[i].len() >= reqs[i].max_new_tokens
                 {
@@ -730,8 +1110,12 @@ impl Engine {
                 (format!("generate_scan_b1_g{g}"), None, None)
             }
             Mode::Griffin { keep, strategy } => {
+                // snap to a keep compiled for the scan path (aot.py
+                // emits generate_scan_pruned only at the headline k)
+                let keep =
+                    self.snap_keep("generate_scan_pruned", 1, keep)?;
                 let idx = self.select(&pre.stats[0], keep, strategy)?;
-                let pw = self.gather(&idx)?;
+                let pw = self.gather_cached(&idx)?;
                 let k = pw.k;
                 let g = self.scan_bucket("generate_scan_pruned", Some(k),
                                          req.max_new_tokens)?;
@@ -751,7 +1135,7 @@ impl Engine {
         match &pruned {
             Some(pw) => {
                 args.extend(self.weights.ordered_nonff());
-                args.extend(pw.tensors.iter());
+                args.extend(pw.tensors.iter().map(|t| &**t));
             }
             None => args.extend(self.weights.ordered()),
         }
@@ -760,8 +1144,8 @@ impl Engine {
         args.push(&tok_dev);
         args.push(&pos_dev);
         let outs = self.session.run(&exe_name, &args)?;
-        let scan_tokens = outs[0].to_i32()?;
-        let scan_lps = outs[1].to_f32()?;
+        let scan_tokens = self.session.download_i32(&outs[0])?;
+        let scan_lps = self.session.download_f32(&outs[1])?;
         let decode_ms = dec_t.elapsed().as_secs_f64() * 1e3;
 
         // assemble: first sampled token + scan outputs, truncated at EOS
@@ -844,12 +1228,14 @@ impl Engine {
         let (pruned, wanda_ffw) = match mode {
             Mode::Full => (None, None),
             Mode::Griffin { keep, strategy } => {
+                let keep = self.bucket_keep(pre.state.batch, keep)?;
                 let idx = self.select(&pre.stats[0], keep, strategy)?;
-                (Some(self.gather(&idx)?), None)
+                (Some(self.gather_cached(&idx)?), None)
             }
             Mode::Magnitude { keep } => {
+                let keep = self.bucket_keep(pre.state.batch, keep)?;
                 let idx = self.magnitude_experts(keep)?;
-                (Some(self.gather(&idx)?), None)
+                (Some(self.gather_cached(&idx)?), None)
             }
             Mode::Wanda { keep } => {
                 let ffw = self.wanda_weights(
@@ -870,8 +1256,8 @@ impl Engine {
         for i in 0..continuation.len() - 1 {
             cur[0] = continuation[i];
             let logits = self.decode_step(
-                &mut pre.state, &cur, pruned.as_ref(),
-                wanda_ffw.as_deref())?;
+                &mut pre.state, &cur, pruned.as_deref(),
+                wanda_ffw.as_ref())?;
             nll.push(-log_softmax_at(&logits[..v],
                                      continuation[i + 1] as usize) as f64);
         }
@@ -933,5 +1319,17 @@ mod tests {
         assert_eq!(Mode::Full.label(), "full");
         assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
         assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
+    }
+
+    #[test]
+    fn adaptive_bucket_is_pinned_to_headline() {
+        // pins the behavior of the old `keep.min(0.5).max(0.5)` — a
+        // confusing no-op clamp that always evaluated to 0.5 — which
+        // adaptive_bucket_keep replaces explicitly
+        for keep in [0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+            let legacy = keep.min(0.5).max(0.5);
+            assert_eq!(adaptive_bucket_keep(keep), legacy);
+            assert_eq!(adaptive_bucket_keep(keep), ADAPTIVE_HEADLINE_KEEP);
+        }
     }
 }

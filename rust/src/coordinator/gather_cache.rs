@@ -1,0 +1,207 @@
+//! LRU reuse cache for gathered (pruned) FF weight sets.
+//!
+//! The continuous-batching scheduler rebuilds its batch-shared pruned
+//! weights on every slot-membership change, and many of those rebuilds
+//! resolve to an expert selection that is already resident on device:
+//! magnitude mode is fully static, a single-slot GRIFFIN pool re-admits
+//! the same prompt, and the >1-occupied-slot eq.7 aggregate is stable
+//! whenever the surviving slots are unchanged. Re-running `gather_k{K}`
+//! for those is pure waste. `Engine::gather_cached` keys device-resident
+//! `PrunedWeights` by `(k, fnv1a(expert indices))` and serves repeats
+//! from here — hit/miss counts land in `MetricsRegistry::gather_cache_*`.
+//!
+//! A hit requires BOTH the hash key and an exact index-set compare (the
+//! stored selection is the witness): a 64-bit collision must never
+//! silently serve another selection's weights. The cache is generic over
+//! the stored value so its keying/eviction invariants are unit-testable
+//! without PJRT device tensors.
+
+/// Cache key: FF width + 64-bit FNV-1a over the flattened expert index
+/// set (layer boundaries included, so [[0,1],[2]] != [[0],[1,2]]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherKey {
+    pub k: usize,
+    pub hash: u64,
+}
+
+impl GatherKey {
+    pub fn new(idx: &[Vec<i32>]) -> GatherKey {
+        let k = idx.first().map_or(0, Vec::len);
+        GatherKey { k, hash: idx_hash(idx) }
+    }
+}
+
+/// FNV-1a over the index set; a layer separator is hashed between rows
+/// so per-layer boundaries contribute to the digest.
+pub fn idx_hash(idx: &[Vec<i32>]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    };
+    for layer in idx {
+        for v in layer {
+            for b in v.to_le_bytes() {
+                mix(b);
+            }
+        }
+        mix(0xff); // layer separator
+    }
+    h
+}
+
+/// Tiny LRU keyed by [`GatherKey`] + exact index-set equality. Capacity
+/// is small (a handful of weight sets dominate any steady state) and
+/// values are typically `Rc<PrunedWeights>` — evicting here drops the
+/// device buffers once the last in-flight user releases its handle.
+pub struct GatherCache<T> {
+    cap: usize,
+    tick: u64,
+    entries: Vec<(u64, GatherKey, Vec<Vec<i32>>, T)>,
+}
+
+impl<T> GatherCache<T> {
+    pub fn new(cap: usize) -> GatherCache<T> {
+        GatherCache { cap: cap.max(1), tick: 0, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a selection, refreshing its recency on hit. The hash key
+    /// narrows the scan; the stored index set is compared exactly, so a
+    /// hash collision is a miss, never a silent wrong-weights hit.
+    pub fn get(&mut self, key: &GatherKey, idx: &[Vec<i32>])
+               -> Option<&T> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.iter_mut().find_map(|(t, k, stored, v)| {
+            if k == key && stored.as_slice() == idx {
+                *t = tick;
+                Some(&*v)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Insert (or refresh) a selection, evicting the least-recently-used
+    /// entry when full.
+    pub fn insert(&mut self, key: GatherKey, idx: Vec<Vec<i32>>, value: T) {
+        self.tick += 1;
+        if let Some(slot) = self
+            .entries
+            .iter_mut()
+            .find(|(_, k, stored, _)| *k == key && *stored == idx)
+        {
+            *slot = (self.tick, key, idx, value);
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (t, _, _, _))| *t)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.swap_remove(lru);
+        }
+        self.entries.push((self.tick, key, idx, value));
+    }
+
+    /// Drop everything (weight reload, tests).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(layers: &[&[i32]]) -> Vec<Vec<i32>> {
+        layers.iter().map(|l| l.to_vec()).collect()
+    }
+
+    #[test]
+    fn key_is_stable_and_selective() {
+        let a = idx(&[&[0, 1], &[2, 3]]);
+        let b = idx(&[&[0, 1], &[2, 3]]);
+        let c = idx(&[&[0, 1], &[2, 4]]);
+        assert_eq!(GatherKey::new(&a), GatherKey::new(&b));
+        assert_ne!(GatherKey::new(&a), GatherKey::new(&c));
+        assert_eq!(GatherKey::new(&a).k, 2);
+    }
+
+    #[test]
+    fn layer_boundaries_matter() {
+        // same flat values, different layer split -> different hash
+        let a = idx(&[&[0, 1], &[2]]);
+        let b = idx(&[&[0], &[1, 2]]);
+        assert_ne!(idx_hash(&a), idx_hash(&b));
+    }
+
+    #[test]
+    fn hit_refreshes_and_miss_returns_none() {
+        let mut c: GatherCache<u32> = GatherCache::new(2);
+        let ia = idx(&[&[0, 1]]);
+        let ib = idx(&[&[2, 3]]);
+        let (ka, kb) = (GatherKey::new(&ia), GatherKey::new(&ib));
+        assert!(c.get(&ka, &ia).is_none());
+        c.insert(ka, ia.clone(), 10);
+        c.insert(kb, ib.clone(), 20);
+        assert_eq!(c.get(&ka, &ia), Some(&10));
+        assert_eq!(c.get(&kb, &ib), Some(&20));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn hash_collision_is_a_miss_not_a_wrong_hit() {
+        // force a "collision" by presenting a forged key whose hash
+        // matches entry A but whose index set differs
+        let mut c: GatherCache<u32> = GatherCache::new(2);
+        let ia = idx(&[&[0, 1]]);
+        let ka = GatherKey::new(&ia);
+        c.insert(ka, ia.clone(), 10);
+        let other = idx(&[&[5, 6]]);
+        assert!(c.get(&ka, &other).is_none(),
+                "exact index compare must reject a colliding key");
+        assert_eq!(c.get(&ka, &ia), Some(&10));
+    }
+
+    #[test]
+    fn eviction_is_lru() {
+        let mut c: GatherCache<u32> = GatherCache::new(2);
+        let ia = idx(&[&[1]]);
+        let ib = idx(&[&[2]]);
+        let ic = idx(&[&[3]]);
+        let (ka, kb, kc) =
+            (GatherKey::new(&ia), GatherKey::new(&ib), GatherKey::new(&ic));
+        c.insert(ka, ia.clone(), 1);
+        c.insert(kb, ib.clone(), 2);
+        c.get(&ka, &ia); // ka is now most recent
+        c.insert(kc, ic.clone(), 3); // evicts kb
+        assert_eq!(c.get(&ka, &ia), Some(&1));
+        assert!(c.get(&kb, &ib).is_none(), "LRU entry should be evicted");
+        assert_eq!(c.get(&kc, &ic), Some(&3));
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_value() {
+        let mut c: GatherCache<u32> = GatherCache::new(2);
+        let ia = idx(&[&[7, 8]]);
+        let ka = GatherKey::new(&ia);
+        c.insert(ka, ia.clone(), 1);
+        c.insert(ka, ia.clone(), 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&ka, &ia), Some(&2));
+    }
+}

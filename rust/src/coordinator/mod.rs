@@ -6,8 +6,10 @@
 //! - `slots`      — slot pool (continuous-batching bookkeeping)
 //! - `scheduler`  — continuous batching over the compiled batch buckets
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
+//! - `gather_cache` — LRU reuse of device-resident pruned weight sets
 
 pub mod engine;
+pub mod gather_cache;
 pub mod router;
 pub mod scheduler;
 pub mod selection;

@@ -109,6 +109,19 @@ impl Router {
     /// run to drain.
     pub fn take_compatible(&self, mode: Option<Mode>, n: usize)
                            -> Vec<GenRequest> {
+        self.take_compatible_with(mode, n, |a, b| a.compatible(b))
+    }
+
+    /// `take_compatible` with a caller-supplied compatibility relation.
+    /// The scheduler passes a bucket-aware one (`Engine::modes_batchable`)
+    /// so keeps that snap to the same compiled decode bucket share a
+    /// batch — the router itself knows nothing about artifacts.
+    pub fn take_compatible_with(
+        &self,
+        mode: Option<Mode>,
+        n: usize,
+        compat: impl Fn(&Mode, &Mode) -> bool,
+    ) -> Vec<GenRequest> {
         let mut q = self.queue.lock().unwrap();
         let mode = match mode.or_else(|| q.front().map(|r| r.mode)) {
             Some(m) => m,
@@ -117,7 +130,7 @@ impl Router {
         let mut out = Vec::new();
         while out.len() < n {
             match q.front() {
-                Some(r) if r.mode == mode => {
+                Some(r) if compat(&r.mode, &mode) => {
                     out.push(q.pop_front().unwrap())
                 }
                 _ => break,
@@ -193,6 +206,49 @@ mod tests {
         long.prompt = vec![0; 10];
         assert!(matches!(r.admit(long),
                          Err(AdmitError::PromptTooLong { .. })));
+    }
+
+    #[test]
+    fn seeded_sampling_strategies_batch_together() {
+        // per-request strategy seeds are selection inputs, not batching
+        // identity — distinct seeds must not serialize into waves of 1
+        use crate::coordinator::selection::Strategy;
+        let r = Router::new(8, 128);
+        for seed in [1u64, 2, 3] {
+            r.admit(req(Mode::Griffin {
+                keep: 0.5,
+                strategy: Strategy::Sampling { seed },
+            }))
+            .unwrap();
+        }
+        assert_eq!(r.take_compatible(None, 8).len(), 3);
+        // but a different strategy KIND still splits the batch
+        r.admit(req(Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::Sampling { seed: 9 },
+        }))
+        .unwrap();
+        r.admit(req(Mode::griffin(0.5))).unwrap();
+        assert_eq!(r.take_compatible(None, 8).len(), 1);
+    }
+
+    #[test]
+    fn take_compatible_with_custom_relation() {
+        // the scheduler's bucket-aware relation batches keeps that snap
+        // to the same compiled bucket; model that with a relation that
+        // treats all Griffin keeps as equal
+        let r = Router::new(8, 128);
+        r.admit(req(Mode::griffin(0.5))).unwrap();
+        r.admit(req(Mode::griffin(0.75))).unwrap();
+        r.admit(req(Mode::Full)).unwrap();
+        let w = r.take_compatible_with(None, 8, |a, b| {
+            matches!(
+                (a, b),
+                (Mode::Griffin { .. }, Mode::Griffin { .. })
+            ) || a.compatible(b)
+        });
+        assert_eq!(w.len(), 2, "snappable keeps share the batch");
+        assert_eq!(r.len(), 1);
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //! set per batch, so a continuous run stays mode-homogeneous. Admission
 //! pops the queue head only while it matches the active mode; when the
 //! pool drains, the next head's mode is adopted (FIFO, no starvation).
+//! Keep fractions are snapped to a bucket servable at the pool's batch
+//! size (`Engine::bucket_keep`) — aot.py compiles the full k sweep only
+//! at B=1, so e.g. griffin@0.75 serves at the nearest compiled bucket
+//! instead of failing in the decode loop.
 //!
 //! GRIFFIN state: each slot keeps its own prompt statistics and
 //! slot-private expert selection (gathered at admission, dropped at
@@ -30,21 +34,38 @@
 //! emitted, and their write positions are pinned to 0. Only occupied
 //! slots are decoded in the scheduling sense — sampled, streamed,
 //! retired.
+//!
+//! Fused (device-resident) ticks: when every occupied slot's sampler is
+//! greedy or top-k within the compiled truncation bucket and the
+//! artifacts provide `decode_sample_*` executables, the tick samples ON
+//! DEVICE — per step, the host uploads pos (+ tokens only after a
+//! membership change) and downloads token ids + logprobs, never the
+//! `[B, vocab]` logits. Each fused-eligible slot owns a host-side
+//! `DeviceSampler` mirror that is the source of truth for its RNG
+//! stream: fused ticks advance it in lockstep, host-fallback ticks
+//! sample through it, and the device `SamplingState` is rebuilt from
+//! mirror states on membership changes (no device readback) — so a
+//! seeded generation is reproducible independent of how ticks routed.
+//! Host fallback remains for Wanda overrides, nucleus/temperature
+//! samplers, and pre-fused artifact sets.
 
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::engine::{
-    aggregate_norms, DecodeState, Engine, GenResponse, Mode, PrunedWeights,
+    aggregate_norms, DecodeState, Engine, FfOverride, GenResponse, Mode,
+    PrunedWeights, SamplingState,
 };
 use crate::coordinator::router::Router;
 use crate::coordinator::selection::{aggregate_stats, LayerStats};
 use crate::coordinator::sequence::{FinishReason, GenRequest, Phase, Sequence};
 use crate::coordinator::slots::{SlotEntry, SlotPool};
-use crate::runtime::DeviceTensor;
-use crate::sampling::{log_softmax_at, Sampler};
+use crate::sampling::{
+    log_softmax_at, seed_state, DeviceSampler, Sampler, SamplerSpec,
+};
 use crate::tokenizer::{EOS_ID, PAD_ID};
 
 /// Streamed engine output: one event per generated token, one per
@@ -66,14 +87,24 @@ impl EngineEvent {
 }
 
 /// Batch-shared generation-phase FF weights (one set per compiled decode
-/// executable). Rebuilt lazily whenever slot membership changes.
+/// executable). Rebuilt lazily whenever slot membership changes; pruned
+/// sets come from the engine's gather cache, so an unchanged selection
+/// costs zero gather executions.
 #[derive(Default)]
 struct SharedFf {
-    pruned: Option<PrunedWeights>,
-    wanda: Option<Vec<DeviceTensor>>,
+    pruned: Option<Rc<PrunedWeights>>,
+    wanda: Option<FfOverride>,
     k: Option<usize>,
     built_for: Option<Mode>,
     dirty: bool,
+}
+
+/// Outcome of one decode tick's device work: fused ticks return the
+/// device-sampled (token, logprob) per slot; host ticks return the full
+/// logits for host-side sampling.
+enum TickStep {
+    Fused(Vec<i32>, Vec<f32>),
+    Host(Vec<f32>),
 }
 
 pub struct Scheduler {
@@ -85,6 +116,17 @@ pub struct Scheduler {
     shared: SharedFf,
     /// per-slot last sampled token (decode input); PAD for free slots
     cur: Vec<i32>,
+    /// device-resident per-slot sampling state (fused decode path);
+    /// rebuilt from the slots' host-side mirrors, which are the source
+    /// of truth for each sequence's RNG stream
+    samp: Option<SamplingState>,
+    /// slot membership changed (or a host tick ran) since `samp` was
+    /// built — rebuild before the next fused tick
+    samp_dirty: bool,
+    /// master switch for the fused on-device sampling path (true by
+    /// default; benches flip it off to measure the host path with an
+    /// otherwise-identical workload)
+    pub fused_enabled: bool,
     /// slot count == largest compiled batch bucket
     pub slot_count: usize,
 }
@@ -106,6 +148,9 @@ impl Scheduler {
             state: None,
             shared: SharedFf::default(),
             cur: vec![PAD_ID; slot_count],
+            samp: None,
+            samp_dirty: true,
+            fused_enabled: true,
             slot_count,
         }
     }
@@ -176,17 +221,22 @@ impl Scheduler {
         if free.is_empty() {
             return Ok(false);
         }
-        let reqs = self
-            .router
-            .take_compatible(self.pool.active_mode(), free.len());
+        let reqs = {
+            let engine = &self.engine;
+            let batch = self.slot_count;
+            self.router.take_compatible_with(
+                self.pool.active_mode(),
+                free.len(),
+                |a, b| engine.modes_batchable(batch, a, b),
+            )
+        };
         if reqs.is_empty() {
             return Ok(false);
         }
         if self.pool.is_empty() {
+            // prefill_into_slots marks shared dirty for every admission,
+            // so no staleness check is needed here — just adopt the mode
             self.pool.set_mode(reqs[0].mode);
-            if self.shared.built_for != Some(reqs[0].mode) {
-                self.shared.dirty = true;
-            }
         }
         self.prefill_into_slots(&reqs, &free[..reqs.len()], on_event)?;
         Ok(true)
@@ -208,6 +258,12 @@ impl Scheduler {
         for req in reqs {
             self.engine.metrics.queue_wait.record(req.admitted_at.elapsed());
         }
+        // fused-eligible samplers get a host-side device-stream mirror:
+        // it IS the sequence's RNG stream, whichever path ticks take
+        let mirror_cap = self
+            .engine
+            .fused_decode_spec(self.slot_count, None)
+            .and_then(|s| s.sample_topk);
         let pre_t = Instant::now();
         let prompts: Vec<Vec<i32>> =
             reqs.iter().map(|r| r.prompt.clone()).collect();
@@ -230,12 +286,25 @@ impl Scheduler {
             let mut entry = SlotEntry::new(
                 seq, Sampler::new(req.sampler, req.seed), pre.lengths[i]);
             entry.prefill_ms = prefill_ms;
+            if let Some(cap) = mirror_cap {
+                if crate::sampling::fused_eligible(req.sampler, cap) {
+                    entry.device_mirror = Some(DeviceSampler::with_cap(
+                        req.sampler,
+                        req.seed,
+                        cap,
+                    ));
+                }
+            }
 
             let sel_t = Instant::now();
             match req.mode {
                 Mode::Griffin { keep, strategy } => {
                     entry.seq.advance(Phase::Selecting);
                     let stats = pre.stats[i].clone();
+                    // snap to a keep servable at the pool bucket (the
+                    // full k sweep is only compiled at B=1)
+                    let keep =
+                        self.engine.bucket_keep(self.slot_count, keep)?;
                     entry.expert_idx =
                         Some(self.engine.select(&stats, keep, strategy)?);
                     entry.stats = Some(stats);
@@ -277,6 +346,7 @@ impl Scheduler {
             on_event(EngineEvent::Token { id, index: 0, token: t, text });
             self.pool.assign(slot, entry)?;
             self.shared.dirty = true;
+            self.samp_dirty = true;
             if let Some(reason) = finished {
                 self.retire_slot(slot, reason, on_event)?;
             }
@@ -292,6 +362,14 @@ impl Scheduler {
     /// One decode step over the bucket: sample every occupied slot,
     /// stream its token, retire sequences that hit EOS / their token
     /// budget / the context limit.
+    ///
+    /// Routing: when the artifacts provide a fused `decode_sample_*`
+    /// executable for the active (batch, weight-set) and every occupied
+    /// slot's sampler is fused-eligible (greedy / top-k within the
+    /// compiled truncation bucket), the tick runs on device end to end —
+    /// no `[B, vocab]` logits download, token input chained on device in
+    /// steady state. Otherwise (Wanda overrides, nucleus/temperature
+    /// samplers, old artifacts) the host-logits path runs as before.
     fn decode_tick(&mut self, on_event: &mut dyn FnMut(EngineEvent))
                    -> Result<()> {
         let max_seq = self.engine.config().max_seq;
@@ -328,24 +406,87 @@ impl Scheduler {
             }
         }
 
-        let logits = {
-            let Scheduler { engine, state, cur, shared, .. } = &mut *self;
-            engine.decode_step(
-                state.as_mut().unwrap(),
-                cur,
-                shared.pruned.as_ref(),
-                shared.wanda.as_deref(),
-            )?
+        let use_fused = self.fused_eligible_tick(&occ);
+        let step = if use_fused {
+            if self.samp_dirty || self.samp.is_none() {
+                self.rebuild_sampling()?;
+            }
+            let (toks, lps) = {
+                let Scheduler { engine, state, cur, shared, samp, .. } =
+                    &mut *self;
+                let samp = samp.as_mut().unwrap();
+                // steady state chains the previous step's sampled tokens
+                // on device; after a membership change (fresh sampling
+                // state) the host's per-slot tokens seed the step
+                let host_toks: Option<&[i32]> = if samp.tokens.is_some() {
+                    None
+                } else {
+                    Some(cur.as_slice())
+                };
+                engine.decode_sample_step(
+                    state.as_mut().unwrap(),
+                    samp,
+                    host_toks,
+                    shared.pruned.as_deref(),
+                )?
+            };
+            self.engine.metrics.fused_decode_ticks.inc();
+            TickStep::Fused(toks, lps)
+        } else {
+            // a host-path step leaves the device sampling state behind
+            // (tokens AND rng lanes) — rebuild it from the mirrors
+            // before the next fused tick
+            if self.samp.is_some() {
+                self.samp = None;
+                self.samp_dirty = true;
+            }
+            let logits = {
+                let Scheduler { engine, state, cur, shared, .. } =
+                    &mut *self;
+                engine.decode_step(
+                    state.as_mut().unwrap(),
+                    cur,
+                    shared.pruned.as_deref(),
+                    shared.wanda.as_ref(),
+                )?
+            };
+            TickStep::Host(logits)
         };
         let v = self.engine.config().vocab_size;
 
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
         for &slot in &occ {
-            let row = &logits[slot * v..(slot + 1) * v];
+            let (t, lp) = match &step {
+                TickStep::Fused(toks, lps) => {
+                    // keep the host mirror in lockstep with the device
+                    // stream (one advance per executable call)
+                    if let Some(m) = self
+                        .pool
+                        .get_mut(slot)
+                        .unwrap()
+                        .device_mirror
+                        .as_mut()
+                    {
+                        m.skip();
+                    }
+                    (toks[slot], lps[slot])
+                }
+                TickStep::Host(logits) => {
+                    let row = &logits[slot * v..(slot + 1) * v];
+                    let entry = self.pool.get_mut(slot).unwrap();
+                    // fused-eligible slots sample THROUGH their device
+                    // mirror so the token stream is identical to what
+                    // the fused path would have produced
+                    let t = match entry.device_mirror.as_mut() {
+                        Some(m) => m.sample(row) as i32,
+                        None => entry.sampler.sample(row) as i32,
+                    };
+                    (t, log_softmax_at(row, t as usize))
+                }
+            };
             let entry = self.pool.get_mut(slot).unwrap();
-            let t = entry.sampler.sample(row) as i32;
             entry.seq.generated.push(t);
-            entry.seq.logprobs.push(log_softmax_at(row, t as usize));
+            entry.seq.logprobs.push(lp);
             entry.last_token = t;
             let now = Instant::now();
             self.engine
@@ -379,6 +520,57 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Can this tick run on the fused on-device sampling path?
+    fn fused_eligible_tick(&self, occ: &[usize]) -> bool {
+        if !self.fused_enabled {
+            return false;
+        }
+        // Wanda replaces the full FF stacks; keep it on the host path
+        if matches!(self.pool.active_mode(), None | Some(Mode::Wanda { .. }))
+        {
+            return false;
+        }
+        let k = self.shared.pruned.as_ref().map(|p| p.k);
+        let Some(cap) = self
+            .engine
+            .fused_decode_spec(self.slot_count, k)
+            .and_then(|e| e.sample_topk)
+        else {
+            return false; // artifacts predate the fused-sampling ABI
+        };
+        occ.iter().all(|&i| {
+            let e = self.pool.get(i).unwrap();
+            // the mirror doubles as the eligibility marker — without
+            // one the slot's stream lives in the host Sampler only
+            e.device_mirror.is_some() && e.fused_ready(cap)
+        })
+    }
+
+    /// (Re)build the device-resident sampling state from the slots'
+    /// host-side stream mirrors — no device readback needed: the
+    /// mirrors advance in lockstep with the device (fused ticks) or do
+    /// the sampling themselves (host ticks), so their state IS the
+    /// stream position. Free and fused-ineligible lanes get greedy
+    /// placeholders (ineligible slots force host routing anyway).
+    fn rebuild_sampling(&mut self) -> Result<()> {
+        let mut slots = Vec::with_capacity(self.slot_count);
+        for i in 0..self.slot_count {
+            match self.pool.get(i) {
+                Some(e) => match &e.device_mirror {
+                    Some(m) => slots.push((m.spec, m.state())),
+                    None => slots.push((
+                        SamplerSpec::Greedy,
+                        seed_state(e.seq.req.seed),
+                    )),
+                },
+                None => slots.push((SamplerSpec::Greedy, seed_state(0))),
+            }
+        }
+        self.samp = Some(self.engine.new_sampling_state(&slots)?);
+        self.samp_dirty = false;
+        Ok(())
+    }
+
     /// Free a slot and emit the final response for its sequence.
     fn retire_slot(
         &mut self,
@@ -389,6 +581,7 @@ impl Scheduler {
         let mut entry = self.pool.retire(slot)?;
         entry.seq.finish(reason);
         self.cur[slot] = PAD_ID;
+        self.samp_dirty = true;
         if let Some(state) = self.state.as_mut() {
             state.pos[slot] = 0;
         }
@@ -430,7 +623,24 @@ impl Scheduler {
                 .and_then(|ix| ix.first().map(Vec::len))
                 .or(self.shared.k),
             Mode::Magnitude { keep } => {
-                self.shared.k.or_else(|| self.engine.k_for(keep).ok())
+                // shared.k may still belong to a previous mode when the
+                // sequence finished on its first token, before the first
+                // decode tick rebuilt the shared weights
+                if self
+                    .shared
+                    .built_for
+                    .is_some_and(|m| m.compatible(&seq.req.mode))
+                {
+                    self.shared.k
+                } else {
+                    None
+                }
+                .or_else(|| {
+                    self.engine
+                        .bucket_keep(self.slot_count, keep)
+                        .ok()
+                        .and_then(|kb| self.engine.k_for(kb).ok())
+                })
             }
             _ => None,
         };
@@ -475,12 +685,18 @@ impl Scheduler {
                 self.shared.k = None;
             }
             Mode::Magnitude { keep } => {
-                // static expert set: survives membership changes
-                if self.shared.built_for != Some(mode)
+                // static expert set: survives membership changes (and
+                // hits the gather cache even across mode switches)
+                if !self
+                    .shared
+                    .built_for
+                    .is_some_and(|m| m.compatible(&mode))
                     || self.shared.pruned.is_none()
                 {
+                    let keep =
+                        self.engine.bucket_keep(self.slot_count, keep)?;
                     let idx = self.engine.magnitude_experts(keep)?;
-                    let pw = self.engine.gather(&idx)?;
+                    let pw = self.engine.gather_cached(&idx)?;
                     self.shared.k = Some(pw.k);
                     self.shared.pruned = Some(pw);
                     self.shared.wanda = None;
@@ -507,9 +723,14 @@ impl Scheduler {
                         bail!("griffin slots without statistics");
                     }
                     let agg = aggregate_stats(&per);
+                    let keep =
+                        self.engine.bucket_keep(self.slot_count, keep)?;
                     self.engine.select(&agg, keep, strategy)?
                 };
-                let pw = self.engine.gather(&idx)?;
+                // unchanged selections (stable aggregates, re-admitted
+                // single-slot prompts) come back from the gather cache
+                // without running gather_k{K}
+                let pw = self.engine.gather_cached(&idx)?;
                 self.shared.k = Some(pw.k);
                 self.shared.pruned = Some(pw);
                 self.shared.wanda = None;

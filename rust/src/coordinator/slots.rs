@@ -27,7 +27,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::engine::Mode;
 use crate::coordinator::selection::LayerStats;
 use crate::coordinator::sequence::Sequence;
-use crate::sampling::Sampler;
+use crate::sampling::{DeviceSampler, Sampler};
 
 /// One occupied decode slot: the sequence plus everything needed to keep
 /// sampling it across ticks.
@@ -43,6 +43,14 @@ pub struct SlotEntry {
     /// Wanda: per-sequence FF input / activation column norms
     pub xnorm: Option<LayerStats>,
     pub znorm: Option<LayerStats>,
+    /// Host-side mirror of this slot's on-device sampling stream (set at
+    /// admission for fused-eligible sampler specs). The mirror is the
+    /// SOURCE OF TRUTH for the stream: fused ticks advance it in
+    /// lockstep (`skip`), host-fallback ticks sample THROUGH it, and
+    /// sampling-state rebuilds upload its state — so a sequence's token
+    /// stream is identical no matter how ticks route between the fused
+    /// and host paths (seed-reproducibility is routing-independent).
+    pub device_mirror: Option<DeviceSampler>,
     /// last token fed to decode (the most recently sampled one)
     pub last_token: i32,
     /// when the previous token was emitted (inter-token latency)
@@ -63,11 +71,21 @@ impl SlotEntry {
             expert_idx: None,
             xnorm: None,
             znorm: None,
+            device_mirror: None,
             last_token: 0,
             last_token_at: Instant::now(),
             prefill_ms: 0.0,
             select_ms: 0.0,
         }
+    }
+
+    /// Can this slot ride the fused on-device sampling path? True for
+    /// greedy and top-k samplers whose k fits the compiled truncation
+    /// bucket (`sample_topk` from the decode_sample manifest entry).
+    /// One ineligible slot sends the whole tick to the host-logits path
+    /// — the compiled sampler is per-batch, not per-slot.
+    pub fn fused_ready(&self, sample_topk: usize) -> bool {
+        crate::sampling::fused_eligible(self.sampler.spec, sample_topk)
     }
 }
 
@@ -206,6 +224,21 @@ mod tests {
         let seq =
             Sequence::new(GenRequest::greedy(id, vec![1, 2], 8, Mode::Full));
         SlotEntry::new(seq, Sampler::new(SamplerSpec::Greedy, id), 2)
+    }
+
+    #[test]
+    fn fused_ready_tracks_sampler_spec() {
+        assert!(entry(1).fused_ready(32), "greedy is always eligible");
+        let mk = |spec| {
+            let seq = Sequence::new(
+                GenRequest::greedy(2, vec![1], 8, Mode::Full));
+            SlotEntry::new(seq, Sampler::new(spec, 2), 1)
+        };
+        let topk = mk(SamplerSpec::TopK { k: 64, temperature: 0.9 });
+        assert!(!topk.fused_ready(32), "k beyond the compiled bucket");
+        assert!(topk.fused_ready(64));
+        let topp = mk(SamplerSpec::TopP { p: 0.9, temperature: 1.0 });
+        assert!(!topp.fused_ready(64), "nucleus stays on the host path");
     }
 
     #[test]

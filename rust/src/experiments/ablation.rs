@@ -117,7 +117,7 @@ fn engine_gather_masked(
     args.push(&idx_dev);
     args.push(&mask_dev);
     let outs = engine.session.run(&name, &args)?;
-    Ok(crate::coordinator::engine::PrunedWeights { tensors: outs, k })
+    Ok(engine.make_pruned(outs, k))
 }
 
 pub fn ablation_stat(args: &Args) -> Result<()> {

@@ -3,6 +3,16 @@
 //! Lock-free-ish (a Mutex per histogram is fine at our request rates);
 //! the engine exposes a `MetricsRegistry` snapshot over the server's
 //! `metrics` endpoint and the bench harness prints the same numbers.
+//!
+//! Host-boundary accounting (`host_transfer_bytes` in the JSON
+//! snapshot): `host_bytes_to_device` / `host_bytes_to_host` count every
+//! byte the runtime stages across the PJRT host boundary. On the fused
+//! decode path (`decode_sample_*`, on-device sampling) the per-step
+//! downstream traffic is O(B) — token ids and logprobs — instead of the
+//! O(B * vocab) logits download of the host sampling path; tests assert
+//! the difference through these counters. `gather_cache` reports the
+//! PrunedWeights reuse cache: `hits / (hits + misses)` is the fraction
+//! of generation-phase weight rebuilds that skipped `gather_k{K}`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -202,6 +212,21 @@ pub struct MetricsRegistry {
     pub requests_completed: Counter,
     pub requests_rejected: Counter,
     pub decode_ticks: Counter,
+    /// decode ticks served by the fused decode_sample_* path (on-device
+    /// sampling; no [B, vocab] logits download)
+    pub fused_decode_ticks: Counter,
+    /// bytes staged host -> device (uploads: tokens/pos, prompt
+    /// matrices, KV splices, gathered-index vectors, weight sets)
+    pub host_bytes_to_device: Counter,
+    /// bytes copied device -> host (downloads: logits on the host
+    /// sampling path, sampled token ids + logprobs on the fused path,
+    /// prefill stats, KV splice staging). The fused decode path exists
+    /// to keep this O(B) per step instead of O(B * vocab).
+    pub host_bytes_to_host: Counter,
+    /// PrunedWeights reuse cache (Engine::gather_cached): hits are
+    /// decode-weight rebuilds served without running gather_k{K}
+    pub gather_cache_hits: Counter,
+    pub gather_cache_misses: Counter,
     pub slots_busy: Gauge,
     pub slots_total: Gauge,
     pub tokens_generated: Meter,
@@ -263,6 +288,27 @@ impl MetricsRegistry {
                         Value::Num(self.tokens_generated.total() as f64),
                     ),
                     ("decode_ticks", n(self.decode_ticks.get() as f64)),
+                    (
+                        "fused_decode_ticks",
+                        n(self.fused_decode_ticks.get() as f64),
+                    ),
+                ]),
+            ),
+            (
+                "host_transfer_bytes",
+                obj(vec![
+                    (
+                        "to_device",
+                        n(self.host_bytes_to_device.get() as f64),
+                    ),
+                    ("to_host", n(self.host_bytes_to_host.get() as f64)),
+                ]),
+            ),
+            (
+                "gather_cache",
+                obj(vec![
+                    ("hits", n(self.gather_cache_hits.get() as f64)),
+                    ("misses", n(self.gather_cache_misses.get() as f64)),
                 ]),
             ),
         ])
@@ -357,6 +403,15 @@ mod tests {
         assert!(v.get("ttft").is_some());
         assert!(v.get("inter_token_latency").is_some());
         assert!(v.get("slot_occupancy").unwrap().get("mean").is_some());
+        let ht = v.get("host_transfer_bytes").unwrap();
+        assert!(ht.get("to_device").is_some());
+        assert!(ht.get("to_host").is_some());
+        assert!(v.get("gather_cache").unwrap().get("hits").is_some());
+        assert!(v
+            .get("throughput")
+            .unwrap()
+            .get("fused_decode_ticks")
+            .is_some());
         // serializes without panicking
         let s = crate::json::to_string(&v);
         assert!(crate::json::parse(&s).is_ok());

@@ -10,6 +10,27 @@
 //! so `Session::run` validates every argument's shape/dtype against the
 //! manifest before dispatch and returns a proper error instead.
 //!
+//! # Dispatch plans (the decode hot path)
+//!
+//! `Session::run` resolves the executable by name, validates every
+//! argument against the manifest `IoSpec`s, and rebuilds the full
+//! argument vector — fine for prefill/gather (once per admission), but
+//! wasteful for decode, which runs every tick with an argument list
+//! that is ~90% static weights. A [`DispatchPlan`] is a prepared
+//! binding built once per (executable, weight-set): it pins the static
+//! argument prefix (as `Rc<DeviceTensor>`s, so the weights stay alive),
+//! resolves and validates everything up front, and leaves only the
+//! per-step dynamic tail (KV caches, token/pos, sampling state) to be
+//! supplied to [`Session::run_prepared`] — which does a cheap O(dynamic)
+//! shape guard (xla aborts the process on mismatch, so this stays) but
+//! no name lookup, no `ExecutableSpec` clone, and no per-weight checks.
+//!
+//! Host-boundary accounting: `upload_*` and `download_*` count bytes
+//! into the session's `MetricsRegistry` (`host_transfer_bytes` in the
+//! metrics snapshot) so tests and benches can assert what the fused
+//! decode path keeps on device. `DeviceTensor::to_f32/to_i32` remain
+//! unmetered escape hatches for tests.
+//!
 //! Threading: `PjRtBuffer` is not `Send` (raw pointer wrapper), so all
 //! runtime interaction stays on the engine thread; the server hands work
 //! over via channels (see server/).
@@ -18,13 +39,19 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::config::{ExecutableSpec, IoSpec, Manifest};
+use crate::metrics::MetricsRegistry;
 use crate::tensorfile::{self, DType, Tensor};
+
+/// Uploads larger than this bypass the reusable staging buffer so one
+/// KV-splice upload does not pin megabytes of host scratch forever.
+const STAGING_CAP_BYTES: usize = 1 << 20;
 
 /// A device buffer plus the host-side metadata needed for shape checking.
 pub struct DeviceTensor {
@@ -70,6 +97,10 @@ pub struct Session {
     pub manifest: Manifest,
     compiled: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
     pub compile_times_ms: RefCell<BTreeMap<String, f64>>,
+    /// host-transfer byte counters land here (shared with the engine)
+    pub metrics: Arc<MetricsRegistry>,
+    /// reusable host staging for small per-step uploads (token/pos)
+    staging: RefCell<Vec<u8>>,
 }
 
 impl Session {
@@ -81,6 +112,8 @@ impl Session {
             manifest,
             compiled: RefCell::new(BTreeMap::new()),
             compile_times_ms: RefCell::new(BTreeMap::new()),
+            metrics: Arc::new(MetricsRegistry::default()),
+            staging: RefCell::new(Vec::new()),
         })
     }
 
@@ -114,17 +147,53 @@ impl Session {
 
     // -- host -> device -------------------------------------------------
 
+    /// Stage `n_bytes` of little-endian data via the reusable scratch
+    /// buffer (single preallocated write — these uploads run every
+    /// decode step for token/pos) and create a device buffer from it.
+    /// PJRT's `buffer_from_host_literal` copies, so the scratch can be
+    /// reused immediately; oversized uploads get a one-off allocation.
+    fn upload_le_bytes(
+        &self,
+        ty: ElementType,
+        dtype: DType,
+        shape: &[usize],
+        fill: impl FnOnce(&mut [u8]),
+        n_bytes: usize,
+    ) -> Result<DeviceTensor> {
+        let mut staged;
+        let mut keep;
+        let bytes: &mut [u8] = if n_bytes <= STAGING_CAP_BYTES {
+            keep = self.staging.borrow_mut();
+            keep.resize(n_bytes.max(keep.len()), 0);
+            &mut keep[..n_bytes]
+        } else {
+            staged = vec![0u8; n_bytes];
+            &mut staged
+        };
+        fill(bytes);
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ty, shape, bytes)?;
+        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        self.metrics.host_bytes_to_device.add(n_bytes as u64);
+        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype })
+    }
+
     pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<DeviceTensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
             bail!("upload_f32: shape {shape:?} != {} elements", data.len());
         }
-        let bytes: Vec<u8> =
-            data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        let lit = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32, shape, &bytes)?;
-        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
-        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype: DType::F32 })
+        self.upload_le_bytes(
+            ElementType::F32,
+            DType::F32,
+            shape,
+            |bytes| {
+                for (chunk, v) in bytes.chunks_exact_mut(4).zip(data) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            },
+            n * 4,
+        )
     }
 
     pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<DeviceTensor> {
@@ -132,12 +201,17 @@ impl Session {
         if n != data.len() {
             bail!("upload_i32: shape {shape:?} != {} elements", data.len());
         }
-        let bytes: Vec<u8> =
-            data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        let lit = Literal::create_from_shape_and_untyped_data(
-            ElementType::S32, shape, &bytes)?;
-        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
-        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype: DType::I32 })
+        self.upload_le_bytes(
+            ElementType::S32,
+            DType::I32,
+            shape,
+            |bytes| {
+                for (chunk, v) in bytes.chunks_exact_mut(4).zip(data) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            },
+            n * 4,
+        )
     }
 
     pub fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
@@ -148,6 +222,7 @@ impl Session {
         let lit = Literal::create_from_shape_and_untyped_data(
             ty, &t.shape, &t.data)?;
         let buffer = self.client.buffer_from_host_literal(None, &lit)?;
+        self.metrics.host_bytes_to_device.add(t.data.len() as u64);
         Ok(DeviceTensor {
             buffer,
             shape: t.shape.clone(),
@@ -155,18 +230,37 @@ impl Session {
         })
     }
 
+    // -- device -> host (metered) ----------------------------------------
+
+    /// Download as f32, counting the bytes into `host_bytes_to_host`.
+    /// All engine hot paths use these so the metric reflects real
+    /// boundary traffic; `DeviceTensor::to_f32` stays for tests.
+    pub fn download_f32(&self, t: &DeviceTensor) -> Result<Vec<f32>> {
+        let v = t.to_f32()?;
+        self.metrics.host_bytes_to_host.add((v.len() * 4) as u64);
+        Ok(v)
+    }
+
+    pub fn download_i32(&self, t: &DeviceTensor) -> Result<Vec<i32>> {
+        let v = t.to_i32()?;
+        self.metrics.host_bytes_to_host.add((v.len() * 4) as u64);
+        Ok(v)
+    }
+
     // -- dispatch ---------------------------------------------------------
 
     /// Execute by manifest name with shape-checked device arguments.
+    /// (Cold paths: prefill, gather, scans. The decode loop uses
+    /// `prepare` + `run_prepared` instead.) The spec is borrowed, not
+    /// cloned — validation only reads it.
     pub fn run(&self, name: &str, args: &[&DeviceTensor])
                -> Result<Vec<DeviceTensor>> {
         let spec = self
             .manifest
             .executables
             .get(name)
-            .with_context(|| format!("unknown executable {name:?}"))?
-            .clone();
-        self.check_args(&spec, args)?;
+            .with_context(|| format!("unknown executable {name:?}"))?;
+        self.check_args(spec, args)?;
         let exe = self.executable(name)?;
         let bufs: Vec<&PjRtBuffer> =
             args.iter().map(|a| &a.buffer).collect();
@@ -216,6 +310,147 @@ impl Session {
         }
         Ok(())
     }
+
+    // -- prepared dispatch (decode hot loop) ------------------------------
+
+    /// Build a [`DispatchPlan`]: resolve + compile the executable once,
+    /// validate and pin the static argument prefix, and precompute the
+    /// dynamic-tail and output specs so `run_prepared` does no lookups.
+    pub fn prepare(&self, name: &str, static_args: Vec<Rc<DeviceTensor>>)
+                   -> Result<DispatchPlan> {
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?;
+        let shapes: Vec<(Vec<usize>, DType)> = static_args
+            .iter()
+            .map(|t| (t.shape.clone(), t.dtype))
+            .collect();
+        let dyn_specs = plan_dynamic_specs(spec, &shapes)?;
+        let out_specs = spec
+            .outputs
+            .iter()
+            .map(|io| (io.shape.clone(), dtype_of(io)))
+            .collect();
+        let exe = self.executable(name)?;
+        Ok(DispatchPlan {
+            name: name.to_string(),
+            exe,
+            static_args,
+            dyn_specs,
+            out_specs,
+        })
+    }
+
+    /// Execute a prepared plan with only the per-step dynamic tail.
+    /// The remaining per-call guard is an O(|dynamic|) shape check —
+    /// xla_extension aborts the whole process on a mismatched buffer,
+    /// so this stays even on the hot path (4-7 tiny comparisons).
+    pub fn run_prepared(&self, plan: &DispatchPlan,
+                        dynamic: &[&DeviceTensor])
+                        -> Result<Vec<DeviceTensor>> {
+        if dynamic.len() != plan.dyn_specs.len() {
+            bail!(
+                "{}: prepared plan takes {} dynamic args, got {}",
+                plan.name,
+                plan.dyn_specs.len(),
+                dynamic.len()
+            );
+        }
+        for (arg, (shape, dtype)) in dynamic.iter().zip(&plan.dyn_specs) {
+            if &arg.shape != shape || arg.dtype != *dtype {
+                bail!(
+                    "{}: dynamic arg expects {:?} {:?}, got {:?} {:?}",
+                    plan.name, dtype, shape, arg.dtype, arg.shape
+                );
+            }
+        }
+        let mut bufs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(plan.static_args.len() + dynamic.len());
+        bufs.extend(plan.static_args.iter().map(|t| &t.buffer));
+        bufs.extend(dynamic.iter().map(|t| &t.buffer));
+        let mut outs = plan.exe.execute_b::<&PjRtBuffer>(&bufs)?;
+        if outs.is_empty() {
+            bail!("{}: no replica outputs", plan.name);
+        }
+        let row = outs.remove(0);
+        if row.len() != plan.out_specs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                plan.name,
+                plan.out_specs.len(),
+                row.len()
+            );
+        }
+        Ok(row
+            .into_iter()
+            .zip(&plan.out_specs)
+            .map(|(buffer, (shape, dtype))| DeviceTensor {
+                buffer,
+                shape: shape.clone(),
+                dtype: *dtype,
+            })
+            .collect())
+    }
+}
+
+/// A prepared, shape-checked argument binding for one executable and one
+/// weight set (see the module docs). Holding the plan keeps its static
+/// arguments' device buffers alive via `Rc`.
+pub struct DispatchPlan {
+    pub name: String,
+    exe: Rc<PjRtLoadedExecutable>,
+    static_args: Vec<Rc<DeviceTensor>>,
+    dyn_specs: Vec<(Vec<usize>, DType)>,
+    out_specs: Vec<(Vec<usize>, DType)>,
+}
+
+impl DispatchPlan {
+    /// Number of per-call (dynamic) arguments `run_prepared` expects.
+    pub fn dynamic_arity(&self) -> usize {
+        self.dyn_specs.len()
+    }
+
+    /// The pinned static argument prefix. Exposed so a plan-cache owner
+    /// can decide liveness: a weight set whose tensors are owned ONLY
+    /// by cached plans (strong_count equals the number of referencing
+    /// plans) has been dropped everywhere else — gather-cache eviction,
+    /// a replaced Wanda override — and its plans just pin device
+    /// memory. Base weights are always co-owned by the `WeightStore`,
+    /// so they never look dead.
+    pub fn static_args(&self) -> &[Rc<DeviceTensor>] {
+        &self.static_args
+    }
+}
+
+/// Validate a static argument prefix against an executable spec and
+/// return the remaining (dynamic) input specs. Pure — this is the
+/// shape/arity half of `Session::prepare`, unit-testable without PJRT.
+pub fn plan_dynamic_specs(
+    spec: &ExecutableSpec,
+    static_shapes: &[(Vec<usize>, DType)],
+) -> Result<Vec<(Vec<usize>, DType)>> {
+    if static_shapes.len() > spec.inputs.len() {
+        bail!(
+            "{}: {} static args but the executable only takes {}",
+            spec.name,
+            static_shapes.len(),
+            spec.inputs.len()
+        );
+    }
+    for ((shape, dtype), io) in static_shapes.iter().zip(&spec.inputs) {
+        if shape != &io.shape || *dtype != dtype_of(io) {
+            bail!(
+                "{}: static arg {:?} expects {:?} {:?}, got {:?} {:?}",
+                spec.name, io.name, io.dtype, io.shape, dtype, shape
+            );
+        }
+    }
+    Ok(spec.inputs[static_shapes.len()..]
+        .iter()
+        .map(|io| (io.shape.clone(), dtype_of(io)))
+        .collect())
 }
 
 /// Device-resident model weights in manifest ABI order.
@@ -249,6 +484,11 @@ impl WeightStore {
         &self.params[name]
     }
 
+    /// Shared handle to one parameter (DispatchPlan static prefixes).
+    pub fn get_rc(&self, name: &str) -> Rc<DeviceTensor> {
+        self.params[name].clone()
+    }
+
     /// All params in ABI order (prefill/decode/full-scan argument prefix).
     pub fn ordered(&self) -> Vec<&DeviceTensor> {
         self.param_order.iter().map(|n| &*self.params[n]).collect()
@@ -257,6 +497,16 @@ impl WeightStore {
     /// Non-FF params in ABI order (decode_pruned argument prefix).
     pub fn ordered_nonff(&self) -> Vec<&DeviceTensor> {
         self.nonff_order.iter().map(|n| &*self.params[n]).collect()
+    }
+
+    /// `ordered()` as shared handles (DispatchPlan static prefix).
+    pub fn ordered_rc(&self) -> Vec<Rc<DeviceTensor>> {
+        self.param_order.iter().map(|n| self.params[n].clone()).collect()
+    }
+
+    /// `ordered_nonff()` as shared handles.
+    pub fn ordered_rc_nonff(&self) -> Vec<Rc<DeviceTensor>> {
+        self.nonff_order.iter().map(|n| self.params[n].clone()).collect()
     }
 }
 
@@ -311,6 +561,97 @@ mod tests {
             vec![s.manifest.config.vocab_size, s.manifest.config.d_model]
         );
         assert!(ws.ordered_nonff().len() < ws.ordered().len());
+    }
+
+    fn synthetic_spec() -> ExecutableSpec {
+        let io = |name: &str, shape: &[usize], dtype: &str| IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: dtype.into(),
+        };
+        ExecutableSpec {
+            name: "decode_b2".into(),
+            file: "decode_b2.hlo.txt".into(),
+            kind: "decode".into(),
+            batch: Some(2),
+            seq: None,
+            k: None,
+            gen: None,
+            sample_topk: None,
+            inputs: vec![
+                io("w", &[4, 4], "f32"),
+                io("kcache", &[1, 2, 2, 8, 2], "f32"),
+                io("token", &[2], "i32"),
+            ],
+            outputs: vec![io("logits", &[2, 16], "f32")],
+        }
+    }
+
+    #[test]
+    fn plan_dynamic_specs_splits_and_validates() {
+        let spec = synthetic_spec();
+        // empty static prefix: everything is dynamic
+        let dy = plan_dynamic_specs(&spec, &[]).unwrap();
+        assert_eq!(dy.len(), 3);
+        // static w -> dynamic tail is kcache + token with right dtypes
+        let dy = plan_dynamic_specs(
+            &spec, &[(vec![4, 4], DType::F32)]).unwrap();
+        assert_eq!(dy, vec![
+            (vec![1, 2, 2, 8, 2], DType::F32),
+            (vec![2], DType::I32),
+        ]);
+        // wrong static shape rejected
+        let err = plan_dynamic_specs(&spec, &[(vec![4, 3], DType::F32)])
+            .unwrap_err();
+        assert!(err.to_string().contains("static arg"), "{err}");
+        // wrong static dtype rejected
+        assert!(plan_dynamic_specs(&spec, &[(vec![4, 4], DType::I32)])
+            .is_err());
+        // too many static args rejected
+        let too_many = vec![(vec![4, 4], DType::F32); 4];
+        let err = plan_dynamic_specs(&spec, &too_many).unwrap_err();
+        assert!(err.to_string().contains("only takes"), "{err}");
+    }
+
+    #[test]
+    fn prepared_plan_runs_and_guards_arity() {
+        let _g = crate::test_support::pjrt_lock();
+        let Some(s) = session() else { return };
+        // prepare decode_b1 with the full weight set as static prefix
+        let ws = WeightStore::load(&s, false).unwrap();
+        let plan = s.prepare("decode_b1", ws.ordered_rc()).unwrap();
+        assert_eq!(plan.dynamic_arity(), 4); // kcache, vcache, token, pos
+        // wrong dynamic arity is a proper error, not an abort
+        let t = s.upload_i32(&[1], &[0]).unwrap();
+        assert!(s.run_prepared(&plan, &[&t]).is_err());
+        // wrong dynamic shape is a proper error too
+        let spec = &s.manifest.executables["decode_b1"];
+        let cshape = spec.inputs.iter()
+            .find(|io| io.name == "kcache").unwrap().shape.clone();
+        let n: usize = cshape.iter().product();
+        let kc = s.upload_f32(&cshape, &vec![0.0; n]).unwrap();
+        let vc = s.upload_f32(&cshape, &vec![0.0; n]).unwrap();
+        let bad_tok = s.upload_i32(&[2], &[0, 0]).unwrap();
+        let pos = s.upload_i32(&[1], &[0]).unwrap();
+        assert!(s.run_prepared(&plan, &[&kc, &vc, &bad_tok, &pos]).is_err());
+        // and a correct call executes, returning logits + KV
+        let tok = s.upload_i32(&[1], &[65]).unwrap();
+        let outs = s.run_prepared(&plan, &[&kc, &vc, &tok, &pos]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].shape,
+                   vec![1, s.manifest.config.vocab_size]);
+    }
+
+    #[test]
+    fn transfer_bytes_are_counted() {
+        let _g = crate::test_support::pjrt_lock();
+        let Some(s) = session() else { return };
+        let up0 = s.metrics.host_bytes_to_device.get();
+        let dt = s.upload_f32(&[8], &[0.5; 8]).unwrap();
+        assert_eq!(s.metrics.host_bytes_to_device.get() - up0, 32);
+        let down0 = s.metrics.host_bytes_to_host.get();
+        let _ = s.download_f32(&dt).unwrap();
+        assert_eq!(s.metrics.host_bytes_to_host.get() - down0, 32);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //!
 //! Greedy / temperature / top-k / top-p, plus a composable `SamplerSpec`.
 //! The PRNG is the same xorshift64* used everywhere else, so sampled
-//! generations are reproducible given a request seed.
+//! generations are reproducible given a request seed. Fused-eligible
+//! specs (greedy / top-k) served by the continuous scheduler instead
+//! draw from the on-device xorshift32 stream, mirrored host-side by
+//! [`DeviceSampler`] — also seed-reproducible, and independent of
+//! whether individual ticks ran on the fused or host path.
 
 use crate::workload::rng::XorShift64Star;
 
@@ -102,6 +106,171 @@ impl Sampler {
     }
 }
 
+// ---------------------------------------------------------------------------
+// fused-sampling ABI mirror (python/compile/model.py sample_tokens)
+// ---------------------------------------------------------------------------
+
+/// Static top-k truncation bucket compiled into every `decode_sample_*`
+/// executable — must equal `model.SAMPLE_TOPK` on the python side (the
+/// manifest also records it per executable as `sample_topk`).
+pub const SAMPLE_TOPK: usize = 32;
+
+/// Can this sampler spec run on the fused on-device path? The compiled
+/// sampler supports greedy and top-k-with-temperature up to the static
+/// truncation bucket; temperature-over-full-vocab and nucleus sampling
+/// keep the host-logits path.
+pub fn fused_eligible(spec: SamplerSpec, sample_topk: usize) -> bool {
+    match spec {
+        SamplerSpec::Greedy => true,
+        SamplerSpec::TopK { k, .. } => k >= 1 && k <= sample_topk,
+        SamplerSpec::Temperature(_) | SamplerSpec::TopP { .. } => false,
+    }
+}
+
+/// Per-slot device sampling parameters (temp, topk) for a fused-eligible
+/// spec. Greedy is encoded as temp = 0 (the device treats temp <= 1e-6
+/// as argmax).
+pub fn device_params(spec: SamplerSpec) -> (f32, i32) {
+    match spec {
+        SamplerSpec::Greedy => (0.0, 1),
+        SamplerSpec::TopK { k, temperature } => {
+            (temperature, k.max(1) as i32)
+        }
+        // not fused-eligible; greedy placeholders (never uploaded —
+        // the scheduler routes these specs to the host-logits path)
+        SamplerSpec::Temperature(_) | SamplerSpec::TopP { .. } => (0.0, 1),
+    }
+}
+
+/// Derive the initial xorshift32 state from a request seed (both sides
+/// of the ABI use this fold; the state must never be zero).
+pub fn seed_state(seed: u64) -> u32 {
+    let s = (seed as u32) ^ ((seed >> 32) as u32);
+    if s == 0 {
+        0x9E37_79B9
+    } else {
+        s
+    }
+}
+
+fn xorshift32(mut s: u32) -> u32 {
+    s ^= s << 13;
+    s ^= s >> 17;
+    s ^= s << 5;
+    s
+}
+
+/// Host mirror of the on-device sampler (`model.sample_tokens`): same
+/// RNG recurrence, same top-k/temperature arithmetic in f32, same
+/// tie-breaking (stable order). Used by the artifact-gated parity tests
+/// to predict fused `decode_sample_*` tokens from host-side logits.
+///
+/// Parity caveat: the integer RNG stream is bit-exact by construction;
+/// the f32 exp/cumsum can differ from XLA's in the last ulp, so a token
+/// mismatch is possible iff the uniform draw lands exactly on a
+/// boundary — vanishingly unlikely and deterministic for a fixed seed.
+pub struct DeviceSampler {
+    pub spec: SamplerSpec,
+    state: u32,
+    /// compiled truncation bucket of the executable being mirrored
+    /// (`sample_topk` from its manifest entry)
+    cap: usize,
+    /// scratch reused across steps (no allocation in the hot loop —
+    /// host-fallback ticks sample through this mirror per slot)
+    scratch: Vec<usize>,
+    cum: Vec<f32>,
+}
+
+impl DeviceSampler {
+    pub fn new(spec: SamplerSpec, seed: u64) -> Self {
+        Self::with_cap(spec, seed, SAMPLE_TOPK)
+    }
+
+    /// Mirror an executable compiled with a different truncation bucket
+    /// (read `sample_topk` from its manifest entry rather than assuming
+    /// the current SAMPLE_TOPK constant).
+    pub fn with_cap(spec: SamplerSpec, seed: u64, cap: usize) -> Self {
+        DeviceSampler {
+            spec,
+            state: seed_state(seed),
+            cap: cap.max(1),
+            scratch: Vec::new(),
+            cum: Vec::new(),
+        }
+    }
+
+    /// Current xorshift32 state (upload this to resume the device
+    /// stream exactly where the mirror stands).
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    /// Advance the stream one step without sampling — call once per
+    /// fused tick to keep the mirror in lockstep with the device, whose
+    /// RNG advances exactly once per executable call regardless of the
+    /// sampling path taken.
+    pub fn skip(&mut self) {
+        self.state = xorshift32(self.state);
+    }
+
+    /// One sampling step. The RNG advances on every call regardless of
+    /// the path taken (matching the device's data-independent stream).
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        self.state = xorshift32(self.state);
+        let u = (self.state >> 8) as f32 * (1.0 / 16_777_216.0);
+        let (temp, topk) = match self.spec {
+            SamplerSpec::Greedy => (0.0, 1usize),
+            SamplerSpec::TopK { k, temperature } => {
+                (temperature, k.max(1))
+            }
+            // ineligible specs never reach the fused path; mirror the
+            // device's greedy fallback for robustness
+            _ => (0.0, 1usize),
+        };
+        if temp <= 1e-6 {
+            return argmax(logits);
+        }
+        let kk = self.cap.min(logits.len());
+        // top-kk by (logit desc, index asc) — the composite key gives a
+        // total order reproducing lax.top_k's lower-index-first ties,
+        // so an O(V) partial selection replaces a full O(V log V) sort
+        let desc = |a: &usize, b: &usize| {
+            logits[*b]
+                .partial_cmp(&logits[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        };
+        self.scratch.clear();
+        self.scratch.extend(0..logits.len());
+        if kk < self.scratch.len() {
+            self.scratch.select_nth_unstable_by(kk - 1, desc);
+            self.scratch.truncate(kk);
+        }
+        self.scratch.sort_by(desc);
+        let top = &self.scratch[..kk];
+        let v0 = logits[top[0]];
+        let safe_t = temp.max(1e-6);
+        self.cum.clear();
+        let mut total = 0f32;
+        for (j, &i) in top.iter().enumerate() {
+            let w = if j < topk {
+                ((logits[i] - v0) / safe_t).exp()
+            } else {
+                0.0
+            };
+            total += w;
+            self.cum.push(total);
+        }
+        let r = u * total;
+        for (j, &c) in self.cum.iter().enumerate() {
+            if c >= r {
+                return top[j];
+            }
+        }
+        top[kk - 1]
+    }
+}
+
 pub fn argmax(logits: &[f32]) -> usize {
     let mut best = 0;
     let mut best_v = f32::NEG_INFINITY;
@@ -194,6 +363,87 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn seed_state_never_zero() {
+        assert_ne!(seed_state(0), 0, "xorshift32 must not start at 0");
+        assert_ne!(seed_state(u64::MAX), 0);
+        // the fold mixes both halves
+        assert_ne!(seed_state(1), seed_state(1 << 32 | 1));
+        assert_ne!(seed_state(7), seed_state(8));
+    }
+
+    #[test]
+    fn fused_eligibility_matches_compiled_sampler() {
+        assert!(fused_eligible(SamplerSpec::Greedy, SAMPLE_TOPK));
+        assert!(fused_eligible(
+            SamplerSpec::TopK { k: SAMPLE_TOPK, temperature: 0.7 },
+            SAMPLE_TOPK
+        ));
+        assert!(!fused_eligible(
+            SamplerSpec::TopK { k: SAMPLE_TOPK + 1, temperature: 0.7 },
+            SAMPLE_TOPK
+        ));
+        assert!(!fused_eligible(SamplerSpec::Temperature(1.0),
+                                SAMPLE_TOPK));
+        assert!(!fused_eligible(
+            SamplerSpec::TopP { p: 0.9, temperature: 1.0 },
+            SAMPLE_TOPK
+        ));
+    }
+
+    #[test]
+    fn device_sampler_greedy_matches_argmax_and_advances_rng() {
+        let logits = vec![0.1f32, 2.0, -1.0, 0.5];
+        let mut s = DeviceSampler::new(SamplerSpec::Greedy, 42);
+        let s0 = format!("{:?}", s.state);
+        for _ in 0..5 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+        // the stream advanced even though greedy never consumed it
+        assert_ne!(format!("{:?}", s.state), s0);
+    }
+
+    #[test]
+    fn device_sampler_restricts_to_topk_and_is_seed_deterministic() {
+        let logits: Vec<f32> =
+            (0..64).map(|i| ((i * 37) % 64) as f32 * 0.1).collect();
+        let top4: Vec<usize> = {
+            let mut ix: Vec<usize> = (0..64).collect();
+            ix.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            ix[..4].to_vec()
+        };
+        let spec = SamplerSpec::TopK { k: 4, temperature: 1.0 };
+        let run = |seed| {
+            let mut s = DeviceSampler::new(spec, seed);
+            (0..64).map(|_| s.sample(&logits)).collect::<Vec<_>>()
+        };
+        let a = run(9);
+        assert_eq!(a, run(9), "same seed, same stream");
+        assert_ne!(a, run(10));
+        for t in &a {
+            assert!(top4.contains(t), "sampled {t} outside top-4 {top4:?}");
+        }
+        let distinct: std::collections::HashSet<_> = a.iter().collect();
+        assert!(distinct.len() > 1, "temperature should move around");
+    }
+
+    #[test]
+    fn device_sampler_tiny_temperature_degenerates_to_greedy() {
+        let logits = vec![0.0f32, 5.0, 1.0];
+        let mut s = DeviceSampler::new(
+            SamplerSpec::TopK { k: 3, temperature: 0.0 }, 3);
+        assert_eq!(s.sample(&logits), 1);
+    }
+
+    #[test]
+    fn device_params_encode_greedy_as_zero_temp() {
+        assert_eq!(device_params(SamplerSpec::Greedy), (0.0, 1));
+        assert_eq!(
+            device_params(SamplerSpec::TopK { k: 8, temperature: 0.7 }),
+            (0.7, 8)
+        );
     }
 
     #[test]
