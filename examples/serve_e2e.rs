@@ -99,12 +99,26 @@ fn main() -> anyhow::Result<()> {
                     tokens_out.fetch_add(n_tokens, Ordering::Relaxed);
                     resp
                 } else {
+                    // non-streaming connections speak the typed v2
+                    // protocol: the pruning knob is an orthogonal object,
+                    // not a mode string (streaming ones stay on v1 to
+                    // keep the compat shim exercised end-to-end)
+                    let prune = if mode == "griffin" {
+                        obj(vec![
+                            ("method", s("griffin")),
+                            ("keep", n(0.5)),
+                            ("strategy", s("topk")),
+                        ])
+                    } else {
+                        obj(vec![("method", s("none"))])
+                    };
                     let resp = client
                         .call(&obj(vec![
+                            ("v", n(2.0)),
                             ("op", s("generate")),
                             ("prompt", s(&prompt_text)),
                             ("max_new_tokens", n(r.max_new_tokens as f64)),
-                            ("mode", s(mode)),
+                            ("prune", prune),
                         ]))
                         .unwrap();
                     if let Some(Value::Arr(toks)) =

@@ -120,7 +120,7 @@ fn main() {
                               || {
                 engine
                     .decode_sample_step(&mut state, &mut samp,
-                                        first.as_deref(), None)
+                                        first.as_deref(), None, None)
                     .unwrap();
                 first = None; // chain tokens on device from here on
             }));
@@ -145,7 +145,7 @@ fn main() {
                     engine
                         .decode_sample_step(&mut state, &mut samp,
                                             first.as_deref(),
-                                            Some(&pruned))
+                                            Some(&pruned), None)
                         .unwrap();
                     first = None;
                 },

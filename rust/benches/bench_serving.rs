@@ -239,6 +239,100 @@ fn main() {
         rep.add(summarize(&format!("cont_mixed_{label}"), &samples));
     }
     sched.fused_enabled = true;
+
+    // ------------------------------------------------------------------
+    // scenario 4: the v2 typed API with MIXED per-request keep values.
+    // Requests are built as v2 wire lines and parsed through
+    // api::parse_request — the same admission path the server uses. At
+    // the pool's batch bucket the distinct keeps snap to the compiled
+    // decode buckets (Engine::bucket_keep), and bucket-aware admission
+    // batches the snappable ones together instead of serializing into
+    // per-keep waves; the report breaks completion latency out per keep.
+    // ------------------------------------------------------------------
+    {
+        use griffin::api::{self, Request};
+        use griffin::json::{n, obj, s};
+        use std::collections::BTreeMap;
+        use std::time::Instant;
+
+        let tok = griffin::tokenizer::Tokenizer::new();
+        let keeps = [0.25f64, 0.5, 0.75];
+        let admit_all = |sched: &mut Scheduler| -> BTreeMap<u64, f64> {
+            let mut keep_of = BTreeMap::new();
+            for (i, r) in base_trace.iter().enumerate() {
+                let keep = keeps[i % keeps.len()];
+                let line = obj(vec![
+                    ("v", n(2.0)),
+                    ("op", s("generate")),
+                    ("prompt", s(&tok.decode(&r.prompt))),
+                    ("max_new_tokens", n(12.0)),
+                    ("stop_at_eos", griffin::json::Value::Bool(false)),
+                    (
+                        "prune",
+                        obj(vec![
+                            ("method", s("griffin")),
+                            ("keep", n(keep)),
+                        ]),
+                    ),
+                ]);
+                let Ok(Request::Generate(spec)) = api::parse_request(&line)
+                else {
+                    panic!("v2 line failed to parse")
+                };
+                let mut q = spec.to_requests(&tok).remove(0);
+                q.id = 0;
+                let id = sched.router.admit(q).unwrap();
+                keep_of.insert(id, keep);
+            }
+            keep_of
+        };
+
+        // warmup (compiles whatever pruned buckets the snaps resolve to)
+        admit_all(&mut sched);
+        sched.run_until_idle().unwrap();
+
+        let mut per_keep: BTreeMap<&'static str, Vec<f64>> =
+            BTreeMap::new();
+        let mut k_used: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let label = |keep: f64| -> &'static str {
+            if keep < 0.4 {
+                "v2_keep0.25"
+            } else if keep < 0.6 {
+                "v2_keep0.5"
+            } else {
+                "v2_keep0.75"
+            }
+        };
+        for _ in 0..3 {
+            let keep_of = admit_all(&mut sched);
+            let t0 = Instant::now();
+            let responses = sched.run_until_idle().unwrap();
+            assert_eq!(responses.len(), keep_of.len());
+            for r in &responses {
+                let keep = keep_of[&r.id];
+                per_keep
+                    .entry(label(keep))
+                    .or_default()
+                    .push(r.decode_ms + r.prefill_ms + r.select_ms);
+                if let Some(k) = r.k_used {
+                    k_used.insert(label(keep), k);
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let tokens: usize =
+                responses.iter().map(|x| x.tokens.len()).sum();
+            println!("  v2_keep_sweep: {:.1} tok/s", tokens as f64 / dt);
+        }
+        for (name, samples) in &per_keep {
+            println!(
+                "  {name}: p50 {:.1} ms (k_used={})",
+                griffin::util::percentile(samples, 50.0),
+                k_used.get(name).copied().unwrap_or(0)
+            );
+            rep.add(summarize(name, samples));
+        }
+    }
+
     println!(
         "  gather cache: {} hits / {} misses",
         sched.engine.metrics.gather_cache_hits.get(),

@@ -1,0 +1,165 @@
+//! v1 compatibility shim: maps every legacy mode string onto the typed
+//! v2 axes so existing clients, examples, and tooling keep working.
+//!
+//! Mapping table (mode string → prune axis):
+//!
+//! | v1 mode           | method    | strategy        |
+//! |-------------------|-----------|-----------------|
+//! | `full`            | none      | —               |
+//! | `griffin`         | griffin   | topk            |
+//! | `griffin-sampling`| griffin   | sampling        |
+//! | `topk+sampling`   | griffin   | topk+sampling   |
+//! | `magnitude`       | magnitude | —               |
+//! | `wanda`           | wanda     | —               |
+//!
+//! The v1 `seed` field feeds BOTH axes (selection strategy and token
+//! sampler) — v2 separates them as `prune.seed` / `sampling.seed`.
+//! Sampler precedence is preserved exactly: temperature <= 0 is greedy
+//! regardless of top_k/top_p, and top_k wins over top_p when both are
+//! present (v2 proper rejects that combination; the shim keeps v1
+//! clients working).
+//!
+//! One deliberate difference: v1 requests now pass the same
+//! admission-time validation as v2 — `keep` outside (0,1], negative
+//! temperature, and top_p outside (0,1] are rejected with
+//! `invalid_request` instead of silently defaulting or failing later
+//! inside the engine thread.
+
+use crate::api::error::{ApiError, ErrorCode};
+use crate::api::parse::{
+    bool_field, f64_field, str_field, u64_field, usize_field,
+};
+use crate::api::types::{GenerateSpec, PruneSpec, Request, SamplingSpec};
+use crate::json::Value;
+
+/// Parse a v1 request line (no `"v"` field) into a typed [`Request`].
+pub fn parse_v1(v: &Value) -> Result<Request, ApiError> {
+    match str_field(v, "op")? {
+        Some("generate") => Ok(Request::Generate(v1_generate_spec(v)?)),
+        Some("metrics") => Ok(Request::Metrics),
+        Some("config") => Ok(Request::Config),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some(other) => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown op {other:?}"),
+        )),
+        None => Err(ApiError::new(ErrorCode::UnknownOp, "missing op")),
+    }
+}
+
+/// Lower a v1 generate body onto the typed v2 axes.
+pub fn v1_generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
+    let prompt = str_field(v, "prompt")?
+        .ok_or_else(|| ApiError::invalid("missing prompt"))?
+        .to_string();
+    let seed = u64_field(v, "seed")?.unwrap_or(0);
+    let keep = f64_field(v, "keep")?.unwrap_or(0.5);
+    let prune = PruneSpec::from_v1_mode(
+        str_field(v, "mode")?.unwrap_or("full"), keep, seed)?;
+    let spec = GenerateSpec {
+        prompts: vec![prompt],
+        max_new_tokens: usize_field(v, "max_new_tokens")?.unwrap_or(32),
+        prune,
+        sampling: SamplingSpec {
+            temperature: f64_field(v, "temperature")?.unwrap_or(0.0)
+                as f32,
+            top_k: usize_field(v, "top_k")?,
+            top_p: f64_field(v, "top_p")?,
+            seed,
+        },
+        stop_at_eos: bool_field(v, "stop_at_eos")?.unwrap_or(true),
+        stream: bool_field(v, "stream")?.unwrap_or(false),
+        v2: false,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selection::Strategy;
+    use crate::coordinator::types::Mode;
+    use crate::json;
+    use crate::sampling::SamplerSpec;
+
+    fn spec(line: &str) -> GenerateSpec {
+        v1_generate_spec(&json::parse(line).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn mode_string_mapping_table() {
+        let cases: Vec<(&str, Mode)> = vec![
+            (r#"{"prompt":"x","mode":"full"}"#, Mode::Full),
+            (
+                r#"{"prompt":"x","mode":"griffin","keep":0.5}"#,
+                Mode::griffin(0.5),
+            ),
+            (
+                r#"{"prompt":"x","mode":"griffin-sampling","keep":0.5,
+                    "seed":7}"#,
+                Mode::Griffin {
+                    keep: 0.5,
+                    strategy: Strategy::Sampling { seed: 7 },
+                },
+            ),
+            (
+                r#"{"prompt":"x","mode":"topk+sampling","keep":0.5,
+                    "seed":9}"#,
+                Mode::Griffin {
+                    keep: 0.5,
+                    strategy: Strategy::TopKPlusSampling { seed: 9 },
+                },
+            ),
+            (
+                r#"{"prompt":"x","mode":"magnitude","keep":0.25}"#,
+                Mode::Magnitude { keep: 0.25 },
+            ),
+            (
+                r#"{"prompt":"x","mode":"wanda","keep":0.5}"#,
+                Mode::Wanda { keep: 0.5 },
+            ),
+        ];
+        for (line, want) in cases {
+            assert_eq!(spec(line).prune.to_mode(), want, "line {line}");
+        }
+    }
+
+    #[test]
+    fn v1_seed_feeds_both_axes() {
+        let g = spec(
+            r#"{"prompt":"x","mode":"griffin-sampling","seed":11,
+                "temperature":0.9}"#,
+        );
+        assert_eq!(g.prune.seed, 11);
+        assert_eq!(g.sampling.seed, 11);
+    }
+
+    #[test]
+    fn v1_topk_wins_over_topp() {
+        // v2 rejects the combination; the shim keeps the old precedence
+        let g = spec(
+            r#"{"prompt":"x","temperature":0.8,"top_k":5,"top_p":0.9}"#,
+        );
+        assert!(matches!(
+            g.sampling.to_sampler(),
+            SamplerSpec::TopK { k: 5, .. }
+        ));
+    }
+
+    #[test]
+    fn v1_now_validates_at_admission() {
+        for line in [
+            r#"{"op":"generate","prompt":"x","mode":"nope"}"#,
+            r#"{"op":"generate","prompt":"x","mode":"griffin",
+                "keep":-1.0}"#,
+            r#"{"op":"generate","prompt":"x","temperature":-0.5}"#,
+            r#"{"op":"generate","prompt":"x","temperature":0.8,
+                "top_p":2.0}"#,
+        ] {
+            let e = v1_generate_spec(&json::parse(line).unwrap())
+                .unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "line {line}");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Structured protocol errors: every failure the server reports carries
+//! a stable machine-readable [`ErrorCode`] so clients can branch on the
+//! failure class (backpressure vs bad input vs engine fault) without
+//! parsing prose.
+
+use crate::coordinator::router::AdmitError;
+
+/// Stable machine-readable error codes (wire value = `as_str`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// request line was not valid JSON
+    BadJson,
+    /// `"v"` names a protocol version this server does not speak
+    UnsupportedVersion,
+    /// missing or unrecognized `"op"`
+    UnknownOp,
+    /// a field failed admission-time validation (unknown prune method,
+    /// keep outside (0,1], negative temperature, top_p outside (0,1]...)
+    InvalidRequest,
+    /// admission queue at capacity — retry later
+    QueueFull,
+    /// prompt exceeds the model's compiled context
+    PromptTooLong,
+    /// prompt tokenized to nothing
+    EmptyPrompt,
+    /// the engine failed while serving this request; co-tenant requests
+    /// are unaffected (per-slot fault containment)
+    EngineError,
+    /// the engine loop went away before the request completed
+    EngineDropped,
+    /// the request was cancelled before it produced any result (queued
+    /// score requests; cancelled generates get a `done` response with
+    /// `finish:"cancelled"` instead, carrying their partial tokens).
+    /// Note: a cancel naming an unknown id is NOT an error — the ack
+    /// carries `status:"unknown_id"` (cancel is idempotent).
+    Cancelled,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::InvalidRequest => "invalid_request",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::PromptTooLong => "prompt_too_long",
+            ErrorCode::EmptyPrompt => "empty_prompt",
+            ErrorCode::EngineError => "engine_error",
+            ErrorCode::EngineDropped => "engine_dropped",
+            ErrorCode::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// A protocol-level failure: code + human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+
+    pub fn invalid(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::InvalidRequest, message)
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<&AdmitError> for ApiError {
+    fn from(e: &AdmitError) -> ApiError {
+        let code = match e {
+            AdmitError::QueueFull { .. } => ErrorCode::QueueFull,
+            AdmitError::PromptTooLong { .. } => ErrorCode::PromptTooLong,
+            AdmitError::EmptyPrompt => ErrorCode::EmptyPrompt,
+        };
+        ApiError::new(code, e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_wire_strings() {
+        assert_eq!(ErrorCode::QueueFull.as_str(), "queue_full");
+        assert_eq!(ErrorCode::InvalidRequest.as_str(), "invalid_request");
+        assert_eq!(ErrorCode::EngineError.as_str(), "engine_error");
+        assert_eq!(ErrorCode::Cancelled.as_str(), "cancelled");
+    }
+
+    #[test]
+    fn admit_errors_map_to_codes() {
+        let e: ApiError = (&AdmitError::QueueFull { capacity: 4 }).into();
+        assert_eq!(e.code, ErrorCode::QueueFull);
+        assert!(e.message.contains("capacity 4"));
+        let e: ApiError = (&AdmitError::EmptyPrompt).into();
+        assert_eq!(e.code, ErrorCode::EmptyPrompt);
+    }
+}

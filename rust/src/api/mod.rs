@@ -1,0 +1,38 @@
+//! Versioned, typed serving API (wire protocol v2 + the v1 shim).
+//!
+//! This module owns the public request/response surface of the server:
+//!
+//! - [`types`]   — the typed request model: orthogonal `prune`
+//!   ({method, keep, strategy, seed}) and `sampling` ({temperature,
+//!   top_k, top_p, seed}) axes, plus the op set (`generate` with one or
+//!   many prompts, `score`, `cancel`, `health`, `metrics`, `config`,
+//!   `shutdown`).
+//! - [`parse`]   — v2 parsing with admission-time validation: malformed
+//!   requests are rejected with structured `invalid_request` errors
+//!   before they reach the engine thread.
+//! - [`compat`]  — the v1 shim: every legacy mode string
+//!   (`full | griffin | griffin-sampling | topk+sampling | magnitude |
+//!   wanda`) maps onto the same typed axes, so v1 clients keep working.
+//! - [`error`]   — stable machine-readable [`ErrorCode`]s.
+//! - [`respond`] — response/event line formatting for both versions.
+//!
+//! Everything here is runtime-free (no PJRT): it builds and unit-tests
+//! with `--no-default-features`, and `server/` (runtime-gated) is a thin
+//! IO layer over it. See docs/protocol.md for the wire format.
+
+pub mod compat;
+pub mod error;
+pub mod parse;
+pub mod respond;
+pub mod types;
+
+pub use error::{ApiError, ErrorCode};
+pub use parse::{parse_request, request_version};
+pub use respond::{
+    accepted_json, batch_json, cancel_ack_json, done_json, error_json,
+    error_obj, health_json, response_json, score_json, token_json,
+};
+pub use types::{
+    GenerateSpec, PruneMethod, PruneSpec, Request, SamplingSpec, ScoreSpec,
+    SelectionStrategy, PROTOCOL_VERSION,
+};

@@ -1,0 +1,405 @@
+//! v2 request parsing + field validation.
+//!
+//! `parse_request` is the single entry point for both protocol versions:
+//! it dispatches on the `"v"` envelope field (absent = v1, handled by
+//! the compat shim in `compat.rs`). Fields that are present but of the
+//! wrong type are structured `invalid_request` errors, never silent
+//! defaults.
+
+use crate::api::compat;
+use crate::api::error::{ApiError, ErrorCode};
+use crate::api::types::{
+    GenerateSpec, PruneMethod, PruneSpec, Request, SamplingSpec, ScoreSpec,
+    SelectionStrategy, PROTOCOL_VERSION,
+};
+use crate::json::Value;
+
+/// Protocol version of a request line (absent `"v"` = 1). Best-effort —
+/// used by the server to pick error FRAMING; `parse_request` does the
+/// strict check and rejects a malformed `"v"` instead of falling back.
+pub fn request_version(v: &Value) -> u64 {
+    v.get("v")
+        .and_then(Value::as_i64)
+        .map(|x| x.max(0) as u64)
+        .unwrap_or(1)
+}
+
+/// Parse one request line (any version) into a typed, validated
+/// [`Request`]. A present-but-non-integer `"v"` (e.g. `"v":"2"` or
+/// `"v":2.5`) is an `invalid_request`, never a silent v1 fallback — the
+/// fallback would ignore the request's v2 `prune`/`sampling` objects
+/// and serve something the client did not ask for.
+pub fn parse_request(v: &Value) -> Result<Request, ApiError> {
+    let version = match v.get("v") {
+        None => 1,
+        Some(x) => x
+            .as_i64()
+            .filter(|&n| n >= 0)
+            .map(|n| n as u64)
+            .ok_or_else(|| {
+                ApiError::invalid("v must be a non-negative integer")
+            })?,
+    };
+    match version {
+        1 => compat::parse_v1(v),
+        2 => parse_v2(v),
+        other => Err(ApiError::new(
+            ErrorCode::UnsupportedVersion,
+            format!(
+                "protocol version {other} not supported (this server \
+                 speaks v1 and v{PROTOCOL_VERSION})"
+            ),
+        )),
+    }
+}
+
+fn parse_v2(v: &Value) -> Result<Request, ApiError> {
+    match str_field(v, "op")? {
+        None => Err(ApiError::invalid("missing op")),
+        Some("generate") => Ok(Request::Generate(generate_spec(v)?)),
+        Some("score") => Ok(Request::Score(score_spec(v)?)),
+        Some("cancel") => {
+            let id = u64_field(v, "id")?
+                .ok_or_else(|| ApiError::invalid("cancel needs an id"))?;
+            Ok(Request::Cancel { id })
+        }
+        Some("health") => Ok(Request::Health),
+        Some("metrics") => Ok(Request::Metrics),
+        Some("config") => Ok(Request::Config),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some(other) => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown op {other:?}"),
+        )),
+    }
+}
+
+fn generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
+    let prompts = match (v.get("prompt"), v.get("prompts")) {
+        (Some(_), Some(_)) => {
+            return Err(ApiError::invalid(
+                "pass either \"prompt\" or \"prompts\", not both",
+            ))
+        }
+        (Some(p), None) => vec![p
+            .as_str()
+            .ok_or_else(|| ApiError::invalid("prompt must be a string"))?
+            .to_string()],
+        (None, Some(ps)) => ps
+            .as_arr()
+            .ok_or_else(|| ApiError::invalid("prompts must be an array"))?
+            .iter()
+            .map(|p| {
+                p.as_str().map(str::to_string).ok_or_else(|| {
+                    ApiError::invalid("prompts entries must be strings")
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        (None, None) => return Err(ApiError::invalid("missing prompt")),
+    };
+    let sampling = sampling_spec(v.get("sampling"))?;
+    if sampling.top_k.is_some() && sampling.top_p.is_some() {
+        return Err(ApiError::invalid(
+            "sampling.top_k and sampling.top_p are mutually exclusive",
+        ));
+    }
+    let spec = GenerateSpec {
+        prompts,
+        max_new_tokens: usize_field(v, "max_new_tokens")?.unwrap_or(32),
+        prune: prune_spec(v.get("prune"))?,
+        sampling,
+        stop_at_eos: bool_field(v, "stop_at_eos")?.unwrap_or(true),
+        stream: bool_field(v, "stream")?.unwrap_or(false),
+        v2: true,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+fn score_spec(v: &Value) -> Result<ScoreSpec, ApiError> {
+    let spec = ScoreSpec {
+        prompt: str_field(v, "prompt")?
+            .ok_or_else(|| ApiError::invalid("missing prompt"))?
+            .to_string(),
+        continuation: str_field(v, "continuation")?
+            .ok_or_else(|| ApiError::invalid("missing continuation"))?
+            .to_string(),
+        prune: prune_spec(v.get("prune"))?,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Parse the `prune` object (absent = full model).
+pub fn prune_spec(v: Option<&Value>) -> Result<PruneSpec, ApiError> {
+    let mut spec = PruneSpec::default();
+    let Some(v) = v else { return Ok(spec) };
+    if v.as_obj().is_none() {
+        return Err(ApiError::invalid("prune must be an object"));
+    }
+    if let Some(m) = v.get("method") {
+        let m = m
+            .as_str()
+            .ok_or_else(|| ApiError::invalid("prune.method must be a string"))?;
+        spec.method = match m {
+            "none" | "full" => PruneMethod::None,
+            "griffin" => PruneMethod::Griffin,
+            "magnitude" => PruneMethod::Magnitude,
+            "wanda" => PruneMethod::Wanda,
+            other => {
+                return Err(ApiError::invalid(format!(
+                    "unknown prune.method {other:?} (none | griffin | \
+                     magnitude | wanda)"
+                )))
+            }
+        };
+    }
+    if let Some(k) = f64_field(v, "keep")? {
+        spec.keep = k;
+    }
+    if let Some(s) = v.get("strategy") {
+        let s = s.as_str().ok_or_else(|| {
+            ApiError::invalid("prune.strategy must be a string")
+        })?;
+        spec.strategy = match s {
+            "topk" => SelectionStrategy::TopK,
+            "sampling" => SelectionStrategy::Sampling,
+            "topk+sampling" => SelectionStrategy::TopKPlusSampling,
+            other => {
+                return Err(ApiError::invalid(format!(
+                    "unknown prune.strategy {other:?} (topk | sampling | \
+                     topk+sampling)"
+                )))
+            }
+        };
+    }
+    if let Some(s) = u64_field(v, "seed")? {
+        spec.seed = s;
+    }
+    Ok(spec)
+}
+
+/// Parse the `sampling` object (absent = greedy).
+pub fn sampling_spec(v: Option<&Value>) -> Result<SamplingSpec, ApiError> {
+    let mut spec = SamplingSpec::default();
+    let Some(v) = v else { return Ok(spec) };
+    if v.as_obj().is_none() {
+        return Err(ApiError::invalid("sampling must be an object"));
+    }
+    if let Some(t) = f64_field(v, "temperature")? {
+        spec.temperature = t as f32;
+    }
+    spec.top_k = usize_field(v, "top_k")?;
+    spec.top_p = f64_field(v, "top_p")?;
+    if let Some(s) = u64_field(v, "seed")? {
+        spec.seed = s;
+    }
+    Ok(spec)
+}
+
+// -- typed field extraction (present-but-wrong-type is an error) ---------
+
+pub(crate) fn str_field<'a>(v: &'a Value, key: &str)
+                            -> Result<Option<&'a str>, ApiError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_str().map(Some).ok_or_else(|| {
+            ApiError::invalid(format!("{key} must be a string"))
+        }),
+    }
+}
+
+pub(crate) fn f64_field(v: &Value, key: &str)
+                        -> Result<Option<f64>, ApiError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_f64().map(Some).ok_or_else(|| {
+            ApiError::invalid(format!("{key} must be a number"))
+        }),
+    }
+}
+
+pub(crate) fn usize_field(v: &Value, key: &str)
+                          -> Result<Option<usize>, ApiError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_usize().map(Some).ok_or_else(|| {
+            ApiError::invalid(format!(
+                "{key} must be a non-negative integer"
+            ))
+        }),
+    }
+}
+
+pub(crate) fn u64_field(v: &Value, key: &str)
+                        -> Result<Option<u64>, ApiError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x
+            .as_i64()
+            .filter(|&n| n >= 0)
+            .map(|n| n as u64)
+            .map(Some)
+            .ok_or_else(|| {
+                ApiError::invalid(format!(
+                    "{key} must be a non-negative integer"
+                ))
+            }),
+    }
+}
+
+pub(crate) fn bool_field(v: &Value, key: &str)
+                         -> Result<Option<bool>, ApiError> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(x) => x.as_bool().map(Some).ok_or_else(|| {
+            ApiError::invalid(format!("{key} must be a boolean"))
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn parse(line: &str) -> Result<Request, ApiError> {
+        parse_request(&json::parse(line).unwrap())
+    }
+
+    #[test]
+    fn v2_generate_with_orthogonal_axes() {
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompt":"hi","max_new_tokens":8,
+                "prune":{"method":"griffin","keep":0.75,
+                         "strategy":"sampling","seed":3},
+                "sampling":{"temperature":0.8,"top_k":4,"seed":9}}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!("not generate") };
+        assert_eq!(g.prompts, vec!["hi"]);
+        assert_eq!(g.max_new_tokens, 8);
+        assert_eq!(g.prune.method, PruneMethod::Griffin);
+        assert_eq!(g.prune.keep, 0.75);
+        assert_eq!(g.prune.strategy, SelectionStrategy::Sampling);
+        assert_eq!(g.prune.seed, 3);
+        assert_eq!(g.sampling.top_k, Some(4));
+        assert_eq!(g.sampling.seed, 9);
+        assert!(g.v2);
+    }
+
+    #[test]
+    fn v2_validation_rejections() {
+        let cases = [
+            // unknown method
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"nope"}}"#,
+            // keep out of range
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"griffin","keep":0.0}}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"wanda","keep":1.5}}"#,
+            // negative temperature
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "sampling":{"temperature":-1}}"#,
+            // top_p out of range
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "sampling":{"temperature":0.8,"top_p":1.5}}"#,
+            // top_k and top_p together
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "sampling":{"temperature":0.8,"top_k":4,"top_p":0.9}}"#,
+            // unknown strategy
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"griffin","strategy":"magic"}}"#,
+            // batched + streaming
+            r#"{"v":2,"op":"generate","prompts":["a","b"],"stream":true}"#,
+            // wrong field type
+            r#"{"v":2,"op":"generate","prompt":"x","max_new_tokens":"4"}"#,
+            // zero budget
+            r#"{"v":2,"op":"generate","prompt":"x","max_new_tokens":0}"#,
+            // prompt and prompts together
+            r#"{"v":2,"op":"generate","prompt":"x","prompts":["y"]}"#,
+        ];
+        for line in cases {
+            let e = parse(line).unwrap_err();
+            assert_eq!(
+                e.code,
+                ErrorCode::InvalidRequest,
+                "line {line} gave {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn v2_batched_generate_parses() {
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompts":["a","b","c"]}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.prompts.len(), 3);
+        assert!(!g.stream);
+    }
+
+    #[test]
+    fn v2_other_ops() {
+        assert!(matches!(
+            parse(r#"{"v":2,"op":"cancel","id":7}"#).unwrap(),
+            Request::Cancel { id: 7 }
+        ));
+        assert!(matches!(
+            parse(r#"{"v":2,"op":"health"}"#).unwrap(),
+            Request::Health
+        ));
+        assert!(matches!(
+            parse(r#"{"v":2,"op":"score","prompt":"ab",
+                      "continuation":"cd"}"#)
+                .unwrap(),
+            Request::Score(_)
+        ));
+        let e = parse(r#"{"v":2,"op":"cancel"}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidRequest);
+        // negative ids/seeds are rejected, never wrapped to huge u64s
+        let e = parse(r#"{"v":2,"op":"cancel","id":-1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidRequest);
+        let e = parse(
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"griffin","seed":-3}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidRequest);
+        let e = parse(r#"{"v":2,"op":"wat"}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+    }
+
+    #[test]
+    fn unsupported_version_is_structured() {
+        let e = parse(r#"{"v":3,"op":"generate","prompt":"x"}"#)
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+    }
+
+    #[test]
+    fn malformed_version_never_falls_back_to_v1() {
+        // a silent v1 fallback would drop the prune/sampling objects and
+        // serve a full-model greedy response the client didn't ask for
+        for line in [
+            r#"{"v":"2","op":"generate","prompt":"x",
+                "prune":{"method":"griffin"}}"#,
+            r#"{"v":2.5,"op":"generate","prompt":"x"}"#,
+            r#"{"v":-1,"op":"generate","prompt":"x"}"#,
+            r#"{"v":true,"op":"generate","prompt":"x"}"#,
+        ] {
+            let e = parse(line).unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "line {line}");
+        }
+    }
+
+    #[test]
+    fn score_via_v1_is_unknown_op() {
+        // score is a v2 op; v1 lines never carried it
+        let e = parse(r#"{"op":"score","prompt":"a","continuation":"b"}"#)
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+    }
+}

@@ -1,0 +1,243 @@
+//! Wire formatting for responses and stream events, both protocol
+//! versions. v2 lines carry a `"v":2` envelope field; v1 lines are
+//! byte-compatible with the pre-v2 server.
+
+use crate::api::error::ApiError;
+use crate::api::types::PROTOCOL_VERSION;
+use crate::coordinator::types::GenResponse;
+use crate::json::{self, n, obj, s, Value};
+
+fn v2_wrap(mut v: Value) -> Value {
+    if let Value::Obj(ref mut o) = v {
+        o.insert(0, ("v".to_string(), n(PROTOCOL_VERSION as f64)));
+    }
+    v
+}
+
+/// The response body of one completed generation.
+pub fn response_json(r: &GenResponse, v2: bool) -> Value {
+    let body = obj(vec![
+        ("op", s("generate")),
+        ("id", n(r.id as f64)),
+        ("text", s(&r.text)),
+        (
+            "tokens",
+            Value::Arr(r.tokens.iter().map(|&t| n(t as f64)).collect()),
+        ),
+        ("finish", s(r.finish.as_str())),
+        (
+            "k_used",
+            r.k_used.map(|k| n(k as f64)).unwrap_or(Value::Null),
+        ),
+        (
+            "timing",
+            obj(vec![
+                ("prefill_ms", n(r.prefill_ms)),
+                ("select_ms", n(r.select_ms)),
+                ("decode_ms", n(r.decode_ms)),
+                ("ttft_ms", n(r.ttft_ms)),
+                ("tokens_per_sec", n(r.tokens_per_sec)),
+            ]),
+        ),
+    ]);
+    if v2 {
+        v2_wrap(body)
+    } else {
+        body
+    }
+}
+
+/// Final line of a generate exchange (streaming adds the done event tag).
+pub fn done_json(r: &GenResponse, stream: bool, v2: bool) -> String {
+    let mut v = response_json(r, v2);
+    if stream {
+        if let Value::Obj(ref mut o) = v {
+            let at = usize::from(v2); // after the "v" field
+            o.insert(at, ("event".to_string(), s("done")));
+        }
+    }
+    json::to_string(&v)
+}
+
+/// One streamed token event.
+pub fn token_json(id: u64, index: usize, token: i32, text: &str, v2: bool)
+                  -> String {
+    let body = obj(vec![
+        ("event", s("token")),
+        ("id", n(id as f64)),
+        ("index", n(index as f64)),
+        ("token", n(token as f64)),
+        ("text", s(text)),
+    ]);
+    json::to_string(&if v2 { v2_wrap(body) } else { body })
+}
+
+/// v2 streaming admission ack: tells the client its server-assigned
+/// request id before the first token, so `cancel` can target it.
+pub fn accepted_json(id: u64) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("event", s("accepted")),
+        ("id", n(id as f64)),
+    ])))
+}
+
+/// A structured error object; `id` ties it to an in-flight request.
+/// (Batched generate embeds these in its `results` array.)
+pub fn error_obj(e: &ApiError, id: Option<u64>) -> Value {
+    let mut fields = vec![
+        ("op", s("error")),
+        ("code", s(e.code.as_str())),
+        ("message", s(&e.message)),
+    ];
+    if let Some(id) = id {
+        fields.insert(1, ("id", n(id as f64)));
+    }
+    obj(fields)
+}
+
+/// A structured error line; `id` ties it to an in-flight request.
+pub fn error_json(e: &ApiError, id: Option<u64>, v2: bool) -> String {
+    let body = error_obj(e, id);
+    json::to_string(&if v2 { v2_wrap(body) } else { body })
+}
+
+/// The batched-generate response: one line, per-prompt results in
+/// request order (each entry a result object or an error object).
+pub fn batch_json(results: Vec<Value>) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("op", s("generate")),
+        ("results", Value::Arr(results)),
+    ])))
+}
+
+/// Score response: per-token NLLs + perplexity of the continuation.
+pub fn score_json(id: u64, nll: &[f64]) -> String {
+    let ppl = crate::eval::perplexity(nll.iter().sum(), nll.len());
+    json::to_string(&v2_wrap(obj(vec![
+        ("op", s("score")),
+        ("id", n(id as f64)),
+        ("nll", Value::Arr(nll.iter().map(|&x| n(x)).collect())),
+        ("ppl", n(ppl)),
+        ("tokens", n(nll.len() as f64)),
+    ])))
+}
+
+/// Cancel acknowledgment (`status`: "cancelling" | "unknown_id").
+pub fn cancel_ack_json(id: u64, status: &str) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("op", s("cancel")),
+        ("id", n(id as f64)),
+        ("status", s(status)),
+    ])))
+}
+
+/// Liveness + capacity snapshot, answerable off the engine thread.
+/// `queue_depth` counts generate admissions, `score_depth` the score
+/// queue — both share `queue_capacity` as their per-queue cap.
+pub fn health_json(slots_busy: u64, slots_total: u64, queue_depth: usize,
+                   score_depth: usize, queue_capacity: usize) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("op", s("health")),
+        ("status", s("ok")),
+        (
+            "slots",
+            obj(vec![
+                ("busy", n(slots_busy as f64)),
+                ("total", n(slots_total as f64)),
+            ]),
+        ),
+        (
+            "queue",
+            obj(vec![
+                ("depth", n(queue_depth as f64)),
+                ("score_depth", n(score_depth as f64)),
+                ("capacity", n(queue_capacity as f64)),
+            ]),
+        ),
+    ])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::FinishReason;
+
+    fn resp() -> GenResponse {
+        GenResponse {
+            id: 3,
+            tokens: vec![104],
+            text: "h".into(),
+            logprobs: vec![-0.1],
+            finish: FinishReason::Length,
+            k_used: None,
+            prefill_ms: 1.0,
+            select_ms: 0.0,
+            decode_ms: 2.0,
+            ttft_ms: 1.5,
+            tokens_per_sec: 500.0,
+        }
+    }
+
+    #[test]
+    fn v1_lines_carry_no_version_field() {
+        let d = json::parse(&done_json(&resp(), false, false)).unwrap();
+        assert!(d.get("v").is_none());
+        assert_eq!(d.get("op").unwrap().as_str(), Some("generate"));
+        let t = json::parse(&token_json(3, 1, 104, "h", false)).unwrap();
+        assert!(t.get("v").is_none());
+        assert_eq!(t.get("event").unwrap().as_str(), Some("token"));
+    }
+
+    #[test]
+    fn v2_lines_are_versioned() {
+        let d = json::parse(&done_json(&resp(), true, true)).unwrap();
+        assert_eq!(d.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(d.get("event").unwrap().as_str(), Some("done"));
+        let a = json::parse(&accepted_json(9)).unwrap();
+        assert_eq!(a.get("event").unwrap().as_str(), Some("accepted"));
+        assert_eq!(a.get("id").unwrap().as_usize(), Some(9));
+    }
+
+    #[test]
+    fn error_lines_carry_code_and_id() {
+        let e = ApiError::invalid("bad keep");
+        let v = json::parse(&error_json(&e, Some(7), true)).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("error"));
+        assert_eq!(v.get("code").unwrap().as_str(), Some("invalid_request"));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+        let v = json::parse(&error_json(&e, None, false)).unwrap();
+        assert!(v.get("id").is_none());
+        assert!(v.get("v").is_none());
+    }
+
+    #[test]
+    fn cancelled_finish_serializes() {
+        let mut r = resp();
+        r.finish = FinishReason::Cancelled;
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert_eq!(d.get("finish").unwrap().as_str(), Some("cancelled"));
+    }
+
+    #[test]
+    fn score_json_reports_ppl() {
+        let v = json::parse(&score_json(4, &[1.0, 1.0])).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str(), Some("score"));
+        assert_eq!(v.get("tokens").unwrap().as_usize(), Some(2));
+        let ppl = v.get("ppl").unwrap().as_f64().unwrap();
+        assert!((ppl - std::f64::consts::E).abs() < 1e-9);
+    }
+
+    #[test]
+    fn health_json_shape() {
+        let v = json::parse(&health_json(2, 4, 1, 3, 64)).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(
+            v.get("slots").unwrap().get("total").unwrap().as_usize(),
+            Some(4)
+        );
+        let q = v.get("queue").unwrap();
+        assert_eq!(q.get("depth").unwrap().as_usize(), Some(1));
+        assert_eq!(q.get("score_depth").unwrap().as_usize(), Some(3));
+        assert_eq!(q.get("capacity").unwrap().as_usize(), Some(64));
+    }
+}

@@ -1,0 +1,413 @@
+//! Typed v2 request model: orthogonal `prune` and `sampling` axes.
+//!
+//! The v1 wire protocol conflated pruning method, expert-selection
+//! strategy, and token sampler into single mode strings
+//! (`"griffin-sampling"`, `"topk+sampling"`). v2 splits them into
+//! independent objects so new pruning/selection scenarios land as data,
+//! not as new string variants parsed in four places:
+//!
+//!   prune:    {method, keep, strategy, seed}   — what runs per step
+//!   sampling: {temperature, top_k, top_p, seed} — how tokens are drawn
+//!
+//! Validation happens here, at admission time, so malformed requests are
+//! rejected with a structured `invalid_request` error before they ever
+//! reach the engine thread.
+
+use std::time::Instant;
+
+use crate::api::error::ApiError;
+use crate::coordinator::selection::Strategy;
+use crate::coordinator::sequence::{GenRequest, ScoreRequest};
+use crate::coordinator::types::Mode;
+use crate::sampling::SamplerSpec;
+use crate::tokenizer::Tokenizer;
+
+/// Highest protocol version this build speaks.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// The pruning method applied during the generation phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneMethod {
+    /// full model, no pruning
+    None,
+    /// GRIFFIN: prompt-prompted expert selection (the paper's method)
+    Griffin,
+    /// static magnitude pruning (structured baseline)
+    Magnitude,
+    /// adaptive Wanda masking (unstructured baseline)
+    Wanda,
+}
+
+impl PruneMethod {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PruneMethod::None => "none",
+            PruneMethod::Griffin => "griffin",
+            PruneMethod::Magnitude => "magnitude",
+            PruneMethod::Wanda => "wanda",
+        }
+    }
+}
+
+/// Expert-selection strategy (GRIFFIN only; ignored by other methods).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionStrategy {
+    TopK,
+    Sampling,
+    TopKPlusSampling,
+}
+
+impl SelectionStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectionStrategy::TopK => "topk",
+            SelectionStrategy::Sampling => "sampling",
+            SelectionStrategy::TopKPlusSampling => "topk+sampling",
+        }
+    }
+}
+
+/// The orthogonal pruning axis of a v2 request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneSpec {
+    pub method: PruneMethod,
+    /// FF keep fraction in (0,1]; ignored when method == None
+    pub keep: f64,
+    pub strategy: SelectionStrategy,
+    /// seed for stochastic selection strategies
+    pub seed: u64,
+}
+
+impl Default for PruneSpec {
+    fn default() -> Self {
+        PruneSpec {
+            method: PruneMethod::None,
+            keep: 0.5,
+            strategy: SelectionStrategy::TopK,
+            seed: 0,
+        }
+    }
+}
+
+impl PruneSpec {
+    /// THE v1 mode-string mapping table (`full | griffin |
+    /// griffin-sampling | topk+sampling | magnitude | wanda`), shared by
+    /// the wire compat shim and the CLI so the two surfaces cannot
+    /// drift. Unknown strings are `invalid_request`; the result is NOT
+    /// yet validated (callers validate the whole spec).
+    pub fn from_v1_mode(mode: &str, keep: f64, seed: u64)
+                        -> Result<PruneSpec, ApiError> {
+        let (method, strategy) = match mode {
+            "full" => (PruneMethod::None, SelectionStrategy::TopK),
+            "griffin" => (PruneMethod::Griffin, SelectionStrategy::TopK),
+            "griffin-sampling" => {
+                (PruneMethod::Griffin, SelectionStrategy::Sampling)
+            }
+            "topk+sampling" => (
+                PruneMethod::Griffin,
+                SelectionStrategy::TopKPlusSampling,
+            ),
+            "magnitude" => {
+                (PruneMethod::Magnitude, SelectionStrategy::TopK)
+            }
+            "wanda" => (PruneMethod::Wanda, SelectionStrategy::TopK),
+            other => {
+                return Err(ApiError::invalid(format!(
+                    "unknown mode {other:?}"
+                )))
+            }
+        };
+        Ok(PruneSpec { method, keep, strategy, seed })
+    }
+
+    /// Admission-time validation: keep must lie in (0,1] for every
+    /// pruning method (NaN fails too).
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.method != PruneMethod::None
+            && (self.keep.is_nan() || self.keep <= 0.0 || self.keep > 1.0)
+        {
+            return Err(ApiError::invalid(format!(
+                "prune.keep must be in (0,1], got {}",
+                self.keep
+            )));
+        }
+        Ok(())
+    }
+
+    /// Lower to the engine's `Mode` (validated specs only).
+    pub fn to_mode(&self) -> Mode {
+        match self.method {
+            PruneMethod::None => Mode::Full,
+            PruneMethod::Griffin => Mode::Griffin {
+                keep: self.keep,
+                strategy: match self.strategy {
+                    SelectionStrategy::TopK => Strategy::TopK,
+                    SelectionStrategy::Sampling => {
+                        Strategy::Sampling { seed: self.seed }
+                    }
+                    SelectionStrategy::TopKPlusSampling => {
+                        Strategy::TopKPlusSampling { seed: self.seed }
+                    }
+                },
+            },
+            PruneMethod::Magnitude => Mode::Magnitude { keep: self.keep },
+            PruneMethod::Wanda => Mode::Wanda { keep: self.keep },
+        }
+    }
+}
+
+/// The orthogonal sampling axis of a v2 request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingSpec {
+    /// 0 (or below) = greedy decoding
+    pub temperature: f32,
+    pub top_k: Option<usize>,
+    pub top_p: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for SamplingSpec {
+    fn default() -> Self {
+        SamplingSpec { temperature: 0.0, top_k: None, top_p: None, seed: 0 }
+    }
+}
+
+impl SamplingSpec {
+    /// Admission-time validation. Negative (or NaN) temperature,
+    /// top_k == 0 and top_p outside (0,1] are rejected instead of
+    /// silently defaulting.
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.temperature.is_nan() || self.temperature < 0.0 {
+            return Err(ApiError::invalid(format!(
+                "sampling.temperature must be >= 0, got {}",
+                self.temperature
+            )));
+        }
+        if self.top_k == Some(0) {
+            return Err(ApiError::invalid("sampling.top_k must be >= 1"));
+        }
+        if let Some(p) = self.top_p {
+            if p.is_nan() || p <= 0.0 || p > 1.0 {
+                return Err(ApiError::invalid(format!(
+                    "sampling.top_p must be in (0,1], got {p}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower to the engine's `SamplerSpec`. Precedence matches the v1
+    /// parser exactly (compat shim round-trips depend on it):
+    /// temperature <= 0 is greedy regardless of top_k/top_p; otherwise
+    /// top_k wins over top_p.
+    pub fn to_sampler(&self) -> SamplerSpec {
+        if self.temperature <= 0.0 {
+            SamplerSpec::Greedy
+        } else if let Some(k) = self.top_k {
+            SamplerSpec::TopK { k, temperature: self.temperature }
+        } else if let Some(p) = self.top_p {
+            SamplerSpec::TopP { p: p as f32, temperature: self.temperature }
+        } else {
+            SamplerSpec::Temperature(self.temperature)
+        }
+    }
+}
+
+/// A validated generate request (one or many prompts).
+#[derive(Debug, Clone)]
+pub struct GenerateSpec {
+    pub prompts: Vec<String>,
+    pub max_new_tokens: usize,
+    pub prune: PruneSpec,
+    pub sampling: SamplingSpec,
+    pub stop_at_eos: bool,
+    pub stream: bool,
+    /// arrived under the v2 envelope (controls response formatting)
+    pub v2: bool,
+}
+
+impl GenerateSpec {
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.prompts.is_empty() {
+            return Err(ApiError::invalid("no prompts"));
+        }
+        if self.max_new_tokens == 0 {
+            return Err(ApiError::invalid("max_new_tokens must be >= 1"));
+        }
+        self.prune.validate()?;
+        self.sampling.validate()?;
+        if self.stream && self.prompts.len() > 1 {
+            return Err(ApiError::invalid(
+                "streaming is single-prompt; drop \"stream\" for batched \
+                 generate",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Lower to engine requests, one per prompt (ids are assigned by the
+    /// router at admission).
+    pub fn to_requests(&self, tok: &Tokenizer) -> Vec<GenRequest> {
+        self.prompts
+            .iter()
+            .map(|p| GenRequest {
+                id: 0,
+                prompt: tok.encode_with_bos(p),
+                max_new_tokens: self.max_new_tokens,
+                mode: self.prune.to_mode(),
+                sampler: self.sampling.to_sampler(),
+                seed: self.sampling.seed,
+                stop_at_eos: self.stop_at_eos,
+                admitted_at: Instant::now(),
+            })
+            .collect()
+    }
+}
+
+/// A validated score request (teacher-forced logprob evaluation).
+#[derive(Debug, Clone)]
+pub struct ScoreSpec {
+    pub prompt: String,
+    pub continuation: String,
+    pub prune: PruneSpec,
+}
+
+impl ScoreSpec {
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.prompt.is_empty() {
+            return Err(ApiError::invalid("score.prompt must be non-empty"));
+        }
+        if self.continuation.is_empty() {
+            return Err(ApiError::invalid(
+                "score.continuation must be non-empty",
+            ));
+        }
+        self.prune.validate()
+    }
+
+    pub fn to_request(&self, tok: &Tokenizer) -> ScoreRequest {
+        ScoreRequest {
+            id: 0,
+            prompt: tok.encode_with_bos(&self.prompt),
+            continuation: tok.encode(&self.continuation),
+            mode: self.prune.to_mode(),
+            admitted_at: Instant::now(),
+        }
+    }
+}
+
+/// A parsed protocol request, any version (the v1 shim lowers v1 lines
+/// into the same typed requests).
+#[derive(Debug, Clone)]
+pub enum Request {
+    Generate(GenerateSpec),
+    Score(ScoreSpec),
+    Cancel { id: u64 },
+    Health,
+    Metrics,
+    Config,
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prune_validation_bounds_keep() {
+        let mut p = PruneSpec { method: PruneMethod::Griffin, ..Default::default() };
+        p.keep = 0.5;
+        assert!(p.validate().is_ok());
+        p.keep = 1.0;
+        assert!(p.validate().is_ok());
+        for bad in [0.0, -1.0, 1.5, f64::NAN] {
+            p.keep = bad;
+            assert!(p.validate().is_err(), "keep={bad} must be rejected");
+        }
+        // full model ignores keep entirely
+        p.method = PruneMethod::None;
+        p.keep = -3.0;
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn sampling_validation() {
+        let mut s = SamplingSpec::default();
+        assert!(s.validate().is_ok());
+        s.temperature = -0.1;
+        assert!(s.validate().is_err());
+        s.temperature = f32::NAN;
+        assert!(s.validate().is_err());
+        s.temperature = 0.8;
+        s.top_k = Some(0);
+        assert!(s.validate().is_err());
+        s.top_k = Some(4);
+        assert!(s.validate().is_ok());
+        s.top_k = None;
+        for bad in [0.0, -0.5, 1.2] {
+            s.top_p = Some(bad);
+            assert!(s.validate().is_err(), "top_p={bad} must be rejected");
+        }
+        s.top_p = Some(0.9);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn sampler_precedence_matches_v1() {
+        // temperature <= 0 is greedy even with top_k set (v1 behavior)
+        let s = SamplingSpec { temperature: 0.0, top_k: Some(5), ..Default::default() };
+        assert_eq!(s.to_sampler(), SamplerSpec::Greedy);
+        let s = SamplingSpec { temperature: 0.8, top_k: Some(5), top_p: Some(0.9), seed: 0 };
+        assert!(matches!(s.to_sampler(), SamplerSpec::TopK { k: 5, .. }));
+        let s = SamplingSpec { temperature: 0.8, top_k: None, top_p: Some(0.9), seed: 0 };
+        assert!(matches!(s.to_sampler(), SamplerSpec::TopP { .. }));
+        let s = SamplingSpec { temperature: 0.8, ..Default::default() };
+        assert!(matches!(s.to_sampler(), SamplerSpec::Temperature(_)));
+    }
+
+    #[test]
+    fn prune_lowers_to_modes() {
+        let p = PruneSpec {
+            method: PruneMethod::Griffin,
+            keep: 0.5,
+            strategy: SelectionStrategy::TopKPlusSampling,
+            seed: 9,
+        };
+        assert_eq!(
+            p.to_mode(),
+            Mode::Griffin {
+                keep: 0.5,
+                strategy: Strategy::TopKPlusSampling { seed: 9 },
+            }
+        );
+        assert_eq!(PruneSpec::default().to_mode(), Mode::Full);
+    }
+
+    #[test]
+    fn generate_spec_rejects_batched_streaming() {
+        let spec = GenerateSpec {
+            prompts: vec!["a".into(), "b".into()],
+            max_new_tokens: 4,
+            prune: PruneSpec::default(),
+            sampling: SamplingSpec::default(),
+            stop_at_eos: true,
+            stream: true,
+            v2: true,
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn score_spec_tokenizes_without_double_bos() {
+        let tok = Tokenizer::new();
+        let s = ScoreSpec {
+            prompt: "ab".into(),
+            continuation: "cd".into(),
+            prune: PruneSpec::default(),
+        };
+        assert!(s.validate().is_ok());
+        let r = s.to_request(&tok);
+        assert_eq!(r.prompt.len(), 3, "BOS + 2 bytes");
+        assert_eq!(r.continuation.len(), 2, "no BOS on the continuation");
+    }
+}

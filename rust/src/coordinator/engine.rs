@@ -65,59 +65,10 @@ pub fn adaptive_bucket_keep(_requested_keep: f64) -> f64 {
     ADAPTIVE_HEADLINE_KEEP
 }
 
-/// How the generation phase runs (paper §5.1 comparison set).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Mode {
-    /// original model (upper baseline)
-    Full,
-    /// the paper's method: prompt-prompted expert selection
-    Griffin { keep: f64, strategy: Strategy },
-    /// static neuron pruning by weight magnitude (structured baseline)
-    Magnitude { keep: f64 },
-    /// Adaptive Wanda: unstructured masking from prompt activations
-    Wanda { keep: f64 },
-}
-
-impl Mode {
-    pub fn griffin(keep: f64) -> Mode {
-        Mode::Griffin { keep, strategy: Strategy::TopK }
-    }
-
-    /// Batching compatibility: requests can share a continuous run when
-    /// they decode through the same executable family and weight-set
-    /// shape. Strategy seeds (`Strategy::Sampling`/`TopKPlusSampling`)
-    /// are per-request selection inputs — the batch-shared eq.7
-    /// aggregate uses the run head's seed — so they must NOT fragment
-    /// batches (full `==` would serialize seeded-sampling traffic into
-    /// batches of one).
-    pub fn compatible(&self, other: &Mode) -> bool {
-        match (self, other) {
-            (
-                Mode::Griffin { keep: a, strategy: sa },
-                Mode::Griffin { keep: b, strategy: sb },
-            ) => {
-                a == b
-                    && std::mem::discriminant(sa)
-                        == std::mem::discriminant(sb)
-            }
-            _ => self == other,
-        }
-    }
-    pub fn label(&self) -> String {
-        match self {
-            Mode::Full => "full".into(),
-            Mode::Griffin { keep, strategy } => match strategy {
-                Strategy::TopK => format!("griffin@{keep}"),
-                Strategy::Sampling { .. } => format!("sampling@{keep}"),
-                Strategy::TopKPlusSampling { .. } => {
-                    format!("topk+sampling@{keep}")
-                }
-            },
-            Mode::Magnitude { keep } => format!("magnitude@{keep}"),
-            Mode::Wanda { keep } => format!("wanda@{keep}"),
-        }
-    }
-}
+// Runtime-free coordinator types (Mode, GenResponse) live in
+// `coordinator::types` so the substrate layers build without PJRT; they
+// are re-exported here under their historical paths.
+pub use crate::coordinator::types::{GenResponse, Mode};
 
 /// Device-resident pruned FF weights for one expert set. Shared handles
 /// (`Rc`) so the same set can live in the gather cache, a dispatch
@@ -175,22 +126,6 @@ pub struct PrefillOut {
     pub prompt_logits: Option<Vec<f32>>,
     pub bucket_seq: usize,
     pub lengths: Vec<usize>,
-}
-
-#[derive(Debug, Clone)]
-pub struct GenResponse {
-    pub id: u64,
-    pub tokens: Vec<i32>,
-    pub text: String,
-    pub logprobs: Vec<f32>,
-    pub finish: FinishReason,
-    pub k_used: Option<usize>,
-    pub prefill_ms: f64,
-    pub select_ms: f64,
-    pub decode_ms: f64,
-    /// time-to-first-token (admission → first emitted token)
-    pub ttft_ms: f64,
-    pub tokens_per_sec: f64,
 }
 
 pub struct Engine {
@@ -421,9 +356,15 @@ impl Engine {
 
     /// Snap `keep` to the nearest k compiled for `kind` at `batch`
     /// (shared by the decode and fused-scan paths — aot.py emits
-    /// different k coverage per executable kind).
+    /// different k coverage per executable kind). Out-of-range keeps are
+    /// engine errors: the API layer rejects them at admission, and this
+    /// guard keeps a request injected past admission (internal callers,
+    /// tests) from being silently snapped to a bucket it never asked for.
     fn snap_keep(&self, kind: &str, batch: usize, keep: f64)
                  -> Result<f64> {
+        if keep.is_nan() || keep <= 0.0 || keep > 1.0 {
+            bail!("keep {keep} outside (0,1]");
+        }
         let cfg = self.config();
         let candidates = self
             .session
@@ -572,6 +513,9 @@ impl Engine {
     /// full-size masked copies; unstructured baseline, §5.1).
     pub fn wanda_weights(&self, xnorm: &LayerStats, znorm: &LayerStats,
                          keep: f64) -> Result<FfOverride> {
+        if keep.is_nan() || keep <= 0.0 || keep > 1.0 {
+            bail!("keep {keep} outside (0,1]");
+        }
         let cfg = self.config();
         let (l_n, f, d) = (cfg.n_layers, cfg.d_ff, cfg.d_model);
         let mask_stack = |w: &mut Vec<f32>, norms: &LayerStats,
@@ -645,12 +589,19 @@ impl Engine {
     /// tokens from the previous step are stale (first step after
     /// prefill, or any slot-membership change); pass `None` to chain
     /// the previous step's sampled tokens without any token upload.
+    ///
+    /// `override_ff` (Wanda) replaces the full FF stacks in-place, as in
+    /// [`Engine::decode_step`] — the fused `decode_sample_b{B}`
+    /// executable takes the same full-size weight ABI, so the masked
+    /// copies bind as its static prefix and Wanda rides the on-device
+    /// sampling path like every other full-width mode.
     pub fn decode_sample_step(
         &self,
         state: &mut DecodeState,
         samp: &mut SamplingState,
         host_tokens: Option<&[i32]>,
         ff: Option<&PrunedWeights>,
+        override_ff: Option<&FfOverride>,
     ) -> Result<(Vec<i32>, Vec<f32>)> {
         let t = Timer::start();
         let b = state.batch;
@@ -669,7 +620,7 @@ impl Engine {
                  membership change")?,
         };
         let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
-        let plan = self.decode_plan(b, ff, None, true)?;
+        let plan = self.decode_plan(b, ff, override_ff, true)?;
         let mut outs = self.session.run_prepared(
             &plan,
             &[&state.kcache, &state.vcache, tok_dev, &pos_dev,
@@ -1292,15 +1243,6 @@ pub fn aggregate_norms(per_seq: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
 /// Convenience: decode state + engine pair used by integration tests.
 pub type EngineRc = Rc<std::cell::RefCell<Engine>>;
 
-pub fn mode_table() -> BTreeMap<&'static str, Mode> {
-    let mut m = BTreeMap::new();
-    m.insert("full", Mode::Full);
-    m.insert("griffin", Mode::griffin(0.5));
-    m.insert("magnitude", Mode::Magnitude { keep: 0.5 });
-    m.insert("wanda", Mode::Wanda { keep: 0.5 });
-    m
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1312,13 +1254,6 @@ mod tests {
         let agg = aggregate_norms(&[a, b]);
         assert!((agg[0][0] - 5.0).abs() < 1e-6);
         assert!((agg[0][1] - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn mode_labels() {
-        assert_eq!(Mode::Full.label(), "full");
-        assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
-        assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
     }
 
     #[test]

@@ -1,17 +1,25 @@
 //! Layer-3 coordinator: the paper's serving-side contribution.
 //!
+//! - `types`      — runtime-free Mode / GenResponse (substrate builds)
 //! - `selection`  — GRIFFIN expert selection + baselines (§4.2, Tables 4-5)
 //! - `sequence`   — request/sequence state machine
-//! - `router`     — admission control, backpressure, condvar wakeup
+//! - `router`     — admission control, backpressure, cancel flags
 //! - `slots`      — slot pool (continuous-batching bookkeeping)
 //! - `scheduler`  — continuous batching over the compiled batch buckets
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
 //! - `gather_cache` — LRU reuse of device-resident pruned weight sets
+//!
+//! `engine` and `scheduler` need the PJRT runtime and are gated behind
+//! the `runtime` cargo feature; everything else builds dependency-free
+//! (the CI substrate job runs with `--no-default-features`).
 
+#[cfg(feature = "runtime")]
 pub mod engine;
 pub mod gather_cache;
 pub mod router;
+#[cfg(feature = "runtime")]
 pub mod scheduler;
 pub mod selection;
 pub mod sequence;
 pub mod slots;
+pub mod types;

@@ -1,10 +1,20 @@
-//! Request admission: bounded FIFO queue with backpressure + request ids.
+//! Request admission: bounded FIFO queues with backpressure + request ids
+//! + the cancellation flag set.
 //!
 //! The router is the thread-safe front door (requests may arrive from many
 //! server threads); the scheduler drains it on the engine thread. Admission
 //! control is FIFO with a hard queue-depth cap: when the queue is full the
 //! caller gets `AdmitError::QueueFull` immediately (surfaced to TCP clients
 //! as a `queue_full` error response) instead of blocking.
+//!
+//! Three kinds of work flow through, all under ONE mutex so the condvar
+//! wakeup cannot miss a producer:
+//!   * generate requests (the main FIFO, drained by `take_compatible*`),
+//!   * score requests (`{"v":2,"op":"score"}` teacher-forced evaluation),
+//!   * cancellation flags (`{"v":2,"op":"cancel"}`): handler threads only
+//!     FLAG an id here; the engine thread resolves it on its next tick —
+//!     removing the request from the queue or retiring its slot — so all
+//!     slot/queue state stays single-threaded.
 //!
 //! The condvar `not_empty` wakes the engine thread the moment work arrives,
 //! so an idle server parks instead of polling; `wake_all` lets shutdown
@@ -15,8 +25,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::engine::Mode;
-use crate::coordinator::sequence::{GenRequest, RequestId};
+use crate::coordinator::sequence::{GenRequest, RequestId, ScoreRequest};
+use crate::coordinator::types::Mode;
 
 #[derive(Debug)]
 pub enum AdmitError {
@@ -53,8 +63,23 @@ impl std::fmt::Display for AdmitError {
 
 impl std::error::Error for AdmitError {}
 
+#[derive(Default)]
+struct Queues {
+    gen: VecDeque<GenRequest>,
+    score: VecDeque<ScoreRequest>,
+    cancelled: Vec<RequestId>,
+}
+
+impl Queues {
+    fn has_work(&self) -> bool {
+        !self.gen.is_empty()
+            || !self.score.is_empty()
+            || !self.cancelled.is_empty()
+    }
+}
+
 pub struct Router {
-    queue: Mutex<VecDeque<GenRequest>>,
+    q: Mutex<Queues>,
     not_empty: Condvar,
     next_id: AtomicU64,
     pub capacity: usize,
@@ -64,7 +89,7 @@ pub struct Router {
 impl Router {
     pub fn new(capacity: usize, max_prompt: usize) -> Self {
         Router {
-            queue: Mutex::new(VecDeque::new()),
+            q: Mutex::new(Queues::default()),
             not_empty: Condvar::new(),
             next_id: AtomicU64::new(1),
             capacity,
@@ -88,8 +113,8 @@ impl Router {
                 max: self.max_prompt,
             });
         }
-        let mut q = self.queue.lock().unwrap();
-        if q.len() >= self.capacity {
+        let mut q = self.q.lock().unwrap();
+        if q.gen.len() >= self.capacity {
             return Err(AdmitError::QueueFull { capacity: self.capacity });
         }
         if req.id == 0 {
@@ -97,9 +122,75 @@ impl Router {
         }
         req.admitted_at = Instant::now();
         let id = req.id;
-        q.push_back(req);
+        q.gen.push_back(req);
         self.not_empty.notify_one();
         Ok(id)
+    }
+
+    /// Admit a score request (shares the queue-depth cap with generate).
+    pub fn admit_score(&self, mut req: ScoreRequest)
+                       -> Result<RequestId, AdmitError> {
+        if req.prompt.is_empty() || req.continuation.is_empty() {
+            return Err(AdmitError::EmptyPrompt);
+        }
+        let len = req.prompt.len() + req.continuation.len();
+        if len > self.max_prompt {
+            return Err(AdmitError::PromptTooLong {
+                len,
+                max: self.max_prompt,
+            });
+        }
+        let mut q = self.q.lock().unwrap();
+        if q.score.len() >= self.capacity {
+            return Err(AdmitError::QueueFull { capacity: self.capacity });
+        }
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        req.admitted_at = Instant::now();
+        let id = req.id;
+        q.score.push_back(req);
+        self.not_empty.notify_one();
+        Ok(id)
+    }
+
+    /// Flag a request for cancellation and wake the engine thread. The
+    /// flag is resolved on the next scheduler tick: a queued request is
+    /// dropped with a `cancelled` response, a slotted one is retired
+    /// within one tick. Unknown/finished ids drain as no-ops, so cancel
+    /// is idempotent.
+    pub fn request_cancel(&self, id: RequestId) {
+        let mut q = self.q.lock().unwrap();
+        q.cancelled.push(id);
+        self.not_empty.notify_all();
+    }
+
+    /// Drain the pending cancellation flags (engine thread, once per
+    /// tick).
+    pub fn take_cancelled(&self) -> Vec<RequestId> {
+        std::mem::take(&mut self.q.lock().unwrap().cancelled)
+    }
+
+    /// Remove a queued (not yet slotted) generate request by id.
+    pub fn remove_queued(&self, id: RequestId) -> Option<GenRequest> {
+        let mut q = self.q.lock().unwrap();
+        let at = q.gen.iter().position(|r| r.id == id)?;
+        q.gen.remove(at)
+    }
+
+    /// Remove a queued (not yet started) score request by id. A score
+    /// the engine already popped runs to completion — scores are
+    /// synchronous, there is no partial state to stop.
+    pub fn remove_queued_score(&self, id: RequestId)
+                               -> Option<ScoreRequest> {
+        let mut q = self.q.lock().unwrap();
+        let at = q.score.iter().position(|r| r.id == id)?;
+        q.score.remove(at)
+    }
+
+    /// Pop the oldest pending score request.
+    pub fn take_score(&self) -> Option<ScoreRequest> {
+        self.q.lock().unwrap().score.pop_front()
     }
 
     /// Pop up to `n` requests from the queue head that match `mode`
@@ -122,16 +213,16 @@ impl Router {
         n: usize,
         compat: impl Fn(&Mode, &Mode) -> bool,
     ) -> Vec<GenRequest> {
-        let mut q = self.queue.lock().unwrap();
-        let mode = match mode.or_else(|| q.front().map(|r| r.mode)) {
+        let mut q = self.q.lock().unwrap();
+        let mode = match mode.or_else(|| q.gen.front().map(|r| r.mode)) {
             Some(m) => m,
             None => return Vec::new(),
         };
         let mut out = Vec::new();
         while out.len() < n {
-            match q.front() {
+            match q.gen.front() {
                 Some(r) if compat(&r.mode, &mode) => {
-                    out.push(q.pop_front().unwrap())
+                    out.push(q.gen.pop_front().unwrap())
                 }
                 _ => break,
             }
@@ -139,29 +230,36 @@ impl Router {
         out
     }
 
+    /// Depth of the generate queue (wire `queue.depth`).
     pub fn len(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.q.lock().unwrap().gen.len()
     }
 
+    pub fn score_len(&self) -> usize {
+        self.q.lock().unwrap().score.len()
+    }
+
+    /// No queued work of any kind (cancellation flags count: they need a
+    /// tick to resolve).
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        !self.q.lock().unwrap().has_work()
     }
 
-    /// Block until at least one request is queued (with timeout). Returns
-    /// immediately when woken by `admit` or `wake_all`.
+    /// Block until some work is queued (with timeout). Returns
+    /// immediately when woken by a producer or `wake_all`.
     pub fn wait_nonempty(&self, timeout: std::time::Duration) -> bool {
-        let q = self.queue.lock().unwrap();
-        if !q.is_empty() {
+        let q = self.q.lock().unwrap();
+        if q.has_work() {
             return true;
         }
         let (q, _) = self.not_empty.wait_timeout(q, timeout).unwrap();
-        !q.is_empty()
+        q.has_work()
     }
 
     /// Wake every thread parked in `wait_nonempty` (used by shutdown so
     /// the engine loop re-checks its stop flag immediately).
     pub fn wake_all(&self) {
-        let _q = self.queue.lock().unwrap();
+        let _q = self.q.lock().unwrap();
         self.not_empty.notify_all();
     }
 }
@@ -169,7 +267,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::Mode;
+    use crate::coordinator::types::Mode;
 
     fn req(mode: Mode) -> GenRequest {
         let mut r = GenRequest::greedy(0, vec![1, 2], 4, mode);
@@ -305,5 +403,71 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         r.admit(req(Mode::Full)).unwrap();
         assert!(t.join().unwrap(), "admit must wake the waiter");
+    }
+
+    #[test]
+    fn cancel_flags_drain_once() {
+        let r = Router::new(4, 128);
+        r.request_cancel(7);
+        r.request_cancel(9);
+        let mut ids = r.take_cancelled();
+        ids.sort();
+        assert_eq!(ids, vec![7, 9]);
+        assert!(r.take_cancelled().is_empty(), "flags drain exactly once");
+    }
+
+    #[test]
+    fn cancel_counts_as_work_for_the_waiter() {
+        // a pending cancel must wake/park-skip the engine loop even with
+        // both queues empty, so slotted requests cancel promptly
+        let r = Router::new(4, 128);
+        assert!(r.is_empty());
+        r.request_cancel(3);
+        assert!(!r.is_empty());
+        assert!(r.wait_nonempty(std::time::Duration::from_millis(1)));
+        r.take_cancelled();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn remove_queued_preserves_other_requests() {
+        let r = Router::new(8, 128);
+        let a = r.admit(req(Mode::Full)).unwrap();
+        let b = r.admit(req(Mode::Full)).unwrap();
+        let c = r.admit(req(Mode::Full)).unwrap();
+        let removed = r.remove_queued(b).unwrap();
+        assert_eq!(removed.id, b);
+        assert!(r.remove_queued(b).is_none(), "second remove is a miss");
+        let rest = r.take_compatible(None, 8);
+        assert_eq!(rest.iter().map(|x| x.id).collect::<Vec<_>>(), [a, c]);
+    }
+
+    #[test]
+    fn score_queue_admits_and_drains_fifo() {
+        let r = Router::new(2, 128);
+        let mk = |_i: u64| ScoreRequest {
+            id: 0,
+            prompt: vec![1, 2],
+            continuation: vec![3],
+            mode: Mode::Full,
+            admitted_at: Instant::now(),
+        };
+        let a = r.admit_score(mk(1)).unwrap();
+        let b = r.admit_score(mk(2)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(r.score_len(), 2);
+        // shares the capacity policy
+        assert!(matches!(r.admit_score(mk(3)),
+                         Err(AdmitError::QueueFull { .. })));
+        // cancellation path: a queued score can be pulled by id
+        assert_eq!(r.remove_queued_score(a).unwrap().id, a);
+        assert!(r.remove_queued_score(a).is_none());
+        assert_eq!(r.take_score().unwrap().id, b);
+        assert!(r.take_score().is_none());
+        // validation
+        let mut bad = mk(4);
+        bad.continuation = vec![];
+        assert!(matches!(r.admit_score(bad),
+                         Err(AdmitError::EmptyPrompt)));
     }
 }

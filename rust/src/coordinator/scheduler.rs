@@ -40,14 +40,31 @@
 //! artifacts provide `decode_sample_*` executables, the tick samples ON
 //! DEVICE — per step, the host uploads pos (+ tokens only after a
 //! membership change) and downloads token ids + logprobs, never the
-//! `[B, vocab]` logits. Each fused-eligible slot owns a host-side
-//! `DeviceSampler` mirror that is the source of truth for its RNG
-//! stream: fused ticks advance it in lockstep, host-fallback ticks
+//! `[B, vocab]` logits. This covers Wanda too: its masked full-size FF
+//! override binds as the `decode_sample_b{B}` static prefix like any
+//! other full-width weight set. Each fused-eligible slot owns a
+//! host-side `DeviceSampler` mirror that is the source of truth for its
+//! RNG stream: fused ticks advance it in lockstep, host-fallback ticks
 //! sample through it, and the device `SamplingState` is rebuilt from
 //! mirror states on membership changes (no device readback) — so a
 //! seeded generation is reproducible independent of how ticks routed.
-//! Host fallback remains for Wanda overrides, nucleus/temperature
-//! samplers, and pre-fused artifact sets.
+//! Host fallback remains for nucleus/temperature samplers and pre-fused
+//! artifact sets.
+//!
+//! Fault containment: an engine error never propagates out of `tick` as
+//! long as the slot invariants hold. A failure attributable to ONE
+//! request (per-slot selection at admission) retires just that request
+//! with an `EngineEvent::Error`; a batch-level failure (prefill, KV
+//! splice, shared-weight rebuild, the decode dispatch itself) fails the
+//! implicated batch and the serve loop keeps draining the queue. One
+//! poisoned request cannot strand every other connection (ROADMAP
+//! "per-request error containment").
+//!
+//! Cancellation: handler threads flag ids via `Router::request_cancel`;
+//! the next tick resolves the flags BEFORE decoding — a queued request
+//! is dropped with a `cancelled` response, a slotted one is retired
+//! (freeing the slot) within one tick, so token emission stops
+//! immediately.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -55,6 +72,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::api::ErrorCode;
 use crate::coordinator::engine::{
     aggregate_norms, DecodeState, Engine, FfOverride, GenResponse, Mode,
     PrunedWeights, SamplingState,
@@ -69,12 +87,18 @@ use crate::sampling::{
 use crate::tokenizer::{EOS_ID, PAD_ID};
 
 /// Streamed engine output: one event per generated token, one per
-/// completed request. The server forwards these to waiting connections;
-/// `run_until_idle` collects only the `Done` responses.
+/// completed request (`Done` / `ScoreDone` / `Error`). The server
+/// forwards these to waiting connections; `run_until_idle` collects only
+/// the `Done` responses.
 #[derive(Debug, Clone)]
 pub enum EngineEvent {
     Token { id: u64, index: usize, token: i32, text: String },
     Done(GenResponse),
+    /// teacher-forced scoring result (per-token continuation NLLs)
+    ScoreDone { id: u64, nll: Vec<f64> },
+    /// the request failed inside the engine; its slot is freed and its
+    /// co-tenants keep running (per-request fault containment)
+    Error { id: u64, code: ErrorCode, message: String },
 }
 
 impl EngineEvent {
@@ -82,7 +106,27 @@ impl EngineEvent {
         match self {
             EngineEvent::Token { id, .. } => *id,
             EngineEvent::Done(r) => r.id,
+            EngineEvent::ScoreDone { id, .. } => *id,
+            EngineEvent::Error { id, .. } => *id,
         }
+    }
+}
+
+/// The terminal response for a request cancelled before it reached a
+/// slot (no tokens were ever emitted).
+fn cancelled_response(req: &GenRequest) -> GenResponse {
+    GenResponse {
+        id: req.id,
+        tokens: Vec::new(),
+        text: String::new(),
+        logprobs: Vec::new(),
+        finish: FinishReason::Cancelled,
+        k_used: None,
+        prefill_ms: 0.0,
+        select_ms: 0.0,
+        decode_ms: 0.0,
+        ttft_ms: 0.0,
+        tokens_per_sec: 0.0,
     }
 }
 
@@ -159,16 +203,26 @@ impl Scheduler {
         self.pool.occupied()
     }
 
-    /// One scheduling step: back-fill free slots from the queue, then run
-    /// one decode tick over the occupied slots. Returns false when there
-    /// was nothing to do (pool empty, no admissible request).
+    /// One scheduling step: resolve cancellation flags, run at most one
+    /// score request, back-fill free slots from the queue, then run one
+    /// decode tick over the occupied slots. Returns false when there was
+    /// nothing to do (pool empty, no admissible request).
+    ///
+    /// Engine faults are contained here: a decode-tick failure retires
+    /// the implicated batch with `engine_error` events and the loop
+    /// keeps serving — only slot-invariant violations (programming
+    /// errors) propagate out.
     pub fn tick(&mut self, on_event: &mut dyn FnMut(EngineEvent))
                 -> Result<bool> {
-        let admitted = self.admit_from_queue(on_event)?;
+        let mut worked = self.process_cancellations(on_event)?;
+        worked |= self.run_score(on_event);
+        worked |= self.admit_from_queue(on_event)?;
         if self.pool.is_empty() {
-            return Ok(admitted);
+            return Ok(worked);
         }
-        self.decode_tick(on_event)?;
+        if let Err(e) = self.decode_tick(on_event) {
+            self.fail_all_slots(&e, on_event)?;
+        }
         Ok(true)
     }
 
@@ -210,6 +264,116 @@ impl Scheduler {
     }
 
     // ------------------------------------------------------------------
+    // cancellation + scoring
+    // ------------------------------------------------------------------
+
+    /// Resolve pending cancel flags: a slotted request is retired (slot
+    /// freed, `finish:"cancelled"` response with the tokens emitted so
+    /// far), a queued one is dropped with an empty cancelled response.
+    /// Unknown or already-finished ids drain as no-ops, so cancel is
+    /// idempotent.
+    fn process_cancellations(&mut self, on_event: &mut dyn FnMut(EngineEvent))
+                             -> Result<bool> {
+        let ids = self.router.take_cancelled();
+        if ids.is_empty() {
+            return Ok(false);
+        }
+        let mut worked = false;
+        for id in ids {
+            if let Some(slot) = self.pool.slot_of(id) {
+                self.retire_slot(slot, FinishReason::Cancelled, on_event)?;
+                worked = true;
+            } else if let Some(req) = self.router.remove_queued(id) {
+                self.engine.metrics.requests_cancelled.inc();
+                on_event(EngineEvent::Done(cancelled_response(&req)));
+                worked = true;
+            } else if let Some(sr) = self.router.remove_queued_score(id) {
+                // a queued score has no partial result to return; a score
+                // already running completes (it is synchronous)
+                self.engine.metrics.requests_cancelled.inc();
+                on_event(EngineEvent::Error {
+                    id: sr.id,
+                    code: ErrorCode::Cancelled,
+                    message: "cancelled before scoring started".into(),
+                });
+                worked = true;
+            }
+        }
+        Ok(worked)
+    }
+
+    /// Run at most ONE pending score request (teacher-forced NLLs over
+    /// its own transient decode state) so a long continuation cannot
+    /// starve streaming co-tenants for more than a tick. Engine errors
+    /// are contained per request.
+    fn run_score(&mut self, on_event: &mut dyn FnMut(EngineEvent)) -> bool {
+        let Some(sr) = self.router.take_score() else { return false };
+        self.engine.metrics.queue_wait.record(sr.admitted_at.elapsed());
+        match self.engine.score_continuation(
+            &sr.prompt, &sr.continuation, sr.mode)
+        {
+            Ok(nll) => {
+                self.engine.metrics.requests_completed.inc();
+                on_event(EngineEvent::ScoreDone { id: sr.id, nll });
+            }
+            Err(e) => {
+                self.engine.metrics.requests_failed.inc();
+                on_event(EngineEvent::Error {
+                    id: sr.id,
+                    code: ErrorCode::EngineError,
+                    message: format!("{e:#}"),
+                });
+            }
+        }
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // fault containment
+    // ------------------------------------------------------------------
+
+    /// Retire every occupied slot with an `engine_error` event after a
+    /// batch-level engine fault (shared-weight rebuild, decode dispatch):
+    /// the implicated batch dies, the serve loop and the queue survive.
+    fn fail_all_slots(&mut self, err: &anyhow::Error,
+                      on_event: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        let msg = format!("{err:#}");
+        for slot in self.pool.occupied_indices() {
+            let entry = self.pool.retire(slot)?;
+            self.cur[slot] = PAD_ID;
+            if let Some(state) = self.state.as_mut() {
+                state.pos[slot] = 0;
+            }
+            self.engine.metrics.requests_failed.inc();
+            on_event(EngineEvent::Error {
+                id: entry.seq.req.id,
+                code: ErrorCode::EngineError,
+                message: msg.clone(),
+            });
+        }
+        self.samp = None;
+        self.samp_dirty = true;
+        self.shared = SharedFf { dirty: true, ..SharedFf::default() };
+        self.engine.metrics.slots_busy.set(0);
+        Ok(())
+    }
+
+    /// Fail an entire admission batch (prefill / KV-splice fault) before
+    /// any of its requests reached a slot.
+    fn fail_admission(&mut self, reqs: &[GenRequest], err: &anyhow::Error,
+                      on_event: &mut dyn FnMut(EngineEvent)) {
+        let msg = format!("{err:#}");
+        for req in reqs {
+            self.engine.metrics.requests_failed.inc();
+            on_event(EngineEvent::Error {
+                id: req.id,
+                code: ErrorCode::EngineError,
+                message: msg.clone(),
+            });
+        }
+    }
+
+    // ------------------------------------------------------------------
     // admission
     // ------------------------------------------------------------------
 
@@ -247,6 +411,12 @@ impl Scheduler {
     /// selection state captured, and the first token (sampled from the
     /// prompt's last logits) emitted immediately — this is where TTFT is
     /// measured.
+    ///
+    /// Containment: a prefill/splice fault fails the whole admission
+    /// batch (no request reached a slot yet); a per-request selection
+    /// fault — e.g. an out-of-range keep injected past admission — fails
+    /// only that request, and its batch-mates are installed normally.
+    /// `Err` is reserved for slot-invariant violations.
     fn prefill_into_slots(
         &mut self,
         reqs: &[GenRequest],
@@ -267,16 +437,32 @@ impl Scheduler {
         let pre_t = Instant::now();
         let prompts: Vec<Vec<i32>> =
             reqs.iter().map(|r| r.prompt.clone()).collect();
-        let pre = self.engine.prefill(&prompts, false)?;
+        let pre = match self.engine.prefill(&prompts, false) {
+            Ok(p) => p,
+            Err(e) => {
+                self.fail_admission(reqs, &e, on_event);
+                return Ok(());
+            }
+        };
         let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
 
         if self.state.is_none() {
-            self.state = Some(self.engine.new_decode_state(self.slot_count)?);
+            match self.engine.new_decode_state(self.slot_count) {
+                Ok(s) => self.state = Some(s),
+                Err(e) => {
+                    self.fail_admission(reqs, &e, on_event);
+                    return Ok(());
+                }
+            }
         }
         let pairs: Vec<(usize, usize)> =
             slots.iter().enumerate().map(|(i, &s)| (i, s)).collect();
-        self.engine.splice_slots(
-            self.state.as_mut().unwrap(), &pre.state, &pairs)?;
+        if let Err(e) = self.engine.splice_slots(
+            self.state.as_mut().unwrap(), &pre.state, &pairs)
+        {
+            self.fail_admission(reqs, &e, on_event);
+            return Ok(());
+        }
 
         for (i, req) in reqs.iter().enumerate() {
             let slot = slots[i];
@@ -297,27 +483,40 @@ impl Scheduler {
             }
 
             let sel_t = Instant::now();
-            match req.mode {
-                Mode::Griffin { keep, strategy } => {
-                    entry.seq.advance(Phase::Selecting);
-                    let stats = pre.stats[i].clone();
-                    // snap to a keep servable at the pool bucket (the
-                    // full k sweep is only compiled at B=1)
-                    let keep =
-                        self.engine.bucket_keep(self.slot_count, keep)?;
-                    entry.expert_idx =
-                        Some(self.engine.select(&stats, keep, strategy)?);
-                    entry.stats = Some(stats);
-                    entry.seq.advance(Phase::Decoding);
+            let selected: Result<()> = (|| {
+                match req.mode {
+                    Mode::Griffin { keep, strategy } => {
+                        entry.seq.advance(Phase::Selecting);
+                        let stats = pre.stats[i].clone();
+                        // snap to a keep servable at the pool bucket (the
+                        // full k sweep is only compiled at B=1)
+                        let keep =
+                            self.engine.bucket_keep(self.slot_count, keep)?;
+                        entry.expert_idx = Some(
+                            self.engine.select(&stats, keep, strategy)?);
+                        entry.stats = Some(stats);
+                        entry.seq.advance(Phase::Decoding);
+                    }
+                    Mode::Wanda { .. } => {
+                        entry.xnorm = Some(pre.xnorms[i].clone());
+                        entry.znorm = Some(pre.znorms[i].clone());
+                        entry.seq.advance(Phase::Decoding);
+                    }
+                    Mode::Full | Mode::Magnitude { .. } => {
+                        entry.seq.advance(Phase::Decoding);
+                    }
                 }
-                Mode::Wanda { .. } => {
-                    entry.xnorm = Some(pre.xnorms[i].clone());
-                    entry.znorm = Some(pre.znorms[i].clone());
-                    entry.seq.advance(Phase::Decoding);
-                }
-                Mode::Full | Mode::Magnitude { .. } => {
-                    entry.seq.advance(Phase::Decoding);
-                }
+                Ok(())
+            })();
+            if let Err(e) = selected {
+                // this request's fault alone: its batch-mates proceed
+                self.engine.metrics.requests_failed.inc();
+                on_event(EngineEvent::Error {
+                    id: req.id,
+                    code: ErrorCode::EngineError,
+                    message: format!("{e:#}"),
+                });
+                continue;
             }
             entry.select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
 
@@ -368,8 +567,10 @@ impl Scheduler {
     /// slot's sampler is fused-eligible (greedy / top-k within the
     /// compiled truncation bucket), the tick runs on device end to end —
     /// no `[B, vocab]` logits download, token input chained on device in
-    /// steady state. Otherwise (Wanda overrides, nucleus/temperature
-    /// samplers, old artifacts) the host-logits path runs as before.
+    /// steady state. Wanda's masked override binds as the fused
+    /// executable's full-size static prefix like any other weight set.
+    /// Otherwise (nucleus/temperature samplers, old artifacts) the
+    /// host-logits path runs as before.
     fn decode_tick(&mut self, on_event: &mut dyn FnMut(EngineEvent))
                    -> Result<()> {
         let max_seq = self.engine.config().max_seq;
@@ -428,6 +629,7 @@ impl Scheduler {
                     samp,
                     host_toks,
                     shared.pruned.as_deref(),
+                    shared.wanda.as_ref(),
                 )?
             };
             self.engine.metrics.fused_decode_ticks.inc();
@@ -520,14 +722,15 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Can this tick run on the fused on-device sampling path?
+    /// Can this tick run on the fused on-device sampling path? Wanda
+    /// rides it too: its masked override is a full-size weight set, so
+    /// the tick resolves the same `decode_sample_b{B}` executable as
+    /// Full mode (k = None) with the override bound as static prefix.
     fn fused_eligible_tick(&self, occ: &[usize]) -> bool {
         if !self.fused_enabled {
             return false;
         }
-        // Wanda replaces the full FF stacks; keep it on the host path
-        if matches!(self.pool.active_mode(), None | Some(Mode::Wanda { .. }))
-        {
+        if self.pool.active_mode().is_none() {
             return false;
         }
         let k = self.shared.pruned.as_ref().map(|p| p.k);
@@ -598,7 +801,11 @@ impl Scheduler {
                 .record(fin.duration_since(entry.seq.admitted_at));
         }
         let resp = self.response_from(entry)?;
-        self.engine.metrics.requests_completed.inc();
+        if reason == FinishReason::Cancelled {
+            self.engine.metrics.requests_cancelled.inc();
+        } else {
+            self.engine.metrics.requests_completed.inc();
+        }
         self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
         on_event(EngineEvent::Done(resp));
         Ok(())

@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use crate::coordinator::engine::Mode;
+use crate::coordinator::types::Mode;
 use crate::sampling::SamplerSpec;
 
 pub type RequestId = u64;
@@ -79,6 +79,34 @@ pub enum FinishReason {
     Length,
     Eos,
     ContextFull,
+    /// stopped by an explicit `cancel` op (or a client disconnect); the
+    /// slot is freed and the response carries the tokens emitted so far
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Stable wire string for the `finish` response field.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Eos => "eos",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Teacher-forced scoring work (`{"v":2,"op":"score"}`): per-token
+/// negative log-likelihoods of `continuation` given `prompt`, with the
+/// generation-phase weights chosen by `mode`. Runs on the engine thread
+/// between decode ticks.
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub continuation: Vec<i32>,
+    pub mode: Mode,
+    pub admitted_at: Instant,
 }
 
 impl Sequence {

@@ -24,8 +24,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::engine::Mode;
 use crate::coordinator::selection::LayerStats;
+use crate::coordinator::types::Mode;
 use crate::coordinator::sequence::Sequence;
 use crate::sampling::{DeviceSampler, Sampler};
 
@@ -168,6 +168,13 @@ impl SlotPool {
         self.slots.get_mut(slot).and_then(Option::as_mut)
     }
 
+    /// Slot currently holding request `id`, if any (cancellation lookup).
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.slots.iter().position(|s| {
+            s.as_ref().map_or(false, |e| e.seq.req.id == id)
+        })
+    }
+
     /// Place a sequence into a free slot. Double-assignment is a
     /// scheduling bug and is rejected (never silently overwrites).
     pub fn assign(&mut self, slot: usize, entry: SlotEntry) -> Result<()> {
@@ -251,6 +258,8 @@ mod tests {
         assert_eq!(p.free_indices(), vec![0, 1, 3]);
         assert_eq!(p.occupied_indices(), vec![2]);
         assert_eq!(p.get(2).unwrap().seq.req.id, 7);
+        assert_eq!(p.slot_of(7), Some(2));
+        assert_eq!(p.slot_of(8), None);
         let e = p.retire(2).unwrap();
         assert_eq!(e.seq.req.id, 7);
         assert!(p.is_empty());

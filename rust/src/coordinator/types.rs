@@ -1,0 +1,108 @@
+//! Runtime-free coordinator types: the generation mode, the response
+//! shape, and the mode table.
+//!
+//! Split out of `engine.rs` so the substrate layers (router, slot pool,
+//! sequence state machine, the typed `api` protocol) compile and
+//! unit-test without the PJRT runtime — `engine`/`scheduler` re-export
+//! these under their old paths, so runtime-enabled code is unaffected.
+
+use crate::coordinator::selection::Strategy;
+use crate::coordinator::sequence::FinishReason;
+
+/// How the generation phase runs (paper §5.1 comparison set).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// original model (upper baseline)
+    Full,
+    /// the paper's method: prompt-prompted expert selection
+    Griffin { keep: f64, strategy: Strategy },
+    /// static neuron pruning by weight magnitude (structured baseline)
+    Magnitude { keep: f64 },
+    /// Adaptive Wanda: unstructured masking from prompt activations
+    Wanda { keep: f64 },
+}
+
+impl Mode {
+    pub fn griffin(keep: f64) -> Mode {
+        Mode::Griffin { keep, strategy: Strategy::TopK }
+    }
+
+    /// Batching compatibility: requests can share a continuous run when
+    /// they decode through the same executable family and weight-set
+    /// shape. Strategy seeds (`Strategy::Sampling`/`TopKPlusSampling`)
+    /// are per-request selection inputs — the batch-shared eq.7
+    /// aggregate uses the run head's seed — so they must NOT fragment
+    /// batches (full `==` would serialize seeded-sampling traffic into
+    /// batches of one).
+    pub fn compatible(&self, other: &Mode) -> bool {
+        match (self, other) {
+            (
+                Mode::Griffin { keep: a, strategy: sa },
+                Mode::Griffin { keep: b, strategy: sb },
+            ) => {
+                a == b
+                    && std::mem::discriminant(sa)
+                        == std::mem::discriminant(sb)
+            }
+            _ => self == other,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Full => "full".into(),
+            Mode::Griffin { keep, strategy } => match strategy {
+                Strategy::TopK => format!("griffin@{keep}"),
+                Strategy::Sampling { .. } => format!("sampling@{keep}"),
+                Strategy::TopKPlusSampling { .. } => {
+                    format!("topk+sampling@{keep}")
+                }
+            },
+            Mode::Magnitude { keep } => format!("magnitude@{keep}"),
+            Mode::Wanda { keep } => format!("wanda@{keep}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub logprobs: Vec<f32>,
+    pub finish: FinishReason,
+    pub k_used: Option<usize>,
+    pub prefill_ms: f64,
+    pub select_ms: f64,
+    pub decode_ms: f64,
+    /// time-to-first-token (admission → first emitted token)
+    pub ttft_ms: f64,
+    pub tokens_per_sec: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels() {
+        assert_eq!(Mode::Full.label(), "full");
+        assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
+        assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
+    }
+
+    #[test]
+    fn seeded_strategies_stay_compatible() {
+        let a = Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::Sampling { seed: 1 },
+        };
+        let b = Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::Sampling { seed: 2 },
+        };
+        assert!(a.compatible(&b));
+        assert!(!a.compatible(&Mode::griffin(0.5)));
+        assert!(!a.compatible(&Mode::Full));
+    }
+}

@@ -2,6 +2,7 @@
 //! generation (Dong, Chen, Chi 2024) — Rust coordinator (Layer 3).
 //!
 //! Architecture (DESIGN.md):
+//! - `api`         — versioned typed wire protocol (v2 + the v1 shim).
 //! - `runtime`     — PJRT client; loads AOT-compiled HLO artifacts.
 //! - `coordinator` — the serving engine: router, scheduler, sequence
 //!   state, GRIFFIN expert selection.
@@ -9,17 +10,28 @@
 //!   `sampling`, `eval`, `workload` — substrates (all hand-rolled; the
 //!   build environment is offline).
 //! - `experiments`, `bench_harness` — paper table/figure regeneration.
+//!
+//! The `runtime` cargo feature (default on) gates everything that needs
+//! the native xla_extension/PJRT library: `runtime`, the engine +
+//! scheduler, `server`, and `experiments`. With `--no-default-features`
+//! the substrate crates — json, config, sampling, coordinator types,
+//! api, router/slots/sequence — build and unit-test on machines without
+//! the toolchain (the CI substrate job).
 
+pub mod api;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+#[cfg(feature = "runtime")]
 pub mod experiments;
 pub mod json;
 pub mod metrics;
+#[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod sampling;
+#[cfg(feature = "runtime")]
 pub mod server;
 pub mod tensorfile;
 pub mod test_support;

@@ -8,9 +8,9 @@
 //!   compile      eagerly compile all executables of a config (timing)
 
 use anyhow::{bail, Result};
+use griffin::api::PruneSpec;
 use griffin::cli::{self, OptSpec};
 use griffin::coordinator::engine::{Engine, Mode};
-use griffin::coordinator::selection::Strategy;
 use griffin::coordinator::sequence::GenRequest;
 use griffin::experiments;
 use griffin::sampling::SamplerSpec;
@@ -33,7 +33,8 @@ const GLOBAL_OPTS: &[OptSpec] = &[
     OptSpec { name: "max-new-tokens", takes_value: true, default: Some("48"),
               help: "generate: generation budget" },
     OptSpec { name: "mode", takes_value: true, default: Some("griffin"),
-              help: "full | griffin | magnitude | wanda" },
+              help: "full | griffin | griffin-sampling | topk+sampling \
+                     | magnitude | wanda" },
     OptSpec { name: "keep", takes_value: true, default: Some("0.5"),
               help: "FF keep fraction (1 - sparsity)" },
     OptSpec { name: "temperature", takes_value: true, default: Some("0"),
@@ -73,18 +74,16 @@ fn load_engine(args: &cli::Args) -> Result<Engine> {
 }
 
 fn mode_from_args(args: &cli::Args) -> Result<Mode> {
-    let keep = args.f64_or("keep", 0.5)?;
-    let seed = args.u64_or("seed", 0)?;
-    Ok(match args.get("mode").unwrap() {
-        "full" => Mode::Full,
-        "griffin" => Mode::Griffin { keep, strategy: Strategy::TopK },
-        "griffin-sampling" => {
-            Mode::Griffin { keep, strategy: Strategy::Sampling { seed } }
-        }
-        "magnitude" => Mode::Magnitude { keep },
-        "wanda" => Mode::Wanda { keep },
-        other => bail!("unknown mode {other:?}"),
-    })
+    // one mapping for the CLI and the wire protocol: the same typed
+    // PruneSpec (and its admission-time validation) the server uses
+    let spec = PruneSpec::from_v1_mode(
+        args.get("mode").unwrap(),
+        args.f64_or("keep", 0.5)?,
+        args.u64_or("seed", 0)?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    spec.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(spec.to_mode())
 }
 
 fn cmd_generate(args: &cli::Args) -> Result<()> {

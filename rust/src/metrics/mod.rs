@@ -211,6 +211,11 @@ pub struct MetricsRegistry {
     pub requests_admitted: Counter,
     pub requests_completed: Counter,
     pub requests_rejected: Counter,
+    /// requests retired with an `engine_error` event (per-slot fault
+    /// containment: the serve loop survives, the request does not)
+    pub requests_failed: Counter,
+    /// requests stopped by an explicit cancel (or client disconnect)
+    pub requests_cancelled: Counter,
     pub decode_ticks: Counter,
     /// decode ticks served by the fused decode_sample_* path (on-device
     /// sampling; no [B, vocab] logits download)
@@ -274,6 +279,8 @@ impl MetricsRegistry {
                     ("admitted", n(self.requests_admitted.get() as f64)),
                     ("completed", n(self.requests_completed.get() as f64)),
                     ("rejected", n(self.requests_rejected.get() as f64)),
+                    ("failed", n(self.requests_failed.get() as f64)),
+                    ("cancelled", n(self.requests_cancelled.get() as f64)),
                 ]),
             ),
             (
@@ -399,6 +406,8 @@ mod tests {
         r.prefill_latency.record(Duration::from_millis(10));
         let v = r.to_json();
         assert!(v.get("prefill_latency").unwrap().get("count").is_some());
+        assert!(v.get("requests").unwrap().get("failed").is_some());
+        assert!(v.get("requests").unwrap().get("cancelled").is_some());
         assert!(v.get("throughput").is_some());
         assert!(v.get("ttft").is_some());
         assert!(v.get("inter_token_latency").is_some());

@@ -2,34 +2,51 @@
 //! threads; the PJRT engine is single-threaded by necessity, so handler
 //! threads only do admission + IO and the engine thread owns the device).
 //!
+//! The wire protocol is owned by the [`crate::api`] module (typed v2 +
+//! the v1 compat shim); this file is the IO layer: socket accept,
+//! admission, and event forwarding. Full reference: docs/protocol.md.
+//!
 //! ## Line protocol (one JSON object per line, both directions)
 //!
-//! Requests:
-//!   {"op":"generate","prompt":"...","max_new_tokens":32,
-//!    "mode":"griffin","keep":0.5,"temperature":0.0,"seed":1,
+//! v2 requests carry `"v":2` and split the pruning knob from the token
+//! sampler into orthogonal objects:
+//!
+//!   {"v":2,"op":"generate","prompt":"...","max_new_tokens":32,
+//!    "prune":{"method":"griffin","keep":0.5,"strategy":"topk","seed":1},
+//!    "sampling":{"temperature":0.8,"top_k":8,"seed":7},
 //!    "stop_at_eos":true,"stream":false}
-//!   {"op":"metrics"}
-//!   {"op":"config"}
-//!   {"op":"shutdown"}
+//!   {"v":2,"op":"generate","prompts":["a","b","c"]}     // batched
+//!   {"v":2,"op":"score","prompt":"...","continuation":"...",
+//!    "prune":{...}}
+//!   {"v":2,"op":"cancel","id":7}
+//!   {"v":2,"op":"health"}
+//!   {"v":2,"op":"metrics"} / {"v":2,"op":"config"} / {"v":2,"op":"shutdown"}
 //!
-//! Modes: full | griffin | griffin-sampling | topk+sampling | magnitude
-//! | wanda.
+//! Lines without `"v"` are v1 and keep working byte-for-byte: the compat
+//! shim maps every legacy mode string (full | griffin | griffin-sampling
+//! | topk+sampling | magnitude | wanda) onto the typed axes.
 //!
-//! Non-streaming generate (default) answers with a single line:
-//!   {"op":"generate","id":7,"text":...,"tokens":[...],"finish":"eos",
-//!    "k_used":128,"timing":{...}}
+//! Validation happens at admission: unknown methods, `keep` outside
+//! (0,1], negative temperature, and `top_p` outside (0,1] are rejected
+//! with {"op":"error","code":"invalid_request",...} before the request
+//! reaches the engine thread. Engine faults are contained per request —
+//! a failing request gets {"op":"error","code":"engine_error","id":N}
+//! and its co-tenants keep streaming.
 //!
-//! With "stream":true the connection receives one event line per token
-//! as the continuous-batching engine emits it, then a final done event —
-//! time-to-first-token is the gap to the first token line:
-//!   {"event":"token","id":7,"index":0,"token":104,"text":"h"}
-//!   {"event":"token","id":7,"index":1,"token":105,"text":"i"}
-//!   {"event":"done","op":"generate","id":7,"text":"hi",...}
+//! Streaming (`"stream":true`, single prompt): the connection receives
+//! a v2 `accepted` event naming the server-assigned id (so `cancel` can
+//! target it from any connection), one `token` event per sampled token,
+//! then the final `done` event:
 //!
-//! Errors carry a machine-readable code; a request hitting a full
-//! admission queue gets {"op":"error","code":"queue_full",...}
-//! immediately instead of blocking:
-//!   {"op":"error","code":"queue_full","message":"queue full (capacity 64)"}
+//!   {"v":2,"event":"accepted","id":7}
+//!   {"v":2,"event":"token","id":7,"index":0,"token":104,"text":"h"}
+//!   {"v":2,"event":"done","op":"generate","id":7,"finish":"eos",...}
+//!
+//! `cancel` stops token emission and frees the request's slot within one
+//! engine tick; the stream ends with `finish:"cancelled"`. When a client
+//! disconnects mid-stream its waiter entry is dropped and the request is
+//! auto-cancelled, so the waiters map cannot leak and abandoned requests
+//! stop burning decode ticks.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -40,13 +57,13 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::{Engine, GenResponse, Mode};
+use crate::api::{self, ApiError, ErrorCode, Request};
+use crate::coordinator::engine::Engine;
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{EngineEvent, Scheduler};
-use crate::coordinator::selection::Strategy;
-use crate::coordinator::sequence::{FinishReason, GenRequest};
+use crate::coordinator::sequence::GenRequest;
 use crate::json::{self, n, obj, s, Value};
-use crate::sampling::SamplerSpec;
+use crate::metrics::MetricsRegistry;
 use crate::tokenizer::Tokenizer;
 
 /// A connection waiting for engine events of one request.
@@ -58,12 +75,15 @@ pub struct Waiter {
 pub type Waiters = Arc<Mutex<HashMap<u64, Waiter>>>;
 
 /// Route an engine event to the connection waiting on its request id.
-/// Token events only reach streaming waiters; the done event removes the
-/// waiter. Shared by `run`, the integration tests, and examples.
+/// Token events only reach streaming waiters; terminal events (`Done`,
+/// `ScoreDone`, `Error`) remove the waiter. Shared by `run`, the
+/// integration tests, and examples.
 pub fn forward(waiters: &Waiters, ev: EngineEvent) {
     let id = ev.id();
     match ev {
-        EngineEvent::Done(_) => {
+        EngineEvent::Done(_)
+        | EngineEvent::ScoreDone { .. }
+        | EngineEvent::Error { .. } => {
             let w = waiters.lock().unwrap().remove(&id);
             if let Some(w) = w {
                 let _ = w.tx.send(ev);
@@ -99,123 +119,17 @@ impl ServerHandle {
     }
 }
 
-/// Parse a generate request body into a GenRequest.
+/// Parse a v1 generate request body into a GenRequest — a thin wrapper
+/// over the compat shim, kept for tests and embedding code that speaks
+/// the legacy single-prompt shape.
 pub fn parse_generate(v: &Value, tok: &Tokenizer) -> Result<GenRequest> {
-    let prompt_text =
-        v.get("prompt").and_then(Value::as_str).context("missing prompt")?;
-    let max_new = v
-        .get("max_new_tokens")
-        .and_then(Value::as_usize)
-        .unwrap_or(32);
-    let keep = v.get("keep").and_then(Value::as_f64).unwrap_or(0.5);
-    let seed = v
-        .get("seed")
-        .and_then(Value::as_i64)
-        .map(|x| x as u64)
-        .unwrap_or(0);
-    let mode = match v.get("mode").and_then(Value::as_str).unwrap_or("full") {
-        "full" => Mode::Full,
-        "griffin" => Mode::Griffin { keep, strategy: Strategy::TopK },
-        "griffin-sampling" => {
-            Mode::Griffin { keep, strategy: Strategy::Sampling { seed } }
-        }
-        "topk+sampling" => Mode::Griffin {
-            keep,
-            strategy: Strategy::TopKPlusSampling { seed },
-        },
-        "magnitude" => Mode::Magnitude { keep },
-        "wanda" => Mode::Wanda { keep },
-        other => anyhow::bail!("unknown mode {other:?}"),
-    };
-    let temperature = v
-        .get("temperature")
-        .and_then(Value::as_f64)
-        .unwrap_or(0.0) as f32;
-    let sampler = if temperature <= 0.0 {
-        SamplerSpec::Greedy
-    } else if let Some(k) = v.get("top_k").and_then(Value::as_usize) {
-        SamplerSpec::TopK { k, temperature }
-    } else if let Some(p) = v.get("top_p").and_then(Value::as_f64) {
-        SamplerSpec::TopP { p: p as f32, temperature }
-    } else {
-        SamplerSpec::Temperature(temperature)
-    };
-    let stop_at_eos = v
-        .get("stop_at_eos")
-        .and_then(Value::as_bool)
-        .unwrap_or(true);
-    Ok(GenRequest {
-        id: 0,
-        prompt: tok.encode_with_bos(prompt_text),
-        max_new_tokens: max_new,
-        mode,
-        sampler,
-        seed,
-        stop_at_eos,
-        admitted_at: std::time::Instant::now(),
-    })
+    let spec = api::compat::v1_generate_spec(v)
+        .map_err(|e| anyhow::anyhow!("{}", e.message))?;
+    Ok(spec.to_requests(tok).remove(0))
 }
 
-pub fn response_json(r: &GenResponse) -> Value {
-    obj(vec![
-        ("op", s("generate")),
-        ("id", n(r.id as f64)),
-        ("text", s(&r.text)),
-        (
-            "tokens",
-            Value::Arr(r.tokens.iter().map(|&t| n(t as f64)).collect()),
-        ),
-        (
-            "finish",
-            s(match r.finish {
-                FinishReason::Length => "length",
-                FinishReason::Eos => "eos",
-                FinishReason::ContextFull => "context_full",
-            }),
-        ),
-        (
-            "k_used",
-            r.k_used.map(|k| n(k as f64)).unwrap_or(Value::Null),
-        ),
-        (
-            "timing",
-            obj(vec![
-                ("prefill_ms", n(r.prefill_ms)),
-                ("select_ms", n(r.select_ms)),
-                ("decode_ms", n(r.decode_ms)),
-                ("ttft_ms", n(r.ttft_ms)),
-                ("tokens_per_sec", n(r.tokens_per_sec)),
-            ]),
-        ),
-    ])
-}
-
-fn token_json(id: u64, index: usize, token: i32, text: &str) -> String {
-    json::to_string(&obj(vec![
-        ("event", s("token")),
-        ("id", n(id as f64)),
-        ("index", n(index as f64)),
-        ("token", n(token as f64)),
-        ("text", s(text)),
-    ]))
-}
-
-fn done_json(r: &GenResponse, stream: bool) -> String {
-    let mut v = response_json(r);
-    if stream {
-        if let Value::Obj(ref mut o) = v {
-            o.insert(0, ("event".to_string(), s("done")));
-        }
-    }
-    json::to_string(&v)
-}
-
-fn err_json(code: &str, msg: &str) -> String {
-    json::to_string(&obj(vec![
-        ("op", s("error")),
-        ("code", s(code)),
-        ("message", s(msg)),
-    ]))
+fn send(w: &mut TcpStream, line: &str) -> bool {
+    w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
 }
 
 /// Run the server. Blocks the calling thread with the ENGINE loop (PJRT
@@ -225,12 +139,18 @@ pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
         start_listener(engine, bind, queue_capacity)?;
     eprintln!("griffin server listening on {}", handle.addr);
     let stop = handle.stop.clone();
-    scheduler.serve(
+    let served = scheduler.serve(
         |ev: EngineEvent| forward(&waiters, ev),
         &|| stop.load(Ordering::SeqCst),
-    )?;
+    );
+    // the engine loop is done (clean stop or invariant failure): drop
+    // every waiter's sender so handler threads blocked in rx.recv() get
+    // an Err and answer their clients with engine_dropped instead of
+    // hanging forever. Embedders driving start_listener + serve
+    // themselves should do the same when their serve call returns.
+    waiters.lock().unwrap().clear();
     handle.shutdown();
-    Ok(())
+    served
 }
 
 /// Split construction so tests can drive the engine loop themselves.
@@ -253,6 +173,7 @@ pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
             ("params", n(c.param_count as f64)),
             ("d_ff", n(c.d_ff as f64)),
             ("max_seq", n(c.max_seq as f64)),
+            ("protocol_versions", Value::Arr(vec![n(1.0), n(2.0)])),
         ]))
     };
 
@@ -293,7 +214,7 @@ fn handle_conn(
     stream: TcpStream,
     router: Arc<Router>,
     waiters: Waiters,
-    metrics: Arc<crate::metrics::MetricsRegistry>,
+    metrics: Arc<MetricsRegistry>,
     config_json: String,
     stop: Arc<AtomicBool>,
 ) {
@@ -303,118 +224,258 @@ fn handle_conn(
         Err(_) => return,
     });
     let mut writer = stream;
-    let send = |w: &mut TcpStream, line: &str| -> bool {
-        w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
-    };
-    'conn: for line in reader.lines() {
+    for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
         let v = match json::parse(&line) {
             Err(e) => {
-                if !send(&mut writer,
-                         &err_json("bad_json", &format!("bad json: {e}"))) {
+                let err = ApiError::new(
+                    ErrorCode::BadJson, format!("bad json: {e}"));
+                if !send(&mut writer, &api::error_json(&err, None, false)) {
                     break;
                 }
                 continue;
             }
             Ok(v) => v,
         };
-        match v.get("op").and_then(Value::as_str) {
-            Some("generate") => match parse_generate(&v, &tok) {
-                Err(e) => {
+        let v2 = api::request_version(&v) >= 2;
+        let alive = match api::parse_request(&v) {
+            Err(e) => {
+                // every rejected work-bearing line counts, whatever the
+                // error class (validation, unknown op body, bad version)
+                if matches!(v.get("op").and_then(Value::as_str),
+                            Some("generate") | Some("score"))
+                {
                     metrics.requests_rejected.inc();
-                    if !send(&mut writer,
-                             &err_json("bad_request", &e.to_string())) {
-                        break 'conn;
-                    }
                 }
-                Ok(mut req) => {
-                    let stream_tokens = v
-                        .get("stream")
-                        .and_then(Value::as_bool)
-                        .unwrap_or(false);
-                    req.id = router.fresh_id();
-                    let id = req.id;
-                    let (tx, rx) = channel();
-                    waiters
-                        .lock()
-                        .unwrap()
-                        .insert(id, Waiter { tx, stream: stream_tokens });
-                    match router.admit(req) {
-                        Err(e) => {
-                            waiters.lock().unwrap().remove(&id);
-                            metrics.requests_rejected.inc();
-                            if !send(&mut writer,
-                                     &err_json(e.code(), &e.to_string())) {
-                                break 'conn;
-                            }
-                        }
-                        Ok(_) => {
-                            metrics.requests_admitted.inc();
-                            loop {
-                                match rx.recv() {
-                                    Ok(EngineEvent::Token {
-                                        id, index, token, text,
-                                    }) => {
-                                        if !send(&mut writer, &token_json(
-                                            id, index, token, &text)) {
-                                            break 'conn;
-                                        }
-                                    }
-                                    Ok(EngineEvent::Done(r)) => {
-                                        if !send(&mut writer, &done_json(
-                                            &r, stream_tokens)) {
-                                            break 'conn;
-                                        }
-                                        break;
-                                    }
-                                    Err(_) => {
-                                        let _ = send(&mut writer, &err_json(
-                                            "engine_dropped",
-                                            "engine dropped"));
-                                        break 'conn;
-                                    }
-                                }
-                            }
-                        }
-                    }
+                send(&mut writer, &api::error_json(&e, None, v2))
+            }
+            Ok(Request::Generate(spec)) => handle_generate(
+                &spec, &tok, &router, &waiters, &metrics, &mut writer),
+            Ok(Request::Score(spec)) => handle_score(
+                &spec, &tok, &router, &waiters, &metrics, &mut writer),
+            Ok(Request::Cancel { id }) => {
+                // the waiters map is the in-flight set: present means
+                // admitted and not yet terminal
+                let known = waiters.lock().unwrap().contains_key(&id);
+                if known {
+                    router.request_cancel(id);
                 }
-            },
-            Some("metrics") => {
+                let status = if known { "cancelling" } else { "unknown_id" };
+                send(&mut writer, &api::cancel_ack_json(id, status))
+            }
+            Ok(Request::Health) => send(
+                &mut writer,
+                &api::health_json(
+                    metrics.slots_busy.get(),
+                    metrics.slots_total.get(),
+                    router.len(),
+                    router.score_len(),
+                    router.capacity,
+                ),
+            ),
+            Ok(Request::Metrics) => {
                 let mut m = metrics.to_json();
                 if let Value::Obj(ref mut o) = m {
                     o.push((
                         "queue".to_string(),
                         obj(vec![
                             ("depth", n(router.len() as f64)),
+                            (
+                                "score_depth",
+                                n(router.score_len() as f64),
+                            ),
                             ("capacity", n(router.capacity as f64)),
                         ]),
                     ));
                 }
-                if !send(&mut writer, &json::to_string(&m)) {
-                    break 'conn;
-                }
+                send(&mut writer, &json::to_string(&m))
             }
-            Some("config") => {
-                if !send(&mut writer, &config_json) {
-                    break 'conn;
-                }
-            }
-            Some("shutdown") => {
+            Ok(Request::Config) => send(&mut writer, &config_json),
+            Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 router.wake_all();
                 let _ = send(&mut writer,
                              &json::to_string(&obj(vec![
                                  ("op", s("shutdown")),
                              ])));
+                true
             }
-            _ => {
-                if !send(&mut writer, &err_json("unknown_op", "unknown op"))
-                {
-                    break 'conn;
+        };
+        if !alive {
+            break;
+        }
+    }
+}
+
+/// Drop the waiter entries of a dead connection and auto-cancel their
+/// requests, so a mid-stream disconnect cannot leak waiters map entries
+/// or leave abandoned sequences burning decode ticks.
+fn abandon(router: &Router, waiters: &Waiters, ids: &[u64]) {
+    let mut g = waiters.lock().unwrap();
+    for &id in ids {
+        if g.remove(&id).is_some() {
+            router.request_cancel(id);
+        }
+    }
+}
+
+/// Serve one generate request (single-prompt v1/v2, streaming, or v2
+/// batched). Returns false when the connection died.
+fn handle_generate(
+    spec: &api::GenerateSpec,
+    tok: &Tokenizer,
+    router: &Arc<Router>,
+    waiters: &Waiters,
+    metrics: &MetricsRegistry,
+    writer: &mut TcpStream,
+) -> bool {
+    let reqs = spec.to_requests(tok);
+    let batched = reqs.len() > 1;
+    let (tx, rx) = channel();
+    // index -> (id, terminal result line/value); admission errors fill
+    // their result slot immediately
+    let mut ids: Vec<u64> = Vec::with_capacity(reqs.len());
+    let mut results: Vec<Option<Value>> = vec![None; reqs.len()];
+    let mut outstanding = 0usize;
+    for (i, mut req) in reqs.into_iter().enumerate() {
+        req.id = router.fresh_id();
+        let id = req.id;
+        ids.push(id);
+        waiters.lock().unwrap().insert(
+            id, Waiter { tx: tx.clone(), stream: spec.stream });
+        match router.admit(req) {
+            Err(e) => {
+                waiters.lock().unwrap().remove(&id);
+                metrics.requests_rejected.inc();
+                let err = ApiError::from(&e);
+                if batched {
+                    results[i] = Some(api::respond::error_obj(
+                        &err, Some(id)));
+                } else {
+                    return send(
+                        writer, &api::error_json(&err, None, spec.v2));
                 }
+            }
+            Ok(_) => {
+                metrics.requests_admitted.inc();
+                outstanding += 1;
+            }
+        }
+    }
+    // the waiters map holds the only senders from here on, so `run`'s
+    // teardown (which clears the map once the engine loop exits)
+    // unblocks rx.recv with an Err instead of leaving this thread hung
+    drop(tx);
+    if spec.v2 && spec.stream {
+        // tell the client its id before the first token so cancel can
+        // target the stream from another connection
+        if !send(writer, &api::accepted_json(ids[0])) {
+            abandon(router, waiters, &ids);
+            return false;
+        }
+    }
+    while outstanding > 0 {
+        let ev = match rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => {
+                // engine loop went away; fail whatever is still pending
+                abandon(router, waiters, &ids);
+                let err = ApiError::new(
+                    ErrorCode::EngineDropped, "engine dropped");
+                let _ = send(
+                    writer, &api::error_json(&err, None, spec.v2));
+                return false;
+            }
+        };
+        match ev {
+            EngineEvent::Token { id, index, token, text } => {
+                if spec.stream
+                    && !send(writer, &api::token_json(
+                        id, index, token, &text, spec.v2))
+                {
+                    abandon(router, waiters, &ids);
+                    return false;
+                }
+            }
+            EngineEvent::Done(r) => {
+                outstanding -= 1;
+                if batched {
+                    let i = ids.iter().position(|&x| x == r.id).unwrap();
+                    // embedded rows carry no "v" envelope — only the
+                    // outer batch line does (uniform row schema)
+                    results[i] = Some(api::response_json(&r, false));
+                } else if !send(
+                    writer, &api::done_json(&r, spec.stream, spec.v2))
+                {
+                    abandon(router, waiters, &ids);
+                    return false;
+                }
+            }
+            EngineEvent::Error { id, code, message } => {
+                outstanding -= 1;
+                let err = ApiError::new(code, message);
+                if batched {
+                    let i = ids.iter().position(|&x| x == id).unwrap();
+                    results[i] =
+                        Some(api::respond::error_obj(&err, Some(id)));
+                } else if !send(
+                    writer, &api::error_json(&err, Some(id), spec.v2))
+                {
+                    abandon(router, waiters, &ids);
+                    return false;
+                }
+            }
+            EngineEvent::ScoreDone { .. } => {}
+        }
+    }
+    if batched {
+        let rows =
+            results.into_iter().map(|r| r.expect("result slot")).collect();
+        return send(writer, &api::batch_json(rows));
+    }
+    true
+}
+
+/// Serve one v2 score request. Returns false when the connection died.
+fn handle_score(
+    spec: &api::ScoreSpec,
+    tok: &Tokenizer,
+    router: &Arc<Router>,
+    waiters: &Waiters,
+    metrics: &MetricsRegistry,
+    writer: &mut TcpStream,
+) -> bool {
+    let mut req = spec.to_request(tok);
+    req.id = router.fresh_id();
+    let id = req.id;
+    let (tx, rx) = channel();
+    waiters.lock().unwrap().insert(id, Waiter { tx, stream: false });
+    if let Err(e) = router.admit_score(req) {
+        waiters.lock().unwrap().remove(&id);
+        metrics.requests_rejected.inc();
+        return send(writer, &api::error_json(&ApiError::from(&e), None, true));
+    }
+    metrics.requests_admitted.inc();
+    loop {
+        match rx.recv() {
+            Ok(EngineEvent::ScoreDone { id, nll }) => {
+                return send(writer, &api::score_json(id, &nll));
+            }
+            Ok(EngineEvent::Error { id, code, message }) => {
+                let err = ApiError::new(code, message);
+                return send(
+                    writer, &api::error_json(&err, Some(id), true));
+            }
+            Ok(_) => {}
+            Err(_) => {
+                abandon(router, waiters, &[id]);
+                let err = ApiError::new(
+                    ErrorCode::EngineDropped, "engine dropped");
+                let _ = send(writer, &api::error_json(&err, None, true));
+                return false;
             }
         }
     }
@@ -436,14 +497,17 @@ impl Client {
         })
     }
 
-    fn send(&mut self, req: &Value) -> Result<()> {
+    /// Write one request line (streaming flows read events separately
+    /// with [`Client::recv`]).
+    pub fn send(&mut self, req: &Value) -> Result<()> {
         let line = json::to_string(req);
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Value> {
+    /// Read one response/event line.
+    pub fn recv(&mut self) -> Result<Value> {
         let mut buf = String::new();
         self.reader.read_line(&mut buf)?;
         json::parse(buf.trim())
@@ -488,11 +552,29 @@ impl Client {
             }
         }
     }
+
+    /// v2 cancel: stops the request's token emission and frees its slot
+    /// within one engine tick.
+    pub fn cancel(&mut self, id: u64) -> Result<Value> {
+        self.call(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("cancel")),
+            ("id", n(id as f64)),
+        ]))
+    }
+
+    /// v2 health probe (answered off the engine thread).
+    pub fn health(&mut self) -> Result<Value> {
+        self.call(&obj(vec![("v", n(2.0)), ("op", s("health"))]))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::Mode;
+    use crate::coordinator::selection::Strategy;
+    use crate::sampling::SamplerSpec;
 
     #[test]
     fn parse_generate_modes() {
@@ -564,37 +646,25 @@ mod tests {
     }
 
     #[test]
-    fn error_json_carries_code() {
-        let e = err_json("queue_full", "queue full (capacity 4)");
-        let v = json::parse(&e).unwrap();
-        assert_eq!(v.get("op").unwrap().as_str(), Some("error"));
-        assert_eq!(v.get("code").unwrap().as_str(), Some("queue_full"));
-    }
-
-    #[test]
-    fn stream_event_shapes() {
-        let t = token_json(3, 1, 104, "h");
-        let v = json::parse(&t).unwrap();
-        assert_eq!(v.get("event").unwrap().as_str(), Some("token"));
-        assert_eq!(v.get("index").unwrap().as_usize(), Some(1));
-        let resp = GenResponse {
-            id: 3,
-            tokens: vec![104],
-            text: "h".into(),
-            logprobs: vec![-0.1],
-            finish: FinishReason::Length,
-            k_used: None,
-            prefill_ms: 1.0,
-            select_ms: 0.0,
-            decode_ms: 2.0,
-            ttft_ms: 1.5,
-            tokens_per_sec: 500.0,
-        };
-        let d = json::parse(&done_json(&resp, true)).unwrap();
-        assert_eq!(d.get("event").unwrap().as_str(), Some("done"));
-        assert_eq!(d.get("op").unwrap().as_str(), Some("generate"));
-        let nd = json::parse(&done_json(&resp, false)).unwrap();
-        assert!(nd.get("event").is_none());
-        assert!(nd.get("timing").unwrap().get("ttft_ms").is_some());
+    fn forward_routes_terminal_events() {
+        use std::sync::mpsc::channel;
+        let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = channel();
+        waiters
+            .lock()
+            .unwrap()
+            .insert(5, Waiter { tx, stream: false });
+        forward(
+            &waiters,
+            EngineEvent::Error {
+                id: 5,
+                code: ErrorCode::EngineError,
+                message: "boom".into(),
+            },
+        );
+        assert!(waiters.lock().unwrap().is_empty(),
+                "terminal events remove the waiter");
+        assert!(matches!(rx.recv().unwrap(),
+                         EngineEvent::Error { id: 5, .. }));
     }
 }

@@ -1,0 +1,190 @@
+//! Protocol-level tests for the versioned typed API: the v1 compat
+//! round-trip (acceptance: every legacy mode string lowers to the same
+//! Mode/SamplerSpec the old parser produced), v2 validation, and v1/v2
+//! equivalence. Runtime-free — this file builds and runs with
+//! `--no-default-features` (no PJRT, no artifacts).
+
+use griffin::api::{self, ErrorCode, Request};
+use griffin::coordinator::selection::Strategy;
+use griffin::coordinator::types::Mode;
+use griffin::json;
+use griffin::sampling::SamplerSpec;
+use griffin::tokenizer::Tokenizer;
+
+fn parse(line: &str) -> Result<Request, api::ApiError> {
+    api::parse_request(&json::parse(line).unwrap())
+}
+
+fn lower_v1(line: &str) -> (Mode, SamplerSpec, u64, bool) {
+    let Ok(Request::Generate(spec)) = parse(line) else {
+        panic!("{line} did not parse as generate");
+    };
+    let req = spec.to_requests(&Tokenizer::new()).remove(0);
+    (req.mode, req.sampler, req.seed, req.stop_at_eos)
+}
+
+/// Acceptance: every v1 mode string round-trips through the compat shim
+/// to the same `Mode`/`SamplerSpec` the old inline parser produced.
+/// Expectations are the OLD parser's outputs, written out literally.
+#[test]
+fn v1_mode_strings_round_trip_through_compat_shim() {
+    let cases: Vec<(&str, Mode, SamplerSpec)> = vec![
+        (
+            r#"{"op":"generate","prompt":"x","mode":"full"}"#,
+            Mode::Full,
+            SamplerSpec::Greedy,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","mode":"griffin",
+                "keep":0.75}"#,
+            Mode::Griffin { keep: 0.75, strategy: Strategy::TopK },
+            SamplerSpec::Greedy,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","mode":"griffin-sampling",
+                "keep":0.5,"seed":7}"#,
+            Mode::Griffin {
+                keep: 0.5,
+                strategy: Strategy::Sampling { seed: 7 },
+            },
+            SamplerSpec::Greedy,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","mode":"topk+sampling",
+                "keep":0.5,"seed":9,"temperature":0.8,"top_k":4}"#,
+            Mode::Griffin {
+                keep: 0.5,
+                strategy: Strategy::TopKPlusSampling { seed: 9 },
+            },
+            SamplerSpec::TopK { k: 4, temperature: 0.8 },
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","mode":"magnitude",
+                "keep":0.25}"#,
+            Mode::Magnitude { keep: 0.25 },
+            SamplerSpec::Greedy,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","mode":"wanda","keep":0.5,
+                "temperature":0.9,"top_p":0.95}"#,
+            Mode::Wanda { keep: 0.5 },
+            SamplerSpec::TopP { p: 0.95, temperature: 0.9 },
+        ),
+        // sampler-only variants of the old parser
+        (
+            r#"{"op":"generate","prompt":"x","temperature":0.7}"#,
+            Mode::Full,
+            SamplerSpec::Temperature(0.7),
+        ),
+        (
+            // temperature <= 0 is greedy even with top_k present
+            r#"{"op":"generate","prompt":"x","top_k":5}"#,
+            Mode::Full,
+            SamplerSpec::Greedy,
+        ),
+    ];
+    for (line, want_mode, want_sampler) in cases {
+        let (mode, sampler, _, stop) = lower_v1(line);
+        assert_eq!(mode, want_mode, "mode for {line}");
+        assert_eq!(sampler, want_sampler, "sampler for {line}");
+        assert!(stop, "stop_at_eos defaults true: {line}");
+    }
+}
+
+#[test]
+fn v1_and_v2_lower_to_identical_requests() {
+    let v1 = r#"{"op":"generate","prompt":"hello","max_new_tokens":8,
+                 "mode":"topk+sampling","keep":0.5,"seed":9,
+                 "temperature":0.8,"top_k":4,"stop_at_eos":false}"#;
+    let v2 = r#"{"v":2,"op":"generate","prompt":"hello",
+                 "max_new_tokens":8,
+                 "prune":{"method":"griffin","keep":0.5,
+                          "strategy":"topk+sampling","seed":9},
+                 "sampling":{"temperature":0.8,"top_k":4,"seed":9},
+                 "stop_at_eos":false}"#;
+    let tok = Tokenizer::new();
+    let Ok(Request::Generate(s1)) = parse(v1) else { panic!() };
+    let Ok(Request::Generate(s2)) = parse(v2) else { panic!() };
+    let r1 = s1.to_requests(&tok).remove(0);
+    let r2 = s2.to_requests(&tok).remove(0);
+    assert_eq!(r1.mode, r2.mode);
+    assert_eq!(r1.sampler, r2.sampler);
+    assert_eq!(r1.seed, r2.seed);
+    assert_eq!(r1.prompt, r2.prompt);
+    assert_eq!(r1.max_new_tokens, r2.max_new_tokens);
+    assert_eq!(r1.stop_at_eos, r2.stop_at_eos);
+}
+
+#[test]
+fn admission_validation_is_version_uniform() {
+    // the same bad fields are rejected under both envelopes
+    let pairs = [
+        (
+            r#"{"op":"generate","prompt":"x","mode":"griffin",
+                "keep":1.5}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "prune":{"method":"griffin","keep":1.5}}"#,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","temperature":-1}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "sampling":{"temperature":-1}}"#,
+        ),
+        (
+            r#"{"op":"generate","prompt":"x","temperature":0.5,
+                "top_p":0}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "sampling":{"temperature":0.5,"top_p":0}}"#,
+        ),
+    ];
+    for (v1, v2) in pairs {
+        for line in [v1, v2] {
+            let e = parse(line).unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "line {line}");
+        }
+    }
+    // unknown mode (v1) / unknown method (v2)
+    let e = parse(r#"{"op":"generate","prompt":"x","mode":"zap"}"#)
+        .unwrap_err();
+    assert_eq!(e.code, ErrorCode::InvalidRequest);
+    let e = parse(
+        r#"{"v":2,"op":"generate","prompt":"x",
+            "prune":{"method":"zap"}}"#,
+    )
+    .unwrap_err();
+    assert_eq!(e.code, ErrorCode::InvalidRequest);
+}
+
+#[test]
+fn batched_generate_assigns_one_request_per_prompt() {
+    let Ok(Request::Generate(spec)) = parse(
+        r#"{"v":2,"op":"generate","prompts":["aa","bbb","c"],
+            "max_new_tokens":5,
+            "prune":{"method":"magnitude","keep":0.5}}"#,
+    ) else {
+        panic!()
+    };
+    let reqs = spec.to_requests(&Tokenizer::new());
+    assert_eq!(reqs.len(), 3);
+    // BOS + bytes, per prompt
+    assert_eq!(
+        reqs.iter().map(|r| r.prompt.len()).collect::<Vec<_>>(),
+        vec![3, 4, 2]
+    );
+    for r in &reqs {
+        assert_eq!(r.mode, Mode::Magnitude { keep: 0.5 });
+        assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.id, 0, "ids are assigned at admission, not parse");
+    }
+}
+
+#[test]
+fn protocol_version_gates() {
+    assert_eq!(api::request_version(&json::parse(r#"{"op":"x"}"#).unwrap()), 1);
+    assert_eq!(
+        api::request_version(&json::parse(r#"{"v":2,"op":"x"}"#).unwrap()),
+        2
+    );
+    let e = parse(r#"{"v":7,"op":"generate","prompt":"x"}"#).unwrap_err();
+    assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+}

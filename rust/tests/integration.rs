@@ -2,11 +2,12 @@
 //! server, GRIFFIN semantics through the full AOT + PJRT path.
 //! Skipped (with a notice) when `make artifacts` has not been run.
 
+use griffin::api::ErrorCode;
 use griffin::coordinator::engine::{Engine, Mode};
 use griffin::coordinator::router::Router;
-use griffin::coordinator::scheduler::Scheduler;
+use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
 use griffin::coordinator::selection::Strategy;
-use griffin::coordinator::sequence::GenRequest;
+use griffin::coordinator::sequence::{FinishReason, GenRequest};
 use griffin::test_support::{artifact_path, have_artifacts, pjrt_lock};
 use griffin::tokenizer::Tokenizer;
 use griffin::workload::{corpus, tasks};
@@ -344,6 +345,7 @@ fn fused_decode_sample_matches_host_stepwise() {
                         &mut samp,
                         host_in.as_deref(),
                         pw.as_deref(),
+                        None,
                     )
                     .unwrap();
                 assert!(lps[0] <= 0.0, "logprob must be <= 0");
@@ -581,6 +583,354 @@ fn full_queue_rejects_with_queue_full_code() {
         )
         .unwrap();
     first.join().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn engine_error_is_contained_per_request() {
+    // A request carrying an invalid artifact-dependent config injected
+    // PAST admission (the api layer rejects keep <= 0; a direct router
+    // admit bypasses it) must get an engine_error event while a
+    // concurrently admitted request completes normally — the serve loop
+    // survives (ROADMAP "per-request error containment").
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut bad = GenRequest::greedy(
+        0,
+        prompt_ids(16),
+        4,
+        Mode::Griffin { keep: -1.0, strategy: Strategy::TopK },
+    );
+    bad.stop_at_eos = false;
+    let bad_id = router.admit(bad).unwrap();
+    let mut good = GenRequest::greedy(0, prompt_ids(20), 4,
+                                      Mode::griffin(0.5));
+    good.stop_at_eos = false;
+    let good_id = router.admit(good).unwrap();
+
+    let mut sched = Scheduler::new(e, router.clone());
+    let mut errors: Vec<(u64, ErrorCode)> = Vec::new();
+    let mut dones = Vec::new();
+    loop {
+        let mut sink = |ev: EngineEvent| match ev {
+            EngineEvent::Done(r) => dones.push(r),
+            EngineEvent::Error { id, code, .. } => errors.push((id, code)),
+            _ => {}
+        };
+        let worked = sched.tick(&mut sink).unwrap();
+        if !worked && router.is_empty() && sched.occupied() == 0 {
+            break;
+        }
+    }
+    assert_eq!(errors, vec![(bad_id, ErrorCode::EngineError)],
+               "the poisoned request fails with a structured error");
+    assert_eq!(dones.len(), 1, "the co-tenant request completes");
+    assert_eq!(dones[0].id, good_id);
+    assert_eq!(dones[0].tokens.len(), 4);
+    assert_eq!(sched.engine.metrics.requests_failed.get(), 1);
+    assert_eq!(sched.engine.metrics.requests_completed.get(), 1);
+}
+
+#[test]
+fn cancel_stops_streaming_and_frees_slot_within_one_tick() {
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut q = GenRequest::greedy(0, prompt_ids(16), 10_000, Mode::Full);
+    q.stop_at_eos = false; // would run for ages without the cancel
+    let id = router.admit(q).unwrap();
+    let mut sched = Scheduler::new(e, router.clone());
+
+    // let it stream a few tokens first
+    let mut streamed = 0usize;
+    for _ in 0..4 {
+        let mut sink = |ev: EngineEvent| {
+            if matches!(ev, EngineEvent::Token { .. }) {
+                streamed += 1;
+            }
+        };
+        sched.tick(&mut sink).unwrap();
+    }
+    assert!(streamed >= 4, "request is live and streaming");
+    assert_eq!(sched.occupied(), 1);
+
+    // flag the cancel (handler-thread API) — ONE tick must resolve it:
+    // no further token events, slot freed, cancelled done response
+    router.request_cancel(id);
+    let mut events = Vec::new();
+    let mut sink = |ev: EngineEvent| events.push(ev);
+    sched.tick(&mut sink).unwrap();
+    assert_eq!(sched.occupied(), 0, "slot freed within one tick");
+    assert!(
+        !events.iter().any(|e| matches!(e, EngineEvent::Token { .. })),
+        "token emission stops at the cancel tick"
+    );
+    let done = events.iter().find_map(|e| match e {
+        EngineEvent::Done(r) => Some(r),
+        _ => None,
+    });
+    let done = done.expect("cancelled request emits its done response");
+    assert_eq!(done.id, id);
+    assert_eq!(done.finish, FinishReason::Cancelled);
+    assert_eq!(done.tokens.len(), streamed,
+               "response carries the tokens emitted so far");
+    assert_eq!(sched.engine.metrics.requests_cancelled.get(), 1);
+
+    // cancel of a QUEUED request: dropped with an empty cancelled
+    // response before it ever reaches a slot
+    let mut q2 = GenRequest::greedy(0, prompt_ids(16), 8, Mode::Full);
+    q2.stop_at_eos = false;
+    let id2 = router.admit(q2).unwrap();
+    router.request_cancel(id2);
+    let mut events = Vec::new();
+    let mut sink = |ev: EngineEvent| events.push(ev);
+    sched.tick(&mut sink).unwrap();
+    match &events[..] {
+        [EngineEvent::Done(r)] => {
+            assert_eq!(r.id, id2);
+            assert_eq!(r.finish, FinishReason::Cancelled);
+            assert!(r.tokens.is_empty());
+        }
+        other => panic!("expected one cancelled done, got {other:?}"),
+    }
+    assert!(router.is_empty());
+}
+
+#[test]
+fn fused_wanda_matches_host_stepwise() {
+    // Satellite of the v2 redesign: Wanda's masked full-size override
+    // rides decode_sample_b{B}. Engine-level parity against the host
+    // path (decode_step + DeviceSampler mirror), then a scheduler run
+    // asserting Wanda ticks actually fuse.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    if e.fused_decode_spec(1, None).is_none() {
+        eprintln!("skipping: artifacts predate decode_sample");
+        return;
+    }
+    use griffin::sampling::{argmax, seed_state, DeviceSampler, SamplerSpec};
+    let cap = e
+        .fused_decode_spec(1, None)
+        .and_then(|s| s.sample_topk)
+        .unwrap_or(griffin::sampling::SAMPLE_TOPK);
+    let prompt = prompt_ids(24);
+    let steps = 12;
+    let seed = 31u64;
+    for spec in [
+        SamplerSpec::Greedy,
+        SamplerSpec::TopK { k: 8, temperature: 0.8 },
+    ] {
+        // host reference: stepwise decode with the Wanda override
+        let pre = e.prefill(&[prompt.clone()], false).unwrap();
+        let ffw = e
+            .wanda_weights(&pre.xnorms[0], &pre.znorms[0], 0.5)
+            .unwrap();
+        let first = argmax(&pre.last_logits[0]) as i32;
+        let mut state = pre.state;
+        let mut ds = DeviceSampler::with_cap(spec, seed, cap);
+        let mut cur = vec![first];
+        let mut host_toks = Vec::new();
+        for _ in 0..steps {
+            let logits = e
+                .decode_step(&mut state, &cur, None, Some(&ffw))
+                .unwrap();
+            let t = ds.sample(&logits) as i32;
+            host_toks.push(t);
+            cur[0] = t;
+        }
+
+        // fused run: same masked weights, logits never downloaded
+        let pre2 = e.prefill(&[prompt.clone()], false).unwrap();
+        let mut state2 = pre2.state;
+        let mut samp =
+            e.new_sampling_state(&[(spec, seed_state(seed))]).unwrap();
+        let mut host_in: Option<Vec<i32>> = Some(vec![first]);
+        let mut fused_toks = Vec::new();
+        for _ in 0..steps {
+            let (toks, lps) = e
+                .decode_sample_step(
+                    &mut state2,
+                    &mut samp,
+                    host_in.as_deref(),
+                    None,
+                    Some(&ffw),
+                )
+                .unwrap();
+            assert!(lps[0] <= 0.0);
+            fused_toks.push(toks[0]);
+            host_in = None;
+        }
+        assert_eq!(fused_toks, host_toks,
+                   "fused vs host Wanda mismatch: {spec:?}");
+    }
+
+    // scheduler-level: a Wanda workload must route through fused ticks
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    if e.fused_decode_spec(bmax, None).is_none() {
+        eprintln!("skipping scheduler half: no decode_sample at bmax");
+        return;
+    }
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    for i in 0..bmax {
+        let mut q = GenRequest::greedy(
+            0, prompt_ids(16 + i), 8, Mode::Wanda { keep: 0.5 });
+        q.stop_at_eos = false;
+        router.admit(q).unwrap();
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let m = sched.engine.metrics.clone();
+    let fused0 = m.fused_decode_ticks.get();
+    let ticks0 = m.decode_ticks.get();
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), bmax);
+    let ticks = m.decode_ticks.get() - ticks0;
+    let fused = m.fused_decode_ticks.get() - fused0;
+    assert!(ticks > 0);
+    assert_eq!(fused, ticks,
+               "greedy Wanda ticks must all take the fused path");
+}
+
+#[test]
+fn score_op_reports_continuation_nll() {
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let ids = prompt_ids(40);
+    let (prompt, cont) = ids.split_at(24);
+    let id = router
+        .admit_score(griffin::coordinator::sequence::ScoreRequest {
+            id: 0,
+            prompt: prompt.to_vec(),
+            continuation: cont.to_vec(),
+            mode: Mode::griffin(0.5),
+            admitted_at: std::time::Instant::now(),
+        })
+        .unwrap();
+    let mut sched = Scheduler::new(e, router.clone());
+    let mut scored = None;
+    let mut sink = |ev: EngineEvent| {
+        if let EngineEvent::ScoreDone { id, nll } = ev {
+            scored = Some((id, nll));
+        }
+    };
+    assert!(sched.tick(&mut sink).unwrap(), "score counts as work");
+    let (sid, nll) = scored.expect("score completed in one tick");
+    assert_eq!(sid, id);
+    assert_eq!(nll.len(), cont.len(), "one NLL per continuation token");
+    assert!(nll.iter().all(|&x| x >= 0.0), "NLLs are non-negative");
+    assert!(router.is_empty());
+}
+
+#[test]
+fn server_v2_round_trip() {
+    // v2 over TCP: health, typed generate (prune + sampling axes),
+    // batched generate, score, structured validation errors, and an
+    // unknown-id cancel ack.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{self, n, obj, s, Value};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+
+        let h = c.health().unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert!(h.get("slots").unwrap().get("total").is_some());
+
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins")),
+                ("max_new_tokens", n(6.0)),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.5)),
+                        ("strategy", s("topk")),
+                    ]),
+                ),
+                (
+                    "sampling",
+                    obj(vec![
+                        ("temperature", n(0.8)),
+                        ("top_k", n(4.0)),
+                        ("seed", n(7.0)),
+                    ]),
+                ),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+        assert!(r.get("k_used").unwrap().as_usize().is_some());
+
+        // batched generate: one line back, per-prompt results in order
+        let b = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                (
+                    "prompts",
+                    Value::Arr(vec![s("the quiet river"), s("a deep lake")]),
+                ),
+                ("max_new_tokens", n(4.0)),
+            ]))
+            .unwrap();
+        let results = b.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for row in results {
+            assert_eq!(row.get("op").unwrap().as_str(), Some("generate"));
+        }
+
+        // score: teacher-forced NLLs + perplexity
+        let sc = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("score")),
+                ("prompt", s("the quiet river joins")),
+                ("continuation", s(" the deep lake")),
+            ]))
+            .unwrap();
+        assert_eq!(sc.get("op").unwrap().as_str(), Some("score"));
+        let nll = sc.get("nll").unwrap().as_arr().unwrap();
+        assert_eq!(nll.len(), " the deep lake".len());
+        assert!(sc.get("ppl").unwrap().as_f64().unwrap() > 0.0);
+
+        // admission-time validation: structured invalid_request, engine
+        // untouched
+        let bad = c
+            .call(&json::parse(
+                r#"{"v":2,"op":"generate","prompt":"x",
+                    "prune":{"method":"griffin","keep":0.0}}"#,
+            ).unwrap())
+            .unwrap();
+        assert_eq!(bad.get("op").unwrap().as_str(), Some("error"));
+        assert_eq!(bad.get("code").unwrap().as_str(),
+                   Some("invalid_request"));
+
+        // cancel of an unknown id acks instead of erroring mid-protocol
+        let ack = c.cancel(999_999).unwrap();
+        assert_eq!(ack.get("status").unwrap().as_str(),
+                   Some("unknown_id"));
+
+        // v1 line on the same connection still works (compat shim)
+        let r1 = c.generate("the quiet river joins", 4, "griffin").unwrap();
+        assert_eq!(r1.get("op").unwrap().as_str(), Some("generate"));
+        assert!(r1.get("v").is_none(), "v1 replies carry no version tag");
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
     handle.shutdown();
 }
 
