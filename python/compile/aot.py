@@ -138,6 +138,67 @@ class Emitter:
         self.emit(f"prefill_b{B}_s{S}", fn, arg_specs, inputs, outputs,
                   {"kind": "prefill", "batch": B, "seq": S})
 
+    def emit_prefill_sample(self, B, S):
+        """Admission prefill: last-token logits only + on-device first
+        token sampling — the [B, S, V] logits never cross the host
+        boundary (kind recorded so the rust engine can route by need;
+        score_prompt paths keep using the full `prefill`)."""
+        cfg, names = self.cfg, self.param_names
+        up = self.use_pallas
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            tokens, lengths, temp, topk, rng = args[len(names):]
+            return model.prefill_sample(
+                cfg, params, tokens, lengths, temp, topk, rng, up)
+
+        s_specs, s_inputs = self._sampling_io(B)
+        arg_specs = (self.param_specs_args(names)
+                     + [spec((B, S), jnp.int32), spec((B,), jnp.int32)]
+                     + s_specs)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("tokens", (B, S), I32),
+                     io_entry("lengths", (B,), I32)] + s_inputs)
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        outputs = [
+            io_entry("token", (B,), I32),
+            io_entry("logprob", (B,)),
+            io_entry("kcache", cshape),
+            io_entry("vcache", cshape),
+            io_entry("stats", (cfg.n_layers, B, cfg.d_ff)),
+            io_entry("xnorms", (cfg.n_layers, B, cfg.d_model)),
+            io_entry("znorms", (cfg.n_layers, B, cfg.d_ff)),
+            io_entry("rng", (B,), I32),
+        ]
+        self.emit(f"prefill_sample_b{B}_s{S}", fn, arg_specs, inputs,
+                  outputs,
+                  {"kind": "prefill_sample", "batch": B, "seq": S,
+                   "sample_topk": model.SAMPLE_TOPK})
+
+    def emit_splice(self, Bs, Bd):
+        """Device-side KV admission splice from a freshly prefilled
+        [L, Bs, ...] cache into slot rows of the persistent [L, Bd, ...]
+        decode state (the continuous scheduler's pool always sits at the
+        largest compiled batch bucket, so only dst = bmax is emitted)."""
+        def fn(dk, dv, sk, sv, idx, take):
+            return model.splice_kv(dk, dv, sk, sv, idx, take)
+
+        dspec, sspec = self.cache_spec(Bd), self.cache_spec(Bs)
+        arg_specs = [dspec, dspec, sspec, sspec,
+                     spec((Bd,), jnp.int32), spec((Bd,), jnp.int32)]
+        inputs = [
+            io_entry("dst_kcache", dspec.shape),
+            io_entry("dst_vcache", dspec.shape),
+            io_entry("src_kcache", sspec.shape),
+            io_entry("src_vcache", sspec.shape),
+            io_entry("src_idx", (Bd,), I32),
+            io_entry("take", (Bd,), I32),
+        ]
+        outputs = [io_entry("kcache", dspec.shape),
+                   io_entry("vcache", dspec.shape)]
+        self.emit(f"splice_b{Bs}_b{Bd}", fn, arg_specs, inputs, outputs,
+                  {"kind": "splice", "src_batch": Bs, "batch": Bd})
+
     def emit_decode(self, B):
         cfg, names = self.cfg, self.param_names
 
@@ -391,6 +452,7 @@ class Emitter:
             for S in cfg.prefill_buckets:
                 if S <= cfg.max_seq:
                     self.emit_prefill(B, S)
+                    self.emit_prefill_sample(B, S)
             self.emit_decode(B)
             self.emit_decode_sample(B)
             bks = ks if (B == 1 and full_sweep) else [k_half]
@@ -398,6 +460,11 @@ class Emitter:
                 if K < cfg.d_ff:
                     self.emit_decode_pruned(B, K)
                     self.emit_decode_pruned_sample(B, K)
+        # admission splices target the persistent decode pool, which the
+        # continuous scheduler sizes to the LARGEST compiled batch bucket
+        bmax = max(cfg.batch_buckets)
+        for B in cfg.batch_buckets:
+            self.emit_splice(B, bmax)
         for K in ks:
             if K < cfg.d_ff:
                 self.emit_gather(K)

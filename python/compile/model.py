@@ -10,6 +10,16 @@ Executable kinds (see DESIGN.md §1):
                   statistic s per FF block (paper eq. 6) and the Wanda
                   input norms, so Layer 3 can run any selection strategy
                   without touching python.
+  prefill_sample  the prompt phase reduced for ADMISSION: only the
+                  last-token hidden row goes through the LM head (the
+                  [B, S, V] prompt logits are never materialized) and the
+                  first generated token is sampled on device through the
+                  fused-sampling ABI. Callers that need per-position
+                  prompt logits (score_prompt) must use `prefill`.
+  splice_kv       device-side KV admission splice: copy freshly prefilled
+                  KV rows (a [L, Bsrc, ...] cache) into chosen slot rows
+                  of the persistent decode state (a [L, Bdst, ...] cache)
+                  without staging either cache through the host.
   decode          one full-model generation step with device-resident KV.
   decode_pruned   one generation step using gathered expert weights of FF
                   width k (the GRIFFIN generation phase, paper §4.2).
@@ -175,19 +185,13 @@ def masked_flock_stat(z, lengths, use_pallas: bool):
 # prefill
 # ---------------------------------------------------------------------------
 
-def prefill(cfg: ModelConfig, params: Params, tokens, lengths,
-            use_pallas: bool = False):
-    """Prompt phase over tokens [B, S] (i32), lengths [B] (i32).
+def _prefill_body(cfg: ModelConfig, params: Params, tokens, lengths,
+                  use_pallas: bool = False):
+    """Shared prompt-phase trunk of `prefill` / `prefill_sample`.
 
-    Returns:
-      logits  [B, S, V]
-      kcache  [L, B, H, Smax, dh]   (positions [0, S) filled)
-      vcache  [L, B, H, Smax, dh]
-      stats   [L, B, F]   GRIFFIN statistic s per FF block (eq. 6)
-      xnorms  [L, B, D]   column l2-norms of each FF input (Adaptive-Wanda
-                          scores for W_1/W_g)
-      znorms  [L, B, F]   column l2-norms of the raw FF activations Z
-                          (Adaptive-Wanda scores for W_2)
+    Returns (x, kcache, vcache, stats, xnorms, znorms) where x is the
+    pre-final-norm hidden state [B, S, D] — the two entry points differ
+    only in how much of it they push through the LM head.
     """
     B, S = tokens.shape
     L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
@@ -232,10 +236,74 @@ def prefill(cfg: ModelConfig, params: Params, tokens, lengths,
         zm = z * valid[..., None]
         znorms.append(jnp.sqrt(jnp.sum(zm * zm, axis=1)))  # [B, F]
 
+    return (x, kcache, vcache, jnp.stack(stats), jnp.stack(xnorms),
+            jnp.stack(znorms))
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, lengths,
+            use_pallas: bool = False):
+    """Prompt phase over tokens [B, S] (i32), lengths [B] (i32).
+
+    Returns:
+      logits  [B, S, V]
+      kcache  [L, B, H, Smax, dh]   (positions [0, S) filled)
+      vcache  [L, B, H, Smax, dh]
+      stats   [L, B, F]   GRIFFIN statistic s per FF block (eq. 6)
+      xnorms  [L, B, D]   column l2-norms of each FF input (Adaptive-Wanda
+                          scores for W_1/W_g)
+      znorms  [L, B, F]   column l2-norms of the raw FF activations Z
+                          (Adaptive-Wanda scores for W_2)
+    """
+    x, kcache, vcache, stats, xnorms, znorms = _prefill_body(
+        cfg, params, tokens, lengths, use_pallas)
     x = rmsnorm(x, params["ln_f"])
     logits = x @ params["head"].T
-    return (logits, kcache, vcache, jnp.stack(stats), jnp.stack(xnorms),
-            jnp.stack(znorms))
+    return logits, kcache, vcache, stats, xnorms, znorms
+
+
+def prefill_sample(cfg: ModelConfig, params: Params, tokens, lengths,
+                   temp, topk, rng, use_pallas: bool = False):
+    """Admission prompt phase: last-token logits only, first token
+    sampled on device (the fused-sampling ABI, see `sample_tokens`).
+
+    Only each sequence's last real prompt row (lengths[b] - 1) goes
+    through the LM head, so the [B, S, V] logits tensor of `prefill` is
+    never materialized — the host downloads O(B) sampling outputs plus
+    the selection statistics instead of O(B*S*V) logits. Callers that
+    need per-position prompt logits (score_prompt) must route to
+    `prefill` instead; this variant cannot serve them.
+
+    Returns (token i32[B], logprob f32[B], kcache, vcache, stats,
+    xnorms, znorms, rng i32[B]).
+    """
+    B, _ = tokens.shape
+    x, kcache, vcache, stats, xnorms, znorms = _prefill_body(
+        cfg, params, tokens, lengths, use_pallas)
+    last = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    xl = x[jnp.arange(B), last]  # [B, D]
+    xl = rmsnorm(xl, params["ln_f"])
+    logits = xl @ params["head"].T  # [B, V]
+    tok, lp, rng = sample_tokens(logits, temp, topk, rng)
+    return tok, lp, kcache, vcache, stats, xnorms, znorms, rng
+
+
+def splice_kv(dst_k, dst_v, src_k, src_v, src_idx, take):
+    """Device-side KV admission splice (dynamic-update-slice across batch
+    buckets): for each destination slot b, overwrite its KV row with the
+    gathered source row `src_idx[b]` when `take[b] != 0`, else keep the
+    resident row. Replaces the host-staged splice (download + re-upload
+    of BOTH caches) with an O(Bdst) index upload.
+
+    dst_* [L, Bd, H, Smax, dh]; src_* [L, Bs, H, Smax, dh];
+    src_idx i32[Bd]; take i32[Bd]. Returns (kcache, vcache) at the
+    destination shape. Out-of-range src_idx values are clamped (callers
+    pass 0 for untaken slots).
+    """
+    idx = jnp.clip(src_idx, 0, src_k.shape[1] - 1)
+    g_k = jnp.take(src_k, idx, axis=1)
+    g_v = jnp.take(src_v, idx, axis=1)
+    m = (take > 0)[None, :, None, None, None]
+    return jnp.where(m, g_k, dst_k), jnp.where(m, g_v, dst_v)
 
 
 # ---------------------------------------------------------------------------

@@ -244,6 +244,111 @@ class TestFusedSampling:
                                      "temp", "topk", "rng"]
 
 
+class TestDeviceAdmission:
+    """The device-resident admission path: prefill_sample (last-token
+    logits + on-device first-token sampling) and splice_kv (KV admission
+    splice across batch buckets). The rust engine routes admissions
+    through these executables when the manifest provides them, with the
+    host-staged path as fallback — these tests pin the semantics and the
+    emitted ABI both sides rely on."""
+
+    def test_splice_kv_places_rows_and_leaves_others(self):
+        rs = np.random.RandomState(0)
+        L, H, S, dh = 2, 2, 4, 3
+        Bs, Bd = 2, 3
+        dst_k = jnp.asarray(rs.randn(L, Bd, H, S, dh), jnp.float32)
+        dst_v = jnp.asarray(rs.randn(L, Bd, H, S, dh), jnp.float32)
+        src_k = jnp.asarray(rs.randn(L, Bs, H, S, dh), jnp.float32)
+        src_v = jnp.asarray(rs.randn(L, Bs, H, S, dh), jnp.float32)
+        # slot 0 <- src row 1, slot 1 untouched, slot 2 <- src row 0
+        idx = jnp.array([1, 0, 0], jnp.int32)
+        take = jnp.array([1, 0, 1], jnp.int32)
+        nk, nv = model.splice_kv(dst_k, dst_v, src_k, src_v, idx, take)
+        np.testing.assert_array_equal(np.asarray(nk[:, 0]),
+                                      np.asarray(src_k[:, 1]))
+        np.testing.assert_array_equal(np.asarray(nv[:, 0]),
+                                      np.asarray(src_v[:, 1]))
+        np.testing.assert_array_equal(np.asarray(nk[:, 1]),
+                                      np.asarray(dst_k[:, 1]))
+        np.testing.assert_array_equal(np.asarray(nv[:, 1]),
+                                      np.asarray(dst_v[:, 1]))
+        np.testing.assert_array_equal(np.asarray(nk[:, 2]),
+                                      np.asarray(src_k[:, 0]))
+        # out-of-range src_idx on an untaken slot must not fault (the
+        # rust side pads untaken lanes with 0, but clamping is the
+        # contract either way)
+        idx2 = jnp.array([5, 0, 0], jnp.int32)
+        nk2, _ = model.splice_kv(dst_k, dst_v, src_k, src_v, idx2,
+                                 jnp.array([0, 0, 0], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(nk2), np.asarray(dst_k))
+
+    def test_prefill_sample_matches_prefill(self):
+        """Greedy prefill_sample == argmax of prefill's last-token rows,
+        and every shared output (KV, stats, norms) is identical."""
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        B, S = 2, 16
+        toks = jnp.asarray(
+            np.random.RandomState(3).randint(0, 255, (B, S)), jnp.int32)
+        lens = jnp.array([16, 10], jnp.int32)
+        logits, kc, vc, stats, xn, zn = model.prefill(
+            cfg, params, toks, lens)
+        temp = jnp.zeros(B, jnp.float32)
+        topk = jnp.ones(B, jnp.int32)
+        rng = jnp.array([1, 2], jnp.int32)
+        tok, lp, kc2, vc2, st2, xn2, zn2, rng2 = model.prefill_sample(
+            cfg, params, toks, lens, temp, topk, rng)
+        want = [int(np.argmax(np.asarray(logits)[b, int(lens[b]) - 1]))
+                for b in range(B)]
+        assert np.asarray(tok).tolist() == want
+        # logprob is log_softmax of the last-token row at the chosen id
+        for b in range(B):
+            row = jax.nn.log_softmax(logits[b, int(lens[b]) - 1])
+            np.testing.assert_allclose(
+                float(lp[b]), float(row[int(tok[b])]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(kc2), np.asarray(kc))
+        np.testing.assert_allclose(np.asarray(vc2), np.asarray(vc))
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(stats))
+        np.testing.assert_allclose(np.asarray(xn2), np.asarray(xn))
+        np.testing.assert_allclose(np.asarray(zn2), np.asarray(zn))
+        # the RNG advanced once per lane (data-independent stream)
+        assert not np.array_equal(np.asarray(rng), np.asarray(rng2))
+
+    def test_emitter_writes_admission_executables(self, tmp_path):
+        """Artifact-free end-to-end: the emitter lowers the admission
+        executables and records the ABI the rust runtime expects."""
+        cfg = configs.get("tiny-swiglu")
+        em = aot.Emitter(cfg, str(tmp_path))
+        s_min = min(cfg.prefill_buckets)
+        em.emit_prefill_sample(1, s_min)
+        em.emit_splice(1, 4)
+
+        e = em.executables[f"prefill_sample_b1_s{s_min}"]
+        assert e["kind"] == "prefill_sample"
+        assert e["sample_topk"] == model.SAMPLE_TOPK
+        in_names = [i["name"] for i in e["inputs"]]
+        assert in_names[:len(em.param_names)] == em.param_names
+        assert in_names[-5:] == ["tokens", "lengths", "temp", "topk",
+                                 "rng"]
+        out_names = [o["name"] for o in e["outputs"]]
+        assert out_names == ["token", "logprob", "kcache", "vcache",
+                             "stats", "xnorms", "znorms", "rng"]
+
+        sp = em.executables["splice_b1_b4"]
+        assert sp["kind"] == "splice"
+        assert sp["src_batch"] == 1 and sp["batch"] == 4
+        in_names = [i["name"] for i in sp["inputs"]]
+        assert in_names == ["dst_kcache", "dst_vcache", "src_kcache",
+                            "src_vcache", "src_idx", "take"]
+        assert [o["name"] for o in sp["outputs"]] == ["kcache", "vcache"]
+        # dst rows sit at batch 4, src at batch 1
+        assert sp["inputs"][0]["shape"][1] == 4
+        assert sp["inputs"][2]["shape"][1] == 1
+        for e in em.executables.values():
+            with open(os.path.join(em.dir, e["file"])) as f:
+                assert f.read(9) == "HloModule", e["file"]
+
+
 class TestHloText:
     def test_lowering_keeps_unused_params(self):
         """keep_unused contract: every emitted executable's HLO has

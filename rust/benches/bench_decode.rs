@@ -3,13 +3,21 @@
 //! Measures, per model:
 //!   - prefill latency per prompt bucket
 //!   - single decode step: full vs GRIFFIN-pruned at each compiled k
+//!     (the paper's headline speedup; most visible on FF-dominated
+//!     configs like wide-swiglu — the tiny configs understate it)
 //!   - end-to-end generation P+G: full / magnitude / griffin
-//!   - fused-scan vs stepwise decode (L3 overhead quantification)
+//!   - fused-scan vs stepwise decode (L3 dispatch-overhead
+//!     quantification)
 //!
 //! Run: cargo bench --bench bench_decode [-- <model>]
+//! (default model: small-swiglu; self-skips without artifacts)
+//!
+//! Output: one `bench_harness` row per scenario + a CSV appended to
+//! results/bench_decode_<model>.csv. Scenario-by-scenario reading
+//! guide: docs/benchmarks.md.
 
 use griffin::bench_harness::{bench_for, Reporter};
-use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::engine::{Engine, Mode, PrefillLogits};
 use griffin::coordinator::sequence::GenRequest;
 use griffin::coordinator::selection::Strategy;
 use griffin::test_support::{artifact_path, have_artifacts};
@@ -40,7 +48,7 @@ fn main() {
             2000.0,
             20,
             || {
-                engine.prefill(std::slice::from_ref(&prompt), false)
+                engine.prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
                     .unwrap();
             },
         ));
@@ -48,14 +56,16 @@ fn main() {
 
     // -- single decode step: full vs pruned k sweep -----------------------
     let prompt = tasks::lm_windows(5, 1, 64).pop().unwrap();
-    let pre = engine.prefill(std::slice::from_ref(&prompt), false).unwrap();
+    let pre = engine
+        .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
+        .unwrap();
     let idx_for = |k: usize| -> Vec<Vec<i32>> {
         griffin::coordinator::selection::select_experts(
             &pre.stats[0], k, Strategy::TopK)
     };
     {
         let mut state = engine
-            .prefill(std::slice::from_ref(&prompt), false)
+            .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
             .unwrap()
             .state;
         let toks = vec![65i32];
@@ -69,7 +79,7 @@ fn main() {
         }
         let pruned = engine.gather(&idx_for(k)).unwrap();
         let mut state = engine
-            .prefill(std::slice::from_ref(&prompt), false)
+            .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
             .unwrap()
             .state;
         let toks = vec![65i32];
@@ -94,7 +104,7 @@ fn main() {
         let spec = SamplerSpec::TopK { k: 8, temperature: 0.8 };
         {
             let mut state = engine
-                .prefill(std::slice::from_ref(&prompt), false)
+                .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
                 .unwrap()
                 .state;
             let toks = vec![65i32];
@@ -109,7 +119,7 @@ fn main() {
         }
         {
             let mut state = engine
-                .prefill(std::slice::from_ref(&prompt), false)
+                .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
                 .unwrap()
                 .state;
             let mut samp = engine
@@ -129,7 +139,7 @@ fn main() {
         if engine.fused_decode_spec(1, Some(k)).is_some() {
             let pruned = engine.gather(&idx_for(k)).unwrap();
             let mut state = engine
-                .prefill(std::slice::from_ref(&prompt), false)
+                .prefill(std::slice::from_ref(&prompt), PrefillLogits::LastToken)
                 .unwrap()
                 .state;
             let mut samp = engine

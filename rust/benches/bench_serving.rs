@@ -2,7 +2,8 @@
 //! coordinator level — batch-bucket scaling, plus the wave-vs-continuous
 //! comparison on a mixed-length workload).
 //!
-//! Two sections:
+//! Five sections (scenario-by-scenario reading guide and the expected
+//! shape of each number: docs/benchmarks.md):
 //!   * bucket scaling (`wave_b{b}_*`): run-to-completion batches through
 //!     `Engine::generate_batch` at each compiled batch bucket — this is
 //!     the only path that actually exercises `decode_b{b}` for b < bmax;
@@ -12,8 +13,20 @@
 //!     every short sequence hostage until the straggler finishes; the
 //!     slot scheduler retires short sequences immediately and back-fills
 //!     their slots from the queue, so aggregate tokens/sec goes up.
+//!   * fused vs host decode ticks (`cont_mixed_{fused,host}_topk`):
+//!     identical seeded top-k workload, `fused_enabled` flipped —
+//!     isolates the per-tick logits-download + host-sampling cost.
+//!   * v2 keep sweep (`v2_keep0.*`): mixed per-request keeps through
+//!     the real `api::parse_request` admission path; shows bucket
+//!     snapping + bucket-aware batching at B>1.
+//!   * admission cost (`admit_{fused,host}_admit`): admission-dominated
+//!     workload with `fused_admission` flipped — isolates the
+//!     admission boundary cost and reports admission bytes/request
+//!     from `admission_bytes_to_{device,host}`.
 //!
 //! Run: cargo bench --bench bench_serving [-- <model>]
+//! (default model: tiny-swiglu; self-skips without artifacts; CSV is
+//! appended to results/bench_serving_<model>.csv)
 
 use std::sync::Arc;
 
@@ -331,6 +344,61 @@ fn main() {
             );
             rep.add(summarize(name, samples));
         }
+    }
+
+    // ------------------------------------------------------------------
+    // scenario 5: ADMISSION boundary cost — device-resident vs
+    // host-staged, on an admission-dominated workload (2 tokens per
+    // request, so nearly every tick back-fills). Identical workload both
+    // times; only `fused_admission` flips, so the delta isolates the
+    // admission host-boundary cost (prompt-logits download + host KV
+    // splice staging) from everything else. The per-request admission
+    // bytes come straight from `admission_bytes_to_{device,host}`.
+    // ------------------------------------------------------------------
+    {
+        let have_admit = sched.engine.can_prefill_fused(1)
+            && sched.engine.splice_spec(bmax, bmax).is_some();
+        if !have_admit {
+            eprintln!("skipping admission scenario: artifacts predate \
+                       the admission ABI");
+        }
+        for (label, fused) in [("fused_admit", true), ("host_admit", false)]
+        {
+            if !have_admit {
+                break;
+            }
+            sched.fused_admission = fused;
+            let m = sched.engine.metrics.clone();
+            let (up0, down0, adm0) = (
+                m.admission_bytes_to_device.get(),
+                m.admission_bytes_to_host.get(),
+                m.fused_admissions.get(),
+            );
+            let mut samples = Vec::new();
+            let mut served = 0u64;
+            for _ in 0..3 {
+                for mut q in mixed_reqs(&base_trace, Mode::Full) {
+                    q.max_new_tokens = 2;
+                    router.admit(q).unwrap();
+                    served += 1;
+                }
+                let t = std::time::Instant::now();
+                let responses = sched.run_until_idle().unwrap();
+                assert_eq!(responses.len(), base_trace.len());
+                samples.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            let up = m.admission_bytes_to_device.get() - up0;
+            let down = m.admission_bytes_to_host.get() - down0;
+            println!(
+                "  => {label}: {:.1} KB up / {:.1} KB down per admitted \
+                 request ({} fused admissions)",
+                up as f64 / served as f64 / 1e3,
+                down as f64 / served as f64 / 1e3,
+                m.fused_admissions.get() - adm0
+            );
+            rep.add(summarize(&format!("admit_{label}"), &samples));
+        }
+        sched.fused_admission = true;
     }
 
     println!(

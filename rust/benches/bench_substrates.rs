@@ -1,9 +1,13 @@
 //! Bench: host-side substrate hot paths — selection (top-k over s),
 //! sampling, JSON codec, rouge scoring. These quantify the paper's
 //! "negligible overhead" claim for selection (§1, §5.2) at the host level
-//! and guard against L3 becoming the bottleneck.
+//! and guard against L3 becoming the bottleneck: every row here should
+//! stay orders of magnitude under a bench_decode decode step.
 //!
 //! Run: cargo bench --bench bench_substrates
+//! (artifact-free — this is the bench the CI substrate job bitrot-
+//! guards; CSV lands in results/bench_substrates.csv. Reading guide:
+//! docs/benchmarks.md)
 
 use griffin::bench_harness::{bench, Reporter};
 use griffin::coordinator::selection::{self, Strategy};

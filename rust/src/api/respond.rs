@@ -14,9 +14,12 @@ fn v2_wrap(mut v: Value) -> Value {
     v
 }
 
-/// The response body of one completed generation.
-pub fn response_json(r: &GenResponse, v2: bool) -> Value {
-    let body = obj(vec![
+/// One generation's response fields. `v2_schema` selects the v2 row
+/// shape (adds the `prune` provenance object); it is independent of the
+/// `"v"` envelope, which only [`response_json`] applies — batched v2
+/// rows use the schema WITHOUT the per-row envelope.
+fn response_body(r: &GenResponse, v2_schema: bool) -> Value {
+    let mut fields = vec![
         ("op", s("generate")),
         ("id", n(r.id as f64)),
         ("text", s(&r.text)),
@@ -29,22 +32,60 @@ pub fn response_json(r: &GenResponse, v2: bool) -> Value {
             "k_used",
             r.k_used.map(|k| n(k as f64)).unwrap_or(Value::Null),
         ),
-        (
-            "timing",
-            obj(vec![
-                ("prefill_ms", n(r.prefill_ms)),
-                ("select_ms", n(r.select_ms)),
-                ("decode_ms", n(r.decode_ms)),
-                ("ttft_ms", n(r.ttft_ms)),
-                ("tokens_per_sec", n(r.tokens_per_sec)),
-            ]),
-        ),
-    ]);
+    ];
+    if v2_schema {
+        if let Some(sel) = r.selection {
+            fields.push((
+                "prune",
+                obj(vec![
+                    ("method", s(sel.method)),
+                    (
+                        "strategy",
+                        sel.strategy.map(s).unwrap_or(Value::Null),
+                    ),
+                    (
+                        "seed",
+                        sel.seed
+                            .map(|x| n(x as f64))
+                            .unwrap_or(Value::Null),
+                    ),
+                ]),
+            ));
+        }
+    }
+    fields.push((
+        "timing",
+        obj(vec![
+            ("prefill_ms", n(r.prefill_ms)),
+            ("select_ms", n(r.select_ms)),
+            ("decode_ms", n(r.decode_ms)),
+            ("ttft_ms", n(r.ttft_ms)),
+            ("tokens_per_sec", n(r.tokens_per_sec)),
+        ]),
+    ));
+    obj(fields)
+}
+
+/// The response body of one completed generation. v2 responses carry
+/// the `"v"` envelope and the `prune` provenance object (method /
+/// strategy / strategy seed) so reproducibility audits can re-derive
+/// the served expert selection; v1 bodies stay byte-compatible with
+/// the pre-v2 server.
+pub fn response_json(r: &GenResponse, v2: bool) -> Value {
+    let body = response_body(r, v2);
     if v2 {
         v2_wrap(body)
     } else {
         body
     }
+}
+
+/// One embedded row of a batched v2 `results` array: the v2 row schema
+/// (including `prune` provenance) WITHOUT the per-row `"v"` envelope —
+/// only the outer batch line is versioned (uniform row schema). Batched
+/// generate is a v2-only surface, so there is no v1 variant.
+pub fn response_row_json(r: &GenResponse) -> Value {
+    response_body(r, true)
 }
 
 /// Final line of a generate exchange (streaming adds the done event tag).
@@ -170,6 +211,7 @@ mod tests {
             logprobs: vec![-0.1],
             finish: FinishReason::Length,
             k_used: None,
+            selection: None,
             prefill_ms: 1.0,
             select_ms: 0.0,
             decode_ms: 2.0,
@@ -208,6 +250,58 @@ mod tests {
         let v = json::parse(&error_json(&e, None, false)).unwrap();
         assert!(v.get("id").is_none());
         assert!(v.get("v").is_none());
+    }
+
+    #[test]
+    fn v2_surfaces_selection_provenance() {
+        use crate::coordinator::types::SelectionInfo;
+        let mut r = resp();
+        r.k_used = Some(128);
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("sampling"),
+            seed: Some(7),
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let p = d.get("prune").expect("v2 carries prune provenance");
+        assert_eq!(p.get("method").unwrap().as_str(), Some("griffin"));
+        assert_eq!(p.get("strategy").unwrap().as_str(), Some("sampling"));
+        assert_eq!(p.get("seed").unwrap().as_usize(), Some(7));
+        // deterministic top-k: strategy present, seed null
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("topk"),
+            seed: None,
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert!(matches!(d.get("prune").unwrap().get("seed"),
+                         Some(Value::Null)));
+        // v1 bodies stay byte-compatible: no prune object ever
+        let d1 = json::parse(&done_json(&r, false, false)).unwrap();
+        assert!(d1.get("prune").is_none());
+        // full model: nothing to audit, no prune object
+        r.selection = None;
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert!(d.get("prune").is_none());
+    }
+
+    #[test]
+    fn batched_rows_keep_provenance_without_envelope() {
+        use crate::coordinator::types::SelectionInfo;
+        let mut r = resp();
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("topk"),
+            seed: None,
+        });
+        let row = response_row_json(&r);
+        assert!(row.get("v").is_none(),
+                "embedded rows carry no per-row envelope");
+        assert_eq!(
+            row.get("prune").unwrap().get("method").unwrap().as_str(),
+            Some("griffin"),
+            "batched rows must not lose the provenance object"
+        );
     }
 
     #[test]

@@ -43,9 +43,13 @@ pub struct ExecutableSpec {
     pub seq: Option<usize>,
     pub k: Option<usize>,
     pub gen: Option<usize>,
-    /// decode_sample*: static top-k truncation bucket compiled into the
-    /// fused sampler (model.SAMPLE_TOPK); per-slot k is clamped to it
+    /// decode_sample* / prefill_sample*: static top-k truncation bucket
+    /// compiled into the fused sampler (model.SAMPLE_TOPK); per-slot k
+    /// is clamped to it
     pub sample_topk: Option<usize>,
+    /// splice_b{src}_b{dst}: source batch bucket (the freshly prefilled
+    /// cache); `batch` holds the destination (decode-pool) bucket
+    pub src_batch: Option<usize>,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
 }
@@ -185,6 +189,9 @@ impl Manifest {
                     sample_topk: e
                         .get("sample_topk")
                         .and_then(Value::as_usize),
+                    src_batch: e
+                        .get("src_batch")
+                        .and_then(Value::as_usize),
                     inputs: io_list(req(e, "inputs")?)?,
                     outputs: io_list(req(e, "outputs")?)?,
                 },
@@ -264,17 +271,37 @@ impl Manifest {
         })
     }
 
-    /// Smallest prefill bucket that fits (batch, prompt_len).
-    pub fn prefill_bucket(&self, batch: usize, prompt_len: usize)
-                          -> Option<&ExecutableSpec> {
+    /// Smallest seq bucket of `kind` at `batch` that fits `prompt_len`
+    /// (the authoritative bucket-selection rule for every prompt-phase
+    /// executable family — prefill and prefill_sample resolve through
+    /// the same policy).
+    pub fn seq_bucket(&self, kind: &str, batch: usize, prompt_len: usize)
+                      -> Option<&ExecutableSpec> {
         self.executables
             .values()
             .filter(|e| {
-                e.kind == "prefill"
+                e.kind == kind
                     && e.batch == Some(batch)
                     && e.seq.map_or(false, |s| s >= prompt_len)
             })
             .min_by_key(|e| e.seq.unwrap())
+    }
+
+    /// Largest seq bucket of `kind` at `batch` — the clamp target for
+    /// prompts longer than every compiled bucket (tokenizer::fit keeps
+    /// the suffix).
+    pub fn largest_seq_bucket(&self, kind: &str, batch: usize)
+                              -> Option<&ExecutableSpec> {
+        self.executables
+            .values()
+            .filter(|e| e.kind == kind && e.batch == Some(batch))
+            .max_by_key(|e| e.seq.unwrap_or(0))
+    }
+
+    /// Smallest prefill bucket that fits (batch, prompt_len).
+    pub fn prefill_bucket(&self, batch: usize, prompt_len: usize)
+                          -> Option<&ExecutableSpec> {
+        self.seq_bucket("prefill", batch, prompt_len)
     }
 
     /// Smallest batch bucket >= n with a prefill for prompt_len.

@@ -19,6 +19,20 @@
 //! selection (`gather_cached`), so unchanged selections skip
 //! `gather_k{K}` entirely.
 //!
+//! Admission is device-resident too when the artifacts provide the
+//! admission ABI: [`Engine::prefill_sample`] reduces the prompt phase to
+//! last-token logits, samples the first token on device, and downloads
+//! only the selection statistics the mode actually consumes
+//! ([`StatNeeds`]); [`Engine::splice_slots`] routes through a compiled
+//! `splice_b{src}_b{dst}` executable that dynamic-update-slices the
+//! prefilled KV rows into the persistent decode state's slot positions
+//! — no `[B, S, V]` logits download and no host-side KV round trip per
+//! accepted request. Both fall back to the host paths for artifact sets
+//! that predate the admission ABI. Routing is BY NEED: callers that
+//! score prompt positions ([`PrefillLogits::Full`]) are structurally
+//! kept on the full-logits `prefill`. See docs/architecture.md for the
+//! host-boundary budget.
+//!
 //! Everything here is single-threaded by design: `PjRtBuffer` is not
 //! `Send`, so the engine owns all device state and the server hands it
 //! work through channels (server/).
@@ -37,7 +51,9 @@ use crate::coordinator::selection::{self, LayerStats, Strategy};
 use crate::coordinator::sequence::{FinishReason, GenRequest};
 use crate::metrics::{MetricsRegistry, Timer};
 use crate::runtime::{DeviceTensor, DispatchPlan, Session, WeightStore};
-use crate::sampling::{device_params, log_softmax_at, Sampler, SamplerSpec};
+use crate::sampling::{
+    device_params, log_softmax_at, seed_state, Sampler, SamplerSpec,
+};
 use crate::tensorfile::TensorMap;
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
 
@@ -68,7 +84,7 @@ pub fn adaptive_bucket_keep(_requested_keep: f64) -> f64 {
 // Runtime-free coordinator types (Mode, GenResponse) live in
 // `coordinator::types` so the substrate layers build without PJRT; they
 // are re-exported here under their historical paths.
-pub use crate::coordinator::types::{GenResponse, Mode};
+pub use crate::coordinator::types::{GenResponse, Mode, SelectionInfo};
 
 /// Device-resident pruned FF weights for one expert set. Shared handles
 /// (`Rc`) so the same set can live in the gather cache, a dispatch
@@ -111,6 +127,45 @@ pub struct DecodeState {
     pub batch: usize,
 }
 
+/// What the caller needs back from the prompt phase. Admission routing
+/// is BY NEED: the reduced `prefill_sample_*` executables cannot serve
+/// per-position prompt logits, so callers that score the prompt
+/// (`Full`) stay on the full-logits `prefill` structurally — they can
+/// never be silently routed onto the reduced variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillLogits {
+    /// each sequence's last-token logits row only (generation paths)
+    LastToken,
+    /// the full [B, S, V] prompt logits (per-position NLLs /
+    /// score_prompt; `PrefillOut::prompt_logits` is populated)
+    Full,
+}
+
+/// Which host-side statistics an admission needs downloaded — also
+/// route-by-need: Full/Magnitude admissions consume none of them,
+/// GRIFFIN needs the eq.6 stats, Wanda the input/activation norms.
+#[derive(Debug, Clone, Copy)]
+pub struct StatNeeds {
+    pub stats: bool,
+    pub norms: bool,
+}
+
+impl StatNeeds {
+    pub fn for_mode(mode: &Mode) -> StatNeeds {
+        match mode {
+            Mode::Griffin { .. } => StatNeeds { stats: true, norms: false },
+            Mode::Wanda { .. } => StatNeeds { stats: false, norms: true },
+            Mode::Full | Mode::Magnitude { .. } => {
+                StatNeeds { stats: false, norms: false }
+            }
+        }
+    }
+
+    pub fn all() -> StatNeeds {
+        StatNeeds { stats: true, norms: true }
+    }
+}
+
 /// Host-side results of the prompt phase.
 pub struct PrefillOut {
     pub state: DecodeState,
@@ -122,10 +177,36 @@ pub struct PrefillOut {
     pub znorms: Vec<LayerStats>,
     /// logits at each sequence's last real prompt token
     pub last_logits: Vec<Vec<f32>>,
-    /// full prompt logits [B][S][V] (kept only when score_prompt)
+    /// full prompt logits [B][S][V] (kept only for PrefillLogits::Full)
     pub prompt_logits: Option<Vec<f32>>,
     pub bucket_seq: usize,
     pub lengths: Vec<usize>,
+}
+
+/// Host-side results of the device-resident admission prompt phase
+/// (`prefill_sample_*`): the first token is already sampled on device,
+/// and only the statistics the admission's mode needs were downloaded.
+pub struct FusedPrefillOut {
+    pub state: DecodeState,
+    pub stats: Option<Vec<LayerStats>>,
+    pub xnorms: Option<Vec<LayerStats>>,
+    pub znorms: Option<Vec<LayerStats>>,
+    /// device-sampled first token per real sequence
+    pub tokens: Vec<i32>,
+    /// log-probability of each sampled first token
+    pub logprobs: Vec<f32>,
+    pub bucket_seq: usize,
+    pub lengths: Vec<usize>,
+}
+
+/// A prompt batch packed to its compiled (batch, seq) bucket.
+struct PackedPrompts {
+    batch: usize,
+    bucket_seq: usize,
+    exe: String,
+    tokens: Vec<i32>,
+    lengths: Vec<usize>,
+    lens_i32: Vec<i32>,
 }
 
 pub struct Engine {
@@ -185,11 +266,13 @@ impl Engine {
     // prompt phase
     // ------------------------------------------------------------------
 
-    /// Run the prompt phase for a batch of prompts (padded to buckets).
-    pub fn prefill(&self, prompts: &[Vec<i32>], score_prompt: bool)
-                   -> Result<PrefillOut> {
-        let t = Timer::start();
-        let cfg = self.config();
+    /// Pack a prompt batch to its compiled (batch, seq) bucket of the
+    /// given executable kind ("prefill" / "prefill_sample"): pad the
+    /// token matrix with dummy rows, resolve the smallest fitting seq
+    /// bucket — over-long prompts are clamped to the largest compiled
+    /// bucket (tokenizer::fit keeps the suffix — most recent context).
+    fn pack_prompts(&self, prompts: &[Vec<i32>], kind: &str)
+                    -> Result<PackedPrompts> {
         let n = prompts.len();
         let batch = self
             .session
@@ -197,20 +280,15 @@ impl Engine {
             .batch_bucket(n)
             .with_context(|| format!("no batch bucket >= {n}"))?;
         let longest = prompts.iter().map(Vec::len).max().unwrap_or(1).max(1);
-        // over-long prompts are clamped to the largest compiled bucket
-        // (tokenizer::fit keeps the suffix — most recent context)
-        let exe = match self.session.manifest.prefill_bucket(batch, longest)
-        {
+        let exe = match self.session.manifest.seq_bucket(kind, batch,
+                                                         longest) {
             Some(e) => e.name.clone(),
             None => self
                 .session
                 .manifest
-                .executables
-                .values()
-                .filter(|e| e.kind == "prefill" && e.batch == Some(batch))
-                .max_by_key(|e| e.seq.unwrap_or(0))
+                .largest_seq_bucket(kind, batch)
                 .with_context(|| {
-                    format!("no prefill executable for batch={batch}")
+                    format!("no {kind} executable for batch={batch}")
                 })?
                 .name
                 .clone(),
@@ -233,16 +311,50 @@ impl Engine {
                 row
             });
         }
+        let lens_i32 = lengths.iter().map(|&l| l as i32).collect();
+        Ok(PackedPrompts { batch, bucket_seq, exe, tokens, lengths,
+                           lens_i32 })
+    }
+
+    /// Split a downloaded [L, B, width] statistics tensor into per-
+    /// sequence [L][width] stacks for the first `n` rows.
+    fn split_layer_stats(&self, t: &DeviceTensor, width: usize, n: usize,
+                         batch: usize) -> Result<Vec<LayerStats>> {
+        let host = self.session.download_f32(t)?;
+        let l_count = self.config().n_layers;
+        Ok((0..n)
+            .map(|i| {
+                (0..l_count)
+                    .map(|l| {
+                        let base = (l * batch + i) * width;
+                        host[base..base + width].to_vec()
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Run the prompt phase for a batch of prompts (padded to buckets).
+    /// This is the FULL-LOGITS family: the whole [B, S, V] logits tensor
+    /// is downloaded, and `need` controls whether the per-position rows
+    /// are retained (`PrefillLogits::Full`) or only each sequence's
+    /// last-token row survives. Admission paths that need neither use
+    /// [`Engine::prefill_sample`] instead.
+    pub fn prefill(&self, prompts: &[Vec<i32>], need: PrefillLogits)
+                   -> Result<PrefillOut> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let n = prompts.len();
+        let p = self.pack_prompts(prompts, "prefill")?;
         let toks_dev = self
             .session
-            .upload_i32(&[batch, bucket_seq], &tokens)?;
-        let lens_i32: Vec<i32> = lengths.iter().map(|&l| l as i32).collect();
-        let lens_dev = self.session.upload_i32(&[batch], &lens_i32)?;
+            .upload_i32(&[p.batch, p.bucket_seq], &p.tokens)?;
+        let lens_dev = self.session.upload_i32(&[p.batch], &p.lens_i32)?;
 
         let mut args: Vec<&DeviceTensor> = self.weights.ordered();
         args.push(&toks_dev);
         args.push(&lens_dev);
-        let mut outs = self.session.run(&exe, &args)?;
+        let mut outs = self.session.run(&p.exe, &args)?;
         // outputs: logits, kcache, vcache, stats, xnorms, znorms
         let znorms_t = outs.pop().unwrap();
         let xnorms_t = outs.pop().unwrap();
@@ -255,48 +367,169 @@ impl Engine {
         let logits = self.session.download_f32(&logits_t)?;
         let last_logits: Vec<Vec<f32>> = (0..n)
             .map(|i| {
-                let row = (i * bucket_seq + (lengths[i] - 1)) * v;
+                let row = (i * p.bucket_seq + (p.lengths[i] - 1)) * v;
                 logits[row..row + v].to_vec()
             })
             .collect();
 
-        let split = |t: &DeviceTensor, width: usize| -> Result<Vec<LayerStats>> {
-            // [L, B, width] -> per-seq [L][width]
-            let host = self.session.download_f32(t)?;
-            let l_count = cfg.n_layers;
-            Ok((0..n)
-                .map(|i| {
-                    (0..l_count)
-                        .map(|l| {
-                            let base = (l * batch + i) * width;
-                            host[base..base + width].to_vec()
-                        })
-                        .collect()
-                })
-                .collect())
-        };
-        let stats = split(&stats_t, cfg.d_ff)?;
-        let xnorms = split(&xnorms_t, cfg.d_model)?;
-        let znorms = split(&znorms_t, cfg.d_ff)?;
+        let stats = self.split_layer_stats(&stats_t, cfg.d_ff, n, p.batch)?;
+        let xnorms =
+            self.split_layer_stats(&xnorms_t, cfg.d_model, n, p.batch)?;
+        let znorms = self.split_layer_stats(&znorms_t, cfg.d_ff, n, p.batch)?;
 
         self.metrics.prompt_tokens.add(
-            lengths.iter().take(n).sum::<usize>() as u64);
+            p.lengths.iter().take(n).sum::<usize>() as u64);
         t.record_into(&self.metrics.prefill_latency);
 
         Ok(PrefillOut {
             state: DecodeState {
                 kcache,
                 vcache,
-                pos: lens_i32,
-                batch,
+                pos: p.lens_i32,
+                batch: p.batch,
             },
             stats,
             xnorms,
             znorms,
             last_logits,
-            prompt_logits: if score_prompt { Some(logits) } else { None },
-            bucket_seq,
-            lengths,
+            prompt_logits: if need == PrefillLogits::Full {
+                Some(logits)
+            } else {
+                None
+            },
+            bucket_seq: p.bucket_seq,
+            lengths: p.lengths,
+        })
+    }
+
+    /// The compiled sampler truncation cap of the reduced admission
+    /// prefill for a prompt set of this size — the MINIMUM over the
+    /// batch bucket's seq buckets, since eligibility must hold
+    /// whichever bucket `pack_prompts` resolves. `sample_topk` is
+    /// per-executable in the manifest, so this can differ from the
+    /// decode executables' cap; admission eligibility must check THIS
+    /// cap, not the decode one. None = no admission ABI (old artifact
+    /// sets — callers fall back to [`Engine::prefill`]).
+    pub fn fused_prefill_cap(&self, n_prompts: usize) -> Option<usize> {
+        let batch = self.session.manifest.batch_bucket(n_prompts)?;
+        self.session
+            .manifest
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "prefill_sample" && e.batch == Some(batch)
+            })
+            .map(|e| {
+                e.sample_topk.unwrap_or(crate::sampling::SAMPLE_TOPK)
+            })
+            .min()
+    }
+
+    /// Does the manifest provide the reduced admission prefill for a
+    /// prompt set of this size?
+    pub fn can_prefill_fused(&self, n_prompts: usize) -> bool {
+        self.fused_prefill_cap(n_prompts).is_some()
+    }
+
+    /// Device-resident admission prompt phase (`prefill_sample_*`): the
+    /// [B, S, V] prompt logits are never materialized — only the
+    /// last-token hidden rows go through the LM head, the first token of
+    /// each sequence is sampled ON DEVICE through the fused-sampling ABI
+    /// (`samplers`: one (spec, xorshift32 state) pair per real prompt,
+    /// pad lanes get greedy placeholders), and only the statistics in
+    /// `needs` are downloaded. The device RNG output is discarded: the
+    /// slots' host mirrors are the stream source of truth and advance in
+    /// lockstep (`DeviceSampler::skip`, one advance per executable call).
+    ///
+    /// Callers needing per-position prompt logits must use `prefill`
+    /// with [`PrefillLogits::Full`] — this variant cannot serve them.
+    pub fn prefill_sample(&self, prompts: &[Vec<i32>],
+                          samplers: &[(SamplerSpec, u32)], needs: StatNeeds)
+                          -> Result<FusedPrefillOut> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let n = prompts.len();
+        if samplers.len() != n {
+            bail!("prefill_sample: {} sampler lanes for {n} prompts",
+                  samplers.len());
+        }
+        let p = self.pack_prompts(prompts, "prefill_sample")?;
+        let toks_dev = self
+            .session
+            .upload_i32(&[p.batch, p.bucket_seq], &p.tokens)?;
+        let lens_dev = self.session.upload_i32(&[p.batch], &p.lens_i32)?;
+
+        // sampling lanes: real sequences, then greedy pad lanes
+        let mut temp = vec![0f32; p.batch];
+        let mut topk = vec![1i32; p.batch];
+        let mut rng = vec![seed_state(0) as i32; p.batch];
+        for (i, (spec, state)) in samplers.iter().enumerate() {
+            let (tv, kv) = device_params(*spec);
+            temp[i] = tv;
+            topk[i] = kv;
+            rng[i] = *state as i32;
+        }
+        let temp_dev = self.session.upload_f32(&[p.batch], &temp)?;
+        let topk_dev = self.session.upload_i32(&[p.batch], &topk)?;
+        let rng_dev = self.session.upload_i32(&[p.batch], &rng)?;
+
+        let mut args: Vec<&DeviceTensor> = self.weights.ordered();
+        args.push(&toks_dev);
+        args.push(&lens_dev);
+        args.push(&temp_dev);
+        args.push(&topk_dev);
+        args.push(&rng_dev);
+        let mut outs = self.session.run(&p.exe, &args)?;
+        // outputs: token, logprob, kcache, vcache, stats, xnorms,
+        // znorms, rng
+        let _rng_out = outs.pop().unwrap();
+        let znorms_t = outs.pop().unwrap();
+        let xnorms_t = outs.pop().unwrap();
+        let stats_t = outs.pop().unwrap();
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        let lp_t = outs.pop().unwrap();
+        let tok_t = outs.pop().unwrap();
+
+        let mut tokens = self.session.download_i32(&tok_t)?;
+        tokens.truncate(n);
+        let mut logprobs = self.session.download_f32(&lp_t)?;
+        logprobs.truncate(n);
+        let stats = if needs.stats {
+            Some(self.split_layer_stats(&stats_t, cfg.d_ff, n, p.batch)?)
+        } else {
+            None
+        };
+        let (xnorms, znorms) = if needs.norms {
+            (
+                Some(self.split_layer_stats(
+                    &xnorms_t, cfg.d_model, n, p.batch)?),
+                Some(self.split_layer_stats(
+                    &znorms_t, cfg.d_ff, n, p.batch)?),
+            )
+        } else {
+            (None, None)
+        };
+
+        self.metrics.prompt_tokens.add(
+            p.lengths.iter().take(n).sum::<usize>() as u64);
+        self.metrics.fused_admissions.inc();
+        t.record_into(&self.metrics.prefill_latency);
+
+        Ok(FusedPrefillOut {
+            state: DecodeState {
+                kcache,
+                vcache,
+                pos: p.lens_i32,
+                batch: p.batch,
+            },
+            stats,
+            xnorms,
+            znorms,
+            tokens,
+            logprobs,
+            bucket_seq: p.bucket_seq,
+            lengths: p.lengths,
         })
     }
 
@@ -824,17 +1057,13 @@ impl Engine {
         })
     }
 
-    /// Copy freshly prefilled sequences into slots of a persistent decode
-    /// state: for each `(src_row, dst_slot)` pair the whole KV row
-    /// [L, :, H, Smax, dh] and the write position move from `src` to
-    /// `dst`. Host-staged (PJRT CPU exposes no device-side slice update
-    /// across differently-batched executables); fine at our model sizes —
-    /// admission is already dominated by the prefill itself.
-    pub fn splice_slots(&self, dst: &mut DecodeState, src: &DecodeState,
-                        pairs: &[(usize, usize)]) -> Result<()> {
-        let t = Timer::start();
-        let ds = dst.kcache.shape.clone();
-        let ss = src.kcache.shape.clone();
+    /// Validate splice operands; returns (layers, dst_batch, src_batch,
+    /// row elements) for the routed paths.
+    fn check_splice(dst: &DecodeState, src: &DecodeState,
+                    pairs: &[(usize, usize)])
+                    -> Result<(usize, usize, usize, usize)> {
+        let ds = &dst.kcache.shape;
+        let ss = &src.kcache.shape;
         if ds.len() != 5 || ss.len() != 5 {
             bail!("splice_slots: expected [L,B,H,S,dh] caches");
         }
@@ -849,6 +1078,80 @@ impl Engine {
                        (src b={sb}, dst b={db})");
             }
         }
+        Ok((layers, db, sb, row))
+    }
+
+    /// The compiled device-side splice for this (src, dst) batch-bucket
+    /// pair, if the artifacts provide one.
+    pub fn splice_spec(&self, src_b: usize, dst_b: usize)
+                       -> Option<&ExecutableSpec> {
+        self.session
+            .manifest
+            .executables
+            .get(&format!("splice_b{src_b}_b{dst_b}"))
+    }
+
+    /// Copy freshly prefilled sequences into slots of a persistent decode
+    /// state: for each `(src_row, dst_slot)` pair the whole KV row
+    /// [L, :, H, Smax, dh] and the write position move from `src` to
+    /// `dst`. Routed: when the artifacts provide `splice_b{src}_b{dst}`
+    /// the copy is a device-side dynamic-update-slice (the host uploads
+    /// only O(dst_batch) index lanes); otherwise the host-staged
+    /// fallback downloads and re-uploads both caches (old artifact
+    /// sets). Write positions stay host-authoritative either way.
+    pub fn splice_slots(&self, dst: &mut DecodeState, src: &DecodeState,
+                        pairs: &[(usize, usize)]) -> Result<()> {
+        let (_layers, db, sb, _row) = Self::check_splice(dst, src, pairs)?;
+        if self.splice_spec(sb, db).is_some() {
+            self.splice_slots_device(dst, src, pairs, sb, db)
+        } else {
+            self.splice_slots_host(dst, src, pairs)
+        }
+    }
+
+    /// Device-side splice through the compiled `splice_b{src}_b{dst}`
+    /// executable: neither KV cache crosses the host boundary.
+    fn splice_slots_device(&self, dst: &mut DecodeState,
+                           src: &DecodeState, pairs: &[(usize, usize)],
+                           sb: usize, db: usize) -> Result<()> {
+        let t = Timer::start();
+        let name = format!("splice_b{sb}_b{db}");
+        // untaken lanes keep their resident row (take = 0); their
+        // src_idx of 0 is never read
+        let mut idx = vec![0i32; db];
+        let mut take = vec![0i32; db];
+        for &(si, di) in pairs {
+            idx[di] = si as i32;
+            take[di] = 1;
+        }
+        let idx_dev = self.session.upload_i32(&[db], &idx)?;
+        let take_dev = self.session.upload_i32(&[db], &take)?;
+        let mut outs = self.session.run(
+            &name,
+            &[&dst.kcache, &dst.vcache, &src.kcache, &src.vcache,
+              &idx_dev, &take_dev],
+        )?;
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        dst.kcache = kcache;
+        dst.vcache = vcache;
+        for &(si, di) in pairs {
+            dst.pos[di] = src.pos[si];
+        }
+        self.metrics.fused_splices.inc();
+        t.record_into(&self.metrics.kv_splice_latency);
+        Ok(())
+    }
+
+    /// Host-staged splice fallback (download + re-upload of both
+    /// caches). Public so parity tests can pin device-path equivalence;
+    /// serving paths go through the routed [`Engine::splice_slots`].
+    pub fn splice_slots_host(&self, dst: &mut DecodeState,
+                             src: &DecodeState, pairs: &[(usize, usize)])
+                             -> Result<()> {
+        let t = Timer::start();
+        let (layers, db, sb, row) = Self::check_splice(dst, src, pairs)?;
+        let ds = dst.kcache.shape.clone();
         let mut dk = self.session.download_f32(&dst.kcache)?;
         let mut dv = self.session.download_f32(&dst.vcache)?;
         let sk = self.session.download_f32(&src.kcache)?;
@@ -899,7 +1202,7 @@ impl Engine {
             reqs.iter().map(|r| r.prompt.clone()).collect();
 
         let pre_t = Timer::start();
-        let mut pre = self.prefill(&prompts, false)?;
+        let mut pre = self.prefill(&prompts, PrefillLogits::LastToken)?;
         let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
 
         // --- selection phase ------------------------------------------
@@ -1031,6 +1334,7 @@ impl Engine {
                 logprobs: std::mem::take(&mut out_lps[i]),
                 finish: finish[i],
                 k_used,
+                selection: SelectionInfo::from_mode(&mode),
                 prefill_ms,
                 select_ms,
                 decode_ms,
@@ -1047,7 +1351,8 @@ impl Engine {
         let e2e = Timer::start();
         let cfg = self.config().clone();
         let pre_t = Timer::start();
-        let pre = self.prefill(std::slice::from_ref(&req.prompt), false)?;
+        let pre = self.prefill(std::slice::from_ref(&req.prompt),
+                               PrefillLogits::LastToken)?;
         let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
         if pre.state.batch != 1 {
             bail!("generate_scan requires batch bucket 1");
@@ -1130,6 +1435,7 @@ impl Engine {
             logprobs: lps,
             finish,
             k_used,
+            selection: SelectionInfo::from_mode(&req.mode),
             prefill_ms,
             select_ms,
             decode_ms,
@@ -1174,8 +1480,13 @@ impl Engine {
         if prompt.is_empty() || continuation.is_empty() {
             bail!("score_continuation: empty input");
         }
-        let mut pre =
-            self.prefill(std::slice::from_ref(&prompt.to_vec()), false)?;
+        // scoring needs only the last-token row here (the continuation
+        // is teacher-forced through decode steps), but it must stay on
+        // the full-logits `prefill` family: the reduced prefill_sample
+        // variant samples instead of returning logits, so routing it
+        // here would silently lose the scores. Route by need.
+        let mut pre = self.prefill(std::slice::from_ref(&prompt.to_vec()),
+                                   PrefillLogits::LastToken)?;
         let (pruned, wanda_ffw) = match mode {
             Mode::Full => (None, None),
             Mode::Griffin { keep, strategy } => {

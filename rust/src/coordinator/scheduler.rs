@@ -51,6 +51,19 @@
 //! Host fallback remains for nucleus/temperature samplers and pre-fused
 //! artifact sets.
 //!
+//! Fused (device-resident) ADMISSION: when every request in a back-fill
+//! batch is fused-eligible and the artifacts provide the admission ABI,
+//! the prompt phase runs through `prefill_sample_*` (last-token logits
+//! only, first token sampled on device with the slots' mirror streams,
+//! statistics downloaded by need) and the KV rows land in the pool via
+//! the compiled `splice_b{src}_b{dst}` executables — an admission moves
+//! no `[B, S, vocab]` logits and no host-side KV copy. The byte deltas
+//! are metered into `admission_bytes_to_{device,host}`. Host fallback
+//! (full prefill + host-staged splice) covers ineligible samplers and
+//! old artifacts; the first token then samples THROUGH the slot's
+//! mirror, so a sequence's stream is identical across admission
+//! routings. See docs/architecture.md for the host-boundary budget.
+//!
 //! Fault containment: an engine error never propagates out of `tick` as
 //! long as the slot invariants hold. A failure attributable to ONE
 //! request (per-slot selection at admission) retires just that request
@@ -70,12 +83,13 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::api::ErrorCode;
 use crate::coordinator::engine::{
-    aggregate_norms, DecodeState, Engine, FfOverride, GenResponse, Mode,
-    PrunedWeights, SamplingState,
+    aggregate_norms, DecodeState, Engine, FfOverride, FusedPrefillOut,
+    GenResponse, Mode, PrefillLogits, PrefillOut, PrunedWeights,
+    SamplingState, SelectionInfo, StatNeeds,
 };
 use crate::coordinator::router::Router;
 use crate::coordinator::selection::{aggregate_stats, LayerStats};
@@ -122,6 +136,7 @@ fn cancelled_response(req: &GenRequest) -> GenResponse {
         logprobs: Vec::new(),
         finish: FinishReason::Cancelled,
         k_used: None,
+        selection: SelectionInfo::from_mode(&req.mode),
         prefill_ms: 0.0,
         select_ms: 0.0,
         decode_ms: 0.0,
@@ -171,6 +186,11 @@ pub struct Scheduler {
     /// default; benches flip it off to measure the host path with an
     /// otherwise-identical workload)
     pub fused_enabled: bool,
+    /// master switch for the device-resident ADMISSION path
+    /// (prefill_sample + compiled splice). Independent of
+    /// `fused_enabled` so benches can isolate decode-tick fusion from
+    /// admission fusion on identical workloads.
+    pub fused_admission: bool,
     /// slot count == largest compiled batch bucket
     pub slot_count: usize,
 }
@@ -195,6 +215,7 @@ impl Scheduler {
             samp: None,
             samp_dirty: true,
             fused_enabled: true,
+            fused_admission: true,
             slot_count,
         }
     }
@@ -408,9 +429,19 @@ impl Scheduler {
 
     /// Prefill a batch of newly admitted requests and install each into
     /// its slot: KV rows spliced into the persistent state, per-slot
-    /// selection state captured, and the first token (sampled from the
-    /// prompt's last logits) emitted immediately — this is where TTFT is
-    /// measured.
+    /// selection state captured, and the first token emitted immediately
+    /// — this is where TTFT is measured.
+    ///
+    /// Routing: when every request in the batch is fused-eligible and
+    /// the artifacts provide the admission ABI, the prompt phase runs
+    /// device-resident (`Engine::prefill_sample`: last-token logits
+    /// only, first token sampled on device from the slots' mirror
+    /// streams, statistics downloaded by the mode's need); otherwise the
+    /// host path downloads the full logits and samples the first token
+    /// through the mirror (or the host sampler when no mirror exists),
+    /// so a sequence's token stream is routing-independent. The byte
+    /// deltas of the whole admission block (prefill + splice) land in
+    /// `admission_bytes_to_{device,host}`.
     ///
     /// Containment: a prefill/splice fault fails the whole admission
     /// batch (no request reached a slot yet); a per-request selection
@@ -429,23 +460,47 @@ impl Scheduler {
             self.engine.metrics.queue_wait.record(req.admitted_at.elapsed());
         }
         // fused-eligible samplers get a host-side device-stream mirror:
-        // it IS the sequence's RNG stream, whichever path ticks take
+        // it IS the sequence's RNG stream, whichever path ticks (and the
+        // admission itself) take
         let mirror_cap = self
             .engine
             .fused_decode_spec(self.slot_count, None)
             .and_then(|s| s.sample_topk);
-        let pre_t = Instant::now();
-        let prompts: Vec<Vec<i32>> =
-            reqs.iter().map(|r| r.prompt.clone()).collect();
-        let pre = match self.engine.prefill(&prompts, false) {
-            Ok(p) => p,
-            Err(e) => {
-                self.fail_admission(reqs, &e, on_event);
-                return Ok(());
-            }
-        };
-        let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
+        let mut mirrors: Vec<Option<DeviceSampler>> = reqs
+            .iter()
+            .map(|req| {
+                mirror_cap.and_then(|cap| {
+                    if crate::sampling::fused_eligible(req.sampler, cap) {
+                        Some(DeviceSampler::with_cap(
+                            req.sampler,
+                            req.seed,
+                            cap,
+                        ))
+                    } else {
+                        None
+                    }
+                })
+            })
+            .collect();
+        // the admission can sample on device only when EVERY request in
+        // the batch has a mirror (the decode executables' cap) AND fits
+        // the prefill_sample executable's OWN compiled cap — sample_topk
+        // is per-executable in the manifest, so the two can differ; a
+        // request between them must take the host admission route or its
+        // first token would silently truncate to the smaller cap
+        let fused = self.fused_admission
+            && mirrors.iter().all(Option::is_some)
+            && self
+                .engine
+                .fused_prefill_cap(reqs.len())
+                .is_some_and(|cap| {
+                    reqs.iter().all(|r| {
+                        crate::sampling::fused_eligible(r.sampler, cap)
+                    })
+                });
 
+        // allocate the persistent pool state up front so the admission
+        // byte meter below sees only prefill + splice traffic
         if self.state.is_none() {
             match self.engine.new_decode_state(self.slot_count) {
                 Ok(s) => self.state = Some(s),
@@ -455,14 +510,79 @@ impl Scheduler {
                 }
             }
         }
+
+        let m = self.engine.metrics.clone();
+        let (up0, down0) = (
+            m.host_bytes_to_device.get(),
+            m.host_bytes_to_host.get(),
+        );
+        let pre_t = Instant::now();
+        let prompts: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.prompt.clone()).collect();
+
+        enum Admit {
+            Host(PrefillOut),
+            Fused(FusedPrefillOut),
+        }
+        let admit = if fused {
+            let lanes: Vec<(SamplerSpec, u32)> = reqs
+                .iter()
+                .zip(&mirrors)
+                .map(|(r, mm)| (r.sampler, mm.as_ref().unwrap().state()))
+                .collect();
+            match self.engine.prefill_sample(
+                &prompts,
+                &lanes,
+                StatNeeds::for_mode(&reqs[0].mode),
+            ) {
+                Ok(p) => {
+                    // the device sampled each lane's first token — one
+                    // RNG advance — keep the mirrors in lockstep
+                    for mm in mirrors.iter_mut().flatten() {
+                        mm.skip();
+                    }
+                    Admit::Fused(p)
+                }
+                Err(e) => {
+                    self.fail_admission(reqs, &e, on_event);
+                    return Ok(());
+                }
+            }
+        } else {
+            match self.engine.prefill(&prompts, PrefillLogits::LastToken) {
+                Ok(p) => Admit::Host(p),
+                Err(e) => {
+                    self.fail_admission(reqs, &e, on_event);
+                    return Ok(());
+                }
+            }
+        };
+        let prefill_ms = pre_t.elapsed().as_secs_f64() * 1e3;
+
+        let (src_state, lengths, stats, xnorms, znorms, last_logits,
+             dev_tokens, dev_lps) = match admit {
+            Admit::Host(p) => (
+                p.state, p.lengths, Some(p.stats), Some(p.xnorms),
+                Some(p.znorms), Some(p.last_logits), None, None,
+            ),
+            Admit::Fused(p) => (
+                p.state, p.lengths, p.stats, p.xnorms, p.znorms, None,
+                Some(p.tokens), Some(p.logprobs),
+            ),
+        };
+
         let pairs: Vec<(usize, usize)> =
             slots.iter().enumerate().map(|(i, &s)| (i, s)).collect();
         if let Err(e) = self.engine.splice_slots(
-            self.state.as_mut().unwrap(), &pre.state, &pairs)
+            self.state.as_mut().unwrap(), &src_state, &pairs)
         {
             self.fail_admission(reqs, &e, on_event);
             return Ok(());
         }
+        m.admission_bytes_to_device
+            .add(m.host_bytes_to_device.get() - up0);
+        m.admission_bytes_to_host
+            .add(m.host_bytes_to_host.get() - down0);
 
         for (i, req) in reqs.iter().enumerate() {
             let slot = slots[i];
@@ -470,24 +590,19 @@ impl Scheduler {
             seq.slot = Some(slot);
             seq.advance(Phase::Prefilling);
             let mut entry = SlotEntry::new(
-                seq, Sampler::new(req.sampler, req.seed), pre.lengths[i]);
+                seq, Sampler::new(req.sampler, req.seed), lengths[i]);
             entry.prefill_ms = prefill_ms;
-            if let Some(cap) = mirror_cap {
-                if crate::sampling::fused_eligible(req.sampler, cap) {
-                    entry.device_mirror = Some(DeviceSampler::with_cap(
-                        req.sampler,
-                        req.seed,
-                        cap,
-                    ));
-                }
-            }
+            entry.device_mirror = mirrors[i].take();
 
             let sel_t = Instant::now();
             let selected: Result<()> = (|| {
                 match req.mode {
                     Mode::Griffin { keep, strategy } => {
                         entry.seq.advance(Phase::Selecting);
-                        let stats = pre.stats[i].clone();
+                        let stats = stats
+                            .as_ref()
+                            .map(|s| s[i].clone())
+                            .context("griffin admission without stats")?;
                         // snap to a keep servable at the pool bucket (the
                         // full k sweep is only compiled at B=1)
                         let keep =
@@ -498,8 +613,11 @@ impl Scheduler {
                         entry.seq.advance(Phase::Decoding);
                     }
                     Mode::Wanda { .. } => {
-                        entry.xnorm = Some(pre.xnorms[i].clone());
-                        entry.znorm = Some(pre.znorms[i].clone());
+                        entry.xnorm = xnorms.as_ref().map(|x| x[i].clone());
+                        entry.znorm = znorms.as_ref().map(|z| z[i].clone());
+                        if entry.xnorm.is_none() || entry.znorm.is_none() {
+                            bail!("wanda admission without norms");
+                        }
                         entry.seq.advance(Phase::Decoding);
                     }
                     Mode::Full | Mode::Magnitude { .. } => {
@@ -520,11 +638,23 @@ impl Scheduler {
             }
             entry.select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
 
-            // first token comes straight from the prefill logits
-            let row = &pre.last_logits[i];
-            let t = entry.sampler.sample(row) as i32;
+            // first token: device-sampled on the fused route; otherwise
+            // from the prefill logits THROUGH the slot's mirror stream
+            // (host sampler only for mirror-less specs), so the token
+            // stream is identical across admission routings
+            let (t, lp) = match (&dev_tokens, &dev_lps) {
+                (Some(toks), Some(lps)) => (toks[i], lps[i]),
+                _ => {
+                    let row = &last_logits.as_ref().unwrap()[i];
+                    let t = match entry.device_mirror.as_mut() {
+                        Some(mm) => mm.sample(row) as i32,
+                        None => entry.sampler.sample(row) as i32,
+                    };
+                    (t, log_softmax_at(row, t as usize))
+                }
+            };
             entry.seq.generated.push(t);
-            entry.seq.logprobs.push(log_softmax_at(row, t as usize));
+            entry.seq.logprobs.push(lp);
             entry.last_token = t;
             entry.last_token_at = Instant::now();
             entry.seq.advance(Phase::Streaming);
@@ -859,6 +989,7 @@ impl Scheduler {
             logprobs: seq.logprobs,
             finish: seq.finish_reason.unwrap_or(FinishReason::Length),
             k_used,
+            selection: SelectionInfo::from_mode(&seq.req.mode),
             prefill_ms,
             select_ms,
             decode_ms: decode_s * 1e3,

@@ -64,6 +64,53 @@ impl Mode {
     }
 }
 
+/// Selection provenance for reproducibility audits (surfaced as the v2
+/// response `prune` object): which pruning method/strategy produced the
+/// served expert set, and — for stochastic strategies — the seed that
+/// drove it, so an audit can re-derive the selection from the same
+/// prompt statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectionInfo {
+    pub method: &'static str,
+    /// GRIFFIN selection strategy label; None for non-GRIFFIN methods
+    pub strategy: Option<&'static str>,
+    /// strategy seed (stochastic strategies only)
+    pub seed: Option<u64>,
+}
+
+impl SelectionInfo {
+    /// Provenance of a generation mode; None for the full model (no
+    /// selection happened, nothing to audit).
+    pub fn from_mode(mode: &Mode) -> Option<SelectionInfo> {
+        match mode {
+            Mode::Full => None,
+            Mode::Griffin { strategy, .. } => Some(SelectionInfo {
+                method: "griffin",
+                strategy: Some(match strategy {
+                    Strategy::TopK => "topk",
+                    Strategy::Sampling { .. } => "sampling",
+                    Strategy::TopKPlusSampling { .. } => "topk+sampling",
+                }),
+                seed: match strategy {
+                    Strategy::TopK => None,
+                    Strategy::Sampling { seed }
+                    | Strategy::TopKPlusSampling { seed } => Some(*seed),
+                },
+            }),
+            Mode::Magnitude { .. } => Some(SelectionInfo {
+                method: "magnitude",
+                strategy: None,
+                seed: None,
+            }),
+            Mode::Wanda { .. } => Some(SelectionInfo {
+                method: "wanda",
+                strategy: None,
+                seed: None,
+            }),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
@@ -72,6 +119,8 @@ pub struct GenResponse {
     pub logprobs: Vec<f32>,
     pub finish: FinishReason,
     pub k_used: Option<usize>,
+    /// selection provenance (v2 responses surface it as `prune`)
+    pub selection: Option<SelectionInfo>,
     pub prefill_ms: f64,
     pub select_ms: f64,
     pub decode_ms: f64,
@@ -89,6 +138,25 @@ mod tests {
         assert_eq!(Mode::Full.label(), "full");
         assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
         assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
+    }
+
+    #[test]
+    fn selection_provenance_from_mode() {
+        assert_eq!(SelectionInfo::from_mode(&Mode::Full), None);
+        let g = SelectionInfo::from_mode(&Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::Sampling { seed: 9 },
+        })
+        .unwrap();
+        assert_eq!(g.method, "griffin");
+        assert_eq!(g.strategy, Some("sampling"));
+        assert_eq!(g.seed, Some(9));
+        let t = SelectionInfo::from_mode(&Mode::griffin(0.5)).unwrap();
+        assert_eq!(t.strategy, Some("topk"));
+        assert_eq!(t.seed, None, "deterministic top-k carries no seed");
+        let w =
+            SelectionInfo::from_mode(&Mode::Wanda { keep: 0.5 }).unwrap();
+        assert_eq!((w.method, w.strategy, w.seed), ("wanda", None, None));
     }
 
     #[test]

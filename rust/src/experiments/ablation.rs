@@ -12,7 +12,7 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use crate::cli::Args;
-use crate::coordinator::engine::Mode;
+use crate::coordinator::engine::{Mode, PrefillLogits};
 use crate::coordinator::selection::Strategy;
 use crate::eval;
 use crate::experiments::common::{engine_auto, write_results};
@@ -45,7 +45,7 @@ pub fn ablation_adaptive(args: &Args) -> Result<()> {
             for w in &windows {
                 let mut pre = engine
                     .prefill(std::slice::from_ref(&w[..p].to_vec()),
-                             false)?;
+             PrefillLogits::LastToken)?;
                 let pruned = if adaptive {
                     engine.gather_adaptive(&pre.stats[0].clone(), keep)?
                 } else {
@@ -145,7 +145,7 @@ pub fn ablation_stat(args: &Args) -> Result<()> {
                 }
                 let mut pre = engine
                     .prefill(std::slice::from_ref(&w[..p].to_vec()),
-                             false)?;
+             PrefillLogits::LastToken)?;
                 let stats = if metric == "eq6_relative" {
                     &pre.stats[0]
                 } else {

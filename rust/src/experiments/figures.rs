@@ -6,7 +6,7 @@ use std::fmt::Write as _;
 use anyhow::{Context, Result};
 
 use crate::cli::Args;
-use crate::coordinator::engine::{Engine, Mode};
+use crate::coordinator::engine::{Engine, Mode, PrefillLogits};
 use crate::eval;
 use crate::experiments::common::{self, engine_auto, write_results};
 use crate::runtime::DeviceTensor;
@@ -118,7 +118,8 @@ pub fn fig2(args: &Args) -> Result<()> {
     let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 11, n_samples, 96);
     let mut per_sample = Vec::new();
     for w in &windows {
-        let pre = engine.prefill(std::slice::from_ref(w), false)?;
+        let pre = engine.prefill(std::slice::from_ref(w),
+                                 PrefillLogits::LastToken)?;
         per_sample.push(pre.stats[0].clone());
         let _ = tok;
     }
@@ -229,7 +230,7 @@ pub fn fig6(args: &Args) -> Result<()> {
     let model = default_model(args);
     let engine = engine_auto(&model)?;
     let w = tasks::lm_windows(tasks::HELDOUT_SEED + 13, 1, 96);
-    let pre = engine.prefill(&w, false)?;
+    let pre = engine.prefill(&w, PrefillLogits::LastToken)?;
     let stats = &pre.stats[0];
 
     let mut csv = String::from("layer,rank,value\n");

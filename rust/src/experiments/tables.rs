@@ -6,7 +6,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cli::Args;
-use crate::coordinator::engine::{Engine, Mode};
+use crate::coordinator::engine::{Engine, Mode, PrefillLogits};
 use crate::coordinator::selection::{self, Strategy};
 use crate::coordinator::sequence::GenRequest;
 use crate::experiments::common::{self, engine_auto, write_results, MdTable};
@@ -222,7 +222,8 @@ pub fn table4(args: &Args) -> Result<()> {
             // prefill full, then decode pruned with our own idx.
             let prompt = tok.encode_with_bos(&s.prompt);
             let mut pre =
-                engine.prefill(std::slice::from_ref(&prompt), false)?;
+                engine.prefill(std::slice::from_ref(&prompt),
+                               PrefillLogits::LastToken)?;
             let pruned = engine.gather(idx)?;
             let first =
                 crate::sampling::argmax(&pre.last_logits[0]) as i32;
@@ -250,7 +251,8 @@ pub fn table4(args: &Args) -> Result<()> {
     // Shot: experts from the FIRST sample only
     let first_prompt = tok.encode_with_bos(&samples[0].prompt);
     let pre0 =
-        engine.prefill(std::slice::from_ref(&first_prompt), false)?;
+        engine.prefill(std::slice::from_ref(&first_prompt),
+                       PrefillLogits::LastToken)?;
     let shot_idx = engine.select(&pre0.stats[0], 0.5, Strategy::TopK)?;
     let shot = eval_fixed(&mut engine, &shot_idx)?;
 
@@ -258,7 +260,8 @@ pub fn table4(args: &Args) -> Result<()> {
     let mut agg_in = Vec::new();
     for s in &samples {
         let prompt = tok.encode_with_bos(&s.prompt);
-        let pre = engine.prefill(std::slice::from_ref(&prompt), false)?;
+        let pre = engine.prefill(std::slice::from_ref(&prompt),
+                                 PrefillLogits::LastToken)?;
         agg_in.push((pre.stats[0].clone(), prompt.len()));
     }
     let global_stats = selection::aggregate_stats(&agg_in);

@@ -220,6 +220,20 @@ pub struct MetricsRegistry {
     /// decode ticks served by the fused decode_sample_* path (on-device
     /// sampling; no [B, vocab] logits download)
     pub fused_decode_ticks: Counter,
+    /// admission prefills served by the reduced prefill_sample_* path
+    /// (last-token logits + on-device first-token sampling; no [B, S,
+    /// vocab] logits download). Incremented once per admission batch.
+    pub fused_admissions: Counter,
+    /// KV admission splices served by the compiled splice_b{src}_b{dst}
+    /// executables (no host-side KV round trip)
+    pub fused_splices: Counter,
+    /// host-boundary bytes attributable to ADMISSION work (prefill +
+    /// KV splice), metered by the scheduler as to_device/to_host deltas
+    /// around its admission block — the quantity the device-resident
+    /// admission path exists to shrink (tests and bench_serving assert
+    /// on these)
+    pub admission_bytes_to_device: Counter,
+    pub admission_bytes_to_host: Counter,
     /// bytes staged host -> device (uploads: tokens/pos, prompt
     /// matrices, KV splices, gathered-index vectors, weight sets)
     pub host_bytes_to_device: Counter,
@@ -299,6 +313,11 @@ impl MetricsRegistry {
                         "fused_decode_ticks",
                         n(self.fused_decode_ticks.get() as f64),
                     ),
+                    (
+                        "fused_admissions",
+                        n(self.fused_admissions.get() as f64),
+                    ),
+                    ("fused_splices", n(self.fused_splices.get() as f64)),
                 ]),
             ),
             (
@@ -309,6 +328,14 @@ impl MetricsRegistry {
                         n(self.host_bytes_to_device.get() as f64),
                     ),
                     ("to_host", n(self.host_bytes_to_host.get() as f64)),
+                    (
+                        "admission_to_device",
+                        n(self.admission_bytes_to_device.get() as f64),
+                    ),
+                    (
+                        "admission_to_host",
+                        n(self.admission_bytes_to_host.get() as f64),
+                    ),
                 ]),
             ),
             (
@@ -415,6 +442,11 @@ mod tests {
         let ht = v.get("host_transfer_bytes").unwrap();
         assert!(ht.get("to_device").is_some());
         assert!(ht.get("to_host").is_some());
+        assert!(ht.get("admission_to_device").is_some());
+        assert!(ht.get("admission_to_host").is_some());
+        let tp = v.get("throughput").unwrap();
+        assert!(tp.get("fused_admissions").is_some());
+        assert!(tp.get("fused_splices").is_some());
         assert!(v.get("gather_cache").unwrap().get("hits").is_some());
         assert!(v
             .get("throughput")

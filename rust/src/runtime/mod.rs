@@ -578,6 +578,7 @@ mod tests {
             k: None,
             gen: None,
             sample_topk: None,
+            src_batch: None,
             inputs: vec![
                 io("w", &[4, 4], "f32"),
                 io("kcache", &[1, 2, 2, 8, 2], "f32"),

@@ -405,8 +405,9 @@ fn handle_generate(
                 if batched {
                     let i = ids.iter().position(|&x| x == r.id).unwrap();
                     // embedded rows carry no "v" envelope — only the
-                    // outer batch line does (uniform row schema)
-                    results[i] = Some(api::response_json(&r, false));
+                    // outer batch line does (uniform row schema) — but
+                    // keep the v2 row fields (prune provenance)
+                    results[i] = Some(api::response_row_json(&r));
                 } else if !send(
                     writer, &api::done_json(&r, spec.stream, spec.v2))
                 {

@@ -3,7 +3,7 @@
 //! Skipped (with a notice) when `make artifacts` has not been run.
 
 use griffin::api::ErrorCode;
-use griffin::coordinator::engine::{Engine, Mode};
+use griffin::coordinator::engine::{Engine, Mode, PrefillLogits};
 use griffin::coordinator::router::Router;
 use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
 use griffin::coordinator::selection::Strategy;
@@ -74,7 +74,9 @@ fn griffin_at_full_width_matches_full_model() {
 fn griffin_modes_produce_different_expert_sets() {
     let _g = pjrt_lock();
     let Some(e) = engine("tiny-swiglu") else { return };
-    let pre = e.prefill(&[prompt_ids(32)], false).unwrap();
+    let pre = e
+        .prefill(&[prompt_ids(32)], PrefillLogits::LastToken)
+        .unwrap();
     let top = e.select(&pre.stats[0], 0.5, Strategy::TopK).unwrap();
     let samp = e
         .select(&pre.stats[0], 0.5, Strategy::Sampling { seed: 9 })
@@ -98,7 +100,9 @@ fn prefill_stats_match_flock_definition() {
     let _g = pjrt_lock();
     let Some(e) = engine("tiny-swiglu") else { return };
     let ids = prompt_ids(32);
-    let pre = e.prefill(&[ids.clone()], false).unwrap();
+    let pre = e
+        .prefill(&[ids.clone()], PrefillLogits::LastToken)
+        .unwrap();
 
     let spec = e
         .session
@@ -300,7 +304,9 @@ fn fused_decode_sample_matches_host_stepwise() {
     ] {
         for pruned_mode in [false, true] {
             // host reference: stepwise decode + mirror sampling
-            let pre = e.prefill(&[prompt.clone()], false).unwrap();
+            let pre = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
             let pw = if pruned_mode {
                 let idx = e
                     .select(&pre.stats[0], 0.5, Strategy::TopK)
@@ -331,7 +337,9 @@ fn fused_decode_sample_matches_host_stepwise() {
             }
 
             // fused run: same seed, logits never downloaded
-            let pre2 = e.prefill(&[prompt.clone()], false).unwrap();
+            let pre2 = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
             let mut state2 = pre2.state;
             let mut samp = e
                 .new_sampling_state(&[(spec, seed_state(seed))])
@@ -722,7 +730,9 @@ fn fused_wanda_matches_host_stepwise() {
         SamplerSpec::TopK { k: 8, temperature: 0.8 },
     ] {
         // host reference: stepwise decode with the Wanda override
-        let pre = e.prefill(&[prompt.clone()], false).unwrap();
+        let pre = e
+            .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+            .unwrap();
         let ffw = e
             .wanda_weights(&pre.xnorms[0], &pre.znorms[0], 0.5)
             .unwrap();
@@ -741,7 +751,9 @@ fn fused_wanda_matches_host_stepwise() {
         }
 
         // fused run: same masked weights, logits never downloaded
-        let pre2 = e.prefill(&[prompt.clone()], false).unwrap();
+        let pre2 = e
+            .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+            .unwrap();
         let mut state2 = pre2.state;
         let mut samp =
             e.new_sampling_state(&[(spec, seed_state(seed))]).unwrap();
@@ -789,6 +801,222 @@ fn fused_wanda_matches_host_stepwise() {
     assert!(ticks > 0);
     assert_eq!(fused, ticks,
                "greedy Wanda ticks must all take the fused path");
+}
+
+#[test]
+fn device_splice_matches_host_staging() {
+    // Tentpole parity: the compiled splice_b{src}_b{dst} executable must
+    // land exactly the same KV bytes in the same slot rows as the
+    // host-staged fallback (download + re-upload of both caches).
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    if e.splice_spec(1, bmax).is_none() {
+        eprintln!("skipping: artifacts predate the admission ABI");
+        return;
+    }
+    let pre = e
+        .prefill(&[prompt_ids(20)], PrefillLogits::LastToken)
+        .unwrap();
+    assert_eq!(pre.state.batch, 1, "one prompt packs to bucket 1");
+    let mut dev = e.new_decode_state(bmax).unwrap();
+    let mut host = e.new_decode_state(bmax).unwrap();
+    let pairs = [(0usize, 2usize)];
+    let fused0 = e.metrics.fused_splices.get();
+    e.splice_slots(&mut dev, &pre.state, &pairs).unwrap();
+    assert_eq!(e.metrics.fused_splices.get(), fused0 + 1,
+               "splice_slots must route through the device executable");
+    e.splice_slots_host(&mut host, &pre.state, &pairs).unwrap();
+    let dk = e.session.download_f32(&dev.kcache).unwrap();
+    let hk = e.session.download_f32(&host.kcache).unwrap();
+    assert_eq!(dk, hk, "same KV bytes land in the same slot rows");
+    let dv = e.session.download_f32(&dev.vcache).unwrap();
+    let hv = e.session.download_f32(&host.vcache).unwrap();
+    assert_eq!(dv, hv);
+    assert_eq!(dev.pos, host.pos);
+    assert_eq!(dev.pos[2], pre.state.pos[0],
+               "write position moves with the KV row");
+}
+
+#[test]
+fn fused_prefill_matches_full_prefill() {
+    // Tentpole parity: prefill_sample must reproduce the full prefill's
+    // last-token decision (greedy == argmax of the downloaded last
+    // logits) and its selection statistics, without ever materializing
+    // the [B, S, V] logits.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    if !e.can_prefill_fused(2) {
+        eprintln!("skipping: artifacts predate the admission ABI");
+        return;
+    }
+    use griffin::coordinator::engine::StatNeeds;
+    use griffin::sampling::{argmax, seed_state, SamplerSpec};
+    let prompts = vec![prompt_ids(24), prompt_ids(17)];
+    let pre = e.prefill(&prompts, PrefillLogits::LastToken).unwrap();
+    let lanes = vec![(SamplerSpec::Greedy, seed_state(1)); 2];
+    let fp = e
+        .prefill_sample(&prompts, &lanes, StatNeeds::all())
+        .unwrap();
+    assert_eq!(fp.lengths, pre.lengths);
+    assert_eq!(fp.state.pos, pre.state.pos);
+    for i in 0..2 {
+        assert_eq!(fp.tokens[i], argmax(&pre.last_logits[i]) as i32,
+                   "device greedy first token == host argmax (seq {i})");
+        assert!(fp.logprobs[i] <= 0.0);
+    }
+    // selection statistics agree across the two prefill variants (same
+    // trunk lowered twice; allow ulp-level drift)
+    let close = |a: &Vec<Vec<Vec<f32>>>, b: &Vec<Vec<Vec<f32>>>, what| {
+        for (sa, sb) in a.iter().zip(b) {
+            for (la, lb) in sa.iter().zip(sb) {
+                for (x, y) in la.iter().zip(lb) {
+                    assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()),
+                            "{what}: {x} vs {y}");
+                }
+            }
+        }
+    };
+    close(&fp.stats.unwrap(), &pre.stats, "stats");
+    close(&fp.xnorms.unwrap(), &pre.xnorms, "xnorms");
+    close(&fp.znorms.unwrap(), &pre.znorms, "znorms");
+    // and the KV caches the decode loop inherits agree too
+    let k1 = e.session.download_f32(&pre.state.kcache).unwrap();
+    let k2 = e.session.download_f32(&fp.state.kcache).unwrap();
+    for (a, b) in k1.iter().zip(&k2) {
+        assert!((a - b).abs() < 1e-4, "kcache drift: {a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_admission_moves_no_logits_and_no_host_kv() {
+    // Acceptance criterion: with new-format artifacts an admission
+    // (prefill + splice) moves no [B, S, V] logits and no host-side KV
+    // copy — asserted via the admission slice of host_transfer_bytes —
+    // and the token streams are identical to the host-fallback routing.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let cfg = e.config().clone();
+    let bmax = cfg.batch_buckets.iter().copied().max().unwrap();
+    if !e.can_prefill_fused(1) || e.splice_spec(bmax, bmax).is_none() {
+        eprintln!("skipping: artifacts predate the admission ABI");
+        return;
+    }
+    let spec = griffin::sampling::SamplerSpec::TopK { k: 8, temperature: 0.8 };
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    let n = bmax + 3; // forces at least one back-fill admission
+    let m = sched.engine.metrics.clone();
+    let (adm0, spl0, up0, down0) = (
+        m.fused_admissions.get(),
+        m.fused_splices.get(),
+        m.admission_bytes_to_device.get(),
+        m.admission_bytes_to_host.get(),
+    );
+    let mut run = |fused: bool| -> Vec<Vec<i32>> {
+        sched.fused_admission = fused;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let mut q = GenRequest::greedy(
+                0, prompt_ids(16 + (i % 8)), 6, Mode::Full);
+            q.sampler = spec;
+            q.seed = 1000 + i as u64;
+            q.stop_at_eos = false;
+            ids.push(router.admit(q).unwrap());
+        }
+        let mut responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), n);
+        responses.sort_by_key(|r| r.id);
+        responses.into_iter().map(|r| r.tokens).collect()
+    };
+
+    let fused_tokens = run(true);
+    let admissions = m.fused_admissions.get() - adm0;
+    assert!(admissions >= 2,
+            "initial batch + back-fills ride the fused admission path");
+    assert!(m.fused_splices.get() - spl0 >= admissions,
+            "every admission splices on device");
+    // downstream: O(B) sampling outputs per admission, never the
+    // [B, S, V] logits (one bucket of which alone would dwarf this)
+    let down = m.admission_bytes_to_host.get() - down0;
+    let one_logits = (cfg.prefill_buckets[0].min(cfg.max_seq)
+        * cfg.vocab_size
+        * 4) as u64;
+    assert!(down < one_logits,
+            "admission downloaded {down} bytes; a single sequence's \
+             prompt logits are {one_logits}");
+    assert!(down <= admissions * (bmax as u64) * 64,
+            "admission downstream should be O(B): {down} bytes over \
+             {admissions} admissions");
+    // upstream: prompt matrices + index lanes, never a KV re-upload
+    let up = m.admission_bytes_to_device.get() - up0;
+    let kv_one = (cfg.n_layers
+        * bmax
+        * cfg.n_heads
+        * cfg.max_seq
+        * cfg.head_dim
+        * 4) as u64;
+    assert!(up < kv_one,
+            "admission uploaded {up} bytes; one pool KV cache is \
+             {kv_one} — the host splice staging is back");
+
+    // routing parity: the host-fallback admission (full prefill + mirror
+    // sampling) must produce the exact same seeded token streams
+    let host_tokens = run(false);
+    assert_eq!(fused_tokens, host_tokens,
+               "token streams must be identical across admission routes");
+}
+
+#[test]
+fn score_routing_keeps_full_logits_family() {
+    // Route-by-need: per-position prompt logits exist only on the full
+    // prefill path (PrefillLogits::Full), and score results must be
+    // identical whichever admission routing is active — the score path
+    // structurally never touches the reduced prefill_sample variant.
+    let _g = pjrt_lock();
+    let Some(e) = engine("tiny-swiglu") else { return };
+    let ids = prompt_ids(24);
+    let v = e.config().vocab_size;
+    let pre = e.prefill(&[ids.clone()], PrefillLogits::Full).unwrap();
+    let logits = pre
+        .prompt_logits
+        .as_ref()
+        .expect("PrefillLogits::Full keeps the prompt logits");
+    let row0 = (pre.lengths[0] - 1) * v;
+    assert_eq!(&logits[row0..row0 + v], pre.last_logits[0].as_slice(),
+               "full logits contain the last-token row");
+    let lt = e.prefill(&[ids.clone()], PrefillLogits::LastToken).unwrap();
+    assert!(lt.prompt_logits.is_none(),
+            "LastToken must not retain the full logits");
+
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    let (prompt, cont) = ids.split_at(16);
+    let mut run = |fused: bool| -> Vec<f64> {
+        sched.fused_admission = fused;
+        let id = router
+            .admit_score(griffin::coordinator::sequence::ScoreRequest {
+                id: 0,
+                prompt: prompt.to_vec(),
+                continuation: cont.to_vec(),
+                mode: Mode::griffin(0.5),
+                admitted_at: std::time::Instant::now(),
+            })
+            .unwrap();
+        let mut scored = None;
+        let mut sink = |ev: EngineEvent| {
+            if let EngineEvent::ScoreDone { id: sid, nll } = ev {
+                assert_eq!(sid, id);
+                scored = Some(nll);
+            }
+        };
+        sched.tick(&mut sink).unwrap();
+        scored.expect("score completed")
+    };
+    let a = run(true);
+    let b = run(false);
+    assert_eq!(a, b,
+               "score NLLs must not depend on the admission routing");
 }
 
 #[test]

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Dead-link check over the repo's markdown documentation.
+
+Scans inline markdown links `[text](target)` and fails when a relative
+target does not exist on disk, so docs/*.md cannot rot silently as files
+move. External links (http/https/mailto) and pure #fragments are
+skipped; a `target#fragment` is checked for the file part only.
+
+Usage:
+    python3 tools/check_doc_links.py [file.md ...]
+
+With no arguments, checks docs/*.md plus the top-level markdown files.
+Pure stdlib (the CI docs job runs it on a stock runner). Exit code 1 on
+any broken link.
+"""
+
+import glob
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# SNIPPETS.md is excluded: it quotes external repos' READMEs verbatim,
+# whose relative links point into repos that are not vendored here.
+DEFAULT_FILES = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+                 "PAPERS.md")
+
+
+def check(path):
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK.finditer(text):
+        raw = m.group(1)
+        if raw.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = raw.split("#", 1)[0]
+        if not target:
+            continue  # same-file fragment
+        full = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(full):
+            line = text[: m.start()].count("\n") + 1
+            errors.append(f"{path}:{line}: broken link -> {raw}")
+    return errors
+
+
+def main(argv):
+    if argv:
+        files = argv
+    else:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        os.chdir(root)
+        files = sorted(glob.glob("docs/*.md"))
+        files += [f for f in DEFAULT_FILES if os.path.exists(f)]
+    missing = [f for f in files if not os.path.exists(f)]
+    for f in missing:
+        print(f"{f}: no such file")
+    errors = []
+    for f in files:
+        if f not in missing:
+            errors.extend(check(f))
+    for e in errors:
+        print(e)
+    status = "FAIL" if (errors or missing) else "ok"
+    print(f"checked {len(files) - len(missing)} markdown files: {status}")
+    return 1 if (errors or missing) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
