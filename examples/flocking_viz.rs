@@ -5,7 +5,7 @@
 //!     cargo run --release --example flocking_viz [model] [layer]
 
 use griffin::coordinator::engine::Engine;
-use griffin::runtime::DeviceTensor;
+use griffin::runtime::{DeviceTensor, Substrate};
 use griffin::test_support::artifact_path;
 use griffin::tokenizer::Tokenizer;
 use griffin::workload::{corpus, tasks};
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     let spec = engine
         .session
-        .manifest
+        .manifest()
         .executables
         .values()
         .find(|e| e.kind == "activations")

@@ -8,6 +8,11 @@
 //! (artifact-free — this is the bench the CI substrate job bitrot-
 //! guards; CSV lands in results/bench_substrates.csv. Reading guide:
 //! docs/benchmarks.md)
+//!
+//! With `--features cpu-substrate` two extra scenarios drive the CPU
+//! reference backend end-to-end (admission + fused decode ticks through
+//! the real Engine/Scheduler), so the Substrate-trait dispatch overhead
+//! is measurable on machines with no PJRT library.
 
 use griffin::bench_harness::{bench, Reporter};
 use griffin::coordinator::selection::{self, Strategy};
@@ -74,6 +79,52 @@ fn main() {
     rep.add(bench("magnitude_metric_small", 2, 50, || {
         let _ = selection::magnitude_metric(&w1, None, 4, 384, 96);
     }));
+
+    // CPU reference backend: one admission (prefill_sample + device
+    // splice) plus the fused decode ticks of a 4-slot greedy workload,
+    // end to end through Engine + Scheduler. Measures the substrate
+    // dispatch overhead (name resolution, plan cache, arg marshalling)
+    // the trait refactor introduced — the model itself is tiny by
+    // design, so dispatch is a visible fraction of the row.
+    #[cfg(feature = "cpu-substrate")]
+    {
+        use griffin::coordinator::engine::{Engine, Mode};
+        use griffin::coordinator::router::Router;
+        use griffin::coordinator::scheduler::Scheduler;
+        use griffin::coordinator::sequence::GenRequest;
+        use std::sync::Arc;
+
+        let prompt: Vec<i32> = (0..24).map(|i| (i * 7) % 250).collect();
+        let router = Arc::new(Router::new(64, 256));
+        let mut sched = Scheduler::new(
+            Engine::cpu_reference().unwrap(), router.clone());
+        rep.add(bench("cpu_substrate_admit_decode_4x8tok", 2, 20, || {
+            for i in 0..4u64 {
+                let mut q = GenRequest::greedy(
+                    0, prompt.clone(), 8, Mode::Full);
+                q.seed = i;
+                q.stop_at_eos = false;
+                router.admit(q).unwrap();
+            }
+            let done = sched.run_until_idle().unwrap();
+            assert_eq!(done.len(), 4);
+        }));
+
+        // the admission block alone (prefill_sample + splice dominate)
+        let router2 = Arc::new(Router::new(64, 256));
+        let mut sched2 = Scheduler::new(
+            Engine::cpu_reference().unwrap(), router2.clone());
+        rep.add(bench("cpu_substrate_admission_only", 2, 40, || {
+            for _ in 0..4u64 {
+                let mut q = GenRequest::greedy(
+                    0, prompt.clone(), 1, Mode::Full);
+                q.stop_at_eos = false;
+                router2.admit(q).unwrap();
+            }
+            let done = sched2.run_until_idle().unwrap();
+            assert_eq!(done.len(), 4);
+        }));
+    }
 
     rep.finish();
 }

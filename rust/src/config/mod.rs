@@ -330,7 +330,8 @@ mod tests {
     fn manifest() -> Option<Manifest> {
         let dir = artifact_path("tiny-swiglu");
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts missing (run make artifacts)");
+            crate::test_support::skip_notice(
+                "config: artifacts missing (run make artifacts)");
             return None;
         }
         Some(Manifest::load(&dir).unwrap())
@@ -387,6 +388,33 @@ mod tests {
         assert_eq!(full, m.config.param_count);
         let half = m.config.active_params_at_k(m.config.d_ff / 2);
         assert!(half < full);
+    }
+
+    #[test]
+    fn nearest_k_of_edges_and_tie_stability() {
+        // empty candidate set -> None (callers turn this into a
+        // manifest-coverage error)
+        assert_eq!(nearest_k_of(10.0, std::iter::empty()), None);
+        // single-bucket manifests: every target lands on the only k
+        for target in [0.0, 1e-12, 8.0, 1e6] {
+            assert_eq!(nearest_k_of(target, [16usize]), Some(16));
+        }
+        // keep -> 0+ (target just above zero) picks the smallest k
+        assert_eq!(nearest_k_of(1e-9, [8usize, 16, 24]), Some(8));
+        // keep = 1.0 style targets above the largest bucket clamp down
+        assert_eq!(nearest_k_of(32.0, [8usize, 16, 24]), Some(24));
+        // exact midpoints are ties; `min_by` keeps the FIRST minimal
+        // candidate, so ascending inputs resolve to the smaller k —
+        // Engine::snap_keep sorts its candidates to pin exactly this
+        assert_eq!(nearest_k_of(12.0, [8usize, 16]), Some(8));
+        assert_eq!(nearest_k_of(20.0, [16usize, 24]), Some(16));
+        // ...and the rule is order-dependence made explicit: reversed
+        // input keeps its own first (this is WHY snap_keep sorts)
+        assert_eq!(nearest_k_of(12.0, [16usize, 8]), Some(16));
+        // non-tied fractional targets round by true distance, no
+        // integer truncation of sub-unit differences
+        assert_eq!(nearest_k_of(11.9, [8usize, 16]), Some(8));
+        assert_eq!(nearest_k_of(12.1, [8usize, 16]), Some(16));
     }
 
     #[test]

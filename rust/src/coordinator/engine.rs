@@ -39,6 +39,7 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
+#[cfg(feature = "runtime")]
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
@@ -50,7 +51,7 @@ use crate::coordinator::gather_cache::{GatherCache, GatherKey};
 use crate::coordinator::selection::{self, LayerStats, Strategy};
 use crate::coordinator::sequence::{FinishReason, GenRequest};
 use crate::metrics::{MetricsRegistry, Timer};
-use crate::runtime::{DeviceTensor, DispatchPlan, Session, WeightStore};
+use crate::runtime::{DeviceTensor, DispatchPlan, Substrate, WeightStore};
 use crate::sampling::{
     device_params, log_softmax_at, seed_state, Sampler, SamplerSpec,
 };
@@ -210,7 +211,11 @@ struct PackedPrompts {
 }
 
 pub struct Engine {
-    pub session: Session,
+    /// The executable substrate this engine dispatches to — the PJRT
+    /// backend (`Engine::load`) or the CPU reference backend
+    /// (`Engine::cpu_reference`). Everything below this field is
+    /// backend-agnostic.
+    pub session: Box<dyn Substrate>,
     pub weights: WeightStore,
     /// host copy (magnitude / wanda baselines need raw weight values)
     pub host_weights: TensorMap,
@@ -231,12 +236,31 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Load over the PJRT backend (compiled artifacts + weights.bin).
+    #[cfg(feature = "runtime")]
     pub fn load(artifact_dir: &Path, trained: bool) -> Result<Engine> {
-        let session = Session::load(artifact_dir)?;
-        let weights = WeightStore::load(&session, trained)?;
-        let host_weights =
-            crate::tensorfile::read(session.manifest.weights_path(trained)?)?;
-        let metrics = session.metrics.clone();
+        let session = crate::runtime::Session::load(artifact_dir)?;
+        Engine::from_substrate(Box::new(session), trained)
+    }
+
+    /// Load over the CPU reference backend: a tiny synthesized model
+    /// served by the pure-Rust interpreter (runtime/cpu.rs) — the full
+    /// engine/scheduler/server stack with no PJRT library and no
+    /// `make artifacts` step (the hard-gated CI e2e tier).
+    #[cfg(feature = "cpu-substrate")]
+    pub fn cpu_reference() -> Result<Engine> {
+        let session = crate::runtime::cpu::CpuSession::new();
+        Engine::from_substrate(Box::new(session), false)
+    }
+
+    /// Build an engine over any [`Substrate`]. The host weight copy
+    /// (magnitude / wanda baselines need raw values) is loaded once and
+    /// uploaded through the trait, so both backends share one path.
+    pub fn from_substrate(session: Box<dyn Substrate>, trained: bool)
+                          -> Result<Engine> {
+        let host_weights = session.load_host_weights(trained)?;
+        let weights = WeightStore::from_host(&*session, &host_weights)?;
+        let metrics = session.metrics().clone();
         Ok(Engine {
             session,
             weights,
@@ -259,7 +283,7 @@ impl Engine {
     }
 
     pub fn config(&self) -> &ModelConfig {
-        &self.session.manifest.config
+        &self.session.manifest().config
     }
 
     // ------------------------------------------------------------------
@@ -276,16 +300,16 @@ impl Engine {
         let n = prompts.len();
         let batch = self
             .session
-            .manifest
+            .manifest()
             .batch_bucket(n)
             .with_context(|| format!("no batch bucket >= {n}"))?;
         let longest = prompts.iter().map(Vec::len).max().unwrap_or(1).max(1);
-        let exe = match self.session.manifest.seq_bucket(kind, batch,
-                                                         longest) {
+        let exe = match self.session.manifest().seq_bucket(kind, batch,
+                                                           longest) {
             Some(e) => e.name.clone(),
             None => self
                 .session
-                .manifest
+                .manifest()
                 .largest_seq_bucket(kind, batch)
                 .with_context(|| {
                     format!("no {kind} executable for batch={batch}")
@@ -293,7 +317,7 @@ impl Engine {
                 .name
                 .clone(),
         };
-        let bucket_seq = self.session.manifest.executables[&exe]
+        let bucket_seq = self.session.manifest().executables[&exe]
             .seq
             .unwrap();
 
@@ -411,9 +435,9 @@ impl Engine {
     /// cap, not the decode one. None = no admission ABI (old artifact
     /// sets — callers fall back to [`Engine::prefill`]).
     pub fn fused_prefill_cap(&self, n_prompts: usize) -> Option<usize> {
-        let batch = self.session.manifest.batch_bucket(n_prompts)?;
+        let batch = self.session.manifest().batch_bucket(n_prompts)?;
         self.session
-            .manifest
+            .manifest()
             .executables
             .values()
             .filter(|e| {
@@ -540,7 +564,7 @@ impl Engine {
     /// Round a keep fraction to the nearest compiled k bucket.
     pub fn k_for(&self, keep: f64) -> Result<usize> {
         self.session
-            .manifest
+            .manifest()
             .nearest_k(keep)
             .context("config has no keep_ks")
     }
@@ -599,13 +623,20 @@ impl Engine {
             bail!("keep {keep} outside (0,1]");
         }
         let cfg = self.config();
-        let candidates = self
+        let mut candidates: Vec<usize> = self
             .session
-            .manifest
+            .manifest()
             .executables
             .values()
             .filter(|e| e.kind == kind && e.batch == Some(batch))
-            .filter_map(|e| e.k);
+            .filter_map(|e| e.k)
+            .collect();
+        // ascending k, so an exact midpoint between two compiled
+        // buckets snaps to the SMALLER k everywhere (`nearest_k_of`
+        // keeps the first of tied candidates) — executable-name
+        // iteration order put k16 before k8 and made tie resolution an
+        // accident of naming
+        candidates.sort_unstable();
         crate::config::nearest_k_of(cfg.d_ff as f64 * keep, candidates)
             .map(|k| k as f64 / cfg.d_ff as f64)
             .with_context(|| {
@@ -622,7 +653,7 @@ impl Engine {
             bail!("gather: idx must be [L][k]");
         }
         let name = format!("gather_k{k}");
-        if !self.session.manifest.executables.contains_key(&name) {
+        if !self.session.manifest().executables.contains_key(&name) {
             bail!("no gather executable for k={k} \
                    (available: {:?})", cfg.keep_ks);
         }
@@ -686,7 +717,7 @@ impl Engine {
         let (idx, mask) = selection::adaptive_layer_allocation(
             stats, k_avg, k_bucket);
         let name = format!("gather_masked_k{k_bucket}");
-        if !self.session.manifest.executables.contains_key(&name) {
+        if !self.session.manifest().executables.contains_key(&name) {
             bail!("no {name} artifact (re-run make artifacts)");
         }
         let flat_idx: Vec<i32> = idx.iter().flatten().copied().collect();
@@ -887,7 +918,7 @@ impl Engine {
             Some(k) => format!("decode_pruned_sample_b{batch}_k{k}"),
             None => format!("decode_sample_b{batch}"),
         };
-        self.session.manifest.executables.get(&name)
+        self.session.manifest().executables.get(&name)
     }
 
     /// Build the device-resident per-slot sampling state: one
@@ -1033,7 +1064,7 @@ impl Engine {
         let name = format!("decode_b{batch}");
         let spec = self
             .session
-            .manifest
+            .manifest()
             .executables
             .get(&name)
             .with_context(|| format!("no decode executable for b={batch}"))?;
@@ -1086,7 +1117,7 @@ impl Engine {
     pub fn splice_spec(&self, src_b: usize, dst_b: usize)
                        -> Option<&ExecutableSpec> {
         self.session
-            .manifest
+            .manifest()
             .executables
             .get(&format!("splice_b{src_b}_b{dst_b}"))
     }
@@ -1450,7 +1481,7 @@ impl Engine {
                    -> Result<usize> {
         let need = max_new.saturating_sub(1).max(1);
         self.session
-            .manifest
+            .manifest()
             .executables
             .values()
             .filter(|e| {

@@ -9,15 +9,17 @@
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
 //! - `gather_cache` — LRU reuse of device-resident pruned weight sets
 //!
-//! `engine` and `scheduler` need the PJRT runtime and are gated behind
-//! the `runtime` cargo feature; everything else builds dependency-free
-//! (the CI substrate job runs with `--no-default-features`).
+//! `engine` and `scheduler` dispatch through the `runtime::Substrate`
+//! trait and are gated behind the internal `engine` cargo feature
+//! (enabled by the `runtime` PJRT backend or the `cpu-substrate`
+//! reference backend); everything else builds dependency-free (the CI
+//! substrate job runs with `--no-default-features`).
 
-#[cfg(feature = "runtime")]
+#[cfg(feature = "engine")]
 pub mod engine;
 pub mod gather_cache;
 pub mod router;
-#[cfg(feature = "runtime")]
+#[cfg(feature = "engine")]
 pub mod scheduler;
 pub mod selection;
 pub mod sequence;

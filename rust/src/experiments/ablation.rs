@@ -16,6 +16,7 @@ use crate::coordinator::engine::{Mode, PrefillLogits};
 use crate::coordinator::selection::Strategy;
 use crate::eval;
 use crate::experiments::common::{engine_auto, write_results};
+use crate::runtime::Substrate;
 use crate::workload::tasks;
 
 /// Extension ablation: uniform per-layer k (paper) vs layer-adaptive

@@ -9,7 +9,7 @@ use crate::cli::Args;
 use crate::coordinator::engine::{Engine, Mode, PrefillLogits};
 use crate::eval;
 use crate::experiments::common::{self, engine_auto, write_results};
-use crate::runtime::DeviceTensor;
+use crate::runtime::{DeviceTensor, Substrate};
 use crate::tokenizer::Tokenizer;
 use crate::util::top_k_indices;
 use crate::workload::{corpus, rng::XorShift64Star, tasks};
@@ -23,7 +23,7 @@ fn activation_map(engine: &Engine, ids: &[i32])
                   -> Result<(Vec<f32>, usize, usize, usize)> {
     let spec = engine
         .session
-        .manifest
+        .manifest()
         .executables
         .values()
         .find(|e| e.kind == "activations")

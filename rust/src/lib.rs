@@ -11,12 +11,18 @@
 //!   build environment is offline).
 //! - `experiments`, `bench_harness` — paper table/figure regeneration.
 //!
-//! The `runtime` cargo feature (default on) gates everything that needs
-//! the native xla_extension/PJRT library: `runtime`, the engine +
-//! scheduler, `server`, and `experiments`. With `--no-default-features`
-//! the substrate crates — json, config, sampling, coordinator types,
-//! api, router/slots/sequence — build and unit-test on machines without
-//! the toolchain (the CI substrate job).
+//! The engine, scheduler, and server dispatch to "the device" through
+//! the `runtime::Substrate` trait and are gated behind the internal
+//! `engine` cargo feature, which either backend enables: `runtime`
+//! (default on) provides the PJRT backend over the native xla_extension
+//! library, `cpu-substrate` (default off) provides the pure-Rust CPU
+//! reference backend (`runtime/cpu.rs`) so the full serving pyramid
+//! runs hard-gated on machines with no PJRT and no artifacts (the CI
+//! cpu-substrate job; docs/testing.md). With `--no-default-features`
+//! only the substrate crates — json, config, sampling, coordinator
+//! types, api, router/slots/sequence — build and unit-test.
+//! `experiments` stays PJRT-only (it drives artifact-specific
+//! executables).
 
 pub mod api;
 pub mod bench_harness;
@@ -28,10 +34,10 @@ pub mod eval;
 pub mod experiments;
 pub mod json;
 pub mod metrics;
-#[cfg(feature = "runtime")]
+#[cfg(feature = "engine")]
 pub mod runtime;
 pub mod sampling;
-#[cfg(feature = "runtime")]
+#[cfg(feature = "engine")]
 pub mod server;
 pub mod tensorfile;
 pub mod test_support;

@@ -13,6 +13,7 @@ use griffin::cli::{self, OptSpec};
 use griffin::coordinator::engine::{Engine, Mode};
 use griffin::coordinator::sequence::GenRequest;
 use griffin::experiments;
+use griffin::runtime::Substrate;
 use griffin::sampling::SamplerSpec;
 use griffin::test_support::artifact_path;
 use griffin::tokenizer::Tokenizer;
@@ -68,7 +69,7 @@ fn load_engine(args: &cli::Args) -> Result<Engine> {
         engine.config().param_count as f64 / 1e6,
         engine.config().activation,
         if trained { "trained" } else { "random" },
-        engine.session.manifest.executables.len()
+        engine.session.manifest().executables.len()
     );
     Ok(engine)
 }
@@ -157,10 +158,10 @@ fn cmd_configs() -> Result<()> {
 fn cmd_compile(args: &cli::Args) -> Result<()> {
     let engine = load_engine(args)?;
     let names: Vec<String> =
-        engine.session.manifest.executables.keys().cloned().collect();
+        engine.session.manifest().executables.keys().cloned().collect();
     for n in names {
         let t = std::time::Instant::now();
-        engine.session.executable(&n)?;
+        engine.session.compile(&n)?;
         println!("{n:<44} compiled in {:>8.1} ms",
                  t.elapsed().as_secs_f64() * 1e3);
     }

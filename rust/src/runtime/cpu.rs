@@ -1,0 +1,1354 @@
+//! CPU reference backend of the [`Substrate`] trait (cargo feature
+//! `cpu-substrate`, default off).
+//!
+//! A pure-Rust, dependency-free interpreter over a TINY deterministic
+//! model (seeded weights, 2 layers, byte-level vocab) that implements
+//! the full compiled-executable ABI **by name** — `prefill_b{B}_s{S}`,
+//! `prefill_sample_b{B}_s{S}`, `decode[_pruned][_sample]_b{B}[_k{K}]`,
+//! `splice_b{src}_b{dst}`, `gather[_masked]_k{K}` — with the same
+//! input/output orders, the same `[L, B, H, Smax, dh]` KV convention,
+//! the same eq.6/Wanda statistics, and the same xorshift32 fused-
+//! sampling lanes (`SAMPLE_TOPK` recorded per executable) as the HLO
+//! artifacts aot.py emits. `Engine`, `Scheduler`, `DispatchPlan`
+//! caching, and the v2 server therefore run end-to-end against it with
+//! no PJRT library and no `make artifacts` step.
+//!
+//! What this backend is FOR: proving the serving semantics — fused-vs-
+//! host token parity, routing-independent seeded streams, splice byte
+//! equality, admission byte budgets, containment, cancellation — on any
+//! stock machine, hard-gated in CI (docs/testing.md). What it is NOT: a
+//! numerical twin of the JAX model. The weights are synthesized (not
+//! weights.bin) and float arithmetic differs from XLA in ulps; all
+//! parity statements are *internal* (CPU-fused vs CPU-host), which is
+//! exactly the property the scheduler/engine contract needs — both
+//! routes share one forward implementation here just as both compiled
+//! variants share one lowered trunk on the PJRT side.
+//!
+//! Sampler-lane fidelity is the exception: the lanes call
+//! [`crate::sampling::sample_lane`], the SAME code the host
+//! `DeviceSampler` mirror executes, so mirror lockstep (`skip()`
+//! accounting, seeded stream resume across membership changes) is
+//! bit-exact by construction — the property the routing-independence
+//! tests pin.
+//!
+//! The interpreter is purely functional like the XLA executables:
+//! outputs are fresh buffers, inputs are never mutated, so a
+//! `DeviceTensor` can be shared freely (`Rc`). Host-transfer metering
+//! happens ONLY at the trait's upload/download boundary — compute
+//! inside `run` moves no metered bytes, mirroring "device-resident"
+//! semantics so the O(B)-bytes regression tests carry over unchanged.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    check_args, dtype_of, Buffer, DeviceTensor, DispatchPlan, HostData,
+    PlanExe, Substrate,
+};
+use crate::config::{ExecutableSpec, IoSpec, Manifest, ModelConfig};
+use crate::metrics::MetricsRegistry;
+use crate::sampling::{
+    log_softmax_at, sample_lane, sample_lane_with_scratch,
+};
+use crate::tensorfile::{DType, Tensor, TensorMap};
+use crate::workload::rng::XorShift64Star;
+
+/// The reference model (fixed — tests depend on these numbers):
+/// 2 layers, d_model 16, 2 heads, d_ff 32, swiglu, max_seq 64,
+/// byte-level vocab 259.
+pub const D_MODEL: usize = 16;
+pub const N_HEADS: usize = 2;
+pub const N_LAYERS: usize = 2;
+pub const D_FF: usize = 32;
+pub const MAX_SEQ: usize = 64;
+pub const VOCAB: usize = 259;
+const HEAD_DIM: usize = D_MODEL / N_HEADS;
+const ROPE_THETA: f32 = 10000.0;
+const EPS: f32 = 1e-5;
+
+/// Batch buckets the reference manifest compiles (largest = the
+/// scheduler's slot-pool size).
+pub const BATCH_BUCKETS: [usize; 3] = [1, 2, 4];
+/// Prompt-phase seq buckets.
+pub const PREFILL_BUCKETS: [usize; 2] = [16, 32];
+/// Pruned-decode k sweep (full sweep at B=1, headline k elsewhere —
+/// the same emission rule as aot.py).
+pub const KEEP_KS: [usize; 3] = [8, 16, 24];
+const K_HEADLINE: usize = 16;
+
+/// Compiled sampler truncation bucket of the reference executables.
+/// Deliberately DIFFERENT from `sampling::SAMPLE_TOPK` (32) so the
+/// manifest-cap (`DeviceSampler::with_cap`) path is exercised end-to-end
+/// rather than coinciding with the host-side default.
+pub const CPU_SAMPLE_TOPK: usize = 16;
+
+// ---------------------------------------------------------------------
+// manifest synthesis
+// ---------------------------------------------------------------------
+
+fn io(name: &str, shape: &[usize], dtype: &str) -> IoSpec {
+    IoSpec { name: name.into(), shape: shape.to_vec(), dtype: dtype.into() }
+}
+
+fn param_specs() -> Vec<(&'static str, Vec<usize>)> {
+    let (d, f, l, v) = (D_MODEL, D_FF, N_LAYERS, VOCAB);
+    // sorted-name ABI order, like model.param_specs
+    vec![
+        ("head", vec![v, d]),
+        ("ln1", vec![l, d]),
+        ("ln2", vec![l, d]),
+        ("ln_f", vec![d]),
+        ("tok_emb", vec![v, d]),
+        ("w1", vec![l, f, d]),
+        ("w2", vec![l, d, f]),
+        ("wg", vec![l, f, d]),
+        ("wk", vec![l, d, d]),
+        ("wo", vec![l, d, d]),
+        ("wq", vec![l, d, d]),
+        ("wv", vec![l, d, d]),
+    ]
+}
+
+fn param_ios() -> Vec<IoSpec> {
+    param_specs().iter().map(|(n, s)| io(n, s, "f32")).collect()
+}
+
+fn nonff_ios() -> Vec<IoSpec> {
+    param_specs()
+        .iter()
+        .filter(|(n, _)| !matches!(*n, "w1" | "w2" | "wg"))
+        .map(|(n, s)| io(n, s, "f32"))
+        .collect()
+}
+
+fn pruned_ios(k: usize) -> Vec<IoSpec> {
+    vec![
+        io("w1p", &[N_LAYERS, k, D_MODEL], "f32"),
+        io("w2p", &[N_LAYERS, D_MODEL, k], "f32"),
+        io("wgp", &[N_LAYERS, k, D_MODEL], "f32"),
+    ]
+}
+
+fn cache_shape(b: usize) -> Vec<usize> {
+    vec![N_LAYERS, b, N_HEADS, MAX_SEQ, HEAD_DIM]
+}
+
+fn sampling_ios(b: usize) -> Vec<IoSpec> {
+    vec![
+        io("temp", &[b], "f32"),
+        io("topk", &[b], "i32"),
+        io("rng", &[b], "i32"),
+    ]
+}
+
+fn exe(name: String, kind: &str, batch: Option<usize>, seq: Option<usize>,
+       k: Option<usize>, sample_topk: Option<usize>,
+       src_batch: Option<usize>, inputs: Vec<IoSpec>,
+       outputs: Vec<IoSpec>) -> ExecutableSpec {
+    ExecutableSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: kind.into(),
+        batch,
+        seq,
+        k,
+        gen: None,
+        sample_topk,
+        src_batch,
+        inputs,
+        outputs,
+    }
+}
+
+/// Build the reference manifest: the same executable zoo + naming rules
+/// as aot.py `emit_all`, minus the scan/activations/parity extras no
+/// serving path dispatches.
+pub fn reference_manifest() -> Manifest {
+    let (d, f, l, v) = (D_MODEL, D_FF, N_LAYERS, VOCAB);
+    let config = ModelConfig {
+        name: "cpu-ref-swiglu".into(),
+        activation: "swiglu".into(),
+        d_model: d,
+        n_heads: N_HEADS,
+        n_layers: l,
+        d_ff: f,
+        max_seq: MAX_SEQ,
+        vocab_size: v,
+        head_dim: HEAD_DIM,
+        is_glu: true,
+        batch_buckets: BATCH_BUCKETS.to_vec(),
+        prefill_buckets: PREFILL_BUCKETS.to_vec(),
+        keep_ks: KEEP_KS.to_vec(),
+        param_count: {
+            let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+            (v * d * 2 + l * per_layer + d) as u64
+        },
+    };
+
+    let mut executables = std::collections::BTreeMap::new();
+    let mut add = |e: ExecutableSpec| {
+        executables.insert(e.name.clone(), e);
+    };
+    let bmax = *BATCH_BUCKETS.iter().max().unwrap();
+    for &b in &BATCH_BUCKETS {
+        for &s in &PREFILL_BUCKETS {
+            let prompt_in = vec![
+                io("tokens", &[b, s], "i32"),
+                io("lengths", &[b], "i32"),
+            ];
+            let stat_outs = vec![
+                io("kcache", &cache_shape(b), "f32"),
+                io("vcache", &cache_shape(b), "f32"),
+                io("stats", &[l, b, f], "f32"),
+                io("xnorms", &[l, b, d], "f32"),
+                io("znorms", &[l, b, f], "f32"),
+            ];
+            let mut inputs = param_ios();
+            inputs.extend(prompt_in.clone());
+            let mut outputs = vec![io("logits", &[b, s, v], "f32")];
+            outputs.extend(stat_outs.iter().cloned());
+            add(exe(format!("prefill_b{b}_s{s}"), "prefill", Some(b),
+                    Some(s), None, None, None, inputs, outputs));
+
+            let mut inputs = param_ios();
+            inputs.extend(prompt_in);
+            inputs.extend(sampling_ios(b));
+            let mut outputs = vec![
+                io("token", &[b], "i32"),
+                io("logprob", &[b], "f32"),
+            ];
+            outputs.extend(stat_outs);
+            outputs.push(io("rng", &[b], "i32"));
+            add(exe(format!("prefill_sample_b{b}_s{s}"), "prefill_sample",
+                    Some(b), Some(s), None, Some(CPU_SAMPLE_TOPK), None,
+                    inputs, outputs));
+        }
+
+        let kv_tail = vec![
+            io("kcache", &cache_shape(b), "f32"),
+            io("vcache", &cache_shape(b), "f32"),
+            io("token", &[b], "i32"),
+            io("pos", &[b], "i32"),
+        ];
+        let kv_outs = vec![
+            io("kcache", &cache_shape(b), "f32"),
+            io("vcache", &cache_shape(b), "f32"),
+        ];
+        let sample_outs = |mut kv: Vec<IoSpec>| {
+            let mut outs = vec![
+                io("token", &[b], "i32"),
+                io("logprob", &[b], "f32"),
+            ];
+            outs.append(&mut kv);
+            outs.push(io("rng", &[b], "i32"));
+            outs
+        };
+
+        let mut inputs = param_ios();
+        inputs.extend(kv_tail.clone());
+        let mut outputs = vec![io("logits", &[b, v], "f32")];
+        outputs.extend(kv_outs.clone());
+        add(exe(format!("decode_b{b}"), "decode", Some(b), None, None,
+                None, None, inputs, outputs));
+
+        let mut inputs = param_ios();
+        inputs.extend(kv_tail.clone());
+        inputs.extend(sampling_ios(b));
+        add(exe(format!("decode_sample_b{b}"), "decode_sample", Some(b),
+                None, None, Some(CPU_SAMPLE_TOPK), None, inputs,
+                sample_outs(kv_outs.clone())));
+
+        let headline = [K_HEADLINE];
+        let ks: &[usize] = if b == 1 { &KEEP_KS } else { &headline };
+        for &k in ks {
+            let mut inputs = nonff_ios();
+            inputs.extend(pruned_ios(k));
+            inputs.extend(kv_tail.clone());
+            let mut outputs = vec![io("logits", &[b, v], "f32")];
+            outputs.extend(kv_outs.clone());
+            add(exe(format!("decode_pruned_b{b}_k{k}"), "decode_pruned",
+                    Some(b), None, Some(k), None, None, inputs, outputs));
+
+            let mut inputs = nonff_ios();
+            inputs.extend(pruned_ios(k));
+            inputs.extend(kv_tail.clone());
+            inputs.extend(sampling_ios(b));
+            add(exe(format!("decode_pruned_sample_b{b}_k{k}"),
+                    "decode_pruned_sample", Some(b), None, Some(k),
+                    Some(CPU_SAMPLE_TOPK), None, inputs,
+                    sample_outs(kv_outs.clone())));
+        }
+
+        // admission splice into the scheduler's pool bucket
+        let inputs = vec![
+            io("dst_kcache", &cache_shape(bmax), "f32"),
+            io("dst_vcache", &cache_shape(bmax), "f32"),
+            io("src_kcache", &cache_shape(b), "f32"),
+            io("src_vcache", &cache_shape(b), "f32"),
+            io("src_idx", &[bmax], "i32"),
+            io("take", &[bmax], "i32"),
+        ];
+        let outputs = vec![
+            io("kcache", &cache_shape(bmax), "f32"),
+            io("vcache", &cache_shape(bmax), "f32"),
+        ];
+        add(exe(format!("splice_b{b}_b{bmax}"), "splice", Some(bmax),
+                None, None, None, Some(b), inputs, outputs));
+    }
+
+    for &k in &KEEP_KS {
+        let inputs = vec![
+            io("w1", &[l, f, d], "f32"),
+            io("w2", &[l, d, f], "f32"),
+            io("wg", &[l, f, d], "f32"),
+            io("idx", &[l, k], "i32"),
+        ];
+        let outputs = vec![
+            io("w1p", &[l, k, d], "f32"),
+            io("w2p", &[l, d, k], "f32"),
+            io("wgp", &[l, k, d], "f32"),
+        ];
+        add(exe(format!("gather_k{k}"), "gather", None, None, Some(k),
+                None, None, inputs.clone(), outputs.clone()));
+        if k == K_HEADLINE {
+            let mut inputs = inputs;
+            inputs.push(io("mask", &[l, k], "f32"));
+            add(exe(format!("gather_masked_k{k}"), "gather_masked", None,
+                    None, Some(k), None, None, inputs, outputs));
+        }
+    }
+
+    Manifest {
+        dir: std::path::PathBuf::from("<cpu-reference>"),
+        config,
+        param_order: param_specs().iter().map(|(n, _)| n.to_string())
+            .collect(),
+        nonff_param_order: param_specs()
+            .iter()
+            .filter(|(n, _)| !matches!(*n, "w1" | "w2" | "wg"))
+            .map(|(n, _)| n.to_string())
+            .collect(),
+        pruned_param_order: vec!["w1p".into(), "w2p".into(), "wgp".into()],
+        weights_file: "<synthesized>".into(),
+        trained_weights_file: None,
+        executables,
+    }
+}
+
+/// Deterministic weight synthesis (GPT-2-style scaled init): `ln*` are
+/// ones, residual projections (`wo`, `w2`) down-scaled by sqrt(2L),
+/// everything else ~U(-1,1)*0.02. Fixed seed → every `CpuSession` in
+/// every process serves the identical model, so token streams are
+/// reproducible across test runs and machines.
+pub fn reference_weights(seed: u64) -> TensorMap {
+    let mut rng = XorShift64Star::new(seed.wrapping_add(0x9E37_79B9));
+    let mut map = TensorMap::new();
+    let resid_scale = 0.02 / (2.0 * N_LAYERS as f64).sqrt();
+    for (name, shape) in param_specs() {
+        let n: usize = shape.iter().product();
+        let vals: Vec<f32> = if name.starts_with("ln") {
+            vec![1.0; n]
+        } else {
+            let scale = if name == "wo" || name == "w2" {
+                resid_scale
+            } else {
+                0.02
+            };
+            (0..n)
+                .map(|_| ((rng.unit_f64() * 2.0 - 1.0) * scale) as f32)
+                .collect()
+        };
+        map.insert(name.to_string(), Tensor::from_f32(shape, &vals));
+    }
+    map
+}
+
+// ---------------------------------------------------------------------
+// session
+// ---------------------------------------------------------------------
+
+/// The CPU reference substrate. Stateless apart from the manifest and
+/// the metrics registry: weights flow through `run` arguments exactly
+/// like on the PJRT backend, so `WeightStore`, pruned sets, Wanda
+/// overrides, and `DispatchPlan` caching all exercise their real code
+/// paths.
+pub struct CpuSession {
+    pub manifest: Manifest,
+    metrics: Arc<MetricsRegistry>,
+    weight_seed: u64,
+}
+
+impl CpuSession {
+    pub fn new() -> CpuSession {
+        Self::with_seed(0)
+    }
+
+    /// A session over the same architecture with a different weight
+    /// seed (distinct logits landscapes for robustness tests).
+    pub fn with_seed(weight_seed: u64) -> CpuSession {
+        CpuSession {
+            manifest: reference_manifest(),
+            metrics: Arc::new(MetricsRegistry::default()),
+            weight_seed,
+        }
+    }
+
+    fn tensor_f32(&self, shape: &[usize], data: Vec<f32>) -> DeviceTensor {
+        DeviceTensor {
+            buffer: Buffer::Host(Rc::new(HostData::F32(data))),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+        }
+    }
+
+    fn tensor_i32(&self, shape: &[usize], data: Vec<i32>) -> DeviceTensor {
+        DeviceTensor {
+            buffer: Buffer::Host(Rc::new(HostData::I32(data))),
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+        }
+    }
+
+    /// Wrap interpreter outputs against the spec's output list (shape
+    /// and element-count checked — an interpreter bug fails loudly, it
+    /// never hands the engine a silently misshapen tensor).
+    fn outputs(&self, spec: &ExecutableSpec, outs: Vec<HostData>)
+               -> Result<Vec<DeviceTensor>> {
+        if outs.len() != spec.outputs.len() {
+            bail!("{}: interpreter produced {} outputs, spec has {}",
+                  spec.name, outs.len(), spec.outputs.len());
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (data, io) in outs.into_iter().zip(&spec.outputs) {
+            let n: usize = io.shape.iter().product();
+            let (len, dtype) = match &data {
+                HostData::F32(v) => (v.len(), DType::F32),
+                HostData::I32(v) => (v.len(), DType::I32),
+            };
+            if len != n || dtype != dtype_of(io) {
+                bail!("{}: output {:?} expects {} {:?} elements, \
+                       interpreter produced {} {:?}",
+                      spec.name, io.name, n, io.dtype, len, dtype);
+            }
+            tensors.push(DeviceTensor {
+                buffer: Buffer::Host(Rc::new(data)),
+                shape: io.shape.clone(),
+                dtype,
+            });
+        }
+        Ok(tensors)
+    }
+}
+
+impl Default for CpuSession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// -- argument access ---------------------------------------------------
+
+struct Args<'a> {
+    spec: &'a ExecutableSpec,
+    args: &'a [&'a DeviceTensor],
+}
+
+impl<'a> Args<'a> {
+    fn idx(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|io| io.name == name)
+            .with_context(|| {
+                format!("{}: no input named {name:?}", self.spec.name)
+            })
+    }
+
+    fn f32(&self, name: &str) -> Result<&'a [f32]> {
+        let t = self.args[self.idx(name)?];
+        match &t.buffer {
+            Buffer::Host(h) => match &**h {
+                HostData::F32(v) => Ok(v),
+                HostData::I32(_) => bail!("{name}: i32 where f32 expected"),
+            },
+            #[cfg(feature = "runtime")]
+            Buffer::Pjrt(_) => {
+                bail!("{name}: PJRT tensor passed to the CPU substrate")
+            }
+        }
+    }
+
+    fn i32(&self, name: &str) -> Result<&'a [i32]> {
+        let t = self.args[self.idx(name)?];
+        match &t.buffer {
+            Buffer::Host(h) => match &**h {
+                HostData::I32(v) => Ok(v),
+                HostData::F32(_) => bail!("{name}: f32 where i32 expected"),
+            },
+            #[cfg(feature = "runtime")]
+            Buffer::Pjrt(_) => {
+                bail!("{name}: PJRT tensor passed to the CPU substrate")
+            }
+        }
+    }
+}
+
+/// Full-parameter view (prefill / decode / decode_sample).
+struct Params<'a> {
+    tok_emb: &'a [f32],
+    head: &'a [f32],
+    ln_f: &'a [f32],
+    ln1: &'a [f32],
+    ln2: &'a [f32],
+    wq: &'a [f32],
+    wk: &'a [f32],
+    wv: &'a [f32],
+    wo: &'a [f32],
+}
+
+impl<'a> Params<'a> {
+    fn from(a: &Args<'a>) -> Result<Params<'a>> {
+        Ok(Params {
+            tok_emb: a.f32("tok_emb")?,
+            head: a.f32("head")?,
+            ln_f: a.f32("ln_f")?,
+            ln1: a.f32("ln1")?,
+            ln2: a.f32("ln2")?,
+            wq: a.f32("wq")?,
+            wk: a.f32("wk")?,
+            wv: a.f32("wv")?,
+            wo: a.f32("wo")?,
+        })
+    }
+}
+
+/// FF weight stacks: full ([L,F,D]/[L,D,F]) or gathered expert slices
+/// ([L,K,D]/[L,D,K]) — one decode body serves both, like `_decode_step`
+/// in model.py.
+struct FfWeights<'a> {
+    w1: &'a [f32],
+    w2: &'a [f32],
+    wg: &'a [f32],
+    width: usize,
+}
+
+// -- math helpers ------------------------------------------------------
+
+fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let mean_sq =
+        x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (mean_sq + EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * r * g[i];
+    }
+}
+
+/// out[r] = dot(w[r, :], x) — row-major w [rows, cols]; computes x @ W^T
+/// for a row-vector x.
+fn matvec_t(w: &[f32], rows: usize, cols: usize, x: &[f32],
+            out: &mut [f32]) {
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut acc = 0f32;
+        for c in 0..cols {
+            acc += row[c] * x[c];
+        }
+        out[r] = acc;
+    }
+}
+
+/// Rotate one head vector (len dh) in place: RoPE at position `pos`,
+/// pairwise halves like model.apply_rope.
+fn rope(v: &mut [f32], pos: i32) {
+    let half = HEAD_DIM / 2;
+    for i in 0..half {
+        let freq = ROPE_THETA.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let x1 = v[i];
+        let x2 = v[half + i];
+        v[i] = x1 * cos - x2 * sin;
+        v[half + i] = x1 * sin + x2 * cos;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// z = act(h2 @ wg^T) * (h2 @ w1^T) over one row (swiglu — the
+/// reference config is GLU; `width` is F or the gathered K).
+fn ff_activation(ff: &FfWeights, layer: usize, h2: &[f32],
+                 z: &mut [f32]) {
+    let (d, w) = (D_MODEL, ff.width);
+    let w1_l = &ff.w1[layer * w * d..(layer + 1) * w * d];
+    let wg_l = &ff.wg[layer * w * d..(layer + 1) * w * d];
+    for j in 0..w {
+        let mut a1 = 0f32;
+        let mut ag = 0f32;
+        let r1 = &w1_l[j * d..(j + 1) * d];
+        let rg = &wg_l[j * d..(j + 1) * d];
+        for c in 0..d {
+            a1 += r1[c] * h2[c];
+            ag += rg[c] * h2[c];
+        }
+        z[j] = silu(ag) * a1;
+    }
+}
+
+/// out += z @ w2^T over one row; w2 stack [L, D, width].
+fn ff_project(ff: &FfWeights, layer: usize, z: &[f32], out: &mut [f32]) {
+    let (d, w) = (D_MODEL, ff.width);
+    let w2_l = &ff.w2[layer * d * w..(layer + 1) * d * w];
+    for i in 0..d {
+        let row = &w2_l[i * w..(i + 1) * w];
+        let mut acc = 0f32;
+        for j in 0..w {
+            acc += row[j] * z[j];
+        }
+        out[i] += acc;
+    }
+}
+
+/// Softmax-weighted sum over cache rows [0..=last] of one head:
+/// out = sum_s softmax(q·k_s * scale)_s * v_s.
+fn attend_cache(q: &[f32], kc: &[f32], vc: &[f32], last: usize,
+                out: &mut [f32]) {
+    let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+    let n = last + 1;
+    let mut scores = vec![0f32; n];
+    let mut max_s = f32::NEG_INFINITY;
+    for s in 0..n {
+        let k = &kc[s * HEAD_DIM..(s + 1) * HEAD_DIM];
+        let mut dot = 0f32;
+        for i in 0..HEAD_DIM {
+            dot += q[i] * k[i];
+        }
+        let v = dot * scale;
+        scores[s] = v;
+        if v > max_s {
+            max_s = v;
+        }
+    }
+    let mut total = 0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        total += *s;
+    }
+    out.fill(0.0);
+    for s in 0..n {
+        let w = scores[s] / total;
+        let v = &vc[s * HEAD_DIM..(s + 1) * HEAD_DIM];
+        for i in 0..HEAD_DIM {
+            out[i] += w * v[i];
+        }
+    }
+}
+
+/// One lane of the fused-sampling ABI — the code path every
+/// `*_sample_*` executable's per-slot sampler runs. Delegates the token
+/// draw to [`crate::sampling::sample_lane`] (the identical arithmetic
+/// the host `DeviceSampler` mirror executes) and computes the logprob
+/// through the shared `log_softmax_at`, so fused-vs-host streams match
+/// bit-for-bit by construction. Returns (token, logprob, new state).
+pub fn sampler_lane(logits: &[f32], temp: f32, topk: i32, state: u32)
+                    -> (i32, f32, u32) {
+    let (tok, state) =
+        sample_lane(logits, temp, topk, state, CPU_SAMPLE_TOPK);
+    (tok as i32, log_softmax_at(logits, tok), state)
+}
+
+/// Per-slot sampler scratch reused across the lanes of one executable
+/// call (and across calls via the interpreter's stack frames being
+/// cheap to re-create) — no allocation inside the per-lane loop, the
+/// same discipline `DeviceSampler` applies host-side.
+#[derive(Default)]
+struct LaneScratch {
+    scratch: Vec<usize>,
+    cum: Vec<f32>,
+}
+
+impl LaneScratch {
+    fn lane(&mut self, logits: &[f32], temp: f32, topk: i32, state: u32)
+            -> (i32, f32, u32) {
+        let (tok, state) = sample_lane_with_scratch(
+            logits, temp, topk, state, CPU_SAMPLE_TOPK,
+            &mut self.scratch, &mut self.cum,
+        );
+        (tok as i32, log_softmax_at(logits, tok), state)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the interpreter
+// ---------------------------------------------------------------------
+
+struct PrefillOutputs {
+    /// pre-final-norm hidden states [B, S, D]
+    x: Vec<f32>,
+    kcache: Vec<f32>,
+    vcache: Vec<f32>,
+    stats: Vec<f32>,
+    xnorms: Vec<f32>,
+    znorms: Vec<f32>,
+}
+
+/// Shared prompt-phase trunk of prefill / prefill_sample (model.py
+/// `_prefill_body`): full causal attention over the padded [B, S]
+/// prompt, KV rows written at positions [0, S), eq.6 stats + Wanda
+/// norms over valid (non-pad) rows only.
+fn prefill_body(p: &Params, ff: &FfWeights, tokens: &[i32], lens: &[i32],
+                b: usize, s: usize) -> PrefillOutputs {
+    let (d, l_n, f) = (D_MODEL, N_LAYERS, ff.width);
+    let row_sz = N_HEADS * MAX_SEQ * HEAD_DIM;
+    let mut x = vec![0f32; b * s * d];
+    for bi in 0..b {
+        for t in 0..s {
+            let tok = tokens[bi * s + t].clamp(0, VOCAB as i32 - 1)
+                as usize;
+            x[(bi * s + t) * d..(bi * s + t + 1) * d]
+                .copy_from_slice(&p.tok_emb[tok * d..(tok + 1) * d]);
+        }
+    }
+    let mut kcache = vec![0f32; l_n * b * row_sz];
+    let mut vcache = vec![0f32; l_n * b * row_sz];
+    let mut stats = vec![0f32; l_n * b * f];
+    let mut xnorms = vec![0f32; l_n * b * d];
+    let mut znorms = vec![0f32; l_n * b * f];
+
+    let mut h = vec![0f32; d];
+    let mut q = vec![0f32; d];
+    let mut k = vec![0f32; d];
+    let mut v = vec![0f32; d];
+    let mut attn = vec![0f32; d];
+    let mut head_out = vec![0f32; HEAD_DIM];
+    let mut z = vec![0f32; f];
+    // per-(batch,layer) scratch of this layer's K/V rows at seq-bucket
+    // granularity, so prefill attention reads contiguous [S, dh] slabs
+    let mut kl = vec![0f32; N_HEADS * s * HEAD_DIM];
+    let mut vl = vec![0f32; N_HEADS * s * HEAD_DIM];
+    let mut ql = vec![0f32; N_HEADS * s * HEAD_DIM];
+
+    for l in 0..l_n {
+        let ln1 = &p.ln1[l * d..(l + 1) * d];
+        let ln2 = &p.ln2[l * d..(l + 1) * d];
+        let wq = &p.wq[l * d * d..(l + 1) * d * d];
+        let wk = &p.wk[l * d * d..(l + 1) * d * d];
+        let wv = &p.wv[l * d * d..(l + 1) * d * d];
+        let wo = &p.wo[l * d * d..(l + 1) * d * d];
+        for bi in 0..b {
+            // project + rope every position of this sequence
+            for t in 0..s {
+                let xr = &x[(bi * s + t) * d..(bi * s + t + 1) * d];
+                rmsnorm(xr, ln1, &mut h);
+                matvec_t(wq, d, d, &h, &mut q);
+                matvec_t(wk, d, d, &h, &mut k);
+                matvec_t(wv, d, d, &h, &mut v);
+                for hd in 0..N_HEADS {
+                    let span = hd * HEAD_DIM..(hd + 1) * HEAD_DIM;
+                    rope(&mut q[span.clone()], t as i32);
+                    rope(&mut k[span.clone()], t as i32);
+                    let dst = (hd * s + t) * HEAD_DIM;
+                    ql[dst..dst + HEAD_DIM]
+                        .copy_from_slice(&q[span.clone()]);
+                    kl[dst..dst + HEAD_DIM]
+                        .copy_from_slice(&k[span.clone()]);
+                    vl[dst..dst + HEAD_DIM].copy_from_slice(&v[span]);
+                }
+            }
+            // write this layer's K/V into the [L,B,H,Smax,dh] caches
+            for hd in 0..N_HEADS {
+                for t in 0..s {
+                    let src = (hd * s + t) * HEAD_DIM;
+                    let dst = ((l * b + bi) * N_HEADS + hd)
+                        * MAX_SEQ * HEAD_DIM
+                        + t * HEAD_DIM;
+                    kcache[dst..dst + HEAD_DIM]
+                        .copy_from_slice(&kl[src..src + HEAD_DIM]);
+                    vcache[dst..dst + HEAD_DIM]
+                        .copy_from_slice(&vl[src..src + HEAD_DIM]);
+                }
+            }
+            // causal attention + output projection, residual into x
+            for t in 0..s {
+                for hd in 0..N_HEADS {
+                    let qrow =
+                        &ql[(hd * s + t) * HEAD_DIM..(hd * s + t + 1)
+                            * HEAD_DIM];
+                    let krows = &kl[hd * s * HEAD_DIM..(hd + 1) * s
+                        * HEAD_DIM];
+                    let vrows = &vl[hd * s * HEAD_DIM..(hd + 1) * s
+                        * HEAD_DIM];
+                    attend_cache(qrow, krows, vrows, t, &mut head_out);
+                    attn[hd * HEAD_DIM..(hd + 1) * HEAD_DIM]
+                        .copy_from_slice(&head_out);
+                }
+                matvec_t(wo, d, d, &attn, &mut h);
+                let xr =
+                    &mut x[(bi * s + t) * d..(bi * s + t + 1) * d];
+                for i in 0..d {
+                    xr[i] += h[i];
+                }
+            }
+            // FF + statistics over valid rows
+            let valid = (lens[bi].max(1) as usize).min(s);
+            let st = &mut stats[(l * b + bi) * f..(l * b + bi + 1) * f];
+            let xn = &mut xnorms[(l * b + bi) * d..(l * b + bi + 1) * d];
+            let zn = &mut znorms[(l * b + bi) * f..(l * b + bi + 1) * f];
+            for t in 0..s {
+                let xr = &x[(bi * s + t) * d..(bi * s + t + 1) * d];
+                rmsnorm(xr, ln2, &mut h);
+                ff_activation(ff, l, &h, &mut z);
+                if t < valid {
+                    // eq.6: row-normalized activations' column norms
+                    let zn_row =
+                        z.iter().map(|a| a * a).sum::<f32>().sqrt();
+                    let denom = zn_row.max(1e-8);
+                    for j in 0..f {
+                        let rel = z[j] / denom;
+                        st[j] += rel * rel;
+                        zn[j] += z[j] * z[j];
+                    }
+                    for i in 0..d {
+                        xn[i] += h[i] * h[i];
+                    }
+                }
+                let xr =
+                    &mut x[(bi * s + t) * d..(bi * s + t + 1) * d];
+                ff_project(ff, l, &z, xr);
+            }
+            for a in st.iter_mut() {
+                *a = a.sqrt();
+            }
+            for a in zn.iter_mut() {
+                *a = a.sqrt();
+            }
+            for a in xn.iter_mut() {
+                *a = a.sqrt();
+            }
+        }
+    }
+    PrefillOutputs { x, kcache, vcache, stats, xnorms, znorms }
+}
+
+/// Final norm + LM head over one hidden row.
+fn lm_head_row(p: &Params, xr: &[f32]) -> Vec<f32> {
+    let mut normed = vec![0f32; D_MODEL];
+    rmsnorm(xr, p.ln_f, &mut normed);
+    let mut logits = vec![0f32; VOCAB];
+    matvec_t(p.head, VOCAB, D_MODEL, &normed, &mut logits);
+    logits
+}
+
+/// One decode step over the whole batch (model.py `_decode_step`):
+/// write K/V at `pos[b]`, attend `kpos <= pos[b]`, FF through `ff`
+/// (full or gathered), return per-slot logits.
+fn decode_body(p: &Params, ff: &FfWeights, kcache: &mut [f32],
+               vcache: &mut [f32], token: &[i32], pos: &[i32], b: usize)
+               -> Vec<f32> {
+    let d = D_MODEL;
+    let mut logits = vec![0f32; b * VOCAB];
+    let mut h = vec![0f32; d];
+    let mut q = vec![0f32; d];
+    let mut k = vec![0f32; d];
+    let mut v = vec![0f32; d];
+    let mut attn = vec![0f32; d];
+    let mut head_out = vec![0f32; HEAD_DIM];
+    let mut z = vec![0f32; ff.width];
+    for bi in 0..b {
+        // dynamic_update_slice semantics: out-of-range write positions
+        // clamp instead of trapping (the scheduler pins free slots to 0
+        // and guards context-full before decoding)
+        let wpos = (pos[bi].max(0) as usize).min(MAX_SEQ - 1);
+        let tok = token[bi].clamp(0, VOCAB as i32 - 1) as usize;
+        let mut x = p.tok_emb[tok * d..(tok + 1) * d].to_vec();
+        for l in 0..N_LAYERS {
+            let ln1 = &p.ln1[l * d..(l + 1) * d];
+            let ln2 = &p.ln2[l * d..(l + 1) * d];
+            rmsnorm(&x, ln1, &mut h);
+            matvec_t(&p.wq[l * d * d..(l + 1) * d * d], d, d, &h,
+                     &mut q);
+            matvec_t(&p.wk[l * d * d..(l + 1) * d * d], d, d, &h,
+                     &mut k);
+            matvec_t(&p.wv[l * d * d..(l + 1) * d * d], d, d, &h,
+                     &mut v);
+            for hd in 0..N_HEADS {
+                let span = hd * HEAD_DIM..(hd + 1) * HEAD_DIM;
+                rope(&mut q[span.clone()], pos[bi]);
+                rope(&mut k[span.clone()], pos[bi]);
+                let base = ((l * b + bi) * N_HEADS + hd)
+                    * MAX_SEQ * HEAD_DIM;
+                let dst = base + wpos * HEAD_DIM;
+                kcache[dst..dst + HEAD_DIM]
+                    .copy_from_slice(&k[span.clone()]);
+                vcache[dst..dst + HEAD_DIM]
+                    .copy_from_slice(&v[span.clone()]);
+                attend_cache(
+                    &q[span],
+                    &kcache[base..base + MAX_SEQ * HEAD_DIM],
+                    &vcache[base..base + MAX_SEQ * HEAD_DIM],
+                    wpos,
+                    &mut head_out,
+                );
+                attn[hd * HEAD_DIM..(hd + 1) * HEAD_DIM]
+                    .copy_from_slice(&head_out);
+            }
+            matvec_t(&p.wo[l * d * d..(l + 1) * d * d], d, d, &attn,
+                     &mut h);
+            for i in 0..d {
+                x[i] += h[i];
+            }
+            rmsnorm(&x, ln2, &mut h);
+            ff_activation(ff, l, &h, &mut z);
+            ff_project(ff, l, &z, &mut x);
+        }
+        let row = lm_head_row(p, &x);
+        logits[bi * VOCAB..(bi + 1) * VOCAB].copy_from_slice(&row);
+    }
+    logits
+}
+
+impl CpuSession {
+    fn interp(&self, spec: &ExecutableSpec, args: &[&DeviceTensor])
+              -> Result<Vec<HostData>> {
+        let a = Args { spec, args };
+        match spec.kind.as_str() {
+            "prefill" | "prefill_sample" => self.interp_prefill(spec, &a),
+            "decode" | "decode_pruned" | "decode_sample"
+            | "decode_pruned_sample" => self.interp_decode(spec, &a),
+            "splice" => self.interp_splice(spec, &a),
+            "gather" | "gather_masked" => self.interp_gather(spec, &a),
+            other => bail!("{}: kind {other:?} not served by the CPU \
+                            reference substrate", spec.name),
+        }
+    }
+
+    fn full_ff<'a>(&self, a: &Args<'a>) -> Result<FfWeights<'a>> {
+        Ok(FfWeights {
+            w1: a.f32("w1")?,
+            w2: a.f32("w2")?,
+            wg: a.f32("wg")?,
+            width: D_FF,
+        })
+    }
+
+    fn interp_prefill(&self, spec: &ExecutableSpec, a: &Args)
+                      -> Result<Vec<HostData>> {
+        let b = spec.batch.context("prefill without batch")?;
+        let s = spec.seq.context("prefill without seq")?;
+        let p = Params::from(a)?;
+        let ff = self.full_ff(a)?;
+        let tokens = a.i32("tokens")?;
+        let lens = a.i32("lengths")?;
+        let out = prefill_body(&p, &ff, tokens, lens, b, s);
+        if spec.kind == "prefill" {
+            let mut logits = vec![0f32; b * s * VOCAB];
+            for bi in 0..b {
+                for t in 0..s {
+                    let xr = &out.x
+                        [(bi * s + t) * D_MODEL..(bi * s + t + 1)
+                            * D_MODEL];
+                    logits[(bi * s + t) * VOCAB..(bi * s + t + 1)
+                        * VOCAB]
+                        .copy_from_slice(&lm_head_row(&p, xr));
+                }
+            }
+            Ok(vec![
+                HostData::F32(logits),
+                HostData::F32(out.kcache),
+                HostData::F32(out.vcache),
+                HostData::F32(out.stats),
+                HostData::F32(out.xnorms),
+                HostData::F32(out.znorms),
+            ])
+        } else {
+            // prefill_sample: only each sequence's last real row goes
+            // through the LM head; first token sampled on "device"
+            let temp = a.f32("temp")?;
+            let topk = a.i32("topk")?;
+            let rng = a.i32("rng")?;
+            let mut toks = vec![0i32; b];
+            let mut lps = vec![0f32; b];
+            let mut rng_out = vec![0i32; b];
+            let mut lanes = LaneScratch::default();
+            for bi in 0..b {
+                let last = ((lens[bi] - 1).max(0) as usize).min(s - 1);
+                let xr = &out.x[(bi * s + last) * D_MODEL
+                    ..(bi * s + last + 1) * D_MODEL];
+                let logits = lm_head_row(&p, xr);
+                let (t, lp, ns) = lanes.lane(
+                    &logits, temp[bi], topk[bi], rng[bi] as u32);
+                toks[bi] = t;
+                lps[bi] = lp;
+                rng_out[bi] = ns as i32;
+            }
+            Ok(vec![
+                HostData::I32(toks),
+                HostData::F32(lps),
+                HostData::F32(out.kcache),
+                HostData::F32(out.vcache),
+                HostData::F32(out.stats),
+                HostData::F32(out.xnorms),
+                HostData::F32(out.znorms),
+                HostData::I32(rng_out),
+            ])
+        }
+    }
+
+    fn interp_decode(&self, spec: &ExecutableSpec, a: &Args)
+                     -> Result<Vec<HostData>> {
+        let b = spec.batch.context("decode without batch")?;
+        let pruned = spec.kind.starts_with("decode_pruned");
+        let sampled = spec.kind.ends_with("sample");
+        let p = Params::from(a)?;
+        let ff = if pruned {
+            FfWeights {
+                w1: a.f32("w1p")?,
+                w2: a.f32("w2p")?,
+                wg: a.f32("wgp")?,
+                width: spec.k.context("pruned decode without k")?,
+            }
+        } else {
+            self.full_ff(a)?
+        };
+        let mut kcache = a.f32("kcache")?.to_vec();
+        let mut vcache = a.f32("vcache")?.to_vec();
+        let token = a.i32("token")?;
+        let pos = a.i32("pos")?;
+        let logits = decode_body(&p, &ff, &mut kcache, &mut vcache,
+                                 token, pos, b);
+        if !sampled {
+            return Ok(vec![
+                HostData::F32(logits),
+                HostData::F32(kcache),
+                HostData::F32(vcache),
+            ]);
+        }
+        let temp = a.f32("temp")?;
+        let topk = a.i32("topk")?;
+        let rng = a.i32("rng")?;
+        let mut toks = vec![0i32; b];
+        let mut lps = vec![0f32; b];
+        let mut rng_out = vec![0i32; b];
+        let mut lanes = LaneScratch::default();
+        for bi in 0..b {
+            let row = &logits[bi * VOCAB..(bi + 1) * VOCAB];
+            let (t, lp, ns) =
+                lanes.lane(row, temp[bi], topk[bi], rng[bi] as u32);
+            toks[bi] = t;
+            lps[bi] = lp;
+            rng_out[bi] = ns as i32;
+        }
+        Ok(vec![
+            HostData::I32(toks),
+            HostData::F32(lps),
+            HostData::F32(kcache),
+            HostData::F32(vcache),
+            HostData::I32(rng_out),
+        ])
+    }
+
+    fn interp_splice(&self, spec: &ExecutableSpec, a: &Args)
+                     -> Result<Vec<HostData>> {
+        let bd = spec.batch.context("splice without batch")?;
+        let bs = spec.src_batch.context("splice without src_batch")?;
+        let mut dk = a.f32("dst_kcache")?.to_vec();
+        let mut dv = a.f32("dst_vcache")?.to_vec();
+        let sk = a.f32("src_kcache")?;
+        let sv = a.f32("src_vcache")?;
+        let idx = a.i32("src_idx")?;
+        let take = a.i32("take")?;
+        let row = N_HEADS * MAX_SEQ * HEAD_DIM;
+        for b in 0..bd {
+            if take[b] <= 0 {
+                continue;
+            }
+            let si = (idx[b].max(0) as usize).min(bs - 1);
+            for l in 0..N_LAYERS {
+                let s0 = (l * bs + si) * row;
+                let d0 = (l * bd + b) * row;
+                dk[d0..d0 + row].copy_from_slice(&sk[s0..s0 + row]);
+                dv[d0..d0 + row].copy_from_slice(&sv[s0..s0 + row]);
+            }
+        }
+        Ok(vec![HostData::F32(dk), HostData::F32(dv)])
+    }
+
+    fn interp_gather(&self, spec: &ExecutableSpec, a: &Args)
+                     -> Result<Vec<HostData>> {
+        let k = spec.k.context("gather without k")?;
+        let (d, f, l_n) = (D_MODEL, D_FF, N_LAYERS);
+        let w1 = a.f32("w1")?;
+        let w2 = a.f32("w2")?;
+        let wg = a.f32("wg")?;
+        let idx = a.i32("idx")?;
+        let mask: Option<&[f32]> = if spec.kind == "gather_masked" {
+            Some(a.f32("mask")?)
+        } else {
+            None
+        };
+        let mut w1p = vec![0f32; l_n * k * d];
+        let mut w2p = vec![0f32; l_n * d * k];
+        let mut wgp = vec![0f32; l_n * k * d];
+        for l in 0..l_n {
+            for j in 0..k {
+                let e = (idx[l * k + j].max(0) as usize).min(f - 1);
+                let m = mask.map_or(1.0, |m| m[l * k + j]);
+                let src1 = &w1[(l * f + e) * d..(l * f + e + 1) * d];
+                let srcg = &wg[(l * f + e) * d..(l * f + e + 1) * d];
+                let dst = (l * k + j) * d;
+                for c in 0..d {
+                    w1p[dst + c] = src1[c] * m;
+                    wgp[dst + c] = srcg[c] * m;
+                }
+                // W2 columns move unmasked (gather_experts_masked zeroes
+                // only the W1/Wg rows; z_j is already exactly 0)
+                for r in 0..d {
+                    w2p[(l * d + r) * k + j] = w2[(l * d + r) * f + e];
+                }
+            }
+        }
+        Ok(vec![
+            HostData::F32(w1p),
+            HostData::F32(w2p),
+            HostData::F32(wgp),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Substrate impl
+// ---------------------------------------------------------------------
+
+impl Substrate for CpuSession {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    fn upload_f32(&self, shape: &[usize], data: &[f32])
+                  -> Result<DeviceTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("upload_f32: shape {shape:?} != {} elements",
+                  data.len());
+        }
+        self.metrics.host_bytes_to_device.add((n * 4) as u64);
+        Ok(self.tensor_f32(shape, data.to_vec()))
+    }
+
+    fn upload_i32(&self, shape: &[usize], data: &[i32])
+                  -> Result<DeviceTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("upload_i32: shape {shape:?} != {} elements",
+                  data.len());
+        }
+        self.metrics.host_bytes_to_device.add((n * 4) as u64);
+        Ok(self.tensor_i32(shape, data.to_vec()))
+    }
+
+    fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
+        self.metrics.host_bytes_to_device.add(t.data.len() as u64);
+        Ok(match t.dtype {
+            DType::F32 => self.tensor_f32(&t.shape, t.to_f32()?),
+            DType::I32 => self.tensor_i32(&t.shape, t.to_i32()?),
+        })
+    }
+
+    // (download_f32 / download_i32 use the Substrate default impls —
+    // shared metering, no backend-specific transfer path)
+
+    fn run(&self, name: &str, args: &[&DeviceTensor])
+           -> Result<Vec<DeviceTensor>> {
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?;
+        check_args(spec, args)?;
+        let outs = self.interp(spec, args)?;
+        self.outputs(spec, outs)
+    }
+
+    fn prepare(&self, name: &str, static_args: Vec<Rc<DeviceTensor>>)
+               -> Result<DispatchPlan> {
+        // pin the resolved spec in the plan: prepared dispatch then
+        // skips the name lookup and static re-validation, matching the
+        // documented DispatchPlan contract (and what PJRT plans do by
+        // pinning the compiled executable)
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?
+            .clone();
+        super::build_plan(&self.manifest, name, static_args,
+                          PlanExe::Interpreted(spec))
+    }
+
+    fn run_prepared(&self, plan: &DispatchPlan, dynamic: &[&DeviceTensor])
+                    -> Result<Vec<DeviceTensor>> {
+        plan.check_dynamic(dynamic)?;
+        let spec = match &plan.exe {
+            PlanExe::Interpreted(spec) => spec,
+            #[cfg(feature = "runtime")]
+            PlanExe::Pjrt(_) => {
+                bail!("{}: plan prepared by a different backend",
+                      plan.name)
+            }
+        };
+        let mut args: Vec<&DeviceTensor> =
+            Vec::with_capacity(plan.static_args().len() + dynamic.len());
+        args.extend(plan.static_args().iter().map(|t| &**t));
+        args.extend(dynamic.iter().copied());
+        let outs = self.interp(spec, &args)?;
+        self.outputs(spec, outs)
+    }
+
+    fn load_host_weights(&self, trained: bool) -> Result<TensorMap> {
+        if trained {
+            bail!("the CPU reference substrate has no trained weights");
+        }
+        Ok(reference_weights(self.weight_seed))
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        self.manifest
+            .executables
+            .get(name)
+            .map(|_| ())
+            .with_context(|| format!("unknown executable {name:?}"))
+    }
+
+    fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_is_well_formed() {
+        let m = reference_manifest();
+        // sorted-name ABI contract shared with aot.py
+        let mut sorted = m.param_order.clone();
+        sorted.sort();
+        assert_eq!(sorted, m.param_order);
+        assert!(m.nonff_param_order.iter()
+            .all(|n| !matches!(n.as_str(), "w1" | "w2" | "wg")));
+        // the full serving zoo resolves by name
+        for name in [
+            "prefill_b1_s16", "prefill_b4_s32", "prefill_sample_b2_s16",
+            "decode_b4", "decode_sample_b1", "decode_pruned_b1_k8",
+            "decode_pruned_sample_b4_k16", "splice_b1_b4", "splice_b4_b4",
+            "gather_k24", "gather_masked_k16",
+        ] {
+            assert!(m.executables.contains_key(name), "missing {name}");
+        }
+        // the full k sweep exists only at B=1, like aot.py emits it
+        assert!(!m.executables.contains_key("decode_pruned_b4_k8"));
+        // every executable's io lists are non-empty with valid dtypes
+        for e in m.executables.values() {
+            assert!(!e.inputs.is_empty() && !e.outputs.is_empty(),
+                    "{}", e.name);
+            for io in e.inputs.iter().chain(&e.outputs) {
+                assert!(io.dtype == "f32" || io.dtype == "i32");
+                assert!(!io.shape.is_empty());
+            }
+        }
+        // decode inputs start with params in ABI order, end with the
+        // dynamic tail — the DispatchPlan split the engine relies on
+        let dec = &m.executables["decode_b2"];
+        let names: Vec<&str> =
+            dec.inputs.iter().map(|i| i.name.as_str()).collect();
+        for (i, pname) in m.param_order.iter().enumerate() {
+            assert_eq!(names[i], pname);
+        }
+        assert!(names.ends_with(&["kcache", "vcache", "token", "pos"]));
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_complete() {
+        let a = reference_weights(0);
+        let b = reference_weights(0);
+        let c = reference_weights(1);
+        let m = reference_manifest();
+        for name in &m.param_order {
+            let ta = &a[name];
+            assert_eq!(ta.data, b[name].data, "{name} not deterministic");
+            let n: usize = ta.shape.iter().product();
+            assert_eq!(ta.element_count(), n);
+        }
+        assert_ne!(a["wq"].data, c["wq"].data,
+                   "different seeds give different weights");
+        assert!(a["ln1"].to_f32().unwrap().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn run_checks_args_and_is_pure() {
+        let s = CpuSession::new();
+        // wrong arity is an error, not a panic
+        assert!(s.run("decode_b1", &[]).is_err());
+        assert!(s.run("nope", &[]).is_err());
+        // splice is purely functional: inputs unchanged, outputs fresh
+        let row = N_HEADS * MAX_SEQ * HEAD_DIM;
+        let dst = s
+            .upload_f32(&cache_shape(4), &vec![1.0; N_LAYERS * 4 * row])
+            .unwrap();
+        let src = s
+            .upload_f32(&cache_shape(1), &vec![2.0; N_LAYERS * row])
+            .unwrap();
+        let idx = s.upload_i32(&[4], &[0, 0, 0, 0]).unwrap();
+        let take = s.upload_i32(&[4], &[0, 0, 1, 0]).unwrap();
+        let outs = s
+            .run("splice_b1_b4", &[&dst, &dst, &src, &src, &idx, &take])
+            .unwrap();
+        let k = outs[0].to_f32().unwrap();
+        // slot 2 took the source row, slot 0/1/3 kept the resident 1.0
+        assert_eq!(k[2 * row], 2.0);
+        assert_eq!(k[row], 1.0);
+        assert!(dst.to_f32().unwrap().iter().all(|&v| v == 1.0),
+                "inputs must never be mutated");
+    }
+
+    #[test]
+    fn gather_slices_expert_rows_and_columns() {
+        let s = CpuSession::new();
+        let w = reference_weights(0);
+        let w1 = s.upload_tensor(&w["w1"]).unwrap();
+        let w2 = s.upload_tensor(&w["w2"]).unwrap();
+        let wg = s.upload_tensor(&w["wg"]).unwrap();
+        let k = 8usize;
+        let idx_rows: Vec<i32> = (0..(N_LAYERS * k) as i32).collect();
+        let idx = s.upload_i32(&[N_LAYERS, k], &idx_rows).unwrap();
+        let outs = s.run("gather_k8", &[&w1, &w2, &wg, &idx]).unwrap();
+        let w1_host = w["w1"].to_f32().unwrap();
+        let w1p = outs[0].to_f32().unwrap();
+        // layer 0 expert j=1 row must equal w1[0, idx=1, :]
+        assert_eq!(&w1p[D_MODEL..2 * D_MODEL],
+                   &w1_host[D_MODEL..2 * D_MODEL]);
+        let w2_host = w["w2"].to_f32().unwrap();
+        let w2p = outs[1].to_f32().unwrap();
+        // w2p[l=0, r=0, j] == w2[l=0, r=0, idx[j]] (idx[j] = j here)
+        assert_eq!(&w2p[..k], &w2_host[..k]);
+    }
+
+    #[test]
+    fn sampler_lane_is_greedy_at_zero_temp() {
+        let logits = vec![0.0f32, 3.0, -1.0];
+        let (t, lp, s1) = sampler_lane(&logits, 0.0, 1, 7);
+        assert_eq!(t, 1);
+        assert!(lp <= 0.0);
+        let (t2, _, s2) = sampler_lane(&logits, 0.0, 1, s1);
+        assert_eq!(t2, 1);
+        assert_ne!(s1, s2, "rng advances every call");
+    }
+}

@@ -1,63 +1,96 @@
-//! PJRT runtime (Layer 3 ↔ artifacts bridge).
+//! Substrate abstraction (Layer 3 ↔ executable-ABI bridge).
 //!
-//! Loads `artifacts/<config>/*.hlo.txt`, compiles them on the PJRT CPU
-//! client (lazily, cached), uploads weights once, and dispatches
-//! executions with **device-resident buffers** (`execute_b`): between
-//! decode steps neither weights nor KV-cache cross the host boundary.
+//! The serving stack above this module — [`crate::coordinator::engine`],
+//! the scheduler, the server — speaks to "the device" exclusively through
+//! the [`Substrate`] trait: upload/download, named-executable dispatch
+//! (`run`), prepared dispatch plans (`prepare`/`run_prepared`), and
+//! manifest/weight access. Two backends implement it:
 //!
-//! Safety note: xla_extension *aborts the process* on shape-mismatched
-//! buffer arguments (fatal CHECK, observed in rust/tests/derisk_runtime.rs),
-//! so `Session::run` validates every argument's shape/dtype against the
-//! manifest before dispatch and returns a proper error instead.
+//! - `pjrt::Session` (cargo feature `runtime`): compiles
+//!   `artifacts/<config>/*.hlo.txt` on the PJRT CPU client and dispatches
+//!   with device-resident buffers — the production path.
+//! - `cpu::CpuSession` (cargo feature `cpu-substrate`): a pure-Rust,
+//!   dependency-free interpreter over a tiny synthesized model that
+//!   implements the same executable ABI by name. It exists so the engine /
+//!   scheduler / server test pyramid runs hard-gated on machines with no
+//!   PJRT library and no `make artifacts` step (docs/testing.md).
+//!
+//! (Plain code spans, not intra-doc links: each backend module only
+//! exists under its own feature, so a link would break the rustdoc
+//! `-D warnings` gate of the other tier.)
+//!
+//! Which backend an [`Engine`](crate::coordinator::engine::Engine) uses is
+//! fixed at construction (`Engine::load` → PJRT, `Engine::cpu_reference`
+//! → CPU); everything downstream is backend-agnostic.
 //!
 //! # Dispatch plans (the decode hot path)
 //!
-//! `Session::run` resolves the executable by name, validates every
-//! argument against the manifest `IoSpec`s, and rebuilds the full
-//! argument vector — fine for prefill/gather (once per admission), but
-//! wasteful for decode, which runs every tick with an argument list
-//! that is ~90% static weights. A [`DispatchPlan`] is a prepared
-//! binding built once per (executable, weight-set): it pins the static
-//! argument prefix (as `Rc<DeviceTensor>`s, so the weights stay alive),
-//! resolves and validates everything up front, and leaves only the
-//! per-step dynamic tail (KV caches, token/pos, sampling state) to be
-//! supplied to [`Session::run_prepared`] — which does a cheap O(dynamic)
-//! shape guard (xla aborts the process on mismatch, so this stays) but
-//! no name lookup, no `ExecutableSpec` clone, and no per-weight checks.
+//! `run` resolves the executable by name, validates every argument
+//! against the manifest `IoSpec`s, and rebuilds the full argument vector —
+//! fine for prefill/gather (once per admission), but wasteful for decode,
+//! which runs every tick with an argument list that is ~90% static
+//! weights. A [`DispatchPlan`] is a prepared binding built once per
+//! (executable, weight-set): it pins the static argument prefix (as
+//! `Rc<DeviceTensor>`s, so the weights stay alive), resolves and
+//! validates everything up front, and leaves only the per-step dynamic
+//! tail (KV caches, token/pos, sampling state) to be supplied to
+//! `run_prepared` — which does a cheap O(dynamic) shape guard but no name
+//! lookup and no per-weight checks.
 //!
 //! Host-boundary accounting: `upload_*` and `download_*` count bytes
-//! into the session's `MetricsRegistry` (`host_transfer_bytes` in the
+//! into the substrate's `MetricsRegistry` (`host_transfer_bytes` in the
 //! metrics snapshot) so tests and benches can assert what the fused
-//! decode path keeps on device. `DeviceTensor::to_f32/to_i32` remain
+//! decode path keeps on device. The CPU backend meters the SAME way —
+//! its "device" memory is host memory, but only bytes crossing the
+//! trait's upload/download boundary count, so the O(B)-bytes regression
+//! tests carry over unchanged. `DeviceTensor::to_f32/to_i32` remain
 //! unmetered escape hatches for tests.
 //!
-//! Threading: `PjRtBuffer` is not `Send` (raw pointer wrapper), so all
-//! runtime interaction stays on the engine thread; the server hands work
-//! over via channels (see server/).
+//! Threading: PJRT buffers are not `Send` (raw pointer wrappers) and the
+//! CPU backend mirrors the contract with `Rc` payloads, so all substrate
+//! interaction stays on the engine thread; the server hands work over
+//! via channels (see server/).
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::Path;
+#[cfg(feature = "cpu-substrate")]
+pub mod cpu;
+#[cfg(feature = "runtime")]
+pub mod pjrt;
+#[cfg(feature = "runtime")]
+pub use pjrt::Session;
+
 use std::rc::Rc;
 use std::sync::Arc;
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::{bail, Result};
 
 use crate::config::{ExecutableSpec, IoSpec, Manifest};
 use crate::metrics::MetricsRegistry;
-use crate::tensorfile::{self, DType, Tensor};
-
-/// Uploads larger than this bypass the reusable staging buffer so one
-/// KV-splice upload does not pin megabytes of host scratch forever.
-const STAGING_CAP_BYTES: usize = 1 << 20;
+use crate::tensorfile::{DType, Tensor, TensorMap};
 
 /// A device buffer plus the host-side metadata needed for shape checking.
 pub struct DeviceTensor {
-    pub buffer: PjRtBuffer,
+    pub buffer: Buffer,
     pub shape: Vec<usize>,
     pub dtype: DType,
+}
+
+/// Backend-specific payload of a [`DeviceTensor`].
+pub enum Buffer {
+    /// PJRT device buffer (the production runtime).
+    #[cfg(feature = "runtime")]
+    Pjrt(xla::PjRtBuffer),
+    /// CPU reference-backend "device" memory: host vectors behind `Rc`.
+    /// The interpreter is purely functional (outputs are fresh
+    /// allocations), so sharing is safe; `Rc` keeps the tensor `!Send`
+    /// like its PJRT counterpart, preserving the engine's single-thread
+    /// contract.
+    Host(Rc<HostData>),
+}
+
+/// Typed storage of a CPU-backend buffer.
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
 }
 
 impl DeviceTensor {
@@ -65,25 +98,45 @@ impl DeviceTensor {
         self.shape.iter().product()
     }
 
-    /// Download to host as f32 (decode logits, stats, ...).
+    /// Download to host as f32 (decode logits, stats, ...). Unmetered —
+    /// hot paths use [`Substrate::download_f32`] so the byte counters
+    /// reflect real boundary traffic.
     pub fn to_f32(&self) -> Result<Vec<f32>> {
         if self.dtype != DType::F32 {
             bail!("device tensor is {:?}, not f32", self.dtype);
         }
-        let lit = self.buffer.to_literal_sync()?;
-        Ok(lit.to_vec::<f32>()?)
+        match &self.buffer {
+            #[cfg(feature = "runtime")]
+            Buffer::Pjrt(b) => {
+                let lit = b.to_literal_sync()?;
+                Ok(lit.to_vec::<f32>()?)
+            }
+            Buffer::Host(h) => match &**h {
+                HostData::F32(v) => Ok(v.clone()),
+                HostData::I32(_) => bail!("host buffer holds i32, not f32"),
+            },
+        }
     }
 
     pub fn to_i32(&self) -> Result<Vec<i32>> {
         if self.dtype != DType::I32 {
             bail!("device tensor is {:?}, not i32", self.dtype);
         }
-        let lit = self.buffer.to_literal_sync()?;
-        Ok(lit.to_vec::<i32>()?)
+        match &self.buffer {
+            #[cfg(feature = "runtime")]
+            Buffer::Pjrt(b) => {
+                let lit = b.to_literal_sync()?;
+                Ok(lit.to_vec::<i32>()?)
+            }
+            Buffer::Host(h) => match &**h {
+                HostData::I32(v) => Ok(v.clone()),
+                HostData::F32(_) => bail!("host buffer holds f32, not i32"),
+            },
+        }
     }
 }
 
-fn dtype_of(io: &IoSpec) -> DType {
+pub(crate) fn dtype_of(io: &IoSpec) -> DType {
     if io.dtype == "i32" {
         DType::I32
     } else {
@@ -91,308 +144,102 @@ fn dtype_of(io: &IoSpec) -> DType {
     }
 }
 
-/// Compilation + weight store + dispatch for one model config.
-pub struct Session {
-    pub client: PjRtClient,
-    pub manifest: Manifest,
-    compiled: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
-    pub compile_times_ms: RefCell<BTreeMap<String, f64>>,
-    /// host-transfer byte counters land here (shared with the engine)
-    pub metrics: Arc<MetricsRegistry>,
-    /// reusable host staging for small per-step uploads (token/pos)
-    staging: RefCell<Vec<u8>>,
-}
+/// The executable substrate the engine dispatches to. Object-safe: the
+/// engine holds a `Box<dyn Substrate>` and never names a backend type.
+///
+/// Contract notes for implementors:
+/// - `run`/`run_prepared` must validate argument shapes/dtypes against
+///   the manifest and return an error on mismatch (never abort).
+/// - `upload_*`/`download_*` must meter byte counts into the registry's
+///   `host_bytes_to_{device,host}` counters — regression tests assert
+///   host-boundary budgets through them.
+/// - `load_host_weights` returns the FULL parameter set as host tensors
+///   (the engine keeps a host copy for magnitude/Wanda scoring and
+///   uploads the device copy through `upload_tensor`).
+pub trait Substrate {
+    /// The executable/ABI description this substrate serves.
+    fn manifest(&self) -> &Manifest;
 
-impl Session {
-    pub fn load(artifact_dir: &Path) -> Result<Session> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu()?;
-        Ok(Session {
-            client,
-            manifest,
-            compiled: RefCell::new(BTreeMap::new()),
-            compile_times_ms: RefCell::new(BTreeMap::new()),
-            metrics: Arc::new(MetricsRegistry::default()),
-            staging: RefCell::new(Vec::new()),
-        })
-    }
+    /// Shared metrics registry (host-transfer counters land here).
+    fn metrics(&self) -> &Arc<MetricsRegistry>;
 
-    /// Compile (or fetch from cache) an executable by manifest name.
-    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(e) = self.compiled.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .executables
-            .get(name)
-            .with_context(|| format!("unknown executable {name:?}"))?;
-        let path = self.manifest.hlo_path(spec);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.compile_times_ms.borrow_mut().insert(name.to_string(), ms);
-        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
+    fn upload_f32(&self, shape: &[usize], data: &[f32])
+                  -> Result<DeviceTensor>;
 
-    pub fn compiled_count(&self) -> usize {
-        self.compiled.borrow().len()
-    }
+    fn upload_i32(&self, shape: &[usize], data: &[i32])
+                  -> Result<DeviceTensor>;
 
-    // -- host -> device -------------------------------------------------
-
-    /// Stage `n_bytes` of little-endian data via the reusable scratch
-    /// buffer (single preallocated write — these uploads run every
-    /// decode step for token/pos) and create a device buffer from it.
-    /// PJRT's `buffer_from_host_literal` copies, so the scratch can be
-    /// reused immediately; oversized uploads get a one-off allocation.
-    fn upload_le_bytes(
-        &self,
-        ty: ElementType,
-        dtype: DType,
-        shape: &[usize],
-        fill: impl FnOnce(&mut [u8]),
-        n_bytes: usize,
-    ) -> Result<DeviceTensor> {
-        let mut staged;
-        let mut keep;
-        let bytes: &mut [u8] = if n_bytes <= STAGING_CAP_BYTES {
-            keep = self.staging.borrow_mut();
-            keep.resize(n_bytes.max(keep.len()), 0);
-            &mut keep[..n_bytes]
-        } else {
-            staged = vec![0u8; n_bytes];
-            &mut staged
-        };
-        fill(bytes);
-        let lit = Literal::create_from_shape_and_untyped_data(
-            ty, shape, bytes)?;
-        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
-        self.metrics.host_bytes_to_device.add(n_bytes as u64);
-        Ok(DeviceTensor { buffer, shape: shape.to_vec(), dtype })
-    }
-
-    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<DeviceTensor> {
-        let n: usize = shape.iter().product();
-        if n != data.len() {
-            bail!("upload_f32: shape {shape:?} != {} elements", data.len());
-        }
-        self.upload_le_bytes(
-            ElementType::F32,
-            DType::F32,
-            shape,
-            |bytes| {
-                for (chunk, v) in bytes.chunks_exact_mut(4).zip(data) {
-                    chunk.copy_from_slice(&v.to_le_bytes());
-                }
-            },
-            n * 4,
-        )
-    }
-
-    pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<DeviceTensor> {
-        let n: usize = shape.iter().product();
-        if n != data.len() {
-            bail!("upload_i32: shape {shape:?} != {} elements", data.len());
-        }
-        self.upload_le_bytes(
-            ElementType::S32,
-            DType::I32,
-            shape,
-            |bytes| {
-                for (chunk, v) in bytes.chunks_exact_mut(4).zip(data) {
-                    chunk.copy_from_slice(&v.to_le_bytes());
-                }
-            },
-            n * 4,
-        )
-    }
-
-    pub fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
-        let ty = match t.dtype {
-            DType::F32 => ElementType::F32,
-            DType::I32 => ElementType::S32,
-        };
-        let lit = Literal::create_from_shape_and_untyped_data(
-            ty, &t.shape, &t.data)?;
-        let buffer = self.client.buffer_from_host_literal(None, &lit)?;
-        self.metrics.host_bytes_to_device.add(t.data.len() as u64);
-        Ok(DeviceTensor {
-            buffer,
-            shape: t.shape.clone(),
-            dtype: t.dtype,
-        })
-    }
-
-    // -- device -> host (metered) ----------------------------------------
+    fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor>;
 
     /// Download as f32, counting the bytes into `host_bytes_to_host`.
-    /// All engine hot paths use these so the metric reflects real
-    /// boundary traffic; `DeviceTensor::to_f32` stays for tests.
-    pub fn download_f32(&self, t: &DeviceTensor) -> Result<Vec<f32>> {
+    /// Default impl covers both backends (the buffer knows how to reach
+    /// the host; only the metering is boundary policy) — override only
+    /// if a backend needs a different transfer path.
+    fn download_f32(&self, t: &DeviceTensor) -> Result<Vec<f32>> {
         let v = t.to_f32()?;
-        self.metrics.host_bytes_to_host.add((v.len() * 4) as u64);
+        self.metrics().host_bytes_to_host.add((v.len() * 4) as u64);
         Ok(v)
     }
 
-    pub fn download_i32(&self, t: &DeviceTensor) -> Result<Vec<i32>> {
+    fn download_i32(&self, t: &DeviceTensor) -> Result<Vec<i32>> {
         let v = t.to_i32()?;
-        self.metrics.host_bytes_to_host.add((v.len() * 4) as u64);
+        self.metrics().host_bytes_to_host.add((v.len() * 4) as u64);
         Ok(v)
     }
-
-    // -- dispatch ---------------------------------------------------------
 
     /// Execute by manifest name with shape-checked device arguments.
     /// (Cold paths: prefill, gather, scans. The decode loop uses
-    /// `prepare` + `run_prepared` instead.) The spec is borrowed, not
-    /// cloned — validation only reads it.
-    pub fn run(&self, name: &str, args: &[&DeviceTensor])
-               -> Result<Vec<DeviceTensor>> {
-        let spec = self
-            .manifest
-            .executables
-            .get(name)
-            .with_context(|| format!("unknown executable {name:?}"))?;
-        self.check_args(spec, args)?;
-        let exe = self.executable(name)?;
-        let bufs: Vec<&PjRtBuffer> =
-            args.iter().map(|a| &a.buffer).collect();
-        let mut outs = exe.execute_b::<&PjRtBuffer>(&bufs)?;
-        if outs.is_empty() {
-            bail!("{name}: no replica outputs");
-        }
-        let row = outs.remove(0);
-        if row.len() != spec.outputs.len() {
-            bail!(
-                "{name}: expected {} outputs, got {} — was the xla crate \
-                 patch (untuple_result) applied?",
-                spec.outputs.len(),
-                row.len()
-            );
-        }
-        Ok(row
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(buffer, io)| DeviceTensor {
-                buffer,
-                shape: io.shape.clone(),
-                dtype: dtype_of(io),
-            })
-            .collect())
-    }
+    /// `prepare` + `run_prepared` instead.)
+    fn run(&self, name: &str, args: &[&DeviceTensor])
+           -> Result<Vec<DeviceTensor>>;
 
-    fn check_args(&self, spec: &ExecutableSpec, args: &[&DeviceTensor])
-                  -> Result<()> {
-        if args.len() != spec.inputs.len() {
-            bail!(
-                "{}: expected {} args ({:?}...), got {}",
-                spec.name,
-                spec.inputs.len(),
-                spec.inputs.iter().take(3).map(|i| &i.name).collect::<Vec<_>>(),
-                args.len()
-            );
-        }
-        for (arg, io) in args.iter().zip(&spec.inputs) {
-            if arg.shape != io.shape || arg.dtype != dtype_of(io) {
-                bail!(
-                    "{}: arg {:?} expects {:?} {:?}, got {:?} {:?}",
-                    spec.name, io.name, io.dtype, io.shape,
-                    arg.dtype, arg.shape
-                );
-            }
-        }
-        Ok(())
-    }
-
-    // -- prepared dispatch (decode hot loop) ------------------------------
-
-    /// Build a [`DispatchPlan`]: resolve + compile the executable once,
-    /// validate and pin the static argument prefix, and precompute the
-    /// dynamic-tail and output specs so `run_prepared` does no lookups.
-    pub fn prepare(&self, name: &str, static_args: Vec<Rc<DeviceTensor>>)
-                   -> Result<DispatchPlan> {
-        let spec = self
-            .manifest
-            .executables
-            .get(name)
-            .with_context(|| format!("unknown executable {name:?}"))?;
-        let shapes: Vec<(Vec<usize>, DType)> = static_args
-            .iter()
-            .map(|t| (t.shape.clone(), t.dtype))
-            .collect();
-        let dyn_specs = plan_dynamic_specs(spec, &shapes)?;
-        let out_specs = spec
-            .outputs
-            .iter()
-            .map(|io| (io.shape.clone(), dtype_of(io)))
-            .collect();
-        let exe = self.executable(name)?;
-        Ok(DispatchPlan {
-            name: name.to_string(),
-            exe,
-            static_args,
-            dyn_specs,
-            out_specs,
-        })
-    }
+    /// Build a [`DispatchPlan`]: resolve (and for PJRT, compile) the
+    /// executable once, validate and pin the static argument prefix, and
+    /// precompute the dynamic-tail and output specs so `run_prepared`
+    /// does no lookups.
+    fn prepare(&self, name: &str, static_args: Vec<Rc<DeviceTensor>>)
+               -> Result<DispatchPlan>;
 
     /// Execute a prepared plan with only the per-step dynamic tail.
-    /// The remaining per-call guard is an O(|dynamic|) shape check —
-    /// xla_extension aborts the whole process on a mismatched buffer,
-    /// so this stays even on the hot path (4-7 tiny comparisons).
-    pub fn run_prepared(&self, plan: &DispatchPlan,
-                        dynamic: &[&DeviceTensor])
-                        -> Result<Vec<DeviceTensor>> {
-        if dynamic.len() != plan.dyn_specs.len() {
-            bail!(
-                "{}: prepared plan takes {} dynamic args, got {}",
-                plan.name,
-                plan.dyn_specs.len(),
-                dynamic.len()
-            );
-        }
-        for (arg, (shape, dtype)) in dynamic.iter().zip(&plan.dyn_specs) {
-            if &arg.shape != shape || arg.dtype != *dtype {
-                bail!(
-                    "{}: dynamic arg expects {:?} {:?}, got {:?} {:?}",
-                    plan.name, dtype, shape, arg.dtype, arg.shape
-                );
-            }
-        }
-        let mut bufs: Vec<&PjRtBuffer> =
-            Vec::with_capacity(plan.static_args.len() + dynamic.len());
-        bufs.extend(plan.static_args.iter().map(|t| &t.buffer));
-        bufs.extend(dynamic.iter().map(|t| &t.buffer));
-        let mut outs = plan.exe.execute_b::<&PjRtBuffer>(&bufs)?;
-        if outs.is_empty() {
-            bail!("{}: no replica outputs", plan.name);
-        }
-        let row = outs.remove(0);
-        if row.len() != plan.out_specs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                plan.name,
-                plan.out_specs.len(),
-                row.len()
-            );
-        }
-        Ok(row
-            .into_iter()
-            .zip(&plan.out_specs)
-            .map(|(buffer, (shape, dtype))| DeviceTensor {
-                buffer,
-                shape: shape.clone(),
-                dtype: *dtype,
-            })
-            .collect())
+    fn run_prepared(&self, plan: &DispatchPlan, dynamic: &[&DeviceTensor])
+                    -> Result<Vec<DeviceTensor>>;
+
+    /// The full parameter set as host tensors in manifest ABI naming
+    /// (PJRT: weights.bin / weights_trained.bin; CPU: synthesized
+    /// deterministically).
+    fn load_host_weights(&self, trained: bool) -> Result<TensorMap>;
+
+    /// Force ahead-of-time preparation of one executable (PJRT: compile
+    /// + cache; CPU: name check only).
+    fn compile(&self, name: &str) -> Result<()>;
+
+    /// Number of executables prepared so far (PJRT compile cache size;
+    /// the CPU interpreter reports 0 — it has no compile step).
+    fn compiled_count(&self) -> usize;
+}
+
+/// Shared argument validation for `Substrate::run` implementations.
+pub(crate) fn check_args(spec: &ExecutableSpec, args: &[&DeviceTensor])
+                         -> Result<()> {
+    if args.len() != spec.inputs.len() {
+        bail!(
+            "{}: expected {} args ({:?}...), got {}",
+            spec.name,
+            spec.inputs.len(),
+            spec.inputs.iter().take(3).map(|i| &i.name).collect::<Vec<_>>(),
+            args.len()
+        );
     }
+    for (arg, io) in args.iter().zip(&spec.inputs) {
+        if arg.shape != io.shape || arg.dtype != dtype_of(io) {
+            bail!(
+                "{}: arg {:?} expects {:?} {:?}, got {:?} {:?}",
+                spec.name, io.name, io.dtype, io.shape,
+                arg.dtype, arg.shape
+            );
+        }
+    }
+    Ok(())
 }
 
 /// A prepared, shape-checked argument binding for one executable and one
@@ -400,10 +247,56 @@ impl Session {
 /// arguments' device buffers alive via `Rc`.
 pub struct DispatchPlan {
     pub name: String,
-    exe: Rc<PjRtLoadedExecutable>,
+    pub(crate) exe: PlanExe,
+    pub(crate) static_args: Vec<Rc<DeviceTensor>>,
+    pub(crate) dyn_specs: Vec<(Vec<usize>, DType)>,
+    pub(crate) out_specs: Vec<(Vec<usize>, DType)>,
+}
+
+/// Backend handle a plan dispatches through.
+pub(crate) enum PlanExe {
+    /// Compiled PJRT executable, pinned so repeat dispatch skips the
+    /// compile-cache lookup.
+    #[cfg(feature = "runtime")]
+    Pjrt(Rc<xla::PjRtLoadedExecutable>),
+    /// The interpreter has no compile step; the plan pins its resolved
+    /// spec instead, so `run_prepared` skips the name lookup and the
+    /// static-argument re-validation exactly like the PJRT path.
+    Interpreted(ExecutableSpec),
+}
+
+/// Shared construction of a [`DispatchPlan`] (the spec-resolution /
+/// validation half both backends need; the backend supplies its
+/// executable handle). Keeping this in one place means a change to plan
+/// validation cannot silently desynchronize the two backends.
+pub(crate) fn build_plan(
+    manifest: &Manifest,
+    name: &str,
     static_args: Vec<Rc<DeviceTensor>>,
-    dyn_specs: Vec<(Vec<usize>, DType)>,
-    out_specs: Vec<(Vec<usize>, DType)>,
+    exe: PlanExe,
+) -> Result<DispatchPlan> {
+    use anyhow::Context;
+    let spec = manifest
+        .executables
+        .get(name)
+        .with_context(|| format!("unknown executable {name:?}"))?;
+    let shapes: Vec<(Vec<usize>, DType)> = static_args
+        .iter()
+        .map(|t| (t.shape.clone(), t.dtype))
+        .collect();
+    let dyn_specs = plan_dynamic_specs(spec, &shapes)?;
+    let out_specs = spec
+        .outputs
+        .iter()
+        .map(|io| (io.shape.clone(), dtype_of(io)))
+        .collect();
+    Ok(DispatchPlan {
+        name: name.to_string(),
+        exe,
+        static_args,
+        dyn_specs,
+        out_specs,
+    })
 }
 
 impl DispatchPlan {
@@ -422,11 +315,36 @@ impl DispatchPlan {
     pub fn static_args(&self) -> &[Rc<DeviceTensor>] {
         &self.static_args
     }
+
+    /// Shared guard for `run_prepared` implementations: O(|dynamic|)
+    /// arity + shape check (PJRT aborts the whole process on a
+    /// mismatched buffer, so this stays even on the hot path).
+    pub(crate) fn check_dynamic(&self, dynamic: &[&DeviceTensor])
+                                -> Result<()> {
+        if dynamic.len() != self.dyn_specs.len() {
+            bail!(
+                "{}: prepared plan takes {} dynamic args, got {}",
+                self.name,
+                self.dyn_specs.len(),
+                dynamic.len()
+            );
+        }
+        for (arg, (shape, dtype)) in dynamic.iter().zip(&self.dyn_specs) {
+            if &arg.shape != shape || arg.dtype != *dtype {
+                bail!(
+                    "{}: dynamic arg expects {:?} {:?}, got {:?} {:?}",
+                    self.name, dtype, shape, arg.dtype, arg.shape
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Validate a static argument prefix against an executable spec and
 /// return the remaining (dynamic) input specs. Pure — this is the
-/// shape/arity half of `Session::prepare`, unit-testable without PJRT.
+/// shape/arity half of `Substrate::prepare`, unit-testable without any
+/// backend.
 pub fn plan_dynamic_specs(
     spec: &ExecutableSpec,
     static_shapes: &[(Vec<usize>, DType)],
@@ -456,27 +374,38 @@ pub fn plan_dynamic_specs(
 /// Device-resident model weights in manifest ABI order.
 pub struct WeightStore {
     /// name -> device tensor (full parameter set)
-    pub params: BTreeMap<String, Rc<DeviceTensor>>,
+    pub params: std::collections::BTreeMap<String, Rc<DeviceTensor>>,
     pub param_order: Vec<String>,
     pub nonff_order: Vec<String>,
 }
 
 impl WeightStore {
-    /// Upload weights.bin (or weights_trained.bin) once at startup.
-    pub fn load(session: &Session, trained: bool) -> Result<WeightStore> {
-        let path = session.manifest.weights_path(trained)?;
-        let tensors = tensorfile::read(&path)?;
-        let mut params = BTreeMap::new();
-        for name in &session.manifest.param_order {
+    /// Upload the substrate's weight set once at startup.
+    pub fn load(substrate: &dyn Substrate, trained: bool)
+                -> Result<WeightStore> {
+        let tensors = substrate.load_host_weights(trained)?;
+        Self::from_host(substrate, &tensors)
+    }
+
+    /// Upload an already-loaded host weight set (the engine keeps the
+    /// host copy for magnitude/Wanda scoring, so it loads once and
+    /// shares).
+    pub fn from_host(substrate: &dyn Substrate, tensors: &TensorMap)
+                     -> Result<WeightStore> {
+        use anyhow::Context;
+        let manifest = substrate.manifest();
+        let mut params = std::collections::BTreeMap::new();
+        for name in &manifest.param_order {
             let t = tensors
                 .get(name)
                 .with_context(|| format!("weights missing {name:?}"))?;
-            params.insert(name.clone(), Rc::new(session.upload_tensor(t)?));
+            params.insert(name.clone(),
+                          Rc::new(substrate.upload_tensor(t)?));
         }
         Ok(WeightStore {
             params,
-            param_order: session.manifest.param_order.clone(),
-            nonff_order: session.manifest.nonff_param_order.clone(),
+            param_order: manifest.param_order.clone(),
+            nonff_order: manifest.nonff_param_order.clone(),
         })
     }
 
@@ -513,55 +442,7 @@ impl WeightStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::test_support::artifact_path;
-
-    fn session() -> Option<Session> {
-        let dir = artifact_path("tiny-swiglu");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts missing");
-            return None;
-        }
-        Some(Session::load(&dir).unwrap())
-    }
-
-    #[test]
-    fn upload_roundtrip() {
-        let _g = crate::test_support::pjrt_lock();
-        let Some(s) = session() else { return };
-        let dt = s.upload_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(dt.to_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
-        let it = s.upload_i32(&[4], &[7, -1, 0, 3]).unwrap();
-        assert_eq!(it.to_i32().unwrap(), vec![7, -1, 0, 3]);
-        assert!(s.upload_f32(&[2, 2], &[1.0]).is_err());
-    }
-
-    #[test]
-    fn run_rejects_bad_args() {
-        let _g = crate::test_support::pjrt_lock();
-        let Some(s) = session() else { return };
-        let dt = s.upload_f32(&[1], &[0.0]).unwrap();
-        // wrong arity
-        let err = match s.run("decode_b1", &[&dt]) {
-            Ok(_) => panic!("expected arity error"),
-            Err(e) => e.to_string(),
-        };
-        assert!(err.contains("expected"), "{err}");
-        // unknown name
-        assert!(s.run("nope", &[]).is_err());
-    }
-
-    #[test]
-    fn weight_store_uploads_all_params() {
-        let _g = crate::test_support::pjrt_lock();
-        let Some(s) = session() else { return };
-        let ws = WeightStore::load(&s, false).unwrap();
-        assert_eq!(ws.ordered().len(), s.manifest.param_order.len());
-        assert_eq!(
-            ws.get("tok_emb").shape,
-            vec![s.manifest.config.vocab_size, s.manifest.config.d_model]
-        );
-        assert!(ws.ordered_nonff().len() < ws.ordered().len());
-    }
+    use crate::config::IoSpec;
 
     fn synthetic_spec() -> ExecutableSpec {
         let io = |name: &str, shape: &[usize], dtype: &str| IoSpec {
@@ -612,86 +493,5 @@ mod tests {
         let too_many = vec![(vec![4, 4], DType::F32); 4];
         let err = plan_dynamic_specs(&spec, &too_many).unwrap_err();
         assert!(err.to_string().contains("only takes"), "{err}");
-    }
-
-    #[test]
-    fn prepared_plan_runs_and_guards_arity() {
-        let _g = crate::test_support::pjrt_lock();
-        let Some(s) = session() else { return };
-        // prepare decode_b1 with the full weight set as static prefix
-        let ws = WeightStore::load(&s, false).unwrap();
-        let plan = s.prepare("decode_b1", ws.ordered_rc()).unwrap();
-        assert_eq!(plan.dynamic_arity(), 4); // kcache, vcache, token, pos
-        // wrong dynamic arity is a proper error, not an abort
-        let t = s.upload_i32(&[1], &[0]).unwrap();
-        assert!(s.run_prepared(&plan, &[&t]).is_err());
-        // wrong dynamic shape is a proper error too
-        let spec = &s.manifest.executables["decode_b1"];
-        let cshape = spec.inputs.iter()
-            .find(|io| io.name == "kcache").unwrap().shape.clone();
-        let n: usize = cshape.iter().product();
-        let kc = s.upload_f32(&cshape, &vec![0.0; n]).unwrap();
-        let vc = s.upload_f32(&cshape, &vec![0.0; n]).unwrap();
-        let bad_tok = s.upload_i32(&[2], &[0, 0]).unwrap();
-        let pos = s.upload_i32(&[1], &[0]).unwrap();
-        assert!(s.run_prepared(&plan, &[&kc, &vc, &bad_tok, &pos]).is_err());
-        // and a correct call executes, returning logits + KV
-        let tok = s.upload_i32(&[1], &[65]).unwrap();
-        let outs = s.run_prepared(&plan, &[&kc, &vc, &tok, &pos]).unwrap();
-        assert_eq!(outs.len(), 3);
-        assert_eq!(outs[0].shape,
-                   vec![1, s.manifest.config.vocab_size]);
-    }
-
-    #[test]
-    fn transfer_bytes_are_counted() {
-        let _g = crate::test_support::pjrt_lock();
-        let Some(s) = session() else { return };
-        let up0 = s.metrics.host_bytes_to_device.get();
-        let dt = s.upload_f32(&[8], &[0.5; 8]).unwrap();
-        assert_eq!(s.metrics.host_bytes_to_device.get() - up0, 32);
-        let down0 = s.metrics.host_bytes_to_host.get();
-        let _ = s.download_f32(&dt).unwrap();
-        assert_eq!(s.metrics.host_bytes_to_host.get() - down0, 32);
-    }
-
-    #[test]
-    fn kernel_parity_through_pjrt() {
-        let _g = crate::test_support::pjrt_lock();
-        // end-to-end L1 check THROUGH the artifact + PJRT path: the
-        // pallas kernel outputs inside the compiled HLO must match the
-        // jnp reference outputs computed in the same executable.
-        let Some(s) = session() else { return };
-        let name = s
-            .manifest
-            .executables
-            .values()
-            .find(|e| e.kind == "kernel_parity")
-            .map(|e| e.name.clone());
-        let Some(name) = name else {
-            eprintln!("skipping: no kernel_parity artifact");
-            return;
-        };
-        let spec = s.manifest.executables[&name].clone();
-        let mut rng = crate::workload::rng::XorShift64Star::new(3);
-        let mut args = Vec::new();
-        for io in &spec.inputs {
-            let n: usize = io.shape.iter().product();
-            let vals: Vec<f32> =
-                (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
-            args.push(s.upload_f32(&io.shape, &vals).unwrap());
-        }
-        let refs: Vec<&DeviceTensor> = args.iter().collect();
-        let outs = s.run(&name, &refs).unwrap();
-        let ff_pal = outs[0].to_f32().unwrap();
-        let ff_ref = outs[1].to_f32().unwrap();
-        let s_pal = outs[2].to_f32().unwrap();
-        let s_ref = outs[3].to_f32().unwrap();
-        for (a, b) in ff_pal.iter().zip(&ff_ref) {
-            assert!((a - b).abs() < 1e-4, "ff mismatch {a} vs {b}");
-        }
-        for (a, b) in s_pal.iter().zip(&s_ref) {
-            assert!((a - b).abs() < 1e-4, "stat mismatch {a} vs {b}");
-        }
     }
 }

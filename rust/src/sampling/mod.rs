@@ -153,11 +153,101 @@ pub fn seed_state(seed: u64) -> u32 {
     }
 }
 
-fn xorshift32(mut s: u32) -> u32 {
+/// One step of the xorshift32 recurrence — the device RNG of the fused
+/// sampling ABI (model.py `_xorshift32`). Public because the host mirror
+/// ([`DeviceSampler`]) and the CPU reference substrate
+/// (`runtime::cpu`) must advance the identical stream.
+pub fn xorshift32(mut s: u32) -> u32 {
     s ^= s << 13;
     s ^= s >> 17;
     s ^= s << 5;
     s
+}
+
+/// One fused-sampler lane step over decode logits, shared by
+/// [`DeviceSampler::sample`] (the host mirror) and the CPU reference
+/// substrate's executable interpreter — a single implementation, so the
+/// two sides of the ABI cannot drift and fused-vs-host parity holds
+/// bit-for-bit by construction.
+///
+/// `temp`/`topk` are the raw per-slot device parameters (see
+/// model.sample_tokens): `temp <= 1e-6` selects greedy argmax, otherwise
+/// top-min(`topk`, `cap`) temperature sampling, where `cap` is the
+/// executable's compiled truncation bucket (`sample_topk` in its
+/// manifest entry). The RNG advances exactly once per call regardless of
+/// the path taken (data-independent, like the device stream). Returns
+/// (token, advanced state).
+pub fn sample_lane(logits: &[f32], temp: f32, topk: i32, state: u32,
+                   cap: usize) -> (usize, u32) {
+    let mut scratch = Vec::new();
+    let mut cum = Vec::new();
+    sample_lane_with_scratch(logits, temp, topk, state, cap,
+                             &mut scratch, &mut cum)
+}
+
+/// [`sample_lane`] with caller-owned scratch buffers, for callers that
+/// run many lanes per step (the CPU substrate's per-slot sampler loop)
+/// and want zero allocation after warm-up — the same reuse discipline
+/// [`DeviceSampler`] applies to its own scratch.
+pub fn sample_lane_with_scratch(
+    logits: &[f32], temp: f32, topk: i32, state: u32, cap: usize,
+    scratch: &mut Vec<usize>, cum: &mut Vec<f32>,
+) -> (usize, u32) {
+    let state = xorshift32(state);
+    let u = (state >> 8) as f32 * (1.0 / 16_777_216.0);
+    let tok = sample_lane_core(logits, temp, topk.max(1) as usize, u, cap,
+                               scratch, cum);
+    (tok, state)
+}
+
+/// The arithmetic core of one sampler lane: uniform draw `u` already
+/// taken from the stream. Scratch buffers are caller-owned so the
+/// per-slot host mirror can reuse them across steps (no allocation in
+/// the hot loop); they are cleared here before use.
+fn sample_lane_core(logits: &[f32], temp: f32, topk: usize, u: f32,
+                    cap: usize, scratch: &mut Vec<usize>,
+                    cum: &mut Vec<f32>) -> usize {
+    if temp <= 1e-6 {
+        return argmax(logits);
+    }
+    let kk = cap.max(1).min(logits.len());
+    // top-kk by (logit desc, index asc) — the composite key gives a
+    // total order reproducing lax.top_k's lower-index-first ties,
+    // so an O(V) partial selection replaces a full O(V log V) sort
+    let desc = |a: &usize, b: &usize| {
+        logits[*b]
+            .partial_cmp(&logits[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    scratch.clear();
+    scratch.extend(0..logits.len());
+    if kk < scratch.len() {
+        scratch.select_nth_unstable_by(kk - 1, desc);
+        scratch.truncate(kk);
+    }
+    scratch.sort_by(desc);
+    let top = &scratch[..kk];
+    let v0 = logits[top[0]];
+    let safe_t = temp.max(1e-6);
+    cum.clear();
+    let mut total = 0f32;
+    for (j, &i) in top.iter().enumerate() {
+        let w = if j < topk {
+            ((logits[i] - v0) / safe_t).exp()
+        } else {
+            0.0
+        };
+        total += w;
+        cum.push(total);
+    }
+    let r = u * total;
+    for (j, &c) in cum.iter().enumerate() {
+        if c >= r {
+            return top[j];
+        }
+    }
+    top[kk - 1]
 }
 
 /// Host mirror of the on-device sampler (`model.sample_tokens`): same
@@ -215,6 +305,9 @@ impl DeviceSampler {
 
     /// One sampling step. The RNG advances on every call regardless of
     /// the path taken (matching the device's data-independent stream).
+    /// Delegates to `sample_lane_core` — the same arithmetic the CPU
+    /// reference substrate executes — with scratch buffers reused across
+    /// steps (no allocation on host-fallback ticks).
     pub fn sample(&mut self, logits: &[f32]) -> usize {
         self.state = xorshift32(self.state);
         let u = (self.state >> 8) as f32 * (1.0 / 16_777_216.0);
@@ -227,47 +320,8 @@ impl DeviceSampler {
             // device's greedy fallback for robustness
             _ => (0.0, 1usize),
         };
-        if temp <= 1e-6 {
-            return argmax(logits);
-        }
-        let kk = self.cap.min(logits.len());
-        // top-kk by (logit desc, index asc) — the composite key gives a
-        // total order reproducing lax.top_k's lower-index-first ties,
-        // so an O(V) partial selection replaces a full O(V log V) sort
-        let desc = |a: &usize, b: &usize| {
-            logits[*b]
-                .partial_cmp(&logits[*a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(b))
-        };
-        self.scratch.clear();
-        self.scratch.extend(0..logits.len());
-        if kk < self.scratch.len() {
-            self.scratch.select_nth_unstable_by(kk - 1, desc);
-            self.scratch.truncate(kk);
-        }
-        self.scratch.sort_by(desc);
-        let top = &self.scratch[..kk];
-        let v0 = logits[top[0]];
-        let safe_t = temp.max(1e-6);
-        self.cum.clear();
-        let mut total = 0f32;
-        for (j, &i) in top.iter().enumerate() {
-            let w = if j < topk {
-                ((logits[i] - v0) / safe_t).exp()
-            } else {
-                0.0
-            };
-            total += w;
-            self.cum.push(total);
-        }
-        let r = u * total;
-        for (j, &c) in self.cum.iter().enumerate() {
-            if c >= r {
-                return top[j];
-            }
-        }
-        top[kk - 1]
+        sample_lane_core(logits, temp, topk, u, self.cap,
+                         &mut self.scratch, &mut self.cum)
     }
 }
 
@@ -435,6 +489,59 @@ mod tests {
         let mut s = DeviceSampler::new(
             SamplerSpec::TopK { k: 3, temperature: 0.0 }, 3);
         assert_eq!(s.sample(&logits), 1);
+    }
+
+    #[test]
+    fn device_sampler_equals_raw_lane_across_interleavings() {
+        // Property: the host mirror and the raw lane function (the code
+        // the CPU substrate executes per slot) produce identical token
+        // streams and identical RNG states for random (temperature,
+        // top_k <= cap, seed) triples, under random skip()/sample()
+        // interleavings — including non-default caps (the with_cap
+        // manifest path).
+        use crate::workload::rng::XorShift64Star;
+        let mut rng = XorShift64Star::new(2024);
+        for case in 0..200 {
+            let cap = [1usize, 4, 16, SAMPLE_TOPK][case % 4];
+            let k = 1 + rng.below(cap);
+            let temp = if case % 7 == 0 {
+                0.0
+            } else {
+                0.05 + rng.unit_f64() as f32 * 1.8
+            };
+            let spec = if temp <= 1e-6 {
+                SamplerSpec::Greedy
+            } else {
+                SamplerSpec::TopK { k, temperature: temp }
+            };
+            let seed = rng.next_u64();
+            let mut mirror = DeviceSampler::with_cap(spec, seed, cap);
+            let mut state = seed_state(seed);
+            let (dev_temp, dev_topk) = device_params(spec);
+            for _step in 0..24 {
+                let v = 8 + rng.below(56);
+                let logits: Vec<f32> = (0..v)
+                    .map(|_| (rng.unit_f64() as f32 - 0.5) * 8.0)
+                    .collect();
+                if rng.below(3) == 0 {
+                    mirror.skip();
+                    state = xorshift32(state);
+                } else {
+                    let a = mirror.sample(&logits);
+                    let (b, ns) =
+                        sample_lane(&logits, dev_temp, dev_topk, state, cap);
+                    state = ns;
+                    assert_eq!(a, b,
+                               "token drift: case {case} spec {spec:?}");
+                    // identical tokens + the shared log_softmax_at imply
+                    // identical logprob streams
+                    let lp = log_softmax_at(&logits, a);
+                    assert!(lp <= 0.0);
+                }
+                assert_eq!(mirror.state(), state,
+                           "rng drift: case {case} spec {spec:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! JSON-lines TCP server (substrate: tokio unavailable — std::net +
-//! threads; the PJRT engine is single-threaded by necessity, so handler
-//! threads only do admission + IO and the engine thread owns the device).
+//! threads; the engine is single-threaded by necessity — device buffers
+//! are not `Send` on either substrate backend — so handler threads only
+//! do admission + IO and the engine thread owns the device).
 //!
 //! The wire protocol is owned by the [`crate::api`] module (typed v2 +
 //! the v1 compat shim); this file is the IO layer: socket accept,

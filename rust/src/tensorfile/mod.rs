@@ -295,8 +295,8 @@ mod tests {
         let path = crate::test_support::artifact_path(
             "tiny-swiglu/weights.bin");
         if !path.exists() {
-            eprintln!("skipping: {path:?} missing (run make artifacts)");
-            return;
+            crate::skip!("tensorfile: {path:?} missing (run make \
+                          artifacts)");
         }
         let m = read(&path).unwrap();
         assert!(m.contains_key("tok_emb"));

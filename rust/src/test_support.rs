@@ -1,7 +1,65 @@
 //! Shared helpers for unit/integration tests and the experiment drivers.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Machine-readable marker every test skip emits on stderr — a
+/// grep-able convenience for local `cargo test -- --nocapture` runs.
+/// The channel CI actually gates on is the `GRIFFIN_SKIP_LOG` file
+/// (the libtest harness captures stderr of passing tests, so a marker
+/// alone could never fail a job); a suite that silently self-skips must
+/// not read as green coverage — the failure mode that let four PRs of
+/// engine code ship review-verified only.
+pub const SKIP_MARKER: &str = "::griffin-test-skip::";
+
+static SKIPPED: AtomicUsize = AtomicUsize::new(0);
+
+/// Record one test skip: bumps the in-process counter
+/// ([`skipped_count`]), prints the [`SKIP_MARKER`] line, and appends
+/// the reason to the file named by the `GRIFFIN_SKIP_LOG` env var when
+/// set — the file is the channel CI gates on. Use via the
+/// [`crate::skip!`] macro in test bodies, or directly in helpers that
+/// return `Option`.
+pub fn skip_notice(reason: &str) {
+    SKIPPED.fetch_add(1, Ordering::Relaxed);
+    eprintln!("{SKIP_MARKER} {reason}");
+    if let Ok(path) = std::env::var("GRIFFIN_SKIP_LOG") {
+        if !path.is_empty() {
+            log_skip_to(&path, reason);
+        }
+    }
+}
+
+/// Append one skip reason to the gate file (best-effort: the gate must
+/// never turn a skip into a panic).
+fn log_skip_to(path: &str, reason: &str) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+    {
+        let _ = writeln!(f, "{reason}");
+    }
+}
+
+/// Skips recorded so far in this test process.
+pub fn skipped_count() -> usize {
+    SKIPPED.load(Ordering::Relaxed)
+}
+
+/// Skip the current test with a machine-readable notice: records via
+/// [`crate::test_support::skip_notice`] and `return`s. Tests that
+/// print a free-form "skipping…" line instead are invisible to CI —
+/// always skip through this path.
+#[macro_export]
+macro_rules! skip {
+    ($($arg:tt)*) => {{
+        $crate::test_support::skip_notice(&format!($($arg)*));
+        return;
+    }};
+}
 
 /// Serializes tests that create PJRT clients: concurrent client
 /// construction/destruction in the test harness's thread pool segfaults
@@ -33,4 +91,35 @@ pub fn results_path(rel: &str) -> PathBuf {
 /// True when a model's artifacts are available.
 pub fn have_artifacts(config: &str) -> bool {
     artifact_path(&format!("{config}/manifest.json")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_notice_counts_and_logs_to_the_gate_file() {
+        // the file channel CI gates on must actually work — tested via
+        // the append helper directly (no env-var mutation: set_var
+        // while parallel test threads call env::var is a getenv race,
+        // and artifact-gated tests skip concurrently in this process)
+        let path = std::env::temp_dir().join(format!(
+            "griffin-skip-log-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        log_skip_to(path.to_str().unwrap(), "unit-test skip reason");
+        let logged = std::fs::read_to_string(&path).unwrap();
+        assert!(logged.contains("unit-test skip reason"));
+        let _ = std::fs::remove_file(&path);
+        // counter is monotone under concurrent skips (>=, not ==: other
+        // artifact-gated tests may skip in parallel threads). Only
+        // exercise it when no gate file is configured, so this test can
+        // never pollute a real GRIFFIN_SKIP_LOG.
+        if std::env::var("GRIFFIN_SKIP_LOG").is_err() {
+            let before = skipped_count();
+            skip_notice("unit-test counter bump");
+            assert!(skipped_count() >= before + 1);
+        }
+    }
 }

@@ -1,0 +1,1160 @@
+//! End-to-end engine / scheduler / server tests over the CPU reference
+//! substrate (`--no-default-features --features cpu-substrate`).
+//!
+//! This is the artifact-gated integration suite PORTED to run
+//! HARD-GATED: no PJRT library, no `make artifacts`, no skips — every
+//! test constructs `Engine::cpu_reference()` and runs unconditionally,
+//! and CI fails the cpu-substrate job if anything in this binary
+//! reports a skip (GRIFFIN_SKIP_LOG stays empty). The behavioural
+//! guarantees pinned here — fused-vs-host token parity, routing-
+//! independent seeded streams, splice byte equality, admission byte
+//! budgets, per-request containment, one-tick cancellation — were
+//! previously verified only on runners with compiled artifacts
+//! (rust/tests/integration.rs gates on `have_artifacts`), i.e. nowhere
+//! in CI. See docs/testing.md for the test-tier map.
+
+use griffin::api::ErrorCode;
+use griffin::coordinator::engine::{Engine, Mode, PrefillLogits, StatNeeds};
+use griffin::coordinator::router::Router;
+use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
+use griffin::coordinator::selection::Strategy;
+use griffin::coordinator::sequence::{FinishReason, GenRequest, ScoreRequest};
+use griffin::runtime::cpu::{self, sampler_lane, CpuSession, CPU_SAMPLE_TOPK};
+use griffin::runtime::Substrate;
+use griffin::sampling::{
+    argmax, log_softmax_at, seed_state, xorshift32, DeviceSampler,
+    SamplerSpec,
+};
+use griffin::tokenizer::Tokenizer;
+use griffin::workload::rng::XorShift64Star;
+use griffin::workload::{corpus, tasks};
+
+fn engine() -> Engine {
+    Engine::cpu_reference().unwrap()
+}
+
+fn prompt_ids(len: usize) -> Vec<i32> {
+    let tok = Tokenizer::new();
+    let text = corpus::corpus(tasks::HELDOUT_SEED, 2, 24);
+    let mut ids = tok.encode_with_bos(&text);
+    ids.truncate(len);
+    ids
+}
+
+// ---------------------------------------------------------------------
+// substrate sanity
+// ---------------------------------------------------------------------
+
+#[test]
+fn cpu_engine_loads_and_serves_the_full_abi() {
+    let e = engine();
+    let cfg = e.config();
+    assert_eq!(cfg.name, "cpu-ref-swiglu");
+    assert_eq!(cfg.vocab_size, griffin::tokenizer::VOCAB_SIZE);
+    assert_eq!(cfg.d_ff, cpu::D_FF);
+    assert!(cfg.is_glu);
+    // the admission + fused-decode ABI is present, with the reference
+    // manifest's own sampler cap (not the host-side default constant)
+    assert!(e.can_prefill_fused(1) && e.can_prefill_fused(4));
+    assert_eq!(e.fused_prefill_cap(1), Some(CPU_SAMPLE_TOPK));
+    let spec = e.fused_decode_spec(4, None).expect("decode_sample_b4");
+    assert_eq!(spec.sample_topk, Some(CPU_SAMPLE_TOPK));
+    assert!(e.splice_spec(1, 4).is_some());
+    // weight store uploaded the full ABI parameter set
+    assert_eq!(e.weights.ordered().len(),
+               e.session.manifest().param_order.len());
+    assert!(e.weights.ordered_nonff().len() < e.weights.ordered().len());
+}
+
+#[test]
+fn full_generation_is_deterministic() {
+    let mut e = engine();
+    let mut req = GenRequest::greedy(1, prompt_ids(24), 8, Mode::Full);
+    req.stop_at_eos = false;
+    let a = e.generate(&req).unwrap();
+    let b = e.generate(&req).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.tokens.len(), 8);
+    assert!(a.logprobs.iter().all(|lp| *lp <= 0.0));
+    // and a second engine instance serves the identical model (the
+    // synthesized weights are seed-deterministic, not per-process)
+    let mut e2 = engine();
+    let c = e2.generate(&req).unwrap();
+    assert_eq!(a.tokens, c.tokens);
+}
+
+#[test]
+fn griffin_first_token_matches_full_and_reports_k() {
+    let mut e = engine();
+    let mut req_full = GenRequest::greedy(1, prompt_ids(24), 8, Mode::Full);
+    req_full.stop_at_eos = false;
+    let full = e.generate(&req_full).unwrap();
+    let mut req_g = GenRequest::greedy(
+        2, prompt_ids(24), 8,
+        Mode::Griffin { keep: 0.5, strategy: Strategy::TopK });
+    req_g.stop_at_eos = false;
+    let g = e.generate(&req_g).unwrap();
+    assert_eq!(g.tokens.len(), 8);
+    assert_eq!(g.k_used, Some(e.config().d_ff / 2));
+    // the FIRST token comes from the full-model prefill and must match
+    assert_eq!(g.tokens[0], full.tokens[0]);
+}
+
+#[test]
+fn batch_generation_matches_single_for_full_mode() {
+    let mut e = engine();
+    let p1 = prompt_ids(20);
+    let p2 = prompt_ids(28);
+    let mut reqs = vec![
+        GenRequest::greedy(1, p1.clone(), 6, Mode::Full),
+        GenRequest::greedy(2, p2.clone(), 6, Mode::Full),
+    ];
+    for r in &mut reqs {
+        r.stop_at_eos = false;
+    }
+    let batch = e.generate_batch(&reqs).unwrap();
+    let solo1 = e.generate(&reqs[0]).unwrap();
+    let solo2 = e.generate(&reqs[1]).unwrap();
+    assert_eq!(batch[0].tokens, solo1.tokens,
+               "batched full-model decode must equal per-sequence");
+    assert_eq!(batch[1].tokens, solo2.tokens);
+}
+
+#[test]
+fn wanda_and_magnitude_run_end_to_end() {
+    let mut e = engine();
+    for mode in [Mode::Magnitude { keep: 0.5 }, Mode::Wanda { keep: 0.5 }] {
+        let mut req = GenRequest::greedy(1, prompt_ids(24), 6, mode);
+        req.stop_at_eos = false;
+        let resp = e.generate(&req).unwrap();
+        assert_eq!(resp.tokens.len(), 6, "{mode:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused-vs-host parity (the decode tentpole guarantees)
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_decode_sample_matches_host_stepwise() {
+    // decode_sample_* must produce the same token AND logprob stream as
+    // decode_step + the host DeviceSampler mirror, greedy and seeded
+    // top-k, full and pruned. On the CPU substrate this parity is exact:
+    // both routes share one forward body and one sampler-lane
+    // implementation.
+    let mut e = engine();
+    let cap = e
+        .fused_decode_spec(1, None)
+        .and_then(|s| s.sample_topk)
+        .unwrap();
+    let prompt = prompt_ids(24);
+    let steps = 12;
+    let seed = 77u64;
+    for spec in [
+        SamplerSpec::Greedy,
+        SamplerSpec::TopK { k: 8, temperature: 0.8 },
+    ] {
+        for pruned_mode in [false, true] {
+            // host reference: stepwise decode + mirror sampling
+            let pre = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
+            let pw = if pruned_mode {
+                let idx = e
+                    .select(&pre.stats[0], 0.5, Strategy::TopK)
+                    .unwrap();
+                Some(e.gather_cached(&idx).unwrap())
+            } else {
+                None
+            };
+            let first = argmax(&pre.last_logits[0]) as i32;
+            let mut state = pre.state;
+            let mut ds = DeviceSampler::with_cap(spec, seed, cap);
+            let mut cur = vec![first];
+            let mut host_toks = Vec::new();
+            let mut host_lps = Vec::new();
+            for _ in 0..steps {
+                let logits = e
+                    .decode_step(&mut state, &cur, pw.as_deref(), None)
+                    .unwrap();
+                let t = ds.sample(&logits) as i32;
+                host_toks.push(t);
+                host_lps.push(log_softmax_at(&logits, t as usize));
+                cur[0] = t;
+            }
+
+            // fused run: same seed, logits never downloaded
+            let pre2 = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
+            let mut state2 = pre2.state;
+            let mut samp = e
+                .new_sampling_state(&[(spec, seed_state(seed))])
+                .unwrap();
+            let mut host_in: Option<Vec<i32>> = Some(vec![first]);
+            let mut fused_toks = Vec::new();
+            let mut fused_lps = Vec::new();
+            for _ in 0..steps {
+                let (toks, lps) = e
+                    .decode_sample_step(
+                        &mut state2,
+                        &mut samp,
+                        host_in.as_deref(),
+                        pw.as_deref(),
+                        None,
+                    )
+                    .unwrap();
+                assert!(lps[0] <= 0.0, "logprob must be <= 0");
+                fused_toks.push(toks[0]);
+                fused_lps.push(lps[0]);
+                host_in = None; // chain sampled tokens on device
+            }
+            assert_eq!(
+                fused_toks, host_toks,
+                "fused vs host token mismatch: {spec:?} \
+                 pruned={pruned_mode}"
+            );
+            assert_eq!(
+                fused_lps, host_lps,
+                "fused vs host logprob mismatch: {spec:?} \
+                 pruned={pruned_mode}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_wanda_matches_host_stepwise() {
+    // Wanda's masked full-size override rides decode_sample_b{B}:
+    // engine-level parity against the host path, then a scheduler run
+    // asserting Wanda ticks actually fuse.
+    let mut e = engine();
+    let cap = e
+        .fused_decode_spec(1, None)
+        .and_then(|s| s.sample_topk)
+        .unwrap();
+    let prompt = prompt_ids(24);
+    let steps = 12;
+    let seed = 31u64;
+    for spec in [
+        SamplerSpec::Greedy,
+        SamplerSpec::TopK { k: 8, temperature: 0.8 },
+    ] {
+        let pre = e
+            .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+            .unwrap();
+        let ffw = e
+            .wanda_weights(&pre.xnorms[0], &pre.znorms[0], 0.5)
+            .unwrap();
+        let first = argmax(&pre.last_logits[0]) as i32;
+        let mut state = pre.state;
+        let mut ds = DeviceSampler::with_cap(spec, seed, cap);
+        let mut cur = vec![first];
+        let mut host_toks = Vec::new();
+        for _ in 0..steps {
+            let logits = e
+                .decode_step(&mut state, &cur, None, Some(&ffw))
+                .unwrap();
+            let t = ds.sample(&logits) as i32;
+            host_toks.push(t);
+            cur[0] = t;
+        }
+
+        let pre2 = e
+            .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+            .unwrap();
+        let mut state2 = pre2.state;
+        let mut samp =
+            e.new_sampling_state(&[(spec, seed_state(seed))]).unwrap();
+        let mut host_in: Option<Vec<i32>> = Some(vec![first]);
+        let mut fused_toks = Vec::new();
+        for _ in 0..steps {
+            let (toks, lps) = e
+                .decode_sample_step(
+                    &mut state2,
+                    &mut samp,
+                    host_in.as_deref(),
+                    None,
+                    Some(&ffw),
+                )
+                .unwrap();
+            assert!(lps[0] <= 0.0);
+            fused_toks.push(toks[0]);
+            host_in = None;
+        }
+        assert_eq!(fused_toks, host_toks,
+                   "fused vs host Wanda mismatch: {spec:?}");
+    }
+
+    // scheduler-level: a Wanda workload must route through fused ticks
+    let e = engine();
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    for i in 0..bmax {
+        let mut q = GenRequest::greedy(
+            0, prompt_ids(16 + i), 8, Mode::Wanda { keep: 0.5 });
+        q.stop_at_eos = false;
+        router.admit(q).unwrap();
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let m = sched.engine.metrics.clone();
+    let fused0 = m.fused_decode_ticks.get();
+    let ticks0 = m.decode_ticks.get();
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), bmax);
+    let ticks = m.decode_ticks.get() - ticks0;
+    let fused = m.fused_decode_ticks.get() - fused0;
+    assert!(ticks > 0);
+    assert_eq!(fused, ticks,
+               "greedy Wanda ticks must all take the fused path");
+}
+
+#[test]
+fn fused_path_keeps_logits_on_device() {
+    // Continuous-batching steady state on the fused path: every decode
+    // tick is fused and the device->host traffic stays O(B) per tick —
+    // no [B, vocab] logits download (asserted via host_transfer_bytes).
+    let e = engine();
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    let v = e.config().vocab_size;
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    for i in 0..bmax {
+        let mut q =
+            GenRequest::greedy(0, prompt_ids(16 + (i % 8)), 24, Mode::Full);
+        q.stop_at_eos = false;
+        router.admit(q).unwrap();
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let mut sink = |_ev: EngineEvent| {};
+    // first tick pays admission — measure from the second on
+    sched.tick(&mut sink).unwrap();
+    let m = sched.engine.metrics.clone();
+    let bytes0 = m.host_bytes_to_host.get();
+    let ticks0 = m.decode_ticks.get();
+    let fused0 = m.fused_decode_ticks.get();
+    loop {
+        let worked = sched.tick(&mut sink).unwrap();
+        if !worked && router.is_empty() && sched.occupied() == 0 {
+            break;
+        }
+    }
+    let ticks = m.decode_ticks.get() - ticks0;
+    let fused = m.fused_decode_ticks.get() - fused0;
+    assert!(ticks > 0, "no decode ticks ran");
+    assert_eq!(fused, ticks, "every greedy tick should fuse");
+    let bytes = m.host_bytes_to_host.get() - bytes0;
+    let logits_bytes_per_tick = (bmax * v * 4) as u64;
+    assert!(
+        bytes < ticks * logits_bytes_per_tick / 4,
+        "fused decode downloaded too much: {bytes} bytes over {ticks} \
+         ticks (one logits download is {logits_bytes_per_tick})"
+    );
+    assert!(
+        bytes <= ticks * (bmax as u64) * 64,
+        "per-tick downstream traffic should be O(B): {bytes} bytes \
+         over {ticks} ticks"
+    );
+}
+
+// ---------------------------------------------------------------------
+// device-resident admission (splice + prefill_sample)
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_splice_matches_host_staging() {
+    // The splice executable must land exactly the same KV bytes in the
+    // same slot rows as the host-staged fallback (download + re-upload
+    // of both caches).
+    let e = engine();
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    let pre = e
+        .prefill(&[prompt_ids(20)], PrefillLogits::LastToken)
+        .unwrap();
+    assert_eq!(pre.state.batch, 1, "one prompt packs to bucket 1");
+    let mut dev = e.new_decode_state(bmax).unwrap();
+    let mut host = e.new_decode_state(bmax).unwrap();
+    let pairs = [(0usize, 2usize)];
+    let fused0 = e.metrics.fused_splices.get();
+    e.splice_slots(&mut dev, &pre.state, &pairs).unwrap();
+    assert_eq!(e.metrics.fused_splices.get(), fused0 + 1,
+               "splice_slots must route through the device executable");
+    e.splice_slots_host(&mut host, &pre.state, &pairs).unwrap();
+    let dk = e.session.download_f32(&dev.kcache).unwrap();
+    let hk = e.session.download_f32(&host.kcache).unwrap();
+    assert_eq!(dk, hk, "same KV bytes land in the same slot rows");
+    let dv = e.session.download_f32(&dev.vcache).unwrap();
+    let hv = e.session.download_f32(&host.vcache).unwrap();
+    assert_eq!(dv, hv);
+    assert_eq!(dev.pos, host.pos);
+    assert_eq!(dev.pos[2], pre.state.pos[0],
+               "write position moves with the KV row");
+}
+
+#[test]
+fn fused_prefill_matches_full_prefill() {
+    // prefill_sample must reproduce the full prefill's last-token
+    // decision (greedy == argmax of the downloaded last logits) and its
+    // selection statistics, without materializing [B, S, V] logits.
+    let e = engine();
+    let prompts = vec![prompt_ids(24), prompt_ids(17)];
+    let pre = e.prefill(&prompts, PrefillLogits::LastToken).unwrap();
+    let lanes = vec![(SamplerSpec::Greedy, seed_state(1)); 2];
+    let fp = e
+        .prefill_sample(&prompts, &lanes, StatNeeds::all())
+        .unwrap();
+    assert_eq!(fp.lengths, pre.lengths);
+    assert_eq!(fp.state.pos, pre.state.pos);
+    for i in 0..2 {
+        assert_eq!(fp.tokens[i], argmax(&pre.last_logits[i]) as i32,
+                   "device greedy first token == host argmax (seq {i})");
+        assert!(fp.logprobs[i] <= 0.0);
+    }
+    // selection statistics agree across the two prefill variants (the
+    // CPU substrate shares one trunk, so equality is exact; keep the
+    // PJRT suite's tolerance so the test reads identically)
+    let close = |a: &Vec<Vec<Vec<f32>>>, b: &Vec<Vec<Vec<f32>>>, what| {
+        for (sa, sb) in a.iter().zip(b) {
+            for (la, lb) in sa.iter().zip(sb) {
+                for (x, y) in la.iter().zip(lb) {
+                    assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()),
+                            "{what}: {x} vs {y}");
+                }
+            }
+        }
+    };
+    close(&fp.stats.unwrap(), &pre.stats, "stats");
+    close(&fp.xnorms.unwrap(), &pre.xnorms, "xnorms");
+    close(&fp.znorms.unwrap(), &pre.znorms, "znorms");
+    // and the KV caches the decode loop inherits agree too
+    let k1 = e.session.download_f32(&pre.state.kcache).unwrap();
+    let k2 = e.session.download_f32(&fp.state.kcache).unwrap();
+    assert_eq!(k1, k2, "prompt-phase KV caches must agree");
+}
+
+#[test]
+fn fused_admission_moves_no_logits_and_no_host_kv() {
+    // With the admission ABI, an admission (prefill + splice) moves no
+    // [B, S, V] logits and no host-side KV copy — asserted via the
+    // admission slice of host_transfer_bytes — and the token streams
+    // are identical to the host-fallback routing.
+    let e = engine();
+    let cfg = e.config().clone();
+    let bmax = cfg.batch_buckets.iter().copied().max().unwrap();
+    let spec = SamplerSpec::TopK { k: 8, temperature: 0.8 };
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    let n = bmax + 3; // forces at least one back-fill admission
+    let m = sched.engine.metrics.clone();
+    let (adm0, spl0, up0, down0) = (
+        m.fused_admissions.get(),
+        m.fused_splices.get(),
+        m.admission_bytes_to_device.get(),
+        m.admission_bytes_to_host.get(),
+    );
+    let mut run = |fused: bool| -> Vec<Vec<i32>> {
+        sched.fused_admission = fused;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let mut q = GenRequest::greedy(
+                0, prompt_ids(16 + (i % 8)), 6, Mode::Full);
+            q.sampler = spec;
+            q.seed = 1000 + i as u64;
+            q.stop_at_eos = false;
+            ids.push(router.admit(q).unwrap());
+        }
+        let mut responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), n);
+        responses.sort_by_key(|r| r.id);
+        responses.into_iter().map(|r| r.tokens).collect()
+    };
+
+    let fused_tokens = run(true);
+    let admissions = m.fused_admissions.get() - adm0;
+    assert!(admissions >= 2,
+            "initial batch + back-fills ride the fused admission path");
+    assert!(m.fused_splices.get() - spl0 >= admissions,
+            "every admission splices on device");
+    // downstream: O(B) sampling outputs per admission, never the
+    // [B, S, V] logits (one bucket of which alone would dwarf this)
+    let down = m.admission_bytes_to_host.get() - down0;
+    let one_logits = (cfg.prefill_buckets[0].min(cfg.max_seq)
+        * cfg.vocab_size
+        * 4) as u64;
+    assert!(down < one_logits,
+            "admission downloaded {down} bytes; a single sequence's \
+             prompt logits are {one_logits}");
+    assert!(down <= admissions * (bmax as u64) * 64,
+            "admission downstream should be O(B): {down} bytes over \
+             {admissions} admissions");
+    // upstream: prompt matrices + index lanes, never a KV re-upload
+    let up = m.admission_bytes_to_device.get() - up0;
+    let kv_one = (cfg.n_layers
+        * bmax
+        * cfg.n_heads
+        * cfg.max_seq
+        * cfg.head_dim
+        * 4) as u64;
+    assert!(up < kv_one,
+            "admission uploaded {up} bytes; one pool KV cache is \
+             {kv_one} — the host splice staging is back");
+
+    // routing parity: the host-fallback admission (full prefill +
+    // mirror sampling) must produce the exact same seeded token streams
+    let host_tokens = run(false);
+    assert_eq!(fused_tokens, host_tokens,
+               "token streams must be identical across admission routes");
+}
+
+#[test]
+fn score_routing_keeps_full_logits_family() {
+    // Route-by-need: per-position prompt logits exist only on the full
+    // prefill path (PrefillLogits::Full), and score results must be
+    // identical whichever admission routing is active.
+    let e = engine();
+    let ids = prompt_ids(24);
+    let v = e.config().vocab_size;
+    let pre = e.prefill(&[ids.clone()], PrefillLogits::Full).unwrap();
+    let logits = pre
+        .prompt_logits
+        .as_ref()
+        .expect("PrefillLogits::Full keeps the prompt logits");
+    let row0 = (pre.lengths[0] - 1) * v;
+    assert_eq!(&logits[row0..row0 + v], pre.last_logits[0].as_slice(),
+               "full logits contain the last-token row");
+    let lt = e.prefill(&[ids.clone()], PrefillLogits::LastToken).unwrap();
+    assert!(lt.prompt_logits.is_none(),
+            "LastToken must not retain the full logits");
+
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    let (prompt, cont) = ids.split_at(16);
+    let mut run = |fused: bool| -> Vec<f64> {
+        sched.fused_admission = fused;
+        let id = router
+            .admit_score(ScoreRequest {
+                id: 0,
+                prompt: prompt.to_vec(),
+                continuation: cont.to_vec(),
+                mode: Mode::griffin(0.5),
+                admitted_at: std::time::Instant::now(),
+            })
+            .unwrap();
+        let mut scored = None;
+        let mut sink = |ev: EngineEvent| {
+            if let EngineEvent::ScoreDone { id: sid, nll } = ev {
+                assert_eq!(sid, id);
+                scored = Some(nll);
+            }
+        };
+        sched.tick(&mut sink).unwrap();
+        scored.expect("score completed")
+    };
+    let a = run(true);
+    let b = run(false);
+    assert_eq!(a, b,
+               "score NLLs must not depend on the admission routing");
+}
+
+// ---------------------------------------------------------------------
+// scheduler behaviour (continuous batching, containment, cancellation)
+// ---------------------------------------------------------------------
+
+#[test]
+fn scheduler_completes_all_requests_exactly_once() {
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut ids = Vec::new();
+    for i in 0..7 {
+        let mode = if i % 2 == 0 { Mode::Full } else {
+            Mode::griffin(0.5)
+        };
+        let id = router
+            .admit(GenRequest::greedy(0, prompt_ids(16 + i), 4, mode))
+            .unwrap();
+        ids.push(id);
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 7);
+    let mut seen: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    seen.sort();
+    ids.sort();
+    assert_eq!(seen, ids, "every admitted request finishes exactly once");
+    assert!(router.is_empty());
+    assert_eq!(sched.engine.metrics.requests_completed.get(), 7);
+}
+
+#[test]
+fn continuous_batching_backfills_freed_slots() {
+    // Mixed-length workload through the slot scheduler: short sequences
+    // must finish at their own length while stragglers keep running,
+    // and the total decode-tick count must beat run-to-completion waves.
+    let e = engine();
+    let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
+    let router = std::sync::Arc::new(Router::new(256, 256));
+    let n = 2 * bmax + 1;
+    let (short_g, long_g) = (2usize, 17usize);
+    let mut expected = std::collections::HashMap::new();
+    for i in 0..n {
+        let g = if i % 2 == 0 { short_g } else { long_g };
+        let mut q = GenRequest::greedy(
+            0, prompt_ids(16 + (i % 8)), g, Mode::Full);
+        q.stop_at_eos = false;
+        let id = router.admit(q).unwrap();
+        expected.insert(id, g);
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), n);
+    let mut seen = std::collections::HashSet::new();
+    for r in &responses {
+        assert!(seen.insert(r.id), "request {} finished twice", r.id);
+        assert_eq!(r.tokens.len(), expected[&r.id],
+                   "request {} got the wrong token budget", r.id);
+        assert!(r.ttft_ms >= 0.0);
+    }
+    let wave_ticks = n.div_ceil(bmax) * (long_g - 1);
+    let cont_ticks = sched.engine.metrics.decode_ticks.get() as usize;
+    assert!(
+        cont_ticks < wave_ticks,
+        "continuous batching should need fewer decode ticks than waves \
+         ({cont_ticks} vs {wave_ticks})"
+    );
+    assert!(sched.engine.metrics.ttft.count() as usize >= n);
+    assert!(sched.engine.metrics.slot_occupancy.count() > 0);
+}
+
+#[test]
+fn backfill_with_unchanged_selection_hits_gather_cache() {
+    // Staggered-length GRIFFIN requests over the SAME prompt: every
+    // retirement forces a shared-weight rebuild, but the selection is
+    // unchanged — all rebuilds after the first must come from the
+    // gather cache (zero extra gather_k executions).
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let p = prompt_ids(24);
+    let n = 5;
+    for i in 0..n {
+        let mut q = GenRequest::greedy(
+            0, p.clone(), 2 + 2 * i, Mode::griffin(0.5));
+        q.stop_at_eos = false;
+        router.admit(q).unwrap();
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), n);
+    let hits = sched.engine.metrics.gather_cache_hits.get();
+    let misses = sched.engine.metrics.gather_cache_misses.get();
+    assert_eq!(misses, 1,
+               "identical expert selections must gather exactly once \
+                (hits={hits}, misses={misses})");
+    assert!(hits >= 1,
+            "membership changes with an unchanged selection must hit \
+             the cache");
+}
+
+#[test]
+fn engine_error_is_contained_per_request() {
+    // A request carrying an invalid config injected PAST admission (the
+    // api layer rejects keep <= 0; a direct router admit bypasses it)
+    // must get an engine_error event while a concurrently admitted
+    // request completes normally — the serve loop survives.
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut bad = GenRequest::greedy(
+        0,
+        prompt_ids(16),
+        4,
+        Mode::Griffin { keep: -1.0, strategy: Strategy::TopK },
+    );
+    bad.stop_at_eos = false;
+    let bad_id = router.admit(bad).unwrap();
+    let mut good = GenRequest::greedy(0, prompt_ids(20), 4,
+                                      Mode::griffin(0.5));
+    good.stop_at_eos = false;
+    let good_id = router.admit(good).unwrap();
+
+    let mut sched = Scheduler::new(e, router.clone());
+    let mut errors: Vec<(u64, ErrorCode)> = Vec::new();
+    let mut dones = Vec::new();
+    loop {
+        let mut sink = |ev: EngineEvent| match ev {
+            EngineEvent::Done(r) => dones.push(r),
+            EngineEvent::Error { id, code, .. } => errors.push((id, code)),
+            _ => {}
+        };
+        let worked = sched.tick(&mut sink).unwrap();
+        if !worked && router.is_empty() && sched.occupied() == 0 {
+            break;
+        }
+    }
+    assert_eq!(errors, vec![(bad_id, ErrorCode::EngineError)],
+               "the poisoned request fails with a structured error");
+    assert_eq!(dones.len(), 1, "the co-tenant request completes");
+    assert_eq!(dones[0].id, good_id);
+    assert_eq!(dones[0].tokens.len(), 4);
+    assert_eq!(sched.engine.metrics.requests_failed.get(), 1);
+    assert_eq!(sched.engine.metrics.requests_completed.get(), 1);
+}
+
+#[test]
+fn cancel_stops_streaming_and_frees_slot_within_one_tick() {
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut q = GenRequest::greedy(0, prompt_ids(16), 10_000, Mode::Full);
+    q.stop_at_eos = false; // would run for ages without the cancel
+    let id = router.admit(q).unwrap();
+    let mut sched = Scheduler::new(e, router.clone());
+
+    // let it stream a few tokens first
+    let mut streamed = 0usize;
+    for _ in 0..4 {
+        let mut sink = |ev: EngineEvent| {
+            if matches!(ev, EngineEvent::Token { .. }) {
+                streamed += 1;
+            }
+        };
+        sched.tick(&mut sink).unwrap();
+    }
+    assert!(streamed >= 4, "request is live and streaming");
+    assert_eq!(sched.occupied(), 1);
+
+    // flag the cancel — ONE tick must resolve it: no further token
+    // events, slot freed, cancelled done response
+    router.request_cancel(id);
+    let mut events = Vec::new();
+    let mut sink = |ev: EngineEvent| events.push(ev);
+    sched.tick(&mut sink).unwrap();
+    assert_eq!(sched.occupied(), 0, "slot freed within one tick");
+    assert!(
+        !events.iter().any(|e| matches!(e, EngineEvent::Token { .. })),
+        "token emission stops at the cancel tick"
+    );
+    let done = events.iter().find_map(|e| match e {
+        EngineEvent::Done(r) => Some(r),
+        _ => None,
+    });
+    let done = done.expect("cancelled request emits its done response");
+    assert_eq!(done.id, id);
+    assert_eq!(done.finish, FinishReason::Cancelled);
+    assert_eq!(done.tokens.len(), streamed,
+               "response carries the tokens emitted so far");
+    assert_eq!(sched.engine.metrics.requests_cancelled.get(), 1);
+
+    // cancel of a QUEUED request: dropped with an empty cancelled
+    // response before it ever reaches a slot
+    let mut q2 = GenRequest::greedy(0, prompt_ids(16), 8, Mode::Full);
+    q2.stop_at_eos = false;
+    let id2 = router.admit(q2).unwrap();
+    router.request_cancel(id2);
+    let mut events = Vec::new();
+    let mut sink = |ev: EngineEvent| events.push(ev);
+    sched.tick(&mut sink).unwrap();
+    match &events[..] {
+        [EngineEvent::Done(r)] => {
+            assert_eq!(r.id, id2);
+            assert_eq!(r.finish, FinishReason::Cancelled);
+            assert!(r.tokens.is_empty());
+        }
+        other => panic!("expected one cancelled done, got {other:?}"),
+    }
+    assert!(router.is_empty());
+}
+
+#[test]
+fn score_op_reports_continuation_nll() {
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let ids = prompt_ids(40);
+    let (prompt, cont) = ids.split_at(24);
+    let id = router
+        .admit_score(ScoreRequest {
+            id: 0,
+            prompt: prompt.to_vec(),
+            continuation: cont.to_vec(),
+            mode: Mode::griffin(0.5),
+            admitted_at: std::time::Instant::now(),
+        })
+        .unwrap();
+    let mut sched = Scheduler::new(e, router.clone());
+    let mut scored = None;
+    let mut sink = |ev: EngineEvent| {
+        if let EngineEvent::ScoreDone { id, nll } = ev {
+            scored = Some((id, nll));
+        }
+    };
+    assert!(sched.tick(&mut sink).unwrap(), "score counts as work");
+    let (sid, nll) = scored.expect("score completed in one tick");
+    assert_eq!(sid, id);
+    assert_eq!(nll.len(), cont.len(), "one NLL per continuation token");
+    assert!(nll.iter().all(|&x| x >= 0.0), "NLLs are non-negative");
+    assert!(router.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// v2 server over the CPU substrate
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_v2_round_trip() {
+    // The full TCP stack over the reference backend: health, typed
+    // generate (prune + sampling axes), batched generate, score,
+    // structured validation errors, unknown-id cancel ack, v1 compat.
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{self, n, obj, s, Value};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+
+        let h = c.health().unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert!(h.get("slots").unwrap().get("total").is_some());
+
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins")),
+                ("max_new_tokens", n(6.0)),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.5)),
+                        ("strategy", s("topk")),
+                    ]),
+                ),
+                (
+                    "sampling",
+                    obj(vec![
+                        ("temperature", n(0.8)),
+                        ("top_k", n(4.0)),
+                        ("seed", n(7.0)),
+                    ]),
+                ),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+        assert!(r.get("k_used").unwrap().as_usize().is_some());
+
+        // batched generate: one line back, per-prompt results in order
+        let b = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                (
+                    "prompts",
+                    Value::Arr(vec![s("the quiet river"), s("a deep lake")]),
+                ),
+                ("max_new_tokens", n(4.0)),
+            ]))
+            .unwrap();
+        let results = b.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for row in results {
+            assert_eq!(row.get("op").unwrap().as_str(), Some("generate"));
+        }
+
+        // score: teacher-forced NLLs + perplexity
+        let sc = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("score")),
+                ("prompt", s("the quiet river joins")),
+                ("continuation", s(" the deep lake")),
+            ]))
+            .unwrap();
+        assert_eq!(sc.get("op").unwrap().as_str(), Some("score"));
+        let nll = sc.get("nll").unwrap().as_arr().unwrap();
+        assert_eq!(nll.len(), " the deep lake".len());
+        assert!(sc.get("ppl").unwrap().as_f64().unwrap() > 0.0);
+
+        // admission-time validation: structured invalid_request
+        let bad = c
+            .call(&json::parse(
+                r#"{"v":2,"op":"generate","prompt":"x",
+                    "prune":{"method":"griffin","keep":0.0}}"#,
+            ).unwrap())
+            .unwrap();
+        assert_eq!(bad.get("op").unwrap().as_str(), Some("error"));
+        assert_eq!(bad.get("code").unwrap().as_str(),
+                   Some("invalid_request"));
+
+        // cancel of an unknown id acks instead of erroring mid-protocol
+        let ack = c.cancel(999_999).unwrap();
+        assert_eq!(ack.get("status").unwrap().as_str(),
+                   Some("unknown_id"));
+
+        // v1 line on the same connection still works (compat shim)
+        let r1 = c.generate("the quiet river joins", 4, "griffin").unwrap();
+        assert_eq!(r1.get("op").unwrap().as_str(), Some("generate"));
+        assert!(r1.get("v").is_none(), "v1 replies carry no version tag");
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn server_streams_token_events() {
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let mut events = Vec::new();
+        let done = c
+            .generate_stream("the quiet river joins", 6, "full", |ev| {
+                events.push((
+                    ev.get("index").unwrap().as_usize().unwrap(),
+                    ev.get("token").unwrap().as_i64().unwrap() as i32,
+                ));
+            })
+            .unwrap();
+        assert_eq!(done.get("event").unwrap().as_str(), Some("done"));
+        let toks: Vec<i32> = done
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        assert!(!events.is_empty(), "no token events streamed");
+        assert_eq!(events.len(), toks.len(),
+                   "one event per generated token");
+        for (i, (idx, tok)) in events.iter().enumerate() {
+            assert_eq!(*idx, i, "token events arrive in order");
+            assert_eq!(*tok, toks[i],
+                       "streamed tokens match the final response");
+        }
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// sampler-lane property tests (DeviceSampler vs the substrate's lanes)
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_sampler_matches_substrate_lanes_under_interleaving() {
+    // Random (temperature, top_k <= cap, seed) triples must produce
+    // identical token/logprob streams and identical RNG states between
+    // the host mirror (DeviceSampler::with_cap at the manifest cap) and
+    // the CPU substrate's sampler lane, across arbitrary skip()/sample
+    // interleavings — the invariant that makes seeded generations
+    // routing-independent.
+    let mut rng = XorShift64Star::new(7);
+    for case in 0..300 {
+        let k = 1 + rng.below(CPU_SAMPLE_TOPK);
+        let temp = if case % 5 == 0 {
+            0.0
+        } else {
+            0.05 + rng.unit_f64() as f32 * 1.6
+        };
+        let spec = if temp <= 1e-6 {
+            SamplerSpec::Greedy
+        } else {
+            SamplerSpec::TopK { k, temperature: temp }
+        };
+        let seed = rng.next_u64();
+        let mut mirror =
+            DeviceSampler::with_cap(spec, seed, CPU_SAMPLE_TOPK);
+        let mut state = seed_state(seed);
+        for _step in 0..16 {
+            let v = 8 + rng.below(250);
+            let logits: Vec<f32> = (0..v)
+                .map(|_| (rng.unit_f64() as f32 - 0.5) * 6.0)
+                .collect();
+            if rng.below(3) == 0 {
+                // a fused tick elsewhere in the pool: the mirror skips,
+                // the device lane advances without reading the draw
+                mirror.skip();
+                state = xorshift32(state);
+            } else {
+                let a = mirror.sample(&logits) as i32;
+                let a_lp = log_softmax_at(&logits, a as usize);
+                let (b, b_lp, ns) = sampler_lane(
+                    &logits,
+                    if temp <= 1e-6 { 0.0 } else { temp },
+                    k as i32,
+                    state,
+                );
+                state = ns;
+                assert_eq!(a, b, "token drift: case {case} spec {spec:?}");
+                assert_eq!(a_lp, b_lp,
+                           "logprob drift: case {case} spec {spec:?}");
+            }
+            assert_eq!(mirror.state(), state,
+                       "rng drift: case {case} spec {spec:?}");
+        }
+    }
+}
+
+#[test]
+fn substrate_lane_restricts_support_and_respects_cap() {
+    // The lane's support is min(topk, CPU_SAMPLE_TOPK) — per-slot k is
+    // clamped to the compiled truncation bucket, never silently widened.
+    let v = 64usize;
+    let logits: Vec<f32> =
+        (0..v).map(|i| ((i * 37) % v) as f32 * 0.1).collect();
+    let mut order: Vec<usize> = (0..v).collect();
+    order.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let top_cap: Vec<usize> = order[..CPU_SAMPLE_TOPK].to_vec();
+    let mut state = seed_state(42);
+    for _ in 0..256 {
+        // topk far beyond the compiled bucket: cap must bound support
+        let (t, lp, ns) = sampler_lane(&logits, 1.0, v as i32, state);
+        state = ns;
+        assert!(top_cap.contains(&(t as usize)),
+                "sampled {t} outside the compiled cap bucket");
+        assert!(lp <= 0.0);
+    }
+    // greedy lanes ignore the draw but still advance the stream
+    let (g1, _, s1) = sampler_lane(&logits, 0.0, 1, state);
+    let (g2, _, s2) = sampler_lane(&logits, 0.0, 1, s1);
+    assert_eq!(g1 as usize, argmax(&logits));
+    assert_eq!(g1, g2);
+    assert_ne!(s1, s2);
+}
+
+// ---------------------------------------------------------------------
+// keep-snapping regression tests (runtime-free: no PJRT needed)
+// ---------------------------------------------------------------------
+
+#[test]
+fn keep_snapping_edges_resolve_to_compiled_buckets() {
+    let e = engine();
+    let d_ff = e.config().d_ff as f64; // 32; B=1 compiles k in {8,16,24}
+    // keep -> 0+ snaps to the smallest compiled k, not to an error
+    let snapped = e.bucket_keep(1, 1e-9).unwrap();
+    assert_eq!(snapped, 8.0 / d_ff);
+    // keep = 1.0 is valid input even though k == d_ff is never compiled:
+    // it snaps to the largest bucket
+    assert_eq!(e.bucket_keep(1, 1.0).unwrap(), 24.0 / d_ff);
+    // an exact midpoint between compiled buckets (12 between 8 and 16)
+    // resolves to the SMALLER k, deterministically
+    assert_eq!(e.bucket_keep(1, 12.0 / d_ff).unwrap(), 8.0 / d_ff);
+    // midpoint 20 between 16 and 24 likewise
+    assert_eq!(e.bucket_keep(1, 20.0 / d_ff).unwrap(), 16.0 / d_ff);
+    // snapping is idempotent
+    for keep in [1e-6, 0.3, 0.5, 0.62, 0.99, 1.0] {
+        let once = e.bucket_keep(1, keep).unwrap();
+        assert_eq!(e.bucket_keep(1, once).unwrap(), once);
+    }
+    // single-bucket manifests (B=4 compiles only the headline k):
+    // every keep snaps to it
+    for keep in [1e-6, 0.25, 0.5, 0.75, 1.0] {
+        assert_eq!(e.bucket_keep(4, keep).unwrap(), 16.0 / d_ff);
+    }
+    // out-of-range keeps are engine errors, not silent snaps
+    for bad in [0.0, -1.0, 1.0 + 1e-9, f64::NAN] {
+        assert!(e.bucket_keep(1, bad).is_err(), "keep {bad} must error");
+    }
+    // k_for rounds through the manifest's keep_ks with the same rule
+    assert_eq!(e.k_for(0.5).unwrap(), 16);
+    assert_eq!(e.k_for(1.0).unwrap(), 24);
+}
+
+#[test]
+fn modes_batchable_follows_bucket_snapping() {
+    let e = engine();
+    // at the pool bucket (4) only k16 is compiled: griffin@0.75 and
+    // griffin@0.5 serve identically and must share a batch
+    let a = Mode::griffin(0.75);
+    let b = Mode::griffin(0.5);
+    assert!(!a.compatible(&b), "different keeps are not Mode-equal");
+    assert!(e.modes_batchable(4, &a, &b),
+            "keeps snapping to one compiled bucket must batch together");
+    // but griffin and magnitude never share a decode executable family
+    assert!(!e.modes_batchable(
+        4, &a, &Mode::Magnitude { keep: 0.5 }));
+    // an invalid keep cannot sneak into a batch through snapping
+    assert!(!e.modes_batchable(
+        4, &Mode::griffin(-1.0), &b));
+}
+
+// ---------------------------------------------------------------------
+// substrate plumbing the engine relies on
+// ---------------------------------------------------------------------
+
+#[test]
+fn prepared_plans_dispatch_and_guard_arity() {
+    // DispatchPlan over the CPU backend: static weight prefix bound
+    // once, dynamic tail validated per call — same contract as PJRT.
+    let e = engine();
+    let plan = e
+        .session
+        .prepare("decode_b1", e.weights.ordered_rc())
+        .unwrap();
+    assert_eq!(plan.dynamic_arity(), 4); // kcache, vcache, token, pos
+    let t = e.session.upload_i32(&[1], &[0]).unwrap();
+    assert!(e.session.run_prepared(&plan, &[&t]).is_err(),
+            "wrong dynamic arity is a proper error");
+    let state = e.new_decode_state(1).unwrap();
+    let tok = e.session.upload_i32(&[1], &[65]).unwrap();
+    let pos = e.session.upload_i32(&[1], &[0]).unwrap();
+    let outs = e
+        .session
+        .run_prepared(&plan, &[&state.kcache, &state.vcache, &tok, &pos])
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0].shape, vec![1, e.config().vocab_size]);
+    // and the prepared dispatch equals the by-name dispatch exactly
+    let mut args: Vec<&griffin::runtime::DeviceTensor> =
+        e.weights.ordered();
+    args.push(&state.kcache);
+    args.push(&state.vcache);
+    args.push(&tok);
+    args.push(&pos);
+    let outs2 = e.session.run("decode_b1", &args).unwrap();
+    assert_eq!(outs[0].to_f32().unwrap(), outs2[0].to_f32().unwrap());
+}
+
+#[test]
+fn transfer_bytes_are_counted() {
+    let s = CpuSession::new();
+    let up0 = s.metrics().host_bytes_to_device.get();
+    let dt = s.upload_f32(&[8], &[0.5; 8]).unwrap();
+    assert_eq!(s.metrics().host_bytes_to_device.get() - up0, 32);
+    let down0 = s.metrics().host_bytes_to_host.get();
+    let _ = s.download_f32(&dt).unwrap();
+    assert_eq!(s.metrics().host_bytes_to_host.get() - down0, 32);
+    // interpreter compute moves NOTHING across the metered boundary:
+    // that is what "device-resident" means for this backend
+    let e = engine();
+    let m = e.metrics.clone();
+    let before = m.host_bytes_to_host.get();
+    let pre = e
+        .prefill_sample(
+            &[prompt_ids(12)],
+            &[(SamplerSpec::Greedy, seed_state(1))],
+            StatNeeds { stats: false, norms: false },
+        )
+        .unwrap();
+    let downloaded = m.host_bytes_to_host.get() - before;
+    // only the O(B) sampling outputs were downloaded by prefill_sample
+    assert!(downloaded <= 64,
+            "reduced admission downloaded {downloaded} bytes");
+    drop(pre);
+}

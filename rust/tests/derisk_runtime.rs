@@ -15,7 +15,8 @@ fn have(path: &str) -> bool {
 fn multi_output_untupled_and_buffer_feedback() -> anyhow::Result<()> {
     let path = "/tmp/derisk/step_notuple.hlo.txt";
     if !have(path) {
-        eprintln!("skipping: {path} missing (run gen.py)");
+        griffin::test_support::skip_notice(&format!(
+            "derisk_runtime: {path} missing (run gen.py)"));
         return Ok(());
     }
     let client = xla::PjRtClient::cpu()?;

@@ -8,13 +8,15 @@ use griffin::coordinator::router::Router;
 use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
 use griffin::coordinator::selection::Strategy;
 use griffin::coordinator::sequence::{FinishReason, GenRequest};
-use griffin::test_support::{artifact_path, have_artifacts, pjrt_lock};
+use griffin::runtime::Substrate;
+use griffin::test_support::{artifact_path, have_artifacts, pjrt_lock,
+                            skip_notice};
 use griffin::tokenizer::Tokenizer;
 use griffin::workload::{corpus, tasks};
 
 fn engine(config: &str) -> Option<Engine> {
     if !have_artifacts(config) {
-        eprintln!("skipping: artifacts for {config} missing");
+        skip_notice(&format!("integration: artifacts for {config} missing"));
         return None;
     }
     Some(Engine::load(&artifact_path(config), false).unwrap())
@@ -106,7 +108,7 @@ fn prefill_stats_match_flock_definition() {
 
     let spec = e
         .session
-        .manifest
+        .manifest()
         .executables
         .values()
         .find(|x| x.kind == "activations")
@@ -287,8 +289,7 @@ fn fused_decode_sample_matches_host_stepwise() {
     let _g = pjrt_lock();
     let Some(mut e) = engine("tiny-swiglu") else { return };
     if e.fused_decode_spec(1, None).is_none() {
-        eprintln!("skipping: artifacts predate decode_sample");
-        return;
+        griffin::skip!("integration: artifacts predate decode_sample");
     }
     use griffin::sampling::{argmax, seed_state, DeviceSampler, SamplerSpec};
     let cap = e
@@ -319,7 +320,8 @@ fn fused_decode_sample_matches_host_stepwise() {
                 && e.fused_decode_spec(1, pw.as_ref().map(|p| p.k))
                     .is_none()
             {
-                eprintln!("skipping pruned fused parity: no artifact");
+                skip_notice(
+                    "integration: pruned fused parity artifact missing");
                 continue;
             }
             let first = argmax(&pre.last_logits[0]) as i32;
@@ -377,8 +379,7 @@ fn fused_path_keeps_logits_on_device() {
     let Some(e) = engine("tiny-swiglu") else { return };
     let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
     if e.fused_decode_spec(bmax, None).is_none() {
-        eprintln!("skipping: artifacts predate decode_sample");
-        return;
+        griffin::skip!("integration: artifacts predate decode_sample");
     }
     let v = e.config().vocab_size;
     let router = std::sync::Arc::new(Router::new(64, 256));
@@ -714,8 +715,7 @@ fn fused_wanda_matches_host_stepwise() {
     let _g = pjrt_lock();
     let Some(e) = engine("tiny-swiglu") else { return };
     if e.fused_decode_spec(1, None).is_none() {
-        eprintln!("skipping: artifacts predate decode_sample");
-        return;
+        griffin::skip!("integration: artifacts predate decode_sample");
     }
     use griffin::sampling::{argmax, seed_state, DeviceSampler, SamplerSpec};
     let cap = e
@@ -780,8 +780,7 @@ fn fused_wanda_matches_host_stepwise() {
     // scheduler-level: a Wanda workload must route through fused ticks
     let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
     if e.fused_decode_spec(bmax, None).is_none() {
-        eprintln!("skipping scheduler half: no decode_sample at bmax");
-        return;
+        griffin::skip!("integration: no decode_sample at bmax");
     }
     let router = std::sync::Arc::new(Router::new(64, 256));
     for i in 0..bmax {
@@ -812,8 +811,7 @@ fn device_splice_matches_host_staging() {
     let Some(e) = engine("tiny-swiglu") else { return };
     let bmax = e.config().batch_buckets.iter().copied().max().unwrap();
     if e.splice_spec(1, bmax).is_none() {
-        eprintln!("skipping: artifacts predate the admission ABI");
-        return;
+        griffin::skip!("integration: artifacts predate the admission ABI");
     }
     let pre = e
         .prefill(&[prompt_ids(20)], PrefillLogits::LastToken)
@@ -847,8 +845,7 @@ fn fused_prefill_matches_full_prefill() {
     let _g = pjrt_lock();
     let Some(e) = engine("tiny-swiglu") else { return };
     if !e.can_prefill_fused(2) {
-        eprintln!("skipping: artifacts predate the admission ABI");
-        return;
+        griffin::skip!("integration: artifacts predate the admission ABI");
     }
     use griffin::coordinator::engine::StatNeeds;
     use griffin::sampling::{argmax, seed_state, SamplerSpec};
@@ -899,8 +896,7 @@ fn fused_admission_moves_no_logits_and_no_host_kv() {
     let cfg = e.config().clone();
     let bmax = cfg.batch_buckets.iter().copied().max().unwrap();
     if !e.can_prefill_fused(1) || e.splice_spec(bmax, bmax).is_none() {
-        eprintln!("skipping: artifacts predate the admission ABI");
-        return;
+        griffin::skip!("integration: artifacts predate the admission ABI");
     }
     let spec = griffin::sampling::SamplerSpec::TopK { k: 8, temperature: 0.8 };
     let router = std::sync::Arc::new(Router::new(64, 256));
@@ -1166,14 +1162,12 @@ fn server_v2_round_trip() {
 fn trained_weights_give_lower_perplexity_than_random() {
     let _g = pjrt_lock();
     if !have_artifacts("small-swiglu") {
-        eprintln!("skipping: small-swiglu artifacts missing");
-        return;
+        griffin::skip!("integration: small-swiglu artifacts missing");
     }
     let dir = artifact_path("small-swiglu");
     let manifest = griffin::config::Manifest::load(&dir).unwrap();
     if manifest.trained_weights_file.is_none() {
-        eprintln!("skipping: no trained weights");
-        return;
+        griffin::skip!("integration: no trained weights");
     }
     let mut trained = Engine::load(&dir, true).unwrap();
     let mut random = Engine::load(&dir, false).unwrap();
