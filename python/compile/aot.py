@@ -281,10 +281,11 @@ class Emitter:
                    io_entry("logprob", (B,)),
                    io_entry("kcache", cspec.shape),
                    io_entry("vcache", cspec.shape),
-                   io_entry("rng", (B,), I32)]
+                   io_entry("rng", (B,), I32),
+                   io_entry("pos", (B,), I32)]
         self.emit(f"decode_sample_b{B}", fn, arg_specs, inputs, outputs,
                   {"kind": "decode_sample", "batch": B,
-                   "sample_topk": model.SAMPLE_TOPK})
+                   "sample_topk": model.SAMPLE_TOPK, "pos_chained": True})
 
     def emit_decode_pruned_sample(self, B, K):
         cfg = self.cfg
@@ -313,11 +314,12 @@ class Emitter:
                    io_entry("logprob", (B,)),
                    io_entry("kcache", cspec.shape),
                    io_entry("vcache", cspec.shape),
-                   io_entry("rng", (B,), I32)]
+                   io_entry("rng", (B,), I32),
+                   io_entry("pos", (B,), I32)]
         self.emit(f"decode_pruned_sample_b{B}_k{K}", fn, arg_specs, inputs,
                   outputs,
                   {"kind": "decode_pruned_sample", "batch": B, "k": K,
-                   "sample_topk": model.SAMPLE_TOPK})
+                   "sample_topk": model.SAMPLE_TOPK, "pos_chained": True})
 
     def emit_gather(self, K):
         cfg = self.cfg

@@ -484,21 +484,29 @@ def decode_sample(cfg: ModelConfig, params: Params, kcache, vcache, token,
                   pos, temp, topk, rng):
     """Full-model decode step fused with on-device sampling.
 
-    Returns (token i32[B], logprob f32[B], kcache, vcache, rng i32[B]) —
-    the [B, V] logits tensor stays device-resident.
+    Returns (token i32[B], logprob f32[B], kcache, vcache, rng i32[B],
+    pos i32[B]) — the [B, V] logits tensor stays device-resident, and
+    the returned pos is the ADVANCED write position (input pos + 1) so
+    the caller can chain it into the next step without re-uploading a
+    host-side pos vector every tick (the engine re-uploads only when
+    slot membership changes).
     """
     logits, kcache, vcache = decode(cfg, params, kcache, vcache, token, pos)
     tok, lp, rng = sample_tokens(logits, temp, topk, rng)
-    return tok, lp, kcache, vcache, rng
+    return tok, lp, kcache, vcache, rng, pos + 1
 
 
 def decode_pruned_sample(cfg: ModelConfig, params: Params, pruned, kcache,
                          vcache, token, pos, temp, topk, rng):
-    """GRIFFIN pruned decode step fused with on-device sampling."""
+    """GRIFFIN pruned decode step fused with on-device sampling.
+
+    Same chained-pos contract as `decode_sample`: outputs the advanced
+    write position pos + 1 alongside the sampled token.
+    """
     logits, kcache, vcache = decode_pruned(
         cfg, params, pruned, kcache, vcache, token, pos)
     tok, lp, rng = sample_tokens(logits, temp, topk, rng)
-    return tok, lp, kcache, vcache, rng
+    return tok, lp, kcache, vcache, rng, pos + 1
 
 
 # ---------------------------------------------------------------------------

@@ -199,6 +199,10 @@ class TestFusedSampling:
         np.testing.assert_allclose(np.asarray(got[2]), np.asarray(kc1))
         np.testing.assert_array_equal(np.asarray(got[4]),
                                       np.asarray(want_rng))
+        # chained-pos contract: the fused step returns the advanced
+        # write position so callers never re-upload pos between ticks
+        np.testing.assert_array_equal(np.asarray(got[5]),
+                                      np.asarray(pos) + 1)
 
     def test_emitter_writes_fused_executables(self, tmp_path):
         """Artifact-free end-to-end: the emitter lowers the fused
@@ -214,7 +218,9 @@ class TestFusedSampling:
         assert in_names[-7:] == ["kcache", "vcache", "token", "pos",
                                  "temp", "topk", "rng"]
         out_names = [o["name"] for o in e["outputs"]]
-        assert out_names == ["token", "logprob", "kcache", "vcache", "rng"]
+        assert out_names == ["token", "logprob", "kcache", "vcache", "rng",
+                             "pos"]
+        assert e["pos_chained"] is True
         for e in em.executables.values():
             with open(os.path.join(em.dir, e["file"])) as f:
                 assert f.read(9) == "HloModule", e["file"]
@@ -230,8 +236,13 @@ class TestFusedSampling:
             assert in_names[-7:] == ["kcache", "vcache", "token", "pos",
                                      "temp", "topk", "rng"]
             out_names = [o["name"] for o in e["outputs"]]
-            assert out_names == ["token", "logprob", "kcache", "vcache",
-                                 "rng"]
+            # pre-chained-pos artifacts end at rng; regenerated ones
+            # carry the advanced pos as a sixth output (the engine
+            # detects which ABI it got from the manifest)
+            assert out_names in (
+                ["token", "logprob", "kcache", "vcache", "rng"],
+                ["token", "logprob", "kcache", "vcache", "rng", "pos"],
+            )
             assert e["sample_topk"] == model.SAMPLE_TOPK
         pruned = [e for e in m["executables"].values()
                   if e["kind"] == "decode_pruned_sample"]

@@ -213,6 +213,7 @@ fn main() {
             sampler: griffin::sampling::SamplerSpec::Greedy,
             seed: 1,
             stop_at_eos: false,
+            session: None,
             admitted_at: std::time::Instant::now(),
         };
         rep.add(bench_for(

@@ -2,7 +2,7 @@
 //! coordinator level — batch-bucket scaling, plus the wave-vs-continuous
 //! comparison on a mixed-length workload).
 //!
-//! Five sections (scenario-by-scenario reading guide and the expected
+//! Six sections (scenario-by-scenario reading guide and the expected
 //! shape of each number: docs/benchmarks.md):
 //!   * bucket scaling (`wave_b{b}_*`): run-to-completion batches through
 //!     `Engine::generate_batch` at each compiled batch bucket — this is
@@ -23,388 +23,607 @@
 //!     workload with `fused_admission` flipped — isolates the
 //!     admission boundary cost and reports admission bytes/request
 //!     from `admission_bytes_to_{device,host}`.
+//!   * shard scaling (`shard_scaling_n{N}`, CPU substrate): the SAME
+//!     client workload against 1-, 2- and 4-shard fleets through
+//!     `server::start_sharded` — one engine thread per shard behind the
+//!     placement-aware `ShardRouter`. Aggregate decode tokens/sec
+//!     should grow with the shard count (each shard owns an engine and
+//!     a slot pool, so the fleet decodes N batches concurrently); the
+//!     machine-readable summary (p50/p99 TTFT + ITL from the fleet
+//!     metrics rollup, fused-tick share, per-shard occupancy) is
+//!     written to BENCH_serving.json at the repository root.
 //!
-//! Run: cargo bench --bench bench_serving [-- <model>]
-//! (default model: tiny-swiglu; self-skips without artifacts; CSV is
-//! appended to results/bench_serving_<model>.csv)
+//! Run (PJRT, artifact-gated):
+//!     cargo bench --bench bench_serving [-- <model>]
+//! Run (CPU substrate, no artifacts — shard scaling only):
+//!     cargo bench --bench bench_serving \
+//!         --no-default-features --features cpu-substrate
+//! CSV is appended to results/bench_serving_*.csv.
 
-use std::sync::Arc;
+/// Shard-scaling scenario over the CPU reference substrate: real TCP
+/// serving through `start_sharded`, fleet sizes 1/2/4, identical
+/// workload each time.
+#[cfg(feature = "cpu-substrate")]
+mod shard_scaling {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
 
-use griffin::bench_harness::{summarize, Reporter};
-use griffin::coordinator::engine::{Engine, Mode};
-use griffin::coordinator::router::Router;
-use griffin::coordinator::scheduler::Scheduler;
-use griffin::coordinator::sequence::GenRequest;
-use griffin::test_support::{artifact_path, have_artifacts};
-use griffin::workload::trace;
+    use griffin::bench_harness::{summarize, Reporter};
+    use griffin::coordinator::engine::Engine;
+    use griffin::json::{self, n, obj, s, Value};
+    use griffin::metrics::MetricsRegistry;
+    use griffin::server::{self, Client, EngineFactory};
 
-const SHORT_G: usize = 4;
-const LONG_G: usize = 32;
+    const FLEETS: [usize; 3] = [1, 2, 4];
+    /// Concurrent client connections (fixed across fleet sizes so the
+    /// offered load is identical; each sends one batched generate).
+    const CONNS: usize = 6;
+    const PROMPTS_PER_CONN: usize = 8;
+    const MAX_NEW: usize = 32;
+    const ROUNDS: usize = 3;
 
-fn mixed_reqs(reqs: &[trace::TraceRequest], mode: Mode) -> Vec<GenRequest> {
-    reqs.iter()
-        .enumerate()
-        .map(|(i, r)| {
-            let g = if i % 2 == 0 { SHORT_G } else { LONG_G };
-            let mut q = GenRequest::greedy(0, r.prompt.clone(), g, mode);
-            q.stop_at_eos = false;
-            q
-        })
-        .collect()
-}
-
-fn main() {
-    let model = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .unwrap_or_else(|| "tiny-swiglu".to_string());
-    if !have_artifacts(&model) {
-        eprintln!("skipping bench: artifacts for {model} missing");
-        return;
-    }
-    let mut engine = Engine::load(&artifact_path(&model), false).unwrap();
-    let cfg = engine.config().clone();
-    let bmax = cfg.batch_buckets.iter().copied().max().unwrap_or(1);
-    println!("bench_serving on {model} (slot pool = {bmax})");
-    let mut rep = Reporter::new(&format!("bench_serving_{model}.csv"));
-
-    // ------------------------------------------------------------------
-    // scenario 1: uniform-length bucket scaling (Table 3 style) through
-    // run-to-completion waves — exercises decode_b{b} at every bucket
-    // ------------------------------------------------------------------
-    let g = 16usize;
-    for &b in &cfg.batch_buckets {
-        for mode in [Mode::Full, Mode::griffin(0.5)] {
-            let traced = trace::generate(&trace::TraceSpec {
-                seed: 7,
-                n_requests: b,
-                prompt_len: cfg.prefill_buckets[0],
-                gen_len: g,
-                mean_gap_ms: 0,
-                mixed_lengths: false,
-            });
-            let mk = |max_new: usize| -> Vec<GenRequest> {
-                traced
-                    .iter()
-                    .map(|r| {
-                        let mut q = GenRequest::greedy(
-                            0, r.prompt.clone(), max_new, mode);
-                        q.stop_at_eos = false;
-                        q
+    /// One workload round: CONNS concurrent connections, each issuing a
+    /// batched v2 generate of PROMPTS_PER_CONN prompts. Returns the
+    /// total token count actually produced.
+    fn run_round(addr: &str, max_new: usize) -> usize {
+        let mut conns = Vec::new();
+        for c in 0..CONNS {
+            let addr = addr.to_string();
+            conns.push(std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                let prompts: Vec<Value> = (0..PROMPTS_PER_CONN)
+                    .map(|p| s(&format!("shard scale conn {c} prompt {p}")))
+                    .collect();
+                let r = cl
+                    .call(&obj(vec![
+                        ("v", n(2.0)),
+                        ("op", s("generate")),
+                        ("prompts", Value::Arr(prompts)),
+                        ("max_new_tokens", n(max_new as f64)),
+                        ("stop_at_eos", Value::Bool(false)),
+                    ]))
+                    .unwrap();
+                let Some(Value::Arr(rows)) = r.get("results") else {
+                    panic!("batched generate reply has no results: {r:?}");
+                };
+                assert_eq!(rows.len(), PROMPTS_PER_CONN);
+                rows.iter()
+                    .map(|row| {
+                        row.get("tokens")
+                            .and_then(|t| t.as_arr())
+                            .map_or(0, <[Value]>::len)
                     })
-                    .collect()
-            };
-            // warmup (compilation of this bucket's executables)
-            engine.generate_batch(&mk(2)).unwrap();
+                    .sum::<usize>()
+            }));
+        }
+        conns.into_iter().map(|t| t.join().unwrap()).sum()
+    }
+
+    pub fn run() {
+        println!(
+            "bench_serving shard_scaling (cpu substrate; {CONNS} conns x \
+             {PROMPTS_PER_CONN} prompts x {MAX_NEW} tokens per round)"
+        );
+        let mut rep = Reporter::new("bench_serving_shard_scaling.csv");
+        let mut runs: Vec<Value> = Vec::new();
+        let mut best: BTreeMap<usize, f64> = BTreeMap::new();
+
+        for &n_shards in &FLEETS {
+            let factory: EngineFactory =
+                Arc::new(|_shard| Engine::cpu_reference());
+            let handle = server::start_sharded(
+                factory, n_shards, "127.0.0.1:0", 64, 64)
+                .expect("sharded fleet starts");
+            let addr = handle.addr.to_string();
+
+            // warmup: touch every shard's engine + slot pool once
+            run_round(&addr, 2);
 
             let mut samples = Vec::new();
-            for _ in 0..3 {
-                let reqs = mk(g);
+            let mut best_tps = 0.0f64;
+            let mut tokens_per_round = 0usize;
+            for _ in 0..ROUNDS {
                 let t = std::time::Instant::now();
-                let responses = engine.generate_batch(&reqs).unwrap();
+                let tokens = run_round(&addr, MAX_NEW);
                 let dt = t.elapsed().as_secs_f64();
-                assert_eq!(responses.len(), b);
-                let tokens: usize =
-                    responses.iter().map(|r| r.tokens.len()).sum();
+                tokens_per_round = tokens;
+                let tps = tokens as f64 / dt;
+                best_tps = best_tps.max(tps);
                 samples.push(dt * 1e3);
-                println!(
-                    "  wave b={b} {}: {:.1} tok/s",
-                    mode.label(),
-                    tokens as f64 / dt
-                );
+                println!("  shard_scaling n={n_shards}: {tps:.0} tok/s");
             }
+
+            // fleet rollup (same bucket-exact merge the metrics op
+            // uses) + the per-shard attribution the JSON reports
+            let rollup = MetricsRegistry::default();
+            let mut per_shard = Vec::new();
+            for (i, sh) in handle.shards.shards().iter().enumerate() {
+                let Some(m) = sh.metrics() else { continue };
+                rollup.absorb(&m);
+                let occ = m.slot_occupancy.snapshot();
+                per_shard.push(obj(vec![
+                    ("shard", n(i as f64)),
+                    ("admitted", n(m.requests_admitted.get() as f64)),
+                    ("decode_ticks", n(m.decode_ticks.get() as f64)),
+                    // slot_occupancy records raw slot counts per tick
+                    ("occupancy_mean", n(occ.mean_us)),
+                ]));
+            }
+            let ttft = rollup.ttft.snapshot();
+            let itl = rollup.inter_token_latency.snapshot();
+            let ticks = rollup.decode_ticks.get();
+            let fused_share = if ticks > 0 {
+                rollup.fused_decode_ticks.get() as f64 / ticks as f64
+            } else {
+                0.0
+            };
+            runs.push(obj(vec![
+                ("shards", n(n_shards as f64)),
+                ("requests_per_round",
+                 n((CONNS * PROMPTS_PER_CONN) as f64)),
+                ("tokens_per_round", n(tokens_per_round as f64)),
+                ("tokens_per_sec", n(best_tps)),
+                ("wall_ms",
+                 Value::Arr(samples.iter().map(|&ms| n(ms)).collect())),
+                ("ttft_ms", obj(vec![
+                    ("p50", n(ttft.p50_us / 1e3)),
+                    ("p99", n(ttft.p99_us / 1e3)),
+                ])),
+                ("itl_ms", obj(vec![
+                    ("p50", n(itl.p50_us / 1e3)),
+                    ("p99", n(itl.p99_us / 1e3)),
+                ])),
+                ("fused_tick_share", n(fused_share)),
+                ("per_shard", Value::Arr(per_shard)),
+            ]));
+            best.insert(n_shards, best_tps);
             rep.add(summarize(
-                &format!("wave_b{b}_{}", mode.label()),
-                &samples,
-            ));
+                &format!("shard_scaling_n{n_shards}"), &samples));
+            handle.shutdown();
         }
+
+        for &nsh in &FLEETS[1..] {
+            println!(
+                "  => {nsh} shards vs 1: {:.2}x tokens/sec",
+                best[&nsh] / best[&1]
+            );
+        }
+
+        let doc = obj(vec![
+            ("bench", s("serving")),
+            ("scenario", s("shard_scaling")),
+            ("substrate", s("cpu")),
+            ("workload", obj(vec![
+                ("connections", n(CONNS as f64)),
+                ("prompts_per_connection", n(PROMPTS_PER_CONN as f64)),
+                ("max_new_tokens", n(MAX_NEW as f64)),
+                ("rounds", n(ROUNDS as f64)),
+            ])),
+            ("runs", Value::Arr(runs)),
+            ("speedup", obj(vec![
+                ("x2_over_x1", n(best[&2] / best[&1])),
+                ("x4_over_x1", n(best[&4] / best[&1])),
+            ])),
+        ]);
+        let path = griffin::test_support::repo_root()
+            .join("..")
+            .join("BENCH_serving.json");
+        let mut text = json::to_string(&doc);
+        text.push('\n');
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("-> {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+        }
+        rep.finish();
+    }
+}
+
+/// The artifact-gated PJRT scenarios (bucket scaling, wave vs
+/// continuous, fused vs host, v2 keep sweep, admission cost).
+#[cfg(feature = "runtime")]
+mod pjrt {
+    use std::sync::Arc;
+
+    use griffin::bench_harness::{summarize, Reporter};
+    use griffin::coordinator::engine::{Engine, Mode};
+    use griffin::coordinator::router::Router;
+    use griffin::coordinator::scheduler::Scheduler;
+    use griffin::coordinator::sequence::GenRequest;
+    use griffin::test_support::{artifact_path, have_artifacts};
+    use griffin::workload::trace;
+
+    const SHORT_G: usize = 4;
+    const LONG_G: usize = 32;
+
+    fn mixed_reqs(reqs: &[trace::TraceRequest], mode: Mode)
+                  -> Vec<GenRequest> {
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let g = if i % 2 == 0 { SHORT_G } else { LONG_G };
+                let mut q = GenRequest::greedy(0, r.prompt.clone(), g, mode);
+                q.stop_at_eos = false;
+                q
+            })
+            .collect()
     }
 
-    // ------------------------------------------------------------------
-    // scenario 2: mixed-length workload — wave baseline
-    // ------------------------------------------------------------------
-    let base_trace = trace::generate(&trace::TraceSpec {
-        seed: 11,
-        n_requests: 2 * bmax,
-        prompt_len: cfg.prefill_buckets[0],
-        gen_len: LONG_G,
-        mean_gap_ms: 0,
-        mixed_lengths: false,
-    });
-    let mut wave_tps = std::collections::BTreeMap::new();
-    for mode in [Mode::Full, Mode::griffin(0.5)] {
-        let mut samples = Vec::new();
-        let mut tps = 0.0;
-        for _ in 0..3 {
-            let reqs = mixed_reqs(&base_trace, mode);
-            let t = std::time::Instant::now();
-            let mut tokens = 0usize;
-            for chunk in reqs.chunks(bmax) {
-                let responses = engine.generate_batch(chunk).unwrap();
-                tokens +=
-                    responses.iter().map(|r| r.tokens.len()).sum::<usize>();
+    pub fn run() {
+        let model = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .unwrap_or_else(|| "tiny-swiglu".to_string());
+        if !have_artifacts(&model) {
+            eprintln!("skipping PJRT scenarios: artifacts for {model} \
+                       missing");
+            return;
+        }
+        let mut engine =
+            Engine::load(&artifact_path(&model), false).unwrap();
+        let cfg = engine.config().clone();
+        let bmax = cfg.batch_buckets.iter().copied().max().unwrap_or(1);
+        println!("bench_serving on {model} (slot pool = {bmax})");
+        let mut rep = Reporter::new(&format!("bench_serving_{model}.csv"));
+
+        // --------------------------------------------------------------
+        // scenario 1: uniform-length bucket scaling (Table 3 style)
+        // through run-to-completion waves — exercises decode_b{b} at
+        // every bucket
+        // --------------------------------------------------------------
+        let g = 16usize;
+        for &b in &cfg.batch_buckets {
+            for mode in [Mode::Full, Mode::griffin(0.5)] {
+                let traced = trace::generate(&trace::TraceSpec {
+                    seed: 7,
+                    n_requests: b,
+                    prompt_len: cfg.prefill_buckets[0],
+                    gen_len: g,
+                    mean_gap_ms: 0,
+                    mixed_lengths: false,
+                });
+                let mk = |max_new: usize| -> Vec<GenRequest> {
+                    traced
+                        .iter()
+                        .map(|r| {
+                            let mut q = GenRequest::greedy(
+                                0, r.prompt.clone(), max_new, mode);
+                            q.stop_at_eos = false;
+                            q
+                        })
+                        .collect()
+                };
+                // warmup (compilation of this bucket's executables)
+                engine.generate_batch(&mk(2)).unwrap();
+
+                let mut samples = Vec::new();
+                for _ in 0..3 {
+                    let reqs = mk(g);
+                    let t = std::time::Instant::now();
+                    let responses = engine.generate_batch(&reqs).unwrap();
+                    let dt = t.elapsed().as_secs_f64();
+                    assert_eq!(responses.len(), b);
+                    let tokens: usize =
+                        responses.iter().map(|r| r.tokens.len()).sum();
+                    samples.push(dt * 1e3);
+                    println!(
+                        "  wave b={b} {}: {:.1} tok/s",
+                        mode.label(),
+                        tokens as f64 / dt
+                    );
+                }
+                rep.add(summarize(
+                    &format!("wave_b{b}_{}", mode.label()),
+                    &samples,
+                ));
             }
-            let dt = t.elapsed().as_secs_f64();
-            tps = tokens as f64 / dt;
-            samples.push(dt * 1e3);
-            println!("  wave_mixed {}: {:.1} tok/s", mode.label(), tps);
         }
-        wave_tps.insert(mode.label(), tps);
-        rep.add(summarize(&format!("wave_mixed_{}", mode.label()),
-                          &samples));
-    }
 
-    // ------------------------------------------------------------------
-    // scenario 2 continued: same mixed-length workload through the
-    // continuous-batching scheduler (owns the engine from here on)
-    // ------------------------------------------------------------------
-    let router = Arc::new(Router::new(256, cfg.max_seq));
-    let mut sched = Scheduler::new(engine, router.clone());
-    for mode in [Mode::Full, Mode::griffin(0.5)] {
-        // warmup: one untimed pass compiles the smaller prefill buckets
-        // that back-fill admissions hit
-        for q in mixed_reqs(&base_trace, mode) {
-            router.admit(q).unwrap();
+        // --------------------------------------------------------------
+        // scenario 2: mixed-length workload — wave baseline
+        // --------------------------------------------------------------
+        let base_trace = trace::generate(&trace::TraceSpec {
+            seed: 11,
+            n_requests: 2 * bmax,
+            prompt_len: cfg.prefill_buckets[0],
+            gen_len: LONG_G,
+            mean_gap_ms: 0,
+            mixed_lengths: false,
+        });
+        let mut wave_tps = std::collections::BTreeMap::new();
+        for mode in [Mode::Full, Mode::griffin(0.5)] {
+            let mut samples = Vec::new();
+            let mut tps = 0.0;
+            for _ in 0..3 {
+                let reqs = mixed_reqs(&base_trace, mode);
+                let t = std::time::Instant::now();
+                let mut tokens = 0usize;
+                for chunk in reqs.chunks(bmax) {
+                    let responses = engine.generate_batch(chunk).unwrap();
+                    tokens += responses
+                        .iter()
+                        .map(|r| r.tokens.len())
+                        .sum::<usize>();
+                }
+                let dt = t.elapsed().as_secs_f64();
+                tps = tokens as f64 / dt;
+                samples.push(dt * 1e3);
+                println!("  wave_mixed {}: {:.1} tok/s", mode.label(), tps);
+            }
+            wave_tps.insert(mode.label(), tps);
+            rep.add(summarize(&format!("wave_mixed_{}", mode.label()),
+                              &samples));
         }
-        sched.run_until_idle().unwrap();
 
-        let mut samples = Vec::new();
-        let mut tps = 0.0;
-        for _ in 0..3 {
+        // --------------------------------------------------------------
+        // scenario 2 continued: same mixed-length workload through the
+        // continuous-batching scheduler (owns the engine from here on)
+        // --------------------------------------------------------------
+        let router = Arc::new(Router::new(256, cfg.max_seq));
+        let mut sched = Scheduler::new(engine, router.clone());
+        for mode in [Mode::Full, Mode::griffin(0.5)] {
+            // warmup: one untimed pass compiles the smaller prefill
+            // buckets that back-fill admissions hit
             for q in mixed_reqs(&base_trace, mode) {
                 router.admit(q).unwrap();
             }
-            let t = std::time::Instant::now();
-            let responses = sched.run_until_idle().unwrap();
-            let dt = t.elapsed().as_secs_f64();
-            assert_eq!(responses.len(), 2 * bmax);
-            let tokens: usize =
-                responses.iter().map(|r| r.tokens.len()).sum();
-            tps = tokens as f64 / dt;
-            samples.push(dt * 1e3);
-            println!("  cont_mixed {}: {:.1} tok/s", mode.label(), tps);
-        }
-        let wave = wave_tps.get(&mode.label()).copied().unwrap_or(0.0);
-        if wave > 0.0 {
-            println!(
-                "  => continuous vs wave ({}): {:.2}x tokens/sec",
-                mode.label(),
-                tps / wave
-            );
-        }
-        rep.add(summarize(&format!("cont_mixed_{}", mode.label()),
-                          &samples));
-    }
+            sched.run_until_idle().unwrap();
 
-    // ------------------------------------------------------------------
-    // scenario 3: fused (on-device) vs host sampling through the
-    // continuous scheduler, IDENTICAL top-k workload both times — the
-    // host run just flips `fused_enabled` off, so the delta isolates
-    // the host-boundary cost (logits download + host sampling) rather
-    // than comparing different sampler algorithms.
-    // ------------------------------------------------------------------
-    let have_fused = sched
-        .engine
-        .fused_decode_spec(bmax, None)
-        .is_some();
-    if !have_fused {
-        eprintln!("skipping fused-vs-host scenario: artifacts predate \
-                   decode_sample");
-    }
-    let spec = griffin::sampling::SamplerSpec::TopK { k: 8, temperature: 0.8 };
-    for (label, fused) in [("fused_topk", true), ("host_topk", false)] {
-        if !have_fused {
-            break;
-        }
-        sched.fused_enabled = fused;
-        let m = sched.engine.metrics.clone();
-        let (ticks0, fused0, down0) = (
-            m.decode_ticks.get(),
-            m.fused_decode_ticks.get(),
-            m.host_bytes_to_host.get(),
-        );
-        let mut samples = Vec::new();
-        for round in 0..3 {
-            for (i, mut q) in
-                mixed_reqs(&base_trace, Mode::Full).into_iter().enumerate()
-            {
-                q.sampler = spec;
-                q.seed = (round * 1000 + i) as u64;
-                router.admit(q).unwrap();
-            }
-            let t = std::time::Instant::now();
-            let responses = sched.run_until_idle().unwrap();
-            let dt = t.elapsed().as_secs_f64();
-            let tokens: usize =
-                responses.iter().map(|r| r.tokens.len()).sum();
-            samples.push(dt * 1e3);
-            println!("  cont_mixed_{label}: {:.1} tok/s",
-                     tokens as f64 / dt);
-        }
-        let ticks = m.decode_ticks.get() - ticks0;
-        let fused = m.fused_decode_ticks.get() - fused0;
-        let down_mb =
-            (m.host_bytes_to_host.get() - down0) as f64 / 1e6;
-        println!(
-            "  => {label}: {fused}/{ticks} fused ticks, \
-             {down_mb:.2} MB device->host"
-        );
-        rep.add(summarize(&format!("cont_mixed_{label}"), &samples));
-    }
-    sched.fused_enabled = true;
-
-    // ------------------------------------------------------------------
-    // scenario 4: the v2 typed API with MIXED per-request keep values.
-    // Requests are built as v2 wire lines and parsed through
-    // api::parse_request — the same admission path the server uses. At
-    // the pool's batch bucket the distinct keeps snap to the compiled
-    // decode buckets (Engine::bucket_keep), and bucket-aware admission
-    // batches the snappable ones together instead of serializing into
-    // per-keep waves; the report breaks completion latency out per keep.
-    // ------------------------------------------------------------------
-    {
-        use griffin::api::{self, Request};
-        use griffin::json::{n, obj, s};
-        use std::collections::BTreeMap;
-        use std::time::Instant;
-
-        let tok = griffin::tokenizer::Tokenizer::new();
-        let keeps = [0.25f64, 0.5, 0.75];
-        let admit_all = |sched: &mut Scheduler| -> BTreeMap<u64, f64> {
-            let mut keep_of = BTreeMap::new();
-            for (i, r) in base_trace.iter().enumerate() {
-                let keep = keeps[i % keeps.len()];
-                let line = obj(vec![
-                    ("v", n(2.0)),
-                    ("op", s("generate")),
-                    ("prompt", s(&tok.decode(&r.prompt))),
-                    ("max_new_tokens", n(12.0)),
-                    ("stop_at_eos", griffin::json::Value::Bool(false)),
-                    (
-                        "prune",
-                        obj(vec![
-                            ("method", s("griffin")),
-                            ("keep", n(keep)),
-                        ]),
-                    ),
-                ]);
-                let Ok(Request::Generate(spec)) = api::parse_request(&line)
-                else {
-                    panic!("v2 line failed to parse")
-                };
-                let mut q = spec.to_requests(&tok).remove(0);
-                q.id = 0;
-                let id = sched.router.admit(q).unwrap();
-                keep_of.insert(id, keep);
-            }
-            keep_of
-        };
-
-        // warmup (compiles whatever pruned buckets the snaps resolve to)
-        admit_all(&mut sched);
-        sched.run_until_idle().unwrap();
-
-        let mut per_keep: BTreeMap<&'static str, Vec<f64>> =
-            BTreeMap::new();
-        let mut k_used: BTreeMap<&'static str, usize> = BTreeMap::new();
-        let label = |keep: f64| -> &'static str {
-            if keep < 0.4 {
-                "v2_keep0.25"
-            } else if keep < 0.6 {
-                "v2_keep0.5"
-            } else {
-                "v2_keep0.75"
-            }
-        };
-        for _ in 0..3 {
-            let keep_of = admit_all(&mut sched);
-            let t0 = Instant::now();
-            let responses = sched.run_until_idle().unwrap();
-            assert_eq!(responses.len(), keep_of.len());
-            for r in &responses {
-                let keep = keep_of[&r.id];
-                per_keep
-                    .entry(label(keep))
-                    .or_default()
-                    .push(r.decode_ms + r.prefill_ms + r.select_ms);
-                if let Some(k) = r.k_used {
-                    k_used.insert(label(keep), k);
-                }
-            }
-            let dt = t0.elapsed().as_secs_f64();
-            let tokens: usize =
-                responses.iter().map(|x| x.tokens.len()).sum();
-            println!("  v2_keep_sweep: {:.1} tok/s", tokens as f64 / dt);
-        }
-        for (name, samples) in &per_keep {
-            println!(
-                "  {name}: p50 {:.1} ms (k_used={})",
-                griffin::util::percentile(samples, 50.0),
-                k_used.get(name).copied().unwrap_or(0)
-            );
-            rep.add(summarize(name, samples));
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // scenario 5: ADMISSION boundary cost — device-resident vs
-    // host-staged, on an admission-dominated workload (2 tokens per
-    // request, so nearly every tick back-fills). Identical workload both
-    // times; only `fused_admission` flips, so the delta isolates the
-    // admission host-boundary cost (prompt-logits download + host KV
-    // splice staging) from everything else. The per-request admission
-    // bytes come straight from `admission_bytes_to_{device,host}`.
-    // ------------------------------------------------------------------
-    {
-        let have_admit = sched.engine.can_prefill_fused(1)
-            && sched.engine.splice_spec(bmax, bmax).is_some();
-        if !have_admit {
-            eprintln!("skipping admission scenario: artifacts predate \
-                       the admission ABI");
-        }
-        for (label, fused) in [("fused_admit", true), ("host_admit", false)]
-        {
-            if !have_admit {
-                break;
-            }
-            sched.fused_admission = fused;
-            let m = sched.engine.metrics.clone();
-            let (up0, down0, adm0) = (
-                m.admission_bytes_to_device.get(),
-                m.admission_bytes_to_host.get(),
-                m.fused_admissions.get(),
-            );
             let mut samples = Vec::new();
-            let mut served = 0u64;
+            let mut tps = 0.0;
             for _ in 0..3 {
-                for mut q in mixed_reqs(&base_trace, Mode::Full) {
-                    q.max_new_tokens = 2;
+                for q in mixed_reqs(&base_trace, mode) {
                     router.admit(q).unwrap();
-                    served += 1;
                 }
                 let t = std::time::Instant::now();
                 let responses = sched.run_until_idle().unwrap();
-                assert_eq!(responses.len(), base_trace.len());
-                samples.push(t.elapsed().as_secs_f64() * 1e3);
+                let dt = t.elapsed().as_secs_f64();
+                assert_eq!(responses.len(), 2 * bmax);
+                let tokens: usize =
+                    responses.iter().map(|r| r.tokens.len()).sum();
+                tps = tokens as f64 / dt;
+                samples.push(dt * 1e3);
+                println!("  cont_mixed {}: {:.1} tok/s", mode.label(), tps);
             }
-            let up = m.admission_bytes_to_device.get() - up0;
-            let down = m.admission_bytes_to_host.get() - down0;
-            println!(
-                "  => {label}: {:.1} KB up / {:.1} KB down per admitted \
-                 request ({} fused admissions)",
-                up as f64 / served as f64 / 1e3,
-                down as f64 / served as f64 / 1e3,
-                m.fused_admissions.get() - adm0
-            );
-            rep.add(summarize(&format!("admit_{label}"), &samples));
+            let wave = wave_tps.get(&mode.label()).copied().unwrap_or(0.0);
+            if wave > 0.0 {
+                println!(
+                    "  => continuous vs wave ({}): {:.2}x tokens/sec",
+                    mode.label(),
+                    tps / wave
+                );
+            }
+            rep.add(summarize(&format!("cont_mixed_{}", mode.label()),
+                              &samples));
         }
-        sched.fused_admission = true;
-    }
 
-    println!(
-        "  gather cache: {} hits / {} misses",
-        sched.engine.metrics.gather_cache_hits.get(),
-        sched.engine.metrics.gather_cache_misses.get()
-    );
-    rep.finish();
+        // --------------------------------------------------------------
+        // scenario 3: fused (on-device) vs host sampling through the
+        // continuous scheduler, IDENTICAL top-k workload both times —
+        // the host run just flips `fused_enabled` off, so the delta
+        // isolates the host-boundary cost (logits download + host
+        // sampling) rather than comparing different sampler algorithms.
+        // --------------------------------------------------------------
+        let have_fused = sched
+            .engine
+            .fused_decode_spec(bmax, None)
+            .is_some();
+        if !have_fused {
+            eprintln!("skipping fused-vs-host scenario: artifacts predate \
+                       decode_sample");
+        }
+        let spec =
+            griffin::sampling::SamplerSpec::TopK { k: 8, temperature: 0.8 };
+        for (label, fused) in [("fused_topk", true), ("host_topk", false)] {
+            if !have_fused {
+                break;
+            }
+            sched.fused_enabled = fused;
+            let m = sched.engine.metrics.clone();
+            let (ticks0, fused0, down0) = (
+                m.decode_ticks.get(),
+                m.fused_decode_ticks.get(),
+                m.host_bytes_to_host.get(),
+            );
+            let mut samples = Vec::new();
+            for round in 0..3 {
+                for (i, mut q) in mixed_reqs(&base_trace, Mode::Full)
+                    .into_iter()
+                    .enumerate()
+                {
+                    q.sampler = spec;
+                    q.seed = (round * 1000 + i) as u64;
+                    router.admit(q).unwrap();
+                }
+                let t = std::time::Instant::now();
+                let responses = sched.run_until_idle().unwrap();
+                let dt = t.elapsed().as_secs_f64();
+                let tokens: usize =
+                    responses.iter().map(|r| r.tokens.len()).sum();
+                samples.push(dt * 1e3);
+                println!("  cont_mixed_{label}: {:.1} tok/s",
+                         tokens as f64 / dt);
+            }
+            let ticks = m.decode_ticks.get() - ticks0;
+            let fused = m.fused_decode_ticks.get() - fused0;
+            let down_mb =
+                (m.host_bytes_to_host.get() - down0) as f64 / 1e6;
+            println!(
+                "  => {label}: {fused}/{ticks} fused ticks, \
+                 {down_mb:.2} MB device->host"
+            );
+            rep.add(summarize(&format!("cont_mixed_{label}"), &samples));
+        }
+        sched.fused_enabled = true;
+
+        // --------------------------------------------------------------
+        // scenario 4: the v2 typed API with MIXED per-request keep
+        // values. Requests are built as v2 wire lines and parsed through
+        // api::parse_request — the same admission path the server uses.
+        // At the pool's batch bucket the distinct keeps snap to the
+        // compiled decode buckets (Engine::bucket_keep), and
+        // bucket-aware admission batches the snappable ones together
+        // instead of serializing into per-keep waves; the report breaks
+        // completion latency out per keep.
+        // --------------------------------------------------------------
+        {
+            use griffin::api::{self, Request};
+            use griffin::json::{n, obj, s};
+            use std::collections::BTreeMap;
+            use std::time::Instant;
+
+            let tok = griffin::tokenizer::Tokenizer::new();
+            let keeps = [0.25f64, 0.5, 0.75];
+            let admit_all = |sched: &mut Scheduler| -> BTreeMap<u64, f64> {
+                let mut keep_of = BTreeMap::new();
+                for (i, r) in base_trace.iter().enumerate() {
+                    let keep = keeps[i % keeps.len()];
+                    let line = obj(vec![
+                        ("v", n(2.0)),
+                        ("op", s("generate")),
+                        ("prompt", s(&tok.decode(&r.prompt))),
+                        ("max_new_tokens", n(12.0)),
+                        ("stop_at_eos", griffin::json::Value::Bool(false)),
+                        (
+                            "prune",
+                            obj(vec![
+                                ("method", s("griffin")),
+                                ("keep", n(keep)),
+                            ]),
+                        ),
+                    ]);
+                    let Ok(Request::Generate(spec)) =
+                        api::parse_request(&line)
+                    else {
+                        panic!("v2 line failed to parse")
+                    };
+                    let mut q = spec.to_requests(&tok).remove(0);
+                    q.id = 0;
+                    let id = sched.router.admit(q).unwrap();
+                    keep_of.insert(id, keep);
+                }
+                keep_of
+            };
+
+            // warmup (compiles whatever pruned buckets the snaps
+            // resolve to)
+            admit_all(&mut sched);
+            sched.run_until_idle().unwrap();
+
+            let mut per_keep: BTreeMap<&'static str, Vec<f64>> =
+                BTreeMap::new();
+            let mut k_used: BTreeMap<&'static str, usize> = BTreeMap::new();
+            let label = |keep: f64| -> &'static str {
+                if keep < 0.4 {
+                    "v2_keep0.25"
+                } else if keep < 0.6 {
+                    "v2_keep0.5"
+                } else {
+                    "v2_keep0.75"
+                }
+            };
+            for _ in 0..3 {
+                let keep_of = admit_all(&mut sched);
+                let t0 = Instant::now();
+                let responses = sched.run_until_idle().unwrap();
+                assert_eq!(responses.len(), keep_of.len());
+                for r in &responses {
+                    let keep = keep_of[&r.id];
+                    per_keep
+                        .entry(label(keep))
+                        .or_default()
+                        .push(r.decode_ms + r.prefill_ms + r.select_ms);
+                    if let Some(k) = r.k_used {
+                        k_used.insert(label(keep), k);
+                    }
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                let tokens: usize =
+                    responses.iter().map(|x| x.tokens.len()).sum();
+                println!("  v2_keep_sweep: {:.1} tok/s",
+                         tokens as f64 / dt);
+            }
+            for (name, samples) in &per_keep {
+                println!(
+                    "  {name}: p50 {:.1} ms (k_used={})",
+                    griffin::util::percentile(samples, 50.0),
+                    k_used.get(name).copied().unwrap_or(0)
+                );
+                rep.add(summarize(name, samples));
+            }
+        }
+
+        // --------------------------------------------------------------
+        // scenario 5: ADMISSION boundary cost — device-resident vs
+        // host-staged, on an admission-dominated workload (2 tokens per
+        // request, so nearly every tick back-fills). Identical workload
+        // both times; only `fused_admission` flips, so the delta
+        // isolates the admission host-boundary cost (prompt-logits
+        // download + host KV splice staging) from everything else. The
+        // per-request admission bytes come straight from
+        // `admission_bytes_to_{device,host}`.
+        // --------------------------------------------------------------
+        {
+            let have_admit = sched.engine.can_prefill_fused(1)
+                && sched.engine.splice_spec(bmax, bmax).is_some();
+            if !have_admit {
+                eprintln!("skipping admission scenario: artifacts predate \
+                           the admission ABI");
+            }
+            for (label, fused) in
+                [("fused_admit", true), ("host_admit", false)]
+            {
+                if !have_admit {
+                    break;
+                }
+                sched.fused_admission = fused;
+                let m = sched.engine.metrics.clone();
+                let (up0, down0, adm0) = (
+                    m.admission_bytes_to_device.get(),
+                    m.admission_bytes_to_host.get(),
+                    m.fused_admissions.get(),
+                );
+                let mut samples = Vec::new();
+                let mut served = 0u64;
+                for _ in 0..3 {
+                    for mut q in mixed_reqs(&base_trace, Mode::Full) {
+                        q.max_new_tokens = 2;
+                        router.admit(q).unwrap();
+                        served += 1;
+                    }
+                    let t = std::time::Instant::now();
+                    let responses = sched.run_until_idle().unwrap();
+                    assert_eq!(responses.len(), base_trace.len());
+                    samples.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                let up = m.admission_bytes_to_device.get() - up0;
+                let down = m.admission_bytes_to_host.get() - down0;
+                println!(
+                    "  => {label}: {:.1} KB up / {:.1} KB down per \
+                     admitted request ({} fused admissions)",
+                    up as f64 / served as f64 / 1e3,
+                    down as f64 / served as f64 / 1e3,
+                    m.fused_admissions.get() - adm0
+                );
+                rep.add(summarize(&format!("admit_{label}"), &samples));
+            }
+            sched.fused_admission = true;
+        }
+
+        println!(
+            "  gather cache: {} hits / {} misses",
+            sched.engine.metrics.gather_cache_hits.get(),
+            sched.engine.metrics.gather_cache_misses.get()
+        );
+        rep.finish();
+    }
+}
+
+fn main() {
+    #[cfg(feature = "cpu-substrate")]
+    shard_scaling::run();
+    #[cfg(feature = "runtime")]
+    pjrt::run();
+    #[cfg(all(not(feature = "cpu-substrate"), not(feature = "runtime")))]
+    eprintln!("bench_serving: no backend enabled (build with the \
+               `runtime` or `cpu-substrate` feature)");
 }

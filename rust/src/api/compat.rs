@@ -69,6 +69,8 @@ pub fn v1_generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
         },
         stop_at_eos: bool_field(v, "stop_at_eos")?.unwrap_or(true),
         stream: bool_field(v, "stream")?.unwrap_or(false),
+        // session affinity is a v2 surface; v1 requests place least-loaded
+        session: None,
         v2: false,
     };
     spec.validate()?;

@@ -84,6 +84,7 @@ impl From<&AdmitError> for ApiError {
             AdmitError::QueueFull { .. } => ErrorCode::QueueFull,
             AdmitError::PromptTooLong { .. } => ErrorCode::PromptTooLong,
             AdmitError::EmptyPrompt => ErrorCode::EmptyPrompt,
+            AdmitError::NoHealthyShards => ErrorCode::EngineDropped,
         };
         ApiError::new(code, e.to_string())
     }

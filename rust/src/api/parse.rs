@@ -110,6 +110,7 @@ fn generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
         sampling,
         stop_at_eos: bool_field(v, "stop_at_eos")?.unwrap_or(true),
         stream: bool_field(v, "stream")?.unwrap_or(false),
+        session: str_field(v, "session")?.map(str::to_string),
         v2: true,
     };
     spec.validate()?;
@@ -311,8 +312,8 @@ mod tests {
             // unknown strategy
             r#"{"v":2,"op":"generate","prompt":"x",
                 "prune":{"method":"griffin","strategy":"magic"}}"#,
-            // batched + streaming
-            r#"{"v":2,"op":"generate","prompts":["a","b"],"stream":true}"#,
+            // wrong session type
+            r#"{"v":2,"op":"generate","prompt":"x","session":7}"#,
             // wrong field type
             r#"{"v":2,"op":"generate","prompt":"x","max_new_tokens":"4"}"#,
             // zero budget
@@ -339,6 +340,24 @@ mod tests {
         let Request::Generate(g) = r else { panic!() };
         assert_eq!(g.prompts.len(), 3);
         assert!(!g.stream);
+        assert!(g.session.is_none());
+        // batched streaming is a supported surface (per-index events)
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompts":["a","b"],"stream":true}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert!(g.stream);
+    }
+
+    #[test]
+    fn v2_session_affinity_key_parses() {
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompt":"x","session":"user-9"}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.session.as_deref(), Some("user-9"));
     }
 
     #[test]

@@ -122,6 +122,60 @@ pub fn accepted_json(id: u64) -> String {
     ])))
 }
 
+/// Batched-stream admission ack: one line, the server-assigned ids in
+/// PROMPT ORDER — the id↔index mapping every later per-index event is
+/// read against. Batched streaming is v2-only.
+pub fn accepted_batch_json(ids: &[u64]) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("event", s("accepted")),
+        (
+            "ids",
+            Value::Arr(ids.iter().map(|&id| n(id as f64)).collect()),
+        ),
+    ])))
+}
+
+/// One token event of a batched stream. `index` is the PROMPT index
+/// (which lane of the batch this token belongs to); the token's
+/// position within its sequence rides in `seq`. Single-prompt streams
+/// keep the legacy [`token_json`] shape, where `index` is the token
+/// position.
+pub fn stream_token_json(index: usize, id: u64, seq: usize, token: i32,
+                         text: &str) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("event", s("token")),
+        ("index", n(index as f64)),
+        ("id", n(id as f64)),
+        ("seq", n(seq as f64)),
+        ("token", n(token as f64)),
+        ("text", s(text)),
+    ])))
+}
+
+/// Per-index terminal event of a batched stream: the full v2 row schema
+/// tagged `event:"done"` plus the prompt `index`. Lanes finish in
+/// completion order; the stream ends after the last lane's terminal
+/// event (there is no trailing batch line).
+pub fn stream_done_json(r: &GenResponse, index: usize) -> String {
+    let mut v = response_json(r, true);
+    if let Value::Obj(ref mut o) = v {
+        o.insert(1, ("event".to_string(), s("done")));
+        o.insert(2, ("index".to_string(), n(index as f64)));
+    }
+    json::to_string(&v)
+}
+
+/// Per-index error event of a batched stream (admission rejection or
+/// engine fault of one lane; the other lanes keep streaming).
+pub fn stream_error_json(e: &ApiError, id: u64, index: usize) -> String {
+    let mut v = error_obj(e, Some(id));
+    if let Value::Obj(ref mut o) = v {
+        o.insert(1, ("event".to_string(), s("error")));
+        o.insert(2, ("index".to_string(), n(index as f64)));
+    }
+    json::to_string(&v2_wrap(v))
+}
+
 /// A structured error object; `id` ties it to an in-flight request.
 /// (Batched generate embeds these in its `results` array.)
 pub fn error_obj(e: &ApiError, id: Option<u64>) -> Value {
@@ -173,13 +227,18 @@ pub fn cancel_ack_json(id: u64, status: &str) -> String {
 }
 
 /// Liveness + capacity snapshot, answerable off the engine thread.
+/// Fleet-level `slots`/`queue` are sums over the engine shards; each
+/// `shards` entry breaks the same numbers out per shard (built by the
+/// server, which owns the shard state). `status` is `"ok"` while every
+/// shard is healthy, `"degraded"` once any shard is poisoned —
 /// `queue_depth` counts generate admissions, `score_depth` the score
 /// queue — both share `queue_capacity` as their per-queue cap.
-pub fn health_json(slots_busy: u64, slots_total: u64, queue_depth: usize,
-                   score_depth: usize, queue_capacity: usize) -> String {
+pub fn health_json(status: &str, slots_busy: u64, slots_total: u64,
+                   queue_depth: usize, score_depth: usize,
+                   queue_capacity: usize, shards: Vec<Value>) -> String {
     json::to_string(&v2_wrap(obj(vec![
         ("op", s("health")),
-        ("status", s("ok")),
+        ("status", s(status)),
         (
             "slots",
             obj(vec![
@@ -195,6 +254,7 @@ pub fn health_json(slots_busy: u64, slots_total: u64, queue_depth: usize,
                 ("capacity", n(queue_capacity as f64)),
             ]),
         ),
+        ("shards", Value::Arr(shards)),
     ])))
 }
 
@@ -323,7 +383,10 @@ mod tests {
 
     #[test]
     fn health_json_shape() {
-        let v = json::parse(&health_json(2, 4, 1, 3, 64)).unwrap();
+        let shard = obj(vec![("shard", n(0.0)), ("status", s("ok"))]);
+        let v =
+            json::parse(&health_json("ok", 2, 4, 1, 3, 64, vec![shard]))
+                .unwrap();
         assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
         assert_eq!(
             v.get("slots").unwrap().get("total").unwrap().as_usize(),
@@ -333,5 +396,40 @@ mod tests {
         assert_eq!(q.get("depth").unwrap().as_usize(), Some(1));
         assert_eq!(q.get("score_depth").unwrap().as_usize(), Some(3));
         assert_eq!(q.get("capacity").unwrap().as_usize(), Some(64));
+        let Some(Value::Arr(shards)) = v.get("shards") else {
+            panic!("health carries a per-shard breakdown");
+        };
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("shard").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn batched_stream_events_carry_prompt_index() {
+        // accepted: ids in prompt order — the id↔index contract
+        let a = json::parse(&accepted_batch_json(&[7, 8])).unwrap();
+        assert_eq!(a.get("event").unwrap().as_str(), Some("accepted"));
+        let Some(Value::Arr(ids)) = a.get("ids") else {
+            panic!("batched accepted carries the id list");
+        };
+        assert_eq!(ids.len(), 2);
+        assert_eq!(ids[1].as_usize(), Some(8));
+        // token: index = prompt lane, seq = token position
+        let t =
+            json::parse(&stream_token_json(1, 8, 3, 104, "h")).unwrap();
+        assert_eq!(t.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(t.get("index").unwrap().as_usize(), Some(1));
+        assert_eq!(t.get("id").unwrap().as_usize(), Some(8));
+        assert_eq!(t.get("seq").unwrap().as_usize(), Some(3));
+        // done: full v2 row + event tag + lane index
+        let d = json::parse(&stream_done_json(&resp(), 1)).unwrap();
+        assert_eq!(d.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(d.get("index").unwrap().as_usize(), Some(1));
+        assert_eq!(d.get("finish").unwrap().as_str(), Some("length"));
+        // error: lane-scoped failure keeps the stream alive
+        let e = ApiError::new(crate::api::ErrorCode::QueueFull, "full");
+        let v = json::parse(&stream_error_json(&e, 9, 0)).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("error"));
+        assert_eq!(v.get("index").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("code").unwrap().as_str(), Some("queue_full"));
     }
 }

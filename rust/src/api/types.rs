@@ -222,6 +222,9 @@ pub struct GenerateSpec {
     pub sampling: SamplingSpec,
     pub stop_at_eos: bool,
     pub stream: bool,
+    /// client-supplied shard-affinity key (v2): requests sharing it are
+    /// placed on the same engine shard and never moved by work stealing
+    pub session: Option<String>,
     /// arrived under the v2 envelope (controls response formatting)
     pub v2: bool,
 }
@@ -235,14 +238,7 @@ impl GenerateSpec {
             return Err(ApiError::invalid("max_new_tokens must be >= 1"));
         }
         self.prune.validate()?;
-        self.sampling.validate()?;
-        if self.stream && self.prompts.len() > 1 {
-            return Err(ApiError::invalid(
-                "streaming is single-prompt; drop \"stream\" for batched \
-                 generate",
-            ));
-        }
-        Ok(())
+        self.sampling.validate()
     }
 
     /// Lower to engine requests, one per prompt (ids are assigned by the
@@ -258,6 +254,7 @@ impl GenerateSpec {
                 sampler: self.sampling.to_sampler(),
                 seed: self.sampling.seed,
                 stop_at_eos: self.stop_at_eos,
+                session: self.session.clone(),
                 admitted_at: Instant::now(),
             })
             .collect()
@@ -384,7 +381,9 @@ mod tests {
     }
 
     #[test]
-    fn generate_spec_rejects_batched_streaming() {
+    fn generate_spec_accepts_batched_streaming() {
+        // batched streaming is a supported v2 surface: per-index token
+        // events with per-index done lines (docs/protocol.md)
         let spec = GenerateSpec {
             prompts: vec!["a".into(), "b".into()],
             max_new_tokens: 4,
@@ -392,9 +391,10 @@ mod tests {
             sampling: SamplingSpec::default(),
             stop_at_eos: true,
             stream: true,
+            session: None,
             v2: true,
         };
-        assert!(spec.validate().is_err());
+        assert!(spec.validate().is_ok());
     }
 
     #[test]

@@ -282,7 +282,7 @@ impl Manifest {
             .filter(|e| {
                 e.kind == kind
                     && e.batch == Some(batch)
-                    && e.seq.map_or(false, |s| s >= prompt_len)
+                    && e.seq.is_some_and(|s| s >= prompt_len)
             })
             .min_by_key(|e| e.seq.unwrap())
     }

@@ -125,7 +125,30 @@ pub struct DecodeState {
     pub vcache: DeviceTensor,
     /// per-slot next write position (== tokens seen so far)
     pub pos: Vec<i32>,
+    /// Device-chained copy of `pos` on the fused decode path: the
+    /// `decode_*_sample` executables output the advanced position
+    /// (input pos + 1), so steady-state fused ticks upload no pos
+    /// vector at all. `None` means stale — the next fused step seeds
+    /// the chain by uploading the host mirror once. Any host-side
+    /// write to `pos` outside the fused step (splice, retirement,
+    /// host-path decode) must call [`DecodeState::invalidate_pos`].
+    pos_dev: Option<DeviceTensor>,
     pub batch: usize,
+}
+
+impl DecodeState {
+    /// Drop the device-chained pos copy after a host-side `pos` write
+    /// (slot-membership change / host-path step); the next fused step
+    /// re-uploads the host mirror once.
+    pub fn invalidate_pos(&mut self) {
+        self.pos_dev = None;
+    }
+
+    /// Whether the fused decode path currently chains pos on device
+    /// (no per-step upload). Test/bench introspection.
+    pub fn pos_resident(&self) -> bool {
+        self.pos_dev.is_some()
+    }
 }
 
 /// What the caller needs back from the prompt phase. Admission routing
@@ -410,6 +433,7 @@ impl Engine {
                 kcache,
                 vcache,
                 pos: p.lens_i32,
+                pos_dev: None,
                 batch: p.batch,
             },
             stats,
@@ -545,6 +569,7 @@ impl Engine {
                 kcache,
                 vcache,
                 pos: p.lens_i32,
+                pos_dev: None,
                 batch: p.batch,
             },
             stats,
@@ -840,6 +865,9 @@ impl Engine {
         for p in state.pos.iter_mut() {
             *p += 1;
         }
+        // the host path advances pos outside the fused chain — any
+        // device-resident copy is now stale
+        state.invalidate_pos();
         t.record_into(&self.metrics.decode_step_latency);
         Ok(logits)
     }
@@ -883,14 +911,29 @@ impl Engine {
                 "no device-resident tokens; pass host_tokens after a \
                  membership change")?,
         };
-        let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
+        // chained-pos ABI: regenerated artifacts output pos + 1, so the
+        // device copy carries across ticks and the host mirror is only
+        // uploaded to seed the chain (or per step on pre-chain ABIs)
+        let chained_abi = self
+            .fused_decode_spec(b, ff.map(|p| p.k))
+            .map(|s| s.outputs.last().is_some_and(|o| o.name == "pos"))
+            .unwrap_or(false);
+        let uploaded_pos;
+        let pos_arg: &DeviceTensor = match &state.pos_dev {
+            Some(p) if chained_abi => p,
+            _ => {
+                uploaded_pos = self.session.upload_i32(&[b], &state.pos)?;
+                &uploaded_pos
+            }
+        };
         let plan = self.decode_plan(b, ff, override_ff, true)?;
         let mut outs = self.session.run_prepared(
             &plan,
-            &[&state.kcache, &state.vcache, tok_dev, &pos_dev,
+            &[&state.kcache, &state.vcache, tok_dev, pos_arg,
               &samp.temp, &samp.topk, &samp.rng],
         )?;
-        // outputs: token, logprob, kcache, vcache, rng
+        // outputs: token, logprob, kcache, vcache, rng[, pos]
+        let pos_out = if chained_abi { outs.pop() } else { None };
         let rng = outs.pop().unwrap();
         let vcache = outs.pop().unwrap();
         let kcache = outs.pop().unwrap();
@@ -903,6 +946,7 @@ impl Engine {
         for p in state.pos.iter_mut() {
             *p += 1;
         }
+        state.pos_dev = pos_out;
         samp.rng = rng;
         samp.tokens = Some(tok_t);
         t.record_into(&self.metrics.decode_step_latency);
@@ -1084,6 +1128,7 @@ impl Engine {
             kcache: self.session.upload_f32(&shape, &zeros)?,
             vcache: self.session.upload_f32(&shape, &zeros)?,
             pos: vec![0; batch],
+            pos_dev: None,
             batch,
         })
     }
@@ -1169,6 +1214,9 @@ impl Engine {
         for &(si, di) in pairs {
             dst.pos[di] = src.pos[si];
         }
+        // membership changed: the fused chain re-seeds pos from the
+        // host mirror on its next step
+        dst.invalidate_pos();
         self.metrics.fused_splices.inc();
         t.record_into(&self.metrics.kv_splice_latency);
         Ok(())
@@ -1200,6 +1248,7 @@ impl Engine {
         for &(si, di) in pairs {
             dst.pos[di] = src.pos[si];
         }
+        dst.invalidate_pos();
         t.record_into(&self.metrics.kv_splice_latency);
         Ok(())
     }
@@ -1488,7 +1537,7 @@ impl Engine {
                 e.kind == kind
                     && e.batch == Some(1)
                     && (k.is_none() || e.k == k)
-                    && e.gen.map_or(false, |g| g >= need)
+                    && e.gen.is_some_and(|g| g >= need)
             })
             .filter_map(|e| e.gen)
             .min()

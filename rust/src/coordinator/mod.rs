@@ -4,6 +4,8 @@
 //! - `selection`  — GRIFFIN expert selection + baselines (§4.2, Tables 4-5)
 //! - `sequence`   — request/sequence state machine
 //! - `router`     — admission control, backpressure, cancel flags
+//! - `shard`      — sharded admission front: placement (least-loaded +
+//!   session affinity), work stealing, per-shard health
 //! - `slots`      — slot pool (continuous-batching bookkeeping)
 //! - `scheduler`  — continuous batching over the compiled batch buckets
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
@@ -23,5 +25,6 @@ pub mod router;
 pub mod scheduler;
 pub mod selection;
 pub mod sequence;
+pub mod shard;
 pub mod slots;
 pub mod types;

@@ -33,6 +33,9 @@ pub enum AdmitError {
     QueueFull { capacity: usize },
     PromptTooLong { len: usize, max: usize },
     EmptyPrompt,
+    /// every engine shard is poisoned — there is no thread left that
+    /// could ever drain an admission (sharded serving only)
+    NoHealthyShards,
 }
 
 impl AdmitError {
@@ -43,6 +46,7 @@ impl AdmitError {
             AdmitError::QueueFull { .. } => "queue_full",
             AdmitError::PromptTooLong { .. } => "prompt_too_long",
             AdmitError::EmptyPrompt => "empty_prompt",
+            AdmitError::NoHealthyShards => "engine_dropped",
         }
     }
 }
@@ -57,6 +61,9 @@ impl std::fmt::Display for AdmitError {
                 write!(f, "prompt too long ({len} > {max})")
             }
             AdmitError::EmptyPrompt => write!(f, "empty prompt"),
+            AdmitError::NoHealthyShards => {
+                write!(f, "no healthy engine shards")
+            }
         }
     }
 }
@@ -169,6 +176,35 @@ impl Router {
     /// tick).
     pub fn take_cancelled(&self) -> Vec<RequestId> {
         std::mem::take(&mut self.q.lock().unwrap().cancelled)
+    }
+
+    /// Pop the NEWEST queued generate request satisfying `pred` (work
+    /// stealing). Taking from the back leaves the victim's FIFO head —
+    /// the requests that waited longest — untouched. Requests with a
+    /// pending cancel flag are never taken: the flag will resolve HERE
+    /// on the victim's next tick, and moving its request away would
+    /// leave the cancel to drain as a no-op on every shard.
+    pub fn steal_newest(&self, pred: impl Fn(&GenRequest) -> bool)
+                        -> Option<GenRequest> {
+        let mut q = self.q.lock().unwrap();
+        let at = {
+            let flagged = &q.cancelled;
+            q.gen
+                .iter()
+                .rposition(|r| !flagged.contains(&r.id) && pred(r))?
+        };
+        q.gen.remove(at)
+    }
+
+    /// Re-enqueue a request admitted elsewhere (work stealing). The id
+    /// and admission timestamp are preserved — stealing moves work, it
+    /// does not re-admit it — and the capacity check is skipped: the
+    /// thief is idle by definition, and the fleet-wide count is
+    /// unchanged.
+    pub fn push_stolen(&self, req: GenRequest) {
+        let mut q = self.q.lock().unwrap();
+        q.gen.push_back(req);
+        self.not_empty.notify_one();
     }
 
     /// Remove a queued (not yet slotted) generate request by id.

@@ -726,8 +726,12 @@ impl Scheduler {
 
         let occ = self.pool.occupied_indices();
         {
-            // free slots are dead rows: pin their write position to 0 so
-            // it cannot creep toward the cache bound across long runs
+            // free slots are dead rows: pin the HOST pos mirror to 0 so
+            // the next chain re-seed (splice / membership change) starts
+            // them clean. The device-chained pos copy deliberately keeps
+            // advancing for dead rows — writes clamp at the cache bound,
+            // the row's outputs are ignored, and admission splices both
+            // overwrite the KV row and re-seed pos from this mirror.
             let state = self.state.as_mut().unwrap();
             for i in 0..self.slot_count {
                 if self.pool.get(i).is_none() {

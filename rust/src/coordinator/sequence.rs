@@ -38,6 +38,10 @@ pub struct GenRequest {
     pub sampler: SamplerSpec,
     pub seed: u64,
     pub stop_at_eos: bool,
+    /// client-supplied affinity key: requests sharing a session key are
+    /// routed to the same engine shard (stable hash placement) and are
+    /// never moved by work stealing
+    pub session: Option<String>,
     /// stamped by `Router::admit`; TTFT is measured from here
     pub admitted_at: Instant,
 }
@@ -53,6 +57,7 @@ impl GenRequest {
             sampler: SamplerSpec::Greedy,
             seed: id,
             stop_at_eos: true,
+            session: None,
             admitted_at: Instant::now(),
         }
     }

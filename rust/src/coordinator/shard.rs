@@ -1,0 +1,602 @@
+//! Sharded admission: N per-engine admission queues behind a
+//! placement-aware router.
+//!
+//! One engine owns one thread (device buffers are not `Send` on either
+//! substrate backend), so scaling past a single slot pool means N engine
+//! SHARDS — each an owned thread holding its own `Substrate`, slot pool,
+//! and gather/plan caches, draining its own [`Router`]. This module is
+//! the engine-free front half: the [`ShardRouter`] decides WHICH shard's
+//! queue an admission lands in; the engine-side half (shard threads,
+//! event fan-in, metrics publication) lives in `server::sharded`.
+//!
+//! Placement rules, in order:
+//!
+//! 1. **Session affinity** — a request carrying a `session` key is
+//!    placed on `hash(session) % n_shards` (FNV-1a, stable across runs
+//!    and processes), so a client's requests share one shard's KV/gather
+//!    locality. Affine requests never spill on backpressure (the home
+//!    queue's `queue_full` is the honest answer) and are never moved by
+//!    work stealing. If the home shard is poisoned, affinity is void —
+//!    its engine (and any session locality) is gone — and the request
+//!    places least-loaded instead.
+//! 2. **Least-loaded** — sessionless requests go to the healthy shard
+//!    with the smallest load (occupied slots + queue depth), lowest
+//!    index winning ties (deterministic placement, testable). On
+//!    `queue_full` they spill to the next-least-loaded healthy shard;
+//!    only when EVERY healthy queue is full does admission fail, with
+//!    the fleet-wide capacity in the error.
+//! 3. **Work stealing** — after each admission (and on demand via
+//!    [`ShardRouter::rebalance`]) idle shards steal queued work from the
+//!    back of the deepest queue: only sessionless, cancel-unflagged
+//!    requests move, and a moved request keeps its id and admission
+//!    timestamp — stealing relocates work, it never re-admits it, so a
+//!    request is admitted exactly once fleet-wide.
+//!
+//! Fault containment boundary: a poisoned shard (engine construction or
+//! serve-loop failure) flips `healthy` off, retires its own queue with
+//! `engine_error` events, and is skipped by placement from then on — the
+//! rest of the fleet keeps serving. `rebalance` also evacuates any
+//! request that raced into a dying shard's queue onto a healthy shard.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::router::{AdmitError, Router};
+use crate::coordinator::sequence::{GenRequest, RequestId, ScoreRequest};
+use crate::metrics::MetricsRegistry;
+
+/// Steal only when the victim has at least this many queued requests —
+/// a queue of one is about to be drained by its own engine anyway.
+const STEAL_MIN_DEPTH: usize = 2;
+
+/// One engine shard's admission-side state. The engine thread publishes
+/// its load (`slots_busy`) every serve-loop iteration and its metrics
+/// registry once at construction; everything else is written by the
+/// placement side.
+pub struct Shard {
+    pub index: usize,
+    pub router: Arc<Router>,
+    slots_busy: AtomicU64,
+    slots_total: AtomicU64,
+    healthy: AtomicBool,
+    /// the shard engine's metrics registry, published by the shard
+    /// thread once its engine exists (None while booting / when
+    /// construction failed)
+    metrics: Mutex<Option<Arc<MetricsRegistry>>>,
+}
+
+impl Shard {
+    fn new(index: usize, capacity: usize, max_prompt: usize) -> Shard {
+        Shard {
+            index,
+            router: Arc::new(Router::new(capacity, max_prompt)),
+            slots_busy: AtomicU64::new(0),
+            slots_total: AtomicU64::new(0),
+            healthy: AtomicBool::new(true),
+            metrics: Mutex::new(None),
+        }
+    }
+
+    /// Placement load: occupied decode slots + queued admissions.
+    pub fn load(&self) -> u64 {
+        self.slots_busy.load(Ordering::Relaxed)
+            + self.router.len() as u64
+    }
+
+    pub fn slots_busy(&self) -> u64 {
+        self.slots_busy.load(Ordering::Relaxed)
+    }
+
+    pub fn slots_total(&self) -> u64 {
+        self.slots_total.load(Ordering::Relaxed)
+    }
+
+    /// Engine-thread heartbeat: publish the shard's occupancy for the
+    /// placement side (called every serve-loop iteration).
+    pub fn publish_load(&self, busy: u64, total: u64) {
+        self.slots_busy.store(busy, Ordering::Relaxed);
+        self.slots_total.store(total, Ordering::Relaxed);
+    }
+
+    /// Publish the shard engine's metrics registry (shard thread, once).
+    pub fn publish_metrics(&self, m: Arc<MetricsRegistry>) {
+        *self.metrics.lock().unwrap() = Some(m);
+    }
+
+    pub fn metrics(&self) -> Option<Arc<MetricsRegistry>> {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    /// Mark the shard poisoned (engine construction or serve-loop
+    /// failure). Placement skips it from here on; the caller is
+    /// responsible for retiring whatever its queue still holds.
+    pub fn poison(&self) {
+        self.healthy.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Placement-aware admission front for N engine shards. Thread-safe:
+/// server handler threads admit concurrently; shard engine threads only
+/// drain their own `Router` and publish load/health.
+pub struct ShardRouter {
+    shards: Vec<Arc<Shard>>,
+    next_id: AtomicU64,
+    /// requests moved between shards by work stealing (fleet counter)
+    stolen: AtomicU64,
+}
+
+/// FNV-1a, the session-placement hash. Stable across runs, processes,
+/// and builds — a session key maps to the same home shard for the
+/// lifetime of a deployment at fixed shard count.
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ShardRouter {
+    /// `capacity` and `max_prompt` apply PER SHARD (each shard's Router
+    /// keeps its own bounded queue; fleet capacity is the sum).
+    pub fn new(n_shards: usize, capacity: usize, max_prompt: usize)
+               -> ShardRouter {
+        assert!(n_shards >= 1, "at least one shard");
+        ShardRouter {
+            shards: (0..n_shards)
+                .map(|i| Arc::new(Shard::new(i, capacity, max_prompt)))
+                .collect(),
+            next_id: AtomicU64::new(1),
+            stolen: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<Shard> {
+        &self.shards[i]
+    }
+
+    /// Fleet-unique request ids (per-shard Routers never assign their
+    /// own: admission hands them pre-stamped ids, which `Router::admit`
+    /// preserves).
+    pub fn fresh_id(&self) -> RequestId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn stolen(&self) -> u64 {
+        self.stolen.load(Ordering::Relaxed)
+    }
+
+    /// A session key's home shard (placement rule 1).
+    pub fn home_shard(&self, session: &str) -> usize {
+        (fnv1a(session) % self.shards.len() as u64) as usize
+    }
+
+    /// Healthy shard indices ordered by ascending load, ties broken by
+    /// lowest index (`sort_by_key` is stable over the index-ordered
+    /// iteration, so placement is deterministic given a load snapshot).
+    fn healthy_by_load(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].is_healthy())
+            .collect();
+        order.sort_by_key(|&i| self.shards[i].load());
+        order
+    }
+
+    /// The shard `admit` would try first for this request — exposed so
+    /// tests (and the server's streaming path) can reason about
+    /// placement without admitting.
+    pub fn place(&self, req: &GenRequest) -> Option<usize> {
+        if let Some(key) = &req.session {
+            let home = self.home_shard(key);
+            if self.shards[home].is_healthy() {
+                return Some(home);
+            }
+        }
+        self.healthy_by_load().into_iter().next()
+    }
+
+    /// Admit a generate request somewhere in the fleet. Returns the
+    /// fleet-unique id and the shard index that took it. Validation
+    /// errors are terminal; `queue_full` spills sessionless requests
+    /// across every healthy shard before giving up with the fleet-wide
+    /// capacity.
+    pub fn admit(&self, mut req: GenRequest)
+                 -> Result<(RequestId, usize), AdmitError> {
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        let targets: Vec<usize> = match &req.session {
+            Some(key) => {
+                let home = self.home_shard(key);
+                if self.shards[home].is_healthy() {
+                    // affine requests do not spill: the home queue's
+                    // backpressure is the honest answer
+                    vec![home]
+                } else {
+                    // home engine (and its session locality) is gone
+                    self.healthy_by_load()
+                }
+            }
+            None => self.healthy_by_load(),
+        };
+        if targets.is_empty() {
+            return Err(AdmitError::NoHealthyShards);
+        }
+        for &i in &targets {
+            let shard = &self.shards[i];
+            match shard.router.admit(req.clone()) {
+                Ok(id) => {
+                    // close the admit/poison race: if the shard died
+                    // between the health check and the push, pull the
+                    // request back and re-place it. A failed pull means
+                    // the dying shard's final drain owns it and will
+                    // emit its engine_error — either way it is handled
+                    // exactly once.
+                    if !shard.is_healthy() {
+                        if let Some(r) = shard.router.remove_queued(id) {
+                            return self.admit(r);
+                        }
+                    }
+                    self.rebalance();
+                    return Ok((id, i));
+                }
+                Err(AdmitError::QueueFull { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(AdmitError::QueueFull { capacity: self.capacity() })
+    }
+
+    /// Admit a score request (least-loaded placement; scores carry no
+    /// session key and are never stolen — they run synchronously off
+    /// the owning shard's queue).
+    pub fn admit_score(&self, mut req: ScoreRequest)
+                       -> Result<(RequestId, usize), AdmitError> {
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        let targets = self.healthy_by_load();
+        if targets.is_empty() {
+            return Err(AdmitError::NoHealthyShards);
+        }
+        for &i in &targets {
+            match self.shards[i].router.admit_score(req.clone()) {
+                Ok(id) => return Ok((id, i)),
+                Err(AdmitError::QueueFull { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(AdmitError::QueueFull { capacity: self.capacity() })
+    }
+
+    /// Flag a cancel on every shard: the owning shard resolves it
+    /// (queued request dropped / slot retired) and the rest drain it as
+    /// a no-op — fan-out avoids tracking request→shard ownership, which
+    /// work stealing would invalidate anyway.
+    pub fn request_cancel(&self, id: RequestId) {
+        for s in &self.shards {
+            s.router.request_cancel(id);
+        }
+    }
+
+    /// Wake every shard's parked engine thread (shutdown).
+    pub fn wake_all(&self) {
+        for s in &self.shards {
+            s.router.wake_all();
+        }
+    }
+
+    /// One stealing pass (also run after every sessionless admission):
+    /// while some healthy shard is fully idle and another healthy
+    /// shard's queue is deep, move the deep queue's newest sessionless
+    /// request to the idle shard. Also evacuates anything stranded in a
+    /// poisoned shard's queue (affinity included — the home engine is
+    /// gone). Returns how many requests moved.
+    pub fn rebalance(&self) -> usize {
+        let mut moved = 0;
+        // evacuation: a request that raced into a queue after its shard
+        // died would otherwise never be drained
+        for victim in &self.shards {
+            if victim.is_healthy() {
+                continue;
+            }
+            while let Some(r) = victim.router.steal_newest(|_| true) {
+                match self.admit_evacuated(r) {
+                    Some(_) => moved += 1,
+                    None => break, // nowhere to go; final drain owns it
+                }
+            }
+        }
+        // idle-steals-from-deep
+        loop {
+            let Some(thief) = self
+                .shards
+                .iter()
+                .find(|s| s.is_healthy() && s.load() == 0)
+            else {
+                break;
+            };
+            let Some(victim) = self
+                .shards
+                .iter()
+                .filter(|s| {
+                    s.is_healthy() && s.router.len() >= STEAL_MIN_DEPTH
+                })
+                .max_by_key(|s| s.router.len())
+            else {
+                break;
+            };
+            let Some(r) =
+                victim.router.steal_newest(|r| r.session.is_none())
+            else {
+                break; // deep queue is all session-affine work
+            };
+            thief.router.push_stolen(r);
+            self.stolen.fetch_add(1, Ordering::Relaxed);
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Re-home a request evacuated from a poisoned shard. Preserves id
+    /// and admission timestamp (like stealing, this moves work).
+    fn admit_evacuated(&self, req: GenRequest) -> Option<usize> {
+        let order = self.healthy_by_load();
+        let i = *order.first()?;
+        self.shards[i].router.push_stolen(req);
+        Some(i)
+    }
+
+    /// Fleet generate-queue depth (sum over shards).
+    pub fn queue_depth(&self) -> usize {
+        self.shards.iter().map(|s| s.router.len()).sum()
+    }
+
+    /// Fleet score-queue depth.
+    pub fn score_depth(&self) -> usize {
+        self.shards.iter().map(|s| s.router.score_len()).sum()
+    }
+
+    /// Fleet queue capacity (sum over shards).
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.router.capacity).sum()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_healthy()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::types::Mode;
+
+    fn req() -> GenRequest {
+        let mut r = GenRequest::greedy(0, vec![1, 2, 3], 4, Mode::Full);
+        r.id = 0;
+        r
+    }
+
+    fn sreq(key: &str) -> GenRequest {
+        let mut r = req();
+        r.session = Some(key.to_string());
+        r
+    }
+
+    #[test]
+    fn least_loaded_tie_breaks_deterministically() {
+        let sr = ShardRouter::new(4, 8, 128);
+        // all empty: lowest index wins the tie
+        assert_eq!(sr.place(&req()), Some(0));
+        // load shard 0 and 1; 2 is now the least-loaded
+        sr.shard(0).publish_load(3, 4);
+        sr.shard(1).publish_load(1, 4);
+        assert_eq!(sr.place(&req()), Some(2));
+        // equal loads tie-break low again
+        sr.shard(2).publish_load(1, 4);
+        sr.shard(3).publish_load(1, 4);
+        assert_eq!(sr.place(&req()), Some(1));
+        // queue depth counts toward load
+        let (_, at) = sr.admit(req()).unwrap();
+        assert_eq!(at, 1);
+        assert_eq!(sr.place(&req()), Some(2), "queued work adds load");
+    }
+
+    #[test]
+    fn session_affinity_is_stable() {
+        let sr = ShardRouter::new(4, 64, 128);
+        let home = sr.home_shard("user-42");
+        // same key, many admissions, same shard every time — even when
+        // other shards are idle and the home shard is loaded
+        sr.shard(home).publish_load(4, 4);
+        for _ in 0..10 {
+            let (_, at) = sr.admit(sreq("user-42")).unwrap();
+            assert_eq!(at, home, "affine placement must not follow load");
+        }
+        // stability under a shard-count-preserving rebalance: stealing
+        // must never move affine work off its home shard
+        let moved = sr.rebalance();
+        assert_eq!(moved, 0, "affine queue must not be rebalanced");
+        assert_eq!(sr.shard(home).router.len(), 10);
+        // a different key may land elsewhere, but is itself stable
+        let other = sr.home_shard("user-7");
+        assert_eq!(sr.home_shard("user-7"), other);
+    }
+
+    #[test]
+    fn fnv_hash_is_fixed() {
+        // placement is part of the deployment contract: a session key's
+        // home shard must survive process restarts. Pin the hash.
+        assert_eq!(super::fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn stealing_moves_work_without_double_admission() {
+        let sr = ShardRouter::new(2, 64, 128);
+        // pin shard 1 busier than shard 0 can get, so least-loaded
+        // deep-queues shard 0
+        sr.shard(1).publish_load(8, 8);
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            let (id, at) = sr.admit(req()).unwrap();
+            assert_eq!(at, 0);
+            ids.push(id);
+        }
+        assert_eq!(sr.shard(0).router.len(), 6);
+        // shard 1 goes idle: the next rebalance steals from shard 0
+        sr.shard(1).publish_load(0, 4);
+        let moved = sr.rebalance();
+        assert!(moved >= 1, "idle shard must steal from the deep queue");
+        assert_eq!(sr.stolen(), moved as u64);
+        // exactly-once: every id is in exactly one queue, none dropped,
+        // none duplicated
+        let mut seen: Vec<u64> = Vec::new();
+        for s in sr.shards() {
+            while let Some(r) = s.router.steal_newest(|_| true) {
+                seen.push(r.id);
+            }
+        }
+        seen.sort_unstable();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want, "steal must neither drop nor duplicate");
+    }
+
+    #[test]
+    fn stealing_skips_cancel_flagged_requests() {
+        let sr = ShardRouter::new(2, 64, 128);
+        sr.shard(1).publish_load(4, 4);
+        let (a, _) = sr.admit(req()).unwrap();
+        let (b, _) = sr.admit(req()).unwrap();
+        // flag the newest request; the steal must take the other one
+        sr.request_cancel(b);
+        sr.shard(1).publish_load(0, 4);
+        assert!(sr.rebalance() >= 1);
+        let got = sr.shard(1).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.id, a, "flagged request must stay on its shard");
+        assert_eq!(sr.shard(0).router.len(), 1);
+    }
+
+    #[test]
+    fn queue_full_spills_then_sums_capacity() {
+        let sr = ShardRouter::new(2, 2, 128);
+        // fill both shards (capacity 2 each). Least-loaded alternates,
+        // and once one queue is full, spilling finds the other.
+        for _ in 0..4 {
+            sr.admit(req()).unwrap();
+        }
+        let e = sr.admit(req()).unwrap_err();
+        match e {
+            AdmitError::QueueFull { capacity } => {
+                assert_eq!(capacity, 4, "error reports FLEET capacity");
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // both queues actually hold their share (no shard over cap)
+        assert_eq!(sr.shard(0).router.len(), 2);
+        assert_eq!(sr.shard(1).router.len(), 2);
+        // affine requests do NOT spill: their home queue full is final
+        let key = "sticky";
+        let home = sr.home_shard(key);
+        let e = sr.admit(sreq(key)).unwrap_err();
+        assert!(matches!(e, AdmitError::QueueFull { .. }));
+        assert_eq!(
+            sr.shard(1 - home).router.len(),
+            2,
+            "affine overflow must not leak onto the other shard"
+        );
+    }
+
+    #[test]
+    fn ids_are_fleet_unique() {
+        let sr = ShardRouter::new(3, 64, 128);
+        let mut ids = std::collections::HashSet::new();
+        for i in 0..30 {
+            let (id, _) = if i % 2 == 0 {
+                sr.admit(req()).unwrap()
+            } else {
+                sr.admit(sreq(&format!("s{i}"))).unwrap()
+            };
+            assert!(ids.insert(id), "duplicate id {id}");
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_is_skipped_and_evacuated() {
+        let sr = ShardRouter::new(2, 64, 128);
+        // find a session homed on shard 0
+        let key = (0..100)
+            .map(|i| format!("s{i}"))
+            .find(|k| sr.home_shard(k) == 0)
+            .unwrap();
+        sr.admit(req()).unwrap(); // lands on shard 0 (tie-break)
+        assert_eq!(sr.shard(0).router.len(), 1);
+        sr.shard(0).poison();
+        assert_eq!(sr.healthy_count(), 1);
+        // affine-to-dead-home falls back to a healthy shard
+        let (_, at) = sr.admit(sreq(&key)).unwrap();
+        assert_eq!(at, 1, "dead home shard must not take admissions");
+        // the stranded request was evacuated to shard 1 by the
+        // admission's rebalance pass
+        assert_eq!(sr.shard(0).router.len(), 0, "evacuated");
+        assert_eq!(sr.shard(1).router.len(), 2);
+        // all shards down: honest terminal error
+        sr.shard(1).poison();
+        assert!(matches!(
+            sr.admit(req()),
+            Err(AdmitError::NoHealthyShards)
+        ));
+        assert!(matches!(
+            sr.admit_score(ScoreRequest {
+                id: 0,
+                prompt: vec![1],
+                continuation: vec![2],
+                mode: Mode::Full,
+                admitted_at: std::time::Instant::now(),
+            }),
+            Err(AdmitError::NoHealthyShards)
+        ));
+    }
+
+    #[test]
+    fn cancel_fans_out_to_every_shard() {
+        let sr = ShardRouter::new(3, 64, 128);
+        let (id, at) = sr.admit(req()).unwrap();
+        sr.request_cancel(id);
+        for (i, s) in sr.shards().iter().enumerate() {
+            let flags = s.router.take_cancelled();
+            assert_eq!(flags, vec![id], "shard {i} must see the flag");
+        }
+        // the owning shard resolves it; the others no-op
+        assert!(sr.shard(at).router.remove_queued(id).is_some());
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_plain_router() {
+        let sr = ShardRouter::new(1, 4, 128);
+        for _ in 0..4 {
+            let (_, at) = sr.admit(req()).unwrap();
+            assert_eq!(at, 0);
+        }
+        assert!(matches!(
+            sr.admit(req()),
+            Err(AdmitError::QueueFull { capacity: 4 })
+        ));
+        assert_eq!(sr.rebalance(), 0, "nothing to steal from yourself");
+    }
+}

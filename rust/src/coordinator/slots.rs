@@ -171,7 +171,7 @@ impl SlotPool {
     /// Slot currently holding request `id`, if any (cancellation lookup).
     pub fn slot_of(&self, id: u64) -> Option<usize> {
         self.slots.iter().position(|s| {
-            s.as_ref().map_or(false, |e| e.seq.req.id == id)
+            s.as_ref().is_some_and(|e| e.seq.req.id == id)
         })
     }
 

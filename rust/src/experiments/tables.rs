@@ -152,6 +152,7 @@ pub fn table3(args: &Args) -> Result<()> {
                 sampler: crate::sampling::SamplerSpec::Greedy,
                 seed: 1,
                 stop_at_eos: false,
+                session: None,
                 admitted_at: std::time::Instant::now(),
             };
             engine.generate(&warm)?;
@@ -165,6 +166,7 @@ pub fn table3(args: &Args) -> Result<()> {
                     sampler: crate::sampling::SamplerSpec::Greedy,
                     seed: 1,
                     stop_at_eos: false,
+                    session: None,
                     admitted_at: std::time::Instant::now(),
                 };
                 let resp = engine.generate(&req)?;
@@ -284,6 +286,7 @@ pub fn table4(args: &Args) -> Result<()> {
                     sampler: crate::sampling::SamplerSpec::Greedy,
                     seed: 1,
                     stop_at_eos: false,
+                    session: None,
                     admitted_at: std::time::Instant::now(),
                 })
                 .collect();

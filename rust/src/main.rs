@@ -28,7 +28,10 @@ const GLOBAL_OPTS: &[OptSpec] = &[
     OptSpec { name: "bind", takes_value: true, default: Some("127.0.0.1:7071"),
               help: "serve: listen address" },
     OptSpec { name: "queue", takes_value: true, default: Some("64"),
-              help: "serve: admission queue capacity" },
+              help: "serve: admission queue capacity (per shard)" },
+    OptSpec { name: "shards", takes_value: true, default: Some("1"),
+              help: "serve: engine shard count (one engine thread per \
+                     shard; >1 enables placement-aware routing)" },
     OptSpec { name: "prompt", takes_value: true, default: None,
               help: "generate: prompt text" },
     OptSpec { name: "max-new-tokens", takes_value: true, default: Some("48"),
@@ -108,6 +111,7 @@ fn cmd_generate(args: &cli::Args) -> Result<()> {
         },
         seed: args.u64_or("seed", 0)?,
         stop_at_eos: true,
+        session: None,
         admitted_at: std::time::Instant::now(),
     };
     let resp = if args.flag("scan") {
@@ -184,10 +188,37 @@ fn main() -> Result<()> {
     let args = cli::parse(&argv[1..], GLOBAL_OPTS)?;
     match cmd.as_str() {
         "serve" => {
-            let engine = load_engine(&args)?;
             let bind = args.get("bind").unwrap().to_string();
             let queue = args.usize_or("queue", 64)?;
-            griffin::server::run(engine, &bind, queue)
+            let shards = args.usize_or("shards", 1)?;
+            if shards > 1 {
+                // each shard thread builds its own engine (device state
+                // is not Send); only the load recipe crosses threads
+                let model = args.get_or("model", "small-swiglu").to_string();
+                let dir = artifact_path(&model);
+                if !dir.join("manifest.json").exists() {
+                    bail!("no artifacts for {model:?} — run `make \
+                           artifacts` (have: {:?})",
+                          griffin::experiments::common::available_configs());
+                }
+                let manifest = griffin::config::Manifest::load(&dir)?;
+                let max_prompt = manifest.config.max_seq;
+                let trained = manifest.trained_weights_file.is_some()
+                    && !args.flag("random-weights");
+                let factory: griffin::server::EngineFactory =
+                    std::sync::Arc::new(move |i| {
+                        let e = Engine::load(&dir, trained)?;
+                        eprintln!("shard {i}: loaded {} ({} executables)",
+                                  model,
+                                  e.session.manifest().executables.len());
+                        Ok(e)
+                    });
+                griffin::server::run_sharded(
+                    factory, shards, &bind, queue, max_prompt)
+            } else {
+                let engine = load_engine(&args)?;
+                griffin::server::run(engine, &bind, queue)
+            }
         }
         "generate" => cmd_generate(&args),
         "exp" => {

@@ -111,6 +111,28 @@ impl Histogram {
         Self::bucket_upper(BUCKETS - 1)
     }
 
+    /// Merge another histogram's samples into this one (fleet rollups:
+    /// log buckets are position-aligned, so bucket-wise addition is an
+    /// exact merge).
+    pub fn absorb(&self, other: &Histogram) {
+        let theirs = other.buckets.lock().unwrap().clone();
+        {
+            let mut b = self.buckets.lock().unwrap();
+            for (i, c) in theirs.iter().enumerate() {
+                b[i] += c;
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed),
+                       Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed),
+                       Ordering::Relaxed);
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed),
+                       Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> HistogramSnapshot {
         HistogramSnapshot {
             count: self.count(),
@@ -253,6 +275,52 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// Merge another registry's measurements into this one — the fleet
+    /// rollup for sharded serving: histograms merge bucket-wise,
+    /// counters and meter totals add, gauges sum (each shard owns its
+    /// own slot pool).
+    ///
+    /// Caveat: a rollup registry is created at snapshot time, so its
+    /// meters' elapsed clocks are ~0 and `rate_per_sec` on the rollup is
+    /// meaningless. A fleet rate is the SUM of the per-shard
+    /// `rate_per_sec` values (each measured against that shard's own
+    /// start instant); `server::sharded` patches it into the JSON.
+    pub fn absorb(&self, other: &MetricsRegistry) {
+        self.prefill_latency.absorb(&other.prefill_latency);
+        self.decode_step_latency.absorb(&other.decode_step_latency);
+        self.selection_latency.absorb(&other.selection_latency);
+        self.gather_latency.absorb(&other.gather_latency);
+        self.kv_splice_latency.absorb(&other.kv_splice_latency);
+        self.e2e_latency.absorb(&other.e2e_latency);
+        self.queue_wait.absorb(&other.queue_wait);
+        self.ttft.absorb(&other.ttft);
+        self.inter_token_latency.absorb(&other.inter_token_latency);
+        self.slot_occupancy.absorb(&other.slot_occupancy);
+        self.requests_admitted.add(other.requests_admitted.get());
+        self.requests_completed.add(other.requests_completed.get());
+        self.requests_rejected.add(other.requests_rejected.get());
+        self.requests_failed.add(other.requests_failed.get());
+        self.requests_cancelled.add(other.requests_cancelled.get());
+        self.decode_ticks.add(other.decode_ticks.get());
+        self.fused_decode_ticks.add(other.fused_decode_ticks.get());
+        self.fused_admissions.add(other.fused_admissions.get());
+        self.fused_splices.add(other.fused_splices.get());
+        self.admission_bytes_to_device
+            .add(other.admission_bytes_to_device.get());
+        self.admission_bytes_to_host
+            .add(other.admission_bytes_to_host.get());
+        self.host_bytes_to_device.add(other.host_bytes_to_device.get());
+        self.host_bytes_to_host.add(other.host_bytes_to_host.get());
+        self.gather_cache_hits.add(other.gather_cache_hits.get());
+        self.gather_cache_misses.add(other.gather_cache_misses.get());
+        self.slots_busy
+            .set(self.slots_busy.get() + other.slots_busy.get());
+        self.slots_total
+            .set(self.slots_total.get() + other.slots_total.get());
+        self.tokens_generated.add(other.tokens_generated.total());
+        self.prompt_tokens.add(other.prompt_tokens.total());
+    }
+
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::{n, obj, Value};
         let hist = |h: &Histogram| {
@@ -456,6 +524,36 @@ mod tests {
         // serializes without panicking
         let s = crate::json::to_string(&v);
         assert!(crate::json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn absorb_merges_exactly() {
+        let a = MetricsRegistry::default();
+        let b = MetricsRegistry::default();
+        for ms in [1u64, 2, 3] {
+            a.ttft.record(Duration::from_millis(ms));
+        }
+        for ms in [10u64, 20] {
+            b.ttft.record(Duration::from_millis(ms));
+        }
+        a.requests_completed.add(3);
+        b.requests_completed.add(2);
+        a.slots_busy.set(1);
+        b.slots_busy.set(2);
+        a.tokens_generated.add(30);
+        b.tokens_generated.add(70);
+        a.absorb(&b);
+        assert_eq!(a.ttft.count(), 5);
+        assert_eq!(a.ttft.max_us(), 20_000);
+        assert!((a.ttft.mean_us() - 7200.0).abs() < 1.0);
+        // percentiles see the union of samples, not an average of
+        // summaries
+        assert!(a.ttft.percentile_us(99.0) >= 20_000.0);
+        assert_eq!(a.requests_completed.get(), 5);
+        assert_eq!(a.slots_busy.get(), 3, "gauges sum across shards");
+        assert_eq!(a.tokens_generated.total(), 100);
+        // b is read-only under absorb
+        assert_eq!(b.ttft.count(), 2);
     }
 
     #[test]

@@ -236,6 +236,10 @@ pub fn reference_manifest() -> Manifest {
             io("kcache", &cache_shape(b), "f32"),
             io("vcache", &cache_shape(b), "f32"),
         ];
+        // fused decode steps also return the ADVANCED write position
+        // (input pos + 1) so the engine chains it device-side and only
+        // re-uploads pos when slot membership changes (aot.py mirrors
+        // this "pos_chained" ABI)
         let sample_outs = |mut kv: Vec<IoSpec>| {
             let mut outs = vec![
                 io("token", &[b], "i32"),
@@ -243,6 +247,7 @@ pub fn reference_manifest() -> Manifest {
             ];
             outs.append(&mut kv);
             outs.push(io("rng", &[b], "i32"));
+            outs.push(io("pos", &[b], "i32"));
             outs
         };
 
@@ -1041,12 +1046,14 @@ impl CpuSession {
             lps[bi] = lp;
             rng_out[bi] = ns as i32;
         }
+        let pos_next: Vec<i32> = pos.iter().map(|p| p + 1).collect();
         Ok(vec![
             HostData::I32(toks),
             HostData::F32(lps),
             HostData::F32(kcache),
             HostData::F32(vcache),
             HostData::I32(rng_out),
+            HostData::I32(pos_next),
         ])
     }
 

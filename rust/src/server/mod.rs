@@ -1,11 +1,17 @@
 //! JSON-lines TCP server (substrate: tokio unavailable — std::net +
-//! threads; the engine is single-threaded by necessity — device buffers
-//! are not `Send` on either substrate backend — so handler threads only
-//! do admission + IO and the engine thread owns the device).
+//! threads; an engine is single-threaded by necessity — device buffers
+//! are not `Send` on either substrate backend — so scaling past one
+//! slot pool means N engine SHARDS, each an owned thread holding its
+//! own `Substrate` + slot pool + caches, draining its own admission
+//! queue). Handler threads only do admission + IO; placement across
+//! shards is owned by [`crate::coordinator::shard::ShardRouter`]
+//! (least-loaded + session affinity + work stealing — rules documented
+//! there and in docs/architecture.md).
 //!
 //! The wire protocol is owned by the [`crate::api`] module (typed v2 +
 //! the v1 compat shim); this file is the IO layer: socket accept,
-//! admission, and event forwarding. Full reference: docs/protocol.md.
+//! admission, event fan-in from the shard threads, and fleet rollups.
+//! Full reference: docs/protocol.md.
 //!
 //! ## Line protocol (one JSON object per line, both directions)
 //!
@@ -15,7 +21,7 @@
 //!   {"v":2,"op":"generate","prompt":"...","max_new_tokens":32,
 //!    "prune":{"method":"griffin","keep":0.5,"strategy":"topk","seed":1},
 //!    "sampling":{"temperature":0.8,"top_k":8,"seed":7},
-//!    "stop_at_eos":true,"stream":false}
+//!    "stop_at_eos":true,"stream":false,"session":"user-42"}
 //!   {"v":2,"op":"generate","prompts":["a","b","c"]}     // batched
 //!   {"v":2,"op":"score","prompt":"...","continuation":"...",
 //!    "prune":{...}}
@@ -25,14 +31,20 @@
 //!
 //! Lines without `"v"` are v1 and keep working byte-for-byte: the compat
 //! shim maps every legacy mode string (full | griffin | griffin-sampling
-//! | topk+sampling | magnitude | wanda) onto the typed axes.
+//! | topk+sampling | magnitude | wanda) onto the typed axes. `session`
+//! is a v2-only field: requests carrying the same key are placed on the
+//! same engine shard (KV/gather locality); v1 requests place
+//! least-loaded.
 //!
 //! Validation happens at admission: unknown methods, `keep` outside
 //! (0,1], negative temperature, and `top_p` outside (0,1] are rejected
 //! with {"op":"error","code":"invalid_request",...} before the request
-//! reaches the engine thread. Engine faults are contained per request —
+//! reaches an engine thread. Engine faults are contained per request —
 //! a failing request gets {"op":"error","code":"engine_error","id":N}
-//! and its co-tenants keep streaming.
+//! and its co-tenants keep streaming. A failing SHARD is contained the
+//! same way one level up: its requests are retired with `engine_error`,
+//! the shard is poisoned (skipped by placement), and the rest of the
+//! fleet keeps serving.
 //!
 //! Streaming (`"stream":true`, single prompt): the connection receives
 //! a v2 `accepted` event naming the server-assigned id (so `cancel` can
@@ -43,26 +55,40 @@
 //!   {"v":2,"event":"token","id":7,"index":0,"token":104,"text":"h"}
 //!   {"v":2,"event":"done","op":"generate","id":7,"finish":"eos",...}
 //!
+//! Batched streaming (`"prompts":[...]` + `"stream":true`) interleaves
+//! the lanes on one connection: `accepted` carries `ids` in prompt
+//! order, each `token` event carries the prompt `index` (lane) plus the
+//! token position in `seq`, and every lane ends with its own per-index
+//! terminal event (`done` row or `error`) in completion order — there
+//! is no trailing batch line:
+//!
+//!   {"v":2,"event":"accepted","ids":[7,8]}
+//!   {"v":2,"event":"token","index":1,"id":8,"seq":0,"token":104,...}
+//!   {"v":2,"event":"token","index":0,"id":7,"seq":0,"token":105,...}
+//!   {"v":2,"event":"done","index":1,"op":"generate","id":8,...}
+//!   {"v":2,"event":"done","index":0,"op":"generate","id":7,...}
+//!
 //! `cancel` stops token emission and frees the request's slot within one
 //! engine tick; the stream ends with `finish:"cancelled"`. When a client
 //! disconnects mid-stream its waiter entry is dropped and the request is
 //! auto-cancelled, so the waiters map cannot leak and abandoned requests
 //! stop burning decode ticks.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::api::{self, ApiError, ErrorCode, Request};
 use crate::coordinator::engine::Engine;
-use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{EngineEvent, Scheduler};
 use crate::coordinator::sequence::GenRequest;
+use crate::coordinator::shard::{Shard, ShardRouter};
 use crate::json::{self, n, obj, s, Value};
 use crate::metrics::MetricsRegistry;
 use crate::tokenizer::Tokenizer;
@@ -77,8 +103,9 @@ pub type Waiters = Arc<Mutex<HashMap<u64, Waiter>>>;
 
 /// Route an engine event to the connection waiting on its request id.
 /// Token events only reach streaming waiters; terminal events (`Done`,
-/// `ScoreDone`, `Error`) remove the waiter. Shared by `run`, the
-/// integration tests, and examples.
+/// `ScoreDone`, `Error`) remove the waiter. Shared by every shard
+/// thread (fan-in: the waiters map is fleet-global), the integration
+/// tests, and examples.
 pub fn forward(waiters: &Waiters, ev: EngineEvent) {
     let id = ev.id();
     match ev {
@@ -104,7 +131,7 @@ pub fn forward(waiters: &Waiters, ev: EngineEvent) {
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    router: Arc<Router>,
+    shards: Arc<ShardRouter>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -112,7 +139,7 @@ impl ServerHandle {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // wake a parked engine thread and poke the accept loop
-        self.router.wake_all();
+        self.shards.wake_all();
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -133,8 +160,22 @@ fn send(w: &mut TcpStream, line: &str) -> bool {
     w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
 }
 
-/// Run the server. Blocks the calling thread with the ENGINE loop (PJRT
-/// state must stay on this thread); accept/handler threads do IO only.
+fn config_line(engine: &Engine) -> String {
+    let c = engine.config();
+    json::to_string(&obj(vec![
+        ("op", s("config")),
+        ("model", s(&c.name)),
+        ("activation", s(&c.activation)),
+        ("params", n(c.param_count as f64)),
+        ("d_ff", n(c.d_ff as f64)),
+        ("max_seq", n(c.max_seq as f64)),
+        ("protocol_versions", Value::Arr(vec![n(1.0), n(2.0)])),
+    ]))
+}
+
+/// Run a single-engine server. Blocks the calling thread with the
+/// ENGINE loop (device state must stay on this thread); accept/handler
+/// threads do IO only. For N > 1 engines use [`run_sharded`].
 pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
     let (handle, mut scheduler, waiters) =
         start_listener(engine, bind, queue_capacity)?;
@@ -154,68 +195,307 @@ pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
     served
 }
 
-/// Split construction so tests can drive the engine loop themselves.
+/// Split single-engine construction so tests can drive the engine loop
+/// themselves. The engine is fronted by a 1-shard [`ShardRouter`]
+/// (placement degenerates to the plain admission queue), so handlers
+/// and fleet rollups are the same code as the sharded server.
 pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
                       -> Result<(ServerHandle, Scheduler, Waiters)> {
     let max_prompt = engine.config().max_seq;
-    let router = Arc::new(Router::new(queue_capacity, max_prompt));
-    let metrics = engine.metrics.clone();
-    let listener = TcpListener::bind(bind)
-        .with_context(|| format!("binding {bind}"))?;
-    let addr = listener.local_addr()?;
+    let shards =
+        Arc::new(ShardRouter::new(1, queue_capacity, max_prompt));
+    shards.shard(0).publish_metrics(engine.metrics.clone());
+    let config_json = config_line(&engine);
     let stop = Arc::new(AtomicBool::new(false));
     let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
-    let config_json = {
-        let c = engine.config();
-        json::to_string(&obj(vec![
-            ("op", s("config")),
-            ("model", s(&c.name)),
-            ("activation", s(&c.activation)),
-            ("params", n(c.param_count as f64)),
-            ("d_ff", n(c.d_ff as f64)),
-            ("max_seq", n(c.max_seq as f64)),
-            ("protocol_versions", Value::Arr(vec![n(1.0), n(2.0)])),
-        ]))
-    };
-
-    let accept_thread = {
-        let router = router.clone();
-        let stop = stop.clone();
-        let waiters = waiters.clone();
-        std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                if stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = stream else { continue };
-                let router = router.clone();
-                let stop = stop.clone();
-                let waiters = waiters.clone();
-                let metrics = metrics.clone();
-                let config_json = config_json.clone();
-                std::thread::spawn(move || {
-                    handle_conn(stream, router, waiters, metrics,
-                                config_json, stop);
-                });
-            }
-        })
-    };
-
-    let scheduler_router = router.clone();
-    // engine scheduler runs on the CALLER's thread (PJRT not Send)
-    let scheduler = Scheduler::new(engine, scheduler_router);
+    let (addr, accept_thread) = spawn_accept_loop(
+        bind, shards.clone(), waiters.clone(), config_json, stop.clone())?;
+    // engine scheduler runs on the CALLER's thread (device state is not
+    // Send); it drains shard 0's queue
+    let scheduler = Scheduler::new(engine, shards.shard(0).router.clone());
     Ok((
-        ServerHandle { addr, stop, router, accept_thread: Some(accept_thread) },
+        ServerHandle {
+            addr, stop, shards, accept_thread: Some(accept_thread),
+        },
         scheduler,
         waiters,
     ))
 }
 
+// ----------------------------------------------------------------------
+// sharded serving: N engine threads behind the placement-aware router
+// ----------------------------------------------------------------------
+
+/// Builds one shard's engine ON THE SHARD'S OWN THREAD (engines are not
+/// `Send`; only the recipe crosses threads). Called once per shard with
+/// the shard index.
+pub type EngineFactory = Arc<dyn Fn(usize) -> Result<Engine> + Send + Sync>;
+
+pub struct ShardedHandle {
+    pub addr: std::net::SocketAddr,
+    pub shards: Arc<ShardRouter>,
+    stop: Arc<AtomicBool>,
+    waiters: Waiters,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    shard_threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardedHandle {
+    /// Block until the fleet stops serving — a client `shutdown` op (or
+    /// every shard poisoning itself) — then tear the listener down.
+    pub fn join(mut self) {
+        self.teardown();
+    }
+
+    /// Stop the fleet now and tear everything down.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        self.shards.wake_all();
+        for t in self.shard_threads.drain(..) {
+            let _ = t.join();
+        }
+        // every engine thread is gone: unblock handler threads waiting
+        // on events so they answer engine_dropped instead of hanging
+        self.waiters.lock().unwrap().clear();
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Run an N-shard server and block until a client `shutdown` op stops
+/// it. Each shard thread builds its own engine via `factory(i)`.
+/// `queue_capacity` and `max_prompt` apply per shard.
+pub fn run_sharded(factory: EngineFactory, n_shards: usize, bind: &str,
+                   queue_capacity: usize, max_prompt: usize) -> Result<()> {
+    let handle =
+        start_sharded(factory, n_shards, bind, queue_capacity, max_prompt)?;
+    eprintln!(
+        "griffin server listening on {} ({} engine shard{})",
+        handle.addr,
+        n_shards,
+        if n_shards == 1 { "" } else { "s" }
+    );
+    handle.join();
+    Ok(())
+}
+
+/// Start an N-shard server: spawn the shard engine threads, wait until
+/// every shard reports up (or poisoned — the fleet starts degraded
+/// rather than failing, as long as at least one engine came up), then
+/// open the listener. Returns once the fleet is settled, so placement
+/// never observes a half-started fleet.
+pub fn start_sharded(factory: EngineFactory, n_shards: usize, bind: &str,
+                     queue_capacity: usize, max_prompt: usize)
+                     -> Result<ShardedHandle> {
+    let shards =
+        Arc::new(ShardRouter::new(n_shards, queue_capacity, max_prompt));
+    let stop = Arc::new(AtomicBool::new(false));
+    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+    let (ready_tx, ready_rx) = channel::<Result<String, String>>();
+    let mut shard_threads = Vec::with_capacity(n_shards);
+    for i in 0..n_shards {
+        let shard = shards.shard(i).clone();
+        let factory = factory.clone();
+        let waiters = waiters.clone();
+        let stop = stop.clone();
+        let ready_tx = ready_tx.clone();
+        let t = std::thread::Builder::new()
+            .name(format!("engine-shard-{i}"))
+            .spawn(move || {
+                shard_thread(i, shard, factory, waiters, stop, ready_tx)
+            })
+            .with_context(|| format!("spawning engine shard {i}"))?;
+        shard_threads.push(t);
+    }
+    drop(ready_tx);
+    let mut config_json: Option<String> = None;
+    let mut failures: Vec<String> = Vec::new();
+    for _ in 0..n_shards {
+        match ready_rx.recv() {
+            Ok(Ok(cfg)) => {
+                config_json.get_or_insert(cfg);
+            }
+            Ok(Err(e)) => failures.push(e),
+            Err(_) => break,
+        }
+    }
+    let Some(config_json) = config_json else {
+        stop.store(true, Ordering::SeqCst);
+        shards.wake_all();
+        for t in shard_threads {
+            let _ = t.join();
+        }
+        anyhow::bail!(
+            "every engine shard failed to start: {}",
+            failures.join("; ")
+        );
+    };
+    for f in &failures {
+        eprintln!("warning: {f} (shard poisoned, fleet degraded)");
+    }
+    let (addr, accept_thread) = spawn_accept_loop(
+        bind, shards.clone(), waiters.clone(), config_json, stop.clone())?;
+    Ok(ShardedHandle {
+        addr,
+        shards,
+        stop,
+        waiters,
+        accept_thread: Some(accept_thread),
+        shard_threads,
+    })
+}
+
+/// One shard's engine thread: build the engine, publish metrics + load,
+/// then run the serve loop over the shard's own queue. Containment
+/// boundary: any failure — construction or a serve-loop invariant —
+/// poisons THIS shard, retires THIS shard's requests with
+/// `engine_error`, and returns; the other shards never notice.
+fn shard_thread(
+    i: usize,
+    shard: Arc<Shard>,
+    factory: EngineFactory,
+    waiters: Waiters,
+    stop: Arc<AtomicBool>,
+    ready_tx: Sender<Result<String, String>>,
+) {
+    let engine = match factory(i) {
+        Ok(e) => e,
+        Err(e) => {
+            shard.poison();
+            let msg = format!("engine shard {i} failed to start: {e:#}");
+            let _ = ready_tx.send(Err(msg.clone()));
+            drain_poisoned(&shard, &waiters, &msg);
+            return;
+        }
+    };
+    shard.publish_metrics(engine.metrics.clone());
+    let config_json = config_line(&engine);
+    let mut sched = Scheduler::new(engine, shard.router.clone());
+    shard.publish_load(0, sched.slot_count as u64);
+    let _ = ready_tx.send(Ok(config_json));
+    // ids this shard currently owns in its slot pool (first token seen,
+    // not yet terminal) — admission emits the first token immediately,
+    // so every slotted request is in here. If the loop dies these are
+    // the waiters nobody else would ever answer.
+    let mut live: HashSet<u64> = HashSet::new();
+    let served = loop {
+        if stop.load(Ordering::SeqCst) {
+            break Ok(());
+        }
+        let ticked = sched.tick(&mut |ev| {
+            match &ev {
+                EngineEvent::Token { id, .. } => {
+                    live.insert(*id);
+                }
+                EngineEvent::Done(r) => {
+                    live.remove(&r.id);
+                }
+                EngineEvent::Error { id, .. }
+                | EngineEvent::ScoreDone { id, .. } => {
+                    live.remove(id);
+                }
+            }
+            forward(&waiters, ev);
+        });
+        match ticked {
+            Ok(worked) => {
+                // heartbeat for the placement side (least-loaded +
+                // work stealing read this)
+                shard.publish_load(
+                    sched.occupied() as u64, sched.slot_count as u64);
+                if !worked {
+                    shard.router.wait_nonempty(Duration::from_millis(250));
+                }
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    if let Err(e) = served {
+        shard.poison();
+        shard.publish_load(0, 0);
+        let msg = format!("engine shard {i} died: {e:#}");
+        for id in live.drain() {
+            forward(&waiters, EngineEvent::Error {
+                id,
+                code: ErrorCode::EngineError,
+                message: msg.clone(),
+            });
+        }
+        drain_poisoned(&shard, &waiters, &msg);
+    } else {
+        shard.publish_load(0, sched.slot_count as u64);
+    }
+}
+
+/// Retire everything still queued on a poisoned shard with
+/// `engine_error` events. `ShardRouter::admit` closes the race with
+/// in-flight admissions from its side (post-admit health recheck), so
+/// between the two every request is answered exactly once.
+fn drain_poisoned(shard: &Shard, waiters: &Waiters, msg: &str) {
+    while let Some(r) = shard.router.steal_newest(|_| true) {
+        forward(waiters, EngineEvent::Error {
+            id: r.id,
+            code: ErrorCode::EngineError,
+            message: msg.to_string(),
+        });
+    }
+    while let Some(r) = shard.router.take_score() {
+        forward(waiters, EngineEvent::Error {
+            id: r.id,
+            code: ErrorCode::EngineError,
+            message: msg.to_string(),
+        });
+    }
+}
+
+/// Bind + spawn the accept loop; handler threads share the fleet's
+/// shard router and waiters map.
+fn spawn_accept_loop(
+    bind: &str,
+    shards: Arc<ShardRouter>,
+    waiters: Waiters,
+    config_json: String,
+    stop: Arc<AtomicBool>,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener =
+        TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr()?;
+    let accept_thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let shards = shards.clone();
+            let stop = stop.clone();
+            let waiters = waiters.clone();
+            let config_json = config_json.clone();
+            std::thread::spawn(move || {
+                handle_conn(stream, shards, waiters, config_json, stop);
+            });
+        }
+    });
+    Ok((addr, accept_thread))
+}
+
+/// Rejections that never reached a shard (parse/validation failures,
+/// fleet-wide queue_full) have no owning registry; count them on the
+/// first shard that has one so the fleet rollup stays complete.
+fn reject_metrics(shards: &ShardRouter) -> Option<Arc<MetricsRegistry>> {
+    shards.shards().iter().find_map(|sh| sh.metrics())
+}
+
 fn handle_conn(
     stream: TcpStream,
-    router: Arc<Router>,
+    shards: Arc<ShardRouter>,
     waiters: Waiters,
-    metrics: Arc<MetricsRegistry>,
     config_json: String,
     stop: Arc<AtomicBool>,
 ) {
@@ -249,55 +529,38 @@ fn handle_conn(
                 if matches!(v.get("op").and_then(Value::as_str),
                             Some("generate") | Some("score"))
                 {
-                    metrics.requests_rejected.inc();
+                    if let Some(m) = reject_metrics(&shards) {
+                        m.requests_rejected.inc();
+                    }
                 }
                 send(&mut writer, &api::error_json(&e, None, v2))
             }
             Ok(Request::Generate(spec)) => handle_generate(
-                &spec, &tok, &router, &waiters, &metrics, &mut writer),
+                &spec, &tok, &shards, &waiters, &mut writer),
             Ok(Request::Score(spec)) => handle_score(
-                &spec, &tok, &router, &waiters, &metrics, &mut writer),
+                &spec, &tok, &shards, &waiters, &mut writer),
             Ok(Request::Cancel { id }) => {
                 // the waiters map is the in-flight set: present means
-                // admitted and not yet terminal
+                // admitted and not yet terminal. The flag fans out to
+                // every shard (stealing may have moved the request);
+                // the owning shard resolves it, the rest no-op.
                 let known = waiters.lock().unwrap().contains_key(&id);
                 if known {
-                    router.request_cancel(id);
+                    shards.request_cancel(id);
                 }
                 let status = if known { "cancelling" } else { "unknown_id" };
                 send(&mut writer, &api::cancel_ack_json(id, status))
             }
-            Ok(Request::Health) => send(
-                &mut writer,
-                &api::health_json(
-                    metrics.slots_busy.get(),
-                    metrics.slots_total.get(),
-                    router.len(),
-                    router.score_len(),
-                    router.capacity,
-                ),
-            ),
+            Ok(Request::Health) => {
+                send(&mut writer, &fleet_health_json(&shards))
+            }
             Ok(Request::Metrics) => {
-                let mut m = metrics.to_json();
-                if let Value::Obj(ref mut o) = m {
-                    o.push((
-                        "queue".to_string(),
-                        obj(vec![
-                            ("depth", n(router.len() as f64)),
-                            (
-                                "score_depth",
-                                n(router.score_len() as f64),
-                            ),
-                            ("capacity", n(router.capacity as f64)),
-                        ]),
-                    ));
-                }
-                send(&mut writer, &json::to_string(&m))
+                send(&mut writer, &fleet_metrics_json(&shards))
             }
             Ok(Request::Config) => send(&mut writer, &config_json),
             Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
-                router.wake_all();
+                shards.wake_all();
                 let _ = send(&mut writer,
                              &json::to_string(&obj(vec![
                                  ("op", s("shutdown")),
@@ -311,79 +574,208 @@ fn handle_conn(
     }
 }
 
+/// Fleet health: per-shard slots/queue/health plus the summed rollup.
+/// Slot gauges come from each shard's published metrics registry (the
+/// scheduler maintains them); a still-booting shard reads as 0/0.
+fn fleet_health_json(shards: &ShardRouter) -> String {
+    let mut busy = 0u64;
+    let mut total = 0u64;
+    let mut entries = Vec::with_capacity(shards.n_shards());
+    for sh in shards.shards() {
+        let (b, t) = sh
+            .metrics()
+            .map(|m| (m.slots_busy.get(), m.slots_total.get()))
+            .unwrap_or((0, 0));
+        busy += b;
+        total += t;
+        entries.push(obj(vec![
+            ("shard", n(sh.index as f64)),
+            (
+                "status",
+                s(if sh.is_healthy() { "ok" } else { "poisoned" }),
+            ),
+            (
+                "slots",
+                obj(vec![("busy", n(b as f64)), ("total", n(t as f64))]),
+            ),
+            (
+                "queue",
+                obj(vec![
+                    ("depth", n(sh.router.len() as f64)),
+                    ("score_depth", n(sh.router.score_len() as f64)),
+                    ("capacity", n(sh.router.capacity as f64)),
+                ]),
+            ),
+        ]));
+    }
+    let status = if shards.healthy_count() == shards.n_shards() {
+        "ok"
+    } else if shards.healthy_count() > 0 {
+        "degraded"
+    } else {
+        "down"
+    };
+    api::health_json(
+        status,
+        busy,
+        total,
+        shards.queue_depth(),
+        shards.score_depth(),
+        shards.capacity(),
+        entries,
+    )
+}
+
+/// Fleet metrics: the absorbed rollup of every shard registry, with
+/// `throughput.tokens_per_sec` patched to the SUM of per-shard rates
+/// (the rollup's own meter clock starts at snapshot time, so its rate
+/// is meaningless — see `MetricsRegistry::absorb`), plus fleet queue
+/// state (including the `stolen` work-stealing counter) and a
+/// per-shard breakdown.
+fn fleet_metrics_json(shards: &ShardRouter) -> String {
+    let rollup = MetricsRegistry::default();
+    let mut rate = 0.0;
+    let mut entries = Vec::with_capacity(shards.n_shards());
+    for sh in shards.shards() {
+        let mut fields = vec![
+            ("shard".to_string(), n(sh.index as f64)),
+            ("healthy".to_string(), Value::Bool(sh.is_healthy())),
+            (
+                "queue".to_string(),
+                obj(vec![
+                    ("depth", n(sh.router.len() as f64)),
+                    ("score_depth", n(sh.router.score_len() as f64)),
+                    ("capacity", n(sh.router.capacity as f64)),
+                ]),
+            ),
+        ];
+        if let Some(m) = sh.metrics() {
+            rollup.absorb(&m);
+            rate += m.tokens_generated.rate_per_sec();
+            fields.push(("metrics".to_string(), m.to_json()));
+        }
+        entries.push(Value::Obj(fields));
+    }
+    let mut m = rollup.to_json();
+    if let Value::Obj(ref mut o) = m {
+        if let Some((_, Value::Obj(to))) =
+            o.iter_mut().find(|(k, _)| k == "throughput")
+        {
+            if let Some((_, slot)) =
+                to.iter_mut().find(|(k, _)| k == "tokens_per_sec")
+            {
+                *slot = n(rate);
+            }
+        }
+        o.push((
+            "queue".to_string(),
+            obj(vec![
+                ("depth", n(shards.queue_depth() as f64)),
+                ("score_depth", n(shards.score_depth() as f64)),
+                ("capacity", n(shards.capacity() as f64)),
+                ("stolen", n(shards.stolen() as f64)),
+            ]),
+        ));
+        o.push(("shards".to_string(), Value::Arr(entries)));
+    }
+    json::to_string(&m)
+}
+
 /// Drop the waiter entries of a dead connection and auto-cancel their
 /// requests, so a mid-stream disconnect cannot leak waiters map entries
 /// or leave abandoned sequences burning decode ticks.
-fn abandon(router: &Router, waiters: &Waiters, ids: &[u64]) {
+fn abandon(shards: &ShardRouter, waiters: &Waiters, ids: &[u64]) {
     let mut g = waiters.lock().unwrap();
     for &id in ids {
         if g.remove(&id).is_some() {
-            router.request_cancel(id);
+            shards.request_cancel(id);
         }
     }
 }
 
-/// Serve one generate request (single-prompt v1/v2, streaming, or v2
-/// batched). Returns false when the connection died.
+/// Serve one generate request (single-prompt v1/v2, streaming, v2
+/// batched, or v2 batched streaming). Returns false when the
+/// connection died.
 fn handle_generate(
     spec: &api::GenerateSpec,
     tok: &Tokenizer,
-    router: &Arc<Router>,
+    shards: &Arc<ShardRouter>,
     waiters: &Waiters,
-    metrics: &MetricsRegistry,
     writer: &mut TcpStream,
 ) -> bool {
     let reqs = spec.to_requests(tok);
     let batched = reqs.len() > 1;
+    let stream = spec.stream;
     let (tx, rx) = channel();
     // index -> (id, terminal result line/value); admission errors fill
-    // their result slot immediately
+    // their result slot immediately (batched streams instead surface
+    // them as per-index error events right after `accepted`)
     let mut ids: Vec<u64> = Vec::with_capacity(reqs.len());
     let mut results: Vec<Option<Value>> = vec![None; reqs.len()];
+    let mut admit_errors: Vec<(usize, ApiError)> = Vec::new();
     let mut outstanding = 0usize;
     for (i, mut req) in reqs.into_iter().enumerate() {
-        req.id = router.fresh_id();
+        req.id = shards.fresh_id();
         let id = req.id;
         ids.push(id);
         waiters.lock().unwrap().insert(
-            id, Waiter { tx: tx.clone(), stream: spec.stream });
-        match router.admit(req) {
+            id, Waiter { tx: tx.clone(), stream });
+        match shards.admit(req) {
             Err(e) => {
                 waiters.lock().unwrap().remove(&id);
-                metrics.requests_rejected.inc();
+                if let Some(m) = reject_metrics(shards) {
+                    m.requests_rejected.inc();
+                }
                 let err = ApiError::from(&e);
                 if batched {
                     results[i] = Some(api::respond::error_obj(
                         &err, Some(id)));
+                    admit_errors.push((i, err));
                 } else {
                     return send(
                         writer, &api::error_json(&err, None, spec.v2));
                 }
             }
-            Ok(_) => {
-                metrics.requests_admitted.inc();
+            Ok((_, at)) => {
+                if let Some(m) = shards.shard(at).metrics() {
+                    m.requests_admitted.inc();
+                }
                 outstanding += 1;
             }
         }
     }
-    // the waiters map holds the only senders from here on, so `run`'s
-    // teardown (which clears the map once the engine loop exits)
-    // unblocks rx.recv with an Err instead of leaving this thread hung
+    // the waiters map holds the only senders from here on, so teardown
+    // (which clears the map once the engine threads exit) unblocks
+    // rx.recv with an Err instead of leaving this thread hung
     drop(tx);
-    if spec.v2 && spec.stream {
-        // tell the client its id before the first token so cancel can
-        // target the stream from another connection
-        if !send(writer, &api::accepted_json(ids[0])) {
-            abandon(router, waiters, &ids);
+    if spec.v2 && stream {
+        // tell the client its id(s) before the first token so cancel
+        // can target the stream from another connection — and, batched,
+        // so per-index events can be read against the id list
+        let accepted = if batched {
+            api::accepted_batch_json(&ids)
+        } else {
+            api::accepted_json(ids[0])
+        };
+        if !send(writer, &accepted) {
+            abandon(shards, waiters, &ids);
             return false;
         }
+        for (i, err) in &admit_errors {
+            if !send(writer, &api::stream_error_json(err, ids[*i], *i)) {
+                abandon(shards, waiters, &ids);
+                return false;
+            }
+        }
     }
+    let index_of =
+        |ids: &[u64], id: u64| ids.iter().position(|&x| x == id).unwrap();
     while outstanding > 0 {
         let ev = match rx.recv() {
             Ok(ev) => ev,
             Err(_) => {
-                // engine loop went away; fail whatever is still pending
-                abandon(router, waiters, &ids);
+                // engine threads went away; fail whatever is pending
+                abandon(shards, waiters, &ids);
                 let err = ApiError::new(
                     ErrorCode::EngineDropped, "engine dropped");
                 let _ = send(
@@ -393,26 +785,38 @@ fn handle_generate(
         };
         match ev {
             EngineEvent::Token { id, index, token, text } => {
-                if spec.stream
-                    && !send(writer, &api::token_json(
-                        id, index, token, &text, spec.v2))
-                {
-                    abandon(router, waiters, &ids);
-                    return false;
+                if stream {
+                    let line = if batched {
+                        api::stream_token_json(
+                            index_of(&ids, id), id, index, token, &text)
+                    } else {
+                        api::token_json(id, index, token, &text, spec.v2)
+                    };
+                    if !send(writer, &line) {
+                        abandon(shards, waiters, &ids);
+                        return false;
+                    }
                 }
             }
             EngineEvent::Done(r) => {
                 outstanding -= 1;
                 if batched {
-                    let i = ids.iter().position(|&x| x == r.id).unwrap();
-                    // embedded rows carry no "v" envelope — only the
-                    // outer batch line does (uniform row schema) — but
-                    // keep the v2 row fields (prune provenance)
-                    results[i] = Some(api::response_row_json(&r));
+                    let i = index_of(&ids, r.id);
+                    if stream {
+                        if !send(writer, &api::stream_done_json(&r, i)) {
+                            abandon(shards, waiters, &ids);
+                            return false;
+                        }
+                    } else {
+                        // embedded rows carry no "v" envelope — only
+                        // the outer batch line does (uniform row
+                        // schema) — but keep the v2 row fields
+                        results[i] = Some(api::response_row_json(&r));
+                    }
                 } else if !send(
-                    writer, &api::done_json(&r, spec.stream, spec.v2))
+                    writer, &api::done_json(&r, stream, spec.v2))
                 {
-                    abandon(router, waiters, &ids);
+                    abandon(shards, waiters, &ids);
                     return false;
                 }
             }
@@ -420,20 +824,30 @@ fn handle_generate(
                 outstanding -= 1;
                 let err = ApiError::new(code, message);
                 if batched {
-                    let i = ids.iter().position(|&x| x == id).unwrap();
-                    results[i] =
-                        Some(api::respond::error_obj(&err, Some(id)));
+                    let i = index_of(&ids, id);
+                    if stream {
+                        if !send(
+                            writer,
+                            &api::stream_error_json(&err, id, i))
+                        {
+                            abandon(shards, waiters, &ids);
+                            return false;
+                        }
+                    } else {
+                        results[i] =
+                            Some(api::respond::error_obj(&err, Some(id)));
+                    }
                 } else if !send(
                     writer, &api::error_json(&err, Some(id), spec.v2))
                 {
-                    abandon(router, waiters, &ids);
+                    abandon(shards, waiters, &ids);
                     return false;
                 }
             }
             EngineEvent::ScoreDone { .. } => {}
         }
     }
-    if batched {
+    if batched && !stream {
         let rows =
             results.into_iter().map(|r| r.expect("result slot")).collect();
         return send(writer, &api::batch_json(rows));
@@ -445,22 +859,30 @@ fn handle_generate(
 fn handle_score(
     spec: &api::ScoreSpec,
     tok: &Tokenizer,
-    router: &Arc<Router>,
+    shards: &Arc<ShardRouter>,
     waiters: &Waiters,
-    metrics: &MetricsRegistry,
     writer: &mut TcpStream,
 ) -> bool {
     let mut req = spec.to_request(tok);
-    req.id = router.fresh_id();
+    req.id = shards.fresh_id();
     let id = req.id;
     let (tx, rx) = channel();
     waiters.lock().unwrap().insert(id, Waiter { tx, stream: false });
-    if let Err(e) = router.admit_score(req) {
-        waiters.lock().unwrap().remove(&id);
-        metrics.requests_rejected.inc();
-        return send(writer, &api::error_json(&ApiError::from(&e), None, true));
+    match shards.admit_score(req) {
+        Err(e) => {
+            waiters.lock().unwrap().remove(&id);
+            if let Some(m) = reject_metrics(shards) {
+                m.requests_rejected.inc();
+            }
+            return send(
+                writer, &api::error_json(&ApiError::from(&e), None, true));
+        }
+        Ok((_, at)) => {
+            if let Some(m) = shards.shard(at).metrics() {
+                m.requests_admitted.inc();
+            }
+        }
     }
-    metrics.requests_admitted.inc();
     loop {
         match rx.recv() {
             Ok(EngineEvent::ScoreDone { id, nll }) => {
@@ -473,7 +895,7 @@ fn handle_score(
             }
             Ok(_) => {}
             Err(_) => {
-                abandon(router, waiters, &[id]);
+                abandon(shards, waiters, &[id]);
                 let err = ApiError::new(
                     ErrorCode::EngineDropped, "engine dropped");
                 let _ = send(writer, &api::error_json(&err, None, true));
@@ -668,5 +1090,52 @@ mod tests {
                 "terminal events remove the waiter");
         assert!(matches!(rx.recv().unwrap(),
                          EngineEvent::Error { id: 5, .. }));
+    }
+
+    #[test]
+    fn fleet_rollups_render_without_engines() {
+        // health/metrics must answer even while shards are booting
+        // (no registry published yet) or poisoned
+        let sr = Arc::new(ShardRouter::new(3, 8, 64));
+        sr.shard(2).poison();
+        let h = json::parse(&fleet_health_json(&sr)).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"));
+        let Some(Value::Arr(entries)) = h.get("shards") else {
+            panic!("per-shard health breakdown");
+        };
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[2].get("status").unwrap().as_str(),
+                   Some("poisoned"));
+        assert_eq!(
+            h.get("queue").unwrap().get("capacity").unwrap().as_usize(),
+            Some(24),
+            "fleet capacity is the per-shard sum"
+        );
+        // publish one registry; the rollup carries its numbers
+        let m = Arc::new(MetricsRegistry::default());
+        m.requests_admitted.inc();
+        m.tokens_generated.add(10);
+        sr.shard(0).publish_metrics(m);
+        let v = json::parse(&fleet_metrics_json(&sr)).unwrap();
+        assert_eq!(
+            v.get("requests")
+                .unwrap()
+                .get("admitted")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            v.get("queue").unwrap().get("stolen").unwrap().as_usize(),
+            Some(0)
+        );
+        let Some(Value::Arr(per)) = v.get("shards") else {
+            panic!("per-shard metrics breakdown");
+        };
+        assert_eq!(per.len(), 3);
+        assert!(per[0].get("metrics").is_some(),
+                "published shard carries its snapshot");
+        assert!(per[1].get("metrics").is_none(),
+                "booting shard has no snapshot yet");
     }
 }

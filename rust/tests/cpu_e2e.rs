@@ -326,10 +326,12 @@ fn fused_path_keeps_logits_on_device() {
     }
     let mut sched = Scheduler::new(e, router.clone());
     let mut sink = |_ev: EngineEvent| {};
-    // first tick pays admission — measure from the second on
+    // first tick pays admission (prefill, sampling-state seed, pos-chain
+    // seed) — measure from the second on
     sched.tick(&mut sink).unwrap();
     let m = sched.engine.metrics.clone();
     let bytes0 = m.host_bytes_to_host.get();
+    let up0 = m.host_bytes_to_device.get();
     let ticks0 = m.decode_ticks.get();
     let fused0 = m.fused_decode_ticks.get();
     loop {
@@ -350,9 +352,21 @@ fn fused_path_keeps_logits_on_device() {
          ticks (one logits download is {logits_bytes_per_tick})"
     );
     assert!(
-        bytes <= ticks * (bmax as u64) * 64,
+        bytes <= ticks * (bmax as u64) * 32,
         "per-tick downstream traffic should be O(B): {bytes} bytes \
          over {ticks} ticks"
+    );
+    // chained-pos ABI: with token AND pos both device-chained, a
+    // steady-state fused tick uploads NOTHING — the only upstream
+    // traffic allowed in the window is a membership-change re-seed
+    // (one pos + token + sampling-state refresh), not a per-tick pos
+    // vector. A per-tick pos upload alone would cost 4*B*ticks bytes
+    // and trip this bound.
+    let up_bytes = m.host_bytes_to_device.get() - up0;
+    assert!(
+        up_bytes <= 2 * (bmax as u64) * 20,
+        "steady-state fused ticks must not upload per-tick state: \
+         {up_bytes} bytes uploaded over {ticks} ticks"
     );
 }
 
@@ -1157,4 +1171,384 @@ fn transfer_bytes_are_counted() {
     assert!(downloaded <= 64,
             "reduced admission downloaded {downloaded} bytes");
     drop(pre);
+}
+
+// ---------------------------------------------------------------------
+// sharded serving: N engine threads behind the placement-aware router
+// ---------------------------------------------------------------------
+
+fn cpu_factory() -> griffin::server::EngineFactory {
+    std::sync::Arc::new(|_shard| Engine::cpu_reference())
+}
+
+#[test]
+fn sharded_server_completes_every_request_exactly_once() {
+    // 4 engine shards, concurrent clients: every request is answered
+    // exactly once with a fleet-unique id, and the aggregated metrics
+    // account for all of them.
+    let handle = griffin::server::start_sharded(
+        cpu_factory(), 4, "127.0.0.1:0", 16, 64).unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut clients = Vec::new();
+    for t in 0..3 {
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            use griffin::json::{n, obj, s};
+            let mut c = griffin::server::Client::connect(&addr).unwrap();
+            let mut ids = Vec::new();
+            for k in 0..4 {
+                let r = c
+                    .call(&obj(vec![
+                        ("v", n(2.0)),
+                        ("op", s("generate")),
+                        ("prompt", s(&format!("client {t} request {k}"))),
+                        ("max_new_tokens", n(4.0)),
+                        ("stop_at_eos", griffin::json::Value::Bool(false)),
+                    ]))
+                    .unwrap();
+                assert_eq!(r.get("op").unwrap().as_str(), Some("generate"),
+                           "client {t} req {k}: {r:?}");
+                assert_eq!(r.get("finish").unwrap().as_str(),
+                           Some("length"));
+                ids.push(r.get("id").unwrap().as_usize().unwrap());
+            }
+            ids
+        }));
+    }
+    let mut all: Vec<usize> =
+        clients.into_iter().flat_map(|t| t.join().unwrap()).collect();
+    let total = all.len();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), total, "request ids must be fleet-unique");
+
+    use griffin::json::{n, obj, s, Value};
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+    let h = c.health().unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(
+        h.get("slots").unwrap().get("total").unwrap().as_usize(),
+        Some(16),
+        "fleet slot pool is the per-shard sum (4 shards x 4 slots)"
+    );
+    let Some(Value::Arr(hshards)) = h.get("shards") else {
+        panic!("health carries a per-shard breakdown");
+    };
+    assert_eq!(hshards.len(), 4);
+
+    let m = c
+        .call(&obj(vec![("v", n(2.0)), ("op", s("metrics"))]))
+        .unwrap();
+    let req = m.get("requests").unwrap();
+    assert_eq!(req.get("admitted").unwrap().as_usize(), Some(total));
+    assert_eq!(req.get("completed").unwrap().as_usize(), Some(total));
+    assert_eq!(req.get("rejected").unwrap().as_usize(), Some(0));
+    let Some(Value::Arr(mshards)) = m.get("shards") else {
+        panic!("metrics carries a per-shard breakdown");
+    };
+    assert_eq!(mshards.len(), 4);
+    let per_shard_admitted: usize = mshards
+        .iter()
+        .map(|e| {
+            e.get("metrics")
+                .and_then(|mm| mm.get("requests"))
+                .and_then(|r| r.get("admitted"))
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0)
+        })
+        .sum();
+    assert_eq!(per_shard_admitted, total,
+               "per-shard admissions must sum to the fleet count");
+    assert!(m.get("queue").unwrap().get("stolen").is_some());
+    handle.shutdown();
+}
+
+#[test]
+fn sharded_session_affinity_routes_to_home_shard() {
+    let handle = griffin::server::start_sharded(
+        cpu_factory(), 2, "127.0.0.1:0", 16, 64).unwrap();
+    let home = handle.shards.home_shard("user-42");
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+    for k in 0..6 {
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s(&format!("affine request {k}"))),
+                ("session", s("user-42")),
+                ("max_new_tokens", n(3.0)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+    }
+    let m = c
+        .call(&obj(vec![("v", n(2.0)), ("op", s("metrics"))]))
+        .unwrap();
+    let Some(Value::Arr(shards)) = m.get("shards") else {
+        panic!("metrics carries a per-shard breakdown");
+    };
+    let admitted = |i: usize| {
+        shards[i]
+            .get("metrics")
+            .and_then(|mm| mm.get("requests"))
+            .and_then(|r| r.get("admitted"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0)
+    };
+    assert_eq!(admitted(home), 6,
+               "every affine request lands on the session's home shard");
+    assert_eq!(admitted(1 - home), 0,
+               "the other shard must see none of the affine work");
+    handle.shutdown();
+}
+
+#[test]
+fn stolen_work_is_served_by_the_thief_shard() {
+    // Engine-level exactly-once across a steal: shard 0's engine is
+    // stalled (nothing drains its queue); when shard 1 goes idle the
+    // rebalance pass moves the newest sessionless request over, and
+    // shard 1's engine serves it to completion under its ORIGINAL id.
+    use griffin::coordinator::shard::ShardRouter;
+    let sr = ShardRouter::new(2, 16, 64);
+    sr.shard(1).publish_load(8, 8); // placement deep-queues shard 0
+    let mut ids = Vec::new();
+    for _ in 0..4 {
+        let mut r =
+            GenRequest::greedy(0, prompt_ids(8), 4, Mode::Full);
+        r.stop_at_eos = false;
+        let (id, at) = sr.admit(r).unwrap();
+        assert_eq!(at, 0);
+        ids.push(id);
+    }
+    sr.shard(1).publish_load(0, 4); // shard 1 reports idle
+    let moved = sr.rebalance();
+    assert_eq!(moved, 1, "idle shard steals until it has work");
+    assert_eq!(sr.stolen(), 1);
+    let mut sched =
+        Scheduler::new(engine(), sr.shard(1).router.clone());
+    let done = sched.run_until_idle().unwrap();
+    assert_eq!(done.len(), 1, "the thief serves exactly the stolen work");
+    assert!(ids.contains(&done[0].id), "steal preserves the request id");
+    assert_eq!(done[0].finish, FinishReason::Length);
+    assert_eq!(done[0].tokens.len(), 4);
+    assert_eq!(sr.shard(0).router.len(), 3,
+               "unstolen work stays queued on the victim");
+}
+
+#[test]
+fn poisoned_shard_degrades_not_kills_the_fleet() {
+    // Shard 1's engine factory fails: the fleet starts degraded, the
+    // dead shard is visible in health/metrics, and BOTH sessionless
+    // and affine-to-the-dead-home requests are still served.
+    let factory: griffin::server::EngineFactory =
+        std::sync::Arc::new(|i| {
+            if i == 1 {
+                Err(anyhow::anyhow!("synthetic shard fault"))
+            } else {
+                Engine::cpu_reference()
+            }
+        });
+    let handle = griffin::server::start_sharded(
+        factory, 4, "127.0.0.1:0", 16, 64).unwrap();
+    assert_eq!(handle.shards.healthy_count(), 3);
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+
+    let h = c.health().unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"));
+    let Some(Value::Arr(hshards)) = h.get("shards") else {
+        panic!("health carries a per-shard breakdown");
+    };
+    assert_eq!(hshards[1].get("status").unwrap().as_str(),
+               Some("poisoned"));
+    assert_eq!(hshards[0].get("status").unwrap().as_str(), Some("ok"));
+
+    // a session whose home hashes to the dead shard is re-placed
+    let key = (0..)
+        .map(|i| format!("s{i}"))
+        .find(|k| handle.shards.home_shard(k) == 1)
+        .unwrap();
+    let r = c
+        .call(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("generate")),
+            ("prompt", s("orphaned session")),
+            ("session", s(&key)),
+            ("max_new_tokens", n(3.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("op").unwrap().as_str(), Some("generate"),
+               "affinity to a dead home must fall back, not fail: {r:?}");
+    for k in 0..3 {
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s(&format!("sessionless {k}"))),
+                ("max_new_tokens", n(3.0)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+    }
+    let m = c
+        .call(&obj(vec![("v", n(2.0)), ("op", s("metrics"))]))
+        .unwrap();
+    let Some(Value::Arr(mshards)) = m.get("shards") else {
+        panic!("metrics carries a per-shard breakdown");
+    };
+    assert_eq!(mshards[1].get("healthy"), Some(&Value::Bool(false)));
+    assert!(mshards[1].get("metrics").is_none(),
+            "a shard that never built an engine has no registry");
+    assert_eq!(m.get("requests").unwrap().get("admitted").unwrap()
+                   .as_usize(),
+               Some(4));
+    handle.shutdown();
+}
+
+#[test]
+fn sharded_cancel_fans_out_across_connections() {
+    // Backlog one shard with an affine flood of streams, cancel the
+    // last (still-queued) one from ANOTHER connection: the cancel flag
+    // fans out to every shard and the owning shard resolves it.
+    let handle = griffin::server::start_sharded(
+        cpu_factory(), 2, "127.0.0.1:0", 16, 64).unwrap();
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    let mut streams = Vec::new();
+    let mut last_id = 0u64;
+    for k in 0..12 {
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        c.send(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("generate")),
+            ("prompt", s(&format!("long stream {k}"))),
+            ("session", s("burst-session")),
+            ("max_new_tokens", n(48.0)),
+            ("stop_at_eos", Value::Bool(false)),
+            ("stream", Value::Bool(true)),
+        ]))
+        .unwrap();
+        let acc = c.recv().unwrap();
+        assert_eq!(acc.get("event").unwrap().as_str(), Some("accepted"));
+        last_id = acc.get("id").unwrap().as_usize().unwrap() as u64;
+        streams.push(c);
+    }
+    let mut other = griffin::server::Client::connect(&addr).unwrap();
+    let ack = other.cancel(last_id).unwrap();
+    assert_eq!(ack.get("status").unwrap().as_str(), Some("cancelling"));
+    // the cancelled stream terminates with finish:"cancelled" (queued:
+    // empty; already slotted: partial tokens — both are cancellations)
+    let mut c = streams.pop().unwrap();
+    loop {
+        let ev = c.recv().unwrap();
+        match ev.get("event").and_then(Value::as_str) {
+            Some("token") => continue,
+            Some("done") => {
+                assert_eq!(ev.get("finish").unwrap().as_str(),
+                           Some("cancelled"));
+                assert_eq!(
+                    ev.get("id").unwrap().as_usize().unwrap() as u64,
+                    last_id
+                );
+                break;
+            }
+            other => panic!("unexpected stream event {other:?}: {ev:?}"),
+        }
+    }
+    // the rest of the burst is unaffected: drain one to completion
+    let mut first = streams.remove(0);
+    loop {
+        let ev = first.recv().unwrap();
+        if ev.get("event").and_then(Value::as_str) == Some("done") {
+            assert_eq!(ev.get("finish").unwrap().as_str(), Some("length"));
+            break;
+        }
+    }
+    drop(streams); // disconnects auto-cancel the remaining streams
+    handle.shutdown();
+}
+
+#[test]
+fn server_streams_batched_generate_per_index() {
+    // Satellite: batched generate + stream:true interleaves lanes on
+    // one connection — accepted carries ids in prompt order, token
+    // events carry the prompt index (lane) + per-lane seq, and every
+    // lane ends with its own per-index done row.
+    let handle = griffin::server::start_sharded(
+        cpu_factory(), 2, "127.0.0.1:0", 16, 64).unwrap();
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+    c.send(&obj(vec![
+        ("v", n(2.0)),
+        ("op", s("generate")),
+        (
+            "prompts",
+            Value::Arr(vec![s("the quiet river"), s("a deep lake")]),
+        ),
+        ("max_new_tokens", n(4.0)),
+        ("stop_at_eos", Value::Bool(false)),
+        ("stream", Value::Bool(true)),
+    ]))
+    .unwrap();
+    let acc = c.recv().unwrap();
+    assert_eq!(acc.get("event").unwrap().as_str(), Some("accepted"));
+    let ids: Vec<u64> = acc
+        .get("ids")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u64)
+        .collect();
+    assert_eq!(ids.len(), 2, "accepted lists every lane's id in order");
+    let mut lane_tokens: Vec<Vec<i64>> = vec![Vec::new(), Vec::new()];
+    let mut dones: Vec<Option<Value>> = vec![None, None];
+    while dones.iter().any(Option::is_none) {
+        let ev = c.recv().unwrap();
+        let i = ev.get("index").unwrap().as_usize().unwrap();
+        match ev.get("event").and_then(Value::as_str) {
+            Some("token") => {
+                assert_eq!(
+                    ev.get("id").unwrap().as_usize().unwrap() as u64,
+                    ids[i],
+                    "lane index and id must agree"
+                );
+                assert_eq!(ev.get("seq").unwrap().as_usize().unwrap(),
+                           lane_tokens[i].len(),
+                           "per-lane token positions arrive in order");
+                lane_tokens[i].push(
+                    ev.get("token").unwrap().as_i64().unwrap());
+            }
+            Some("done") => {
+                assert_eq!(ev.get("op").unwrap().as_str(),
+                           Some("generate"));
+                assert_eq!(ev.get("finish").unwrap().as_str(),
+                           Some("length"));
+                dones[i] = Some(ev);
+            }
+            other => panic!("unexpected batched-stream event {other:?}"),
+        }
+    }
+    for (i, d) in dones.iter().enumerate() {
+        let d = d.as_ref().unwrap();
+        assert_eq!(d.get("id").unwrap().as_usize().unwrap() as u64,
+                   ids[i]);
+        let toks: Vec<i64> = d
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(toks, lane_tokens[i],
+                   "streamed lane tokens match the final row");
+        assert_eq!(toks.len(), 4);
+    }
+    handle.shutdown();
 }
