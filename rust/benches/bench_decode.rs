@@ -214,6 +214,7 @@ fn main() {
             seed: 1,
             stop_at_eos: false,
             session: None,
+            keep_requested: None,
             admitted_at: std::time::Instant::now(),
         };
         rep.add(bench_for(

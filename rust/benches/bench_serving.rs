@@ -28,14 +28,23 @@
 //!     `server::start_sharded` — one engine thread per shard behind the
 //!     placement-aware `ShardRouter`. Aggregate decode tokens/sec
 //!     should grow with the shard count (each shard owns an engine and
-//!     a slot pool, so the fleet decodes N batches concurrently); the
-//!     machine-readable summary (p50/p99 TTFT + ITL from the fleet
-//!     metrics rollup, fused-tick share, per-shard occupancy) is
-//!     written to BENCH_serving.json at the repository root.
+//!     a slot pool, so the fleet decodes N batches concurrently).
+//!   * sustained load (`loadgen`, CPU substrate): open-loop bursty
+//!     arrivals with per-client abandonment deadlines, driven through
+//!     overload (staged admission: down-keep, then typed sheds with
+//!     `retry_after_ms`) and through a mid-run injected shard crash
+//!     (`FaultPlan` panic + supervisor respawn). Reports client-side
+//!     p50/p99/p999 TTFT + inter-token latency, shed rate, down-keep
+//!     share, abandonment count, and fleet recovery times.
+//!     `GRIFFIN_LOADGEN_SMOKE=1` shrinks the scenario for CI.
+//!
+//! Both CPU-substrate scenarios contribute to the machine-readable
+//! summary written to BENCH_serving.json at the repository root
+//! (schema: docs/benchmarks.md).
 //!
 //! Run (PJRT, artifact-gated):
 //!     cargo bench --bench bench_serving [-- <model>]
-//! Run (CPU substrate, no artifacts — shard scaling only):
+//! Run (CPU substrate, no artifacts — shard scaling + loadgen):
 //!     cargo bench --bench bench_serving \
 //!         --no-default-features --features cpu-substrate
 //! CSV is appended to results/bench_serving_*.csv.
@@ -50,7 +59,7 @@ mod shard_scaling {
 
     use griffin::bench_harness::{summarize, Reporter};
     use griffin::coordinator::engine::Engine;
-    use griffin::json::{self, n, obj, s, Value};
+    use griffin::json::{n, obj, s, Value};
     use griffin::metrics::MetricsRegistry;
     use griffin::server::{self, Client, EngineFactory};
 
@@ -99,7 +108,7 @@ mod shard_scaling {
         conns.into_iter().map(|t| t.join().unwrap()).sum()
     }
 
-    pub fn run() {
+    pub fn run() -> Value {
         println!(
             "bench_serving shard_scaling (cpu substrate; {CONNS} conns x \
              {PROMPTS_PER_CONN} prompts x {MAX_NEW} tokens per round)"
@@ -189,10 +198,9 @@ mod shard_scaling {
             );
         }
 
-        let doc = obj(vec![
-            ("bench", s("serving")),
+        rep.finish();
+        obj(vec![
             ("scenario", s("shard_scaling")),
-            ("substrate", s("cpu")),
             ("workload", obj(vec![
                 ("connections", n(CONNS as f64)),
                 ("prompts_per_connection", n(PROMPTS_PER_CONN as f64)),
@@ -204,17 +212,490 @@ mod shard_scaling {
                 ("x2_over_x1", n(best[&2] / best[&1])),
                 ("x4_over_x1", n(best[&4] / best[&1])),
             ])),
-        ]);
-        let path = griffin::test_support::repo_root()
-            .join("..")
-            .join("BENCH_serving.json");
-        let mut text = json::to_string(&doc);
-        text.push('\n');
-        match std::fs::write(&path, text) {
-            Ok(()) => println!("-> {}", path.display()),
-            Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+        ])
+    }
+}
+
+/// Sustained-load scenario over the CPU substrate: open-loop bursty
+/// arrivals with client abandonment, driven through overload (staged
+/// down-keep → shed admission) and through a mid-run injected shard
+/// crash with supervisor respawn. All latency numbers are CLIENT-side
+/// (wall clock at the socket), so they survive the per-incarnation
+/// metrics reset a respawn causes server-side.
+#[cfg(feature = "cpu-substrate")]
+mod loadgen {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Arc};
+    use std::time::{Duration, Instant};
+
+    use griffin::coordinator::engine::Engine;
+    use griffin::json::{self, n, obj, s, Value};
+    use griffin::runtime::cpu::{
+        CpuSession, FaultKind, FaultPlan, FaultySession,
+    };
+    use griffin::server::{self, EngineFactory};
+    use griffin::util::percentile;
+
+    /// Scenario knobs. The smoke config (`GRIFFIN_LOADGEN_SMOKE=1`)
+    /// shrinks the fleet sweep and request counts so the full
+    /// overload + crash arc still plays out in a few seconds of CI
+    /// time; the default config sustains pressure for real numbers.
+    struct Config {
+        /// fleet sizes for the overload sweep
+        fleets: &'static [usize],
+        /// per-shard queue capacity — small, so the burst actually
+        /// drives the staged admission controller through Shed
+        queue_capacity: usize,
+        /// open-loop requests per overload burst
+        burst: usize,
+        /// safety-net client deadline (ms) for patient clients
+        abandon_ms: u64,
+        /// fleet size for the crash scenario
+        crash_shards: usize,
+        /// steady open-loop requests during the crash run
+        crash_requests: usize,
+        /// shard 0 panics on its Nth decode dispatch
+        crash_nth: u64,
+    }
+
+    const FULL: Config = Config {
+        fleets: &[1, 2, 4],
+        queue_capacity: 16,
+        burst: 72,
+        abandon_ms: 30_000,
+        crash_shards: 4,
+        crash_requests: 96,
+        crash_nth: 150,
+    };
+    const SMOKE: Config = Config {
+        fleets: &[2],
+        queue_capacity: 8,
+        burst: 30,
+        abandon_ms: 10_000,
+        crash_shards: 2,
+        crash_requests: 24,
+        crash_nth: 20,
+    };
+
+    /// Seeded LCG so the arrival schedule and length mix are identical
+    /// across runs and fleet sizes.
+    struct Lcg(u64);
+
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            self.0 >> 33
         }
-        rep.finish();
+        fn below(&mut self, bound: u64) -> u64 {
+            self.next() % bound
+        }
+    }
+
+    enum Outcome {
+        /// completed: client-side TTFT, per-gap inter-token latencies,
+        /// and whether the response carried down-keep provenance
+        Done { ttft_ms: f64, itl_ms: Vec<f64>, downkept: bool },
+        /// typed `overloaded` shed at admission
+        Shed { retry_after_ms: Option<u64> },
+        /// any other error (engine_error from a crashed shard, i/o)
+        Failed,
+        /// the client's read deadline passed; dropping the connection
+        /// auto-cancels the request server-side
+        Abandoned,
+    }
+
+    /// One open-loop client: connect, send a streaming v2 generate,
+    /// consume events until done/error/deadline. TTFT counts from the
+    /// scheduled send (`at`), like a real user's clock would.
+    fn drive(addr: &str, i: usize, max_new: usize, prunable: bool,
+             abandon: Duration, at: Instant) -> Outcome {
+        let Ok(stream) = TcpStream::connect(addr) else {
+            return Outcome::Failed;
+        };
+        let _ = stream.set_read_timeout(Some(abandon));
+        let Ok(rs) = stream.try_clone() else { return Outcome::Failed };
+        let mut reader = BufReader::new(rs);
+        let mut writer = stream;
+        let mut fields = vec![
+            ("v", n(2.0)),
+            ("op", s("generate")),
+            ("prompt", s(&format!("open loop request {i}"))),
+            ("max_new_tokens", n(max_new as f64)),
+            ("stop_at_eos", Value::Bool(false)),
+            ("stream", Value::Bool(true)),
+        ];
+        if prunable {
+            fields.push((
+                "prune",
+                obj(vec![("method", s("griffin")), ("keep", n(0.75))]),
+            ));
+        }
+        let line = json::to_string(&obj(fields));
+        if writer.write_all(line.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            return Outcome::Failed;
+        }
+        let mut first_token: Option<Instant> = None;
+        let mut last_token: Option<Instant> = None;
+        let mut itl = Vec::new();
+        loop {
+            let mut buf = String::new();
+            match reader.read_line(&mut buf) {
+                Ok(0) => return Outcome::Failed,
+                Ok(_) => {}
+                Err(_) => return Outcome::Abandoned,
+            }
+            let Ok(ev) = json::parse(buf.trim()) else {
+                return Outcome::Failed;
+            };
+            match ev.get("event").and_then(Value::as_str) {
+                Some("accepted") => {}
+                Some("token") => {
+                    let now = Instant::now();
+                    if let Some(prev) = last_token {
+                        itl.push(
+                            now.duration_since(prev).as_secs_f64() * 1e3);
+                    } else {
+                        first_token = Some(now);
+                    }
+                    last_token = Some(now);
+                }
+                Some("done") => {
+                    let downkept = ev
+                        .get("prune")
+                        .and_then(|p| p.get("degraded"))
+                        .and_then(Value::as_bool)
+                        .unwrap_or(false);
+                    let ttft_ms = first_token
+                        .map(|t| t.duration_since(at).as_secs_f64() * 1e3)
+                        .unwrap_or(0.0);
+                    return Outcome::Done { ttft_ms, itl_ms: itl,
+                                           downkept };
+                }
+                _ => {
+                    // a bare error line terminates the request
+                    return match ev.get("code").and_then(Value::as_str) {
+                        Some("overloaded") => Outcome::Shed {
+                            retry_after_ms: ev
+                                .get("retry_after_ms")
+                                .and_then(Value::as_f64)
+                                .map(|ms| ms as u64),
+                        },
+                        _ => Outcome::Failed,
+                    };
+                }
+            }
+        }
+    }
+
+    #[derive(Default)]
+    struct Tally {
+        offered: usize,
+        completed: usize,
+        shed: usize,
+        failed: usize,
+        abandoned: usize,
+        downkept: usize,
+        retry_hints: usize,
+        ttft: Vec<f64>,
+        itl: Vec<f64>,
+    }
+
+    impl Tally {
+        fn absorb(&mut self, o: Outcome) {
+            match o {
+                Outcome::Done { ttft_ms, itl_ms, downkept } => {
+                    self.completed += 1;
+                    if downkept {
+                        self.downkept += 1;
+                    }
+                    if ttft_ms > 0.0 {
+                        self.ttft.push(ttft_ms);
+                    }
+                    self.itl.extend(itl_ms);
+                }
+                Outcome::Shed { retry_after_ms } => {
+                    self.shed += 1;
+                    if retry_after_ms.is_some() {
+                        self.retry_hints += 1;
+                    }
+                }
+                Outcome::Failed => self.failed += 1,
+                Outcome::Abandoned => self.abandoned += 1,
+            }
+        }
+
+        fn json(&self) -> Vec<(&'static str, Value)> {
+            let rate = |k: usize| {
+                if self.offered == 0 {
+                    0.0
+                } else {
+                    k as f64 / self.offered as f64
+                }
+            };
+            vec![
+                ("offered", n(self.offered as f64)),
+                ("completed", n(self.completed as f64)),
+                ("shed", n(self.shed as f64)),
+                ("failed", n(self.failed as f64)),
+                ("abandoned", n(self.abandoned as f64)),
+                ("downkept", n(self.downkept as f64)),
+                ("retry_hints", n(self.retry_hints as f64)),
+                ("shed_rate", n(rate(self.shed))),
+                ("downkeep_share", n(rate(self.downkept))),
+                ("ttft_ms", pcts(&self.ttft)),
+                ("itl_ms", pcts(&self.itl)),
+            ]
+        }
+    }
+
+    fn pcts(xs: &[f64]) -> Value {
+        obj(vec![
+            ("p50", n(percentile(xs, 50.0))),
+            ("p99", n(percentile(xs, 99.0))),
+            ("p999", n(percentile(xs, 99.9))),
+        ])
+    }
+
+    fn plain_factory() -> EngineFactory {
+        Arc::new(|_shard| Engine::cpu_reference())
+    }
+
+    /// Overload arc against an N-shard fleet: a clumped open-loop burst
+    /// past the staged admission thresholds, then a probe loop timing
+    /// how long the fleet takes to stop shedding.
+    fn overload_run(n_shards: usize, cfg: &Config) -> Value {
+        let handle = server::start_sharded(
+            plain_factory(), n_shards, "127.0.0.1:0",
+            cfg.queue_capacity, 64)
+            .expect("sharded fleet starts");
+        let addr = handle.addr.to_string();
+        // warmup: touch the fleet once before the clock matters
+        drive(&addr, usize::MAX, 1, false, Duration::from_secs(5),
+              Instant::now());
+
+        let mut rng = Lcg(0x5EED_0001 + n_shards as u64);
+        let (tx, rx) = mpsc::channel();
+        let mut workers = Vec::new();
+        for i in 0..cfg.burst {
+            // clumps of ~8 back-to-back arrivals, then a short lull
+            let gap = if i % 8 == 7 {
+                10 + rng.below(15)
+            } else {
+                rng.below(3)
+            };
+            std::thread::sleep(Duration::from_millis(gap));
+            // heavy-tailed lengths: a quarter of the clients want 6x
+            // the tokens of the rest
+            let max_new = if rng.below(4) == 0 {
+                48
+            } else {
+                8 + rng.below(8) as usize
+            };
+            // every 6th client is impatient and will abandon
+            let abandon = if i % 6 == 5 {
+                Duration::from_millis(25)
+            } else {
+                Duration::from_millis(cfg.abandon_ms)
+            };
+            let prunable = i % 2 == 0;
+            let addr = addr.clone();
+            let tx = tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let _ = tx.send(drive(&addr, i, max_new, prunable,
+                                      abandon, Instant::now()));
+            }));
+        }
+        drop(tx);
+        let burst_end = Instant::now();
+
+        // recovery: probe until an admission stops shedding
+        let recovery_ms;
+        loop {
+            let o = drive(&addr, usize::MAX, 1, false,
+                          Duration::from_millis(cfg.abandon_ms),
+                          Instant::now());
+            if !matches!(o, Outcome::Shed { .. }) {
+                recovery_ms = burst_end.elapsed().as_secs_f64() * 1e3;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        let mut t = Tally { offered: cfg.burst, ..Tally::default() };
+        for o in rx {
+            t.absorb(o);
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        handle.shutdown();
+        println!(
+            "  loadgen overload n={n_shards}: {}/{} done, {} shed, \
+             {} downkept, {} abandoned, recovery {recovery_ms:.0} ms",
+            t.completed, t.offered, t.shed, t.downkept, t.abandoned
+        );
+        let mut fields = vec![("shards", n(n_shards as f64))];
+        fields.extend(t.json());
+        fields.push(("recovery_ms", n(recovery_ms)));
+        obj(fields)
+    }
+
+    /// Crash arc: shard 0's first engine incarnation panics on its Nth
+    /// decode dispatch under steady open-loop load; a health watcher
+    /// times the degraded window until the supervisor's respawn brings
+    /// the fleet back to `ok`.
+    fn crash_run(n_shards: usize, cfg: &Config) -> Value {
+        let plan =
+            FaultPlan::new("decode", cfg.crash_nth, FaultKind::Panic);
+        let factory: EngineFactory = {
+            let plan = plan.clone();
+            Arc::new(move |i| {
+                if i == 0 {
+                    // armed on every incarnation, but the plan is
+                    // one-shot: the respawned engine runs clean
+                    Engine::from_substrate(
+                        Box::new(FaultySession::new(
+                            CpuSession::new(), plan.clone())),
+                        false,
+                    )
+                } else {
+                    Engine::cpu_reference()
+                }
+            })
+        };
+        let handle = server::start_sharded(
+            factory, n_shards, "127.0.0.1:0", cfg.queue_capacity, 64)
+            .expect("sharded fleet starts");
+        let addr = handle.addr.to_string();
+
+        // health watcher: timestamps degraded -> ok and reads the
+        // respawned shard's restart counter
+        let stop = Arc::new(AtomicBool::new(false));
+        let watcher = {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || -> (Option<f64>, u64) {
+                let mut c = server::Client::connect(&addr).unwrap();
+                let mut t_down: Option<Instant> = None;
+                let mut downtime: Option<f64> = None;
+                let mut restarts = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let Ok(h) = c.health() else { break };
+                    if let Some(r) = h
+                        .get("shards")
+                        .and_then(|ss| ss.as_arr())
+                        .and_then(|ss| ss.first())
+                        .and_then(|sh| sh.get("restarts"))
+                        .and_then(Value::as_f64)
+                    {
+                        restarts = restarts.max(r as u64);
+                    }
+                    match h.get("status").and_then(Value::as_str) {
+                        Some("ok") => {
+                            if let (Some(t), None) = (t_down, downtime) {
+                                downtime = Some(
+                                    t.elapsed().as_secs_f64() * 1e3);
+                            }
+                        }
+                        Some("degraded") | Some("down") => {
+                            if t_down.is_none() {
+                                t_down = Some(Instant::now());
+                            }
+                        }
+                        _ => {}
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                (downtime, restarts)
+            })
+        };
+
+        // steady open-loop load; enough decode traffic lands on shard 0
+        // to trip the armed dispatch mid-run
+        let mut rng = Lcg(0xC4A5_4001);
+        let (tx, rx) = mpsc::channel();
+        let mut workers = Vec::new();
+        for i in 0..cfg.crash_requests {
+            std::thread::sleep(Duration::from_millis(1 + rng.below(4)));
+            let max_new = 12 + rng.below(12) as usize;
+            let addr = addr.clone();
+            let tx = tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let _ = tx.send(drive(&addr, i, max_new, i % 2 == 0,
+                                      Duration::from_secs(30),
+                                      Instant::now()));
+            }));
+        }
+        drop(tx);
+        let mut t =
+            Tally { offered: cfg.crash_requests, ..Tally::default() };
+        for o in rx {
+            t.absorb(o);
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+
+        // let the supervisor finish the respawn, then read the watcher
+        let settle = Instant::now() + Duration::from_secs(10);
+        while plan.has_fired()
+            && handle.shards.healthy_count() < n_shards
+            && Instant::now() < settle
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // one more watcher pass so it observes the recovered fleet
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::SeqCst);
+        let (downtime, restarts) = watcher.join().unwrap();
+        handle.shutdown();
+
+        println!(
+            "  loadgen crash n={n_shards}: fired={} downtime={} ms \
+             restarts={restarts} ({}/{} done, {} failed)",
+            plan.has_fired(),
+            downtime.map_or_else(|| "n/a".into(),
+                                 |ms| format!("{ms:.0}")),
+            t.completed, t.offered, t.failed
+        );
+        let mut fields = vec![
+            ("shards", n(n_shards as f64)),
+            ("crash_fired", Value::Bool(plan.has_fired())),
+            ("downtime_ms", downtime.map_or(Value::Null, n)),
+            ("restarts", n(restarts as f64)),
+        ];
+        fields.extend(t.json());
+        obj(fields)
+    }
+
+    pub fn run() -> Value {
+        let smoke = std::env::var("GRIFFIN_LOADGEN_SMOKE").is_ok();
+        let cfg = if smoke { &SMOKE } else { &FULL };
+        println!(
+            "bench_serving loadgen ({} config; fleets {:?}, burst {}, \
+             crash on {} shards)",
+            if smoke { "smoke" } else { "full" },
+            cfg.fleets, cfg.burst, cfg.crash_shards
+        );
+        let overload: Vec<Value> = cfg
+            .fleets
+            .iter()
+            .map(|&nsh| overload_run(nsh, cfg))
+            .collect();
+        let crash = crash_run(cfg.crash_shards, cfg);
+        obj(vec![
+            ("scenario", s("loadgen")),
+            ("config", s(if smoke { "smoke" } else { "full" })),
+            ("overload", Value::Arr(overload)),
+            ("crash", crash),
+        ])
     }
 }
 
@@ -618,9 +1099,35 @@ mod pjrt {
     }
 }
 
+/// Compose the CPU-substrate scenario summaries into the
+/// machine-readable BENCH_serving.json at the repository root
+/// (schema: docs/benchmarks.md).
+#[cfg(feature = "cpu-substrate")]
+fn write_serving_json(scenarios: Vec<griffin::json::Value>) {
+    use griffin::json::{self, obj, s, Value};
+    let doc = obj(vec![
+        ("bench", s("serving")),
+        ("substrate", s("cpu")),
+        ("scenarios", Value::Arr(scenarios)),
+    ]);
+    let path = griffin::test_support::repo_root()
+        .join("..")
+        .join("BENCH_serving.json");
+    let mut text = json::to_string(&doc);
+    text.push('\n');
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+    }
+}
+
 fn main() {
     #[cfg(feature = "cpu-substrate")]
-    shard_scaling::run();
+    {
+        let scaling = shard_scaling::run();
+        let load = loadgen::run();
+        write_serving_json(vec![scaling, load]);
+    }
     #[cfg(feature = "runtime")]
     pjrt::run();
     #[cfg(all(not(feature = "cpu-substrate"), not(feature = "runtime")))]

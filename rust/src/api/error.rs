@@ -19,6 +19,13 @@ pub enum ErrorCode {
     InvalidRequest,
     /// admission queue at capacity — retry later
     QueueFull,
+    /// the fleet is shedding load under overload pressure — retryable;
+    /// the error line carries a `retry_after_ms` hint
+    Overloaded,
+    /// every engine shard is dead or parked — nothing can serve work
+    /// until an operator intervenes (distinct from the transient
+    /// `queue_full`/`overloaded` backpressure classes)
+    Unavailable,
     /// prompt exceeds the model's compiled context
     PromptTooLong,
     /// prompt tokenized to nothing
@@ -44,6 +51,8 @@ impl ErrorCode {
             ErrorCode::UnknownOp => "unknown_op",
             ErrorCode::InvalidRequest => "invalid_request",
             ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Unavailable => "unavailable",
             ErrorCode::PromptTooLong => "prompt_too_long",
             ErrorCode::EmptyPrompt => "empty_prompt",
             ErrorCode::EngineError => "engine_error",
@@ -54,15 +63,18 @@ impl ErrorCode {
 }
 
 /// A protocol-level failure: code + human-readable message.
+/// `retry_after_ms` is `Some` only for retryable backpressure errors
+/// (`overloaded`); when set, the wire error line carries it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ApiError {
     pub code: ErrorCode,
     pub message: String,
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
-        ApiError { code, message: message.into() }
+        ApiError { code, message: message.into(), retry_after_ms: None }
     }
 
     pub fn invalid(message: impl Into<String>) -> ApiError {
@@ -82,11 +94,16 @@ impl From<&AdmitError> for ApiError {
     fn from(e: &AdmitError) -> ApiError {
         let code = match e {
             AdmitError::QueueFull { .. } => ErrorCode::QueueFull,
+            AdmitError::Overloaded { .. } => ErrorCode::Overloaded,
             AdmitError::PromptTooLong { .. } => ErrorCode::PromptTooLong,
             AdmitError::EmptyPrompt => ErrorCode::EmptyPrompt,
-            AdmitError::NoHealthyShards => ErrorCode::EngineDropped,
+            AdmitError::NoHealthyShards => ErrorCode::Unavailable,
         };
-        ApiError::new(code, e.to_string())
+        let mut err = ApiError::new(code, e.to_string());
+        if let AdmitError::Overloaded { retry_after_ms } = e {
+            err.retry_after_ms = Some(*retry_after_ms);
+        }
+        err
     }
 }
 
@@ -100,6 +117,8 @@ mod tests {
         assert_eq!(ErrorCode::InvalidRequest.as_str(), "invalid_request");
         assert_eq!(ErrorCode::EngineError.as_str(), "engine_error");
         assert_eq!(ErrorCode::Cancelled.as_str(), "cancelled");
+        assert_eq!(ErrorCode::Overloaded.as_str(), "overloaded");
+        assert_eq!(ErrorCode::Unavailable.as_str(), "unavailable");
     }
 
     #[test]
@@ -107,7 +126,22 @@ mod tests {
         let e: ApiError = (&AdmitError::QueueFull { capacity: 4 }).into();
         assert_eq!(e.code, ErrorCode::QueueFull);
         assert!(e.message.contains("capacity 4"));
+        assert_eq!(e.retry_after_ms, None);
         let e: ApiError = (&AdmitError::EmptyPrompt).into();
         assert_eq!(e.code, ErrorCode::EmptyPrompt);
+    }
+
+    #[test]
+    fn overload_and_outage_map_to_retryable_codes() {
+        let e: ApiError =
+            (&AdmitError::Overloaded { retry_after_ms: 120 }).into();
+        assert_eq!(e.code, ErrorCode::Overloaded);
+        assert_eq!(e.retry_after_ms, Some(120));
+        assert!(e.message.contains("120"));
+        // a fleet with no live shard is an outage, not backpressure:
+        // clients must see `unavailable`, never `engine_dropped`
+        let e: ApiError = (&AdmitError::NoHealthyShards).into();
+        assert_eq!(e.code, ErrorCode::Unavailable);
+        assert_eq!(e.retry_after_ms, None);
     }
 }

@@ -35,22 +35,25 @@ fn response_body(r: &GenResponse, v2_schema: bool) -> Value {
     ];
     if v2_schema {
         if let Some(sel) = r.selection {
-            fields.push((
-                "prune",
-                obj(vec![
-                    ("method", s(sel.method)),
-                    (
-                        "strategy",
-                        sel.strategy.map(s).unwrap_or(Value::Null),
-                    ),
-                    (
-                        "seed",
-                        sel.seed
-                            .map(|x| n(x as f64))
-                            .unwrap_or(Value::Null),
-                    ),
-                ]),
-            ));
+            let mut prune = vec![
+                ("method", s(sel.method)),
+                (
+                    "strategy",
+                    sel.strategy.map(s).unwrap_or(Value::Null),
+                ),
+                (
+                    "seed",
+                    sel.seed.map(|x| n(x as f64)).unwrap_or(Value::Null),
+                ),
+            ];
+            // down-kept under overload: record the client's original
+            // keep and flag the degradation (absent on responses served
+            // as requested, so the non-degraded shape is unchanged)
+            if let Some(kr) = sel.keep_requested {
+                prune.push(("keep_requested", n(kr)));
+                prune.push(("degraded", Value::Bool(true)));
+            }
+            fields.push(("prune", obj(prune)));
         }
     }
     fields.push((
@@ -184,6 +187,9 @@ pub fn error_obj(e: &ApiError, id: Option<u64>) -> Value {
         ("code", s(e.code.as_str())),
         ("message", s(&e.message)),
     ];
+    if let Some(ms) = e.retry_after_ms {
+        fields.push(("retry_after_ms", n(ms as f64)));
+    }
     if let Some(id) = id {
         fields.insert(1, ("id", n(id as f64)));
     }
@@ -321,6 +327,7 @@ mod tests {
             method: "griffin",
             strategy: Some("sampling"),
             seed: Some(7),
+            keep_requested: None,
         });
         let d = json::parse(&done_json(&r, false, true)).unwrap();
         let p = d.get("prune").expect("v2 carries prune provenance");
@@ -332,6 +339,7 @@ mod tests {
             method: "griffin",
             strategy: Some("topk"),
             seed: None,
+            keep_requested: None,
         });
         let d = json::parse(&done_json(&r, false, true)).unwrap();
         assert!(matches!(d.get("prune").unwrap().get("seed"),
@@ -346,6 +354,54 @@ mod tests {
     }
 
     #[test]
+    fn degraded_responses_surface_requested_keep() {
+        use crate::coordinator::types::SelectionInfo;
+        let mut r = resp();
+        r.k_used = Some(64);
+        // down-kept under overload: the prune object records what the
+        // client asked for and flags the degradation
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("topk"),
+            seed: None,
+            keep_requested: Some(0.75),
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let p = d.get("prune").unwrap();
+        let kr = p.get("keep_requested").unwrap().as_f64().unwrap();
+        assert!((kr - 0.75).abs() < 1e-12);
+        assert_eq!(p.get("degraded").unwrap().as_bool(), Some(true));
+        // served as requested: neither field appears (shape unchanged)
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("topk"),
+            seed: None,
+            keep_requested: None,
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let p = d.get("prune").unwrap();
+        assert!(p.get("keep_requested").is_none());
+        assert!(p.get("degraded").is_none());
+    }
+
+    #[test]
+    fn overloaded_errors_carry_retry_after() {
+        let mut e = ApiError::new(crate::api::ErrorCode::Overloaded,
+                                  "fleet overloaded");
+        e.retry_after_ms = Some(120);
+        let v = json::parse(&error_json(&e, Some(4), true)).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_usize(), Some(120));
+        let row = error_obj(&e, None);
+        assert_eq!(row.get("retry_after_ms").unwrap().as_usize(),
+                   Some(120));
+        // non-retryable errors keep the old shape
+        let plain = ApiError::invalid("bad keep");
+        let v = json::parse(&error_json(&plain, None, true)).unwrap();
+        assert!(v.get("retry_after_ms").is_none());
+    }
+
+    #[test]
     fn batched_rows_keep_provenance_without_envelope() {
         use crate::coordinator::types::SelectionInfo;
         let mut r = resp();
@@ -353,6 +409,7 @@ mod tests {
             method: "griffin",
             strategy: Some("topk"),
             seed: None,
+            keep_requested: None,
         });
         let row = response_row_json(&r);
         assert!(row.get("v").is_none(),

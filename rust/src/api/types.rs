@@ -255,6 +255,7 @@ impl GenerateSpec {
                 seed: self.sampling.seed,
                 stop_at_eos: self.stop_at_eos,
                 session: self.session.clone(),
+                keep_requested: None,
                 admitted_at: Instant::now(),
             })
             .collect()

@@ -31,10 +31,14 @@ use crate::coordinator::types::Mode;
 #[derive(Debug)]
 pub enum AdmitError {
     QueueFull { capacity: usize },
+    /// the fleet's SLO-aware admission controller is shedding load
+    /// (sharded serving only): the fleet is past its Shed pressure
+    /// threshold, and the client should retry after `retry_after_ms`
+    Overloaded { retry_after_ms: u64 },
     PromptTooLong { len: usize, max: usize },
     EmptyPrompt,
-    /// every engine shard is poisoned — there is no thread left that
-    /// could ever drain an admission (sharded serving only)
+    /// every engine shard is dead or parked — there is no thread left
+    /// that could ever drain an admission (sharded serving only)
     NoHealthyShards,
 }
 
@@ -44,9 +48,10 @@ impl AdmitError {
     pub fn code(&self) -> &'static str {
         match self {
             AdmitError::QueueFull { .. } => "queue_full",
+            AdmitError::Overloaded { .. } => "overloaded",
             AdmitError::PromptTooLong { .. } => "prompt_too_long",
             AdmitError::EmptyPrompt => "empty_prompt",
-            AdmitError::NoHealthyShards => "engine_dropped",
+            AdmitError::NoHealthyShards => "unavailable",
         }
     }
 }
@@ -57,12 +62,15 @@ impl std::fmt::Display for AdmitError {
             AdmitError::QueueFull { capacity } => {
                 write!(f, "queue full (capacity {capacity})")
             }
+            AdmitError::Overloaded { retry_after_ms } => {
+                write!(f, "fleet overloaded, retry after {retry_after_ms} ms")
+            }
             AdmitError::PromptTooLong { len, max } => {
                 write!(f, "prompt too long ({len} > {max})")
             }
             AdmitError::EmptyPrompt => write!(f, "empty prompt"),
             AdmitError::NoHealthyShards => {
-                write!(f, "no healthy engine shards")
+                write!(f, "no live engine shards")
             }
         }
     }

@@ -136,7 +136,8 @@ fn cancelled_response(req: &GenRequest) -> GenResponse {
         logprobs: Vec::new(),
         finish: FinishReason::Cancelled,
         k_used: None,
-        selection: SelectionInfo::from_mode(&req.mode),
+        selection: SelectionInfo::from_mode(&req.mode)
+            .map(|s| s.with_requested_keep(req.keep_requested)),
         prefill_ms: 0.0,
         select_ms: 0.0,
         decode_ms: 0.0,
@@ -993,7 +994,8 @@ impl Scheduler {
             logprobs: seq.logprobs,
             finish: seq.finish_reason.unwrap_or(FinishReason::Length),
             k_used,
-            selection: SelectionInfo::from_mode(&seq.req.mode),
+            selection: SelectionInfo::from_mode(&seq.req.mode)
+                .map(|s| s.with_requested_keep(seq.req.keep_requested)),
             prefill_ms,
             select_ms,
             decode_ms: decode_s * 1e3,

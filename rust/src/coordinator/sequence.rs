@@ -42,6 +42,11 @@ pub struct GenRequest {
     /// routed to the same engine shard (stable hash placement) and are
     /// never moved by work stealing
     pub session: Option<String>,
+    /// the keep fraction the client originally asked for, set ONLY when
+    /// the SLO-aware admission controller down-kept this request (the
+    /// served keep then lives in `mode`); threaded into the response's
+    /// `prune` provenance so degradation is auditable
+    pub keep_requested: Option<f64>,
     /// stamped by `Router::admit`; TTFT is measured from here
     pub admitted_at: Instant,
 }
@@ -58,6 +63,7 @@ impl GenRequest {
             seed: id,
             stop_at_eos: true,
             session: None,
+            keep_requested: None,
             admitted_at: Instant::now(),
         }
     }

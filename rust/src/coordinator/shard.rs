@@ -37,17 +37,37 @@
 //! `engine_error` events, and is skipped by placement from then on — the
 //! rest of the fleet keeps serving. `rebalance` also evacuates any
 //! request that raced into a dying shard's queue onto a healthy shard.
+//! The supervisor (server side) may later [`Shard::revive`] a poisoned
+//! shard with a fresh engine — it rejoins placement and stealing — or
+//! [`Shard::park`] it permanently when the crash loop trips the circuit
+//! breaker.
+//!
+//! Overload is handled BEFORE placement by a staged, SLO-aware
+//! controller (see [`SloPolicy`]): under moderate pressure, prunable
+//! requests are *down-kept* — snapped to a lower keep fraction, with the
+//! client's original ask recorded in the response's `prune` provenance —
+//! and under heavy pressure admission *sheds* with a retryable
+//! `overloaded` error carrying `retry_after_ms`. Dual enter/exit
+//! thresholds give the dial hysteresis so it cannot flap on a noisy
+//! load signal.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::router::{AdmitError, Router};
 use crate::coordinator::sequence::{GenRequest, RequestId, ScoreRequest};
+use crate::coordinator::types::Mode;
 use crate::metrics::MetricsRegistry;
 
 /// Steal only when the victim has at least this many queued requests —
 /// a queue of one is about to be drained by its own engine anyway.
 const STEAL_MIN_DEPTH: usize = 2;
+
+/// How many recently-cancelled request ids the router remembers for the
+/// cancel-after-steal closure (see [`ShardRouter::request_cancel`]).
+const CANCEL_RING_CAPACITY: usize = 256;
 
 /// One engine shard's admission-side state. The engine thread publishes
 /// its load (`slots_busy`) every serve-loop iteration and its metrics
@@ -59,6 +79,13 @@ pub struct Shard {
     slots_busy: AtomicU64,
     slots_total: AtomicU64,
     healthy: AtomicBool,
+    /// times the supervisor rebuilt this shard's engine after a crash
+    restarts: AtomicU64,
+    /// circuit breaker tripped: the supervisor gave up respawning this
+    /// shard (repeated crashes inside the failure window); stays down
+    parked: AtomicBool,
+    /// when the current incarnation came up (boot or last respawn)
+    since: Mutex<Instant>,
     /// the shard engine's metrics registry, published by the shard
     /// thread once its engine exists (None while booting / when
     /// construction failed)
@@ -73,6 +100,9 @@ impl Shard {
             slots_busy: AtomicU64::new(0),
             slots_total: AtomicU64::new(0),
             healthy: AtomicBool::new(true),
+            restarts: AtomicU64::new(0),
+            parked: AtomicBool::new(false),
+            since: Mutex::new(Instant::now()),
             metrics: Mutex::new(None),
         }
     }
@@ -117,6 +147,93 @@ impl Shard {
     pub fn poison(&self) {
         self.healthy.store(false, Ordering::Relaxed);
     }
+
+    /// How many times the supervisor respawned this shard's engine.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Circuit breaker tripped: the supervisor stopped respawning this
+    /// shard. Parked implies poisoned; `health` reports the two states
+    /// separately so operators can tell "respawning" from "gave up".
+    pub fn is_parked(&self) -> bool {
+        self.parked.load(Ordering::Relaxed)
+    }
+
+    /// Trip the circuit breaker: the shard leaves placement permanently
+    /// (until an operator restarts the process).
+    pub fn park(&self) {
+        self.parked.store(true, Ordering::Relaxed);
+        self.healthy.store(false, Ordering::Relaxed);
+    }
+
+    /// Supervisor respawn: a fresh engine serves this shard again. It
+    /// rejoins placement and stealing, the restart count bumps, and the
+    /// incarnation clock restarts.
+    pub fn revive(&self) {
+        *self.since.lock().unwrap() = Instant::now();
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        self.parked.store(false, Ordering::Relaxed);
+        self.healthy.store(true, Ordering::Relaxed);
+    }
+
+    /// Seconds since this shard's current incarnation came up.
+    pub fn uptime_secs(&self) -> u64 {
+        self.since.lock().unwrap().elapsed().as_secs()
+    }
+}
+
+/// Staged overload state of the SLO-aware admission controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pressure {
+    /// serve everything as requested
+    Nominal,
+    /// down-keep prunable work to the degraded keep cap
+    Degrade,
+    /// shed new work with a retryable `overloaded` error
+    Shed,
+}
+
+/// Tunables for the staged admission controller.
+///
+/// The controller watches a scalar pressure signal: fleet utilization
+/// (occupied slots + queued admissions over total slots + queue
+/// capacity) max'd with rolling-p99 TTFT / inter-token-latency terms
+/// scaled so a p99 AT the SLO reads as shed-worthy pressure. Each stage
+/// has separate enter/exit thresholds (enter > exit) so the dial holds
+/// its state in the band between them instead of flapping.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Nominal → Degrade when pressure reaches this
+    pub degrade_enter: f64,
+    /// back to Nominal only when pressure falls below this
+    pub degrade_exit: f64,
+    /// Degrade → Shed when pressure reaches this
+    pub shed_enter: f64,
+    /// Shed → Degrade only when pressure falls below this
+    pub shed_exit: f64,
+    /// p99 time-to-first-token SLO (µs)
+    pub ttft_slo_us: f64,
+    /// p99 inter-token-latency SLO (µs)
+    pub itl_slo_us: f64,
+    /// keep fraction prunable requests snap to under Degrade
+    pub degraded_keep: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> SloPolicy {
+        SloPolicy {
+            degrade_enter: 0.50,
+            degrade_exit: 0.35,
+            shed_enter: 0.85,
+            shed_exit: 0.70,
+            // generous latency SLOs: on the CPU reference substrate the
+            // utilization term dominates; real deployments tighten these
+            ttft_slo_us: 10_000_000.0,
+            itl_slo_us: 2_000_000.0,
+            degraded_keep: 0.5,
+        }
+    }
 }
 
 /// Placement-aware admission front for N engine shards. Thread-safe:
@@ -127,6 +244,15 @@ pub struct ShardRouter {
     next_id: AtomicU64,
     /// requests moved between shards by work stealing (fleet counter)
     stolen: AtomicU64,
+    /// staged-admission tunables (fixed at construction)
+    slo: SloPolicy,
+    /// current controller stage, advanced on every admission
+    pressure: Mutex<Pressure>,
+    /// recently-cancelled ids (bounded ring). A cancel flag drained by a
+    /// shard BEFORE a steal delivers the request there is lost (flags
+    /// drain once per tick); re-flagging from this ring after every
+    /// cross-shard move closes that race.
+    recent_cancels: Mutex<VecDeque<RequestId>>,
 }
 
 /// FNV-1a, the session-placement hash. Stable across runs, processes,
@@ -153,6 +279,124 @@ impl ShardRouter {
                 .collect(),
             next_id: AtomicU64::new(1),
             stolen: AtomicU64::new(0),
+            slo: SloPolicy::default(),
+            pressure: Mutex::new(Pressure::Nominal),
+            recent_cancels: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Replace the admission-controller tunables (builder style; used by
+    /// tests and load harnesses that need tighter SLOs than the
+    /// defaults).
+    pub fn with_slo(mut self, slo: SloPolicy) -> ShardRouter {
+        self.slo = slo;
+        self
+    }
+
+    /// The controller stage the LAST admission decision used
+    /// (telemetry / tests).
+    pub fn pressure(&self) -> Pressure {
+        *self.pressure.lock().unwrap()
+    }
+
+    /// Scalar overload signal: fleet utilization max'd with SLO-relative
+    /// rolling-p99 latency terms. Only healthy shards count — capacity
+    /// that placement cannot reach is not capacity.
+    fn pressure_signal(&self) -> f64 {
+        let (mut busy, mut slots) = (0u64, 0u64);
+        let (mut queued, mut cap) = (0usize, 0usize);
+        let mut slo_term: f64 = 0.0;
+        for s in &self.shards {
+            if !s.is_healthy() {
+                continue;
+            }
+            busy += s.slots_busy();
+            slots += s.slots_total();
+            queued += s.router.len();
+            cap += s.router.capacity;
+            if let Some(m) = s.metrics() {
+                let ttft =
+                    m.ttft.percentile_us(99.0) / self.slo.ttft_slo_us;
+                let itl = m.inter_token_latency.percentile_us(99.0)
+                    / self.slo.itl_slo_us;
+                // a p99 at the SLO maps straight onto the shed
+                // threshold: breaching latency sheds even when
+                // utilization alone looks fine
+                slo_term =
+                    slo_term.max(ttft.max(itl) * self.slo.shed_enter);
+            }
+        }
+        let denom = (slots as usize + cap).max(1) as f64;
+        let util = (busy as usize + queued) as f64 / denom;
+        util.max(slo_term)
+    }
+
+    /// Advance the staged controller (dual-threshold hysteresis) and
+    /// return the stage this admission must apply.
+    fn eval_pressure(&self) -> Pressure {
+        let sig = self.pressure_signal();
+        let mut st = self.pressure.lock().unwrap();
+        *st = match *st {
+            Pressure::Nominal if sig >= self.slo.shed_enter => {
+                Pressure::Shed
+            }
+            Pressure::Nominal if sig >= self.slo.degrade_enter => {
+                Pressure::Degrade
+            }
+            Pressure::Nominal => Pressure::Nominal,
+            Pressure::Degrade if sig >= self.slo.shed_enter => {
+                Pressure::Shed
+            }
+            Pressure::Degrade if sig < self.slo.degrade_exit => {
+                Pressure::Nominal
+            }
+            Pressure::Degrade => Pressure::Degrade,
+            Pressure::Shed if sig < self.slo.degrade_exit => {
+                Pressure::Nominal
+            }
+            Pressure::Shed if sig < self.slo.shed_exit => {
+                Pressure::Degrade
+            }
+            Pressure::Shed => Pressure::Shed,
+        };
+        *st
+    }
+
+    /// Deterministic client backoff hint for a shed admission: scales
+    /// with the fleet backlog, clamped to a sane band.
+    fn retry_after_ms(&self) -> u64 {
+        (50 + 20 * self.queue_depth() as u64).min(2_000)
+    }
+
+    /// Degrade stage: snap a prunable request's keep fraction down to
+    /// the policy cap, recording the client's original ask for response
+    /// provenance. `Full` requests pass untouched — there is no keep
+    /// axis to degrade; they are only affected at the Shed stage.
+    /// Returns whether the request was actually down-kept.
+    fn downkeep(&self, req: &mut GenRequest) -> bool {
+        let cap = self.slo.degraded_keep;
+        let keep = match &mut req.mode {
+            Mode::Griffin { keep, .. }
+            | Mode::Magnitude { keep }
+            | Mode::Wanda { keep } => keep,
+            Mode::Full => return false,
+        };
+        if *keep <= cap {
+            return false;
+        }
+        if req.keep_requested.is_none() {
+            req.keep_requested = Some(*keep);
+        }
+        *keep = cap;
+        true
+    }
+
+    /// Cancel-after-steal closure: if the moved id was cancelled
+    /// recently, re-flag it on its new home (cancels are idempotent, so
+    /// over-flagging is harmless).
+    fn reflag_if_cancelled(&self, shard: &Shard, id: RequestId) {
+        if self.recent_cancels.lock().unwrap().contains(&id) {
+            shard.router.request_cancel(id);
         }
     }
 
@@ -218,6 +462,19 @@ impl ShardRouter {
         if req.id == 0 {
             req.id = self.fresh_id();
         }
+        // staged overload control runs BEFORE placement: shed is the
+        // last resort, down-keep buys capacity first (and is audited in
+        // the response's prune provenance)
+        let mut downkept = false;
+        match self.eval_pressure() {
+            Pressure::Nominal => {}
+            Pressure::Degrade => downkept = self.downkeep(&mut req),
+            Pressure::Shed => {
+                return Err(AdmitError::Overloaded {
+                    retry_after_ms: self.retry_after_ms(),
+                });
+            }
+        }
         let targets: Vec<usize> = match &req.session {
             Some(key) => {
                 let home = self.home_shard(key);
@@ -250,6 +507,12 @@ impl ShardRouter {
                             return self.admit(r);
                         }
                     }
+                    if downkept {
+                        if let Some(m) = shard.metrics() {
+                            m.requests_downkept.inc();
+                        }
+                    }
+                    self.reflag_if_cancelled(shard, id);
                     self.rebalance();
                     return Ok((id, i));
                 }
@@ -267,6 +530,13 @@ impl ShardRouter {
                        -> Result<(RequestId, usize), AdmitError> {
         if req.id == 0 {
             req.id = self.fresh_id();
+        }
+        // scores have no keep axis to degrade, but they are work-bearing
+        // and shed like everything else under heavy pressure
+        if self.eval_pressure() == Pressure::Shed {
+            return Err(AdmitError::Overloaded {
+                retry_after_ms: self.retry_after_ms(),
+            });
         }
         let targets = self.healthy_by_load();
         if targets.is_empty() {
@@ -287,6 +557,13 @@ impl ShardRouter {
     /// a no-op — fan-out avoids tracking request→shard ownership, which
     /// work stealing would invalidate anyway.
     pub fn request_cancel(&self, id: RequestId) {
+        {
+            let mut ring = self.recent_cancels.lock().unwrap();
+            if ring.len() == CANCEL_RING_CAPACITY {
+                ring.pop_front();
+            }
+            ring.push_back(id);
+        }
         for s in &self.shards {
             s.router.request_cancel(id);
         }
@@ -344,7 +621,9 @@ impl ShardRouter {
             else {
                 break; // deep queue is all session-affine work
             };
+            let id = r.id;
             thief.router.push_stolen(r);
+            self.reflag_if_cancelled(thief, id);
             self.stolen.fetch_add(1, Ordering::Relaxed);
             moved += 1;
         }
@@ -356,7 +635,9 @@ impl ShardRouter {
     fn admit_evacuated(&self, req: GenRequest) -> Option<usize> {
         let order = self.healthy_by_load();
         let i = *order.first()?;
+        let id = req.id;
         self.shards[i].router.push_stolen(req);
+        self.reflag_if_cancelled(&self.shards[i], id);
         Some(i)
     }
 
@@ -492,9 +773,23 @@ mod tests {
         assert_eq!(sr.shard(0).router.len(), 1);
     }
 
+    /// Admission-controller policy that never degrades or sheds, for
+    /// tests exercising the queue-capacity path in isolation (with the
+    /// default policy, shedding pre-empts `queue_full` for sessionless
+    /// work well before the queues fill).
+    fn no_shed() -> SloPolicy {
+        SloPolicy {
+            degrade_enter: 10.0,
+            degrade_exit: 9.0,
+            shed_enter: 20.0,
+            shed_exit: 19.0,
+            ..SloPolicy::default()
+        }
+    }
+
     #[test]
     fn queue_full_spills_then_sums_capacity() {
-        let sr = ShardRouter::new(2, 2, 128);
+        let sr = ShardRouter::new(2, 2, 128).with_slo(no_shed());
         // fill both shards (capacity 2 each). Least-loaded alternates,
         // and once one queue is full, spilling finds the other.
         for _ in 0..4 {
@@ -586,9 +881,181 @@ mod tests {
         assert!(sr.shard(at).router.remove_queued(id).is_some());
     }
 
+    fn gr(keep: f64) -> GenRequest {
+        let mut r = req();
+        r.mode = Mode::griffin(keep);
+        r
+    }
+
+    #[test]
+    fn staged_admission_downkeeps_then_sheds_then_recovers() {
+        let sr = ShardRouter::new(1, 10, 128);
+        // empty queue: nominal, keep served exactly as requested
+        let (first, _) = sr.admit(gr(0.75)).unwrap();
+        // fill to depth 5 with unprunable work (utilization 0.5)
+        for _ in 0..4 {
+            sr.admit(req()).unwrap();
+        }
+        // pressure crossed degrade_enter: this admission is down-kept,
+        // with the original ask preserved for provenance
+        let (degraded, _) = sr.admit(gr(0.75)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Degrade);
+        // Full-mode work has no keep axis and passes Degrade untouched
+        for _ in 0..3 {
+            sr.admit(req()).unwrap();
+        }
+        // depth 9 of 10: the next admission sees shed-worthy pressure
+        let e = sr.admit(gr(0.9)).unwrap_err();
+        match e {
+            AdmitError::Overloaded { retry_after_ms } => {
+                assert!(retry_after_ms >= 50, "useful backoff hint");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(sr.pressure(), Pressure::Shed);
+        // at Shed even unprunable and score work is refused
+        assert!(matches!(
+            sr.admit(req()),
+            Err(AdmitError::Overloaded { .. })
+        ));
+        assert!(matches!(
+            sr.admit_score(ScoreRequest {
+                id: 0,
+                prompt: vec![1],
+                continuation: vec![2],
+                mode: Mode::Full,
+                admitted_at: std::time::Instant::now(),
+            }),
+            Err(AdmitError::Overloaded { .. })
+        ));
+        // shed never dropped admitted work: everything is still queued
+        let mut drained = Vec::new();
+        while let Some(r) = sr.shard(0).router.steal_newest(|_| true) {
+            drained.push(r);
+        }
+        assert_eq!(drained.len(), 9);
+        let f = drained.iter().find(|r| r.id == first).unwrap();
+        assert_eq!(f.keep_requested, None);
+        assert!(matches!(f.mode, Mode::Griffin { keep, .. }
+                         if (keep - 0.75).abs() < 1e-12));
+        let d = drained.iter().find(|r| r.id == degraded).unwrap();
+        assert_eq!(d.keep_requested, Some(0.75), "audit the client ask");
+        assert!(matches!(d.mode, Mode::Griffin { keep, .. }
+                         if (keep - 0.5).abs() < 1e-12));
+        // queue drained (engine caught up): next admission recovers to
+        // Nominal and serves the full keep again
+        let (rec, _) = sr.admit(gr(0.75)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Nominal);
+        let got = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.id, rec);
+        assert_eq!(got.keep_requested, None, "no residual degradation");
+    }
+
+    #[test]
+    fn pressure_hysteresis_holds_between_thresholds() {
+        let sr = ShardRouter::new(1, 20, 128);
+        for _ in 0..10 {
+            sr.admit(req()).unwrap();
+        }
+        // depth 10/20 = degrade_enter: down-keeping begins
+        let (_, _) = sr.admit(gr(0.8)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Degrade);
+        let got = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.keep_requested, Some(0.8));
+        // drain into the hysteresis band (depth 8 → signal 0.4, between
+        // degrade_exit 0.35 and degrade_enter 0.5): state must hold
+        sr.shard(0).router.steal_newest(|_| true).unwrap();
+        sr.shard(0).router.steal_newest(|_| true).unwrap();
+        let (_, _) = sr.admit(gr(0.8)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Degrade,
+                   "inside the band the dial must not flap");
+        let got = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.keep_requested, Some(0.8), "still down-kept");
+        // drain below degrade_exit (depth 6 → 0.3): recovery
+        sr.shard(0).router.steal_newest(|_| true).unwrap();
+        sr.shard(0).router.steal_newest(|_| true).unwrap();
+        let (_, _) = sr.admit(gr(0.8)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Nominal);
+        let got = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.keep_requested, None);
+    }
+
+    #[test]
+    fn downkeep_never_raises_a_low_keep() {
+        let sr = ShardRouter::new(1, 4, 128);
+        for _ in 0..2 {
+            sr.admit(req()).unwrap(); // depth 2/4 → Degrade next
+        }
+        // a request already at or below the cap is left alone — and
+        // carries no degradation provenance
+        let (id, _) = sr.admit(gr(0.25)).unwrap();
+        assert_eq!(sr.pressure(), Pressure::Degrade);
+        let got = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.id, id);
+        assert_eq!(got.keep_requested, None);
+        assert!(matches!(got.mode, Mode::Griffin { keep, .. }
+                         if (keep - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn cancel_lands_even_after_a_steal_moves_the_request() {
+        let sr = ShardRouter::new(2, 64, 128);
+        // shard 1 busy, so both requests land on shard 0
+        sr.shard(1).publish_load(4, 4);
+        let (_a, at) = sr.admit(req()).unwrap();
+        let (b, _) = sr.admit(req()).unwrap();
+        assert_eq!(at, 0);
+        sr.request_cancel(b);
+        // worst-case interleaving: every shard's tick drains the
+        // fan-out flags while `b` is still queued, THEN the steal moves
+        // it. Pre-fix, the cancel was lost — the thief had already
+        // drained its flag and `b` would run to completion.
+        assert_eq!(sr.shard(0).router.take_cancelled(), vec![b]);
+        assert_eq!(sr.shard(1).router.take_cancelled(), vec![b]);
+        sr.shard(1).publish_load(0, 4);
+        assert!(sr.rebalance() >= 1, "unflagged newest request steals");
+        assert_eq!(sr.shard(1).router.take_cancelled(), vec![b],
+                   "the cancel must follow the request to the thief");
+    }
+
+    #[test]
+    fn cancel_follows_evacuation_from_a_poisoned_shard() {
+        let sr = ShardRouter::new(2, 64, 128);
+        sr.shard(1).publish_load(4, 4);
+        let (id, at) = sr.admit(req()).unwrap();
+        assert_eq!(at, 0);
+        sr.request_cancel(id);
+        // both shards drained their flags before the evacuation
+        sr.shard(0).router.take_cancelled();
+        sr.shard(1).router.take_cancelled();
+        sr.shard(0).poison();
+        assert!(sr.rebalance() >= 1, "stranded request evacuates");
+        assert_eq!(sr.shard(1).router.take_cancelled(), vec![id],
+                   "the cancel must follow the evacuated request");
+    }
+
+    #[test]
+    fn park_and_revive_lifecycle() {
+        let sr = ShardRouter::new(2, 8, 128);
+        let s = sr.shard(0);
+        assert_eq!((s.restarts(), s.is_parked()), (0, false));
+        s.poison();
+        assert!(!s.is_healthy() && !s.is_parked());
+        // respawn: back in placement, restart counted
+        s.revive();
+        assert!(s.is_healthy());
+        assert_eq!(s.restarts(), 1);
+        assert_eq!(sr.place(&req()), Some(0), "revived shard rejoins");
+        // circuit breaker: parked implies poisoned and out of placement
+        s.park();
+        assert!(s.is_parked() && !s.is_healthy());
+        assert_eq!(sr.healthy_count(), 1);
+        assert_eq!(sr.place(&req()), Some(1));
+    }
+
     #[test]
     fn single_shard_degenerates_to_plain_router() {
-        let sr = ShardRouter::new(1, 4, 128);
+        let sr = ShardRouter::new(1, 4, 128).with_slo(no_shed());
         for _ in 0..4 {
             let (_, at) = sr.admit(req()).unwrap();
             assert_eq!(at, 0);

@@ -76,6 +76,13 @@ pub struct SelectionInfo {
     pub strategy: Option<&'static str>,
     /// strategy seed (stochastic strategies only)
     pub seed: Option<u64>,
+    /// the keep fraction the CLIENT asked for, when the SLO-aware
+    /// admission controller down-kept the request under overload
+    /// pressure (None when the request was served at its requested
+    /// keep). Surfaced in the v2 `prune` object as `keep_requested` +
+    /// `degraded:true` so graceful degradation is auditable per
+    /// response.
+    pub keep_requested: Option<f64>,
 }
 
 impl SelectionInfo {
@@ -96,18 +103,29 @@ impl SelectionInfo {
                     Strategy::Sampling { seed }
                     | Strategy::TopKPlusSampling { seed } => Some(*seed),
                 },
+                keep_requested: None,
             }),
             Mode::Magnitude { .. } => Some(SelectionInfo {
                 method: "magnitude",
                 strategy: None,
                 seed: None,
+                keep_requested: None,
             }),
             Mode::Wanda { .. } => Some(SelectionInfo {
                 method: "wanda",
                 strategy: None,
                 seed: None,
+                keep_requested: None,
             }),
         }
+    }
+
+    /// Stamp the client's original keep onto the provenance (the request
+    /// was down-kept at admission; `keep` is what the client asked for).
+    pub fn with_requested_keep(mut self, keep: Option<f64>)
+                               -> SelectionInfo {
+        self.keep_requested = keep;
+        self
     }
 }
 
@@ -157,6 +175,10 @@ mod tests {
         let w =
             SelectionInfo::from_mode(&Mode::Wanda { keep: 0.5 }).unwrap();
         assert_eq!((w.method, w.strategy, w.seed), ("wanda", None, None));
+        assert_eq!(w.keep_requested, None,
+                   "served-as-requested responses carry no degradation");
+        let d = w.with_requested_keep(Some(0.75));
+        assert_eq!(d.keep_requested, Some(0.75));
     }
 
     #[test]

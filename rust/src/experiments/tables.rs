@@ -153,6 +153,7 @@ pub fn table3(args: &Args) -> Result<()> {
                 seed: 1,
                 stop_at_eos: false,
                 session: None,
+                keep_requested: None,
                 admitted_at: std::time::Instant::now(),
             };
             engine.generate(&warm)?;
@@ -167,6 +168,7 @@ pub fn table3(args: &Args) -> Result<()> {
                     seed: 1,
                     stop_at_eos: false,
                     session: None,
+                    keep_requested: None,
                     admitted_at: std::time::Instant::now(),
                 };
                 let resp = engine.generate(&req)?;
@@ -287,6 +289,7 @@ pub fn table4(args: &Args) -> Result<()> {
                     seed: 1,
                     stop_at_eos: false,
                     session: None,
+                    keep_requested: None,
                     admitted_at: std::time::Instant::now(),
                 })
                 .collect();

@@ -112,6 +112,7 @@ fn cmd_generate(args: &cli::Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
         stop_at_eos: true,
         session: None,
+        keep_requested: None,
         admitted_at: std::time::Instant::now(),
     };
     let resp = if args.flag("scan") {

@@ -238,6 +238,13 @@ pub struct MetricsRegistry {
     pub requests_failed: Counter,
     /// requests stopped by an explicit cancel (or client disconnect)
     pub requests_cancelled: Counter,
+    /// requests refused with a retryable `overloaded` error by the
+    /// SLO-aware admission controller's Shed stage
+    pub requests_shed: Counter,
+    /// prunable requests admitted with their keep fraction snapped down
+    /// by the controller's Degrade stage (the degradation is audited in
+    /// the response's `prune.keep_requested` provenance)
+    pub requests_downkept: Counter,
     pub decode_ticks: Counter,
     /// decode ticks served by the fused decode_sample_* path (on-device
     /// sampling; no [B, vocab] logits download)
@@ -301,6 +308,8 @@ impl MetricsRegistry {
         self.requests_rejected.add(other.requests_rejected.get());
         self.requests_failed.add(other.requests_failed.get());
         self.requests_cancelled.add(other.requests_cancelled.get());
+        self.requests_shed.add(other.requests_shed.get());
+        self.requests_downkept.add(other.requests_downkept.get());
         self.decode_ticks.add(other.decode_ticks.get());
         self.fused_decode_ticks.add(other.fused_decode_ticks.get());
         self.fused_admissions.add(other.fused_admissions.get());
@@ -363,6 +372,8 @@ impl MetricsRegistry {
                     ("rejected", n(self.requests_rejected.get() as f64)),
                     ("failed", n(self.requests_failed.get() as f64)),
                     ("cancelled", n(self.requests_cancelled.get() as f64)),
+                    ("shed", n(self.requests_shed.get() as f64)),
+                    ("downkept", n(self.requests_downkept.get() as f64)),
                 ]),
             ),
             (

@@ -39,6 +39,7 @@
 //! semantics so the O(B)-bytes regression tests carry over unchanged.
 
 use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -1238,9 +1239,202 @@ impl Substrate for CpuSession {
     }
 }
 
+// ---------------------------------------------------------------------
+// deterministic fault injection
+// ---------------------------------------------------------------------
+
+/// What an armed [`FaultPlan`] does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// return an error from the dispatch — exercises the scheduler's
+    /// per-request/per-batch containment (`fail_all_slots` /
+    /// `fail_admission`): the request dies, the serve loop survives
+    Error,
+    /// panic out of the dispatch — unwinds through `Scheduler::tick`
+    /// and the shard serve loop into the supervisor's `catch_unwind`;
+    /// this is the "shard crash" of the robustness tests
+    Panic,
+}
+
+/// Deterministic fault injection for the CPU substrate: fire once on
+/// the `nth` (1-based) dispatch of an executable whose name starts
+/// with `prefix`, counted across `run` and `run_prepared`. One-shot —
+/// after firing the plan is inert, so a respawned engine sharing the
+/// same `Arc<FaultPlan>` (an [`crate::server::EngineFactory`] closure
+/// keeps it across respawns) comes up clean, which makes
+/// crash→respawn→serve sequences reproducible in tests and the load
+/// harness.
+pub struct FaultPlan {
+    prefix: String,
+    nth: u64,
+    kind: FaultKind,
+    hits: AtomicU64,
+    fired: AtomicBool,
+}
+
+impl FaultPlan {
+    pub fn new(prefix: &str, nth: u64, kind: FaultKind)
+               -> Arc<FaultPlan> {
+        assert!(nth >= 1, "nth is 1-based");
+        Arc::new(FaultPlan {
+            prefix: prefix.to_string(),
+            nth,
+            kind,
+            hits: AtomicU64::new(0),
+            fired: AtomicBool::new(false),
+        })
+    }
+
+    /// Whether the fault has fired — tests poll this to sequence their
+    /// phases (e.g. "wait until the crash landed, then check health").
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Matching dispatches observed so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    fn check(&self, name: &str) -> Result<()> {
+        if self.fired.load(Ordering::SeqCst)
+            || !name.starts_with(&self.prefix)
+        {
+            return Ok(());
+        }
+        let hit = self.hits.fetch_add(1, Ordering::SeqCst) + 1;
+        if hit != self.nth {
+            return Ok(());
+        }
+        self.fired.store(true, Ordering::SeqCst);
+        match self.kind {
+            FaultKind::Error => {
+                bail!("injected fault: {name} dispatch #{hit}")
+            }
+            FaultKind::Panic => {
+                panic!("injected fault: {name} dispatch #{hit}")
+            }
+        }
+    }
+}
+
+/// A [`CpuSession`] wrapped with a [`FaultPlan`]: every executable
+/// dispatch consults the plan first, everything else delegates
+/// unchanged. Build an engine over it with
+/// `Engine::from_substrate(Box::new(FaultySession::new(session, plan)),
+/// false)`.
+pub struct FaultySession {
+    inner: CpuSession,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultySession {
+    pub fn new(inner: CpuSession, plan: Arc<FaultPlan>)
+               -> FaultySession {
+        FaultySession { inner, plan }
+    }
+}
+
+impl Substrate for FaultySession {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn metrics(&self) -> &Arc<MetricsRegistry> {
+        self.inner.metrics()
+    }
+
+    fn upload_f32(&self, shape: &[usize], data: &[f32])
+                  -> Result<DeviceTensor> {
+        self.inner.upload_f32(shape, data)
+    }
+
+    fn upload_i32(&self, shape: &[usize], data: &[i32])
+                  -> Result<DeviceTensor> {
+        self.inner.upload_i32(shape, data)
+    }
+
+    fn upload_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
+        self.inner.upload_tensor(t)
+    }
+
+    fn run(&self, name: &str, args: &[&DeviceTensor])
+           -> Result<Vec<DeviceTensor>> {
+        self.plan.check(name)?;
+        self.inner.run(name, args)
+    }
+
+    fn prepare(&self, name: &str, static_args: Vec<Rc<DeviceTensor>>)
+               -> Result<DispatchPlan> {
+        self.inner.prepare(name, static_args)
+    }
+
+    fn run_prepared(&self, dplan: &DispatchPlan,
+                    dynamic: &[&DeviceTensor])
+                    -> Result<Vec<DeviceTensor>> {
+        self.plan.check(&dplan.name)?;
+        self.inner.run_prepared(dplan, dynamic)
+    }
+
+    fn load_host_weights(&self, trained: bool) -> Result<TensorMap> {
+        self.inner.load_host_weights(trained)
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        self.inner.compile(name)
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.inner.compiled_count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fault_plan_is_deterministic_and_one_shot() {
+        let p = FaultPlan::new("decode", 2, FaultKind::Error);
+        assert!(p.check("prefill_b1_s16").is_ok(),
+                "non-matching names never count");
+        assert!(p.check("decode_b1").is_ok(), "first hit passes");
+        assert!(p.check("decode_pruned_b1_k8").is_err(),
+                "second matching dispatch fires");
+        assert!(p.has_fired());
+        assert_eq!(p.hits(), 2);
+        assert!(p.check("decode_b1").is_ok(),
+                "one-shot: inert after firing");
+        assert_eq!(p.hits(), 2, "inert plans stop counting");
+    }
+
+    #[test]
+    fn fault_plan_panic_kind_unwinds() {
+        let p = FaultPlan::new("decode", 1, FaultKind::Panic);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| p.check("decode_b1")));
+        assert!(r.is_err(), "Panic kind must unwind, not return Err");
+        assert!(p.has_fired());
+        assert!(p.check("decode_b1").is_ok(), "inert after the panic");
+    }
+
+    #[test]
+    fn faulty_session_delegates_until_armed_dispatch() {
+        let plan = FaultPlan::new("gather", 1, FaultKind::Error);
+        let s = FaultySession::new(CpuSession::new(), plan.clone());
+        // non-matching dispatch flows through to the interpreter
+        assert!(s.compile("decode_b1").is_ok());
+        assert_eq!(s.manifest().executables.contains_key("decode_b1"),
+                   true);
+        // a matching dispatch fires without reaching the interpreter
+        // (no args needed: the fault check precedes arg validation)
+        let e = s.run("gather_k8", &[]).unwrap_err();
+        assert!(e.to_string().contains("injected fault"), "{e}");
+        // fired → the same dispatch now fails on MISSING ARGS instead,
+        // proving delegation resumed
+        let e = s.run("gather_k8", &[]).unwrap_err();
+        assert!(!e.to_string().contains("injected fault"), "{e}");
+    }
 
     #[test]
     fn manifest_is_well_formed() {

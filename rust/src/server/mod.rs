@@ -39,12 +39,22 @@
 //! Validation happens at admission: unknown methods, `keep` outside
 //! (0,1], negative temperature, and `top_p` outside (0,1] are rejected
 //! with {"op":"error","code":"invalid_request",...} before the request
-//! reaches an engine thread. Engine faults are contained per request —
-//! a failing request gets {"op":"error","code":"engine_error","id":N}
-//! and its co-tenants keep streaming. A failing SHARD is contained the
-//! same way one level up: its requests are retired with `engine_error`,
-//! the shard is poisoned (skipped by placement), and the rest of the
-//! fleet keeps serving.
+//! reaches an engine thread. Under overload, admission itself degrades
+//! in stages (down-keep, then shed with a retryable
+//! {"op":"error","code":"overloaded","retry_after_ms":N}) — the staged
+//! controller lives in [`crate::coordinator::shard`]. Engine faults are
+//! contained per request — a failing request gets
+//! {"op":"error","code":"engine_error","id":N} and its co-tenants keep
+//! streaming. A failing SHARD is contained the same way one level up:
+//! its requests are retired with `engine_error`, the shard is poisoned
+//! (skipped by placement), and the rest of the fleet keeps serving.
+//! Each shard thread is a SUPERVISOR: a crashed incarnation (serve-loop
+//! error or panic) is rebuilt via the engine factory with capped
+//! exponential backoff, and the revived shard rejoins placement and
+//! stealing; repeated crashes inside a window trip a circuit breaker
+//! and park the shard permanently. When every shard is dead or parked,
+//! work-bearing requests get {"op":"error","code":"unavailable"} and
+//! `health` reports `down`.
 //!
 //! Streaming (`"stream":true`, single prompt): the connection receives
 //! a v2 `accepted` event naming the server-assigned id (so `cancel` can
@@ -74,18 +84,19 @@
 //! auto-cancelled, so the waiters map cannot leak and abandoned requests
 //! stop burning decode ticks.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::api::{self, ApiError, ErrorCode, Request};
 use crate::coordinator::engine::Engine;
+use crate::coordinator::router::AdmitError;
 use crate::coordinator::scheduler::{EngineEvent, Scheduler};
 use crate::coordinator::sequence::GenRequest;
 use crate::coordinator::shard::{Shard, ShardRouter};
@@ -352,11 +363,30 @@ pub fn start_sharded(factory: EngineFactory, n_shards: usize, bind: &str,
     })
 }
 
-/// One shard's engine thread: build the engine, publish metrics + load,
-/// then run the serve loop over the shard's own queue. Containment
-/// boundary: any failure — construction or a serve-loop invariant —
-/// poisons THIS shard, retires THIS shard's requests with
-/// `engine_error`, and returns; the other shards never notice.
+/// Supervisor backoff/breaker parameters: the first respawn comes after
+/// `BACKOFF_BASE_MS`, each subsequent one doubles up to
+/// `BACKOFF_CAP_MS`; `BREAKER_MAX_FAILURES` crashes inside
+/// `BREAKER_WINDOW` park the shard permanently.
+const BACKOFF_BASE_MS: u64 = 25;
+const BACKOFF_CAP_MS: u64 = 1_000;
+const BREAKER_MAX_FAILURES: usize = 4;
+const BREAKER_WINDOW: Duration = Duration::from_secs(30);
+
+/// One shard's SUPERVISOR thread. Each incarnation builds an engine via
+/// the factory (on this thread — engines are not `Send`) and runs the
+/// serve loop under `catch_unwind`. Containment boundary: any failure —
+/// construction, a serve-loop invariant error, or a panic unwinding out
+/// of a tick — poisons THIS shard, retires THIS shard's in-flight and
+/// queued requests with `engine_error`, and never touches the other
+/// shards. The supervisor then respawns the engine with capped
+/// exponential backoff and revives the shard (it rejoins placement and
+/// stealing, `restarts` bumps, the incarnation clock restarts); if
+/// `BREAKER_MAX_FAILURES` crashes land inside `BREAKER_WINDOW` the
+/// circuit breaker parks the shard instead and the thread exits.
+///
+/// Each incarnation publishes a FRESH metrics registry (the engine owns
+/// its registry), so per-shard counters reset on respawn; the fleet
+/// rollup only ever sums live registries.
 fn shard_thread(
     i: usize,
     shard: Arc<Shard>,
@@ -365,73 +395,188 @@ fn shard_thread(
     stop: Arc<AtomicBool>,
     ready_tx: Sender<Result<String, String>>,
 ) {
-    let engine = match factory(i) {
-        Ok(e) => e,
-        Err(e) => {
-            shard.poison();
-            let msg = format!("engine shard {i} failed to start: {e:#}");
-            let _ = ready_tx.send(Err(msg.clone()));
-            drain_poisoned(&shard, &waiters, &msg);
+    // fires once, on the FIRST attempt — start_sharded only waits for
+    // initial fleet settlement; respawns are invisible to it
+    let mut ready_tx = Some(ready_tx);
+    let mut failures: VecDeque<Instant> = VecDeque::new();
+    let mut backoff = Duration::from_millis(BACKOFF_BASE_MS);
+    loop {
+        if stop.load(Ordering::SeqCst) {
             return;
         }
-    };
-    shard.publish_metrics(engine.metrics.clone());
-    let config_json = config_line(&engine);
-    let mut sched = Scheduler::new(engine, shard.router.clone());
-    shard.publish_load(0, sched.slot_count as u64);
-    let _ = ready_tx.send(Ok(config_json));
-    // ids this shard currently owns in its slot pool (first token seen,
-    // not yet terminal) — admission emits the first token immediately,
-    // so every slotted request is in here. If the loop dies these are
-    // the waiters nobody else would ever answer.
-    let mut live: HashSet<u64> = HashSet::new();
-    let served = loop {
-        if stop.load(Ordering::SeqCst) {
-            break Ok(());
+        let engine = match factory(i) {
+            Ok(e) => e,
+            Err(e) => {
+                shard.poison();
+                let msg =
+                    format!("engine shard {i} failed to start: {e:#}");
+                if let Some(tx) = ready_tx.take() {
+                    let _ = tx.send(Err(msg.clone()));
+                } else {
+                    eprintln!("warning: {msg}");
+                }
+                drain_poisoned(&shard, &waiters, &msg);
+                if !note_failure(&shard, i, &mut failures) {
+                    return; // parked
+                }
+                if !sleep_backoff(&stop, &mut backoff) {
+                    return; // shutting down
+                }
+                continue;
+            }
+        };
+        shard.publish_metrics(engine.metrics.clone());
+        let config_json = config_line(&engine);
+        let mut sched = Scheduler::new(engine, shard.router.clone());
+        let slot_count = sched.slot_count as u64;
+        if !shard.is_healthy() {
+            // respawn: only rejoin placement once the new engine exists
+            shard.revive();
         }
-        let ticked = sched.tick(&mut |ev| {
-            match &ev {
-                EngineEvent::Token { id, .. } => {
-                    live.insert(*id);
+        shard.publish_load(0, slot_count);
+        if let Some(tx) = ready_tx.take() {
+            let _ = tx.send(Ok(config_json));
+        }
+        // ids this shard currently owns in its slot pool (first token
+        // seen, not yet terminal) — admission emits the first token
+        // immediately, so every slotted request is in here. If the
+        // incarnation dies these are the waiters nobody else would ever
+        // answer. Shared with the supervisor through an Arc so a panic
+        // cannot take the set down with the serve loop.
+        let live: Arc<Mutex<HashSet<u64>>> =
+            Arc::new(Mutex::new(HashSet::new()));
+        let started = Instant::now();
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break Ok(());
+                    }
+                    let ticked = sched.tick(&mut |ev| {
+                        {
+                            let mut live = live.lock().unwrap();
+                            match &ev {
+                                EngineEvent::Token { id, .. } => {
+                                    live.insert(*id);
+                                }
+                                EngineEvent::Done(r) => {
+                                    live.remove(&r.id);
+                                }
+                                EngineEvent::Error { id, .. }
+                                | EngineEvent::ScoreDone { id, .. } => {
+                                    live.remove(id);
+                                }
+                            }
+                        }
+                        forward(&waiters, ev);
+                    });
+                    match ticked {
+                        Ok(worked) => {
+                            // heartbeat for the placement side
+                            // (least-loaded + work stealing read this)
+                            shard.publish_load(
+                                sched.occupied() as u64, slot_count);
+                            if !worked {
+                                shard.router.wait_nonempty(
+                                    Duration::from_millis(250));
+                            }
+                        }
+                        Err(e) => break Err(e),
+                    }
                 }
-                EngineEvent::Done(r) => {
-                    live.remove(&r.id);
+            }),
+        );
+        let served: std::result::Result<(), String> = match outcome {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(p) => Err(panic_message(p)),
+        };
+        match served {
+            Ok(()) => {
+                // clean stop
+                shard.publish_load(0, slot_count);
+                return;
+            }
+            Err(e) => {
+                shard.poison();
+                shard.publish_load(0, 0);
+                let msg = format!("engine shard {i} died: {e}");
+                eprintln!("warning: {msg}");
+                let drained: Vec<u64> =
+                    live.lock().unwrap().drain().collect();
+                for id in drained {
+                    forward(&waiters, EngineEvent::Error {
+                        id,
+                        code: ErrorCode::EngineError,
+                        message: msg.clone(),
+                    });
                 }
-                EngineEvent::Error { id, .. }
-                | EngineEvent::ScoreDone { id, .. } => {
-                    live.remove(id);
+                drain_poisoned(&shard, &waiters, &msg);
+                if started.elapsed() > BREAKER_WINDOW {
+                    // a long-lived incarnation earns a fresh backoff
+                    backoff = Duration::from_millis(BACKOFF_BASE_MS);
+                }
+                if !note_failure(&shard, i, &mut failures) {
+                    return; // parked
+                }
+                if !sleep_backoff(&stop, &mut backoff) {
+                    return; // shutting down
                 }
             }
-            forward(&waiters, ev);
-        });
-        match ticked {
-            Ok(worked) => {
-                // heartbeat for the placement side (least-loaded +
-                // work stealing read this)
-                shard.publish_load(
-                    sched.occupied() as u64, sched.slot_count as u64);
-                if !worked {
-                    shard.router.wait_nonempty(Duration::from_millis(250));
-                }
-            }
-            Err(e) => break Err(e),
         }
-    };
-    if let Err(e) = served {
-        shard.poison();
-        shard.publish_load(0, 0);
-        let msg = format!("engine shard {i} died: {e:#}");
-        for id in live.drain() {
-            forward(&waiters, EngineEvent::Error {
-                id,
-                code: ErrorCode::EngineError,
-                message: msg.clone(),
-            });
-        }
-        drain_poisoned(&shard, &waiters, &msg);
-    } else {
-        shard.publish_load(0, sched.slot_count as u64);
     }
+}
+
+/// Render a caught panic payload for the shard-death message.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("panicked: {s}")
+    } else {
+        "panicked".to_string()
+    }
+}
+
+/// Record a crash in the supervisor's failure window. Returns false —
+/// and PARKS the shard — when the circuit breaker trips.
+fn note_failure(shard: &Shard, i: usize,
+                failures: &mut VecDeque<Instant>) -> bool {
+    let now = Instant::now();
+    failures.push_back(now);
+    while let Some(&t) = failures.front() {
+        if now.duration_since(t) > BREAKER_WINDOW {
+            failures.pop_front();
+        } else {
+            break;
+        }
+    }
+    if failures.len() >= BREAKER_MAX_FAILURES {
+        shard.park();
+        eprintln!(
+            "warning: engine shard {i} crashed {} times within {:?}; \
+             parked (circuit breaker — no further respawns)",
+            failures.len(),
+            BREAKER_WINDOW
+        );
+        return false;
+    }
+    true
+}
+
+/// Sleep out the current backoff (doubling it, capped) while polling
+/// `stop` so shutdown is never delayed by a pending respawn. Returns
+/// false when the fleet is stopping.
+fn sleep_backoff(stop: &AtomicBool, backoff: &mut Duration) -> bool {
+    let deadline = Instant::now() + *backoff;
+    *backoff = (*backoff * 2).min(Duration::from_millis(BACKOFF_CAP_MS));
+    while Instant::now() < deadline {
+        if stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    !stop.load(Ordering::SeqCst)
 }
 
 /// Retire everything still queued on a poisoned shard with
@@ -577,6 +722,10 @@ fn handle_conn(
 /// Fleet health: per-shard slots/queue/health plus the summed rollup.
 /// Slot gauges come from each shard's published metrics registry (the
 /// scheduler maintains them); a still-booting shard reads as 0/0.
+/// Per-shard supervision state rides along: `restarts` (engine
+/// respawns), `since_secs` (current incarnation's uptime), and `parked`
+/// (circuit breaker tripped — status `parked`, never respawned again),
+/// so operators can tell "respawning" from "gave up".
 fn fleet_health_json(shards: &ShardRouter) -> String {
     let mut busy = 0u64;
     let mut total = 0u64;
@@ -588,12 +737,19 @@ fn fleet_health_json(shards: &ShardRouter) -> String {
             .unwrap_or((0, 0));
         busy += b;
         total += t;
+        let status = if sh.is_parked() {
+            "parked"
+        } else if sh.is_healthy() {
+            "ok"
+        } else {
+            "poisoned"
+        };
         entries.push(obj(vec![
             ("shard", n(sh.index as f64)),
-            (
-                "status",
-                s(if sh.is_healthy() { "ok" } else { "poisoned" }),
-            ),
+            ("status", s(status)),
+            ("restarts", n(sh.restarts() as f64)),
+            ("since_secs", n(sh.uptime_secs() as f64)),
+            ("parked", Value::Bool(sh.is_parked())),
             (
                 "slots",
                 obj(vec![("busy", n(b as f64)), ("total", n(t as f64))]),
@@ -725,6 +881,9 @@ fn handle_generate(
                 waiters.lock().unwrap().remove(&id);
                 if let Some(m) = reject_metrics(shards) {
                     m.requests_rejected.inc();
+                    if matches!(e, AdmitError::Overloaded { .. }) {
+                        m.requests_shed.inc();
+                    }
                 }
                 let err = ApiError::from(&e);
                 if batched {
@@ -873,6 +1032,9 @@ fn handle_score(
             waiters.lock().unwrap().remove(&id);
             if let Some(m) = reject_metrics(shards) {
                 m.requests_rejected.inc();
+                if matches!(e, AdmitError::Overloaded { .. }) {
+                    m.requests_shed.inc();
+                }
             }
             return send(
                 writer, &api::error_json(&ApiError::from(&e), None, true));
@@ -1106,6 +1268,12 @@ mod tests {
         assert_eq!(entries.len(), 3);
         assert_eq!(entries[2].get("status").unwrap().as_str(),
                    Some("poisoned"));
+        assert_eq!(entries[2].get("parked").unwrap().as_bool(),
+                   Some(false),
+                   "poisoned-but-not-parked: supervisor still trying");
+        assert_eq!(entries[0].get("restarts").unwrap().as_usize(),
+                   Some(0));
+        assert!(entries[0].get("since_secs").is_some());
         assert_eq!(
             h.get("queue").unwrap().get("capacity").unwrap().as_usize(),
             Some(24),
@@ -1137,5 +1305,35 @@ mod tests {
                 "published shard carries its snapshot");
         assert!(per[1].get("metrics").is_none(),
                 "booting shard has no snapshot yet");
+    }
+
+    #[test]
+    fn health_reports_down_and_parked_states() {
+        let sr = Arc::new(ShardRouter::new(2, 8, 64));
+        sr.shard(0).park();
+        sr.shard(1).poison();
+        let h = json::parse(&fleet_health_json(&sr)).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("down"),
+                   "no live shard: the fleet is down, not degraded");
+        let Some(Value::Arr(entries)) = h.get("shards") else {
+            panic!("per-shard health breakdown");
+        };
+        assert_eq!(entries[0].get("status").unwrap().as_str(),
+                   Some("parked"));
+        assert_eq!(entries[0].get("parked").unwrap().as_bool(),
+                   Some(true));
+        assert_eq!(entries[1].get("status").unwrap().as_str(),
+                   Some("poisoned"));
+        // a revived shard reads ok again and counts its restart
+        sr.shard(1).revive();
+        let h = json::parse(&fleet_health_json(&sr)).unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"));
+        let Some(Value::Arr(entries)) = h.get("shards") else {
+            panic!("per-shard health breakdown");
+        };
+        assert_eq!(entries[1].get("status").unwrap().as_str(),
+                   Some("ok"));
+        assert_eq!(entries[1].get("restarts").unwrap().as_usize(),
+                   Some(1));
     }
 }

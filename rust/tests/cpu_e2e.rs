@@ -1340,9 +1340,10 @@ fn stolen_work_is_served_by_the_thief_shard() {
 
 #[test]
 fn poisoned_shard_degrades_not_kills_the_fleet() {
-    // Shard 1's engine factory fails: the fleet starts degraded, the
-    // dead shard is visible in health/metrics, and BOTH sessionless
-    // and affine-to-the-dead-home requests are still served.
+    // Shard 1's engine factory fails permanently: the fleet starts
+    // degraded, the supervisor's respawn attempts all fail so the
+    // circuit breaker PARKS the shard, and BOTH sessionless and
+    // affine-to-the-dead-home requests are still served.
     let factory: griffin::server::EngineFactory =
         std::sync::Arc::new(|i| {
             if i == 1 {
@@ -1358,14 +1359,34 @@ fn poisoned_shard_degrades_not_kills_the_fleet() {
     use griffin::json::{n, obj, s, Value};
     let mut c = griffin::server::Client::connect(&addr).unwrap();
 
-    let h = c.health().unwrap();
-    assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"));
-    let Some(Value::Arr(hshards)) = h.get("shards") else {
-        panic!("health carries a per-shard breakdown");
-    };
-    assert_eq!(hshards[1].get("status").unwrap().as_str(),
-               Some("poisoned"));
-    assert_eq!(hshards[0].get("status").unwrap().as_str(), Some("ok"));
+    // the breaker trips within a few backoff rounds; poll until the
+    // shard lands in its terminal parked state
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let h = c.health().unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"),
+                   "one dead shard of four is degraded, never down");
+        let Some(Value::Arr(hshards)) = h.get("shards") else {
+            panic!("health carries a per-shard breakdown");
+        };
+        assert_eq!(hshards[0].get("status").unwrap().as_str(),
+                   Some("ok"));
+        let s1 = hshards[1].get("status").unwrap().as_str().unwrap();
+        if s1 == "parked" {
+            assert_eq!(hshards[1].get("parked").unwrap().as_bool(),
+                       Some(true));
+            assert_eq!(hshards[1].get("restarts").unwrap().as_usize(),
+                       Some(0),
+                       "a shard that never came up has no restarts");
+            break;
+        }
+        assert_eq!(s1, "poisoned",
+                   "between retries the shard reads poisoned");
+        assert!(std::time::Instant::now() < deadline,
+                "breaker never parked the permanently failing shard");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
 
     // a session whose home hashes to the dead shard is re-placed
     let key = (0..)
@@ -1407,6 +1428,313 @@ fn poisoned_shard_degrades_not_kills_the_fleet() {
                    .as_usize(),
                Some(4));
     handle.shutdown();
+}
+
+#[test]
+fn crashed_shard_drains_respawns_and_rejoins_placement() {
+    // Supervision tentpole, end to end: a panic injected mid-decode on
+    // shard 0 (FaultPlan over the CPU substrate) drains that shard's
+    // in-flight request as engine_error, leaves the fleet degraded
+    // while the supervisor rebuilds, then the shard respawns with a
+    // bumped restart count, rejoins placement, and serves an affine
+    // request for the same session again.
+    use griffin::runtime::cpu::{FaultKind, FaultPlan};
+    let plan = FaultPlan::new("decode", 3, FaultKind::Panic);
+    let factory: griffin::server::EngineFactory = {
+        let plan = plan.clone();
+        std::sync::Arc::new(move |i| {
+            if i != 0 {
+                return Engine::cpu_reference();
+            }
+            if plan.has_fired() {
+                // the respawn: hold the shard down long enough that the
+                // client deterministically observes the degraded window
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                return Engine::cpu_reference();
+            }
+            Engine::from_substrate(
+                Box::new(cpu::FaultySession::new(
+                    CpuSession::new(), plan.clone())),
+                false,
+            )
+        })
+    };
+    let handle = griffin::server::start_sharded(
+        factory, 2, "127.0.0.1:0", 16, 64).unwrap();
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    // a session whose home is the armed shard
+    let key = (0..)
+        .map(|i| format!("s{i}"))
+        .find(|k| handle.shards.home_shard(k) == 0)
+        .unwrap();
+
+    // stream an affine request into shard 0; the third decode dispatch
+    // panics mid-stream
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+    c.send(&obj(vec![
+        ("v", n(2.0)),
+        ("op", s("generate")),
+        ("prompt", s("about to crash")),
+        ("session", s(&key)),
+        ("max_new_tokens", n(32.0)),
+        ("stop_at_eos", Value::Bool(false)),
+        ("stream", Value::Bool(true)),
+    ]))
+    .unwrap();
+    let acc = c.recv().unwrap();
+    assert_eq!(acc.get("event").unwrap().as_str(), Some("accepted"));
+    let err = loop {
+        let ev = c.recv().unwrap();
+        if ev.get("event").and_then(Value::as_str) == Some("token") {
+            continue;
+        }
+        break ev;
+    };
+    assert_eq!(err.get("code").unwrap().as_str(), Some("engine_error"),
+               "in-flight work drains with a structured error: {err:?}");
+    assert!(plan.has_fired(), "the injected fault fired");
+
+    // the drain precedes the backoff sleep and the (slowed) rebuild, so
+    // this health check lands inside the degraded window
+    let mut c2 = griffin::server::Client::connect(&addr).unwrap();
+    let h = c2.health().unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("degraded"),
+               "fleet reports degraded while the shard rebuilds: {h:?}");
+    let Some(Value::Arr(hshards)) = h.get("shards") else {
+        panic!("health carries a per-shard breakdown");
+    };
+    assert_eq!(hshards[0].get("status").unwrap().as_str(),
+               Some("poisoned"));
+    assert_eq!(hshards[0].get("parked").unwrap().as_bool(),
+               Some(false), "a respawning shard is not parked");
+    assert_eq!(hshards[1].get("status").unwrap().as_str(), Some("ok"),
+               "the crash never touches the healthy shard");
+
+    // poll until the supervisor revives the shard
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let h = c2.health().unwrap();
+        let Some(Value::Arr(hshards)) = h.get("shards") else {
+            panic!("health carries a per-shard breakdown");
+        };
+        if hshards[0].get("status").unwrap().as_str() == Some("ok") {
+            assert!(
+                hshards[0].get("restarts").unwrap().as_usize().unwrap()
+                    >= 1,
+                "revival bumps the restart counter"
+            );
+            assert_eq!(h.get("status").unwrap().as_str(), Some("ok"),
+                       "the fleet is whole again after the respawn");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline,
+                "shard 0 never respawned: {h:?}");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+
+    // the respawned shard is back in placement: the same session homes
+    // to it and is served by its fresh incarnation
+    let r = c2
+        .call(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("generate")),
+            ("prompt", s("after the respawn")),
+            ("session", s(&key)),
+            ("max_new_tokens", n(3.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("op").unwrap().as_str(), Some("generate"),
+               "the respawned shard serves affine work again: {r:?}");
+    let m = c2
+        .call(&obj(vec![("v", n(2.0)), ("op", s("metrics"))]))
+        .unwrap();
+    let Some(Value::Arr(mshards)) = m.get("shards") else {
+        panic!("metrics carries a per-shard breakdown");
+    };
+    let admitted0 = mshards[0]
+        .get("metrics")
+        .and_then(|mm| mm.get("requests"))
+        .and_then(|r| r.get("admitted"))
+        .and_then(|v| v.as_usize())
+        .unwrap();
+    assert_eq!(admitted0, 1,
+               "the new incarnation publishes a fresh registry and \
+                homed the affine request");
+    handle.shutdown();
+}
+
+#[test]
+fn all_shards_parked_reports_down_and_unavailable() {
+    // Satellite: when every shard is dead the fleet reports `down` and
+    // admission fails CLOSED with the typed retryable `unavailable`
+    // error — never `queue_full`. Both shards crash on their first
+    // decode dispatch and their factories refuse to rebuild, so the
+    // breaker parks them one after the other.
+    use griffin::runtime::cpu::{FaultKind, FaultPlan};
+    let plans: Vec<std::sync::Arc<FaultPlan>> = (0..2)
+        .map(|_| FaultPlan::new("decode", 1, FaultKind::Panic))
+        .collect();
+    let factory: griffin::server::EngineFactory = {
+        let plans = plans.clone();
+        std::sync::Arc::new(move |i| {
+            if plans[i].has_fired() {
+                anyhow::bail!("shard {i} stays down");
+            }
+            Engine::from_substrate(
+                Box::new(cpu::FaultySession::new(
+                    CpuSession::new(), plans[i].clone())),
+                false,
+            )
+        })
+    };
+    let handle = griffin::server::start_sharded(
+        factory, 2, "127.0.0.1:0", 16, 64).unwrap();
+    let addr = handle.addr.to_string();
+    use griffin::json::{n, obj, s, Value};
+    let mut c = griffin::server::Client::connect(&addr).unwrap();
+    // one affine request per home shard trips both mines
+    for shard in 0..2usize {
+        let key = (0..)
+            .map(|i| format!("s{i}"))
+            .find(|k| handle.shards.home_shard(k) == shard)
+            .unwrap();
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("trip the mine")),
+                ("session", s(&key)),
+                ("max_new_tokens", n(8.0)),
+                ("stop_at_eos", Value::Bool(false)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("code").unwrap().as_str(), Some("engine_error"),
+                   "the crashing shard drains its request: {r:?}");
+    }
+    // both breakers trip within a few backoff rounds
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let h = c.health().unwrap();
+        if h.get("status").unwrap().as_str() == Some("down") {
+            let Some(Value::Arr(hshards)) = h.get("shards") else {
+                panic!("health carries a per-shard breakdown");
+            };
+            for sh in hshards {
+                assert_eq!(sh.get("status").unwrap().as_str(),
+                           Some("parked"));
+                assert_eq!(sh.get("parked").unwrap().as_bool(),
+                           Some(true));
+            }
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline,
+                "fleet never went down: {h:?}");
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    // admission on a dead fleet: typed outage, not backpressure
+    let r = c
+        .call(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("generate")),
+            ("prompt", s("anyone home")),
+            ("max_new_tokens", n(2.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("op").unwrap().as_str(), Some("error"));
+    assert_eq!(r.get("code").unwrap().as_str(), Some("unavailable"),
+               "a dead fleet must not masquerade as queue_full: {r:?}");
+    // scores fail the same way
+    let sc = c
+        .call(&obj(vec![
+            ("v", n(2.0)),
+            ("op", s("score")),
+            ("prompt", s("a quiet river")),
+            ("continuation", s(" joins")),
+        ]))
+        .unwrap();
+    assert_eq!(sc.get("code").unwrap().as_str(), Some("unavailable"));
+    handle.shutdown();
+}
+
+#[test]
+fn admission_downkeeps_before_shedding_and_recovers() {
+    // Overload tentpole, end to end against a real engine: staged
+    // admission must (1) leave prunable requests untouched under
+    // nominal pressure, (2) down-keep them — with auditable provenance
+    // in the response — once pressure crosses degrade_enter, (3) shed
+    // with the typed retryable `overloaded` error past shed_enter, and
+    // (4) return to untouched admissions once the backlog drains.
+    use griffin::api::ApiError;
+    use griffin::coordinator::router::AdmitError;
+    use griffin::coordinator::shard::{Pressure, ShardRouter};
+    // 1 shard, queue capacity 16, default SLO policy: with no slots
+    // published the pressure signal is queued/16 — Degrade from the
+    // 9th admission (sees 8/16 = 0.50), Shed from the 15th (14/16).
+    let sr = ShardRouter::new(1, 16, 64);
+    let mk = |keep: Option<f64>| {
+        let mode = match keep {
+            Some(k) => Mode::griffin(k),
+            None => Mode::Full,
+        };
+        let mut r = GenRequest::greedy(0, prompt_ids(8), 2, mode);
+        r.stop_at_eos = false;
+        r
+    };
+    // stage 1: nominal — a prunable request is untouched
+    let (nominal_id, _) = sr.admit(mk(Some(0.75))).unwrap();
+    for _ in 0..7 {
+        sr.admit(mk(None)).unwrap();
+    }
+    assert_eq!(sr.pressure(), Pressure::Nominal);
+    // stage 2: the 9th admission crosses degrade_enter — down-kept,
+    // NOT shed
+    let (degraded_id, _) = sr.admit(mk(Some(0.75))).unwrap();
+    assert_eq!(sr.pressure(), Pressure::Degrade);
+    // the degrade band keeps admitting non-prunable work untouched
+    for _ in 0..5 {
+        sr.admit(mk(None)).unwrap();
+    }
+    // stage 3: the 15th admission sees 14 queued — typed shed
+    let err = sr.admit(mk(Some(0.75))).unwrap_err();
+    assert_eq!(err.code(), "overloaded");
+    assert_eq!(sr.pressure(), Pressure::Shed);
+    let AdmitError::Overloaded { retry_after_ms } = err else {
+        panic!("expected a typed shed, got {err}");
+    };
+    assert!((50..=2_000).contains(&retry_after_ms),
+            "retry hint scales with queue depth: {retry_after_ms}");
+    // the api mapping carries the hint out to the wire layer
+    let api = ApiError::from(&AdmitError::Overloaded { retry_after_ms });
+    assert_eq!(api.code, ErrorCode::Overloaded);
+    assert_eq!(api.retry_after_ms, Some(retry_after_ms));
+
+    // drain the backlog through a real engine: the down-kept request
+    // serves at the degraded keep and carries its provenance
+    let mut sched = Scheduler::new(engine(), sr.shard(0).router.clone());
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 14);
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+    let deg = by_id(degraded_id);
+    let sel = deg.selection.as_ref().unwrap();
+    assert_eq!(sel.keep_requested, Some(0.75),
+               "degraded responses audit the client's requested keep");
+    assert!(deg.k_used.is_some(), "the request still served pruned");
+    let nom = by_id(nominal_id);
+    assert_eq!(nom.selection.as_ref().unwrap().keep_requested, None,
+               "nominal admissions carry no degradation provenance");
+
+    // stage 4: recovery — the queue drained, so the next prunable
+    // admission flows through untouched
+    let (late_id, _) = sr.admit(mk(Some(0.75))).unwrap();
+    assert_eq!(sr.pressure(), Pressure::Nominal);
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].id, late_id);
+    assert_eq!(responses[0].selection.as_ref().unwrap().keep_requested,
+               None, "no down-keep once pressure drops");
 }
 
 #[test]
