@@ -40,6 +40,10 @@ I32 = "i32"
 GEN_BUCKETS = {"tiny": [16, 64, 128], "small": [16, 64, 128],
                "wide": [16, 64, 128], "base": [32]}
 
+# Speculative-verify draft buckets (D positions per verify call). Kept in
+# lockstep with rust/src/runtime/cpu.rs VERIFY_BUCKETS.
+VERIFY_BUCKETS = [4, 8]
+
 
 def spec(shape, dtype=jnp.float32):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
@@ -321,6 +325,32 @@ class Emitter:
                   {"kind": "decode_pruned_sample", "batch": B, "k": K,
                    "sample_topk": model.SAMPLE_TOPK, "pos_chained": True})
 
+    def emit_verify(self, B, D):
+        """Speculative verify: full-model forward over D draft positions
+        returning per-position logits [B, D, V]. Acceptance is decided
+        host-side (sample_lane replay), so the executable carries no
+        sampling lanes; `seq` records the draft bucket D."""
+        cfg, names = self.cfg, self.param_names
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            kc, vc, tokens, pos = args[len(names):]
+            return model.verify(cfg, params, kc, vc, tokens, pos)
+
+        cspec = self.cache_spec(B)
+        arg_specs = self.param_specs_args(names) + [
+            cspec, cspec, spec((B, D), jnp.int32), spec((B,), jnp.int32)]
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("tokens", (B, D), I32),
+                     io_entry("pos", (B,), I32)])
+        outputs = [io_entry("logits", (B, D, cfg.vocab_size)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape)]
+        self.emit(f"verify_b{B}_s{D}", fn, arg_specs, inputs, outputs,
+                  {"kind": "verify", "batch": B, "seq": D})
+
     def emit_gather(self, K):
         cfg = self.cfg
         ffn = model.ff_param_names(cfg)  # e.g. [w1, w2, wg]
@@ -457,6 +487,9 @@ class Emitter:
                     self.emit_prefill_sample(B, S)
             self.emit_decode(B)
             self.emit_decode_sample(B)
+            for D in VERIFY_BUCKETS:
+                if D <= cfg.max_seq:
+                    self.emit_verify(B, D)
             bks = ks if (B == 1 and full_sweep) else [k_half]
             for K in bks:
                 if K < cfg.d_ff:

@@ -510,6 +510,39 @@ def decode_pruned_sample(cfg: ModelConfig, params: Params, pruned, kcache,
 
 
 # ---------------------------------------------------------------------------
+# speculative verification (self-speculative decoding, full model as judge)
+# ---------------------------------------------------------------------------
+
+def verify(cfg: ModelConfig, params: Params, kcache, vcache, tokens, pos):
+    """Full-model forward over D draft positions (speculative verify).
+
+    tokens [B, D] i32: column 0 is each slot's pending token (the one a
+    plain decode tick would feed next); columns 1..D-1 are the pruned
+    model's draft continuations. pos [B] i32 is the write position of
+    column 0 — column d lands at pos + d.
+
+    Runs D sequential full-model decode steps and returns per-position
+    logits [B, D, V]: row d is the full model's next-token distribution
+    after consuming tokens[:, :d+1]. KV is written for ALL D positions
+    (the cheap option device-side); rows past the accepted length hold
+    rejected-draft K/V but are never attendable — decode masks
+    kpos <= pos, and the host rolls pos back to the accepted length, so
+    stale rows are overwritten before they can be attended. Acceptance
+    itself is a host decision (sampling::sample_lane replay), keeping
+    the executable sampler-free and the accept rule mirror-replayable.
+    """
+    wg = params["wg"] if cfg.is_glu else None
+    ff = (wg, params["w1"], params["w2"])
+    D = tokens.shape[1]
+    out = []
+    for d in range(D):
+        logits, kcache, vcache = _decode_step(
+            cfg, params, ff, kcache, vcache, tokens[:, d], pos + d)
+        out.append(logits)
+    return jnp.stack(out, axis=1), kcache, vcache
+
+
+# ---------------------------------------------------------------------------
 # expert gather (paper §4.2: rows/cols of W_g, W_1, W_2 indexed by E)
 # ---------------------------------------------------------------------------
 

@@ -198,6 +198,7 @@ fn main() {
         gen_len: g,
         mean_gap_ms: 0,
         mixed_lengths: false,
+        mix: trace::OpMix::default(),
     });
     for (label, mode) in [
         ("full", Mode::Full),
@@ -215,6 +216,7 @@ fn main() {
             stop_at_eos: false,
             session: None,
             keep_requested: None,
+            speculative: None,
             admitted_at: std::time::Instant::now(),
         };
         rep.add(bench_for(

@@ -36,9 +36,17 @@
 //!     (`FaultPlan` panic + supervisor respawn). Reports client-side
 //!     p50/p99/p999 TTFT + inter-token latency, shed rate, down-keep
 //!     share, abandonment count, and fleet recovery times.
-//!     `GRIFFIN_LOADGEN_SMOKE=1` shrinks the scenario for CI.
+//!     `GRIFFIN_LOADGEN_SMOKE=1` shrinks the scenario for CI. The
+//!     loadgen report also includes a mixed-op arrival run
+//!     (`mixed_ops`): the trace generator's `OpMix` option interleaves
+//!     generate, score and mid-stream cancel arrivals concurrently.
+//!   * self-speculative decoding (`specdec`, CPU substrate): the SAME
+//!     seeded top-k workload with the `speculative:{draft_tokens}`
+//!     opt-in off and on, at keeps {0.25, 0.5} — asserts per-request
+//!     token parity (speculation is lossless) and reports acceptance
+//!     rate, tokens/sec and inter-token-latency p99 both ways.
 //!
-//! Both CPU-substrate scenarios contribute to the machine-readable
+//! The CPU-substrate scenarios contribute to the machine-readable
 //! summary written to BENCH_serving.json at the repository root
 //! (schema: docs/benchmarks.md).
 //!
@@ -216,6 +224,173 @@ mod shard_scaling {
     }
 }
 
+/// Self-speculative decoding scenario over the CPU substrate: the SAME
+/// seeded top-k workload through the continuous scheduler with the
+/// `speculative:{draft_tokens}` opt-in flipped on and off, at the two
+/// headline keeps. Speculation is lossless by construction (the verify
+/// pass replays the full model's own sampler), so the scenario also
+/// asserts per-request token parity between the paired runs — what it
+/// MEASURES is the acceptance rate (the paper's flocking claim at
+/// serving time) and the tokens/sec + inter-token-latency delta that
+/// acceptance buys.
+#[cfg(feature = "cpu-substrate")]
+mod specdec {
+    use std::sync::Arc;
+
+    use griffin::bench_harness::{summarize, Reporter};
+    use griffin::coordinator::engine::{Engine, Mode};
+    use griffin::coordinator::router::Router;
+    use griffin::coordinator::scheduler::Scheduler;
+    use griffin::coordinator::sequence::GenRequest;
+    use griffin::json::{n, obj, s, Value};
+    use griffin::sampling::SamplerSpec;
+    use griffin::workload::trace;
+
+    const KEEPS: [f64; 2] = [0.25, 0.5];
+    const DRAFT_TOKENS: usize = 4;
+    const MAX_NEW: usize = 24;
+
+    fn requests(n_requests: usize, keep: f64, spec_on: bool)
+                -> Vec<GenRequest> {
+        let traced = trace::generate(&trace::TraceSpec {
+            seed: 19,
+            n_requests,
+            prompt_len: 12,
+            gen_len: MAX_NEW,
+            mean_gap_ms: 0,
+            mixed_lengths: false,
+            mix: trace::OpMix::default(),
+        });
+        traced
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut q = GenRequest::greedy(
+                    0, r.prompt.clone(), MAX_NEW, Mode::griffin(keep));
+                q.sampler = SamplerSpec::TopK { k: 4, temperature: 0.8 };
+                q.seed = 1000 + i as u64;
+                q.stop_at_eos = false;
+                q.speculative = spec_on.then_some(DRAFT_TOKENS);
+                q
+            })
+            .collect()
+    }
+
+    /// One (keep, spec on/off) configuration on a fresh engine: admit
+    /// the workload `rounds` times, return (per-round wall ms, best
+    /// tokens/sec, config-scoped metrics, per-request token streams of
+    /// the last round keyed by admission order).
+    fn run_config(n_requests: usize, rounds: usize, keep: f64,
+                  spec_on: bool)
+                  -> (Vec<f64>, f64, Value, Vec<Vec<i32>>) {
+        let engine = Engine::cpu_reference().expect("cpu substrate");
+        let router = Arc::new(Router::new(256, 64));
+        let mut sched = Scheduler::new(engine, router.clone());
+        let m = sched.engine.metrics.clone();
+        let mut samples = Vec::new();
+        let mut best_tps = 0.0f64;
+        let mut streams = Vec::new();
+        for _ in 0..rounds {
+            for q in requests(n_requests, keep, spec_on) {
+                router.admit(q).unwrap();
+            }
+            let t = std::time::Instant::now();
+            let mut responses = sched.run_until_idle().unwrap();
+            let dt = t.elapsed().as_secs_f64();
+            assert_eq!(responses.len(), n_requests);
+            let tokens: usize =
+                responses.iter().map(|r| r.tokens.len()).sum();
+            best_tps = best_tps.max(tokens as f64 / dt);
+            samples.push(dt * 1e3);
+            responses.sort_by_key(|r| r.id);
+            streams = responses.into_iter().map(|r| r.tokens).collect();
+        }
+        let proposed = m.draft_tokens_proposed.get();
+        let accepted = m.draft_tokens_accepted.get();
+        let itl = m.inter_token_latency.snapshot();
+        let ticks = m.decode_ticks.get();
+        let metrics = obj(vec![
+            ("decode_ticks", n(ticks as f64)),
+            ("spec_ticks", n(m.spec_ticks.get() as f64)),
+            ("draft_tokens_proposed", n(proposed as f64)),
+            ("draft_tokens_accepted", n(accepted as f64)),
+            (
+                "acceptance_rate",
+                if proposed > 0 {
+                    n(accepted as f64 / proposed as f64)
+                } else {
+                    Value::Null
+                },
+            ),
+            ("itl_ms", obj(vec![
+                ("p50", n(itl.p50_us / 1e3)),
+                ("p99", n(itl.p99_us / 1e3)),
+            ])),
+        ]);
+        (samples, best_tps, metrics, streams)
+    }
+
+    pub fn run() -> Value {
+        let smoke = std::env::var("GRIFFIN_LOADGEN_SMOKE").is_ok();
+        let (n_requests, rounds) = if smoke { (6, 1) } else { (12, 3) };
+        println!(
+            "bench_serving specdec (cpu substrate; {n_requests} reqs x \
+             {MAX_NEW} tokens, draft_tokens={DRAFT_TOKENS}, \
+             keeps {KEEPS:?})"
+        );
+        let mut rep = Reporter::new("bench_serving_specdec.csv");
+        let mut runs = Vec::new();
+        for &keep in &KEEPS {
+            let (off_ms, off_tps, off_m, off_streams) =
+                run_config(n_requests, rounds, keep, false);
+            let (on_ms, on_tps, on_m, on_streams) =
+                run_config(n_requests, rounds, keep, true);
+            // losslessness: identical streams request-for-request
+            assert_eq!(on_streams, off_streams,
+                       "speculation changed a token stream at \
+                        keep={keep}");
+            let accept = on_m
+                .get("acceptance_rate")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0);
+            println!(
+                "  specdec keep={keep}: off {off_tps:.0} tok/s, \
+                 on {on_tps:.0} tok/s ({:.2}x), acceptance {accept:.2}",
+                on_tps / off_tps.max(1e-9)
+            );
+            rep.add(summarize(
+                &format!("specdec_keep{keep}_off"), &off_ms));
+            rep.add(summarize(
+                &format!("specdec_keep{keep}_on"), &on_ms));
+            runs.push(obj(vec![
+                ("keep", n(keep)),
+                ("streams_identical", Value::Bool(true)),
+                ("off", obj(vec![
+                    ("tokens_per_sec", n(off_tps)),
+                    ("metrics", off_m),
+                ])),
+                ("on", obj(vec![
+                    ("tokens_per_sec", n(on_tps)),
+                    ("speedup_over_off", n(on_tps / off_tps.max(1e-9))),
+                    ("metrics", on_m),
+                ])),
+            ]));
+        }
+        rep.finish();
+        obj(vec![
+            ("scenario", s("specdec")),
+            ("workload", obj(vec![
+                ("requests", n(n_requests as f64)),
+                ("max_new_tokens", n(MAX_NEW as f64)),
+                ("draft_tokens", n(DRAFT_TOKENS as f64)),
+                ("sampler", s("topk4@0.8")),
+                ("rounds", n(rounds as f64)),
+            ])),
+            ("runs", Value::Arr(runs)),
+        ])
+    }
+}
+
 /// Sustained-load scenario over the CPU substrate: open-loop bursty
 /// arrivals with client abandonment, driven through overload (staged
 /// down-keep → shed admission) and through a mid-run injected shard
@@ -236,7 +411,9 @@ mod loadgen {
         CpuSession, FaultKind, FaultPlan, FaultySession,
     };
     use griffin::server::{self, EngineFactory};
+    use griffin::tokenizer::Tokenizer;
     use griffin::util::percentile;
+    use griffin::workload::trace::{self, TraceOp};
 
     /// Scenario knobs. The smoke config (`GRIFFIN_LOADGEN_SMOKE=1`)
     /// shrinks the fleet sweep and request counts so the full
@@ -258,6 +435,9 @@ mod loadgen {
         crash_requests: usize,
         /// shard 0 panics on its Nth decode dispatch
         crash_nth: u64,
+        /// open-loop requests in the mixed-op (generate/score/cancel)
+        /// arrival-mix run
+        mixed_requests: usize,
     }
 
     const FULL: Config = Config {
@@ -268,6 +448,7 @@ mod loadgen {
         crash_shards: 4,
         crash_requests: 96,
         crash_nth: 150,
+        mixed_requests: 60,
     };
     const SMOKE: Config = Config {
         fleets: &[2],
@@ -277,6 +458,7 @@ mod loadgen {
         crash_shards: 2,
         crash_requests: 24,
         crash_nth: 20,
+        mixed_requests: 18,
     };
 
     /// Seeded LCG so the arrival schedule and length mix are identical
@@ -675,14 +857,217 @@ mod loadgen {
         obj(fields)
     }
 
+    /// What one mixed-op client observed. Cancel rows distinguish
+    /// "the cancel actually cut the stream" from "the stream finished
+    /// before the cancel landed" (a benign race at small budgets).
+    enum MixedOutcome {
+        Gen { tokens: usize },
+        Score { tokens: usize },
+        Cancelled { cut: bool, partial: usize },
+        MixedFailed,
+    }
+
+    /// Mixed-op arrival mix: the trace generator's `OpMix` option
+    /// drives generate, score and mid-stream cancel arrivals at the
+    /// fleet CONCURRENTLY, so score rows ride the score queue between
+    /// decode ticks and cancel rows tear streaming sequences out of
+    /// their slots while other requests keep decoding — the op
+    /// interleaving a pure-generate load never exercises.
+    fn mixed_ops_run(n_shards: usize, cfg: &Config) -> Value {
+        let handle = server::start_sharded(
+            plain_factory(), n_shards, "127.0.0.1:0", 64, 64)
+            .expect("sharded fleet starts");
+        let addr = handle.addr.to_string();
+        let reqs = trace::generate(&trace::TraceSpec {
+            seed: 0xA11_CE,
+            n_requests: cfg.mixed_requests,
+            prompt_len: 16,
+            gen_len: 16,
+            mean_gap_ms: 2,
+            mixed_lengths: true,
+            mix: trace::OpMix { score_pct: 25, cancel_pct: 25 },
+        });
+        let tok = Tokenizer::new();
+        let (tx, rx) = mpsc::channel();
+        let mut workers = Vec::new();
+        let mut prev_arrival = 0u64;
+        for r in reqs {
+            std::thread::sleep(Duration::from_millis(
+                r.arrival_ms - prev_arrival));
+            prev_arrival = r.arrival_ms;
+            let addr = addr.clone();
+            let tx = tx.clone();
+            let prompt = tok.decode(&r.prompt);
+            let half = tok.decode(&r.prompt[r.prompt.len() / 2..]);
+            let head = tok.decode(&r.prompt[..r.prompt.len() / 2]);
+            let max_new = r.max_new_tokens;
+            let op = r.op;
+            workers.push(std::thread::spawn(move || {
+                let _ = tx.send(drive_mixed(
+                    &addr, op, &prompt, &head, &half, max_new));
+            }));
+        }
+        drop(tx);
+        let (mut gens, mut gen_tokens) = (0usize, 0usize);
+        let (mut scores, mut score_tokens) = (0usize, 0usize);
+        let (mut cancels, mut cuts, mut partial) = (0usize, 0usize, 0usize);
+        let mut failed = 0usize;
+        for o in rx {
+            match o {
+                MixedOutcome::Gen { tokens } => {
+                    gens += 1;
+                    gen_tokens += tokens;
+                }
+                MixedOutcome::Score { tokens } => {
+                    scores += 1;
+                    score_tokens += tokens;
+                }
+                MixedOutcome::Cancelled { cut, partial: p } => {
+                    cancels += 1;
+                    if cut {
+                        cuts += 1;
+                    }
+                    partial += p;
+                }
+                MixedOutcome::MixedFailed => failed += 1,
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        handle.shutdown();
+        println!(
+            "  loadgen mixed_ops n={n_shards}: {gens} generates \
+             ({gen_tokens} tok), {scores} scores ({score_tokens} \
+             scored tok), {cancels} cancels ({cuts} cut mid-stream, \
+             {partial} partial tok), {failed} failed"
+        );
+        obj(vec![
+            ("shards", n(n_shards as f64)),
+            ("offered", n(cfg.mixed_requests as f64)),
+            ("mix", obj(vec![
+                ("score_pct", n(25.0)),
+                ("cancel_pct", n(25.0)),
+            ])),
+            ("generates", obj(vec![
+                ("completed", n(gens as f64)),
+                ("tokens", n(gen_tokens as f64)),
+            ])),
+            ("scores", obj(vec![
+                ("completed", n(scores as f64)),
+                ("tokens_scored", n(score_tokens as f64)),
+            ])),
+            ("cancels", obj(vec![
+                ("resolved", n(cancels as f64)),
+                ("cut_mid_stream", n(cuts as f64)),
+                ("partial_tokens", n(partial as f64)),
+            ])),
+            ("failed", n(failed as f64)),
+        ])
+    }
+
+    /// One mixed-op client. Generate and score use the one-line
+    /// call/response form; cancel streams, then cancels its own id from
+    /// a second connection once roughly half the budget has arrived
+    /// (the fan-out path the sharded fleet has to resolve).
+    fn drive_mixed(addr: &str, op: TraceOp, prompt: &str, head: &str,
+                   cont: &str, max_new: usize) -> MixedOutcome {
+        let Ok(mut c) = server::Client::connect(addr) else {
+            return MixedOutcome::MixedFailed;
+        };
+        match op {
+            TraceOp::Generate => {
+                let Ok(r) = c.call(&obj(vec![
+                    ("v", n(2.0)),
+                    ("op", s("generate")),
+                    ("prompt", s(prompt)),
+                    ("max_new_tokens", n(max_new as f64)),
+                    ("stop_at_eos", Value::Bool(false)),
+                ])) else {
+                    return MixedOutcome::MixedFailed;
+                };
+                match r.get("tokens").and_then(Value::as_arr) {
+                    Some(t) => MixedOutcome::Gen { tokens: t.len() },
+                    None => MixedOutcome::MixedFailed,
+                }
+            }
+            TraceOp::Score => {
+                let Ok(r) = c.call(&obj(vec![
+                    ("v", n(2.0)),
+                    ("op", s("score")),
+                    ("prompt", s(head)),
+                    ("continuation", s(cont)),
+                ])) else {
+                    return MixedOutcome::MixedFailed;
+                };
+                match r.get("nll").and_then(Value::as_arr) {
+                    Some(t) => MixedOutcome::Score { tokens: t.len() },
+                    None => MixedOutcome::MixedFailed,
+                }
+            }
+            TraceOp::Cancel => {
+                if c.send(&obj(vec![
+                    ("v", n(2.0)),
+                    ("op", s("generate")),
+                    ("prompt", s(prompt)),
+                    ("max_new_tokens", n(max_new as f64)),
+                    ("stop_at_eos", Value::Bool(false)),
+                    ("stream", Value::Bool(true)),
+                ])).is_err()
+                {
+                    return MixedOutcome::MixedFailed;
+                }
+                let Ok(acc) = c.recv() else {
+                    return MixedOutcome::MixedFailed;
+                };
+                let Some(id) =
+                    acc.get("id").and_then(Value::as_usize)
+                else {
+                    return MixedOutcome::MixedFailed;
+                };
+                let mut got = 0usize;
+                let mut sent_cancel = false;
+                loop {
+                    let Ok(ev) = c.recv() else {
+                        return MixedOutcome::MixedFailed;
+                    };
+                    match ev.get("event").and_then(Value::as_str) {
+                        Some("token") => {
+                            got += 1;
+                            if got >= max_new / 2 && !sent_cancel {
+                                sent_cancel = true;
+                                if let Ok(mut ctl) =
+                                    server::Client::connect(addr)
+                                {
+                                    let _ = ctl.cancel(id as u64);
+                                }
+                            }
+                        }
+                        Some("done") => {
+                            let cut = ev
+                                .get("finish")
+                                .and_then(Value::as_str)
+                                == Some("cancelled");
+                            return MixedOutcome::Cancelled {
+                                cut,
+                                partial: got,
+                            };
+                        }
+                        _ => return MixedOutcome::MixedFailed,
+                    }
+                }
+            }
+        }
+    }
+
     pub fn run() -> Value {
         let smoke = std::env::var("GRIFFIN_LOADGEN_SMOKE").is_ok();
         let cfg = if smoke { &SMOKE } else { &FULL };
         println!(
             "bench_serving loadgen ({} config; fleets {:?}, burst {}, \
-             crash on {} shards)",
+             crash on {} shards, {} mixed-op arrivals)",
             if smoke { "smoke" } else { "full" },
-            cfg.fleets, cfg.burst, cfg.crash_shards
+            cfg.fleets, cfg.burst, cfg.crash_shards, cfg.mixed_requests
         );
         let overload: Vec<Value> = cfg
             .fleets
@@ -690,11 +1075,13 @@ mod loadgen {
             .map(|&nsh| overload_run(nsh, cfg))
             .collect();
         let crash = crash_run(cfg.crash_shards, cfg);
+        let mixed = mixed_ops_run(2, cfg);
         obj(vec![
             ("scenario", s("loadgen")),
             ("config", s(if smoke { "smoke" } else { "full" })),
             ("overload", Value::Arr(overload)),
             ("crash", crash),
+            ("mixed_ops", mixed),
         ])
     }
 }
@@ -761,6 +1148,7 @@ mod pjrt {
                     gen_len: g,
                     mean_gap_ms: 0,
                     mixed_lengths: false,
+                    mix: trace::OpMix::default(),
                 });
                 let mk = |max_new: usize| -> Vec<GenRequest> {
                     traced
@@ -809,6 +1197,7 @@ mod pjrt {
             gen_len: LONG_G,
             mean_gap_ms: 0,
             mixed_lengths: false,
+            mix: trace::OpMix::default(),
         });
         let mut wave_tps = std::collections::BTreeMap::new();
         for mode in [Mode::Full, Mode::griffin(0.5)] {
@@ -1125,8 +1514,9 @@ fn main() {
     #[cfg(feature = "cpu-substrate")]
     {
         let scaling = shard_scaling::run();
+        let spec = specdec::run();
         let load = loadgen::run();
-        write_serving_json(vec![scaling, load]);
+        write_serving_json(vec![scaling, spec, load]);
     }
     #[cfg(feature = "runtime")]
     pjrt::run();

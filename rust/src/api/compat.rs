@@ -71,6 +71,8 @@ pub fn v1_generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
         stream: bool_field(v, "stream")?.unwrap_or(false),
         // session affinity is a v2 surface; v1 requests place least-loaded
         session: None,
+        // speculative decoding is a v2 surface; v1 lines decode plainly
+        speculative: None,
         v2: false,
     };
     spec.validate()?;

@@ -31,8 +31,8 @@ pub use parse::{parse_request, request_version};
 pub use respond::{
     accepted_batch_json, accepted_json, batch_json, cancel_ack_json,
     done_json, error_json, error_obj, health_json, response_json,
-    response_row_json, score_json, stream_done_json, stream_error_json,
-    stream_token_json, token_json,
+    response_row_json, score_batch_json, score_json, score_row_json,
+    stream_done_json, stream_error_json, stream_token_json, token_json,
 };
 pub use types::{
     GenerateSpec, PruneMethod, PruneSpec, Request, SamplingSpec, ScoreSpec,

@@ -111,21 +111,110 @@ fn generate_spec(v: &Value) -> Result<GenerateSpec, ApiError> {
         stop_at_eos: bool_field(v, "stop_at_eos")?.unwrap_or(true),
         stream: bool_field(v, "stream")?.unwrap_or(false),
         session: str_field(v, "session")?.map(str::to_string),
+        speculative: speculative_spec(v.get("speculative"))?,
         v2: true,
     };
     spec.validate()?;
     Ok(spec)
 }
 
+/// Parse the `speculative` object (absent = plain decode). The opt-in
+/// carries exactly one knob — the requested draft length per spec tick.
+fn speculative_spec(v: Option<&Value>)
+                    -> Result<Option<usize>, ApiError> {
+    let Some(v) = v else { return Ok(None) };
+    if matches!(v, Value::Null) {
+        return Ok(None);
+    }
+    if v.as_obj().is_none() {
+        return Err(ApiError::invalid("speculative must be an object"));
+    }
+    usize_field(v, "draft_tokens")?
+        .ok_or_else(|| {
+            ApiError::invalid("speculative needs draft_tokens")
+        })
+        .map(Some)
+}
+
 fn score_spec(v: &Value) -> Result<ScoreSpec, ApiError> {
+    let string_rows = |v: &Value, key: &str, entry: &str| {
+        v.as_arr()
+            .ok_or_else(|| {
+                ApiError::invalid(format!("{key} must be an array"))
+            })?
+            .iter()
+            .map(|p| {
+                p.as_str().map(str::to_string).ok_or_else(|| {
+                    ApiError::invalid(format!(
+                        "{entry} entries must be strings"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()
+    };
+    let (prompts, single) =
+        match (v.get("prompt"), v.get("prompts")) {
+            (Some(_), Some(_)) => {
+                return Err(ApiError::invalid(
+                    "pass either \"prompt\" or \"prompts\", not both",
+                ))
+            }
+            (Some(p), None) => (
+                vec![p
+                    .as_str()
+                    .ok_or_else(|| {
+                        ApiError::invalid("prompt must be a string")
+                    })?
+                    .to_string()],
+                true,
+            ),
+            (None, Some(ps)) => {
+                (string_rows(ps, "prompts", "prompts")?, false)
+            }
+            (None, None) => {
+                return Err(ApiError::invalid("missing prompt"))
+            }
+        };
+    let continuations = match (
+        v.get("continuation"),
+        v.get("continuations"),
+        single,
+    ) {
+        (Some(_), Some(_), _) => {
+            return Err(ApiError::invalid(
+                "pass either \"continuation\" or \"continuations\", \
+                 not both",
+            ))
+        }
+        (Some(c), None, true) => vec![c
+            .as_str()
+            .ok_or_else(|| {
+                ApiError::invalid("continuation must be a string")
+            })?
+            .to_string()],
+        (None, Some(cs), false) => {
+            string_rows(cs, "continuations", "continuations")?
+        }
+        // mixing the singular and array spellings across the two fields
+        // is always a shape error
+        (Some(_), None, false) | (None, Some(_), true) => {
+            return Err(ApiError::invalid(
+                "score rows must use matching forms: prompt with \
+                 continuation, or prompts with continuations",
+            ))
+        }
+        (None, None, true) => {
+            return Err(ApiError::invalid("missing continuation"))
+        }
+        (None, None, false) => {
+            return Err(ApiError::invalid("missing continuations"))
+        }
+    };
     let spec = ScoreSpec {
-        prompt: str_field(v, "prompt")?
-            .ok_or_else(|| ApiError::invalid("missing prompt"))?
-            .to_string(),
-        continuation: str_field(v, "continuation")?
-            .ok_or_else(|| ApiError::invalid("missing continuation"))?
-            .to_string(),
+        prompts,
+        continuations,
         prune: prune_spec(v.get("prune"))?,
+        single,
     };
     spec.validate()?;
     Ok(spec)
@@ -348,6 +437,75 @@ mod tests {
         .unwrap();
         let Request::Generate(g) = r else { panic!() };
         assert!(g.stream);
+    }
+
+    #[test]
+    fn v2_speculative_axis_parses() {
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompt":"hi",
+                "speculative":{"draft_tokens":4}}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.speculative, Some(4));
+        // absent = plain decode
+        let r = parse(r#"{"v":2,"op":"generate","prompt":"hi"}"#).unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.speculative, None);
+        // shape errors are structured rejections
+        for line in [
+            r#"{"v":2,"op":"generate","prompt":"x","speculative":4}"#,
+            r#"{"v":2,"op":"generate","prompt":"x","speculative":{}}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "speculative":{"draft_tokens":0}}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "speculative":{"draft_tokens":-2}}"#,
+            r#"{"v":2,"op":"generate","prompt":"x",
+                "speculative":{"draft_tokens":"4"}}"#,
+        ] {
+            let e = parse(line).unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "line {line}");
+        }
+    }
+
+    #[test]
+    fn v2_batched_score_parses() {
+        let r = parse(
+            r#"{"v":2,"op":"score","prompts":["ab","cd"],
+                "continuations":["x","y"]}"#,
+        )
+        .unwrap();
+        let Request::Score(s) = r else { panic!() };
+        assert_eq!(s.prompts.len(), 2);
+        assert!(!s.single);
+        // singular form still parses and keeps the one-line response
+        let r = parse(
+            r#"{"v":2,"op":"score","prompt":"ab","continuation":"x"}"#,
+        )
+        .unwrap();
+        let Request::Score(s) = r else { panic!() };
+        assert!(s.single);
+        for line in [
+            // row-count mismatch
+            r#"{"v":2,"op":"score","prompts":["a","b"],
+                "continuations":["x"]}"#,
+            // mixed singular/array spellings
+            r#"{"v":2,"op":"score","prompt":"a",
+                "continuations":["x"]}"#,
+            r#"{"v":2,"op":"score","prompts":["a"],
+                "continuation":"x"}"#,
+            // both spellings of the same field
+            r#"{"v":2,"op":"score","prompt":"a","prompts":["b"],
+                "continuation":"x"}"#,
+            // empty batch
+            r#"{"v":2,"op":"score","prompts":[],"continuations":[]}"#,
+            // non-string rows
+            r#"{"v":2,"op":"score","prompts":[1],
+                "continuations":["x"]}"#,
+        ] {
+            let e = parse(line).unwrap_err();
+            assert_eq!(e.code, ErrorCode::InvalidRequest, "line {line}");
+        }
     }
 
     #[test]

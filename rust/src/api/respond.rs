@@ -55,6 +55,20 @@ fn response_body(r: &GenResponse, v2_schema: bool) -> Value {
             }
             fields.push(("prune", obj(prune)));
         }
+        // speculative-decoding provenance: what the request opted into
+        // and how the pruned drafter performed. accepted/proposed is the
+        // serving-time readout of the paper's flocking claim; absent on
+        // requests that never opted in, so the plain shape is unchanged.
+        if let Some(sp) = r.speculative {
+            fields.push((
+                "speculative",
+                obj(vec![
+                    ("draft_tokens", n(sp.draft_tokens as f64)),
+                    ("proposed", n(sp.proposed as f64)),
+                    ("accepted", n(sp.accepted as f64)),
+                ]),
+            ));
+        }
     }
     fields.push((
         "timing",
@@ -211,15 +225,38 @@ pub fn batch_json(results: Vec<Value>) -> String {
     ])))
 }
 
-/// Score response: per-token NLLs + perplexity of the continuation.
-pub fn score_json(id: u64, nll: &[f64]) -> String {
+/// The row body shared by the single-score line and batched rows:
+/// per-token NLLs + perplexity of one continuation.
+fn score_body(id: u64, nll: &[f64]) -> Value {
     let ppl = crate::eval::perplexity(nll.iter().sum(), nll.len());
-    json::to_string(&v2_wrap(obj(vec![
+    obj(vec![
         ("op", s("score")),
         ("id", n(id as f64)),
         ("nll", Value::Arr(nll.iter().map(|&x| n(x)).collect())),
         ("ppl", n(ppl)),
         ("tokens", n(nll.len() as f64)),
+    ])
+}
+
+/// Score response: per-token NLLs + perplexity of the continuation.
+pub fn score_json(id: u64, nll: &[f64]) -> String {
+    json::to_string(&v2_wrap(score_body(id, nll)))
+}
+
+/// One embedded row of a batched score `results` array (no per-row
+/// `"v"` envelope — only the outer batch line is versioned, matching
+/// batched generate).
+pub fn score_row_json(id: u64, nll: &[f64]) -> Value {
+    score_body(id, nll)
+}
+
+/// The batched-score response: one line, per-row results in REQUEST
+/// ORDER (each entry a score row or an error object), mirroring
+/// [`batch_json`]. Batched score is a v2-only surface.
+pub fn score_batch_json(results: Vec<Value>) -> String {
+    json::to_string(&v2_wrap(obj(vec![
+        ("op", s("score")),
+        ("results", Value::Arr(results)),
     ])))
 }
 
@@ -278,6 +315,7 @@ mod tests {
             finish: FinishReason::Length,
             k_used: None,
             selection: None,
+            speculative: None,
             prefill_ms: 1.0,
             select_ms: 0.0,
             decode_ms: 2.0,
@@ -419,6 +457,50 @@ mod tests {
             Some("griffin"),
             "batched rows must not lose the provenance object"
         );
+    }
+
+    #[test]
+    fn v2_surfaces_speculative_provenance() {
+        use crate::coordinator::types::SpecInfo;
+        let mut r = resp();
+        r.speculative = Some(SpecInfo {
+            draft_tokens: 4,
+            proposed: 30,
+            accepted: 21,
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let sp = d.get("speculative").expect("v2 carries spec provenance");
+        assert_eq!(sp.get("draft_tokens").unwrap().as_usize(), Some(4));
+        assert_eq!(sp.get("proposed").unwrap().as_usize(), Some(30));
+        assert_eq!(sp.get("accepted").unwrap().as_usize(), Some(21));
+        // v1 bodies stay byte-compatible: never a speculative object
+        let d1 = json::parse(&done_json(&r, false, false)).unwrap();
+        assert!(d1.get("speculative").is_none());
+        // no opt-in, no object (plain response shape unchanged)
+        r.speculative = None;
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert!(d.get("speculative").is_none());
+    }
+
+    #[test]
+    fn batched_score_rows_assemble_without_envelope() {
+        let row = score_row_json(4, &[1.0, 1.0]);
+        assert!(row.get("v").is_none(),
+                "embedded rows carry no per-row envelope");
+        assert_eq!(row.get("op").unwrap().as_str(), Some("score"));
+        let e = ApiError::invalid("row 1 rejected");
+        let line = score_batch_json(vec![row, error_obj(&e, None)]);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("op").unwrap().as_str(), Some("score"));
+        let Some(Value::Arr(rows)) = v.get("results") else {
+            panic!("batched score carries a results array");
+        };
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("id").unwrap().as_usize(), Some(4));
+        let ppl = rows[0].get("ppl").unwrap().as_f64().unwrap();
+        assert!((ppl - std::f64::consts::E).abs() < 1e-9);
+        assert_eq!(rows[1].get("op").unwrap().as_str(), Some("error"));
     }
 
     #[test]

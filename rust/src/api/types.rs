@@ -225,9 +225,20 @@ pub struct GenerateSpec {
     /// client-supplied shard-affinity key (v2): requests sharing it are
     /// placed on the same engine shard and never moved by work stealing
     pub session: Option<String>,
+    /// self-speculative decoding opt-in (v2 `speculative:{draft_tokens}`
+    /// axis): requested draft length per spec tick. The scheduler snaps
+    /// it to a compiled verify bucket and falls back to plain decode on
+    /// spec-ineligible ticks; the stream is byte-identical either way.
+    pub speculative: Option<usize>,
     /// arrived under the v2 envelope (controls response formatting)
     pub v2: bool,
 }
+
+/// Largest draft length the `speculative` axis accepts at admission.
+/// Liberal on purpose: the served length snaps DOWN to a compiled
+/// verify bucket per tick, so any sane value works — this bound only
+/// rejects nonsense that could never fit a decode window.
+pub const MAX_DRAFT_TOKENS: usize = 64;
 
 impl GenerateSpec {
     pub fn validate(&self) -> Result<(), ApiError> {
@@ -236,6 +247,14 @@ impl GenerateSpec {
         }
         if self.max_new_tokens == 0 {
             return Err(ApiError::invalid("max_new_tokens must be >= 1"));
+        }
+        if let Some(d) = self.speculative {
+            if d == 0 || d > MAX_DRAFT_TOKENS {
+                return Err(ApiError::invalid(format!(
+                    "speculative.draft_tokens must be in \
+                     [1,{MAX_DRAFT_TOKENS}], got {d}"
+                )));
+            }
         }
         self.prune.validate()?;
         self.sampling.validate()
@@ -256,26 +275,44 @@ impl GenerateSpec {
                 stop_at_eos: self.stop_at_eos,
                 session: self.session.clone(),
                 keep_requested: None,
+                speculative: self.speculative,
                 admitted_at: Instant::now(),
             })
             .collect()
     }
 }
 
-/// A validated score request (teacher-forced logprob evaluation).
+/// A validated score request (teacher-forced logprob evaluation), one
+/// or many rows. The batched form (`prompts` + `continuations`, paired
+/// by index) mirrors batched generate: rows are lowered to independent
+/// engine requests and the response assembles per-row results back in
+/// REQUEST ORDER, whatever order the engine finished them in.
 #[derive(Debug, Clone)]
 pub struct ScoreSpec {
-    pub prompt: String,
-    pub continuation: String,
+    pub prompts: Vec<String>,
+    pub continuations: Vec<String>,
     pub prune: PruneSpec,
+    /// arrived via the singular `prompt`/`continuation` fields (controls
+    /// response shape: one score line, not a batched `results` array)
+    pub single: bool,
 }
 
 impl ScoreSpec {
     pub fn validate(&self) -> Result<(), ApiError> {
-        if self.prompt.is_empty() {
+        if self.prompts.is_empty() {
+            return Err(ApiError::invalid("score needs at least one row"));
+        }
+        if self.prompts.len() != self.continuations.len() {
+            return Err(ApiError::invalid(format!(
+                "score rows must pair up: {} prompts vs {} continuations",
+                self.prompts.len(),
+                self.continuations.len()
+            )));
+        }
+        if self.prompts.iter().any(String::is_empty) {
             return Err(ApiError::invalid("score.prompt must be non-empty"));
         }
-        if self.continuation.is_empty() {
+        if self.continuations.iter().any(String::is_empty) {
             return Err(ApiError::invalid(
                 "score.continuation must be non-empty",
             ));
@@ -283,14 +320,20 @@ impl ScoreSpec {
         self.prune.validate()
     }
 
-    pub fn to_request(&self, tok: &Tokenizer) -> ScoreRequest {
-        ScoreRequest {
-            id: 0,
-            prompt: tok.encode_with_bos(&self.prompt),
-            continuation: tok.encode(&self.continuation),
-            mode: self.prune.to_mode(),
-            admitted_at: Instant::now(),
-        }
+    /// Lower to engine requests, one per row (ids are assigned by the
+    /// router at admission).
+    pub fn to_requests(&self, tok: &Tokenizer) -> Vec<ScoreRequest> {
+        self.prompts
+            .iter()
+            .zip(&self.continuations)
+            .map(|(p, c)| ScoreRequest {
+                id: 0,
+                prompt: tok.encode_with_bos(p),
+                continuation: tok.encode(c),
+                mode: self.prune.to_mode(),
+                admitted_at: Instant::now(),
+            })
+            .collect()
     }
 }
 
@@ -393,22 +436,82 @@ mod tests {
             stop_at_eos: true,
             stream: true,
             session: None,
+            speculative: None,
             v2: true,
         };
         assert!(spec.validate().is_ok());
     }
 
     #[test]
+    fn speculative_axis_validates_draft_length() {
+        let mut spec = GenerateSpec {
+            prompts: vec!["a".into()],
+            max_new_tokens: 4,
+            prune: PruneSpec::default(),
+            sampling: SamplingSpec::default(),
+            stop_at_eos: true,
+            stream: false,
+            session: None,
+            speculative: Some(4),
+            v2: true,
+        };
+        assert!(spec.validate().is_ok());
+        // draft length below the smallest compiled bucket is still a
+        // valid opt-in: the scheduler just never finds a bucket and the
+        // request decodes plainly (byte-identical stream)
+        spec.speculative = Some(1);
+        assert!(spec.validate().is_ok());
+        for bad in [0, MAX_DRAFT_TOKENS + 1] {
+            spec.speculative = Some(bad);
+            assert!(spec.validate().is_err(),
+                    "draft_tokens={bad} must be rejected");
+        }
+        spec.speculative = None;
+        assert!(spec.validate().is_ok());
+        // lowering threads the opt-in into every per-prompt request
+        spec.speculative = Some(4);
+        let tok = Tokenizer::new();
+        assert!(spec
+            .to_requests(&tok)
+            .iter()
+            .all(|r| r.speculative == Some(4)));
+    }
+
+    #[test]
     fn score_spec_tokenizes_without_double_bos() {
         let tok = Tokenizer::new();
         let s = ScoreSpec {
-            prompt: "ab".into(),
-            continuation: "cd".into(),
+            prompts: vec!["ab".into()],
+            continuations: vec!["cd".into()],
             prune: PruneSpec::default(),
+            single: true,
         };
         assert!(s.validate().is_ok());
-        let r = s.to_request(&tok);
+        let r = &s.to_requests(&tok)[0];
         assert_eq!(r.prompt.len(), 3, "BOS + 2 bytes");
         assert_eq!(r.continuation.len(), 2, "no BOS on the continuation");
+    }
+
+    #[test]
+    fn batched_score_pairs_rows_by_index() {
+        let tok = Tokenizer::new();
+        let mut s = ScoreSpec {
+            prompts: vec!["ab".into(), "xyz".into()],
+            continuations: vec!["cd".into(), "w".into()],
+            prune: PruneSpec::default(),
+            single: false,
+        };
+        assert!(s.validate().is_ok());
+        let rows = s.to_requests(&tok);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].continuation.len(), 2);
+        assert_eq!(rows[1].prompt.len(), 4, "BOS + 3 bytes");
+        assert_eq!(rows[1].continuation.len(), 1);
+        // mismatched row counts are an admission error
+        s.continuations.pop();
+        assert!(s.validate().is_err());
+        // empty rows too
+        s.continuations = vec!["cd".into(), String::new()];
+        assert!(s.validate().is_err());
     }
 }

@@ -85,7 +85,8 @@ pub fn adaptive_bucket_keep(_requested_keep: f64) -> f64 {
 // Runtime-free coordinator types (Mode, GenResponse) live in
 // `coordinator::types` so the substrate layers build without PJRT; they
 // are re-exported here under their historical paths.
-pub use crate::coordinator::types::{GenResponse, Mode, SelectionInfo};
+pub use crate::coordinator::types::{GenResponse, Mode, SelectionInfo,
+                                    SpecInfo};
 
 /// Device-resident pruned FF weights for one expert set. Shared handles
 /// (`Rc`) so the same set can live in the gather cache, a dispatch
@@ -965,6 +966,96 @@ impl Engine {
         self.session.manifest().executables.get(&name)
     }
 
+    /// The compiled speculative-verify executable for this (batch,
+    /// draft-bucket) combination, if the artifacts provide one.
+    pub fn verify_spec(&self, batch: usize, d: usize)
+                       -> Option<&ExecutableSpec> {
+        self.session
+            .manifest()
+            .executables
+            .get(&format!("verify_b{batch}_s{d}"))
+    }
+
+    /// Draft-length buckets with a compiled `verify_b{batch}_s{D}`
+    /// executable, ascending (specdec::snap_draft_bucket input). Empty
+    /// on artifact sets that predate the speculative ABI — the
+    /// scheduler then never takes a spec tick.
+    pub fn verify_buckets(&self, batch: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| e.kind == "verify" && e.batch == Some(batch))
+            .filter_map(|e| e.seq)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// One speculative verify dispatch (`verify_b{B}_s{D}`): a FULL-
+    /// model forward over D positions per slot. `tokens` is the [B, D]
+    /// row-major verify window — column 0 is each slot's pending token
+    /// (the last emitted, not yet in KV), columns 1..D the drafts the
+    /// pruned model proposed — and `state.pos` is the write position of
+    /// column 0 (the caller must have rewound any draft-phase pos
+    /// advance first). Returns the [B, D, V] per-position logits.
+    ///
+    /// KV after this call holds full-model K/V for all D positions of
+    /// every slot; the caller advances each slot's `pos` by its emitted
+    /// count, which both commits the accepted prefix and "rolls back"
+    /// the rejected rows — they sit beyond `pos`, are never attendable
+    /// (decode masks kpos <= pos), and get overwritten by later steps.
+    /// No splice, no device traffic for rollback.
+    pub fn verify_step(&self, state: &mut DecodeState, tokens: &[i32],
+                       d: usize) -> Result<Vec<f32>> {
+        let t = Timer::start();
+        let b = state.batch;
+        if tokens.len() != b * d {
+            bail!("verify_step: {} tokens for [{b}, {d}] window",
+                  tokens.len());
+        }
+        let name = format!("verify_b{b}_s{d}");
+        if !self.session.manifest().executables.contains_key(&name) {
+            bail!("no {name} executable (re-run make artifacts)");
+        }
+        let tok_dev = self.session.upload_i32(&[b, d], tokens)?;
+        let pos_dev = self.session.upload_i32(&[b], &state.pos)?;
+        let plan = self.base_plan(&name)?;
+        let mut outs = self.session.run_prepared(
+            &plan, &[&state.kcache, &state.vcache, &tok_dev, &pos_dev])?;
+        let vcache = outs.pop().unwrap();
+        let kcache = outs.pop().unwrap();
+        let logits = self.session.download_f32(&outs.pop().unwrap())?;
+        state.kcache = kcache;
+        state.vcache = vcache;
+        // pos is left to the caller (advance-by-emitted); either way
+        // the device pos chain no longer matches the host mirror
+        state.invalidate_pos();
+        t.record_into(&self.metrics.verify_latency);
+        Ok(logits)
+    }
+
+    /// Resolve (and cache) a prepared dispatch plan whose static prefix
+    /// is the base weight set (verify and other full-weight
+    /// executables outside the decode family). Base plans (set id 0)
+    /// pin nothing beyond the WeightStore, so they bypass the LRU
+    /// accounting in [`Engine::decode_plan`].
+    fn base_plan(&self, name: &str) -> Result<Rc<DispatchPlan>> {
+        let tick = self.plan_ticks.get() + 1;
+        self.plan_ticks.set(tick);
+        let key = (name.to_string(), 0u64);
+        if let Some(entry) = self.plans.borrow_mut().get_mut(&key) {
+            entry.0 = tick;
+            return Ok(entry.1.clone());
+        }
+        let plan =
+            Rc::new(self.session.prepare(name, self.weights.ordered_rc())?);
+        self.plans.borrow_mut().insert(key, (tick, plan.clone()));
+        Ok(plan)
+    }
+
     /// Build the device-resident per-slot sampling state: one
     /// (spec, xorshift32 state) pair per slot (pad free slots with
     /// `(SamplerSpec::Greedy, sampling::seed_state(0))`).
@@ -1415,6 +1506,7 @@ impl Engine {
                 finish: finish[i],
                 k_used,
                 selection: SelectionInfo::from_mode(&mode),
+                speculative: None,
                 prefill_ms,
                 select_ms,
                 decode_ms,
@@ -1516,6 +1608,7 @@ impl Engine {
             finish,
             k_used,
             selection: SelectionInfo::from_mode(&req.mode),
+            speculative: None,
             prefill_ms,
             select_ms,
             decode_ms,

@@ -9,6 +9,8 @@
 //! - `slots`      — slot pool (continuous-batching bookkeeping)
 //! - `scheduler`  — continuous batching over the compiled batch buckets
 //! - `engine`     — prefill/select/gather/decode orchestration over PJRT
+//! - `specdec`    — self-speculative draft→verify→accept core (the
+//!   pruned model as a zero-extra-memory drafter; engine-free)
 //! - `gather_cache` — LRU reuse of device-resident pruned weight sets
 //!
 //! `engine` and `scheduler` dispatch through the `runtime::Substrate`
@@ -25,6 +27,7 @@ pub mod router;
 pub mod scheduler;
 pub mod selection;
 pub mod sequence;
+pub mod specdec;
 pub mod shard;
 pub mod slots;
 pub mod types;

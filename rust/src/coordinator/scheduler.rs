@@ -89,8 +89,9 @@ use crate::api::ErrorCode;
 use crate::coordinator::engine::{
     aggregate_norms, DecodeState, Engine, FfOverride, FusedPrefillOut,
     GenResponse, Mode, PrefillLogits, PrefillOut, PrunedWeights,
-    SamplingState, SelectionInfo, StatNeeds,
+    SamplingState, SelectionInfo, SpecInfo, StatNeeds,
 };
+use crate::coordinator::specdec::{accept_lane, snap_draft_bucket};
 use crate::coordinator::router::Router;
 use crate::coordinator::selection::{aggregate_stats, LayerStats};
 use crate::coordinator::sequence::{FinishReason, GenRequest, Phase, Sequence};
@@ -138,6 +139,11 @@ fn cancelled_response(req: &GenRequest) -> GenResponse {
         k_used: None,
         selection: SelectionInfo::from_mode(&req.mode)
             .map(|s| s.with_requested_keep(req.keep_requested)),
+        speculative: req.speculative.map(|d| SpecInfo {
+            draft_tokens: d,
+            proposed: 0,
+            accepted: 0,
+        }),
         prefill_ms: 0.0,
         select_ms: 0.0,
         decode_ms: 0.0,
@@ -743,6 +749,16 @@ impl Scheduler {
         }
 
         let use_fused = self.fused_eligible_tick(&occ);
+        // speculative path: when every occupied slot opted in and this
+        // tick can draft with the pruned weights + verify with a
+        // compiled verify bucket, run draft → verify → accept instead
+        // of one plain step. Ineligible ticks (mixed opt-in, no pruned
+        // set, no bucket, no KV headroom, host-path samplers) fall back
+        // here transparently — the streams are byte-identical either
+        // way, only throughput differs.
+        if let Some(d) = self.spec_draft_bucket(&occ, use_fused) {
+            return self.spec_tick(&occ, d, on_event);
+        }
         let step = if use_fused {
             if self.samp_dirty || self.samp.is_none() {
                 self.rebuild_sampling()?;
@@ -884,6 +900,186 @@ impl Scheduler {
         })
     }
 
+    /// Can this tick run speculatively, and at which compiled draft
+    /// bucket? Eligibility (the table lives in docs/architecture.md):
+    /// every occupied slot opted in via the `speculative` axis, the
+    /// tick is fused-eligible (on-device drafting; the mirrors replay
+    /// acceptance), a pruned drafter weight set is active, a compiled
+    /// `verify_b{B}_s{D}` bucket fits the smallest request, and every
+    /// slot has KV headroom for D verify positions. Any miss means
+    /// plain decode — never an error, and never a different stream.
+    fn spec_draft_bucket(&self, occ: &[usize], use_fused: bool)
+                         -> Option<usize> {
+        if !use_fused {
+            return None; // host samplers / no fused ABI / disabled
+        }
+        self.shared.pruned.as_ref()?; // the drafter IS the pruned set
+        let mut min_req = usize::MAX;
+        for &i in occ {
+            min_req = min_req.min(self.pool.get(i)?.seq.req.speculative?);
+        }
+        let buckets = self.engine.verify_buckets(self.slot_count);
+        let d = snap_draft_bucket(min_req, &buckets)?;
+        if d < 2 {
+            return None; // a one-position verify drafts nothing
+        }
+        // headroom: verify writes D positions per slot
+        let state = self.state.as_ref()?;
+        let max_seq = self.engine.config().max_seq;
+        if occ.iter().any(|&i| state.pos[i] as usize + d > max_seq) {
+            return None;
+        }
+        Some(d)
+    }
+
+    /// One speculative tick: draft D-1 tokens per slot with the pruned
+    /// weights (fused decode, tokens chained on device), verify all D
+    /// positions in one full-model `verify_b{B}_s{D}` call, then emit
+    /// each slot's accepted prefix plus one fresh full-model decision
+    /// (`specdec::accept_lane`). Streams are byte-identical to plain
+    /// decode: every emitted token is the full model's sample_lane
+    /// decision over full-model-KV logits, replayed through the slot's
+    /// mirror. Rejected-draft K/V "rolls back" by the host pos rewind
+    /// alone — rows beyond `pos` are never attendable (decode masks
+    /// kpos <= pos) and later steps overwrite them.
+    fn spec_tick(&mut self, occ: &[usize], d: usize,
+                 on_event: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        let b = self.slot_count;
+        let v = self.engine.config().vocab_size;
+        let pos_before = self.state.as_ref().unwrap().pos.clone();
+        let cur_before = self.cur.clone();
+        if self.samp_dirty || self.samp.is_none() {
+            self.rebuild_sampling()?;
+        }
+        // --- draft: D-1 fused pruned steps. The drafts sample from the
+        // SAME per-position rng states the mirrors will replay during
+        // acceptance (the lanes were seeded from the mirrors and both
+        // advance once per position), so a draft is accepted exactly
+        // when the pruned decision equals the full model's — the
+        // paper's flocking claim, measured per tick.
+        let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(d - 1);
+        for _ in 0..d - 1 {
+            let (toks, _lps) = {
+                let Scheduler { engine, state, cur, shared, samp, .. } =
+                    &mut *self;
+                let samp = samp.as_mut().unwrap();
+                let host_toks: Option<&[i32]> = if samp.tokens.is_some() {
+                    None
+                } else {
+                    Some(cur.as_slice())
+                };
+                engine.decode_sample_step(
+                    state.as_mut().unwrap(),
+                    samp,
+                    host_toks,
+                    shared.pruned.as_deref(),
+                    None,
+                )?
+            };
+            drafts.push(toks);
+        }
+        // --- verify: rewind the draft-phase pos advance, then one
+        // full-model forward over [pending token, drafts] per slot
+        let logits = {
+            let Scheduler { engine, state, .. } = &mut *self;
+            let state = state.as_mut().unwrap();
+            state.pos.copy_from_slice(&pos_before);
+            let mut window = vec![PAD_ID; b * d];
+            for &slot in occ {
+                window[slot * d] = cur_before[slot];
+                for (j, step) in drafts.iter().enumerate() {
+                    window[slot * d + 1 + j] = step[slot];
+                }
+            }
+            engine.verify_step(state, &window, d)?
+        };
+        // the draft chain left the device token + rng lanes D-1 steps
+        // past the emitted stream — rebuild from the mirrors (which
+        // advance exactly once per EMITTED token) before the next
+        // fused tick
+        self.samp = None;
+        self.samp_dirty = true;
+
+        // --- accept: per slot, replay the mirror over the verify rows
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        let (mut proposed, mut accepted) = (0u64, 0u64);
+        for &slot in occ {
+            let entry = self.pool.get_mut(slot).unwrap();
+            let rows: Vec<&[f32]> = (0..d)
+                .map(|j| {
+                    let at = (slot * d + j) * v;
+                    &logits[at..at + v]
+                })
+                .collect();
+            let draft_toks: Vec<i32> =
+                drafts.iter().map(|step| step[slot]).collect();
+            let budget = entry
+                .seq
+                .req
+                .max_new_tokens
+                .saturating_sub(entry.seq.generated.len());
+            let eos = entry.seq.req.stop_at_eos.then_some(EOS_ID);
+            let mirror = entry
+                .device_mirror
+                .as_mut()
+                .context("spec tick on a mirror-less slot")?;
+            let out = accept_lane(mirror, &rows, &draft_toks, budget, eos);
+            entry.spec_proposed += (d - 1) as u64;
+            entry.spec_accepted += out.accepted as u64;
+            proposed += (d - 1) as u64;
+            accepted += out.accepted as u64;
+            self.engine
+                .metrics
+                .spec_acceptance_pct
+                .record_value((out.accepted * 100 / (d - 1)) as u64);
+            let emitted = out.emitted.len();
+            let id = entry.seq.req.id;
+            let mut last = cur_before[slot];
+            for (t, lp) in out.emitted {
+                entry.seq.generated.push(t);
+                entry.seq.logprobs.push(lp);
+                entry.last_token = t;
+                last = t;
+                let now = Instant::now();
+                self.engine
+                    .metrics
+                    .inter_token_latency
+                    .record(now.duration_since(entry.last_token_at));
+                entry.last_token_at = now;
+                self.engine.metrics.tokens_generated.add(1);
+                let index = entry.seq.generated.len() - 1;
+                let text = self.engine.tokenizer.decode(&[t]);
+                on_event(EngineEvent::Token { id, index, token: t, text });
+            }
+            let gen_len = entry.seq.generated.len();
+            let stop_eos = entry.seq.req.stop_at_eos;
+            let max_new = entry.seq.req.max_new_tokens;
+            // commit the accepted prefix: pos advances by exactly the
+            // emitted count; rejected rows now sit beyond pos
+            self.state.as_mut().unwrap().pos[slot] =
+                pos_before[slot] + emitted as i32;
+            self.cur[slot] = last;
+            if stop_eos && last == EOS_ID {
+                finished.push((slot, FinishReason::Eos));
+            } else if gen_len >= max_new {
+                finished.push((slot, FinishReason::Length));
+            }
+        }
+        for (slot, reason) in finished {
+            self.retire_slot(slot, reason, on_event)?;
+        }
+        self.engine.metrics.spec_ticks.inc();
+        self.engine.metrics.draft_tokens_proposed.add(proposed);
+        self.engine.metrics.draft_tokens_accepted.add(accepted);
+        self.engine.metrics.decode_ticks.inc();
+        self.engine
+            .metrics
+            .slot_occupancy
+            .record_value(occ.len() as u64);
+        self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
+        Ok(())
+    }
+
     /// (Re)build the device-resident sampling state from the slots'
     /// host-side stream mirrors — no device readback needed: the
     /// mirrors advance in lockstep with the device (fused ticks) or do
@@ -947,7 +1143,8 @@ impl Scheduler {
     }
 
     fn response_from(&self, entry: SlotEntry) -> Result<GenResponse> {
-        let SlotEntry { seq, prefill_ms, select_ms, expert_idx, .. } = entry;
+        let SlotEntry { seq, prefill_ms, select_ms, expert_idx,
+                        spec_proposed, spec_accepted, .. } = entry;
         let decode_s = match (seq.first_token_at, seq.finished_at) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
@@ -996,6 +1193,11 @@ impl Scheduler {
             k_used,
             selection: SelectionInfo::from_mode(&seq.req.mode)
                 .map(|s| s.with_requested_keep(seq.req.keep_requested)),
+            speculative: seq.req.speculative.map(|d| SpecInfo {
+                draft_tokens: d,
+                proposed: spec_proposed,
+                accepted: spec_accepted,
+            }),
             prefill_ms,
             select_ms,
             decode_ms: decode_s * 1e3,

@@ -47,6 +47,12 @@ pub struct GenRequest {
     /// served keep then lives in `mode`); threaded into the response's
     /// `prune` provenance so degradation is auditable
     pub keep_requested: Option<f64>,
+    /// self-speculative decoding opt-in: the requested draft length per
+    /// spec tick (v2 `speculative:{draft_tokens}` axis). The scheduler
+    /// snaps the pool-wide draft length to a compiled verify bucket and
+    /// falls back to plain decode whenever a tick is spec-ineligible;
+    /// the emitted stream is byte-identical either way (specdec.rs).
+    pub speculative: Option<usize>,
     /// stamped by `Router::admit`; TTFT is measured from here
     pub admitted_at: Instant,
 }
@@ -64,6 +70,7 @@ impl GenRequest {
             stop_at_eos: true,
             session: None,
             keep_requested: None,
+            speculative: None,
             admitted_at: Instant::now(),
         }
     }

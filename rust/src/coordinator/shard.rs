@@ -42,14 +42,22 @@
 //! [`Shard::park`] it permanently when the crash loop trips the circuit
 //! breaker.
 //!
-//! Overload is handled BEFORE placement by a staged, SLO-aware
-//! controller (see [`SloPolicy`]): under moderate pressure, prunable
-//! requests are *down-kept* — snapped to a lower keep fraction, with the
-//! client's original ask recorded in the response's `prune` provenance —
-//! and under heavy pressure admission *sheds* with a retryable
-//! `overloaded` error carrying `retry_after_ms`. Dual enter/exit
-//! thresholds give the dial hysteresis so it cannot flap on a noisy
-//! load signal.
+//! Overload is handled at placement by a staged, SLO-aware controller
+//! (see [`SloPolicy`]): under moderate pressure, prunable requests are
+//! *down-kept* — snapped to a lower keep fraction, with the client's
+//! original ask recorded in the response's `prune` provenance — and
+//! under heavy pressure admission *sheds* with a retryable `overloaded`
+//! error carrying `retry_after_ms`. Dual enter/exit thresholds give the
+//! dial hysteresis so it cannot flap on a noisy load signal.
+//!
+//! The controller stage is PER SHARD: the shared pooled-capacity
+//! utilization term is max'd with each shard's OWN rolling-p99
+//! TTFT/inter-token-latency terms (not a fleet max), and the stage is
+//! evaluated against the shard an admission actually targets. One slow
+//! shard therefore degrades or sheds only the traffic placed on it —
+//! sessionless work spills past a shedding shard to a healthy one, and
+//! only a session-affine request (pinned to its slow home) or a fleet
+//! where EVERY target sheds sees the `overloaded` error.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -196,12 +204,14 @@ pub enum Pressure {
 
 /// Tunables for the staged admission controller.
 ///
-/// The controller watches a scalar pressure signal: fleet utilization
-/// (occupied slots + queued admissions over total slots + queue
-/// capacity) max'd with rolling-p99 TTFT / inter-token-latency terms
-/// scaled so a p99 AT the SLO reads as shed-worthy pressure. Each stage
-/// has separate enter/exit thresholds (enter > exit) so the dial holds
-/// its state in the band between them instead of flapping.
+/// The controller watches a scalar pressure signal per shard: fleet
+/// utilization (occupied slots + queued admissions over total slots +
+/// queue capacity — capacity is pooled because spilling and stealing
+/// move sessionless work freely) max'd with THAT SHARD's rolling-p99
+/// TTFT / inter-token-latency terms, scaled so a p99 AT the SLO reads
+/// as shed-worthy pressure. Each stage has separate enter/exit
+/// thresholds (enter > exit) so the dial holds its state in the band
+/// between them instead of flapping.
 #[derive(Clone, Copy, Debug)]
 pub struct SloPolicy {
     /// Nominal → Degrade when pressure reaches this
@@ -246,8 +256,10 @@ pub struct ShardRouter {
     stolen: AtomicU64,
     /// staged-admission tunables (fixed at construction)
     slo: SloPolicy,
-    /// current controller stage, advanced on every admission
-    pressure: Mutex<Pressure>,
+    /// per-shard controller stage, advanced when an admission evaluates
+    /// that shard as a target (one slow shard's latency breach must not
+    /// degrade traffic placed on its healthy peers)
+    pressure: Mutex<Vec<Pressure>>,
     /// recently-cancelled ids (bounded ring). A cancel flag drained by a
     /// shard BEFORE a steal delivers the request there is lost (flags
     /// drain once per tick); re-flagging from this ring after every
@@ -280,7 +292,7 @@ impl ShardRouter {
             next_id: AtomicU64::new(1),
             stolen: AtomicU64::new(0),
             slo: SloPolicy::default(),
-            pressure: Mutex::new(Pressure::Nominal),
+            pressure: Mutex::new(vec![Pressure::Nominal; n_shards]),
             recent_cancels: Mutex::new(VecDeque::new()),
         }
     }
@@ -293,19 +305,32 @@ impl ShardRouter {
         self
     }
 
-    /// The controller stage the LAST admission decision used
-    /// (telemetry / tests).
+    /// The most severe controller stage across the shards (telemetry /
+    /// tests; single-shard fleets read exactly their shard's stage).
     pub fn pressure(&self) -> Pressure {
-        *self.pressure.lock().unwrap()
+        let st = self.pressure.lock().unwrap();
+        if st.contains(&Pressure::Shed) {
+            Pressure::Shed
+        } else if st.contains(&Pressure::Degrade) {
+            Pressure::Degrade
+        } else {
+            Pressure::Nominal
+        }
     }
 
-    /// Scalar overload signal: fleet utilization max'd with SLO-relative
-    /// rolling-p99 latency terms. Only healthy shards count — capacity
-    /// that placement cannot reach is not capacity.
-    fn pressure_signal(&self) -> f64 {
+    /// One shard's controller stage (telemetry / tests).
+    pub fn shard_pressure(&self, i: usize) -> Pressure {
+        self.pressure.lock().unwrap()[i]
+    }
+
+    /// Pooled-capacity utilization over the healthy shards. Shared
+    /// across the per-shard signals — spilling and stealing move
+    /// sessionless work freely, so free capacity anywhere absorbs
+    /// backlog anywhere; capacity that placement cannot reach
+    /// (unhealthy shards) is not capacity.
+    fn utilization(&self) -> f64 {
         let (mut busy, mut slots) = (0u64, 0u64);
         let (mut queued, mut cap) = (0usize, 0usize);
-        let mut slo_term: f64 = 0.0;
         for s in &self.shards {
             if !s.is_healthy() {
                 continue;
@@ -314,28 +339,40 @@ impl ShardRouter {
             slots += s.slots_total();
             queued += s.router.len();
             cap += s.router.capacity;
-            if let Some(m) = s.metrics() {
-                let ttft =
-                    m.ttft.percentile_us(99.0) / self.slo.ttft_slo_us;
-                let itl = m.inter_token_latency.percentile_us(99.0)
-                    / self.slo.itl_slo_us;
-                // a p99 at the SLO maps straight onto the shed
-                // threshold: breaching latency sheds even when
-                // utilization alone looks fine
-                slo_term =
-                    slo_term.max(ttft.max(itl) * self.slo.shed_enter);
-            }
         }
         let denom = (slots as usize + cap).max(1) as f64;
-        let util = (busy as usize + queued) as f64 / denom;
-        util.max(slo_term)
+        (busy as usize + queued) as f64 / denom
     }
 
-    /// Advance the staged controller (dual-threshold hysteresis) and
-    /// return the stage this admission must apply.
-    fn eval_pressure(&self) -> Pressure {
-        let sig = self.pressure_signal();
-        let mut st = self.pressure.lock().unwrap();
+    /// One shard's overload signal: pooled utilization max'd with the
+    /// shard's OWN SLO-relative rolling-p99 latency terms. Latency is
+    /// deliberately not pooled and not fleet-max'd: a p99 breach on one
+    /// shard is that shard's serving problem — its peers are still
+    /// meeting the SLO and must keep admitting at full keep.
+    fn shard_signal(&self, util: f64, shard: &Shard) -> f64 {
+        util.max(self.latency_term(shard))
+    }
+
+    /// The shard's SLO-relative latency pressure alone: rolling-p99
+    /// TTFT/ITL over their SLOs, scaled so a p99 AT the SLO maps
+    /// straight onto the shed threshold — breaching latency sheds even
+    /// when utilization alone looks fine.
+    fn latency_term(&self, shard: &Shard) -> f64 {
+        let Some(m) = shard.metrics() else { return 0.0 };
+        let ttft = m.ttft.percentile_us(99.0) / self.slo.ttft_slo_us;
+        let itl = m.inter_token_latency.percentile_us(99.0)
+            / self.slo.itl_slo_us;
+        ttft.max(itl) * self.slo.shed_enter
+    }
+
+    /// Advance one shard's staged controller (dual-threshold
+    /// hysteresis) and return the stage an admission targeting it must
+    /// apply. `util` is the shared pooled-utilization term, computed
+    /// once per admission and reused across the spill candidates.
+    fn eval_pressure_for(&self, i: usize, util: f64) -> Pressure {
+        let sig = self.shard_signal(util, &self.shards[i]);
+        let mut all = self.pressure.lock().unwrap();
+        let st = &mut all[i];
         *st = match *st {
             Pressure::Nominal if sig >= self.slo.shed_enter => {
                 Pressure::Shed
@@ -462,19 +499,6 @@ impl ShardRouter {
         if req.id == 0 {
             req.id = self.fresh_id();
         }
-        // staged overload control runs BEFORE placement: shed is the
-        // last resort, down-keep buys capacity first (and is audited in
-        // the response's prune provenance)
-        let mut downkept = false;
-        match self.eval_pressure() {
-            Pressure::Nominal => {}
-            Pressure::Degrade => downkept = self.downkeep(&mut req),
-            Pressure::Shed => {
-                return Err(AdmitError::Overloaded {
-                    retry_after_ms: self.retry_after_ms(),
-                });
-            }
-        }
         let targets: Vec<usize> = match &req.session {
             Some(key) => {
                 let home = self.home_shard(key);
@@ -492,8 +516,22 @@ impl ShardRouter {
         if targets.is_empty() {
             return Err(AdmitError::NoHealthyShards);
         }
+        // staged overload control runs per TARGET shard: shed is the
+        // last resort, down-keep buys capacity first (audited in the
+        // response's prune provenance), and a shedding shard is skipped
+        // the way a full queue is — sessionless work spills to a
+        // healthy peer, only affine work eats its slow home's refusal
+        let util = self.utilization();
+        let mut all_shed = true;
         for &i in &targets {
             let shard = &self.shards[i];
+            let mut downkept = false;
+            match self.eval_pressure_for(i, util) {
+                Pressure::Nominal => {}
+                Pressure::Degrade => downkept = self.downkeep(&mut req),
+                Pressure::Shed => continue,
+            }
+            all_shed = false;
             match shard.router.admit(req.clone()) {
                 Ok(id) => {
                     // close the admit/poison race: if the shard died
@@ -520,6 +558,13 @@ impl ShardRouter {
                 Err(e) => return Err(e),
             }
         }
+        if all_shed {
+            // every shard this request could land on is shedding — only
+            // now is `overloaded` the honest fleet-level answer
+            return Err(AdmitError::Overloaded {
+                retry_after_ms: self.retry_after_ms(),
+            });
+        }
         Err(AdmitError::QueueFull { capacity: self.capacity() })
     }
 
@@ -531,23 +576,30 @@ impl ShardRouter {
         if req.id == 0 {
             req.id = self.fresh_id();
         }
-        // scores have no keep axis to degrade, but they are work-bearing
-        // and shed like everything else under heavy pressure
-        if self.eval_pressure() == Pressure::Shed {
-            return Err(AdmitError::Overloaded {
-                retry_after_ms: self.retry_after_ms(),
-            });
-        }
         let targets = self.healthy_by_load();
         if targets.is_empty() {
             return Err(AdmitError::NoHealthyShards);
         }
+        // scores have no keep axis to degrade, but they are
+        // work-bearing and a shedding shard refuses them like anything
+        // else — they just spill past it to a healthy peer first
+        let util = self.utilization();
+        let mut all_shed = true;
         for &i in &targets {
+            if self.eval_pressure_for(i, util) == Pressure::Shed {
+                continue;
+            }
+            all_shed = false;
             match self.shards[i].router.admit_score(req.clone()) {
                 Ok(id) => return Ok((id, i)),
                 Err(AdmitError::QueueFull { .. }) => continue,
                 Err(e) => return Err(e),
             }
+        }
+        if all_shed {
+            return Err(AdmitError::Overloaded {
+                retry_after_ms: self.retry_after_ms(),
+            });
         }
         Err(AdmitError::QueueFull { capacity: self.capacity() })
     }
@@ -579,9 +631,12 @@ impl ShardRouter {
     /// One stealing pass (also run after every sessionless admission):
     /// while some healthy shard is fully idle and another healthy
     /// shard's queue is deep, move the deep queue's newest sessionless
-    /// request to the idle shard. Also evacuates anything stranded in a
-    /// poisoned shard's queue (affinity included — the home engine is
-    /// gone). Returns how many requests moved.
+    /// request to the idle shard. A shard whose own latency signal
+    /// reads shed-worthy never steals — placement just routed work
+    /// around it, and stealing it back would undo the per-shard SLO
+    /// isolation. Also evacuates anything stranded in a poisoned
+    /// shard's queue (affinity included — the home engine is gone).
+    /// Returns how many requests moved.
     pub fn rebalance(&self) -> usize {
         let mut moved = 0;
         // evacuation: a request that raced into a queue after its shard
@@ -599,11 +654,11 @@ impl ShardRouter {
         }
         // idle-steals-from-deep
         loop {
-            let Some(thief) = self
-                .shards
-                .iter()
-                .find(|s| s.is_healthy() && s.load() == 0)
-            else {
+            let Some(thief) = self.shards.iter().find(|s| {
+                s.is_healthy()
+                    && s.load() == 0
+                    && self.latency_term(s) < self.slo.shed_enter
+            }) else {
                 break;
             };
             let Some(victim) = self
@@ -995,6 +1050,64 @@ mod tests {
         assert_eq!(got.keep_requested, None);
         assert!(matches!(got.mode, Mode::Griffin { keep, .. }
                          if (keep - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn slow_shard_sheds_only_its_own_admissions() {
+        use crate::metrics::MetricsRegistry;
+        use std::time::Duration;
+        let sr = ShardRouter::new(2, 64, 128);
+        // shard 0 breaches its TTFT SLO badly; shard 1 is healthy and
+        // publishes comfortably-in-SLO latencies
+        let slow = Arc::new(MetricsRegistry::default());
+        for _ in 0..64 {
+            slow.ttft.record(Duration::from_secs(60));
+        }
+        sr.shard(0).publish_metrics(slow);
+        let fast = Arc::new(MetricsRegistry::default());
+        for _ in 0..64 {
+            fast.ttft.record(Duration::from_millis(1));
+        }
+        sr.shard(1).publish_metrics(fast);
+        // sessionless work spills past the shedding shard: the latency
+        // breach is shard 0's problem, not the fleet's
+        for _ in 0..4 {
+            let (_, at) = sr.admit(gr(0.9)).unwrap();
+            assert_eq!(at, 1, "slow shard must not take the admission");
+        }
+        assert_eq!(sr.shard_pressure(0), Pressure::Shed);
+        assert_eq!(sr.shard_pressure(1), Pressure::Nominal);
+        // the admitted work was NOT down-kept: shard 1 is nominal
+        let got = sr.shard(1).router.steal_newest(|_| true).unwrap();
+        assert_eq!(got.keep_requested, None);
+        // scores spill the same way
+        let (_, at) = sr
+            .admit_score(ScoreRequest {
+                id: 0,
+                prompt: vec![1],
+                continuation: vec![2],
+                mode: Mode::Full,
+                admitted_at: std::time::Instant::now(),
+            })
+            .unwrap();
+        assert_eq!(at, 1);
+        // a session homed on the slow shard eats the honest refusal —
+        // affinity never spills, not even away from a shedding home
+        let key = (0..100)
+            .map(|i| format!("s{i}"))
+            .find(|k| sr.home_shard(k) == 0)
+            .unwrap();
+        assert!(matches!(
+            sr.admit(sreq(&key)),
+            Err(AdmitError::Overloaded { .. })
+        ));
+        // a session homed on the fast shard is untouched
+        let key1 = (0..100)
+            .map(|i| format!("s{i}"))
+            .find(|k| sr.home_shard(k) == 1)
+            .unwrap();
+        let (_, at) = sr.admit(sreq(&key1)).unwrap();
+        assert_eq!(at, 1);
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct SlotEntry {
     pub prefill_ms: f64,
     /// wall time of this sequence's selection at admission
     pub select_ms: f64,
+    /// speculative decoding: draft tokens the pruned drafter proposed
+    /// for this slot / drafts the full model's verify pass accepted
+    /// (response provenance + the per-slot acceptance-rate histogram)
+    pub spec_proposed: u64,
+    pub spec_accepted: u64,
 }
 
 impl SlotEntry {
@@ -76,6 +81,8 @@ impl SlotEntry {
             last_token_at: Instant::now(),
             prefill_ms: 0.0,
             select_ms: 0.0,
+            spec_proposed: 0,
+            spec_accepted: 0,
         }
     }
 

@@ -1,0 +1,283 @@
+//! Self-speculative decoding core: the draft→verify→accept rule.
+//!
+//! GRIFFIN's pruned FF block is the *same weights*, gathered (paper
+//! eq. 6-7) — so the pruned model is a zero-extra-memory drafter for
+//! the full model. The scheduler drafts D-1 tokens per slot with the
+//! existing `decode_pruned_sample_b{B}_k{K}` executables, verifies all
+//! D positions (the pending token plus the drafts) in one
+//! `verify_b{B}_s{D}` full-model call, and this module decides — per
+//! slot, host-side — which tokens to EMIT.
+//!
+//! The emitted stream is BYTE-IDENTICAL to plain (non-speculative)
+//! decode by construction: at every position the emitted token is the
+//! FULL model's sampler decision, replayed through the slot's
+//! [`DeviceSampler`] mirror — the same `sample_lane` arithmetic the
+//! fused executables and the CPU substrate run, over the same seeded
+//! xorshift32 stream, advanced exactly once per emitted token. Draft
+//! tokens never reach the output; they only determine how many verify
+//! positions are usable per call:
+//!
+//!   position j emits t_j = sample(verify_logits[j]);
+//!   if t_j == draft[j] the next verify row is still on-policy and the
+//!   loop continues; otherwise t_j is the corrected token and the rows
+//!   after j are off-policy — stop.
+//!
+//! The rng streams stay aligned by induction: the drafts were sampled
+//! (on device, during the draft phase) from the same per-position
+//! states the full model would have used, because acceptance is
+//! longest-prefix — the first mismatch ends the tick, and every
+//! position before it consumed identical draws.
+//!
+//! Greedy degenerates to: emitted prefix = longest common prefix of
+//! draft vs. per-position verify argmax, plus one corrected token —
+//! the classic speculative-decoding accept rule. Both properties are
+//! pinned engine-free in the tests below.
+//!
+//! KV-rollback rule (owned by the scheduler, stated here because the
+//! accept rule depends on it): verify writes full-model K/V for all D
+//! positions; after accepting m = `emitted.len()` tokens the slot's
+//! host `pos` advances by exactly m, so rows `pos+m .. pos+D` hold
+//! rejected-draft K/V but are never attendable (decode masks
+//! `kpos <= pos`) and are overwritten by later steps. Rollback is a
+//! host pos rewind — no splice, no device traffic.
+
+use crate::sampling::{log_softmax_at, DeviceSampler};
+
+/// Outcome of one slot's accept pass over one verify call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneOutcome {
+    /// Tokens to emit in order, with their FULL-model logprobs —
+    /// between 1 and D entries (the last is always a fresh full-model
+    /// decision: the correction on mismatch, the bonus token when every
+    /// draft was accepted). Empty only when `budget` was 0.
+    pub emitted: Vec<(i32, f32)>,
+    /// How many draft tokens matched the full model's decision (=
+    /// `emitted.len() - 1` unless EOS or the budget ended the pass
+    /// early).
+    pub accepted: usize,
+}
+
+/// Decide one slot's emissions from its verify logits.
+///
+/// `rows` are the D per-position full-model logits rows of this slot
+/// (`verify_b{B}_s{D}` output row d = distribution after consuming the
+/// pending token and drafts `draft[..d]`). `draft` holds the D-1 draft
+/// tokens that were fed as verify input columns `1..D`. `mirror` is the
+/// slot's canonical sampler mirror — advanced exactly once per emitted
+/// token, never for unused rows, so the stream resumes exactly where a
+/// plain decode tick would have left it. `budget` caps emissions (the
+/// slot's remaining `max_new_tokens`); `eos` stops the pass after an
+/// end-of-sequence emission like plain decode retirement does.
+pub fn accept_lane(
+    mirror: &mut DeviceSampler,
+    rows: &[&[f32]],
+    draft: &[i32],
+    budget: usize,
+    eos: Option<i32>,
+) -> LaneOutcome {
+    debug_assert!(draft.len() + 1 == rows.len() || rows.is_empty());
+    let mut out = LaneOutcome { emitted: Vec::new(), accepted: 0 };
+    for (j, row) in rows.iter().enumerate() {
+        if out.emitted.len() >= budget {
+            break;
+        }
+        let tok = mirror.sample(row) as i32;
+        out.emitted.push((tok, log_softmax_at(row, tok as usize)));
+        if eos == Some(tok) {
+            break;
+        }
+        if j < draft.len() && draft[j] == tok {
+            out.accepted += 1;
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Snap a requested draft length to the largest compiled verify bucket
+/// that does not exceed it (admission validated `requested >= 1`);
+/// `None` when no bucket fits — the slot falls back to plain decode.
+pub fn snap_draft_bucket(requested: usize, buckets: &[usize])
+                         -> Option<usize> {
+    buckets.iter().copied().filter(|&d| d <= requested.max(1)).max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{argmax, sample_lane, seed_state,
+                          DeviceSampler, SamplerSpec};
+    use crate::workload::rng::XorShift64Star;
+
+    fn rand_rows(rng: &mut XorShift64Star, d: usize, v: usize)
+                 -> Vec<Vec<f32>> {
+        (0..d)
+            .map(|_| {
+                (0..v)
+                    .map(|_| (rng.unit_f64() as f32 - 0.5) * 6.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn as_refs(rows: &[Vec<f32>]) -> Vec<&[f32]> {
+        rows.iter().map(|r| r.as_slice()).collect()
+    }
+
+    #[test]
+    fn greedy_acceptance_is_longest_common_prefix() {
+        // Property: with a greedy mirror, the emitted prefix equals the
+        // longest common prefix of (draft, per-row argmax), plus one
+        // corrected/bonus token.
+        let mut rng = XorShift64Star::new(7);
+        for case in 0..200 {
+            let d = [4usize, 8][case % 2];
+            let rows = rand_rows(&mut rng, d, 40);
+            let am: Vec<i32> =
+                rows.iter().map(|r| argmax(r) as i32).collect();
+            // drafts agree with argmax for a random prefix, then diverge
+            let agree = rng.below(d);
+            let draft: Vec<i32> = (0..d - 1)
+                .map(|j| {
+                    if j < agree {
+                        am[j]
+                    } else {
+                        // any token that is NOT the argmax
+                        (am[j] + 1) % 40
+                    }
+                })
+                .collect();
+            let mut m = DeviceSampler::new(SamplerSpec::Greedy, 1);
+            let out = accept_lane(&mut m, &as_refs(&rows), &draft,
+                                  usize::MAX, None);
+            let lcp = draft
+                .iter()
+                .zip(&am)
+                .take_while(|(a, b)| a == b)
+                .count();
+            assert_eq!(out.accepted, lcp, "case {case}");
+            assert_eq!(out.emitted.len(), lcp + 1, "case {case}");
+            for (j, (tok, _)) in out.emitted.iter().enumerate() {
+                assert_eq!(*tok, am[j], "case {case} pos {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_full_acceptance_emits_every_position() {
+        // When every draft equals the full model's decision, all D rows
+        // emit (D-1 accepted drafts + the bonus token) and the mirror
+        // advances exactly D times.
+        let mut rng = XorShift64Star::new(11);
+        let rows = rand_rows(&mut rng, 8, 64);
+        let spec = SamplerSpec::TopK { k: 4, temperature: 0.9 };
+        // precompute the decisions with a scout mirror
+        let mut scout = DeviceSampler::new(spec, 99);
+        let dec: Vec<i32> = rows
+            .iter()
+            .map(|r| scout.sample(r) as i32)
+            .collect();
+        let draft: Vec<i32> = dec[..7].to_vec();
+        let mut m = DeviceSampler::new(spec, 99);
+        let out = accept_lane(&mut m, &as_refs(&rows), &draft,
+                              usize::MAX, None);
+        assert_eq!(out.accepted, 7);
+        let toks: Vec<i32> =
+            out.emitted.iter().map(|(t, _)| *t).collect();
+        assert_eq!(toks, dec);
+        assert_eq!(m.state(), scout.state(), "one draw per emission");
+    }
+
+    #[test]
+    fn forced_zero_acceptance_emits_one_corrected_token() {
+        let mut rng = XorShift64Star::new(13);
+        let rows = rand_rows(&mut rng, 4, 64);
+        let spec = SamplerSpec::TopK { k: 4, temperature: 0.9 };
+        let mut scout = DeviceSampler::new(spec, 5);
+        let first = scout.sample(&rows[0]) as i32;
+        // drafts guaranteed to mismatch every decision
+        let draft = vec![(first + 1) % 64; 3];
+        let mut m = DeviceSampler::new(spec, 5);
+        let out = accept_lane(&mut m, &as_refs(&rows), &draft,
+                              usize::MAX, None);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.emitted.len(), 1);
+        assert_eq!(out.emitted[0].0, first);
+        // exactly one rng draw — the stream resumes as if a single
+        // plain decode tick had run
+        assert_eq!(m.state(), scout.state());
+    }
+
+    #[test]
+    fn seeded_stream_equals_plain_decode_replay() {
+        // The central equivalence: feeding accept_lane the SAME logits
+        // rows a plain decode sequence would have produced yields the
+        // same tokens, the same logprobs, and the same final rng state
+        // as stepping sample_lane row by row — regardless of how many
+        // drafts matched.
+        let mut rng = XorShift64Star::new(17);
+        for case in 0..100 {
+            let d = 4;
+            let rows = rand_rows(&mut rng, d, 48);
+            let spec = SamplerSpec::TopK { k: 6, temperature: 1.1 };
+            let seed = rng.next_u64();
+            // plain decode: one sample_lane draw per row until a
+            // mismatch with the draft would have ended the spec tick
+            let draft: Vec<i32> =
+                (0..d - 1).map(|_| rng.below(48) as i32).collect();
+            let mut state = seed_state(seed);
+            let mut want = Vec::new();
+            for (j, row) in rows.iter().enumerate() {
+                let (t, ns) = sample_lane(row, 1.1, 6, state, 32);
+                state = ns;
+                want.push((t as i32, log_softmax_at(row, t)));
+                if j < draft.len() && draft[j] == t as i32 {
+                    continue;
+                }
+                break;
+            }
+            let mut m = DeviceSampler::new(spec, seed);
+            let out = accept_lane(&mut m, &as_refs(&rows), &draft,
+                                  usize::MAX, None);
+            assert_eq!(out.emitted, want, "case {case}");
+            assert_eq!(m.state(), state, "case {case} rng drift");
+        }
+    }
+
+    #[test]
+    fn budget_and_eos_stop_emission() {
+        let mut rng = XorShift64Star::new(19);
+        let rows = rand_rows(&mut rng, 4, 16);
+        let am: Vec<i32> = rows.iter().map(|r| argmax(r) as i32).collect();
+        let draft = vec![am[0], am[1], am[2]];
+        // budget 2 < full acceptance 4: exactly 2 draws
+        let mut m = DeviceSampler::new(SamplerSpec::Greedy, 1);
+        let out = accept_lane(&mut m, &as_refs(&rows), &draft, 2, None);
+        assert_eq!(out.emitted.len(), 2);
+        assert_eq!(out.accepted, 2);
+        // eos on the first emission stops even though drafts match
+        let mut m = DeviceSampler::new(SamplerSpec::Greedy, 1);
+        let out =
+            accept_lane(&mut m, &as_refs(&rows), &draft, 99, Some(am[0]));
+        assert_eq!(out.emitted.len(), 1);
+        assert_eq!(out.accepted, 0, "eos emission is terminal");
+        // zero budget emits nothing and never touches the mirror
+        let mut m = DeviceSampler::new(SamplerSpec::Greedy, 1);
+        let s0 = m.state();
+        let out = accept_lane(&mut m, &as_refs(&rows), &draft, 0, None);
+        assert!(out.emitted.is_empty());
+        assert_eq!(m.state(), s0);
+    }
+
+    #[test]
+    fn snap_draft_bucket_picks_largest_fitting() {
+        let buckets = [4usize, 8];
+        assert_eq!(snap_draft_bucket(4, &buckets), Some(4));
+        assert_eq!(snap_draft_bucket(6, &buckets), Some(4));
+        assert_eq!(snap_draft_bucket(8, &buckets), Some(8));
+        assert_eq!(snap_draft_bucket(64, &buckets), Some(8));
+        assert_eq!(snap_draft_bucket(3, &buckets), None);
+        assert_eq!(snap_draft_bucket(5, &[]), None);
+    }
+}

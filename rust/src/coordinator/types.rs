@@ -129,6 +129,22 @@ impl SelectionInfo {
     }
 }
 
+/// Speculative-decoding provenance (surfaced as the v2 response
+/// `speculative` object): what the request opted into and how the
+/// pruned drafter performed. `accepted / proposed` is the serving-time
+/// measurement of the paper's flocking claim — how often the pruned
+/// FF block's next-token decision matches the full model's.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecInfo {
+    /// requested draft length (the served length snaps per tick to a
+    /// compiled verify bucket and may be smaller)
+    pub draft_tokens: usize,
+    /// draft tokens the pruned drafter proposed for this sequence
+    pub proposed: u64,
+    /// drafts the full model's verify pass accepted
+    pub accepted: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
@@ -139,6 +155,9 @@ pub struct GenResponse {
     pub k_used: Option<usize>,
     /// selection provenance (v2 responses surface it as `prune`)
     pub selection: Option<SelectionInfo>,
+    /// speculative-decoding provenance (v2 `speculative` object); None
+    /// when the request never opted in
+    pub speculative: Option<SpecInfo>,
     pub prefill_ms: f64,
     pub select_ms: f64,
     pub decode_ms: f64,

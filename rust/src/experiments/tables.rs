@@ -139,6 +139,7 @@ pub fn table3(args: &Args) -> Result<()> {
             gen_len: g,
             mean_gap_ms: 0,
             mixed_lengths: false,
+            mix: trace::OpMix::default(),
         });
         let mut prompt_s = 0.0;
         let mut time_mode = |mode: Mode, engine: &mut Engine|
@@ -154,6 +155,7 @@ pub fn table3(args: &Args) -> Result<()> {
                 stop_at_eos: false,
                 session: None,
                 keep_requested: None,
+                speculative: None,
                 admitted_at: std::time::Instant::now(),
             };
             engine.generate(&warm)?;
@@ -169,6 +171,7 @@ pub fn table3(args: &Args) -> Result<()> {
                     stop_at_eos: false,
                     session: None,
                     keep_requested: None,
+                    speculative: None,
                     admitted_at: std::time::Instant::now(),
                 };
                 let resp = engine.generate(&req)?;
@@ -290,6 +293,7 @@ pub fn table4(args: &Args) -> Result<()> {
                     stop_at_eos: false,
                     session: None,
                     keep_requested: None,
+                    speculative: None,
                     admitted_at: std::time::Instant::now(),
                 })
                 .collect();

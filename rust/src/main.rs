@@ -113,6 +113,7 @@ fn cmd_generate(args: &cli::Args) -> Result<()> {
         stop_at_eos: true,
         session: None,
         keep_requested: None,
+        speculative: None,
         admitted_at: std::time::Instant::now(),
     };
     let resp = if args.flag("scan") {

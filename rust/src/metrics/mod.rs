@@ -275,6 +275,21 @@ pub struct MetricsRegistry {
     /// decode-weight rebuilds served without running gather_k{K}
     pub gather_cache_hits: Counter,
     pub gather_cache_misses: Counter,
+    /// speculative decode ticks (draft → verify → accept; one per
+    /// verify_b{B}_s{D} dispatch). Plain decode ticks taken as spec
+    /// fallback still count only in `decode_ticks`.
+    pub spec_ticks: Counter,
+    /// draft tokens proposed by the pruned drafter across all slots
+    /// (D-1 per slot per spec tick)
+    pub draft_tokens_proposed: Counter,
+    /// draft tokens whose full-model verification matched the slot
+    /// sampler's decision (accepted = emitted without a correction)
+    pub draft_tokens_accepted: Counter,
+    /// per-slot acceptance rate per spec tick, in percent (a value
+    /// histogram like slot_occupancy, not a latency)
+    pub spec_acceptance_pct: Histogram,
+    /// latency of the verify_b{B}_s{D} full-model dispatch
+    pub verify_latency: Histogram,
     pub slots_busy: Gauge,
     pub slots_total: Gauge,
     pub tokens_generated: Meter,
@@ -322,6 +337,11 @@ impl MetricsRegistry {
         self.host_bytes_to_host.add(other.host_bytes_to_host.get());
         self.gather_cache_hits.add(other.gather_cache_hits.get());
         self.gather_cache_misses.add(other.gather_cache_misses.get());
+        self.spec_ticks.add(other.spec_ticks.get());
+        self.draft_tokens_proposed.add(other.draft_tokens_proposed.get());
+        self.draft_tokens_accepted.add(other.draft_tokens_accepted.get());
+        self.spec_acceptance_pct.absorb(&other.spec_acceptance_pct);
+        self.verify_latency.absorb(&other.verify_latency);
         self.slots_busy
             .set(self.slots_busy.get() + other.slots_busy.get());
         self.slots_total
@@ -422,6 +442,25 @@ impl MetricsRegistry {
                 obj(vec![
                     ("hits", n(self.gather_cache_hits.get() as f64)),
                     ("misses", n(self.gather_cache_misses.get() as f64)),
+                ]),
+            ),
+            (
+                "speculative",
+                obj(vec![
+                    ("spec_ticks", n(self.spec_ticks.get() as f64)),
+                    (
+                        "draft_tokens_proposed",
+                        n(self.draft_tokens_proposed.get() as f64),
+                    ),
+                    (
+                        "draft_tokens_accepted",
+                        n(self.draft_tokens_accepted.get() as f64),
+                    ),
+                    (
+                        "acceptance_pct",
+                        hist(&self.spec_acceptance_pct),
+                    ),
+                    ("verify_latency", hist(&self.verify_latency)),
                 ]),
             ),
         ])
@@ -527,6 +566,12 @@ mod tests {
         assert!(tp.get("fused_admissions").is_some());
         assert!(tp.get("fused_splices").is_some());
         assert!(v.get("gather_cache").unwrap().get("hits").is_some());
+        let spec = v.get("speculative").unwrap();
+        assert!(spec.get("spec_ticks").is_some());
+        assert!(spec.get("draft_tokens_proposed").is_some());
+        assert!(spec.get("draft_tokens_accepted").is_some());
+        assert!(spec.get("acceptance_pct").unwrap().get("p99_us").is_some());
+        assert!(spec.get("verify_latency").is_some());
         assert!(v
             .get("throughput")
             .unwrap()

@@ -5,7 +5,8 @@
 //! model (seeded weights, 2 layers, byte-level vocab) that implements
 //! the full compiled-executable ABI **by name** — `prefill_b{B}_s{S}`,
 //! `prefill_sample_b{B}_s{S}`, `decode[_pruned][_sample]_b{B}[_k{K}]`,
-//! `splice_b{src}_b{dst}`, `gather[_masked]_k{K}` — with the same
+//! `verify_b{B}_s{D}`, `splice_b{src}_b{dst}`,
+//! `gather[_masked]_k{K}` — with the same
 //! input/output orders, the same `[L, B, H, Smax, dh]` KV convention,
 //! the same eq.6/Wanda statistics, and the same xorshift32 fused-
 //! sampling lanes (`SAMPLE_TOPK` recorded per executable) as the HLO
@@ -78,6 +79,9 @@ pub const PREFILL_BUCKETS: [usize; 2] = [16, 32];
 /// the same emission rule as aot.py).
 pub const KEEP_KS: [usize; 3] = [8, 16, 24];
 const K_HEADLINE: usize = 16;
+/// Speculative-verify draft buckets (positions per `verify_b{B}_s{D}`
+/// call). Kept in lockstep with aot.py VERIFY_BUCKETS.
+pub const VERIFY_BUCKETS: [usize; 2] = [4, 8];
 
 /// Compiled sampler truncation bucket of the reference executables.
 /// Deliberately DIFFERENT from `sampling::SAMPLE_TOPK` (32) so the
@@ -265,6 +269,23 @@ pub fn reference_manifest() -> Manifest {
         add(exe(format!("decode_sample_b{b}"), "decode_sample", Some(b),
                 None, None, Some(CPU_SAMPLE_TOPK), None, inputs,
                 sample_outs(kv_outs.clone())));
+
+        // speculative verify: full-model forward over D draft positions,
+        // per-position logits back to the host (acceptance is a host
+        // sample_lane replay — the executable carries no sampling lanes)
+        for &dd in &VERIFY_BUCKETS {
+            let mut inputs = param_ios();
+            inputs.extend([
+                io("kcache", &cache_shape(b), "f32"),
+                io("vcache", &cache_shape(b), "f32"),
+                io("tokens", &[b, dd], "i32"),
+                io("pos", &[b], "i32"),
+            ]);
+            let mut outputs = vec![io("logits", &[b, dd, v], "f32")];
+            outputs.extend(kv_outs.clone());
+            add(exe(format!("verify_b{b}_s{dd}"), "verify", Some(b),
+                    Some(dd), None, None, None, inputs, outputs));
+        }
 
         let headline = [K_HEADLINE];
         let ks: &[usize] = if b == 1 { &KEEP_KS } else { &headline };
@@ -924,6 +945,7 @@ impl CpuSession {
             "prefill" | "prefill_sample" => self.interp_prefill(spec, &a),
             "decode" | "decode_pruned" | "decode_sample"
             | "decode_pruned_sample" => self.interp_decode(spec, &a),
+            "verify" => self.interp_verify(spec, &a),
             "splice" => self.interp_splice(spec, &a),
             "gather" | "gather_masked" => self.interp_gather(spec, &a),
             other => bail!("{}: kind {other:?} not served by the CPU \
@@ -1055,6 +1077,44 @@ impl CpuSession {
             HostData::F32(vcache),
             HostData::I32(rng_out),
             HostData::I32(pos_next),
+        ])
+    }
+
+    /// Speculative verify (model.py `verify`): D sequential FULL-model
+    /// decode steps over the draft tokens — column d of `tokens` lands
+    /// at `pos + d` — returning per-position logits [B, D, V]. K/V is
+    /// written for all D positions; rows past the accepted length hold
+    /// rejected-draft K/V but are never attendable (decode masks
+    /// kpos <= pos and the host rolls pos back to the accepted length).
+    fn interp_verify(&self, spec: &ExecutableSpec, a: &Args)
+                     -> Result<Vec<HostData>> {
+        let b = spec.batch.context("verify without batch")?;
+        let dd = spec.seq.context("verify without seq")?;
+        let p = Params::from(a)?;
+        let ff = self.full_ff(a)?;
+        let mut kcache = a.f32("kcache")?.to_vec();
+        let mut vcache = a.f32("vcache")?.to_vec();
+        let tokens = a.i32("tokens")?;
+        let pos = a.i32("pos")?;
+        let mut logits = vec![0f32; b * dd * VOCAB];
+        let mut tok_col = vec![0i32; b];
+        let mut pos_col = vec![0i32; b];
+        for d in 0..dd {
+            for bi in 0..b {
+                tok_col[bi] = tokens[bi * dd + d];
+                pos_col[bi] = pos[bi] + d as i32;
+            }
+            let step = decode_body(&p, &ff, &mut kcache, &mut vcache,
+                                   &tok_col, &pos_col, b);
+            for bi in 0..b {
+                logits[(bi * dd + d) * VOCAB..(bi * dd + d + 1) * VOCAB]
+                    .copy_from_slice(&step[bi * VOCAB..(bi + 1) * VOCAB]);
+            }
+        }
+        Ok(vec![
+            HostData::F32(logits),
+            HostData::F32(kcache),
+            HostData::F32(vcache),
         ])
     }
 
@@ -1450,7 +1510,8 @@ mod tests {
             "prefill_b1_s16", "prefill_b4_s32", "prefill_sample_b2_s16",
             "decode_b4", "decode_sample_b1", "decode_pruned_b1_k8",
             "decode_pruned_sample_b4_k16", "splice_b1_b4", "splice_b4_b4",
-            "gather_k24", "gather_masked_k16",
+            "gather_k24", "gather_masked_k16", "verify_b1_s4",
+            "verify_b4_s8",
         ] {
             assert!(m.executables.contains_key(name), "missing {name}");
         }
@@ -1540,6 +1601,64 @@ mod tests {
         let w2p = outs[1].to_f32().unwrap();
         // w2p[l=0, r=0, j] == w2[l=0, r=0, idx[j]] (idx[j] = j here)
         assert_eq!(&w2p[..k], &w2_host[..k]);
+    }
+
+    #[test]
+    fn verify_matches_sequential_full_decode() {
+        // verify_b{B}_s{D} row d must equal the logits of the d-th
+        // sequential decode_b{B} step over the same tokens, and the
+        // final KV caches must be identical — the property the specdec
+        // acceptance rule (and its byte-identical-stream guarantee)
+        // rests on.
+        let s = CpuSession::new();
+        let w = reference_weights(0);
+        let m = reference_manifest();
+        let params: Vec<DeviceTensor> = m
+            .param_order
+            .iter()
+            .map(|n| s.upload_tensor(&w[n]).unwrap())
+            .collect();
+        let b = 2usize;
+        let dd = 4usize;
+        let row = N_HEADS * MAX_SEQ * HEAD_DIM;
+        let kc0 = vec![0f32; N_LAYERS * b * row];
+        let kc = s.upload_f32(&cache_shape(b), &kc0).unwrap();
+        let vc = s.upload_f32(&cache_shape(b), &kc0).unwrap();
+        let toks = [5i32, 9, 250, 3, 17, 42, 7, 99]; // [b, dd] row-major
+        let tokens =
+            s.upload_i32(&[b, dd], &toks).unwrap();
+        let pos = s.upload_i32(&[b], &[0, 0]).unwrap();
+
+        let mut args: Vec<&DeviceTensor> = params.iter().collect();
+        args.extend([&kc, &vc, &tokens, &pos]);
+        let vout = s.run("verify_b2_s4", &args).unwrap();
+        let vlogits = vout[0].to_f32().unwrap();
+
+        let mut dk = kc;
+        let mut dv = vc;
+        for d in 0..dd {
+            let col: Vec<i32> = (0..b).map(|bi| toks[bi * dd + d])
+                .collect();
+            let tcol = s.upload_i32(&[b], &col).unwrap();
+            let pcol =
+                s.upload_i32(&[b], &[d as i32, d as i32]).unwrap();
+            let mut args: Vec<&DeviceTensor> = params.iter().collect();
+            args.extend([&dk, &dv, &tcol, &pcol]);
+            let mut out = s.run("decode_b2", &args).unwrap();
+            let step = out[0].to_f32().unwrap();
+            for bi in 0..b {
+                assert_eq!(
+                    &vlogits[(bi * dd + d) * VOCAB
+                        ..(bi * dd + d + 1) * VOCAB],
+                    &step[bi * VOCAB..(bi + 1) * VOCAB],
+                    "slot {bi} position {d} logits diverge"
+                );
+            }
+            dv = out.pop().unwrap();
+            dk = out.pop().unwrap();
+        }
+        assert_eq!(vout[1].to_f32().unwrap(), dk.to_f32().unwrap());
+        assert_eq!(vout[2].to_f32().unwrap(), dv.to_f32().unwrap());
     }
 
     #[test]

@@ -1014,7 +1014,11 @@ fn handle_generate(
     true
 }
 
-/// Serve one v2 score request. Returns false when the connection died.
+/// Serve one v2 score request (singular, or the batched
+/// `prompts`+`continuations` form). Batched rows are lowered to
+/// independent engine requests — shards may finish them in any order —
+/// and assembled back into a single `results` array in REQUEST ORDER,
+/// mirroring batched generate. Returns false when the connection died.
 fn handle_score(
     spec: &api::ScoreSpec,
     tok: &Tokenizer,
@@ -1022,42 +1026,72 @@ fn handle_score(
     waiters: &Waiters,
     writer: &mut TcpStream,
 ) -> bool {
-    let mut req = spec.to_request(tok);
-    req.id = shards.fresh_id();
-    let id = req.id;
+    let reqs = spec.to_requests(tok);
+    let single = spec.single;
     let (tx, rx) = channel();
-    waiters.lock().unwrap().insert(id, Waiter { tx, stream: false });
-    match shards.admit_score(req) {
-        Err(e) => {
-            waiters.lock().unwrap().remove(&id);
-            if let Some(m) = reject_metrics(shards) {
-                m.requests_rejected.inc();
-                if matches!(e, AdmitError::Overloaded { .. }) {
-                    m.requests_shed.inc();
+    // index -> (id, terminal row); admission errors fill their row slot
+    // immediately, the remaining rows still run
+    let mut ids: Vec<u64> = Vec::with_capacity(reqs.len());
+    let mut results: Vec<Option<Value>> = vec![None; reqs.len()];
+    let mut outstanding = 0usize;
+    for (i, mut req) in reqs.into_iter().enumerate() {
+        req.id = shards.fresh_id();
+        let id = req.id;
+        ids.push(id);
+        waiters
+            .lock()
+            .unwrap()
+            .insert(id, Waiter { tx: tx.clone(), stream: false });
+        match shards.admit_score(req) {
+            Err(e) => {
+                waiters.lock().unwrap().remove(&id);
+                if let Some(m) = reject_metrics(shards) {
+                    m.requests_rejected.inc();
+                    if matches!(e, AdmitError::Overloaded { .. }) {
+                        m.requests_shed.inc();
+                    }
                 }
+                let err = ApiError::from(&e);
+                if single {
+                    return send(
+                        writer, &api::error_json(&err, None, true));
+                }
+                results[i] = Some(api::respond::error_obj(&err, Some(id)));
             }
-            return send(
-                writer, &api::error_json(&ApiError::from(&e), None, true));
-        }
-        Ok((_, at)) => {
-            if let Some(m) = shards.shard(at).metrics() {
-                m.requests_admitted.inc();
+            Ok((_, at)) => {
+                if let Some(m) = shards.shard(at).metrics() {
+                    m.requests_admitted.inc();
+                }
+                outstanding += 1;
             }
         }
     }
-    loop {
+    drop(tx);
+    let index_of =
+        |ids: &[u64], id: u64| ids.iter().position(|&x| x == id).unwrap();
+    while outstanding > 0 {
         match rx.recv() {
             Ok(EngineEvent::ScoreDone { id, nll }) => {
-                return send(writer, &api::score_json(id, &nll));
+                outstanding -= 1;
+                if single {
+                    return send(writer, &api::score_json(id, &nll));
+                }
+                results[index_of(&ids, id)] =
+                    Some(api::score_row_json(id, &nll));
             }
             Ok(EngineEvent::Error { id, code, message }) => {
+                outstanding -= 1;
                 let err = ApiError::new(code, message);
-                return send(
-                    writer, &api::error_json(&err, Some(id), true));
+                if single {
+                    return send(
+                        writer, &api::error_json(&err, Some(id), true));
+                }
+                results[index_of(&ids, id)] =
+                    Some(api::respond::error_obj(&err, Some(id)));
             }
             Ok(_) => {}
             Err(_) => {
-                abandon(shards, waiters, &[id]);
+                abandon(shards, waiters, &ids);
                 let err = ApiError::new(
                     ErrorCode::EngineDropped, "engine dropped");
                 let _ = send(writer, &api::error_json(&err, None, true));
@@ -1065,6 +1099,9 @@ fn handle_score(
             }
         }
     }
+    let rows =
+        results.into_iter().map(|r| r.expect("score slot")).collect();
+    send(writer, &api::score_batch_json(rows))
 }
 
 /// Minimal blocking client for examples/tests.

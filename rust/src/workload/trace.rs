@@ -7,12 +7,49 @@ use crate::tokenizer::Tokenizer;
 use crate::workload::corpus;
 use crate::workload::rng::XorShift64Star;
 
+/// What a trace entry asks the server to do. Mixed-op traces exercise
+/// the serving paths that a pure-generate load never touches: score
+/// rows ride the score queue between decode ticks, cancel rows tear a
+/// streaming sequence out of its slot mid-generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    Generate,
+    /// teacher-forced scoring: the drawn tokens split into a prompt
+    /// half and a continuation half at the consumer
+    Score,
+    /// generate, then cancel after roughly half the budget streams out
+    Cancel,
+}
+
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
     /// offset from trace start, milliseconds
     pub arrival_ms: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    pub op: TraceOp,
+}
+
+/// Arrival mix of request kinds, as percentages of the trace; whatever
+/// the two knobs leave over arrives as plain generates. The default is
+/// all-generate, so existing scenarios are unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpMix {
+    pub score_pct: u8,
+    pub cancel_pct: u8,
+}
+
+impl OpMix {
+    fn draw(&self, rng: &mut XorShift64Star) -> TraceOp {
+        let roll = rng.below(100) as u8;
+        if roll < self.score_pct {
+            TraceOp::Score
+        } else if roll < self.score_pct.saturating_add(self.cancel_pct) {
+            TraceOp::Cancel
+        } else {
+            TraceOp::Generate
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -26,6 +63,8 @@ pub struct TraceSpec {
     pub mean_gap_ms: u64,
     /// when true, prompt/gen lengths vary uniformly in [len/2, len]
     pub mixed_lengths: bool,
+    /// generate/score/cancel arrival mix (default: all generates)
+    pub mix: OpMix,
 }
 
 /// Cut prompts out of held-out corpus text so the trained model sees
@@ -57,6 +96,7 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceRequest> {
                 arrival_ms: t,
                 prompt: ids[start..start + plen].to_vec(),
                 max_new_tokens: glen.max(1),
+                op: spec.mix.draw(&mut rng),
             };
             if spec.mean_gap_ms > 0 {
                 // geometric-ish gap
@@ -79,6 +119,7 @@ mod tests {
             gen_len: 16,
             mean_gap_ms: 0,
             mixed_lengths: false,
+            mix: OpMix::default(),
         }
     }
 
@@ -89,6 +130,30 @@ mod tests {
         assert!(t.iter().all(|r| r.prompt.len() == 64));
         assert!(t.iter().all(|r| r.max_new_tokens == 16));
         assert!(t.iter().all(|r| r.arrival_ms == 0));
+        assert!(t.iter().all(|r| r.op == TraceOp::Generate),
+                "the default mix is all-generate");
+    }
+
+    #[test]
+    fn op_mix_draws_all_three_kinds() {
+        let mut s = spec();
+        s.n_requests = 200;
+        s.mix = OpMix { score_pct: 25, cancel_pct: 25 };
+        let t = generate(&s);
+        let count = |op| t.iter().filter(|r| r.op == op).count();
+        let (g, sc, c) = (
+            count(TraceOp::Generate),
+            count(TraceOp::Score),
+            count(TraceOp::Cancel),
+        );
+        assert_eq!(g + sc + c, 200);
+        // loose bounds: the draw is uniform, 25% ± a wide margin
+        assert!((20..=80).contains(&sc), "score draws: {sc}");
+        assert!((20..=80).contains(&c), "cancel draws: {c}");
+        assert!(g > sc && g > c, "generates stay the majority");
+        // same seed, same mix -> identical op sequence
+        let u = generate(&s);
+        assert!(t.iter().zip(&u).all(|(a, b)| a.op == b.op));
     }
 
     #[test]

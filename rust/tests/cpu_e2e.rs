@@ -1880,3 +1880,341 @@ fn server_streams_batched_generate_per_index() {
     }
     handle.shutdown();
 }
+
+// ---------------------------------------------------------------------
+// self-speculative decoding (pruned drafter, full-model verify)
+// ---------------------------------------------------------------------
+
+/// Run a batch of GRIFFIN requests through a fresh scheduler and return
+/// (responses sorted by id, spec_ticks, proposed, accepted).
+fn run_spec_batch(
+    reqs: Vec<GenRequest>,
+) -> (Vec<griffin::coordinator::engine::GenResponse>, u64, u64, u64) {
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    for q in reqs {
+        router.admit(q).unwrap();
+    }
+    let mut sched = Scheduler::new(e, router.clone());
+    let m = sched.engine.metrics.clone();
+    let mut responses = sched.run_until_idle().unwrap();
+    responses.sort_by_key(|r| r.id);
+    (
+        responses,
+        m.spec_ticks.get(),
+        m.draft_tokens_proposed.get(),
+        m.draft_tokens_accepted.get(),
+    )
+}
+
+#[test]
+fn speculative_stream_equals_plain_decode_and_accepts_drafts() {
+    // The PR tentpole's acceptance criterion: with a GRIFFIN drafter
+    // active, a request that opts into `speculative:{draft_tokens:4}`
+    // must produce the byte-identical token AND logprob stream as the
+    // same request with speculation off — greedy and seeded top-k —
+    // while actually accepting drafts (the paper's flocking claim,
+    // measured at serving time on the reference model).
+    for (label, sampler) in [
+        ("greedy", SamplerSpec::Greedy),
+        ("topk", SamplerSpec::TopK { k: 4, temperature: 0.8 }),
+    ] {
+        let mk = |spec: Option<usize>| {
+            let mut q = GenRequest::greedy(
+                0, prompt_ids(24), 16, Mode::griffin(0.5));
+            q.sampler = sampler;
+            q.seed = 77;
+            q.stop_at_eos = false;
+            q.speculative = spec;
+            q
+        };
+        let (plain, t0, p0, a0) = run_spec_batch(vec![mk(None)]);
+        assert_eq!((t0, p0, a0), (0, 0, 0),
+                   "{label}: no opt-in, no speculative work");
+        assert!(plain[0].speculative.is_none(),
+                "{label}: no opt-in, no provenance");
+        let (spec, ticks, proposed, accepted) =
+            run_spec_batch(vec![mk(Some(4))]);
+        assert_eq!(spec[0].tokens, plain[0].tokens,
+                   "{label}: speculative tokens must be byte-identical");
+        assert_eq!(spec[0].logprobs, plain[0].logprobs,
+                   "{label}: speculative logprobs must be byte-identical");
+        assert_eq!(spec[0].tokens.len(), 16);
+        assert!(ticks > 0, "{label}: opted-in ticks must speculate");
+        assert!(proposed > 0);
+        assert!(accepted > 0,
+                "{label}: the pruned drafter must get drafts accepted \
+                 ({accepted}/{proposed} over {ticks} ticks)");
+        // response provenance mirrors the engine metrics
+        let info = spec[0].speculative.as_ref().unwrap();
+        assert_eq!(info.draft_tokens, 4);
+        assert_eq!(info.proposed, proposed);
+        assert_eq!(info.accepted, accepted);
+        // speculation needs fewer engine passes than tokens emitted
+        // whenever anything was accepted; it never needs more
+        assert!(accepted <= proposed, "{label}");
+    }
+}
+
+#[test]
+fn speculative_multi_slot_batch_keeps_streams_identical() {
+    // Two co-resident opted-in sequences: the pool speculates as one
+    // unit (shared draft bucket), and both streams stay byte-identical
+    // to the same batch with speculation off.
+    let mk = |spec: Option<usize>| {
+        let mut reqs = Vec::new();
+        for i in 0..2u64 {
+            let mut q = GenRequest::greedy(
+                0, prompt_ids(20 + 4 * i as usize), 12,
+                Mode::griffin(0.5));
+            q.sampler = SamplerSpec::TopK { k: 6, temperature: 0.9 };
+            q.seed = 500 + i;
+            q.stop_at_eos = false;
+            q.speculative = spec;
+            reqs.push(q);
+        }
+        reqs
+    };
+    let (plain, ..) = run_spec_batch(mk(None));
+    let (spec, ticks, _proposed, accepted) = run_spec_batch(mk(Some(4)));
+    assert!(ticks > 0 && accepted > 0);
+    for (p, s) in plain.iter().zip(&spec) {
+        assert_eq!(s.tokens, p.tokens, "slot streams must not drift");
+        assert_eq!(s.logprobs, p.logprobs);
+        assert_eq!(s.tokens.len(), 12);
+    }
+}
+
+#[test]
+fn speculative_falls_back_without_drafter_or_on_mixed_opt_in() {
+    // Eligibility misses degrade to plain decode — never an error,
+    // never a different stream, zero speculative work.
+    // (1) No pruned drafter: Mode::Full cannot speculate.
+    let mk_full = |spec: Option<usize>| {
+        let mut q =
+            GenRequest::greedy(0, prompt_ids(24), 8, Mode::Full);
+        q.stop_at_eos = false;
+        q.speculative = spec;
+        q
+    };
+    let (plain, ..) = run_spec_batch(vec![mk_full(None)]);
+    let (spec, ticks, proposed, _) = run_spec_batch(vec![mk_full(Some(4))]);
+    assert_eq!((ticks, proposed), (0, 0),
+               "no pruned set means no speculation");
+    assert_eq!(spec[0].tokens, plain[0].tokens);
+    // the opt-in is still disclosed, with zero work to audit
+    let info = spec[0].speculative.as_ref().unwrap();
+    assert_eq!((info.draft_tokens, info.proposed, info.accepted),
+               (4, 0, 0));
+
+    // (2) Mixed opt-in: one slot opted in, one not -> the shared tick
+    // cannot speculate, and both streams equal the all-plain batch.
+    let mk_pair = |specs: [Option<usize>; 2]| {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &sp)| {
+                let mut q = GenRequest::greedy(
+                    0, prompt_ids(18 + i), 8, Mode::griffin(0.5));
+                q.seed = 900 + i as u64;
+                q.stop_at_eos = false;
+                q.speculative = sp;
+                q
+            })
+            .collect::<Vec<_>>()
+    };
+    let (plain, ..) = run_spec_batch(mk_pair([None, None]));
+    let (mixed, ticks, proposed, _) =
+        run_spec_batch(mk_pair([Some(4), None]));
+    assert_eq!((ticks, proposed), (0, 0),
+               "a single non-opted slot pins the pool to plain decode");
+    for (p, m) in plain.iter().zip(&mixed) {
+        assert_eq!(m.tokens, p.tokens);
+        assert_eq!(m.logprobs, p.logprobs);
+    }
+
+    // (3) A draft request below every compiled verify bucket (buckets
+    // start at 4) falls back too.
+    let mut q = GenRequest::greedy(
+        0, prompt_ids(24), 8, Mode::griffin(0.5));
+    q.stop_at_eos = false;
+    q.speculative = Some(2);
+    let (resp, ticks, proposed, _) = run_spec_batch(vec![q]);
+    assert_eq!((ticks, proposed), (0, 0),
+               "draft_tokens below the smallest bucket cannot speculate");
+    assert_eq!(resp[0].tokens.len(), 8);
+}
+
+#[test]
+fn server_v2_speculative_axis_round_trip() {
+    // Wire-level: the v2 `speculative` axis opts a request in, the
+    // response disclosed provenance proves drafts were accepted, and
+    // the token stream matches the same call without the axis.
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{n, obj, s, Value};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let call = |c: &mut griffin::server::Client, spec: bool| {
+            let mut fields = vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins the sea")),
+                ("max_new_tokens", n(12.0)),
+                ("stop_at_eos", Value::Bool(false)),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.5)),
+                    ]),
+                ),
+                (
+                    "sampling",
+                    obj(vec![
+                        ("temperature", n(0.8)),
+                        ("top_k", n(4.0)),
+                        ("seed", n(7.0)),
+                    ]),
+                ),
+            ];
+            if spec {
+                fields.push((
+                    "speculative",
+                    obj(vec![("draft_tokens", n(4.0))]),
+                ));
+            }
+            c.call(&obj(fields)).unwrap()
+        };
+        let plain = call(&mut c, false);
+        assert!(plain.get("speculative").is_none(),
+                "no opt-in, no speculative block");
+        let spec = call(&mut c, true);
+        let toks = |r: &Value| -> Vec<i64> {
+            r.get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap())
+                .collect()
+        };
+        assert_eq!(toks(&spec), toks(&plain),
+                   "the wire stream is byte-identical with the axis on");
+        let sp = spec.get("speculative").expect("disclosed provenance");
+        assert_eq!(sp.get("draft_tokens").unwrap().as_usize(), Some(4));
+        let proposed =
+            sp.get("proposed").unwrap().as_usize().unwrap();
+        let accepted =
+            sp.get("accepted").unwrap().as_usize().unwrap();
+        assert!(proposed > 0, "the request speculated");
+        assert!(accepted > 0,
+                "drafts accepted over the wire: {accepted}/{proposed}");
+        assert!(accepted <= proposed);
+
+        // shape errors are typed admission rejections
+        let bad = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("x")),
+                ("speculative", obj(vec![("draft_tokens", n(0.0))])),
+            ]))
+            .unwrap();
+        assert_eq!(bad.get("code").unwrap().as_str(),
+                   Some("invalid_request"));
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn server_v2_batched_score_rows_in_order() {
+    // Satellite: array-form score returns one envelope with per-row
+    // results in prompt order, each row equal to its singular call.
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{n, obj, s, Value};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let pairs = [
+            ("the quiet river joins", " the sea"),
+            ("a deep lake", " shimmers"),
+            ("mountains", " rise"),
+        ];
+        let batch = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("score")),
+                (
+                    "prompts",
+                    Value::Arr(pairs.iter().map(|(p, _)| s(p)).collect()),
+                ),
+                (
+                    "continuations",
+                    Value::Arr(pairs.iter().map(|(_, k)| s(k)).collect()),
+                ),
+            ]))
+            .unwrap();
+        assert_eq!(batch.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(batch.get("op").unwrap().as_str(), Some("score"));
+        let rows = batch.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), pairs.len());
+        for (row, (p, k)) in rows.iter().zip(&pairs) {
+            assert_eq!(row.get("op").unwrap().as_str(), Some("score"),
+                       "rows carry no outer envelope fields");
+            assert!(row.get("v").is_none());
+            let nll = row.get("nll").unwrap().as_arr().unwrap();
+            assert_eq!(nll.len(), k.len(), "one NLL per byte of {k:?}");
+            // each row equals its singular-form call
+            let single = c
+                .call(&obj(vec![
+                    ("v", n(2.0)),
+                    ("op", s("score")),
+                    ("prompt", s(p)),
+                    ("continuation", s(k)),
+                ]))
+                .unwrap();
+            let snll = single.get("nll").unwrap().as_arr().unwrap();
+            for (a, b) in nll.iter().zip(snll) {
+                let (a, b) =
+                    (a.as_f64().unwrap(), b.as_f64().unwrap());
+                assert!((a - b).abs() < 1e-9,
+                        "row vs singular NLL drift: {a} vs {b}");
+            }
+        }
+        // mismatched row counts are typed validation errors
+        let bad = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("score")),
+                ("prompts", Value::Arr(vec![s("a"), s("b")])),
+                ("continuations", Value::Arr(vec![s("c")])),
+            ]))
+            .unwrap();
+        assert_eq!(bad.get("code").unwrap().as_str(),
+                   Some("invalid_request"));
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
