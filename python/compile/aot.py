@@ -61,6 +61,39 @@ def io_entry(name, shape, dtype=F32):
     return {"name": name, "shape": [int(d) for d in shape], "dtype": dtype}
 
 
+def lname(layer_ks):
+    """Name fragment for a ragged per-layer-k profile: `8x24` etc."""
+    return "x".join(str(int(k)) for k in layer_ks)
+
+
+def ragged_profiles(ks, n_layers):
+    """Deterministic non-uniform per-layer-k profiles to compile, kept in
+    lockstep with rust/src/runtime/cpu.rs. Balanced tilts at the matched
+    total budget n_layers * headline: profile i gives layer i the lowest
+    keep bucket and its mirror layer the highest, all others the headline
+    bucket (lowest + highest ~= 2 * headline, exact when the bucket list
+    is symmetric around the 50% point as on the CPU reference substrate).
+    The engine snaps adaptive-layer allocations onto the nearest compiled
+    profile, so a small profile set still exercises the full ragged
+    path. Callers pass only prunable buckets (k < d_ff)."""
+    if len(ks) < 2 or n_layers < 2:
+        return []
+    ks = sorted(set(int(k) for k in ks))
+    lo, hi = ks[0], ks[-1]
+    head = ks[len(ks) // 2]
+    profiles = []
+    for i in range(n_layers):
+        j = n_layers - 1 - i
+        if i == j:
+            continue
+        p = [head] * n_layers
+        p[i], p[j] = lo, hi
+        p = tuple(p)
+        if p not in profiles:
+            profiles.append(p)
+    return profiles
+
+
 class Emitter:
     def __init__(self, cfg: cfgs.ModelConfig, out_dir: str,
                  use_pallas: bool = False):
@@ -94,6 +127,21 @@ class Emitter:
             "w1p": (c.n_layers, K, c.d_model),
             "w2p": (c.n_layers, c.d_model, K),
             "wgp": (c.n_layers, K, c.d_model),
+        }
+        return [spec(shapes[n]) for n in self.pruned_names()]
+
+    def pruned_specs_ragged(self, layer_ks):
+        """Packed-flat pruned tensors for non-uniform per-layer widths:
+        w1p/wgp stack per-layer row blocks along axis 0, w2p concatenates
+        per-layer column blocks along axis 1 (see model._split_ragged).
+        The uniform [L, K, D] layout reshaped to [L*K, D] is the special
+        case layer_ks = (K,) * L."""
+        c = self.cfg
+        ksum = sum(layer_ks)
+        shapes = {
+            "w1p": (ksum, c.d_model),
+            "w2p": (c.d_model, ksum),
+            "wgp": (ksum, c.d_model),
         }
         return [spec(shapes[n]) for n in self.pruned_names()]
 
@@ -325,6 +373,77 @@ class Emitter:
                   {"kind": "decode_pruned_sample", "batch": B, "k": K,
                    "sample_topk": model.SAMPLE_TOPK, "pos_chained": True})
 
+    def emit_decode_pruned_ragged(self, B, layer_ks):
+        """decode_pruned at non-uniform per-layer widths (adaptive-layer
+        strategy). Pruned tensors use the packed-flat layout of
+        `pruned_specs_ragged`; the name encodes the full profile so the
+        runtime can serve it by exact match."""
+        cfg = self.cfg
+        nonff, pn = self.nonff_names, self.pruned_names()
+        lks = tuple(int(k) for k in layer_ks)
+
+        def fn(*args):
+            params = dict(zip(nonff, args))
+            pruned = dict(zip(pn, args[len(nonff):len(nonff) + len(pn)]))
+            kc, vc, tok, pos = args[len(nonff) + len(pn):]
+            return model.decode_pruned_ragged(
+                cfg, params, pruned, kc, vc, tok, pos, lks)
+
+        cspec = self.cache_spec(B)
+        pspecs = self.pruned_specs_ragged(lks)
+        arg_specs = (self.param_specs_args(nonff) + pspecs
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)])
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in nonff]
+                  + [io_entry(n, s.shape) for n, s in zip(pn, pspecs)]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)])
+        outputs = [io_entry("logits", (B, cfg.vocab_size)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape)]
+        self.emit(f"decode_pruned_b{B}_l{lname(lks)}", fn, arg_specs,
+                  inputs, outputs,
+                  {"kind": "decode_pruned_ragged", "batch": B,
+                   "layer_ks": list(lks)})
+
+    def emit_decode_pruned_ragged_sample(self, B, layer_ks):
+        cfg = self.cfg
+        nonff, pn = self.nonff_names, self.pruned_names()
+        lks = tuple(int(k) for k in layer_ks)
+
+        def fn(*args):
+            params = dict(zip(nonff, args))
+            pruned = dict(zip(pn, args[len(nonff):len(nonff) + len(pn)]))
+            kc, vc, tok, pos, temp, topk, rng = args[len(nonff) + len(pn):]
+            return model.decode_pruned_ragged_sample(
+                cfg, params, pruned, kc, vc, tok, pos, temp, topk, rng, lks)
+
+        cspec = self.cache_spec(B)
+        pspecs = self.pruned_specs_ragged(lks)
+        s_specs, s_inputs = self._sampling_io(B)
+        arg_specs = (self.param_specs_args(nonff) + pspecs
+                     + [cspec, cspec, spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)] + s_specs)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in nonff]
+                  + [io_entry(n, s.shape) for n, s in zip(pn, pspecs)]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("token", (B,), I32),
+                     io_entry("pos", (B,), I32)] + s_inputs)
+        outputs = [io_entry("token", (B,), I32),
+                   io_entry("logprob", (B,)),
+                   io_entry("kcache", cspec.shape),
+                   io_entry("vcache", cspec.shape),
+                   io_entry("rng", (B,), I32),
+                   io_entry("pos", (B,), I32)]
+        self.emit(f"decode_pruned_sample_b{B}_l{lname(lks)}", fn, arg_specs,
+                  inputs, outputs,
+                  {"kind": "decode_pruned_ragged_sample", "batch": B,
+                   "layer_ks": list(lks),
+                   "sample_topk": model.SAMPLE_TOPK, "pos_chained": True})
+
     def emit_verify(self, B, D):
         """Speculative verify: full-model forward over D draft positions
         returning per-position logits [B, D, V]. Acceptance is decided
@@ -370,6 +489,30 @@ class Emitter:
                    for n, s in zip(self.pruned_names(), pspecs)]
         self.emit(f"gather_k{K}", fn, arg_specs, inputs, outputs,
                   {"kind": "gather", "k": K})
+
+    def emit_gather_ragged(self, layer_ks):
+        """Gather at non-uniform per-layer widths: idx is the flat
+        concatenation of per-layer index blocks (sum(layer_ks) entries);
+        outputs use the packed-flat pruned layout."""
+        cfg = self.cfg
+        ffn = model.ff_param_names(cfg)
+        lks = tuple(int(k) for k in layer_ks)
+        ksum = sum(lks)
+
+        def fn(*args):
+            params = dict(zip(ffn, args))
+            idx = args[len(ffn)]
+            out = model.gather_experts_ragged(cfg, params, idx, lks)
+            return tuple(out[n] for n in self.pruned_names())
+
+        arg_specs = self.param_specs_args(ffn) + [spec((ksum,), jnp.int32)]
+        pspecs = self.pruned_specs_ragged(lks)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in ffn]
+                  + [io_entry("idx", (ksum,), I32)])
+        outputs = [io_entry(n, s.shape)
+                   for n, s in zip(self.pruned_names(), pspecs)]
+        self.emit(f"gather_l{lname(lks)}", fn, arg_specs, inputs, outputs,
+                  {"kind": "gather_ragged", "layer_ks": list(lks)})
 
     def emit_gather_masked(self, K):
         cfg = self.cfg
@@ -477,6 +620,9 @@ class Emitter:
         cfg = self.cfg
         ks = cfg.keep_ks()
         k_half = min(ks, key=lambda k: abs(k - cfg.d_ff // 2))
+        bks_prunable = [k for k in ks if k < cfg.d_ff]
+        profiles = (ragged_profiles(bks_prunable, cfg.n_layers)
+                    if full_sweep else [])
         size = cfg.name.split("-")[0]
         gens = GEN_BUCKETS.get(size, [32])
 
@@ -490,11 +636,18 @@ class Emitter:
             for D in VERIFY_BUCKETS:
                 if D <= cfg.max_seq:
                     self.emit_verify(B, D)
-            bks = ks if (B == 1 and full_sweep) else [k_half]
+            # full keep sweep at EVERY batch bucket: serving snaps
+            # non-headline keeps to the nearest compiled bucket, so
+            # without the sweep a B>1 request at keep 0.25 silently runs
+            # at the 50% point (see bench_serving v2_keep_sweep)
+            bks = ks if full_sweep else [k_half]
             for K in bks:
                 if K < cfg.d_ff:
                     self.emit_decode_pruned(B, K)
                     self.emit_decode_pruned_sample(B, K)
+            for lks in profiles:
+                self.emit_decode_pruned_ragged(B, lks)
+                self.emit_decode_pruned_ragged_sample(B, lks)
         # admission splices target the persistent decode pool, which the
         # continuous scheduler sizes to the LARGEST compiled batch bucket
         bmax = max(cfg.batch_buckets)
@@ -506,6 +659,8 @@ class Emitter:
         # masked gather only at the headline bucket (layer-adaptive mode)
         if k_half < cfg.d_ff:
             self.emit_gather_masked(k_half)
+        for lks in profiles:
+            self.emit_gather_ragged(lks)
         for G in gens:
             self.emit_generate_scan(1, G)
             if k_half < cfg.d_ff:

@@ -392,6 +392,44 @@ def decode_pruned(cfg: ModelConfig, params: Params, pruned, kcache, vcache,
     return _decode_step(cfg, params, ff, kcache, vcache, token, pos)
 
 
+def _split_ragged(pruned, layer_ks, is_glu):
+    """Unpack flat ragged pruned stacks into per-layer weight lists.
+
+    Ragged layout (the layer-adaptive ABI): w1p/wgp are the per-layer
+    row blocks stacked flat as [sum(layer_ks), D]; w2p is the per-layer
+    column blocks concatenated as [D, sum(layer_ks)]. layer_ks is a
+    STATIC python tuple — each executable is compiled for one k profile,
+    exactly like the uniform variants are compiled per k bucket.
+    `_decode_step` only ever indexes ff_weights by layer, so python
+    lists of per-layer arrays slot straight in for the `[L, ...]`
+    stacks.
+    """
+    offs = [0]
+    for k in layer_ks:
+        offs.append(offs[-1] + int(k))
+    w1_l = [pruned["w1p"][offs[l]:offs[l + 1]] for l in range(len(layer_ks))]
+    w2_l = [pruned["w2p"][:, offs[l]:offs[l + 1]]
+            for l in range(len(layer_ks))]
+    wg_l = None
+    if is_glu:
+        wg_l = [pruned["wgp"][offs[l]:offs[l + 1]]
+                for l in range(len(layer_ks))]
+    return wg_l, w1_l, w2_l
+
+
+def decode_pruned_ragged(cfg: ModelConfig, params: Params, pruned, kcache,
+                         vcache, token, pos, layer_ks):
+    """GRIFFIN generation step at NON-UNIFORM per-layer FF widths.
+
+    pruned: dict with keys w1p [sum(layer_ks), D], w2p [D, sum(layer_ks)]
+    (+ wgp for GLU) — per-layer blocks packed flat in layer order. The
+    uniform layout [L, K, D] reshaped to [L*K, D] is the special case
+    layer_ks = (K,) * L of this packing.
+    """
+    ff = _split_ragged(pruned, layer_ks, cfg.is_glu)
+    return _decode_step(cfg, params, ff, kcache, vcache, token, pos)
+
+
 def activation_map(cfg: ModelConfig, params: Params, tokens, lengths):
     """Relative FF activation magnitudes |Z-bar| per layer/token (the raw
     material of the paper's flocking visualizations, Figs 1/7/9-12).
@@ -509,6 +547,16 @@ def decode_pruned_sample(cfg: ModelConfig, params: Params, pruned, kcache,
     return tok, lp, kcache, vcache, rng, pos + 1
 
 
+def decode_pruned_ragged_sample(cfg: ModelConfig, params: Params, pruned,
+                                kcache, vcache, token, pos, temp, topk,
+                                rng, layer_ks):
+    """Ragged pruned decode fused with on-device sampling (chained pos)."""
+    logits, kcache, vcache = decode_pruned_ragged(
+        cfg, params, pruned, kcache, vcache, token, pos, layer_ks)
+    tok, lp, rng = sample_tokens(logits, temp, topk, rng)
+    return tok, lp, kcache, vcache, rng, pos + 1
+
+
 # ---------------------------------------------------------------------------
 # speculative verification (self-speculative decoding, full model as judge)
 # ---------------------------------------------------------------------------
@@ -557,6 +605,29 @@ def gather_experts(cfg: ModelConfig, params: Params, idx):
     out = {"w1p": w1p, "w2p": w2p}
     if cfg.is_glu:
         out["wgp"] = jax.vmap(lambda w, i: w[i])(params["wg"], idx)
+    return out
+
+
+def gather_experts_ragged(cfg: ModelConfig, params: Params, idx, layer_ks):
+    """Ragged gather: idx is the FLAT [sum(layer_ks)] i32 concatenation
+    of per-layer expert sets (layer order; layer_ks static). Produces
+    the packed ragged stacks `decode_pruned_ragged` consumes:
+    w1p/wgp [sum(layer_ks), D], w2p [D, sum(layer_ks)].
+    """
+    offs = [0]
+    for k in layer_ks:
+        offs.append(offs[-1] + int(k))
+    w1_l, w2_l, wg_l = [], [], []
+    for l in range(len(layer_ks)):
+        block = idx[offs[l]:offs[l + 1]]
+        w1_l.append(params["w1"][l][block])
+        w2_l.append(params["w2"][l][:, block])
+        if cfg.is_glu:
+            wg_l.append(params["wg"][l][block])
+    out = {"w1p": jnp.concatenate(w1_l, axis=0),
+           "w2p": jnp.concatenate(w2_l, axis=1)}
+    if cfg.is_glu:
+        out["wgp"] = jnp.concatenate(wg_l, axis=0)
     return out
 
 

@@ -360,6 +360,177 @@ class TestDeviceAdmission:
                 assert f.read(9) == "HloModule", e["file"]
 
 
+class TestRaggedKeep:
+    """The layer-adaptive (ragged per-layer k) ABI: packed-flat pruned
+    stacks, flat gather indices, and `layer_ks` manifest meta. The rust
+    side parses `layer_ks` into ExecutableSpec and serves these by exact
+    profile name — these tests pin the python half."""
+
+    def _ragged_idx(self, cfg, lks, seed=9):
+        rs = np.random.RandomState(seed)
+        per_layer = [np.sort(rs.choice(cfg.d_ff, k, replace=False))
+                     for k in lks]
+        flat = np.concatenate(per_layer).astype(np.int32)
+        return per_layer, jnp.asarray(flat)
+
+    def test_ragged_profiles_are_balanced_tilts(self):
+        # CPU reference substrate buckets: lockstep with runtime/cpu.rs
+        assert aot.ragged_profiles([8, 16, 24], 2) == [(8, 24), (24, 8)]
+        profs = aot.ragged_profiles([8, 16, 24], 4)
+        assert len(profs) == 4
+        for p in profs:
+            assert len(p) == 4
+            assert sum(p) == 4 * 16, "tilts hold the total budget"
+            assert min(p) == 8 and max(p) == 24
+        # degenerate inputs compile no ragged variants
+        assert aot.ragged_profiles([16], 2) == []
+        assert aot.ragged_profiles([8, 16, 24], 1) == []
+
+    def test_emitter_ragged_naming_and_meta_roundtrip(self, tmp_path):
+        """Artifact-free: names encode the full per-layer profile and the
+        manifest meta records `layer_ks` exactly (what config/mod.rs
+        parses into ExecutableSpec.layer_ks)."""
+        cfg = configs.get("tiny-swiglu")
+        em = aot.Emitter(cfg, str(tmp_path))
+        lks = aot.ragged_profiles(
+            [k for k in cfg.keep_ks() if k < cfg.d_ff], cfg.n_layers)[0]
+        em.emit_decode_pruned_ragged(1, lks)
+        em.emit_decode_pruned_ragged_sample(1, lks)
+        em.emit_gather_ragged(lks)
+        frag = aot.lname(lks)
+        ksum = sum(lks)
+
+        e = em.executables[f"decode_pruned_b1_l{frag}"]
+        assert e["kind"] == "decode_pruned_ragged"
+        assert e["layer_ks"] == list(lks)
+        assert "k" not in e, "ragged executables carry layer_ks, not k"
+        w1p = next(i for i in e["inputs"] if i["name"] == "w1p")
+        w2p = next(i for i in e["inputs"] if i["name"] == "w2p")
+        assert w1p["shape"] == [ksum, cfg.d_model], "packed row blocks"
+        assert w2p["shape"] == [cfg.d_model, ksum], "packed column blocks"
+
+        s = em.executables[f"decode_pruned_sample_b1_l{frag}"]
+        assert s["kind"] == "decode_pruned_ragged_sample"
+        assert s["layer_ks"] == list(lks)
+        assert s["sample_topk"] == model.SAMPLE_TOPK
+        assert s["pos_chained"] is True
+        out_names = [o["name"] for o in s["outputs"]]
+        assert out_names == ["token", "logprob", "kcache", "vcache",
+                             "rng", "pos"]
+
+        g = em.executables[f"gather_l{frag}"]
+        assert g["kind"] == "gather_ragged"
+        assert g["layer_ks"] == list(lks)
+        idx = next(i for i in g["inputs"] if i["name"] == "idx")
+        assert idx["shape"] == [ksum], "flat per-layer index concat"
+        for e in em.executables.values():
+            with open(os.path.join(em.dir, e["file"])) as f:
+                assert f.read(9) == "HloModule", e["file"]
+
+    def test_ragged_gather_blocks_are_per_layer_slices(self):
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        lks = (24, 48, 48, 72)
+        per_layer, flat = self._ragged_idx(cfg, lks)
+        out = model.gather_experts_ragged(cfg, params, flat, lks)
+        off = 0
+        for l, k in enumerate(lks):
+            sel = per_layer[l]
+            np.testing.assert_array_equal(
+                np.asarray(out["w1p"][off:off + k]),
+                np.asarray(params["w1"][l][sel]))
+            np.testing.assert_array_equal(
+                np.asarray(out["wgp"][off:off + k]),
+                np.asarray(params["wg"][l][sel]))
+            np.testing.assert_array_equal(
+                np.asarray(out["w2p"][:, off:off + k]),
+                np.asarray(params["w2"][l][:, sel]))
+            off += k
+
+    def test_uniform_ragged_equals_uniform_pruned_decode(self):
+        """The packed ragged layout at layer_ks = (K,)*L is exactly the
+        uniform [L, K, D] layout reshaped flat — same logits, same KV."""
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        K = cfg.keep_ks()[0]
+        lks = (K,) * cfg.n_layers
+        per_layer, flat = self._ragged_idx(cfg, lks, seed=3)
+        idx2d = jnp.asarray(np.stack(per_layer), jnp.int32)
+        uni = model.gather_experts(cfg, params, idx2d)
+        rag = model.gather_experts_ragged(cfg, params, flat, lks)
+        B = 2
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        kc = jnp.zeros(cshape, jnp.float32)
+        vc = jnp.zeros(cshape, jnp.float32)
+        tok = jnp.array([5, 9], jnp.int32)
+        pos = jnp.array([0, 0], jnp.int32)
+        lg_u, kc_u, vc_u = model.decode_pruned(
+            cfg, params, uni, kc, vc, tok, pos)
+        lg_r, kc_r, vc_r = model.decode_pruned_ragged(
+            cfg, params, rag, kc, vc, tok, pos, lks)
+        np.testing.assert_array_equal(np.asarray(lg_r), np.asarray(lg_u))
+        np.testing.assert_array_equal(np.asarray(kc_r), np.asarray(kc_u))
+        np.testing.assert_array_equal(np.asarray(vc_r), np.asarray(vc_u))
+
+    def test_ragged_decode_matches_zero_masked_full_decode(self):
+        """Numeric pin for truly non-uniform widths: pruned-out experts
+        contribute nothing, so the ragged decode must match a full-width
+        decode whose w1 rows outside each layer's set are zeroed (the
+        GLU product carries the w1 factor, so zeroing w1 kills the
+        expert regardless of gate value)."""
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        lks = (72, 24, 48, 72)
+        per_layer, flat = self._ragged_idx(cfg, lks, seed=5)
+        rag = model.gather_experts_ragged(cfg, params, flat, lks)
+        w1m = np.zeros_like(np.asarray(params["w1"]))
+        for l, sel in enumerate(per_layer):
+            w1m[l][sel] = np.asarray(params["w1"][l][sel])
+        masked = dict(params)
+        masked["w1"] = jnp.asarray(w1m)
+        B = 2
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        kc = jnp.zeros(cshape, jnp.float32)
+        vc = jnp.zeros(cshape, jnp.float32)
+        tok = jnp.array([7, 2], jnp.int32)
+        pos = jnp.array([0, 0], jnp.int32)
+        lg_m, _, _ = model.decode(cfg, masked, kc, vc, tok, pos)
+        lg_r, _, _ = model.decode_pruned_ragged(
+            cfg, params, rag, kc, vc, tok, pos, lks)
+        np.testing.assert_allclose(np.asarray(lg_r), np.asarray(lg_m),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_ragged_sample_is_ragged_decode_plus_sampling(self):
+        cfg = configs.get("tiny-swiglu")
+        params = model.init_params(cfg, 0)
+        lks = (24, 48, 48, 72)
+        _, flat = self._ragged_idx(cfg, lks, seed=7)
+        rag = model.gather_experts_ragged(cfg, params, flat, lks)
+        B = 2
+        cshape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        kc = jnp.zeros(cshape, jnp.float32)
+        vc = jnp.zeros(cshape, jnp.float32)
+        tok = jnp.array([5, 9], jnp.int32)
+        pos = jnp.array([0, 0], jnp.int32)
+        temp = jnp.array([0.0, 0.9], jnp.float32)
+        topk = jnp.array([1, 8], jnp.int32)
+        rng = jnp.array([3, 4], jnp.int32)
+        logits, kc1, vc1 = model.decode_pruned_ragged(
+            cfg, params, rag, kc, vc, tok, pos, lks)
+        want_tok, want_lp, want_rng = model.sample_tokens(
+            logits, temp, topk, rng)
+        got = model.decode_pruned_ragged_sample(
+            cfg, params, rag, kc, vc, tok, pos, temp, topk, rng, lks)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want_tok))
+        np.testing.assert_allclose(np.asarray(got[1]),
+                                   np.asarray(want_lp), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got[4]),
+                                      np.asarray(want_rng))
+        np.testing.assert_array_equal(np.asarray(got[5]),
+                                      np.asarray(pos) + 1)
+
+
 class TestSpeculativeVerify:
     """model.verify is the full-model judge of the self-speculative
     decode loop: D sequential decode steps in one executable, returning

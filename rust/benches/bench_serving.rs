@@ -45,6 +45,16 @@
 //!     opt-in off and on, at keeps {0.25, 0.5} — asserts per-request
 //!     token parity (speculation is lossless) and reports acceptance
 //!     rate, tokens/sec and inter-token-latency p99 both ways.
+//!   * adaptive frontier (`adaptive_frontier`, CPU substrate): uniform
+//!     top-k vs the v2 `adaptive-layer` strategy at MATCHED global
+//!     FLOP budgets (the compiled keep buckets). Quality is
+//!     teacher-forced NLL through `score_continuation` (the adaptive
+//!     arm resolves through the real budget allocator and ragged
+//!     executables); speed is batched greedy decode at the same
+//!     budget. Asserts every keep reports its exact compiled `k_used`,
+//!     adaptive responses disclose per-layer widths summing to the
+//!     budget, and adaptive quality is no worse than uniform at >= 2
+//!     budget points.
 //!
 //! The CPU-substrate scenarios contribute to the machine-readable
 //! summary written to BENCH_serving.json at the repository root
@@ -387,6 +397,225 @@ mod specdec {
                 ("rounds", n(rounds as f64)),
             ])),
             ("runs", Value::Arr(runs)),
+        ])
+    }
+}
+
+/// Adaptive-layer frontier scenario over the CPU substrate: uniform
+/// top-k vs the v2 `adaptive-layer` strategy at MATCHED global FLOP
+/// budgets (the compiled keep sweep's decode buckets). Quality is
+/// teacher-forced NLL on held-out windows through `score_continuation`
+/// — the adaptive arm resolves through the real budget allocator and
+/// (when the stats tilt) the ragged `decode_pruned_b{B}_l{k0}x..`
+/// executables; speed is batched greedy decode at the same budget.
+/// Beyond the frontier numbers, the scenario ASSERTS the adaptive-layer
+/// acceptance bar so CI enforces it under `GRIFFIN_LOADGEN_SMOKE=1`:
+/// every keep reports its exact compiled `k_used` (the full per-bucket
+/// keep sweep — no silent headline snapping at B>1), adaptive
+/// responses disclose per-layer widths that sum to the matched budget,
+/// uniform responses carry no such provenance, and adaptive quality is
+/// no worse than uniform at >= 2 budget points (the sweep's floor and
+/// ceiling coincide with uniform by construction, so the bar is
+/// reachable on any stats tilt).
+#[cfg(feature = "cpu-substrate")]
+mod adaptive {
+    use griffin::bench_harness::{summarize, Reporter};
+    use griffin::coordinator::engine::{Engine, Mode};
+    use griffin::coordinator::selection::Strategy;
+    use griffin::coordinator::sequence::GenRequest;
+    use griffin::json::{n, obj, s, Value};
+    use griffin::workload::{tasks, trace};
+
+    /// the CPU reference keep sweep's compiled decode buckets
+    const KEEPS: [f64; 3] = [0.25, 0.5, 0.75];
+    /// prompt/continuation split for the scoring windows (the CPU
+    /// reference caps sequences at 64)
+    const P: usize = 24;
+    const G: usize = 24;
+
+    fn requests(n_requests: usize, gen: usize, mode: Mode)
+                -> Vec<GenRequest> {
+        let traced = trace::generate(&trace::TraceSpec {
+            seed: 29,
+            n_requests,
+            prompt_len: 12,
+            gen_len: gen,
+            mean_gap_ms: 0,
+            mixed_lengths: false,
+            mix: trace::OpMix::default(),
+        });
+        traced
+            .iter()
+            .map(|r| {
+                let mut q =
+                    GenRequest::greedy(0, r.prompt.clone(), gen, mode);
+                q.stop_at_eos = false;
+                q
+            })
+            .collect()
+    }
+
+    pub fn run() -> Value {
+        let smoke = std::env::var("GRIFFIN_LOADGEN_SMOKE").is_ok();
+        let (windows_n, n_requests, gen, rounds) =
+            if smoke { (4usize, 4usize, 12usize, 1usize) }
+            else { (8, 4, 24, 3) };
+        println!(
+            "bench_serving adaptive_frontier (cpu substrate; keeps \
+             {KEEPS:?}, {windows_n} score windows, {n_requests} reqs x \
+             {gen} tokens)"
+        );
+        let mut engine = Engine::cpu_reference().expect("cpu substrate");
+        let d_ff = engine.config().d_ff;
+        let windows =
+            tasks::lm_windows(tasks::HELDOUT_SEED + 31, windows_n, P + G);
+        let mut rep = Reporter::new("bench_serving_adaptive.csv");
+        let mut runs = Vec::new();
+        let mut no_worse = 0usize;
+
+        for &keep in &KEEPS {
+            let k_exact = (d_ff as f64 * keep).round() as usize;
+            // (label, ppl, tokens/sec, adaptive per-layer widths)
+            let mut arms: Vec<(&str, f64, f64, Option<Vec<usize>>)> =
+                Vec::new();
+            for strategy in [Strategy::TopK, Strategy::AdaptiveLayer] {
+                let is_adaptive =
+                    matches!(strategy, Strategy::AdaptiveLayer);
+                let mode = Mode::Griffin { keep, strategy };
+
+                // quality: teacher-forced NLL at this FLOP budget
+                let mut nll = 0.0f64;
+                let mut count = 0usize;
+                for w in &windows {
+                    let v = engine
+                        .score_continuation(&w[..P], &w[P..], mode)
+                        .expect("score under the keep sweep");
+                    nll += v.iter().sum::<f64>();
+                    count += v.len();
+                }
+                let ppl = (nll / count.max(1) as f64).exp();
+
+                // speed + provenance: batched greedy decode at the
+                // same budget
+                let mut samples = Vec::new();
+                let mut best_tps = 0.0f64;
+                let mut k_per_layer: Option<Vec<usize>> = None;
+                for _ in 0..rounds {
+                    let batch = requests(n_requests, gen, mode);
+                    let t = std::time::Instant::now();
+                    let responses = engine
+                        .generate_batch(&batch)
+                        .expect("batched generate");
+                    let dt = t.elapsed().as_secs_f64();
+                    let tokens: usize =
+                        responses.iter().map(|r| r.tokens.len()).sum();
+                    best_tps = best_tps.max(tokens as f64 / dt);
+                    samples.push(dt * 1e3);
+                    for r in &responses {
+                        assert_eq!(
+                            r.k_used,
+                            Some(k_exact),
+                            "keep={keep} must report its exact \
+                             compiled k, not a headline snap"
+                        );
+                        if is_adaptive {
+                            let lks = r.k_per_layer.as_ref().expect(
+                                "adaptive responses disclose \
+                                 per-layer widths",
+                            );
+                            assert_eq!(
+                                lks.iter().sum::<usize>(),
+                                k_exact * lks.len(),
+                                "per-layer widths must sum to the \
+                                 matched budget at keep={keep}"
+                            );
+                            k_per_layer = Some(lks.clone());
+                        } else {
+                            assert!(
+                                r.k_per_layer.is_none(),
+                                "uniform keeps carry no per-layer \
+                                 provenance"
+                            );
+                        }
+                    }
+                }
+                let label =
+                    if is_adaptive { "adaptive" } else { "uniform" };
+                rep.add(summarize(
+                    &format!("adaptive_frontier_keep{keep}_{label}"),
+                    &samples,
+                ));
+                arms.push((label, ppl, best_tps, k_per_layer));
+            }
+
+            let quality_ok = arms[1].1 <= arms[0].1 + 1e-6;
+            if quality_ok {
+                no_worse += 1;
+            }
+            let widths = arms[1].3.as_ref().map_or_else(
+                String::new,
+                |lks| {
+                    format!(
+                        " widths {}",
+                        lks.iter()
+                            .map(ToString::to_string)
+                            .collect::<Vec<_>>()
+                            .join("x")
+                    )
+                },
+            );
+            println!(
+                "  adaptive_frontier keep={keep} (k={k_exact}): uniform \
+                 ppl {:.3} ({:.0} tok/s) | adaptive ppl {:.3} \
+                 ({:.0} tok/s){widths}",
+                arms[0].1, arms[0].2, arms[1].1, arms[1].2
+            );
+            runs.push(obj(vec![
+                ("keep", n(keep)),
+                ("k", n(k_exact as f64)),
+                ("uniform", obj(vec![
+                    ("ppl", n(arms[0].1)),
+                    ("tokens_per_sec", n(arms[0].2)),
+                ])),
+                ("adaptive", obj(vec![
+                    ("ppl", n(arms[1].1)),
+                    ("tokens_per_sec", n(arms[1].2)),
+                    (
+                        "k_per_layer",
+                        arms[1].3.as_ref().map_or(Value::Null, |lks| {
+                            Value::Arr(
+                                lks.iter()
+                                    .map(|&k| n(k as f64))
+                                    .collect(),
+                            )
+                        }),
+                    ),
+                ])),
+                ("adaptive_no_worse", Value::Bool(quality_ok)),
+            ]));
+        }
+
+        assert!(
+            no_worse >= 2,
+            "adaptive-layer must match uniform quality at >= 2 matched \
+             budget points (got {no_worse} of {})",
+            KEEPS.len()
+        );
+        rep.finish();
+        obj(vec![
+            ("scenario", s("adaptive_frontier")),
+            ("workload", obj(vec![
+                ("keeps",
+                 Value::Arr(KEEPS.iter().map(|&k| n(k)).collect())),
+                ("score_windows", n(windows_n as f64)),
+                ("prompt_tokens", n(P as f64)),
+                ("continuation_tokens", n(G as f64)),
+                ("requests", n(n_requests as f64)),
+                ("max_new_tokens", n(gen as f64)),
+                ("rounds", n(rounds as f64)),
+            ])),
+            ("runs", Value::Arr(runs)),
+            ("adaptive_no_worse_points", n(no_worse as f64)),
         ])
     }
 }
@@ -1420,6 +1649,34 @@ mod pjrt {
                 );
                 rep.add(summarize(name, samples));
             }
+
+            // the full per-bucket keep sweep: at the pool's decode
+            // bucket every keep must report the k its OWN snap
+            // resolves to — non-headline keeps are not silently
+            // rounded to the headline k at B>1
+            let mut want_distinct = std::collections::BTreeSet::new();
+            for &keep in &keeps {
+                let snapped =
+                    sched.engine.bucket_keep(bmax, keep).unwrap();
+                let want =
+                    (cfg.d_ff as f64 * snapped).round() as usize;
+                want_distinct.insert(want);
+                assert_eq!(
+                    k_used.get(label(keep)).copied(),
+                    Some(want),
+                    "{}: reported k_used disagrees with the compiled \
+                     bucket its keep snaps to",
+                    label(keep)
+                );
+            }
+            let distinct: std::collections::BTreeSet<usize> =
+                k_used.values().copied().collect();
+            assert_eq!(
+                distinct.len(),
+                want_distinct.len(),
+                "keep sweep collapsed distinct compiled buckets into \
+                 one reported k"
+            );
         }
 
         // --------------------------------------------------------------
@@ -1516,7 +1773,8 @@ fn main() {
         let scaling = shard_scaling::run();
         let spec = specdec::run();
         let load = loadgen::run();
-        write_serving_json(vec![scaling, spec, load]);
+        let frontier = adaptive::run();
+        write_serving_json(vec![scaling, spec, load, frontier]);
     }
     #[cfg(feature = "runtime")]
     pjrt::run();

@@ -255,10 +255,11 @@ pub fn prune_spec(v: Option<&Value>) -> Result<PruneSpec, ApiError> {
             "topk" => SelectionStrategy::TopK,
             "sampling" => SelectionStrategy::Sampling,
             "topk+sampling" => SelectionStrategy::TopKPlusSampling,
+            "adaptive-layer" => SelectionStrategy::AdaptiveLayer,
             other => {
                 return Err(ApiError::invalid(format!(
                     "unknown prune.strategy {other:?} (topk | sampling | \
-                     topk+sampling)"
+                     topk+sampling | adaptive-layer)"
                 )))
             }
         };
@@ -376,6 +377,35 @@ mod tests {
         assert_eq!(g.sampling.top_k, Some(4));
         assert_eq!(g.sampling.seed, 9);
         assert!(g.v2);
+    }
+
+    #[test]
+    fn v2_adaptive_layer_strategy_parses() {
+        let r = parse(
+            r#"{"v":2,"op":"generate","prompt":"hi",
+                "prune":{"method":"griffin","keep":0.5,
+                         "strategy":"adaptive-layer"}}"#,
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!("not generate") };
+        assert_eq!(g.prune.strategy, SelectionStrategy::AdaptiveLayer);
+        // keep bounds apply to adaptive-layer like every strategy
+        let e = parse(
+            r#"{"v":2,"op":"generate","prompt":"hi",
+                "prune":{"method":"griffin","keep":1.5,
+                         "strategy":"adaptive-layer"}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidRequest);
+        // score rides the same prune axis
+        let r = parse(
+            r#"{"v":2,"op":"score","prompt":"ab","continuation":"cd",
+                "prune":{"method":"griffin","keep":0.5,
+                         "strategy":"adaptive-layer"}}"#,
+        )
+        .unwrap();
+        let Request::Score(s) = r else { panic!("not score") };
+        assert_eq!(s.prune.strategy, SelectionStrategy::AdaptiveLayer);
     }
 
     #[test]

@@ -53,6 +53,15 @@ fn response_body(r: &GenResponse, v2_schema: bool) -> Value {
                 prune.push(("keep_requested", n(kr)));
                 prune.push(("degraded", Value::Bool(true)));
             }
+            // adaptive-layer provenance: the exact per-layer FF widths
+            // the response decoded at (layer order). Absent on uniform
+            // keeps, where `k_used` already tells the whole story.
+            if let Some(ref lks) = r.k_per_layer {
+                prune.push((
+                    "k_per_layer",
+                    Value::Arr(lks.iter().map(|&k| n(k as f64)).collect()),
+                ));
+            }
             fields.push(("prune", obj(prune)));
         }
         // speculative-decoding provenance: what the request opted into
@@ -314,6 +323,7 @@ mod tests {
             logprobs: vec![-0.1],
             finish: FinishReason::Length,
             k_used: None,
+            k_per_layer: None,
             selection: None,
             speculative: None,
             prefill_ms: 1.0,
@@ -389,6 +399,46 @@ mod tests {
         r.selection = None;
         let d = json::parse(&done_json(&r, false, true)).unwrap();
         assert!(d.get("prune").is_none());
+    }
+
+    #[test]
+    fn v2_surfaces_per_layer_keep_provenance() {
+        use crate::coordinator::types::SelectionInfo;
+        let mut r = resp();
+        r.k_used = Some(16);
+        r.k_per_layer = Some(vec![8, 24]);
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("adaptive-layer"),
+            seed: None,
+            keep_requested: None,
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let p = d.get("prune").unwrap();
+        assert_eq!(p.get("strategy").unwrap().as_str(),
+                   Some("adaptive-layer"));
+        let Some(Value::Arr(lks)) = p.get("k_per_layer") else {
+            panic!("adaptive responses disclose per-layer widths");
+        };
+        assert_eq!(lks.len(), 2);
+        assert_eq!(lks[0].as_usize(), Some(8));
+        assert_eq!(lks[1].as_usize(), Some(24));
+        // embedded batch rows keep the array (same row schema)
+        let row = response_row_json(&r);
+        assert!(row.get("prune").unwrap().get("k_per_layer").is_some());
+        // v1 bodies stay byte-compatible: no prune object at all
+        let d1 = json::parse(&done_json(&r, false, false)).unwrap();
+        assert!(d1.get("prune").is_none());
+        // uniform keeps: no per-layer array (shape unchanged)
+        r.k_per_layer = None;
+        r.selection = Some(SelectionInfo {
+            method: "griffin",
+            strategy: Some("topk"),
+            seed: None,
+            keep_requested: None,
+        });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert!(d.get("prune").unwrap().get("k_per_layer").is_none());
     }
 
     #[test]

@@ -55,6 +55,9 @@ pub enum SelectionStrategy {
     TopK,
     Sampling,
     TopKPlusSampling,
+    /// non-uniform per-layer keep under a global FLOP budget
+    /// (v2-only axis; no v1 mode string maps to it)
+    AdaptiveLayer,
 }
 
 impl SelectionStrategy {
@@ -63,6 +66,7 @@ impl SelectionStrategy {
             SelectionStrategy::TopK => "topk",
             SelectionStrategy::Sampling => "sampling",
             SelectionStrategy::TopKPlusSampling => "topk+sampling",
+            SelectionStrategy::AdaptiveLayer => "adaptive-layer",
         }
     }
 }
@@ -147,6 +151,9 @@ impl PruneSpec {
                     }
                     SelectionStrategy::TopKPlusSampling => {
                         Strategy::TopKPlusSampling { seed: self.seed }
+                    }
+                    SelectionStrategy::AdaptiveLayer => {
+                        Strategy::AdaptiveLayer
                     }
                 },
             },
@@ -422,6 +429,30 @@ mod tests {
             }
         );
         assert_eq!(PruneSpec::default().to_mode(), Mode::Full);
+        // adaptive-layer lowers to the seedless engine strategy
+        let a = PruneSpec {
+            method: PruneMethod::Griffin,
+            keep: 0.5,
+            strategy: SelectionStrategy::AdaptiveLayer,
+            seed: 7,
+        };
+        assert_eq!(
+            a.to_mode(),
+            Mode::Griffin { keep: 0.5, strategy: Strategy::AdaptiveLayer }
+        );
+        assert_eq!(SelectionStrategy::AdaptiveLayer.as_str(),
+                   "adaptive-layer");
+    }
+
+    #[test]
+    fn no_v1_mode_maps_to_adaptive_layer() {
+        // adaptive-layer is a v2-only axis: the v1 table must not grow
+        // a string for it (the compat surface is frozen)
+        for mode in ["adaptive-layer", "griffin-adaptive",
+                     "adaptive_layer"] {
+            assert!(PruneSpec::from_v1_mode(mode, 0.5, 0).is_err(),
+                    "v1 mode {mode:?} must be rejected");
+        }
     }
 
     #[test]

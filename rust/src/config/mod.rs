@@ -50,6 +50,10 @@ pub struct ExecutableSpec {
     /// splice_b{src}_b{dst}: source batch bucket (the freshly prefilled
     /// cache); `batch` holds the destination (decode-pool) bucket
     pub src_batch: Option<usize>,
+    /// ragged (layer-adaptive) variants: the per-layer FF keep widths
+    /// this executable was compiled for, in layer order. Uniform
+    /// executables record `k` instead; the two are mutually exclusive.
+    pub layer_ks: Option<Vec<usize>>,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
 }
@@ -192,6 +196,11 @@ impl Manifest {
                     src_batch: e
                         .get("src_batch")
                         .and_then(Value::as_usize),
+                    layer_ks: match e.get("layer_ks") {
+                        Some(v) => Some(usize_list(v).with_context(
+                            || format!("{name}: layer_ks"))?),
+                        None => None,
+                    },
                     inputs: io_list(req(e, "inputs")?)?,
                     outputs: io_list(req(e, "outputs")?)?,
                 },
@@ -233,6 +242,18 @@ impl Manifest {
             for io in e.inputs.iter().chain(&e.outputs) {
                 if io.dtype != "f32" && io.dtype != "i32" {
                     bail!("{}: bad dtype {}", e.name, io.dtype);
+                }
+            }
+            if let Some(lks) = &e.layer_ks {
+                if lks.len() != self.config.n_layers {
+                    bail!(
+                        "{}: layer_ks has {} entries, model has {} layers",
+                        e.name, lks.len(), self.config.n_layers
+                    );
+                }
+                if e.k.is_some() {
+                    bail!("{}: both k and layer_ks (mutually exclusive)",
+                          e.name);
                 }
             }
         }
@@ -415,6 +436,48 @@ mod tests {
         // integer truncation of sub-unit differences
         assert_eq!(nearest_k_of(11.9, [8usize, 16]), Some(8));
         assert_eq!(nearest_k_of(12.1, [8usize, 16]), Some(16));
+    }
+
+    #[test]
+    fn parses_layer_ks_round_trip() {
+        // synthetic manifest: ragged executables record per-layer widths
+        // in `layer_ks` (aot.py meta) and parse into ExecutableSpec
+        let dir = std::env::temp_dir().join("griffin_manifest_ragged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = r#"{
+          "config": {"name":"x","activation":"swiglu","d_model":8,
+            "n_heads":2,"n_layers":2,"d_ff":16,"max_seq":32,
+            "vocab_size":259,"head_dim":4,"is_glu":true,
+            "batch_buckets":[1],"prefill_buckets":[16],"keep_ks":[4,8,12],
+            "param_count":1000},
+          "param_order": ["a", "b"],
+          "nonff_param_order": [],
+          "pruned_param_order": [],
+          "weights": "w.bin",
+          "executables": {
+            "decode_pruned_b1_l4x12": {
+              "file": "d.hlo.txt", "kind": "decode_pruned_ragged",
+              "batch": 1, "layer_ks": [4, 12],
+              "inputs": [{"name":"x","shape":[1],"dtype":"f32"}],
+              "outputs": [{"name":"y","shape":[1],"dtype":"f32"}]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), good).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = &m.executables["decode_pruned_b1_l4x12"];
+        assert_eq!(e.layer_ks, Some(vec![4, 12]));
+        assert_eq!(e.k, None);
+
+        // wrong arity is rejected at load time
+        let bad = good.replace("[4, 12]", "[4, 12, 4]");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        // k and layer_ks on one executable is a manifest bug
+        let bad = good.replace(
+            "\"layer_ks\": [4, 12]", "\"layer_ks\": [4, 12], \"k\": 8");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
     }
 
     #[test]

@@ -94,9 +94,53 @@ pub use crate::coordinator::types::{GenResponse, Mode, SelectionInfo,
 pub struct PrunedWeights {
     /// in manifest pruned_param_order (w1p, w2p[, wgp])
     pub tensors: Vec<Rc<DeviceTensor>>,
+    /// uniform FF width, or — for ragged sets — the FLOP-matched
+    /// average width (Σ layer_ks / L), which is what `k_used` reports
     pub k: usize,
+    /// per-layer FF widths of a ragged (adaptive-layer) set; None for
+    /// uniform sets. Decides the decode executable family:
+    /// `decode_pruned*_b{B}_k{K}` vs `decode_pruned*_b{B}_l{k0}x{k1}`.
+    pub layer_ks: Option<Vec<usize>>,
     /// unique weight-set id — keys the prepared-dispatch-plan cache
     id: u64,
+}
+
+/// Name fragment of a ragged per-layer-k profile (`8x24`), matching
+/// aot.py `lname` / runtime::cpu `ragged_name`.
+pub fn profile_frag(lks: &[usize]) -> String {
+    lks.iter()
+        .map(|k| k.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+/// Snap an allocator target to the nearest compiled per-layer profile:
+/// smallest L1 distance first, ties broken toward the larger dot
+/// product with the target (prefer the candidate tilting the same way),
+/// remaining ties lexicographic. None only for an empty candidate set.
+pub fn snap_profile(cands: &[Vec<usize>], target: &[usize])
+                    -> Option<Vec<usize>> {
+    let mut sorted: Vec<&Vec<usize>> = cands
+        .iter()
+        .filter(|c| c.len() == target.len())
+        .collect();
+    sorted.sort();
+    sorted
+        .into_iter()
+        .min_by_key(|c| {
+            let l1: i64 = c
+                .iter()
+                .zip(target)
+                .map(|(&a, &b)| (a as i64 - b as i64).abs())
+                .sum();
+            let dot: i64 = c
+                .iter()
+                .zip(target)
+                .map(|(&a, &b)| (a * b) as i64)
+                .sum();
+            (l1, -dot)
+        })
+        .cloned()
 }
 
 /// Full-size replacement FF stacks (the Wanda baseline): w1, w2 [, wg]
@@ -707,8 +751,64 @@ impl Engine {
         PrunedWeights {
             tensors: tensors.into_iter().map(Rc::new).collect(),
             k,
+            layer_ks: None,
             id: self.next_set_id(),
         }
+    }
+
+    /// Ragged (adaptive-layer) gather: build device-resident pruned FF
+    /// weights at per-layer widths through the compiled
+    /// `gather_l{k0}x{k1}` executable for this exact profile. The index
+    /// set is flat-packed `[Σk]` in layer order, matching the ragged
+    /// gather ABI (python/compile/model.py `gather_experts_ragged`).
+    pub fn gather_ragged(&self, idx: &[Vec<i32>]) -> Result<PrunedWeights> {
+        let t = Timer::start();
+        let cfg = self.config();
+        if idx.len() != cfg.n_layers {
+            bail!("gather_ragged: idx must have one row per layer");
+        }
+        let lks: Vec<usize> = idx.iter().map(Vec::len).collect();
+        let name = format!("gather_l{}", profile_frag(&lks));
+        if !self.session.manifest().executables.contains_key(&name) {
+            bail!("no {name} executable for profile {lks:?} \
+                   (re-run make artifacts)");
+        }
+        let flat: Vec<i32> = idx.iter().flatten().copied().collect();
+        let idx_dev = self.session.upload_i32(&[flat.len()], &flat)?;
+        let mut args: Vec<&DeviceTensor> = vec![
+            self.weights.get("w1"),
+            self.weights.get("w2"),
+        ];
+        if cfg.is_glu {
+            args.push(self.weights.get("wg"));
+        }
+        args.push(&idx_dev);
+        let outs = self.session.run(&name, &args)?;
+        t.record_into(&self.metrics.gather_latency);
+        let k_avg = lks.iter().sum::<usize>() / lks.len().max(1);
+        Ok(PrunedWeights {
+            tensors: outs.into_iter().map(Rc::new).collect(),
+            k: k_avg,
+            layer_ks: Some(lks),
+            id: self.next_set_id(),
+        })
+    }
+
+    /// [`Engine::gather_ragged`] through the pruned-weight reuse cache.
+    /// Ragged and uniform selections share the cache safely: the key
+    /// hashes per-layer boundaries and a hit requires exact index-set
+    /// equality, so a ragged set can never alias a uniform one.
+    pub fn gather_ragged_cached(&mut self, idx: &[Vec<i32>])
+                                -> Result<Rc<PrunedWeights>> {
+        let key = GatherKey::new(idx);
+        if let Some(pw) = self.gather_cache.get(&key, idx) {
+            self.metrics.gather_cache_hits.inc();
+            return Ok(pw.clone());
+        }
+        self.metrics.gather_cache_misses.inc();
+        let pw = Rc::new(self.gather_ragged(idx)?);
+        self.gather_cache.insert(key, idx.to_vec(), pw.clone());
+        Ok(pw)
     }
 
     /// `gather` through the pruned-weight reuse cache: an expert index
@@ -774,6 +874,114 @@ impl Engine {
         let idx = selection::select_experts(stats, k, strategy);
         t.record_into(&self.metrics.selection_latency);
         Ok(idx)
+    }
+
+    /// Uniform FF widths with a compiled `decode_pruned` executable at
+    /// this batch bucket, ascending.
+    fn compiled_uniform_ks(&self, batch: usize) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "decode_pruned" && e.batch == Some(batch)
+            })
+            .filter_map(|e| e.k)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// Ragged per-layer profiles with a compiled `decode_pruned_ragged`
+    /// executable at this batch bucket.
+    pub fn compiled_ragged_profiles(&self, batch: usize)
+                                    -> Vec<Vec<usize>> {
+        let mut profs: Vec<Vec<usize>> = self
+            .session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "decode_pruned_ragged" && e.batch == Some(batch)
+            })
+            .filter_map(|e| e.layer_ks.clone())
+            .collect();
+        profs.sort();
+        profs.dedup();
+        profs
+    }
+
+    /// Resolve the served per-layer keep profile for an adaptive-layer
+    /// request at this batch bucket: anchor the global budget at the
+    /// uniform bucket the keep snaps to (L · k_bucket FLOPs — matched
+    /// to what a uniform request at the same keep would spend), allocate
+    /// it across depth from the aggregate flocking statistics
+    /// (`selection::allocate_layer_budget`, floors/ceilings at the
+    /// compiled sweep's extremes), then snap the allocator's target to
+    /// the nearest compiled profile — ragged tilts and uniform buckets
+    /// compete on equal footing, so near-uniform statistics degrade to
+    /// the plain uniform executable rather than forcing a tilt.
+    pub fn adaptive_layer_profile(&self, batch: usize, stats: &LayerStats,
+                                  keep: f64) -> Result<Vec<usize>> {
+        let t = Timer::start();
+        let cfg = self.config();
+        let l_n = cfg.n_layers;
+        let keep_b = self.bucket_keep(batch, keep)?;
+        let bucket_k = (cfg.d_ff as f64 * keep_b).round() as usize;
+        let uniform = self.compiled_uniform_ks(batch);
+        let (floor, ceil) = match (uniform.first(), uniform.last()) {
+            (Some(&f), Some(&c)) => (f, c),
+            _ => bail!("no decode_pruned executables at batch={batch}"),
+        };
+        let target = selection::allocate_layer_budget(
+            stats, l_n * bucket_k, floor, ceil);
+        let mut cands = self.compiled_ragged_profiles(batch);
+        for &k in &uniform {
+            cands.push(vec![k; l_n]);
+        }
+        let prof = snap_profile(&cands, &target)
+            .context("no servable keep profiles")?;
+        t.record_into(&self.metrics.selection_latency);
+        Ok(prof)
+    }
+
+    /// Selection + gather for a Griffin-family mode over aggregate
+    /// stats at this batch bucket. Uniform strategies snap the keep to
+    /// a compiled bucket and gather one shared width; adaptive-layer
+    /// allocates the same global budget across depth and gathers the
+    /// snapped per-layer profile. Returns (weights, k_used, per-layer
+    /// widths) — widths are Some exactly when the mode is
+    /// adaptive-layer, even if the profile snapped to uniform (the
+    /// response provenance must disclose what was actually served).
+    pub fn griffin_weights(&mut self, batch: usize, stats: &LayerStats,
+                           keep: f64, strategy: Strategy)
+                           -> Result<(Rc<PrunedWeights>, usize,
+                                      Option<Vec<usize>>)> {
+        if let Strategy::AdaptiveLayer = strategy {
+            let prof = self.adaptive_layer_profile(batch, stats, keep)?;
+            let uniform = prof.windows(2).all(|w| w[0] == w[1]);
+            let pw = if uniform {
+                // at one shared width the adaptive selection IS top-k;
+                // route onto the uniform executable family so it
+                // batches (and caches) with plain griffin traffic
+                let idx = selection::select_experts(
+                    stats, prof[0], Strategy::TopK);
+                self.gather_cached(&idx)?
+            } else {
+                let idx = selection::select_experts_ragged(stats, &prof);
+                self.gather_ragged_cached(&idx)?
+            };
+            let k = pw.k;
+            Ok((pw, k, Some(prof)))
+        } else {
+            let keep = self.bucket_keep(batch, keep)?;
+            let idx = self.select(stats, keep, strategy)?;
+            let pw = self.gather_cached(&idx)?;
+            let k = pw.k;
+            Ok((pw, k, None))
+        }
     }
 
     /// Static magnitude expert set (cached; prompt-independent).
@@ -916,7 +1124,7 @@ impl Engine {
         // device copy carries across ticks and the host mirror is only
         // uploaded to seed the chain (or per step on pre-chain ABIs)
         let chained_abi = self
-            .fused_decode_spec(b, ff.map(|p| p.k))
+            .fused_decode_spec_for(b, ff)
             .map(|s| s.outputs.last().is_some_and(|o| o.name == "pos"))
             .unwrap_or(false);
         let uploaded_pos;
@@ -954,6 +1162,32 @@ impl Engine {
         Ok((tokens, logprobs))
     }
 
+    /// Executable name of the decode variant serving this weight set:
+    /// full / uniform-pruned / ragged-pruned, host or fused.
+    fn decode_exe_name(b: usize, ff: Option<&PrunedWeights>, fused: bool)
+                       -> String {
+        match ff {
+            Some(p) => {
+                let suffix = match &p.layer_ks {
+                    Some(lks) => format!("l{}", profile_frag(lks)),
+                    None => format!("k{}", p.k),
+                };
+                if fused {
+                    format!("decode_pruned_sample_b{b}_{suffix}")
+                } else {
+                    format!("decode_pruned_b{b}_{suffix}")
+                }
+            }
+            None => {
+                if fused {
+                    format!("decode_sample_b{b}")
+                } else {
+                    format!("decode_b{b}")
+                }
+            }
+        }
+    }
+
     /// The fused decode executable for this (batch, k) combination, if
     /// the artifacts provide one (older artifact sets predate the
     /// fused-sampling ABI — callers fall back to the host path).
@@ -964,6 +1198,17 @@ impl Engine {
             None => format!("decode_sample_b{batch}"),
         };
         self.session.manifest().executables.get(&name)
+    }
+
+    /// The fused decode executable serving this exact weight set (the
+    /// ragged-aware counterpart of [`Engine::fused_decode_spec`]).
+    pub fn fused_decode_spec_for(&self, batch: usize,
+                                 ff: Option<&PrunedWeights>)
+                                 -> Option<&ExecutableSpec> {
+        self.session
+            .manifest()
+            .executables
+            .get(&Self::decode_exe_name(batch, ff, true))
     }
 
     /// The compiled speculative-verify executable for this (batch,
@@ -1088,23 +1333,10 @@ impl Engine {
     fn decode_plan(&self, b: usize, ff: Option<&PrunedWeights>,
                    override_ff: Option<&FfOverride>, fused: bool)
                    -> Result<Rc<DispatchPlan>> {
-        let (name, set_id) = match ff {
-            Some(p) => (
-                if fused {
-                    format!("decode_pruned_sample_b{b}_k{}", p.k)
-                } else {
-                    format!("decode_pruned_b{b}_k{}", p.k)
-                },
-                p.id,
-            ),
-            None => (
-                if fused {
-                    format!("decode_sample_b{b}")
-                } else {
-                    format!("decode_b{b}")
-                },
-                override_ff.map_or(0, |o| o.id),
-            ),
+        let name = Self::decode_exe_name(b, ff, fused);
+        let set_id = match ff {
+            Some(p) => p.id,
+            None => override_ff.map_or(0, |o| o.id),
         };
         let tick = self.plan_ticks.get() + 1;
         self.plan_ticks.set(tick);
@@ -1378,10 +1610,10 @@ impl Engine {
 
         // --- selection phase ------------------------------------------
         let sel_t = Timer::start();
-        let (pruned, wanda_ffw, k_used): (Option<Rc<PrunedWeights>>,
-                                          Option<FfOverride>,
-                                          Option<usize>) = match mode {
-            Mode::Full => (None, None, None),
+        let (pruned, wanda_ffw, k_used, k_per_layer):
+            (Option<Rc<PrunedWeights>>, Option<FfOverride>,
+             Option<usize>, Option<Vec<usize>>) = match mode {
+            Mode::Full => (None, None, None, None),
             Mode::Griffin { keep, strategy } => {
                 let agg = selection::aggregate_stats(
                     &pre.stats
@@ -1390,28 +1622,27 @@ impl Engine {
                         .zip(pre.lengths.iter().copied())
                         .collect::<Vec<_>>(),
                 );
-                // snap to a keep whose decode_pruned executable exists
-                // at this batch bucket (aot.py emits the full k sweep
-                // only at B=1)
-                let keep = self.bucket_keep(pre.state.batch, keep)?;
-                let idx = self.select(&agg, keep, strategy)?;
-                let pw = self.gather_cached(&idx)?;
-                let k = pw.k;
-                (Some(pw), None, Some(k))
+                // the uniform strategies snap to a keep whose
+                // decode_pruned executable exists at this batch
+                // bucket; adaptive-layer allocates the matched global
+                // budget across depth and snaps to a compiled profile
+                let (pw, k, prof) = self.griffin_weights(
+                    pre.state.batch, &agg, keep, strategy)?;
+                (Some(pw), None, Some(k), prof)
             }
             Mode::Magnitude { keep } => {
                 let keep = self.bucket_keep(pre.state.batch, keep)?;
                 let idx = self.magnitude_experts(keep)?;
                 let pw = self.gather_cached(&idx)?;
                 let k = pw.k;
-                (Some(pw), None, Some(k))
+                (Some(pw), None, Some(k), None)
             }
             Mode::Wanda { keep } => {
                 // aggregate norms across the batch (rms over sequences)
                 let agg_x = aggregate_norms(&pre.xnorms);
                 let agg_z = aggregate_norms(&pre.znorms);
                 (None, Some(self.wanda_weights(&agg_x, &agg_z, keep)?),
-                 None)
+                 None, None)
             }
         };
         let select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
@@ -1505,6 +1736,7 @@ impl Engine {
                 logprobs: std::mem::take(&mut out_lps[i]),
                 finish: finish[i],
                 k_used,
+                k_per_layer: k_per_layer.clone(),
                 selection: SelectionInfo::from_mode(&mode),
                 speculative: None,
                 prefill_ms,
@@ -1607,6 +1839,10 @@ impl Engine {
             logprobs: lps,
             finish,
             k_used,
+            // the scan path serves adaptive-layer as uniform top-k at
+            // its compiled bucket (no ragged scan executables), so
+            // there are no per-layer widths to disclose
+            k_per_layer: None,
             selection: SelectionInfo::from_mode(&req.mode),
             speculative: None,
             prefill_ms,
@@ -1663,9 +1899,13 @@ impl Engine {
         let (pruned, wanda_ffw) = match mode {
             Mode::Full => (None, None),
             Mode::Griffin { keep, strategy } => {
-                let keep = self.bucket_keep(pre.state.batch, keep)?;
-                let idx = self.select(&pre.stats[0], keep, strategy)?;
-                (Some(self.gather_cached(&idx)?), None)
+                // shared selection routing: adaptive-layer scores
+                // through the ragged executables the serving path
+                // uses, so quality sweeps measure the real thing
+                let stats = pre.stats[0].clone();
+                let (pw, _, _) = self.griffin_weights(
+                    pre.state.batch, &stats, keep, strategy)?;
+                (Some(pw), None)
             }
             Mode::Magnitude { keep } => {
                 let keep = self.bucket_keep(pre.state.batch, keep)?;
@@ -1738,6 +1978,45 @@ mod tests {
         let agg = aggregate_norms(&[a, b]);
         assert!((agg[0][0] - 5.0).abs() < 1e-6);
         assert!((agg[0][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snap_profile_picks_nearest_by_l1_then_tilt() {
+        let cands = vec![
+            vec![8, 24],
+            vec![24, 8],
+            vec![8, 8],
+            vec![16, 16],
+            vec![24, 24],
+        ];
+        // exact matches snap to themselves
+        assert_eq!(snap_profile(&cands, &[16, 16]), Some(vec![16, 16]));
+        assert_eq!(snap_profile(&cands, &[8, 24]), Some(vec![8, 24]));
+        // (12, 20): L1 ties [8,24] and [16,16] at 8 — the dot-product
+        // tiebreak prefers the candidate tilting the same way
+        assert_eq!(snap_profile(&cands, &[12, 20]), Some(vec![8, 24]));
+        assert_eq!(snap_profile(&cands, &[20, 12]), Some(vec![24, 8]));
+        // near-uniform targets degrade to the uniform bucket
+        assert_eq!(snap_profile(&cands, &[15, 17]), Some(vec![16, 16]));
+        // arity mismatches are filtered; empty candidate set is None
+        assert_eq!(snap_profile(&cands, &[16, 16, 16]), None);
+        assert_eq!(snap_profile(&[], &[16, 16]), None);
+    }
+
+    #[test]
+    fn snap_profile_is_deterministic_on_full_ties() {
+        // two candidates equidistant AND equal dot product: the
+        // lexicographically smaller one wins, independent of input order
+        let a = vec![vec![8, 24], vec![24, 8]];
+        let b = vec![vec![24, 8], vec![8, 24]];
+        assert_eq!(snap_profile(&a, &[16, 16]), snap_profile(&b, &[16, 16]));
+        assert_eq!(snap_profile(&a, &[16, 16]), Some(vec![8, 24]));
+    }
+
+    #[test]
+    fn profile_frag_matches_emitter_naming() {
+        assert_eq!(profile_frag(&[8, 24]), "8x24");
+        assert_eq!(profile_frag(&[24, 128, 128, 224]), "24x128x128x224");
     }
 
     #[test]

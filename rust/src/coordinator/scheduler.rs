@@ -93,7 +93,7 @@ use crate::coordinator::engine::{
 };
 use crate::coordinator::specdec::{accept_lane, snap_draft_bucket};
 use crate::coordinator::router::Router;
-use crate::coordinator::selection::{aggregate_stats, LayerStats};
+use crate::coordinator::selection::{aggregate_stats, LayerStats, Strategy};
 use crate::coordinator::sequence::{FinishReason, GenRequest, Phase, Sequence};
 use crate::coordinator::slots::{SlotEntry, SlotPool};
 use crate::sampling::{
@@ -137,6 +137,7 @@ fn cancelled_response(req: &GenRequest) -> GenResponse {
         logprobs: Vec::new(),
         finish: FinishReason::Cancelled,
         k_used: None,
+        k_per_layer: None,
         selection: SelectionInfo::from_mode(&req.mode)
             .map(|s| s.with_requested_keep(req.keep_requested)),
         speculative: req.speculative.map(|d| SpecInfo {
@@ -161,6 +162,9 @@ struct SharedFf {
     pruned: Option<Rc<PrunedWeights>>,
     wanda: Option<FfOverride>,
     k: Option<usize>,
+    /// per-layer FF widths the adaptive-layer profile resolved to
+    /// (response provenance); None for uniform modes
+    k_per_layer: Option<Vec<usize>>,
     built_for: Option<Mode>,
     dirty: bool,
 }
@@ -884,10 +888,10 @@ impl Scheduler {
         if self.pool.active_mode().is_none() {
             return false;
         }
-        let k = self.shared.pruned.as_ref().map(|p| p.k);
         let Some(cap) = self
             .engine
-            .fused_decode_spec(self.slot_count, k)
+            .fused_decode_spec_for(self.slot_count,
+                                   self.shared.pruned.as_deref())
             .and_then(|e| e.sample_topk)
         else {
             return false; // artifacts predate the fused-sampling ABI
@@ -1183,6 +1187,25 @@ impl Scheduler {
             }
             _ => None,
         };
+        // adaptive-layer provenance: the exact per-layer widths the
+        // shared set was built at. A sequence that finished on its
+        // first token (before any decode tick rebuilt the shared
+        // weights, or under another mode's leftovers) never decoded
+        // through a pruned set at all — no widths to disclose.
+        let k_per_layer = match seq.req.mode {
+            Mode::Griffin { strategy: Strategy::AdaptiveLayer, .. } => {
+                if self
+                    .shared
+                    .built_for
+                    .is_some_and(|m| m.compatible(&seq.req.mode))
+                {
+                    self.shared.k_per_layer.clone()
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
         let n = seq.generated.len();
         Ok(GenResponse {
             id: seq.req.id,
@@ -1191,6 +1214,7 @@ impl Scheduler {
             logprobs: seq.logprobs,
             finish: seq.finish_reason.unwrap_or(FinishReason::Length),
             k_used,
+            k_per_layer,
             selection: SelectionInfo::from_mode(&seq.req.mode)
                 .map(|s| s.with_requested_keep(seq.req.keep_requested)),
             speculative: seq.req.speculative.map(|d| SpecInfo {
@@ -1229,6 +1253,7 @@ impl Scheduler {
                 self.shared.pruned = None;
                 self.shared.wanda = None;
                 self.shared.k = None;
+                self.shared.k_per_layer = None;
             }
             Mode::Magnitude { keep } => {
                 // static expert set: survives membership changes (and
@@ -1244,20 +1269,20 @@ impl Scheduler {
                     let idx = self.engine.magnitude_experts(keep)?;
                     let pw = self.engine.gather_cached(&idx)?;
                     self.shared.k = Some(pw.k);
+                    self.shared.k_per_layer = None;
                     self.shared.pruned = Some(pw);
                     self.shared.wanda = None;
                 }
             }
             Mode::Griffin { keep, strategy } => {
                 let occ = self.pool.occupied_indices();
-                let idx = if occ.len() == 1 {
-                    // slot-private selection fits the bucket: use the
-                    // paper's exact per-sequence expert set
-                    match &self.pool.get(occ[0]).unwrap().expert_idx {
-                        Some(ix) => ix.clone(),
-                        None => bail!("griffin slot without selection"),
-                    }
-                } else {
+                if let Strategy::AdaptiveLayer = strategy {
+                    // adaptive-layer always allocates from the occupied
+                    // slots' aggregate (a single slot's aggregate is its
+                    // own stats up to a per-layer scale the allocator's
+                    // participation weights are invariant to); the
+                    // engine snaps the budget to a compiled profile and
+                    // gathers ragged or uniform accordingly
                     let per: Vec<(LayerStats, usize)> = occ
                         .iter()
                         .filter_map(|&i| {
@@ -1269,17 +1294,45 @@ impl Scheduler {
                         bail!("griffin slots without statistics");
                     }
                     let agg = aggregate_stats(&per);
-                    let keep =
-                        self.engine.bucket_keep(self.slot_count, keep)?;
-                    self.engine.select(&agg, keep, strategy)?
-                };
-                // unchanged selections (stable aggregates, re-admitted
-                // single-slot prompts) come back from the gather cache
-                // without running gather_k{K}
-                let pw = self.engine.gather_cached(&idx)?;
-                self.shared.k = Some(pw.k);
-                self.shared.pruned = Some(pw);
-                self.shared.wanda = None;
+                    let (pw, k, prof) = self.engine.griffin_weights(
+                        self.slot_count, &agg, keep, strategy)?;
+                    self.shared.k = Some(k);
+                    self.shared.k_per_layer = prof;
+                    self.shared.pruned = Some(pw);
+                    self.shared.wanda = None;
+                } else {
+                    let idx = if occ.len() == 1 {
+                        // slot-private selection fits the bucket: use
+                        // the paper's exact per-sequence expert set
+                        match &self.pool.get(occ[0]).unwrap().expert_idx {
+                            Some(ix) => ix.clone(),
+                            None => bail!("griffin slot without selection"),
+                        }
+                    } else {
+                        let per: Vec<(LayerStats, usize)> = occ
+                            .iter()
+                            .filter_map(|&i| {
+                                let e = self.pool.get(i).unwrap();
+                                e.stats.clone().map(|s| (s, e.prompt_len))
+                            })
+                            .collect();
+                        if per.is_empty() {
+                            bail!("griffin slots without statistics");
+                        }
+                        let agg = aggregate_stats(&per);
+                        let keep =
+                            self.engine.bucket_keep(self.slot_count, keep)?;
+                        self.engine.select(&agg, keep, strategy)?
+                    };
+                    // unchanged selections (stable aggregates,
+                    // re-admitted single-slot prompts) come back from
+                    // the gather cache without running gather_k{K}
+                    let pw = self.engine.gather_cached(&idx)?;
+                    self.shared.k = Some(pw.k);
+                    self.shared.k_per_layer = None;
+                    self.shared.pruned = Some(pw);
+                    self.shared.wanda = None;
+                }
             }
             Mode::Wanda { keep } => {
                 let occ = self.pool.occupied_indices();
@@ -1300,6 +1353,7 @@ impl Scheduler {
                     Some(self.engine.wanda_weights(&ax, &az, keep)?);
                 self.shared.pruned = None;
                 self.shared.k = None;
+                self.shared.k_per_layer = None;
             }
         }
         self.shared.built_for = Some(mode);

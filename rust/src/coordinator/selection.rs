@@ -18,6 +18,11 @@ pub enum Strategy {
     Sampling { seed: u64 },
     /// ablation: top-k/2 then weighted-sample the rest
     TopKPlusSampling { seed: u64 },
+    /// extension (CFSP-style): one global expert budget allocated
+    /// non-uniformly across depth from the per-layer flocking mass
+    /// (`allocate_layer_budget`), then per-layer top-k at the awarded
+    /// widths
+    AdaptiveLayer,
 }
 
 /// Per-layer statistics for one sequence: `stats[l]` is s for FF block l
@@ -32,7 +37,12 @@ pub fn select_experts(stats: &LayerStats, k: usize, strategy: Strategy)
         .iter()
         .map(|s| {
             let mut idx = match strategy {
-                Strategy::TopK => crate::util::top_k_indices(s, k),
+                // at a single shared width the adaptive strategy IS
+                // top-k; the non-uniform widths come from
+                // `select_experts_ragged`
+                Strategy::TopK | Strategy::AdaptiveLayer => {
+                    crate::util::top_k_indices(s, k)
+                }
                 Strategy::Sampling { seed } => {
                     let mut rng = XorShift64Star::new(seed);
                     weighted_sample_without_replacement(s, k, &mut rng)
@@ -56,6 +66,122 @@ pub fn select_experts(stats: &LayerStats, k: usize, strategy: Strategy)
             idx.into_iter().map(|i| i as i32).collect()
         })
         .collect()
+}
+
+/// Per-layer expert sets at NON-UNIFORM widths: `ks[l]` experts for
+/// layer l, top-k of that layer's statistic. Returns `idx[l]` sorted
+/// ascending, exactly `ks[l]` unique in-range indices.
+pub fn select_experts_ragged(stats: &LayerStats, ks: &[usize])
+                             -> Vec<Vec<i32>> {
+    assert_eq!(stats.len(), ks.len(), "one width per layer");
+    stats
+        .iter()
+        .zip(ks)
+        .map(|(s, &k)| {
+            let mut idx = crate::util::top_k_indices(s, k);
+            idx.sort_unstable();
+            idx.dedup();
+            debug_assert_eq!(idx.len(), k.min(s.len()));
+            idx.into_iter().map(|i| i as i32).collect()
+        })
+        .collect()
+}
+
+/// Allocate one GLOBAL expert budget across layers from the flocking
+/// statistics: layer l's share grows with its *participation ratio*
+/// `(Σ_j s_j)² / (Σ_j s_j²)` — the effective number of active neurons.
+/// A layer whose activation mass is diffuse needs more experts to cover
+/// it than one dominated by a few neurons (CFSP's coarse-to-fine
+/// observation applied to GRIFFIN's eq. 6 statistic).
+///
+/// Guards: every layer gets at least `floor` experts, the first and
+/// last layers at least `2*floor` when there are 3+ layers (depth edges
+/// are the fragile ones), and no layer exceeds `ceil` (capped at its
+/// own d_ff). Seats are awarded one at a time — floors first
+/// (smallest-k round-robin), then D'Hondt (`w_l / (k_l + 1)`, ties to
+/// the smaller layer index) — so the allocation for budget B is the
+/// first B seats of one deterministic sequence. That construction gives
+/// the invariants the property tests pin:
+///
+/// * conservation: `Σ k_l == min(budget, Σ ceil_l)` whenever
+///   `budget >= layers`, and never exceeds `max(budget, layers)` (one
+///   expert per layer is kept even under a degenerate budget — an
+///   all-zero FF block would change the residual stream
+///   discontinuously);
+/// * per-layer monotonicity in `budget` (a bigger budget only appends
+///   seats, never reshuffles);
+/// * uniform stats ⇒ uniform k (equal weights make D'Hondt a
+///   round-robin).
+pub fn allocate_layer_budget(
+    stats: &LayerStats,
+    budget: usize,
+    floor: usize,
+    ceil: usize,
+) -> Vec<usize> {
+    let layers = stats.len();
+    assert!(layers > 0, "allocate_layer_budget: no layers");
+    let ceil_l: Vec<usize> =
+        stats.iter().map(|s| ceil.min(s.len()).max(1)).collect();
+    let floor_l: Vec<usize> = (0..layers)
+        .map(|l| {
+            let f = if layers >= 3 && (l == 0 || l == layers - 1) {
+                2 * floor
+            } else {
+                floor
+            };
+            f.max(1).min(ceil_l[l])
+        })
+        .collect();
+    let weight: Vec<f64> = stats
+        .iter()
+        .map(|s| {
+            let sum: f64 = s.iter().map(|&v| v.max(0.0) as f64).sum();
+            let sq: f64 = s
+                .iter()
+                .map(|&v| {
+                    let v = v.max(0.0) as f64;
+                    v * v
+                })
+                .sum();
+            if sq <= 0.0 {
+                1.0
+            } else {
+                (sum * sum / sq).max(1e-9)
+            }
+        })
+        .collect();
+
+    let mut k = vec![0usize; layers];
+    let seats = budget.min(ceil_l.iter().sum());
+    for _ in 0..seats {
+        // floor phase: any layer still below its floor takes priority,
+        // smallest current k first (an even fill under tiny budgets)
+        let under: Option<usize> = (0..layers)
+            .filter(|&l| k[l] < floor_l[l])
+            .min_by_key(|&l| (k[l], l));
+        let next = match under {
+            Some(l) => Some(l),
+            // D'Hondt phase: maximize w_l / (k_l + 1) under the ceiling
+            None => (0..layers)
+                .filter(|&l| k[l] < ceil_l[l])
+                .max_by(|&a, &b| {
+                    let sa = weight[a] / (k[a] as f64 + 1.0);
+                    let sb = weight[b] / (k[b] as f64 + 1.0);
+                    sa.partial_cmp(&sb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(b.cmp(&a))
+                }),
+        };
+        match next {
+            Some(l) => k[l] += 1,
+            None => break,
+        }
+    }
+    // degenerate budget < layers: keep one expert per layer anyway
+    for kl in &mut k {
+        *kl = (*kl).max(1);
+    }
+    k
 }
 
 /// Weighted sampling without replacement (probabilities ∝ weights).
@@ -425,6 +551,121 @@ mod tests {
         for m in &mask {
             assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 4);
         }
+    }
+
+    // -- allocate_layer_budget property tests (engine-free) ------------
+
+    /// Synthetic 4-layer stats with distinct concentration profiles:
+    /// sharp edges, diffuse middle.
+    fn stats4() -> LayerStats {
+        vec![
+            vec![9.0, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1],
+            vec![1.0, 0.9, 1.1, 0.8, 1.2, 0.95, 1.05, 1.0],
+            vec![2.0, 1.0, 0.5, 2.5, 1.5, 0.7, 1.8, 1.1],
+            vec![8.0, 0.2, 0.1, 0.1, 0.2, 0.1, 0.1, 0.1],
+        ]
+    }
+
+    #[test]
+    fn budget_allocation_conserves_flops() {
+        // FLOP conservation: each expert costs the same per-layer FLOPs
+        // on this model family (d_ff rows of d_model), so Σ k_l tracks
+        // the global FLOP budget exactly.
+        let stats = stats4();
+        for budget in 4..=32 {
+            let k = allocate_layer_budget(&stats, budget, 1, 8);
+            let total: usize = k.iter().sum();
+            assert!(total <= budget.max(stats.len()),
+                    "budget {budget} overspent: {k:?}");
+            let ceil_total = 8 * stats.len();
+            assert_eq!(total, budget.min(ceil_total),
+                       "budget {budget} underspent: {k:?}");
+        }
+    }
+
+    #[test]
+    fn budget_allocation_is_monotone_in_budget() {
+        let stats = stats4();
+        let mut prev = allocate_layer_budget(&stats, 4, 1, 8);
+        for budget in 5..=40 {
+            let k = allocate_layer_budget(&stats, budget, 1, 8);
+            for (l, (&a, &b)) in prev.iter().zip(&k).enumerate() {
+                assert!(b >= a,
+                        "layer {l} shrank {a}->{b} at budget {budget}");
+            }
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn budget_allocation_respects_floor_and_ceiling_guards() {
+        let stats = stats4();
+        let (floor, ceil) = (2usize, 6usize);
+        // enough budget to honor every floor (edges get 2*floor)
+        let k = allocate_layer_budget(&stats, 20, floor, ceil);
+        assert!(k[0] >= 2 * floor && k[3] >= 2 * floor,
+                "edge layers carry the raised floor: {k:?}");
+        assert!(k[1] >= floor && k[2] >= floor, "{k:?}");
+        assert!(k.iter().all(|&kl| kl <= ceil), "{k:?}");
+        // a huge budget saturates at the ceiling, never beyond
+        let k = allocate_layer_budget(&stats, 1000, floor, ceil);
+        assert_eq!(k, vec![ceil; 4]);
+        // ceiling is additionally capped at each layer's own d_ff
+        let k = allocate_layer_budget(&stats, 1000, floor, 64);
+        assert_eq!(k, vec![8; 4]);
+    }
+
+    #[test]
+    fn budget_allocation_degenerate_cases() {
+        // uniform stats -> uniform k (equal weights round-robin)
+        let uniform: LayerStats = vec![vec![1.0; 8]; 4];
+        let k = allocate_layer_budget(&uniform, 16, 1, 8);
+        assert_eq!(k, vec![4; 4]);
+        // ... including on a 2-layer model (no edge boost below L=3)
+        let uniform2: LayerStats = vec![vec![1.0; 8]; 2];
+        assert_eq!(allocate_layer_budget(&uniform2, 8, 1, 8),
+                   vec![4, 4]);
+        // single layer: the whole budget, capped at the ceiling
+        let one: LayerStats = vec![vec![1.0; 8]];
+        assert_eq!(allocate_layer_budget(&one, 5, 1, 8), vec![5]);
+        assert_eq!(allocate_layer_budget(&one, 50, 1, 6), vec![6]);
+        // budget below the floors: even split, never zero experts
+        let k = allocate_layer_budget(&stats4(), 2, 4, 8);
+        assert_eq!(k.iter().sum::<usize>(), 4,
+                   "one expert per layer survives a degenerate budget");
+        assert!(k.iter().all(|&kl| kl == 1), "{k:?}");
+        let k = allocate_layer_budget(&stats4(), 6, 4, 8);
+        assert!(k.iter().all(|&kl| kl >= 1 && kl <= 2),
+                "sub-floor budgets fill evenly: {k:?}");
+    }
+
+    #[test]
+    fn budget_allocation_favors_diffuse_layers() {
+        let stats = stats4();
+        // no guards in the way: middle layers are diffuse, edges sharp
+        let k = allocate_layer_budget(&stats, 16, 1, 8);
+        assert!(k[1] > k[0] && k[1] > k[3],
+                "diffuse layer outweighs sharp edges: {k:?}");
+    }
+
+    #[test]
+    fn ragged_selection_is_per_layer_topk() {
+        let stats = stats2();
+        let idx = select_experts_ragged(&stats, &[2, 4]);
+        assert_eq!(idx[0], vec![1, 4]);
+        assert_eq!(idx[1], vec![0, 2, 3, 6]);
+        // matches the uniform selector layer by layer
+        let u2 = select_experts(&stats, 2, Strategy::TopK);
+        let u4 = select_experts(&stats, 4, Strategy::TopK);
+        assert_eq!(idx[0], u2[0]);
+        assert_eq!(idx[1], u4[1]);
+    }
+
+    #[test]
+    fn adaptive_strategy_at_uniform_width_is_topk() {
+        let stats = stats2();
+        assert_eq!(select_experts(&stats, 3, Strategy::AdaptiveLayer),
+                   select_experts(&stats, 3, Strategy::TopK));
     }
 
     #[test]

@@ -57,6 +57,9 @@ impl Mode {
                 Strategy::TopKPlusSampling { .. } => {
                     format!("topk+sampling@{keep}")
                 }
+                Strategy::AdaptiveLayer => {
+                    format!("adaptive-layer@{keep}")
+                }
             },
             Mode::Magnitude { keep } => format!("magnitude@{keep}"),
             Mode::Wanda { keep } => format!("wanda@{keep}"),
@@ -97,9 +100,10 @@ impl SelectionInfo {
                     Strategy::TopK => "topk",
                     Strategy::Sampling { .. } => "sampling",
                     Strategy::TopKPlusSampling { .. } => "topk+sampling",
+                    Strategy::AdaptiveLayer => "adaptive-layer",
                 }),
                 seed: match strategy {
-                    Strategy::TopK => None,
+                    Strategy::TopK | Strategy::AdaptiveLayer => None,
                     Strategy::Sampling { seed }
                     | Strategy::TopKPlusSampling { seed } => Some(*seed),
                 },
@@ -153,6 +157,10 @@ pub struct GenResponse {
     pub logprobs: Vec<f32>,
     pub finish: FinishReason,
     pub k_used: Option<usize>,
+    /// adaptive-layer provenance: the exact per-layer FF widths the
+    /// response was decoded at (layer order). None for uniform keeps —
+    /// `k_used` already tells the whole story there.
+    pub k_per_layer: Option<Vec<usize>>,
     /// selection provenance (v2 responses surface it as `prune`)
     pub selection: Option<SelectionInfo>,
     /// speculative-decoding provenance (v2 `speculative` object); None
@@ -175,6 +183,11 @@ mod tests {
         assert_eq!(Mode::Full.label(), "full");
         assert_eq!(Mode::griffin(0.5).label(), "griffin@0.5");
         assert_eq!(Mode::Wanda { keep: 0.75 }.label(), "wanda@0.75");
+        let a = Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::AdaptiveLayer,
+        };
+        assert_eq!(a.label(), "adaptive-layer@0.5");
     }
 
     #[test]
@@ -191,6 +204,13 @@ mod tests {
         let t = SelectionInfo::from_mode(&Mode::griffin(0.5)).unwrap();
         assert_eq!(t.strategy, Some("topk"));
         assert_eq!(t.seed, None, "deterministic top-k carries no seed");
+        let a = SelectionInfo::from_mode(&Mode::Griffin {
+            keep: 0.5,
+            strategy: Strategy::AdaptiveLayer,
+        })
+        .unwrap();
+        assert_eq!(a.strategy, Some("adaptive-layer"));
+        assert_eq!(a.seed, None, "budget allocation is deterministic");
         let w =
             SelectionInfo::from_mode(&Mode::Wanda { keep: 0.5 }).unwrap();
         assert_eq!((w.method, w.strategy, w.seed), ("wanda", None, None));

@@ -95,6 +95,70 @@ pub fn ablation_adaptive(args: &Args) -> Result<()> {
     write_results(&format!("ablation_adaptive_{model}.csv"), &csv)
 }
 
+/// Extension frontier: `adaptive-layer` vs uniform top-k at MATCHED
+/// global FLOP budgets (the keep sweep's compiled buckets). Quality is
+/// teacher-forced LM perplexity through the same serving path responses
+/// take (`score_continuation`, so the adaptive arm runs the real ragged
+/// executables); speed is greedy decode throughput at the same budget.
+/// Together the rows trace the quality-vs-speed frontier the
+/// adaptive-layer axis buys — at the sweep's floor and ceiling the two
+/// strategies coincide by construction (no room to tilt), so their PPL
+/// columns must match there.
+pub fn adaptive_frontier(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small-swiglu").to_string();
+    let mut engine = engine_auto(&model)?;
+    let n = args.usize_or("samples", 8)?;
+    let gen_len = args.usize_or("gen", 32)?;
+    let (p, g) = (96usize, 48usize);
+    let windows = tasks::lm_windows(tasks::HELDOUT_SEED + 31, n, p + g);
+
+    let mut csv =
+        String::from("strategy,keep,k_used,k_per_layer,ppl,toks_per_sec\n");
+    println!("adaptive-layer vs uniform keep at matched FLOP budgets:");
+    for keep in [0.25, 0.5, 0.75, 1.0] {
+        let mut row = Vec::new();
+        for strategy in [Strategy::TopK, Strategy::AdaptiveLayer] {
+            let mode = Mode::Griffin { keep, strategy };
+            let mut nll_total = 0.0;
+            let mut count = 0usize;
+            for w in &windows {
+                let nll =
+                    engine.score_continuation(&w[..p], &w[p..], mode)?;
+                nll_total += nll.iter().sum::<f64>();
+                count += nll.len();
+            }
+            let ppl = eval::perplexity(nll_total, count);
+            let mut req = crate::coordinator::sequence::GenRequest::greedy(
+                0, windows[0][..p].to_vec(), gen_len, mode);
+            req.stop_at_eos = false;
+            let resp = engine.generate(&req)?;
+            let label = match strategy {
+                Strategy::AdaptiveLayer => "adaptive-layer",
+                _ => "uniform",
+            };
+            let widths = resp
+                .k_per_layer
+                .as_ref()
+                .map(|v| {
+                    v.iter()
+                        .map(|k| k.to_string())
+                        .collect::<Vec<_>>()
+                        .join("x")
+                })
+                .unwrap_or_default();
+            let _ = writeln!(
+                csv, "{label},{keep},{},{widths},{ppl:.4},{:.1}",
+                resp.k_used.unwrap_or(0), resp.tokens_per_sec);
+            row.push((label, ppl, resp.tokens_per_sec));
+        }
+        println!(
+            "  keep={keep}: uniform ppl {:.3} ({:.0} tok/s) | \
+             adaptive ppl {:.3} ({:.0} tok/s)",
+            row[0].1, row[0].2, row[1].1, row[1].2);
+    }
+    write_results(&format!("adaptive_frontier_{model}.csv"), &csv)
+}
+
 /// Run the masked gather executable with explicit idx/mask (helper for
 /// the uniform arm of the adaptive ablation).
 fn engine_gather_masked(

@@ -31,6 +31,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "table5", about: "expert selection strategies (top-k vs sampling)", run: tables::table5 },
         Experiment { id: "ablation-stat", about: "eq.6 relative statistic vs raw activation norms", run: ablation::ablation_stat },
         Experiment { id: "ablation-adaptive", about: "uniform vs layer-adaptive expert budgets (extension)", run: ablation::ablation_adaptive },
+        Experiment { id: "adaptive-frontier", about: "quality-vs-speed frontier: uniform vs adaptive-layer keep at matched FLOP budgets", run: ablation::adaptive_frontier },
     ]
 }
 

@@ -5,6 +5,8 @@
 //! model (seeded weights, 2 layers, byte-level vocab) that implements
 //! the full compiled-executable ABI **by name** — `prefill_b{B}_s{S}`,
 //! `prefill_sample_b{B}_s{S}`, `decode[_pruned][_sample]_b{B}[_k{K}]`,
+//! ragged layer-adaptive variants
+//! `decode_pruned[_sample]_b{B}_l{k0}x{k1}` / `gather_l{k0}x{k1}`,
 //! `verify_b{B}_s{D}`, `splice_b{src}_b{dst}`,
 //! `gather[_masked]_k{K}` — with the same
 //! input/output orders, the same `[L, B, H, Smax, dh]` KV convention,
@@ -75,10 +77,44 @@ const EPS: f32 = 1e-5;
 pub const BATCH_BUCKETS: [usize; 3] = [1, 2, 4];
 /// Prompt-phase seq buckets.
 pub const PREFILL_BUCKETS: [usize; 2] = [16, 32];
-/// Pruned-decode k sweep (full sweep at B=1, headline k elsewhere —
-/// the same emission rule as aot.py).
+/// Pruned-decode k sweep, compiled at EVERY batch bucket (the same
+/// emission rule as aot.py `emit_all` — non-headline keeps at B>1 are
+/// served exactly instead of snapping to the headline bucket).
 pub const KEEP_KS: [usize; 3] = [8, 16, 24];
 const K_HEADLINE: usize = 16;
+
+/// Non-uniform per-layer-k profiles compiled for the adaptive-layer
+/// strategy, in lockstep with aot.py `ragged_profiles`: balanced tilts
+/// at the matched total budget `N_LAYERS * K_HEADLINE` — profile i
+/// gives layer i the lowest keep bucket and its mirror layer the
+/// highest, everything else the headline bucket. The engine snaps an
+/// `allocate_layer_budget` allocation onto the nearest compiled
+/// profile by L1 distance.
+pub fn ragged_profiles() -> Vec<Vec<usize>> {
+    let (lo, hi) = (KEEP_KS[0], KEEP_KS[KEEP_KS.len() - 1]);
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for i in 0..N_LAYERS {
+        let j = N_LAYERS - 1 - i;
+        if i == j {
+            continue;
+        }
+        let mut p = vec![K_HEADLINE; N_LAYERS];
+        p[i] = lo;
+        p[j] = hi;
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// `8x24`-style name fragment of a ragged profile (aot.py `lname`).
+pub fn ragged_name(lks: &[usize]) -> String {
+    lks.iter()
+        .map(|k| k.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
 /// Speculative-verify draft buckets (positions per `verify_b{B}_s{D}`
 /// call). Kept in lockstep with aot.py VERIFY_BUCKETS.
 pub const VERIFY_BUCKETS: [usize; 2] = [4, 8];
@@ -136,6 +172,19 @@ fn pruned_ios(k: usize) -> Vec<IoSpec> {
     ]
 }
 
+/// Packed-flat pruned tensors at non-uniform per-layer widths: w1p/wgp
+/// stack per-layer row blocks as [sum(lks), D], w2p concatenates the
+/// per-layer column blocks as [D, sum(lks)] (aot.py
+/// `pruned_specs_ragged`).
+fn pruned_ios_ragged(lks: &[usize]) -> Vec<IoSpec> {
+    let ksum: usize = lks.iter().sum();
+    vec![
+        io("w1p", &[ksum, D_MODEL], "f32"),
+        io("w2p", &[D_MODEL, ksum], "f32"),
+        io("wgp", &[ksum, D_MODEL], "f32"),
+    ]
+}
+
 fn cache_shape(b: usize) -> Vec<usize> {
     vec![N_LAYERS, b, N_HEADS, MAX_SEQ, HEAD_DIM]
 }
@@ -162,6 +211,7 @@ fn exe(name: String, kind: &str, batch: Option<usize>, seq: Option<usize>,
         gen: None,
         sample_topk,
         src_batch,
+        layer_ks: None,
         inputs,
         outputs,
     }
@@ -287,9 +337,7 @@ pub fn reference_manifest() -> Manifest {
                     Some(dd), None, None, None, inputs, outputs));
         }
 
-        let headline = [K_HEADLINE];
-        let ks: &[usize] = if b == 1 { &KEEP_KS } else { &headline };
-        for &k in ks {
+        for &k in &KEEP_KS {
             let mut inputs = nonff_ios();
             inputs.extend(pruned_ios(k));
             inputs.extend(kv_tail.clone());
@@ -306,6 +354,32 @@ pub fn reference_manifest() -> Manifest {
                     "decode_pruned_sample", Some(b), None, Some(k),
                     Some(CPU_SAMPLE_TOPK), None, inputs,
                     sample_outs(kv_outs.clone())));
+        }
+
+        // layer-adaptive (ragged per-layer k) decode variants
+        for lks in ragged_profiles() {
+            let frag = ragged_name(&lks);
+            let mut inputs = nonff_ios();
+            inputs.extend(pruned_ios_ragged(&lks));
+            inputs.extend(kv_tail.clone());
+            let mut outputs = vec![io("logits", &[b, v], "f32")];
+            outputs.extend(kv_outs.clone());
+            let mut e = exe(format!("decode_pruned_b{b}_l{frag}"),
+                            "decode_pruned_ragged", Some(b), None, None,
+                            None, None, inputs, outputs);
+            e.layer_ks = Some(lks.clone());
+            add(e);
+
+            let mut inputs = nonff_ios();
+            inputs.extend(pruned_ios_ragged(&lks));
+            inputs.extend(kv_tail.clone());
+            inputs.extend(sampling_ios(b));
+            let mut e = exe(format!("decode_pruned_sample_b{b}_l{frag}"),
+                            "decode_pruned_ragged_sample", Some(b), None,
+                            None, Some(CPU_SAMPLE_TOPK), None, inputs,
+                            sample_outs(kv_outs.clone()));
+            e.layer_ks = Some(lks);
+            add(e);
         }
 
         // admission splice into the scheduler's pool bucket
@@ -345,6 +419,23 @@ pub fn reference_manifest() -> Manifest {
             add(exe(format!("gather_masked_k{k}"), "gather_masked", None,
                     None, Some(k), None, None, inputs, outputs));
         }
+    }
+
+    // ragged gathers: idx is the flat concat of per-layer expert sets
+    for lks in ragged_profiles() {
+        let ksum: usize = lks.iter().sum();
+        let inputs = vec![
+            io("w1", &[l, f, d], "f32"),
+            io("w2", &[l, d, f], "f32"),
+            io("wg", &[l, f, d], "f32"),
+            io("idx", &[ksum], "i32"),
+        ];
+        let outputs = pruned_ios_ragged(&lks);
+        let mut e = exe(format!("gather_l{}", ragged_name(&lks)),
+                        "gather_ragged", None, None, None, None, None,
+                        inputs, outputs);
+        e.layer_ks = Some(lks);
+        add(e);
     }
 
     Manifest {
@@ -551,14 +642,51 @@ impl<'a> Params<'a> {
     }
 }
 
-/// FF weight stacks: full ([L,F,D]/[L,D,F]) or gathered expert slices
-/// ([L,K,D]/[L,D,K]) — one decode body serves both, like `_decode_step`
-/// in model.py.
+/// FF weight stacks: full ([L,F,D]/[L,D,F]), uniformly gathered expert
+/// slices ([L,K,D]/[L,D,K]), or ragged packed layer-adaptive slices
+/// (w1/wg [ΣK,D] row blocks, w2 [D,ΣK] column blocks) — one decode
+/// body serves all three, like `_decode_step` in model.py.
 struct FfWeights<'a> {
     w1: &'a [f32],
     w2: &'a [f32],
     wg: &'a [f32],
-    width: usize,
+    /// per-layer FF widths (all equal on the uniform paths)
+    widths: Vec<usize>,
+    /// prefix sums of `widths` (len L+1): layer l's w1/wg rows start at
+    /// offs[l] (uniform included — offs[l] = l*W there)
+    offs: Vec<usize>,
+    /// ragged w2 layout: [D, ΣK] with per-layer column blocks, vs the
+    /// uniform per-layer-contiguous [L, D, W]
+    ragged: bool,
+}
+
+impl<'a> FfWeights<'a> {
+    fn uniform(w1: &'a [f32], w2: &'a [f32], wg: &'a [f32], width: usize)
+               -> FfWeights<'a> {
+        FfWeights {
+            w1,
+            w2,
+            wg,
+            widths: vec![width; N_LAYERS],
+            offs: (0..=N_LAYERS).map(|l| l * width).collect(),
+            ragged: false,
+        }
+    }
+
+    fn ragged(w1: &'a [f32], w2: &'a [f32], wg: &'a [f32], lks: &[usize])
+              -> FfWeights<'a> {
+        let mut offs = Vec::with_capacity(lks.len() + 1);
+        offs.push(0);
+        for &k in lks {
+            offs.push(offs.last().unwrap() + k);
+        }
+        FfWeights { w1, w2, wg, widths: lks.to_vec(), offs, ragged: true }
+    }
+
+    /// Scratch size for the activation buffer z.
+    fn max_width(&self) -> usize {
+        self.widths.iter().copied().max().unwrap_or(0)
+    }
 }
 
 // -- math helpers ------------------------------------------------------
@@ -606,12 +734,16 @@ fn silu(x: f32) -> f32 {
 }
 
 /// z = act(h2 @ wg^T) * (h2 @ w1^T) over one row (swiglu — the
-/// reference config is GLU; `width` is F or the gathered K).
+/// reference config is GLU). Layer l's w1/wg rows start at offs[l] in
+/// both the uniform and the ragged packed stacks; only z[0..widths[l]]
+/// is written.
 fn ff_activation(ff: &FfWeights, layer: usize, h2: &[f32],
                  z: &mut [f32]) {
-    let (d, w) = (D_MODEL, ff.width);
-    let w1_l = &ff.w1[layer * w * d..(layer + 1) * w * d];
-    let wg_l = &ff.wg[layer * w * d..(layer + 1) * w * d];
+    let d = D_MODEL;
+    let w = ff.widths[layer];
+    let base = ff.offs[layer] * d;
+    let w1_l = &ff.w1[base..base + w * d];
+    let wg_l = &ff.wg[base..base + w * d];
     for j in 0..w {
         let mut a1 = 0f32;
         let mut ag = 0f32;
@@ -625,12 +757,21 @@ fn ff_activation(ff: &FfWeights, layer: usize, h2: &[f32],
     }
 }
 
-/// out += z @ w2^T over one row; w2 stack [L, D, width].
+/// out += z @ w2^T over one row. Uniform stacks are per-layer
+/// contiguous [L, D, W]; the ragged packed layout is one [D, ΣK]
+/// matrix whose layer-l columns sit at offs[l]..offs[l+1] of each row.
 fn ff_project(ff: &FfWeights, layer: usize, z: &[f32], out: &mut [f32]) {
-    let (d, w) = (D_MODEL, ff.width);
-    let w2_l = &ff.w2[layer * d * w..(layer + 1) * d * w];
+    let d = D_MODEL;
+    let w = ff.widths[layer];
     for i in 0..d {
-        let row = &w2_l[i * w..(i + 1) * w];
+        let row = if ff.ragged {
+            let ksum = *ff.offs.last().unwrap();
+            let start = i * ksum + ff.offs[layer];
+            &ff.w2[start..start + w]
+        } else {
+            let w2_l = &ff.w2[layer * d * w..(layer + 1) * d * w];
+            &w2_l[i * w..(i + 1) * w]
+        };
         let mut acc = 0f32;
         for j in 0..w {
             acc += row[j] * z[j];
@@ -728,7 +869,7 @@ struct PrefillOutputs {
 /// norms over valid (non-pad) rows only.
 fn prefill_body(p: &Params, ff: &FfWeights, tokens: &[i32], lens: &[i32],
                 b: usize, s: usize) -> PrefillOutputs {
-    let (d, l_n, f) = (D_MODEL, N_LAYERS, ff.width);
+    let (d, l_n, f) = (D_MODEL, N_LAYERS, ff.max_width());
     let row_sz = N_HEADS * MAX_SEQ * HEAD_DIM;
     let mut x = vec![0f32; b * s * d];
     for bi in 0..b {
@@ -883,7 +1024,7 @@ fn decode_body(p: &Params, ff: &FfWeights, kcache: &mut [f32],
     let mut v = vec![0f32; d];
     let mut attn = vec![0f32; d];
     let mut head_out = vec![0f32; HEAD_DIM];
-    let mut z = vec![0f32; ff.width];
+    let mut z = vec![0f32; ff.max_width()];
     for bi in 0..b {
         // dynamic_update_slice semantics: out-of-range write positions
         // clamp instead of trapping (the scheduler pins free slots to 0
@@ -944,22 +1085,23 @@ impl CpuSession {
         match spec.kind.as_str() {
             "prefill" | "prefill_sample" => self.interp_prefill(spec, &a),
             "decode" | "decode_pruned" | "decode_sample"
-            | "decode_pruned_sample" => self.interp_decode(spec, &a),
+            | "decode_pruned_sample" | "decode_pruned_ragged"
+            | "decode_pruned_ragged_sample" => {
+                self.interp_decode(spec, &a)
+            }
             "verify" => self.interp_verify(spec, &a),
             "splice" => self.interp_splice(spec, &a),
             "gather" | "gather_masked" => self.interp_gather(spec, &a),
+            "gather_ragged" => self.interp_gather_ragged(spec, &a),
             other => bail!("{}: kind {other:?} not served by the CPU \
                             reference substrate", spec.name),
         }
     }
 
     fn full_ff<'a>(&self, a: &Args<'a>) -> Result<FfWeights<'a>> {
-        Ok(FfWeights {
-            w1: a.f32("w1")?,
-            w2: a.f32("w2")?,
-            wg: a.f32("wg")?,
-            width: D_FF,
-        })
+        Ok(FfWeights::uniform(
+            a.f32("w1")?, a.f32("w2")?, a.f32("wg")?, D_FF,
+        ))
     }
 
     fn interp_prefill(&self, spec: &ExecutableSpec, a: &Args)
@@ -1032,11 +1174,14 @@ impl CpuSession {
         let sampled = spec.kind.ends_with("sample");
         let p = Params::from(a)?;
         let ff = if pruned {
-            FfWeights {
-                w1: a.f32("w1p")?,
-                w2: a.f32("w2p")?,
-                wg: a.f32("wgp")?,
-                width: spec.k.context("pruned decode without k")?,
+            let (w1p, w2p, wgp) =
+                (a.f32("w1p")?, a.f32("w2p")?, a.f32("wgp")?);
+            match &spec.layer_ks {
+                Some(lks) => FfWeights::ragged(w1p, w2p, wgp, lks),
+                None => FfWeights::uniform(
+                    w1p, w2p, wgp,
+                    spec.k.context("pruned decode without k")?,
+                ),
             }
         } else {
             self.full_ff(a)?
@@ -1177,6 +1322,47 @@ impl CpuSession {
                     w2p[(l * d + r) * k + j] = w2[(l * d + r) * f + e];
                 }
             }
+        }
+        Ok(vec![
+            HostData::F32(w1p),
+            HostData::F32(w2p),
+            HostData::F32(wgp),
+        ])
+    }
+
+    /// Ragged gather (model.py `gather_experts_ragged`): idx is the
+    /// flat [ΣK] concat of per-layer expert sets; outputs use the
+    /// packed layout — w1p/wgp [ΣK, D] row blocks, w2p [D, ΣK] column
+    /// blocks.
+    fn interp_gather_ragged(&self, spec: &ExecutableSpec, a: &Args)
+                            -> Result<Vec<HostData>> {
+        let lks = spec
+            .layer_ks
+            .as_ref()
+            .context("gather_ragged without layer_ks")?;
+        let ksum: usize = lks.iter().sum();
+        let (d, f) = (D_MODEL, D_FF);
+        let w1 = a.f32("w1")?;
+        let w2 = a.f32("w2")?;
+        let wg = a.f32("wg")?;
+        let idx = a.i32("idx")?;
+        let mut w1p = vec![0f32; ksum * d];
+        let mut w2p = vec![0f32; d * ksum];
+        let mut wgp = vec![0f32; ksum * d];
+        let mut off = 0usize;
+        for (l, &k) in lks.iter().enumerate() {
+            for j in 0..k {
+                let e = (idx[off + j].max(0) as usize).min(f - 1);
+                let src1 = &w1[(l * f + e) * d..(l * f + e + 1) * d];
+                let srcg = &wg[(l * f + e) * d..(l * f + e + 1) * d];
+                let dst = (off + j) * d;
+                w1p[dst..dst + d].copy_from_slice(src1);
+                wgp[dst..dst + d].copy_from_slice(srcg);
+                for r in 0..d {
+                    w2p[r * ksum + off + j] = w2[(l * d + r) * f + e];
+                }
+            }
+            off += k;
         }
         Ok(vec![
             HostData::F32(w1p),
@@ -1511,12 +1697,25 @@ mod tests {
             "decode_b4", "decode_sample_b1", "decode_pruned_b1_k8",
             "decode_pruned_sample_b4_k16", "splice_b1_b4", "splice_b4_b4",
             "gather_k24", "gather_masked_k16", "verify_b1_s4",
-            "verify_b4_s8",
+            "verify_b4_s8", "decode_pruned_b1_l8x24",
+            "decode_pruned_sample_b4_l24x8", "gather_l8x24",
+            "gather_l24x8",
         ] {
             assert!(m.executables.contains_key(name), "missing {name}");
         }
-        // the full k sweep exists only at B=1, like aot.py emits it
-        assert!(!m.executables.contains_key("decode_pruned_b4_k8"));
+        // the full k sweep exists at EVERY batch bucket (aot.py emits
+        // it the same way — non-headline keeps at B>1 serve exactly)
+        for &b in &BATCH_BUCKETS {
+            for &k in &KEEP_KS {
+                assert!(m.executables
+                            .contains_key(&format!("decode_pruned_b{b}_k{k}")),
+                        "missing decode_pruned_b{b}_k{k}");
+            }
+        }
+        // ragged executables carry layer_ks meta, never k
+        let rg = &m.executables["decode_pruned_b2_l8x24"];
+        assert_eq!(rg.layer_ks, Some(vec![8, 24]));
+        assert_eq!(rg.k, None);
         // every executable's io lists are non-empty with valid dtypes
         for e in m.executables.values() {
             assert!(!e.inputs.is_empty() && !e.outputs.is_empty(),
@@ -1601,6 +1800,141 @@ mod tests {
         let w2p = outs[1].to_f32().unwrap();
         // w2p[l=0, r=0, j] == w2[l=0, r=0, idx[j]] (idx[j] = j here)
         assert_eq!(&w2p[..k], &w2_host[..k]);
+    }
+
+    #[test]
+    fn ragged_profiles_hold_the_headline_budget() {
+        let profs = ragged_profiles();
+        assert_eq!(profs, vec![vec![8, 24], vec![24, 8]]);
+        for p in &profs {
+            assert_eq!(p.iter().sum::<usize>(), N_LAYERS * K_HEADLINE,
+                       "tilts hold the matched FLOP budget");
+        }
+        assert_eq!(ragged_name(&[8, 24]), "8x24");
+    }
+
+    #[test]
+    fn ragged_gather_blocks_match_per_layer_uniform_gathers() {
+        // gather_l{k0}x{k1} output == the per-layer slices a host-side
+        // gather of each layer at its own width would produce (the
+        // byte-equality satellite of the layer-adaptive ABI)
+        let s = CpuSession::new();
+        let w = reference_weights(0);
+        let w1 = s.upload_tensor(&w["w1"]).unwrap();
+        let w2 = s.upload_tensor(&w["w2"]).unwrap();
+        let wg = s.upload_tensor(&w["wg"]).unwrap();
+        let lks = [8usize, 24];
+        // layer 0 picks experts 3.., layer 1 picks 1..
+        let idx0: Vec<i32> = (0..lks[0] as i32).map(|j| j + 3).collect();
+        let idx1: Vec<i32> = (0..lks[1] as i32).map(|j| j + 1).collect();
+        let flat: Vec<i32> =
+            idx0.iter().chain(&idx1).copied().collect();
+        let ksum: usize = lks.iter().sum();
+        let idx = s.upload_i32(&[ksum], &flat).unwrap();
+        let outs = s.run("gather_l8x24", &[&w1, &w2, &wg, &idx]).unwrap();
+        let w1p = outs[0].to_f32().unwrap();
+        let w2p = outs[1].to_f32().unwrap();
+        let wgp = outs[2].to_f32().unwrap();
+        let w1h = w["w1"].to_f32().unwrap();
+        let w2h = w["w2"].to_f32().unwrap();
+        let wgh = w["wg"].to_f32().unwrap();
+        let (d, f) = (D_MODEL, D_FF);
+        let mut off = 0usize;
+        for (l, &k) in lks.iter().enumerate() {
+            let sel: &[i32] = if l == 0 { &idx0 } else { &idx1 };
+            for (j, &e) in sel.iter().enumerate() {
+                let e = e as usize;
+                assert_eq!(&w1p[(off + j) * d..(off + j + 1) * d],
+                           &w1h[(l * f + e) * d..(l * f + e + 1) * d]);
+                assert_eq!(&wgp[(off + j) * d..(off + j + 1) * d],
+                           &wgh[(l * f + e) * d..(l * f + e + 1) * d]);
+                for r in 0..d {
+                    assert_eq!(w2p[r * ksum + off + j],
+                               w2h[(l * d + r) * f + e],
+                               "w2 column ({l},{j}) row {r}");
+                }
+            }
+            off += k;
+        }
+    }
+
+    #[test]
+    fn ragged_decode_at_uniform_widths_matches_uniform_decode() {
+        // the packed ragged layout at equal per-layer widths is byte-
+        // identical math to the uniform [L,K,D] bucket: same logits,
+        // same KV, same sampled stream. Exercised through a synthetic
+        // spec because compiled profiles are tilted by construction.
+        let s = CpuSession::new();
+        let w = reference_weights(0);
+        let m = reference_manifest();
+        let k = 16usize;
+        let b = 1usize;
+
+        // uniform gather at k=16
+        let w1 = s.upload_tensor(&w["w1"]).unwrap();
+        let w2 = s.upload_tensor(&w["w2"]).unwrap();
+        let wg = s.upload_tensor(&w["wg"]).unwrap();
+        let rows: Vec<i32> =
+            (0..(N_LAYERS * k) as i32).map(|j| (j * 7) % 32).collect();
+        let idx2d = s.upload_i32(&[N_LAYERS, k], &rows).unwrap();
+        let uni = s.run("gather_k16", &[&w1, &w2, &wg, &idx2d]).unwrap();
+
+        // ragged gather over the same per-layer sets: flat concat of
+        // the same rows in the same order
+        let idx_flat = s.upload_i32(&[N_LAYERS * k], &rows).unwrap();
+        let mut gspec = m.executables["gather_l8x24"].clone();
+        gspec.layer_ks = Some(vec![k; N_LAYERS]);
+        gspec.inputs[3].shape = vec![N_LAYERS * k];
+        for o in &mut gspec.outputs {
+            o.shape = match o.name.as_str() {
+                "w2p" => vec![D_MODEL, N_LAYERS * k],
+                _ => vec![N_LAYERS * k, D_MODEL],
+            };
+        }
+        let a = [&w1, &w2, &wg, &idx_flat];
+        let outs = s.interp(&gspec, &a).unwrap();
+        let rag = s.outputs(&gspec, outs).unwrap();
+        // w1p/wgp agree flat (uniform [L,K,D] reshaped IS the packed
+        // layout); w2p differs in layout so compare through decode
+        assert_eq!(uni[0].to_f32().unwrap(), rag[0].to_f32().unwrap());
+        assert_eq!(uni[2].to_f32().unwrap(), rag[2].to_f32().unwrap());
+
+        let nonff: Vec<DeviceTensor> = m
+            .nonff_param_order
+            .iter()
+            .map(|n| s.upload_tensor(&w[n]).unwrap())
+            .collect();
+        let row = N_HEADS * MAX_SEQ * HEAD_DIM;
+        let kc = s
+            .upload_f32(&cache_shape(b), &vec![0f32; N_LAYERS * b * row])
+            .unwrap();
+        let vc = s
+            .upload_f32(&cache_shape(b), &vec![0f32; N_LAYERS * b * row])
+            .unwrap();
+        let tok = s.upload_i32(&[b], &[7]).unwrap();
+        let pos = s.upload_i32(&[b], &[0]).unwrap();
+
+        let mut args: Vec<&DeviceTensor> = nonff.iter().collect();
+        args.extend([&uni[0], &uni[1], &uni[2], &kc, &vc, &tok, &pos]);
+        let u = s.run("decode_pruned_b1_k16", &args).unwrap();
+
+        let mut dspec = m.executables["decode_pruned_b1_l8x24"].clone();
+        dspec.layer_ks = Some(vec![k; N_LAYERS]);
+        for io in &mut dspec.inputs {
+            match io.name.as_str() {
+                "w1p" | "wgp" => io.shape = vec![N_LAYERS * k, D_MODEL],
+                "w2p" => io.shape = vec![D_MODEL, N_LAYERS * k],
+                _ => {}
+            }
+        }
+        let mut args: Vec<&DeviceTensor> = nonff.iter().collect();
+        args.extend([&rag[0], &rag[1], &rag[2], &kc, &vc, &tok, &pos]);
+        let outs = s.interp(&dspec, &args).unwrap();
+        let r = s.outputs(&dspec, outs).unwrap();
+        assert_eq!(u[0].to_f32().unwrap(), r[0].to_f32().unwrap(),
+                   "logits must be byte-identical");
+        assert_eq!(u[1].to_f32().unwrap(), r[1].to_f32().unwrap());
+        assert_eq!(u[2].to_f32().unwrap(), r[2].to_f32().unwrap());
     }
 
     #[test]

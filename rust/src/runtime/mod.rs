@@ -460,6 +460,7 @@ mod tests {
             gen: None,
             sample_topk: None,
             src_batch: None,
+            layer_ks: None,
             inputs: vec![
                 io("w", &[4, 4], "f32"),
                 io("kcache", &[1, 2, 2, 8, 2], "f32"),

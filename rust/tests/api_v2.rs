@@ -156,6 +156,50 @@ fn admission_validation_is_version_uniform() {
 }
 
 #[test]
+fn adaptive_layer_is_a_v2_only_axis() {
+    // v2 lowers the strategy to the seedless AdaptiveLayer mode; a
+    // stray seed on the prune object is ignored (the budget allocation
+    // is deterministic)
+    let Ok(Request::Generate(spec)) = parse(
+        r#"{"v":2,"op":"generate","prompt":"x","max_new_tokens":4,
+            "prune":{"method":"griffin","keep":0.5,
+                     "strategy":"adaptive-layer","seed":7}}"#,
+    ) else {
+        panic!("adaptive-layer must parse under v2")
+    };
+    let req = spec.to_requests(&Tokenizer::new()).remove(0);
+    assert_eq!(
+        req.mode,
+        Mode::Griffin { keep: 0.5, strategy: Strategy::AdaptiveLayer }
+    );
+    // admission validation is shared with the other strategies
+    let e = parse(
+        r#"{"v":2,"op":"generate","prompt":"x",
+            "prune":{"method":"griffin","keep":1.5,
+                     "strategy":"adaptive-layer"}}"#,
+    )
+    .unwrap_err();
+    assert_eq!(e.code, ErrorCode::InvalidRequest);
+    // the v1 mode table is frozen: no legacy spelling reaches the
+    // adaptive strategy
+    for mode in ["adaptive-layer", "adaptive_layer", "griffin-adaptive"] {
+        let line = format!(
+            r#"{{"op":"generate","prompt":"x","mode":"{mode}","keep":0.5}}"#
+        );
+        let e = parse(&line).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidRequest, "v1 mode {mode}");
+    }
+    // the score op accepts the same prune axis
+    let Ok(Request::Score(_)) = parse(
+        r#"{"v":2,"op":"score","prompt":"ab","continuation":"cd",
+            "prune":{"method":"griffin","keep":0.5,
+                     "strategy":"adaptive-layer"}}"#,
+    ) else {
+        panic!("score must accept the adaptive-layer prune axis")
+    };
+}
+
+#[test]
 fn batched_generate_assigns_one_request_per_prompt() {
     let Ok(Request::Generate(spec)) = parse(
         r#"{"v":2,"op":"generate","prompts":["aa","bbb","c"],

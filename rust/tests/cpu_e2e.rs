@@ -17,7 +17,7 @@ use griffin::api::ErrorCode;
 use griffin::coordinator::engine::{Engine, Mode, PrefillLogits, StatNeeds};
 use griffin::coordinator::router::Router;
 use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
-use griffin::coordinator::selection::Strategy;
+use griffin::coordinator::selection::{select_experts_ragged, Strategy};
 use griffin::coordinator::sequence::{FinishReason, GenRequest, ScoreRequest};
 use griffin::runtime::cpu::{self, sampler_lane, CpuSession, CPU_SAMPLE_TOPK};
 use griffin::runtime::Substrate;
@@ -1076,10 +1076,14 @@ fn keep_snapping_edges_resolve_to_compiled_buckets() {
         let once = e.bucket_keep(1, keep).unwrap();
         assert_eq!(e.bucket_keep(1, once).unwrap(), once);
     }
-    // single-bucket manifests (B=4 compiles only the headline k):
-    // every keep snaps to it
-    for keep in [1e-6, 0.25, 0.5, 0.75, 1.0] {
-        assert_eq!(e.bucket_keep(4, keep).unwrap(), 16.0 / d_ff);
+    // the keep sweep is compiled at EVERY batch bucket (B=2 and B=4
+    // included), so non-headline keeps resolve to their exact bucket
+    // instead of snapping to the headline k
+    for b in [2usize, 4] {
+        assert_eq!(e.bucket_keep(b, 0.25).unwrap(), 8.0 / d_ff);
+        assert_eq!(e.bucket_keep(b, 0.5).unwrap(), 16.0 / d_ff);
+        assert_eq!(e.bucket_keep(b, 0.75).unwrap(), 24.0 / d_ff);
+        assert_eq!(e.bucket_keep(b, 1.0).unwrap(), 24.0 / d_ff);
     }
     // out-of-range keeps are engine errors, not silent snaps
     for bad in [0.0, -1.0, 1.0 + 1e-9, f64::NAN] {
@@ -1093,19 +1097,375 @@ fn keep_snapping_edges_resolve_to_compiled_buckets() {
 #[test]
 fn modes_batchable_follows_bucket_snapping() {
     let e = engine();
-    // at the pool bucket (4) only k16 is compiled: griffin@0.75 and
-    // griffin@0.5 serve identically and must share a batch
-    let a = Mode::griffin(0.75);
+    // keeps snapping to ONE compiled bucket serve identically and must
+    // share a batch: at the pool bucket (4) both 0.55 and 0.5 resolve
+    // to k16
+    let a = Mode::griffin(0.55);
     let b = Mode::griffin(0.5);
     assert!(!a.compatible(&b), "different keeps are not Mode-equal");
     assert!(e.modes_batchable(4, &a, &b),
             "keeps snapping to one compiled bucket must batch together");
+    // with the keep sweep compiled at every bucket, 0.75 resolves to
+    // its own k24 executable and must NOT batch with k16 traffic
+    assert!(!e.modes_batchable(4, &Mode::griffin(0.75), &b),
+            "distinct compiled buckets never share a pruned weight set");
     // but griffin and magnitude never share a decode executable family
     assert!(!e.modes_batchable(
         4, &a, &Mode::Magnitude { keep: 0.5 }));
     // an invalid keep cannot sneak into a batch through snapping
     assert!(!e.modes_batchable(
         4, &Mode::griffin(-1.0), &b));
+}
+
+// ---------------------------------------------------------------------
+// adaptive-layer keep: budget allocation, ragged executables, parity
+// ---------------------------------------------------------------------
+
+fn adaptive(keep: f64) -> Mode {
+    Mode::Griffin { keep, strategy: Strategy::AdaptiveLayer }
+}
+
+#[test]
+fn adaptive_profile_follows_the_stats_tilt() {
+    let e = engine();
+    let f = e.config().d_ff;
+    // layer 0 concentrated on one neuron, layer 1 diffuse: the global
+    // budget tilts toward layer 1 and snaps to the compiled [8, 24]
+    // ragged executable
+    let mut sharp = vec![0.01f32; f];
+    sharp[3] = 10.0;
+    let tilted = vec![sharp.clone(), vec![1.0; f]];
+    assert_eq!(e.adaptive_layer_profile(1, &tilted, 0.5).unwrap(),
+               vec![8, 24]);
+    // mirrored statistics take the mirrored executable
+    let mirrored = vec![vec![1.0; f], sharp];
+    assert_eq!(e.adaptive_layer_profile(1, &mirrored, 0.5).unwrap(),
+               vec![24, 8]);
+    // flat statistics degrade to the uniform bucket — no forced tilt,
+    // so plain-looking traffic keeps batching with uniform griffin
+    let flat = vec![vec![1.0; f]; 2];
+    assert_eq!(e.adaptive_layer_profile(1, &flat, 0.5).unwrap(),
+               vec![16, 16]);
+    // budget extremes leave no room to tilt: the floor and ceiling of
+    // the compiled sweep are uniform by construction
+    assert_eq!(e.adaptive_layer_profile(1, &tilted, 0.25).unwrap(),
+               vec![8, 8]);
+    assert_eq!(e.adaptive_layer_profile(1, &tilted, 1.0).unwrap(),
+               vec![24, 24]);
+}
+
+#[test]
+fn ragged_gather_matches_per_layer_host_gathers() {
+    // gather_l{k0}x{k1} packs W1/Wg rows [Σk, D] and W2 columns [D, Σk]
+    // in layer order; every packed entry must be byte-identical to the
+    // host-side per-layer gather of the same index sets.
+    let e = engine();
+    let cfg = e.config().clone();
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let idx: Vec<Vec<i32>> = vec![
+        (0..8).map(|j| (j * 4) as i32).collect(),
+        (0..24).map(|j| (j + j / 3) as i32).collect(),
+    ];
+    let pw = e.gather_ragged(&idx).unwrap();
+    assert_eq!(pw.layer_ks, Some(vec![8, 24]));
+    assert_eq!(pw.k, 16, "k is the FLOP-matched average width");
+    let ksum = 32usize;
+    assert_eq!(pw.tensors[0].shape, vec![ksum, d]);
+    assert_eq!(pw.tensors[1].shape, vec![d, ksum]);
+    let w1 = e.host_weights["w1"].to_f32().unwrap();
+    let w2 = e.host_weights["w2"].to_f32().unwrap();
+    let wg = e.host_weights["wg"].to_f32().unwrap();
+    let w1p = e.session.download_f32(&pw.tensors[0]).unwrap();
+    let w2p = e.session.download_f32(&pw.tensors[1]).unwrap();
+    let wgp = e.session.download_f32(&pw.tensors[2]).unwrap();
+    let mut off = 0usize;
+    for (l, row) in idx.iter().enumerate() {
+        for (j, &ei) in row.iter().enumerate() {
+            let ei = ei as usize;
+            let dst = (off + j) * d;
+            assert_eq!(&w1p[dst..dst + d],
+                       &w1[(l * f + ei) * d..(l * f + ei + 1) * d],
+                       "w1p row (layer {l}, slot {j})");
+            assert_eq!(&wgp[dst..dst + d],
+                       &wg[(l * f + ei) * d..(l * f + ei + 1) * d],
+                       "wgp row (layer {l}, slot {j})");
+            for r in 0..d {
+                assert_eq!(w2p[r * ksum + off + j],
+                           w2[(l * d + r) * f + ei],
+                           "w2p col (layer {l}, slot {j}, row {r})");
+            }
+        }
+        off += row.len();
+    }
+    // arity and profile coverage are validated, not silently served
+    assert!(e.gather_ragged(&idx[..1]).is_err(),
+            "one index row per layer");
+    let bad: Vec<Vec<i32>> = vec![vec![0; 7], vec![0; 9]];
+    assert!(e.gather_ragged(&bad).is_err(),
+            "uncompiled profiles are errors");
+}
+
+#[test]
+fn ragged_decode_fused_matches_host_stepwise() {
+    // decode_pruned_sample_b1_l{k0}x{k1} must keep the fused-vs-host
+    // guarantee at per-layer widths: same token AND logprob stream as
+    // decode_step through the same ragged set + the host sampler mirror.
+    let mut e = engine();
+    let cap = e
+        .fused_decode_spec(1, None)
+        .and_then(|s| s.sample_topk)
+        .unwrap();
+    let prompt = prompt_ids(24);
+    let steps = 12;
+    let seed = 77u64;
+    for prof in [[8usize, 24], [24, 8]] {
+        for spec in [
+            SamplerSpec::Greedy,
+            SamplerSpec::TopK { k: 8, temperature: 0.8 },
+        ] {
+            let pre = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
+            let idx = select_experts_ragged(&pre.stats[0], &prof);
+            let pw = e.gather_ragged_cached(&idx).unwrap();
+            // the fused ABI resolves by NAME, so the ragged set finds
+            // its own executable (not the uniform one at the average k)
+            let fspec = e
+                .fused_decode_spec_for(1, Some(&*pw))
+                .expect("fused ragged decode compiled at b1");
+            assert_eq!(fspec.sample_topk, Some(cap));
+
+            let first = argmax(&pre.last_logits[0]) as i32;
+            let mut state = pre.state;
+            let mut ds = DeviceSampler::with_cap(spec, seed, cap);
+            let mut cur = vec![first];
+            let mut host_toks = Vec::new();
+            let mut host_lps = Vec::new();
+            for _ in 0..steps {
+                let logits = e
+                    .decode_step(&mut state, &cur, Some(&*pw), None)
+                    .unwrap();
+                let t = ds.sample(&logits) as i32;
+                host_toks.push(t);
+                host_lps.push(log_softmax_at(&logits, t as usize));
+                cur[0] = t;
+            }
+
+            let pre2 = e
+                .prefill(&[prompt.clone()], PrefillLogits::LastToken)
+                .unwrap();
+            let mut state2 = pre2.state;
+            let mut samp = e
+                .new_sampling_state(&[(spec, seed_state(seed))])
+                .unwrap();
+            let mut host_in: Option<Vec<i32>> = Some(vec![first]);
+            let mut fused_toks = Vec::new();
+            let mut fused_lps = Vec::new();
+            for _ in 0..steps {
+                let (toks, lps) = e
+                    .decode_sample_step(
+                        &mut state2,
+                        &mut samp,
+                        host_in.as_deref(),
+                        Some(&*pw),
+                        None,
+                    )
+                    .unwrap();
+                fused_toks.push(toks[0]);
+                fused_lps.push(lps[0]);
+                host_in = None;
+            }
+            assert_eq!(fused_toks, host_toks,
+                       "fused vs host tokens: {prof:?} {spec:?}");
+            assert_eq!(fused_lps, host_lps,
+                       "fused vs host logprobs: {prof:?} {spec:?}");
+        }
+    }
+}
+
+#[test]
+fn adaptive_at_budget_extremes_matches_uniform_generation() {
+    // when the budget leaves no room to tilt (floor/ceiling keeps), the
+    // adaptive profile snaps to the uniform bucket and the served
+    // stream must be byte-identical — tokens AND logprobs — to plain
+    // top-k at the same keep. The two routes must also share one
+    // gather-cache entry: at a shared width the adaptive selection IS
+    // top-k.
+    let mut e = engine();
+    for (keep, k) in [(0.25, 8usize), (1.0, 24)] {
+        for spec in [
+            SamplerSpec::Greedy,
+            SamplerSpec::TopK { k: 8, temperature: 0.8 },
+        ] {
+            let mut ru = GenRequest::greedy(
+                1, prompt_ids(24), 8, Mode::griffin(keep));
+            ru.sampler = spec;
+            ru.seed = 11;
+            ru.stop_at_eos = false;
+            let mut ra = ru.clone();
+            ra.mode = adaptive(keep);
+            let misses0 = e.metrics.gather_cache_misses.get();
+            let u = e.generate(&ru).unwrap();
+            let a = e.generate(&ra).unwrap();
+            assert_eq!(a.tokens, u.tokens, "keep={keep} {spec:?}");
+            assert_eq!(a.logprobs, u.logprobs, "keep={keep} {spec:?}");
+            assert_eq!(u.k_used, Some(k));
+            assert_eq!(a.k_used, Some(k));
+            // uniform keeps disclose no per-layer widths; adaptive
+            // always discloses what it served, even snapped uniform
+            assert_eq!(u.k_per_layer, None);
+            assert_eq!(a.k_per_layer, Some(vec![k, k]));
+            assert!(e.metrics.gather_cache_misses.get() - misses0 <= 1,
+                    "adaptive-at-uniform must share the gather cache");
+        }
+    }
+}
+
+#[test]
+fn scheduler_serves_adaptive_with_per_layer_provenance() {
+    // adaptive-layer through the slot scheduler: identical stream to
+    // plain top-k when the profile snaps uniform, per-layer widths
+    // disclosed on every response built against the shared set, and
+    // same-mode adaptive requests batching together.
+    let e = engine();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let p = prompt_ids(24);
+    let mut ru = GenRequest::greedy(0, p.clone(), 6, Mode::griffin(0.25));
+    ru.stop_at_eos = false;
+    let mut sched = Scheduler::new(e, router.clone());
+    router.admit(ru).unwrap();
+    let uni = sched.run_until_idle().unwrap();
+    assert_eq!(uni.len(), 1);
+    assert_eq!(uni[0].k_per_layer, None);
+
+    let mut ra = GenRequest::greedy(0, p.clone(), 6, adaptive(0.25));
+    ra.stop_at_eos = false;
+    router.admit(ra.clone()).unwrap();
+    router.admit(ra).unwrap();
+    let ad = sched.run_until_idle().unwrap();
+    assert_eq!(ad.len(), 2, "same-mode adaptive requests batch");
+    for r in &ad {
+        assert_eq!(r.tokens, uni[0].tokens,
+                   "adaptive-at-floor equals uniform keep streamwise");
+        assert_eq!(r.logprobs, uni[0].logprobs);
+        assert_eq!(r.k_used, Some(8));
+        assert_eq!(r.k_per_layer, Some(vec![8, 8]),
+                   "served widths are disclosed per response");
+    }
+}
+
+#[test]
+fn batched_nonheadline_keeps_report_exact_k() {
+    // regression for the serving keep sweep at B>1: every keep bucket
+    // is compiled at every batch bucket, so a B=2 batch at keep 0.75
+    // serves k=24 — not the headline-16 snap that single-bucket
+    // manifests used to force.
+    let mut e = engine();
+    for (keep, k) in [(0.25, 8usize), (0.75, 24)] {
+        let reqs: Vec<GenRequest> = (0..2u64)
+            .map(|i| {
+                let mut q = GenRequest::greedy(
+                    i, prompt_ids(20 + i as usize), 4,
+                    Mode::griffin(keep));
+                q.stop_at_eos = false;
+                q
+            })
+            .collect();
+        let rs = e.generate_batch(&reqs).unwrap();
+        for r in &rs {
+            assert_eq!(r.k_used, Some(k),
+                       "B=2 keep={keep} must serve its exact bucket");
+        }
+    }
+}
+
+#[test]
+fn server_v2_adaptive_layer_round_trip() {
+    // the adaptive-layer axis over the wire: v2 parse → admission →
+    // scheduler → response with per-layer provenance; uniform keeps
+    // and v1 traffic keep their old shapes.
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener(e, "127.0.0.1:0", 16).unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{n, obj, s};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let r = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins")),
+                ("max_new_tokens", n(4.0)),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.25)),
+                        ("strategy", s("adaptive-layer")),
+                    ]),
+                ),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("op").unwrap().as_str(), Some("generate"));
+        let p = r.get("prune").expect("adaptive carries prune");
+        assert_eq!(p.get("strategy").unwrap().as_str(),
+                   Some("adaptive-layer"));
+        let lks = p.get("k_per_layer").unwrap().as_arr().unwrap();
+        assert_eq!(lks.len(), 2, "one width per layer");
+        assert!(lks.iter().all(|v| v.as_usize() == Some(8)),
+                "keep 0.25 pins the floor budget on both layers");
+        assert_eq!(r.get("k_used").unwrap().as_usize(), Some(8));
+
+        // uniform keeps disclose no per-layer widths (shape unchanged)
+        let u = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins")),
+                ("max_new_tokens", n(4.0)),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.25)),
+                        ("strategy", s("topk")),
+                    ]),
+                ),
+            ]))
+            .unwrap();
+        assert!(u.get("prune").unwrap().get("k_per_layer").is_none());
+
+        // invalid strategy strings stay structured admission errors
+        let bad = c
+            .call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("x")),
+                (
+                    "prune",
+                    obj(vec![
+                        ("method", s("griffin")),
+                        ("keep", n(0.25)),
+                        ("strategy", s("adaptive_layer")),
+                    ]),
+                ),
+            ]))
+            .unwrap();
+        assert_eq!(bad.get("op").unwrap().as_str(), Some("error"));
+        assert_eq!(bad.get("code").unwrap().as_str(),
+                   Some("invalid_request"));
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
 }
 
 // ---------------------------------------------------------------------
