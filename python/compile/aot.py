@@ -227,6 +227,60 @@ class Emitter:
                   {"kind": "prefill_sample", "batch": B, "seq": S,
                    "sample_topk": model.SAMPLE_TOPK})
 
+    def emit_prefill_sample_positioned(self, B, S):
+        """Positioned/chunked admission prefill (prefix-cache tail
+        fill): the incoming kcache/vcache already hold rows [0, start)
+        and this executable fills [start, start + S), threading running
+        pre-sqrt statistic sums through the call chain. The `_p` suffix
+        and the `prefill_sample_positioned` kind let the runtime route
+        chunked admissions by exact (batch, seq) bucket."""
+        cfg, names = self.cfg, self.param_names
+        up = self.use_pallas
+
+        def fn(*args):
+            params = dict(zip(names, args))
+            (kc, vc, st, xn, zn, tokens, lengths, start,
+             temp, topk, rng) = args[len(names):]
+            return model.prefill_sample_positioned(
+                cfg, params, kc, vc, st, xn, zn, tokens, lengths, start,
+                temp, topk, rng, up)
+
+        cspec = self.cache_spec(B)
+        stat_specs = [
+            spec((cfg.n_layers, B, cfg.d_ff)),
+            spec((cfg.n_layers, B, cfg.d_model)),
+            spec((cfg.n_layers, B, cfg.d_ff)),
+        ]
+        s_specs, s_inputs = self._sampling_io(B)
+        arg_specs = (self.param_specs_args(names)
+                     + [cspec, cspec] + stat_specs
+                     + [spec((B, S), jnp.int32), spec((B,), jnp.int32),
+                        spec((B,), jnp.int32)]
+                     + s_specs)
+        inputs = ([io_entry(n, self.param_shapes[n]) for n in names]
+                  + [io_entry("kcache", cspec.shape),
+                     io_entry("vcache", cspec.shape),
+                     io_entry("stats_in", (cfg.n_layers, B, cfg.d_ff)),
+                     io_entry("xnorms_in", (cfg.n_layers, B, cfg.d_model)),
+                     io_entry("znorms_in", (cfg.n_layers, B, cfg.d_ff)),
+                     io_entry("tokens", (B, S), I32),
+                     io_entry("lengths", (B,), I32),
+                     io_entry("start", (B,), I32)] + s_inputs)
+        outputs = [
+            io_entry("token", (B,), I32),
+            io_entry("logprob", (B,)),
+            io_entry("kcache", cspec.shape),
+            io_entry("vcache", cspec.shape),
+            io_entry("stats", (cfg.n_layers, B, cfg.d_ff)),
+            io_entry("xnorms", (cfg.n_layers, B, cfg.d_model)),
+            io_entry("znorms", (cfg.n_layers, B, cfg.d_ff)),
+            io_entry("rng", (B,), I32),
+        ]
+        self.emit(f"prefill_sample_b{B}_s{S}_p", fn, arg_specs, inputs,
+                  outputs,
+                  {"kind": "prefill_sample_positioned", "batch": B,
+                   "seq": S, "sample_topk": model.SAMPLE_TOPK})
+
     def emit_splice(self, Bs, Bd):
         """Device-side KV admission splice from a freshly prefilled
         [L, Bs, ...] cache into slot rows of the persistent [L, Bd, ...]
@@ -631,6 +685,10 @@ class Emitter:
                 if S <= cfg.max_seq:
                     self.emit_prefill(B, S)
                     self.emit_prefill_sample(B, S)
+                    # chunked/positioned admission runs one request at a
+                    # time on a B=1 scratch state (see scheduler.rs)
+                    if B == 1:
+                        self.emit_prefill_sample_positioned(B, S)
             self.emit_decode(B)
             self.emit_decode_sample(B)
             for D in VERIFY_BUCKETS:

@@ -287,6 +287,102 @@ def prefill_sample(cfg: ModelConfig, params: Params, tokens, lengths,
     return tok, lp, kcache, vcache, stats, xnorms, znorms, rng
 
 
+def prefill_sample_positioned(cfg: ModelConfig, params: Params, kcache,
+                              vcache, stats_in, xnorms_in, znorms_in,
+                              tokens, lengths, start, temp, topk, rng,
+                              use_pallas: bool = False):
+    """Positioned/chunked admission prefill (prefix-cache tail fill).
+
+    Processes one [B, S] CHUNK of a prompt whose first `start[b]` rows
+    are already resident in the incoming kcache/vcache (either cached
+    prefix rows spliced from the prefix cache, or the previous chunk of
+    the same admission). Row t of the chunk sits at absolute position
+    start + t: RoPE uses the absolute position, K/V rows are written at
+    [start, start + S), and attention masks kpos <= start + t so chunk
+    rows attend the cached prefix AND earlier chunk rows but never the
+    stale tail beyond them.
+
+    Statistics are RUNNING PRE-SQRT SUMS, threaded through the call
+    chain: `stats_in`/`xnorms_in`/`znorms_in` carry the accumulated
+    sums over rows [0, start) and the outputs extend them over this
+    chunk's valid rows (lengths[b] of them). The caller finalizes with
+    an elementwise sqrt after the last chunk, which reproduces
+    `_prefill_body`'s single-shot statistics exactly — the sums are
+    accumulated in the same row order, only the sqrt moves to the end.
+
+    Sampling follows the fused ABI over the chunk's last valid row
+    (lengths[b] - 1); callers discard the token of every chunk but the
+    final one (uploading a dummy rng there keeps the mirror untouched).
+
+    Returns (token i32[B], logprob f32[B], kcache, vcache, stats,
+    xnorms, znorms, rng i32[B]) — caches and stats at the same shapes
+    they came in.
+    """
+    B, S = tokens.shape
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    x = params["tok_emb"][tokens]  # [B, S, D]
+    pos = start[:, None] + jnp.arange(S)[None, :]  # [B, S] absolute
+    cos, sin = rope_angles(pos, dh, cfg.rope_theta)  # [B, S, dh/2]
+    cos_h, sin_h = cos[:, None], sin[:, None]  # broadcast over heads
+    Smax = kcache.shape[3]
+    kpos = jnp.arange(Smax)[None, None, None, :]  # [1,1,1,Smax]
+    causal = kpos <= pos[:, None, :, None]  # [B,1,S,Smax]
+
+    stats, xnorms, znorms = [], [], []
+    valid = (jnp.arange(S)[None, :] < lengths[:, None]).astype(x.dtype)
+
+    def write_rows(cache_l, new, st):
+        # new [B, H, S, dh] written at rows [st_b, st_b + S)
+        def one(c, n, p):
+            return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+        return jax.vmap(one)(cache_l, new, st)
+
+    for l in range(L):
+        h = rmsnorm(x, params["ln1"][l])
+        q = split_heads(h @ params["wq"][l].T, H)
+        k = split_heads(h @ params["wk"][l].T, H)
+        v = split_heads(h @ params["wv"][l].T, H)
+        q = apply_rope(q, cos_h, sin_h)
+        k = apply_rope(k, cos_h, sin_h)
+
+        kc = write_rows(kcache[l], k, start)
+        vc = write_rows(vcache[l], v, start)
+        kcache = kcache.at[l].set(kc)
+        vcache = vcache.at[l].set(vc)
+
+        scale = 1.0 / (dh ** 0.5)
+        logits = jnp.einsum("bhsd,bhkd->bhsk", q, kc) * scale
+        logits = jnp.where(causal, logits, jnp.finfo(logits.dtype).min)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhsk,bhkd->bhsd", w, vc)
+        x = x + merge_heads(o) @ params["wo"][l].T
+
+        h2 = rmsnorm(x, params["ln2"][l])
+        wg = params["wg"][l] if cfg.is_glu else None
+        ff_out, z = ff_forward(cfg, h2, wg, params["w1"][l],
+                               params["w2"][l], use_pallas)
+        x = x + ff_out
+
+        # pre-sqrt partial sums over this chunk's valid rows
+        zm = z * valid[..., None]
+        norms = jnp.maximum(
+            jnp.linalg.norm(zm, axis=-1, keepdims=True), 1e-8)
+        zbar = zm / norms
+        stats.append(stats_in[l] + jnp.sum(zbar * zbar, axis=1))
+        hm = h2 * valid[..., None]
+        xnorms.append(xnorms_in[l] + jnp.sum(hm * hm, axis=1))
+        znorms.append(znorms_in[l] + jnp.sum(zm * zm, axis=1))
+
+    last = jnp.clip(lengths - 1, 0, S - 1)
+    xl = x[jnp.arange(B), last]  # [B, D]
+    xl = rmsnorm(xl, params["ln_f"])
+    logits = xl @ params["head"].T  # [B, V]
+    tok, lp, rng = sample_tokens(logits, temp, topk, rng)
+    return (tok, lp, kcache, vcache, jnp.stack(stats),
+            jnp.stack(xnorms), jnp.stack(znorms), rng)
+
+
 def splice_kv(dst_k, dst_v, src_k, src_v, src_idx, take):
     """Device-side KV admission splice (dynamic-update-slice across batch
     buckets): for each destination slot b, overwrite its KV row with the

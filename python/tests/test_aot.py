@@ -345,6 +345,19 @@ class TestDeviceAdmission:
         assert out_names == ["token", "logprob", "kcache", "vcache",
                              "stats", "xnorms", "znorms", "rng"]
 
+        em.emit_prefill_sample_positioned(1, s_min)
+        p = em.executables[f"prefill_sample_b1_s{s_min}_p"]
+        assert p["kind"] == "prefill_sample_positioned"
+        assert p["batch"] == 1 and p["seq"] == s_min
+        in_names = [i["name"] for i in p["inputs"]]
+        assert in_names[:len(em.param_names)] == em.param_names
+        assert in_names[len(em.param_names):] == [
+            "kcache", "vcache", "stats_in", "xnorms_in", "znorms_in",
+            "tokens", "lengths", "start", "temp", "topk", "rng"]
+        assert [o["name"] for o in p["outputs"]] == [
+            "token", "logprob", "kcache", "vcache", "stats", "xnorms",
+            "znorms", "rng"]
+
         sp = em.executables["splice_b1_b4"]
         assert sp["kind"] == "splice"
         assert sp["src_batch"] == 1 and sp["batch"] == 4

@@ -58,6 +58,51 @@ class TestPrefillDecodeConsistency:
         got = jnp.stack(got, axis=1)
         np.testing.assert_allclose(got, lg, rtol=5e-4, atol=5e-5)
 
+    def test_positioned_chunks_match_single_shot_prefill(self, setup):
+        """Chunking a prompt through prefill_sample_positioned (running
+        pre-sqrt stat sums threaded between chunks) reproduces the
+        single-shot prefill_sample: same sampled token/rng, same valid
+        cache rows, and sqrt(running sums) == the sqrt'ed statistics."""
+        cfg, params = setup
+        B, S = 1, 32
+        toks, lens = make_prompt(cfg, B, S)
+        temp = jnp.asarray([0.8], jnp.float32)
+        topk = jnp.asarray([8], jnp.int32)
+        rng = jnp.asarray([0x12345678], jnp.int32)
+        ref_out = model.prefill_sample(cfg, params, toks, lens, temp,
+                                       topk, rng)
+
+        L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        kc = jnp.zeros((L, B, H, cfg.max_seq, dh), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        st = jnp.zeros((L, B, cfg.d_ff), jnp.float32)
+        xn = jnp.zeros((L, B, cfg.d_model), jnp.float32)
+        zn = jnp.zeros((L, B, cfg.d_ff), jnp.float32)
+        out = None
+        for ci in range(2):
+            chunk = toks[:, ci * 16:(ci + 1) * 16]
+            start = jnp.asarray([ci * 16], jnp.int32)
+            clen = jnp.asarray([16], jnp.int32)
+            # intermediate chunks get a dummy rng (token discarded);
+            # only the final chunk consumes the real sampler state
+            crng = rng if ci == 1 else jnp.asarray([1], jnp.int32)
+            out = model.prefill_sample_positioned(
+                cfg, params, kc, vc, st, xn, zn, chunk, clen, start,
+                temp, topk, crng)
+            _, _, kc, vc, st, xn, zn, rng_o = out
+
+        assert int(out[0][0]) == int(ref_out[0][0])
+        assert int(rng_o[0]) == int(ref_out[7][0])
+        np.testing.assert_allclose(out[1], ref_out[1], rtol=2e-4)
+        np.testing.assert_allclose(kc[:, :, :, :S], ref_out[2][:, :, :, :S],
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(vc[:, :, :, :S], ref_out[3][:, :, :, :S],
+                                   rtol=2e-4, atol=2e-5)
+        for run, want in [(st, ref_out[4]), (xn, ref_out[5]),
+                          (zn, ref_out[6])]:
+            np.testing.assert_allclose(jnp.sqrt(run), want,
+                                       rtol=2e-4, atol=2e-5)
+
     def test_right_padding_does_not_change_valid_rows(self, setup):
         cfg, params = setup
         toks, _ = make_prompt(cfg, 1, 12)

@@ -55,6 +55,14 @@
 //!     adaptive responses disclose per-layer widths summing to the
 //!     budget, and adaptive quality is no worse than uniform at >= 2
 //!     budget points.
+//!   * prefix reuse (`prefix_reuse`, CPU substrate): a shared-system-
+//!     prompt multi-turn workload closed-loop through the scheduler
+//!     with the device-resident prefix cache off and on. Asserts
+//!     byte-identical seeded streams cached vs uncached and the exact
+//!     hit count; reports hit rate, reused prefix tokens, warm-hit
+//!     TTFT vs the cold single-shot baseline, and a growing multi-turn
+//!     conversation served past the single-dispatch bucket by the
+//!     chunked path. `GRIFFIN_LOADGEN_SMOKE=1` shrinks it for CI.
 //!
 //! The CPU-substrate scenarios contribute to the machine-readable
 //! summary written to BENCH_serving.json at the repository root
@@ -1745,6 +1753,254 @@ mod pjrt {
     }
 }
 
+/// Prefix-reuse scenario over the CPU substrate: a shared-system-prompt
+/// workload (every conversation opens with the SAME 16-token system
+/// block) runs closed-loop through two otherwise-identical schedulers —
+/// prefix cache off and on — and a multi-turn conversation whose prompt
+/// grows past the largest single-dispatch prefill bucket rides the
+/// chunked path that only the cache enables. The cache is lossless by
+/// construction (the mirror is the stream's source of truth on every
+/// admission route), so the scenario ASSERTS per-request token parity
+/// cached vs uncached and the exact hit count; what it MEASURES is the
+/// hit rate, reused prefix tokens, and warm-hit TTFT against the cold
+/// single-shot baseline.
+#[cfg(feature = "cpu-substrate")]
+mod prefix_reuse {
+    use std::sync::Arc;
+
+    use griffin::bench_harness::{summarize, Reporter};
+    use griffin::coordinator::engine::{Engine, Mode};
+    use griffin::coordinator::router::Router;
+    use griffin::coordinator::scheduler::Scheduler;
+    use griffin::coordinator::sequence::GenRequest;
+    use griffin::json::{n, obj, s, Value};
+    use griffin::sampling::SamplerSpec;
+
+    /// one cache block on the reference config (smallest positioned
+    /// prefill bucket)
+    const SYSTEM_BLOCK: usize = 16;
+    const TURNS: usize = 2;
+    const MAX_NEW: usize = 8;
+    const CACHE_BUDGET: u64 = 1 << 20;
+
+    fn token(i: i32, salt: i32) -> i32 {
+        5 + (i * 31 + salt).rem_euclid(250)
+    }
+
+    /// Shared-system-prompt trace: every conversation opens with the
+    /// same system block; each turn extends the conversation's own
+    /// context by 8 tokens (prompts of 24 and 32 — within the
+    /// single-shot bucket, so the uncached arm serves them too).
+    fn requests(conversations: usize) -> Vec<GenRequest> {
+        let system: Vec<i32> =
+            (0..SYSTEM_BLOCK as i32).map(|i| token(i, 1)).collect();
+        let mut reqs = Vec::new();
+        for c in 0..conversations {
+            for t in 0..TURNS {
+                let mut prompt = system.clone();
+                for k in 0..((t + 1) * 8) as i32 {
+                    prompt.push(token(k, 100 + c as i32));
+                }
+                let mut q = GenRequest::greedy(
+                    0, prompt, MAX_NEW, Mode::griffin(0.5));
+                q.sampler =
+                    SamplerSpec::TopK { k: 4, temperature: 0.8 };
+                q.seed = 500 + (c * TURNS + t) as u64;
+                q.stop_at_eos = false;
+                reqs.push(q);
+            }
+        }
+        reqs
+    }
+
+    struct ArmResult {
+        wall_ms: Vec<f64>,
+        ttft_all: Vec<f64>,
+        ttft_hits: Vec<f64>,
+        ttft_misses: Vec<f64>,
+        streams: Vec<Vec<i32>>,
+        hits: usize,
+        metrics: Arc<griffin::metrics::MetricsRegistry>,
+    }
+
+    /// Run the workload closed-loop (admit, drain, next) on a fresh
+    /// engine so each response's TTFT is pure admission latency, never
+    /// queue wait.
+    fn run_arm(conversations: usize, cached: bool) -> ArmResult {
+        let engine = Engine::cpu_reference().expect("cpu substrate");
+        let router = Arc::new(Router::new(256, 64));
+        let mut sched = Scheduler::new(engine, router.clone());
+        if cached {
+            assert!(sched.enable_prefix_cache(CACHE_BUDGET));
+        }
+        let mut out = ArmResult {
+            wall_ms: Vec::new(),
+            ttft_all: Vec::new(),
+            ttft_hits: Vec::new(),
+            ttft_misses: Vec::new(),
+            streams: Vec::new(),
+            hits: 0,
+            metrics: sched.engine.metrics.clone(),
+        };
+        for q in requests(conversations) {
+            router.admit(q).unwrap();
+            let t = std::time::Instant::now();
+            let mut rs = sched.run_until_idle().unwrap();
+            out.wall_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            assert_eq!(rs.len(), 1);
+            let r = rs.remove(0);
+            assert_eq!(r.tokens.len(), MAX_NEW);
+            out.ttft_all.push(r.ttft_ms);
+            match r.cache {
+                Some(c) if c.hit => {
+                    out.hits += 1;
+                    out.ttft_hits.push(r.ttft_ms);
+                }
+                _ => out.ttft_misses.push(r.ttft_ms),
+            }
+            out.streams.push(r.tokens);
+        }
+        out
+    }
+
+    fn mean(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    /// One conversation whose prompt GROWS past the largest
+    /// single-dispatch prefill bucket (32): turn prompts of 32, 44 and
+    /// 56 tokens, each turn re-sending the whole conversation. Only the
+    /// chunked path can admit the later turns at all, and each turn
+    /// seeds from the previous turn's published boundary — the reused
+    /// prefix grows 0 -> 16 -> 32.
+    fn multi_turn() -> Value {
+        let engine = Engine::cpu_reference().expect("cpu substrate");
+        let router = Arc::new(Router::new(256, 64));
+        let mut sched = Scheduler::new(engine, router.clone());
+        assert!(sched.enable_prefix_cache(CACHE_BUDGET));
+        let m = sched.engine.metrics.clone();
+        let mut reused = Vec::new();
+        for turn in 0..3usize {
+            let len = 32 + 12 * turn;
+            let prompt: Vec<i32> =
+                (0..len as i32).map(|i| token(i, 7)).collect();
+            let mut q = GenRequest::greedy(
+                0, prompt, 6, Mode::griffin(0.5));
+            q.sampler = SamplerSpec::TopK { k: 4, temperature: 0.8 };
+            q.seed = 900 + turn as u64;
+            q.stop_at_eos = false;
+            router.admit(q).unwrap();
+            let rs = sched.run_until_idle().unwrap();
+            assert_eq!(rs.len(), 1, "turn {turn} was admitted (the \
+                                     chunked path serves over-bucket \
+                                     prompts)");
+            let c = rs[0].cache.expect("cache provenance");
+            reused.push(c.prefix_tokens);
+        }
+        assert_eq!(reused, vec![0, 16, 32],
+                   "each turn reuses the previous turn's published \
+                    boundary");
+        obj(vec![
+            ("turns", n(3.0)),
+            ("turn_prompt_tokens", Value::Arr(
+                vec![n(32.0), n(44.0), n(56.0)])),
+            ("prefix_tokens_by_turn", Value::Arr(
+                reused.iter().map(|&x| n(x as f64)).collect())),
+            (
+                "prefix_tokens_reused",
+                n(m.prefix_tokens_reused.get() as f64),
+            ),
+            ("over_bucket_served", Value::Bool(true)),
+        ])
+    }
+
+    pub fn run() -> Value {
+        let smoke = std::env::var("GRIFFIN_LOADGEN_SMOKE").is_ok();
+        let conversations = if smoke { 4 } else { 8 };
+        let total = conversations * TURNS;
+        println!(
+            "bench_serving prefix_reuse (cpu substrate; \
+             {conversations} conversations x {TURNS} turns, shared \
+             {SYSTEM_BLOCK}-token system prompt)"
+        );
+        let uncached = run_arm(conversations, false);
+        let cached = run_arm(conversations, true);
+
+        // losslessness: identical seeded streams request-for-request
+        assert_eq!(cached.streams, uncached.streams,
+                   "the prefix cache changed a token stream");
+        assert_eq!(uncached.hits, 0);
+        // every request after the very first re-admits the shared
+        // system block
+        assert_eq!(cached.hits, total - 1,
+                   "all but the first request hit the system prefix");
+        let cm = &cached.metrics;
+        assert_eq!(cm.prefix_cache_hits.get() as usize, total - 1);
+        assert_eq!(cm.prefix_cache_evictions.get(), 0);
+
+        let hit_rate = cached.hits as f64 / total as f64;
+        let ttft_uncached = mean(&uncached.ttft_all);
+        let ttft_hit = mean(&cached.ttft_hits);
+        let ttft_miss = mean(&cached.ttft_misses);
+        println!(
+            "  prefix_reuse: hit rate {hit_rate:.2}, ttft warm \
+             {ttft_hit:.2}ms vs cold {ttft_uncached:.2}ms, reused \
+             {} prefix tokens",
+            cm.prefix_tokens_reused.get()
+        );
+        let mut rep = Reporter::new("bench_serving_prefix_reuse.csv");
+        rep.add(summarize("prefix_reuse_uncached", &uncached.wall_ms));
+        rep.add(summarize("prefix_reuse_cached", &cached.wall_ms));
+        rep.finish();
+
+        let mt = multi_turn();
+        obj(vec![
+            ("scenario", s("prefix_reuse")),
+            ("workload", obj(vec![
+                ("conversations", n(conversations as f64)),
+                ("turns", n(TURNS as f64)),
+                ("system_prompt_tokens", n(SYSTEM_BLOCK as f64)),
+                ("max_new_tokens", n(MAX_NEW as f64)),
+                ("sampler", s("topk4@0.8")),
+            ])),
+            ("shared_system", obj(vec![
+                ("requests", n(total as f64)),
+                ("streams_identical", Value::Bool(true)),
+                ("hit_rate", n(hit_rate)),
+                ("ttft_ms", obj(vec![
+                    ("uncached_mean", n(ttft_uncached)),
+                    ("cached_miss_mean", n(ttft_miss)),
+                    ("cached_hit_mean", n(ttft_hit)),
+                    (
+                        "hit_over_uncached",
+                        n(ttft_hit / ttft_uncached.max(1e-9)),
+                    ),
+                ])),
+                ("cache", obj(vec![
+                    ("hits", n(cm.prefix_cache_hits.get() as f64)),
+                    ("misses", n(cm.prefix_cache_misses.get() as f64)),
+                    (
+                        "prefix_tokens_reused",
+                        n(cm.prefix_tokens_reused.get() as f64),
+                    ),
+                    (
+                        "bytes_saved",
+                        n(cm.prefix_bytes_saved.get() as f64),
+                    ),
+                    (
+                        "resident_bytes",
+                        n(cm.prefix_cache_bytes.get() as f64),
+                    ),
+                ])),
+            ])),
+            ("multi_turn", mt),
+        ])
+    }
+}
+
 /// Compose the CPU-substrate scenario summaries into the
 /// machine-readable BENCH_serving.json at the repository root
 /// (schema: docs/benchmarks.md).
@@ -1774,7 +2030,8 @@ fn main() {
         let spec = specdec::run();
         let load = loadgen::run();
         let frontier = adaptive::run();
-        write_serving_json(vec![scaling, spec, load, frontier]);
+        let reuse = prefix_reuse::run();
+        write_serving_json(vec![scaling, spec, load, frontier, reuse]);
     }
     #[cfg(feature = "runtime")]
     pjrt::run();

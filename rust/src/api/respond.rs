@@ -78,6 +78,19 @@ fn response_body(r: &GenResponse, v2_schema: bool) -> Value {
                 ]),
             ));
         }
+        // prefix-cache provenance: how much of the prompt was served
+        // from device-resident KV (`hit`) vs prefilled. Present only on
+        // responses admitted through the chunked/prefix path, so plain
+        // single-shot responses keep their shape.
+        if let Some(c) = r.cache {
+            fields.push((
+                "cache",
+                obj(vec![
+                    ("prefix_tokens", n(c.prefix_tokens as f64)),
+                    ("hit", Value::Bool(c.hit)),
+                ]),
+            ));
+        }
     }
     fields.push((
         "timing",
@@ -326,6 +339,7 @@ mod tests {
             k_per_layer: None,
             selection: None,
             speculative: None,
+            cache: None,
             prefill_ms: 1.0,
             select_ms: 0.0,
             decode_ms: 2.0,
@@ -530,6 +544,33 @@ mod tests {
         r.speculative = None;
         let d = json::parse(&done_json(&r, false, true)).unwrap();
         assert!(d.get("speculative").is_none());
+    }
+
+    #[test]
+    fn v2_surfaces_prefix_cache_provenance() {
+        use crate::coordinator::types::CacheInfo;
+        let mut r = resp();
+        r.cache = Some(CacheInfo { prefix_tokens: 32, hit: true });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let c = d.get("cache").expect("v2 carries cache provenance");
+        assert_eq!(c.get("prefix_tokens").unwrap().as_usize(), Some(32));
+        assert_eq!(c.get("hit").unwrap().as_bool(), Some(true));
+        // a cold chunked admission reports the miss explicitly
+        r.cache = Some(CacheInfo { prefix_tokens: 0, hit: false });
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        let c = d.get("cache").unwrap();
+        assert_eq!(c.get("prefix_tokens").unwrap().as_usize(), Some(0));
+        assert_eq!(c.get("hit").unwrap().as_bool(), Some(false));
+        // embedded batch rows keep the object (same row schema)
+        let row = response_row_json(&r);
+        assert!(row.get("cache").is_some());
+        // v1 bodies stay byte-compatible: never a cache object
+        let d1 = json::parse(&done_json(&r, false, false)).unwrap();
+        assert!(d1.get("cache").is_none());
+        // single-shot admissions: no object (plain shape unchanged)
+        r.cache = None;
+        let d = json::parse(&done_json(&r, false, true)).unwrap();
+        assert!(d.get("cache").is_none());
     }
 
     #[test]

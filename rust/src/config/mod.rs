@@ -308,9 +308,11 @@ impl Manifest {
             .min_by_key(|e| e.seq.unwrap())
     }
 
-    /// Largest seq bucket of `kind` at `batch` — the clamp target for
-    /// prompts longer than every compiled bucket (tokenizer::fit keeps
-    /// the suffix).
+    /// Largest seq bucket of `kind` at `batch` — the single-dispatch
+    /// prompt capacity. Prompts beyond it are rejected at admission (or
+    /// served through the chunked positioned prefill); they are NEVER
+    /// clamped to this bucket (the old clamp silently truncated the
+    /// prompt's prefix).
     pub fn largest_seq_bucket(&self, kind: &str, batch: usize)
                               -> Option<&ExecutableSpec> {
         self.executables

@@ -85,8 +85,8 @@ pub fn adaptive_bucket_keep(_requested_keep: f64) -> f64 {
 // Runtime-free coordinator types (Mode, GenResponse) live in
 // `coordinator::types` so the substrate layers build without PJRT; they
 // are re-exported here under their historical paths.
-pub use crate::coordinator::types::{GenResponse, Mode, SelectionInfo,
-                                    SpecInfo};
+pub use crate::coordinator::types::{CacheInfo, GenResponse, Mode,
+                                    SelectionInfo, SpecInfo};
 
 /// Device-resident pruned FF weights for one expert set. Shared handles
 /// (`Rc`) so the same set can live in the gather cache, a dispatch
@@ -196,6 +196,45 @@ impl DecodeState {
     }
 }
 
+/// Device-resident state of an in-flight chunked positioned prefill
+/// (`prefill_sample_b1_s{S}_p`): the growing single-sequence KV pair
+/// plus the RUNNING PRE-SQRT selection-statistic sums threaded chunk to
+/// chunk (sqrt is applied once at the end — [`Engine::chunk_stats`] —
+/// so the chunked statistics are bit-identical to the single-shot
+/// prefill's). Tensors are `Rc`-shared so a block-aligned snapshot can
+/// be retained by the prefix cache while later chunks continue from it:
+/// the substrate is purely functional (inputs are never mutated), so
+/// sharing is safe, and `Clone` is cheap handle duplication.
+#[derive(Clone)]
+pub struct ChunkState {
+    pub kcache: Rc<DeviceTensor>,
+    pub vcache: Rc<DeviceTensor>,
+    /// running Σ zbar² (pre-sqrt GRIFFIN eq.6 sums) [L, 1, d_ff]
+    pub stats: Rc<DeviceTensor>,
+    /// running Σ x² (pre-sqrt Wanda input norms) [L, 1, d_model]
+    pub xnorms: Rc<DeviceTensor>,
+    /// running Σ z² (pre-sqrt Wanda activation norms) [L, 1, d_ff]
+    pub znorms: Rc<DeviceTensor>,
+    /// prompt rows resident in the caches — the absolute start position
+    /// of the next chunk (block-aligned between chunks)
+    pub filled: usize,
+}
+
+impl ChunkState {
+    /// Device bytes this state's tensors occupy (f32) — what a prefix-
+    /// cache entry charges against its byte budget. Shared `Rc` handles
+    /// (the zero templates, snapshots) are charged at full size per
+    /// holder: the budget bounds worst-case residency, not the
+    /// deduplicated optimum.
+    pub fn payload_bytes(&self) -> u64 {
+        [&self.kcache, &self.vcache, &self.stats, &self.xnorms,
+         &self.znorms]
+            .iter()
+            .map(|t| t.element_count() as u64 * 4)
+            .sum()
+    }
+}
+
 /// What the caller needs back from the prompt phase. Admission routing
 /// is BY NEED: the reduced `prefill_sample_*` executables cannot serve
 /// per-position prompt logits, so callers that score the prompt
@@ -301,6 +340,10 @@ pub struct Engine {
     set_ids: Cell<u64>,
     magnitude_cache: Option<Vec<Vec<i32>>>, // per keep-k gather idx cache
     magnitude_keep: f64,
+    /// shared zero seed of every cold chunked prefill: the substrate
+    /// never mutates inputs, so one uploaded zero-state serves all cold
+    /// admissions (no per-admission Smax-proportional zero upload)
+    chunk_zero: RefCell<Option<ChunkState>>,
 }
 
 impl Engine {
@@ -341,6 +384,7 @@ impl Engine {
             set_ids: Cell::new(1),
             magnitude_cache: None,
             magnitude_keep: -1.0,
+            chunk_zero: RefCell::new(None),
         })
     }
 
@@ -361,8 +405,13 @@ impl Engine {
     /// Pack a prompt batch to its compiled (batch, seq) bucket of the
     /// given executable kind ("prefill" / "prefill_sample"): pad the
     /// token matrix with dummy rows, resolve the smallest fitting seq
-    /// bucket — over-long prompts are clamped to the largest compiled
-    /// bucket (tokenizer::fit keeps the suffix — most recent context).
+    /// bucket. A prompt longer than every compiled bucket is an ERROR:
+    /// the old behavior silently clamped to the largest bucket
+    /// (tokenizer::fit keeps the suffix), which truncated the prompt's
+    /// prefix without any signal to the caller. Admission now rejects
+    /// such prompts up front (`Router` max_prompt) or serves them
+    /// through the chunked positioned prefill ([`Engine::prefill_chunk`])
+    /// when the artifacts provide it — never a silent snap.
     fn pack_prompts(&self, prompts: &[Vec<i32>], kind: &str)
                     -> Result<PackedPrompts> {
         let n = prompts.len();
@@ -375,15 +424,21 @@ impl Engine {
         let exe = match self.session.manifest().seq_bucket(kind, batch,
                                                            longest) {
             Some(e) => e.name.clone(),
-            None => self
-                .session
-                .manifest()
-                .largest_seq_bucket(kind, batch)
-                .with_context(|| {
-                    format!("no {kind} executable for batch={batch}")
-                })?
-                .name
-                .clone(),
+            None => {
+                let largest = self
+                    .session
+                    .manifest()
+                    .largest_seq_bucket(kind, batch)
+                    .and_then(|e| e.seq);
+                match largest {
+                    Some(s) => bail!(
+                        "prompt of {longest} tokens exceeds the largest \
+                         compiled {kind} seq bucket ({s}) at batch={batch}; \
+                         over-long prompts must be rejected at admission \
+                         or chunk-prefilled, never truncated"),
+                    None => bail!("no {kind} executable for batch={batch}"),
+                }
+            }
         };
         let bucket_seq = self.session.manifest().executables[&exe]
             .seq
@@ -1458,11 +1513,11 @@ impl Engine {
 
     /// Validate splice operands; returns (layers, dst_batch, src_batch,
     /// row elements) for the routed paths.
-    fn check_splice(dst: &DecodeState, src: &DecodeState,
+    fn check_splice(dst: &DecodeState, src_k: &DeviceTensor,
                     pairs: &[(usize, usize)])
                     -> Result<(usize, usize, usize, usize)> {
         let ds = &dst.kcache.shape;
-        let ss = &src.kcache.shape;
+        let ss = &src_k.shape;
         if ds.len() != 5 || ss.len() != 5 {
             bail!("splice_slots: expected [L,B,H,S,dh] caches");
         }
@@ -1500,19 +1555,40 @@ impl Engine {
     /// sets). Write positions stay host-authoritative either way.
     pub fn splice_slots(&self, dst: &mut DecodeState, src: &DecodeState,
                         pairs: &[(usize, usize)]) -> Result<()> {
-        let (_layers, db, sb, _row) = Self::check_splice(dst, src, pairs)?;
+        self.splice_rows(dst, &src.kcache, &src.vcache, &src.pos, pairs)
+    }
+
+    /// Raw-tensor splice source: like [`Engine::splice_slots`], but the
+    /// source rows come from any [L, B, H, Smax, dh] cache pair — a
+    /// freshly prefilled admission state, a chunked-prefill
+    /// [`ChunkState`], or a prefix-cache entry's retained tensors
+    /// (which are `Rc`-shared and never mutated: the substrate is
+    /// purely functional, so a splice reads the entry without consuming
+    /// it). `src_pos` supplies the per-row write positions.
+    pub fn splice_rows(&self, dst: &mut DecodeState,
+                       src_k: &DeviceTensor, src_v: &DeviceTensor,
+                       src_pos: &[i32], pairs: &[(usize, usize)])
+                       -> Result<()> {
+        let (_layers, db, sb, _row) = Self::check_splice(dst, src_k,
+                                                         pairs)?;
+        if src_pos.len() != sb {
+            bail!("splice_rows: {} positions for src batch {sb}",
+                  src_pos.len());
+        }
         if self.splice_spec(sb, db).is_some() {
-            self.splice_slots_device(dst, src, pairs, sb, db)
+            self.splice_rows_device(dst, src_k, src_v, src_pos, pairs,
+                                    sb, db)
         } else {
-            self.splice_slots_host(dst, src, pairs)
+            self.splice_rows_host(dst, src_k, src_v, src_pos, pairs)
         }
     }
 
     /// Device-side splice through the compiled `splice_b{src}_b{dst}`
     /// executable: neither KV cache crosses the host boundary.
-    fn splice_slots_device(&self, dst: &mut DecodeState,
-                           src: &DecodeState, pairs: &[(usize, usize)],
-                           sb: usize, db: usize) -> Result<()> {
+    fn splice_rows_device(&self, dst: &mut DecodeState,
+                          src_k: &DeviceTensor, src_v: &DeviceTensor,
+                          src_pos: &[i32], pairs: &[(usize, usize)],
+                          sb: usize, db: usize) -> Result<()> {
         let t = Timer::start();
         let name = format!("splice_b{sb}_b{db}");
         // untaken lanes keep their resident row (take = 0); their
@@ -1527,7 +1603,7 @@ impl Engine {
         let take_dev = self.session.upload_i32(&[db], &take)?;
         let mut outs = self.session.run(
             &name,
-            &[&dst.kcache, &dst.vcache, &src.kcache, &src.vcache,
+            &[&dst.kcache, &dst.vcache, src_k, src_v,
               &idx_dev, &take_dev],
         )?;
         let vcache = outs.pop().unwrap();
@@ -1535,7 +1611,7 @@ impl Engine {
         dst.kcache = kcache;
         dst.vcache = vcache;
         for &(si, di) in pairs {
-            dst.pos[di] = src.pos[si];
+            dst.pos[di] = src_pos[si];
         }
         // membership changed: the fused chain re-seeds pos from the
         // host mirror on its next step
@@ -1545,19 +1621,29 @@ impl Engine {
         Ok(())
     }
 
-    /// Host-staged splice fallback (download + re-upload of both
-    /// caches). Public so parity tests can pin device-path equivalence;
-    /// serving paths go through the routed [`Engine::splice_slots`].
+    /// Host-staged splice fallback over a [`DecodeState`] source
+    /// (download + re-upload of both caches). Public so parity tests
+    /// can pin device-path equivalence; serving paths go through the
+    /// routed [`Engine::splice_slots`].
     pub fn splice_slots_host(&self, dst: &mut DecodeState,
                              src: &DecodeState, pairs: &[(usize, usize)])
                              -> Result<()> {
+        self.splice_rows_host(dst, &src.kcache, &src.vcache, &src.pos,
+                              pairs)
+    }
+
+    fn splice_rows_host(&self, dst: &mut DecodeState,
+                        src_k: &DeviceTensor, src_v: &DeviceTensor,
+                        src_pos: &[i32], pairs: &[(usize, usize)])
+                        -> Result<()> {
         let t = Timer::start();
-        let (layers, db, sb, row) = Self::check_splice(dst, src, pairs)?;
+        let (layers, db, sb, row) = Self::check_splice(dst, src_k,
+                                                       pairs)?;
         let ds = dst.kcache.shape.clone();
         let mut dk = self.session.download_f32(&dst.kcache)?;
         let mut dv = self.session.download_f32(&dst.vcache)?;
-        let sk = self.session.download_f32(&src.kcache)?;
-        let sv = self.session.download_f32(&src.vcache)?;
+        let sk = self.session.download_f32(src_k)?;
+        let sv = self.session.download_f32(src_v)?;
         for l in 0..layers {
             for &(si, di) in pairs {
                 let s0 = (l * sb + si) * row;
@@ -1569,11 +1655,279 @@ impl Engine {
         dst.kcache = self.session.upload_f32(&ds, &dk)?;
         dst.vcache = self.session.upload_f32(&ds, &dv)?;
         for &(si, di) in pairs {
-            dst.pos[di] = src.pos[si];
+            dst.pos[di] = src_pos[si];
         }
         dst.invalidate_pos();
         t.record_into(&self.metrics.kv_splice_latency);
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // chunked positioned prefill (prefix-cache tails + long prompts)
+    // ------------------------------------------------------------------
+
+    /// Positioned prefill seq buckets (`prefill_sample_b1_s{S}_p`),
+    /// ascending. Empty on artifact sets that predate the chunked
+    /// admission ABI.
+    pub fn positioned_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "prefill_sample_positioned"
+                    && e.batch == Some(1)
+            })
+            .filter_map(|e| e.seq)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Block granule of the chunked admission path: the smallest
+    /// positioned bucket. Chunk starts and prefix-cache boundaries are
+    /// aligned to it. None = no chunked ABI.
+    pub fn chunk_block(&self) -> Option<usize> {
+        self.positioned_buckets().first().copied()
+    }
+
+    /// Does the manifest provide the positioned prefill family (chunked
+    /// tails, prefix-cache splicing, over-bucket prompts)?
+    pub fn can_chunk_prefill(&self) -> bool {
+        self.chunk_block().is_some()
+    }
+
+    /// Compiled sampler truncation cap of the positioned prefill family
+    /// (min over buckets, mirroring [`Engine::fused_prefill_cap`]):
+    /// only fused-eligible samplers can admit through the chunked path,
+    /// because the final chunk samples the first token on device.
+    pub fn chunked_prefill_cap(&self) -> Option<usize> {
+        self.session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "prefill_sample_positioned"
+                    && e.batch == Some(1)
+            })
+            .map(|e| e.sample_topk.unwrap_or(crate::sampling::SAMPLE_TOPK))
+            .min()
+    }
+
+    /// Largest prompt a SINGLE-dispatch admission can serve: the max
+    /// compiled prefill-family seq bucket. Prompts beyond it must be
+    /// chunk-prefilled (positioned family) or rejected at admission
+    /// with a typed `invalid_request` — never silently truncated.
+    pub fn single_shot_prompt_cap(&self) -> Option<usize> {
+        self.session
+            .manifest()
+            .executables
+            .values()
+            .filter(|e| {
+                e.kind == "prefill" || e.kind == "prefill_sample"
+            })
+            .filter_map(|e| e.seq)
+            .max()
+    }
+
+    /// Fresh chunk state: zero KV caches and zero running sums. The
+    /// zero tensors are uploaded once and `Rc`-shared across every cold
+    /// chunked admission (the substrate never mutates inputs), so cold
+    /// chunked admission traffic stays proportional to the prompt, not
+    /// to Smax.
+    pub fn new_chunk_state(&self) -> Result<ChunkState> {
+        if let Some(z) = self.chunk_zero.borrow().as_ref() {
+            return Ok(z.clone());
+        }
+        let spec = self
+            .session
+            .manifest()
+            .executables
+            .values()
+            .find(|e| {
+                e.kind == "prefill_sample_positioned"
+                    && e.batch == Some(1)
+            })
+            .context("no positioned prefill executables \
+                      (chunked admission unavailable)")?;
+        let shape_of = |name: &str| -> Result<Vec<usize>> {
+            spec.inputs
+                .iter()
+                .find(|io| io.name == name)
+                .map(|io| io.shape.clone())
+                .with_context(|| {
+                    format!("{}: no {name} input", spec.name)
+                })
+        };
+        let zeros = |shape: Vec<usize>| -> Result<Rc<DeviceTensor>> {
+            let z = vec![0f32; shape.iter().product()];
+            Ok(Rc::new(self.session.upload_f32(&shape, &z)?))
+        };
+        let state = ChunkState {
+            kcache: zeros(shape_of("kcache")?)?,
+            vcache: zeros(shape_of("vcache")?)?,
+            stats: zeros(shape_of("stats_in")?)?,
+            xnorms: zeros(shape_of("xnorms_in")?)?,
+            znorms: zeros(shape_of("znorms_in")?)?,
+            filled: 0,
+        };
+        *self.chunk_zero.borrow_mut() = Some(state.clone());
+        Ok(state)
+    }
+
+    /// Plan the positioned chunk sizes covering prompt rows
+    /// [`from`, `len`): every chunk but the last is block-aligned and
+    /// fully valid, and the FINAL chunk starts at the last block
+    /// boundary strictly before `len` — so the state right before it is
+    /// the block-aligned snapshot the prefix cache retains, and its
+    /// sampled token (over row `len - 1`) is the request's first.
+    /// `from` must be block-aligned (0 or a prefix-cache boundary).
+    pub fn plan_chunks(&self, from: usize, len: usize)
+                       -> Result<Vec<usize>> {
+        let buckets = self.positioned_buckets();
+        let block = *buckets
+            .first()
+            .context("no positioned prefill buckets")?;
+        if from % block != 0 {
+            bail!("chunk start {from} not aligned to block {block}");
+        }
+        if len <= from {
+            bail!("chunk plan: prompt len {len} <= start {from}");
+        }
+        let max_seq = self.config().max_seq;
+        if len > max_seq {
+            bail!("prompt of {len} tokens exceeds max_seq {max_seq}");
+        }
+        // where the final (sampling) chunk starts
+        let boundary = ((len - 1) / block) * block;
+        let mut plan = Vec::new();
+        let mut cur = from;
+        while cur < boundary {
+            // largest block-multiple bucket fitting the aligned span
+            let s = buckets
+                .iter()
+                .copied()
+                .filter(|&s| s % block == 0 && cur + s <= boundary)
+                .max()
+                .unwrap_or(block);
+            plan.push(s);
+            cur += s;
+        }
+        let tail = len - boundary; // in [1, block]
+        let s = buckets
+            .iter()
+            .copied()
+            .filter(|&s| s >= tail)
+            .min()
+            .with_context(|| format!("no positioned bucket >= {tail}"))?;
+        plan.push(s);
+        Ok(plan)
+    }
+
+    /// One positioned prefill dispatch: run the next `chunk.len()`
+    /// prompt rows (absolute positions [state.filled, state.filled +
+    /// chunk.len())) through `prefill_sample_b1_s{S}_p`, threading the
+    /// KV caches and the running pre-sqrt statistic sums through the
+    /// state. `sampler` carries the request's device sampling lane for
+    /// the FINAL chunk; pass `None` on intermediate chunks (a greedy
+    /// dummy lane whose sampled token is discarded — the caller's host
+    /// mirror must still `skip()` once per FINAL chunk only, since the
+    /// dummy lanes never consume the request's stream). Returns the
+    /// sampled (token, logprob) of the chunk's last valid row.
+    pub fn prefill_chunk(&self, state: &mut ChunkState, chunk: &[i32],
+                         sampler: Option<(SamplerSpec, u32)>)
+                         -> Result<(i32, f32)> {
+        let t = Timer::start();
+        let valid = chunk.len();
+        if valid == 0 {
+            bail!("prefill_chunk: empty chunk");
+        }
+        let s = self
+            .positioned_buckets()
+            .into_iter()
+            .filter(|&s| s >= valid)
+            .min()
+            .with_context(|| format!("no positioned bucket >= {valid}"))?;
+        let name = format!("prefill_sample_b1_s{s}_p");
+        let mut toks = chunk.to_vec();
+        toks.resize(s, PAD_ID);
+        let toks_dev = self.session.upload_i32(&[1, s], &toks)?;
+        let lens_dev = self.session.upload_i32(&[1], &[valid as i32])?;
+        let start_dev =
+            self.session.upload_i32(&[1], &[state.filled as i32])?;
+        let (spec, seed) =
+            sampler.unwrap_or((SamplerSpec::Greedy, seed_state(0)));
+        let (tv, kv) = device_params(spec);
+        let temp_dev = self.session.upload_f32(&[1], &[tv])?;
+        let topk_dev = self.session.upload_i32(&[1], &[kv])?;
+        let rng_dev = self.session.upload_i32(&[1], &[seed as i32])?;
+        let mut args: Vec<&DeviceTensor> = self.weights.ordered();
+        args.push(&state.kcache);
+        args.push(&state.vcache);
+        args.push(&state.stats);
+        args.push(&state.xnorms);
+        args.push(&state.znorms);
+        args.push(&toks_dev);
+        args.push(&lens_dev);
+        args.push(&start_dev);
+        args.push(&temp_dev);
+        args.push(&topk_dev);
+        args.push(&rng_dev);
+        let mut outs = self.session.run(&name, &args)?;
+        // outputs: token, logprob, kcache, vcache, stats, xnorms,
+        // znorms, rng — the rng output is discarded like in
+        // prefill_sample (host mirrors are the stream's source of truth)
+        let _rng_out = outs.pop().unwrap();
+        state.znorms = Rc::new(outs.pop().unwrap());
+        state.xnorms = Rc::new(outs.pop().unwrap());
+        state.stats = Rc::new(outs.pop().unwrap());
+        state.vcache = Rc::new(outs.pop().unwrap());
+        state.kcache = Rc::new(outs.pop().unwrap());
+        let lp = self.session.download_f32(&outs.pop().unwrap())?[0];
+        let tok = self.session.download_i32(&outs.pop().unwrap())?[0];
+        state.filled += valid;
+        self.metrics.prompt_tokens.add(valid as u64);
+        t.record_into(&self.metrics.prefill_latency);
+        Ok((tok, lp))
+    }
+
+    /// Finalize the selection statistics of a completed chunked
+    /// prefill: download the running pre-sqrt sums the mode needs and
+    /// apply the sqrt on the host. f32 sqrt is correctly rounded (IEEE
+    /// 754), so the result is bit-identical to the device-side sqrt the
+    /// single-shot prefill applies (pinned by runtime::cpu
+    /// `positioned_chunks_match_single_shot_prefill_bitwise`).
+    pub fn chunk_stats(&self, state: &ChunkState, needs: StatNeeds)
+                       -> Result<(Option<LayerStats>, Option<LayerStats>,
+                                  Option<LayerStats>)> {
+        let cfg = self.config();
+        let sqrt_split =
+            |t: &DeviceTensor, width: usize| -> Result<LayerStats> {
+                let mut rows = self.split_layer_stats(t, width, 1, 1)?;
+                let mut stack = rows.pop().unwrap();
+                for row in &mut stack {
+                    for v in row.iter_mut() {
+                        *v = v.sqrt();
+                    }
+                }
+                Ok(stack)
+            };
+        let stats = if needs.stats {
+            Some(sqrt_split(&state.stats, cfg.d_ff)?)
+        } else {
+            None
+        };
+        let (xnorms, znorms) = if needs.norms {
+            (
+                Some(sqrt_split(&state.xnorms, cfg.d_model)?),
+                Some(sqrt_split(&state.znorms, cfg.d_ff)?),
+            )
+        } else {
+            (None, None)
+        };
+        Ok((stats, xnorms, znorms))
     }
 
     /// Full request: prompt → (select → gather) → generation (paper Fig 3).
@@ -1739,6 +2093,7 @@ impl Engine {
                 k_per_layer: k_per_layer.clone(),
                 selection: SelectionInfo::from_mode(&mode),
                 speculative: None,
+                cache: None,
                 prefill_ms,
                 select_ms,
                 decode_ms,
@@ -1845,6 +2200,7 @@ impl Engine {
             k_per_layer: None,
             selection: SelectionInfo::from_mode(&req.mode),
             speculative: None,
+            cache: None,
             prefill_ms,
             select_ms,
             decode_ms,

@@ -3,6 +3,9 @@
 //! - `types`      — runtime-free Mode / GenResponse (substrate builds)
 //! - `selection`  — GRIFFIN expert selection + baselines (§4.2, Tables 4-5)
 //! - `sequence`   — request/sequence state machine
+//! - `prefix_cache` — ref-counted, byte-budgeted LRU of block-aligned
+//!   prompt prefixes (chain-hashed); payload-generic so the scheduler
+//!   stores device tensors while the invariants test dependency-free
 //! - `router`     — admission control, backpressure, cancel flags
 //! - `shard`      — sharded admission front: placement (least-loaded +
 //!   session affinity), work stealing, per-shard health
@@ -22,6 +25,7 @@
 #[cfg(feature = "engine")]
 pub mod engine;
 pub mod gather_cache;
+pub mod prefix_cache;
 pub mod router;
 #[cfg(feature = "engine")]
 pub mod scheduler;

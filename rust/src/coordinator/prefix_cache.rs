@@ -1,0 +1,461 @@
+//! Device-resident prompt-prefix cache (host-side bookkeeping).
+//!
+//! Serving workloads repeat prompt prefixes constantly — shared system
+//! prompts, multi-turn conversations that resend the whole history —
+//! and the prompt phase recomputes their KV rows and flocking
+//! statistics from scratch every time. This module is the bookkeeping
+//! core of prefix reuse: block-aligned prompt prefixes are chain-hashed
+//! (FNV-1a per block, each boundary's hash extending the previous —
+//! the same family as the session-affinity hash in `shard.rs`), and
+//! each cached boundary maps to a payload the scheduler fills with the
+//! `Rc`-shared device tensors of a completed chunked prefill — the KV
+//! rows plus the RUNNING PRE-SQRT selection-statistic sums, so a hit
+//! restores both the attention state and the GRIFFIN/Wanda statistics
+//! of the prefix exactly.
+//!
+//! The cache is generic over the payload and holds no device types
+//! itself, so the hashing / refcount / eviction invariants are unit-
+//! and property-tested in the dependency-free substrate tier. Policy:
+//!
+//!   * lookup returns the LONGEST cached boundary that is a strict
+//!     prefix of the prompt (tail >= 1 token: the final chunk must
+//!     sample the first generated token from the last prompt row);
+//!   * a hit verifies exact token equality — the hash only routes, it
+//!     never vouches (a collision is a miss, not a wrong splice);
+//!   * hits acquire a refcount that the scheduler holds for as long as
+//!     the admission/slot uses the entry's tensors; eviction NEVER
+//!     removes an entry with live refs (the property test pins this);
+//!   * eviction is LRU over unreferenced entries under a byte budget.
+
+use std::collections::BTreeMap;
+
+/// FNV-1a 64-bit offset basis / prime (matches the session hash in
+/// `shard.rs` — one hash family across the routing tier).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Chain-hash every block-aligned prefix of `tokens`: entry `i` of the
+/// result is `(prefix_len, hash)` for the prefix of `i + 1` blocks,
+/// where each hash extends the previous block's (so the hash of a
+/// longer prefix is computable from the shorter one's — the cache and
+/// the shard prefix directory agree by construction). Token bytes are
+/// hashed little-endian, like the session id in `shard.rs`.
+pub fn chain_hashes(tokens: &[i32], block: usize) -> Vec<(usize, u64)> {
+    let mut out = Vec::new();
+    if block == 0 {
+        return out;
+    }
+    let mut h = FNV_OFFSET;
+    let mut i = 0;
+    while i + block <= tokens.len() {
+        for &t in &tokens[i..i + block] {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        i += block;
+        out.push((i, h));
+    }
+    out
+}
+
+/// Hash of the first block only — the shard router's prefix-directory
+/// key (requests sharing a system prompt share it).
+pub fn first_block_hash(tokens: &[i32], block: usize) -> Option<u64> {
+    chain_hashes(&tokens[..tokens.len().min(block)], block)
+        .first()
+        .map(|&(_, h)| h)
+}
+
+/// One cached block-aligned prefix.
+struct PrefixEntry<T> {
+    /// exact prefix tokens — hash collisions verify against these
+    tokens: Vec<i32>,
+    payload: T,
+    bytes: u64,
+    /// live uses (in-flight chunked admissions + occupied slots whose
+    /// state was seeded from this entry); eviction skips refs > 0
+    refs: u32,
+    last_used: u64,
+    hits: u64,
+}
+
+/// Identity of a cache entry, held by whoever acquired a ref (slot
+/// entries record it so retirement can release).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixKey {
+    pub prefix_len: usize,
+    pub hash: u64,
+}
+
+/// A successful lookup: the entry's key plus a borrow of its payload.
+pub struct PrefixHit<'a, T> {
+    pub key: PrefixKey,
+    pub payload: &'a T,
+}
+
+/// Ref-counted, byte-budgeted LRU cache of block-aligned prompt
+/// prefixes. See the module docs for the policy.
+pub struct PrefixCache<T> {
+    block: usize,
+    budget_bytes: u64,
+    entries: BTreeMap<(usize, u64), PrefixEntry<T>>,
+    bytes: u64,
+    tick: u64,
+    evictions: u64,
+}
+
+impl<T> PrefixCache<T> {
+    pub fn new(block: usize, budget_bytes: u64) -> Self {
+        PrefixCache {
+            block,
+            budget_bytes,
+            entries: BTreeMap::new(),
+            bytes: 0,
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Block granule (the engine's smallest positioned prefill bucket).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident payload bytes (as declared at insert).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Live-ref count of an entry (test/metrics introspection).
+    pub fn refs(&self, key: PrefixKey) -> Option<u32> {
+        self.entries
+            .get(&(key.prefix_len, key.hash))
+            .map(|e| e.refs)
+    }
+
+    pub fn contains(&self, key: PrefixKey) -> bool {
+        self.entries.contains_key(&(key.prefix_len, key.hash))
+    }
+
+    /// Longest cached strict prefix of `tokens` (tail >= 1 token so the
+    /// final chunk still has a row to sample from). A hit ACQUIRES a
+    /// ref — the caller must pair it with [`PrefixCache::release`] when
+    /// the admission or the slot seeded from it retires.
+    pub fn acquire(&mut self, tokens: &[i32]) -> Option<PrefixHit<'_, T>> {
+        let bounds = chain_hashes(tokens, self.block);
+        for &(plen, hash) in bounds.iter().rev() {
+            if plen >= tokens.len() {
+                continue; // need a non-empty tail
+            }
+            let Some(e) = self.entries.get_mut(&(plen, hash)) else {
+                continue;
+            };
+            // the hash routes; exact tokens vouch (collision = miss)
+            if e.tokens[..] != tokens[..plen] {
+                continue;
+            }
+            self.tick += 1;
+            e.last_used = self.tick;
+            e.refs += 1;
+            e.hits += 1;
+            return Some(PrefixHit {
+                key: PrefixKey { prefix_len: plen, hash },
+                payload: &e.payload,
+            });
+        }
+        None
+    }
+
+    /// Acquire a ref on a KNOWN entry without the lookup bookkeeping
+    /// (no hit count, no LRU touch): the cold admission path retains
+    /// the snapshot it just inserted so its own slot's lifetime pins
+    /// the entry, exactly like a warm hit's ref does. False if the key
+    /// is not resident (the insert was rejected).
+    pub fn retain(&mut self, key: PrefixKey) -> bool {
+        match self.entries.get_mut(&(key.prefix_len, key.hash)) {
+            Some(e) => {
+                e.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one live ref. Unknown keys are ignored (the entry may have
+    /// been cleared administratively; refs never go negative).
+    pub fn release(&mut self, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&(key.prefix_len, key.hash))
+        {
+            e.refs = e.refs.saturating_sub(1);
+        }
+    }
+
+    /// Insert a block-aligned prefix snapshot. No-op (false) when the
+    /// boundary is already cached or when the entry cannot fit the byte
+    /// budget even after evicting every unreferenced entry. New entries
+    /// start unreferenced — a later hit acquires.
+    pub fn insert(&mut self, key: PrefixKey, tokens: Vec<i32>, payload: T,
+                  bytes: u64) -> bool {
+        debug_assert_eq!(tokens.len(), key.prefix_len);
+        if key.prefix_len == 0
+            || key.prefix_len % self.block != 0
+            || tokens.len() != key.prefix_len
+        {
+            return false;
+        }
+        if self.entries.contains_key(&(key.prefix_len, key.hash)) {
+            return false;
+        }
+        if !self.make_room(bytes) {
+            return false;
+        }
+        self.tick += 1;
+        self.bytes += bytes;
+        self.entries.insert(
+            (key.prefix_len, key.hash),
+            PrefixEntry {
+                tokens,
+                payload,
+                bytes,
+                refs: 0,
+                last_used: self.tick,
+                hits: 0,
+            },
+        );
+        true
+    }
+
+    /// Evict LRU unreferenced entries until `need` more bytes fit the
+    /// budget; false if impossible (live refs pin too much).
+    fn make_room(&mut self, need: u64) -> bool {
+        if need > self.budget_bytes {
+            return false;
+        }
+        while self.bytes + need > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refs == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = self.entries.remove(&k).unwrap();
+                    self.bytes -= e.bytes;
+                    self.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::rng::XorShift64Star;
+
+    const B: usize = 16;
+
+    fn toks(n: usize, seed: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| (i * 37 + seed) % 251).collect()
+    }
+
+    #[test]
+    fn chain_hashes_extend_and_only_cover_full_blocks() {
+        let t = toks(40, 1);
+        let h = chain_hashes(&t, B);
+        // 40 tokens -> boundaries at 16 and 32 only
+        assert_eq!(h.iter().map(|&(l, _)| l).collect::<Vec<_>>(),
+                   vec![16, 32]);
+        // a longer prompt sharing the prefix produces the SAME chain
+        let t2: Vec<i32> =
+            t.iter().copied().chain([9, 9, 9, 9, 9, 9, 9, 9]).collect();
+        assert_eq!(chain_hashes(&t2[..32], B), h);
+        assert_eq!(chain_hashes(&t2, B)[..2], h[..]);
+        // diverging in the second block changes that boundary only
+        let mut t3 = t.clone();
+        t3[20] += 1;
+        let h3 = chain_hashes(&t3, B);
+        assert_eq!(h3[0], h[0]);
+        assert_ne!(h3[1].1, h[1].1);
+        assert_eq!(first_block_hash(&t, B), Some(h[0].1));
+        assert_eq!(first_block_hash(&t[..8], B), None);
+        assert!(chain_hashes(&t, 0).is_empty());
+    }
+
+    #[test]
+    fn acquire_returns_longest_strict_prefix() {
+        let mut c: PrefixCache<&'static str> = PrefixCache::new(B, 1000);
+        let t = toks(48, 2);
+        let h = chain_hashes(&t, B);
+        let k16 = PrefixKey { prefix_len: 16, hash: h[0].1 };
+        let k32 = PrefixKey { prefix_len: 32, hash: h[1].1 };
+        assert!(c.insert(k16, t[..16].to_vec(), "p16", 10));
+        assert!(c.insert(k32, t[..32].to_vec(), "p32", 10));
+        // longest wins
+        let hit = c.acquire(&t).unwrap();
+        assert_eq!(hit.key, k32);
+        assert_eq!(*hit.payload, "p32");
+        // a 32-token prompt may only use the 16 boundary (tail >= 1)
+        let hit = c.acquire(&t[..32]).unwrap();
+        assert_eq!(hit.key, k16);
+        // 16 tokens: no strict-prefix boundary at all
+        assert!(c.acquire(&t[..16]).is_none());
+        // unrelated prompt misses
+        assert!(c.acquire(&toks(48, 9)).is_none());
+        assert_eq!(c.refs(k32), Some(1));
+        assert_eq!(c.refs(k16), Some(1));
+    }
+
+    #[test]
+    fn hash_collision_is_a_miss_not_a_wrong_hit() {
+        let mut c: PrefixCache<&'static str> = PrefixCache::new(B, 1000);
+        let t = toks(32, 3);
+        let h = chain_hashes(&t, B)[0].1;
+        // forge an entry whose hash matches `t`'s first block but whose
+        // tokens differ — exactly what a real collision would look like
+        let key = PrefixKey { prefix_len: 16, hash: h };
+        assert!(c.insert(key, toks(16, 7), "forged", 10));
+        assert!(c.acquire(&t).is_none(), "collision must verify-miss");
+        assert_eq!(c.refs(key), Some(0), "miss acquires nothing");
+    }
+
+    #[test]
+    fn insert_rejects_unaligned_duplicate_and_oversized() {
+        let mut c: PrefixCache<u8> = PrefixCache::new(B, 100);
+        let t = toks(16, 4);
+        let key = PrefixKey { prefix_len: 16, hash: 1 };
+        assert!(!c.insert(PrefixKey { prefix_len: 10, hash: 1 },
+                          toks(10, 4), 0, 10),
+                "unaligned boundary");
+        assert!(!c.insert(PrefixKey { prefix_len: 0, hash: 1 },
+                          vec![], 0, 10),
+                "empty prefix");
+        assert!(!c.insert(key, t[..8].to_vec(), 0, 10),
+                "token/len mismatch");
+        assert!(c.insert(key, t.clone(), 0, 10));
+        assert!(!c.insert(key, t.clone(), 0, 10), "duplicate boundary");
+        assert!(!c.insert(PrefixKey { prefix_len: 16, hash: 2 },
+                          t.clone(), 0, 101),
+                "larger than the whole budget");
+        assert_eq!(c.bytes(), 10);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure_skips_live_refs() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(B, 30);
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|s| toks(32, 100 + s)).collect();
+        let keys: Vec<PrefixKey> = prompts
+            .iter()
+            .map(|p| PrefixKey {
+                prefix_len: 16,
+                hash: chain_hashes(p, B)[0].1,
+            })
+            .collect();
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(c.insert(keys[i], p[..16].to_vec(), i, 10));
+        }
+        // pin entry 0 with a live ref; entry 1 is the LRU victim
+        assert!(c.acquire(&prompts[0]).is_some());
+        let extra = toks(32, 999);
+        let ek = PrefixKey {
+            prefix_len: 16,
+            hash: chain_hashes(&extra, B)[0].1,
+        };
+        assert!(c.insert(ek, extra[..16].to_vec(), 9, 10));
+        assert!(c.contains(keys[0]), "referenced entry survives");
+        assert!(!c.contains(keys[1]), "LRU unreferenced entry evicted");
+        assert_eq!(c.evictions(), 1);
+        // with everything referenced, insertion fails rather than evict
+        assert!(c.acquire(&prompts[2]).is_some());
+        assert!(c.acquire(&extra).is_some());
+        let more = toks(32, 555);
+        let mk = PrefixKey {
+            prefix_len: 16,
+            hash: chain_hashes(&more, B)[0].1,
+        };
+        assert!(!c.insert(mk, more[..16].to_vec(), 9, 10),
+                "all entries ref'd: no room can be made");
+        // release unpins: the released entry becomes evictable again
+        c.release(keys[2]);
+        assert!(c.insert(mk, more[..16].to_vec(), 9, 10));
+        assert!(!c.contains(keys[2]));
+    }
+
+    /// Property test: a randomized acquire/release/insert storm never
+    /// evicts a referenced entry, never over-spends the byte budget,
+    /// and keeps byte accounting exact.
+    #[test]
+    fn randomized_ops_preserve_ref_and_budget_invariants() {
+        let mut rng = XorShift64Star::new(7);
+        let mut c: PrefixCache<u64> = PrefixCache::new(B, 200);
+        // pool of 12 distinct prompts, 48 tokens each (2 boundaries)
+        let prompts: Vec<Vec<i32>> =
+            (0..12).map(|s| toks(48, s * 17 + 1)).collect();
+        let mut held: Vec<(PrefixKey, usize)> = Vec::new(); // (key, owner)
+        for step in 0..2000 {
+            let p = &prompts[rng.below(prompts.len())];
+            match rng.below(4) {
+                0 => {
+                    if let Some(hit) = c.acquire(p) {
+                        held.push((hit.key, step));
+                    }
+                }
+                1 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len());
+                        let (k, _) = held.swap_remove(i);
+                        c.release(k);
+                    }
+                }
+                _ => {
+                    let blocks = 1 + rng.below(2); // 16 or 32
+                    let plen = blocks * B;
+                    let key = PrefixKey {
+                        prefix_len: plen,
+                        hash: chain_hashes(&p[..plen], B)[blocks - 1].1,
+                    };
+                    let bytes = 10 + rng.below(40) as u64;
+                    c.insert(key, p[..plen].to_vec(), step as u64, bytes);
+                }
+            }
+            // invariants after every op
+            assert!(c.bytes() <= 200, "byte budget exceeded");
+            for &(k, _) in &held {
+                assert!(c.contains(k),
+                        "entry with a live ref was evicted");
+            }
+            let expect_bytes: u64 = c
+                .entries
+                .values()
+                .map(|e| e.bytes)
+                .sum();
+            assert_eq!(c.bytes(), expect_bytes, "byte accounting drift");
+            for (k, e) in &c.entries {
+                let held_refs =
+                    held.iter().filter(|(hk, _)| {
+                        (hk.prefix_len, hk.hash) == *k
+                    }).count() as u32;
+                assert_eq!(e.refs, held_refs, "refcount drift");
+            }
+        }
+    }
+}

@@ -64,6 +64,23 @@
 //! mirror, so a sequence's stream is identical across admission
 //! routings. See docs/architecture.md for the host-boundary budget.
 //!
+//! Prefix cache + chunked admission (opt-in, `enable_prefix_cache`):
+//! prompt prefixes are chain-hashed at block granularity (the smallest
+//! positioned prefill bucket) and block-aligned KV + running-statistic
+//! snapshots live device-resident in a ref-counted, byte-budgeted LRU.
+//! An eligible admission (fused sampler, prompt > one block) runs
+//! through a serialized machine: a cache hit splices the cached rows'
+//! worth of state and prefills ONLY the uncached tail via the
+//! positioned `prefill_sample_b1_s{S}_p` family — one chunk per tick,
+//! interleaved with decode ticks, so long-prompt admission cannot spike
+//! co-tenant inter-token latency. Because the running statistic sums
+//! are cached pre-sqrt alongside the KV, a warm admission's GRIFFIN /
+//! Wanda selection is bit-identical to a cold one's, and the token
+//! stream is byte-identical cold vs warm vs chunked (the mirror is the
+//! stream's single source of truth on every route). The entry ref is
+//! held from acquire to slot retirement; eviction never drops a
+//! referenced entry.
+//!
 //! Fault containment: an engine error never propagates out of `tick` as
 //! long as the slot invariants hold. A failure attributable to ONE
 //! request (per-slot selection at admission) retires just that request
@@ -87,9 +104,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::api::ErrorCode;
 use crate::coordinator::engine::{
-    aggregate_norms, DecodeState, Engine, FfOverride, FusedPrefillOut,
-    GenResponse, Mode, PrefillLogits, PrefillOut, PrunedWeights,
-    SamplingState, SelectionInfo, SpecInfo, StatNeeds,
+    aggregate_norms, CacheInfo, ChunkState, DecodeState, Engine,
+    FfOverride, FusedPrefillOut, GenResponse, Mode, PrefillLogits,
+    PrefillOut, PrunedWeights, SamplingState, SelectionInfo, SpecInfo,
+    StatNeeds,
+};
+use crate::coordinator::prefix_cache::{
+    chain_hashes, PrefixCache, PrefixKey,
 };
 use crate::coordinator::specdec::{accept_lane, snap_draft_bucket};
 use crate::coordinator::router::Router;
@@ -145,6 +166,7 @@ fn cancelled_response(req: &GenRequest) -> GenResponse {
             proposed: 0,
             accepted: 0,
         }),
+        cache: None,
         prefill_ms: 0.0,
         select_ms: 0.0,
         decode_ms: 0.0,
@@ -177,6 +199,32 @@ enum TickStep {
     Host(Vec<f32>),
 }
 
+/// One in-flight cache-aware chunked admission. At most one exists at a
+/// time and it advances ONE positioned chunk per tick, interleaved with
+/// decode ticks over the occupied slots — a long prompt's prefill can
+/// no longer stall co-tenant token emission for its whole length (the
+/// ITL-spike bound), and the serialized machine is what makes the
+/// prefix-cache bookkeeping race-free.
+struct ChunkedAdmission {
+    req: GenRequest,
+    /// growing KV + running pre-sqrt statistic sums (device-resident)
+    state: ChunkState,
+    /// positioned bucket sizes still to dispatch; `next` indexes it
+    plan: Vec<usize>,
+    next: usize,
+    /// the request's device-stream mirror (chunked admissions are
+    /// fused-only: the final chunk samples the first token on device)
+    mirror: Option<DeviceSampler>,
+    /// prefix-cache entry this admission's state was seeded from (warm
+    /// hit) or published (cold) — the ref is held until slot retirement
+    cache_ref: Option<PrefixKey>,
+    /// v2 `cache` provenance for the final response
+    info: CacheInfo,
+    /// accumulated chunk-dispatch wall time (excludes the interleaved
+    /// decode ticks)
+    prefill_ms: f64,
+}
+
 pub struct Scheduler {
     pub engine: Engine,
     pub router: Arc<Router>,
@@ -202,6 +250,13 @@ pub struct Scheduler {
     /// `fused_enabled` so benches can isolate decode-tick fusion from
     /// admission fusion on identical workloads.
     pub fused_admission: bool,
+    /// device-resident prompt-prefix cache (None = disabled). Enabling
+    /// it routes fused-eligible prompts longer than one block through
+    /// the serialized chunked admission machine; disabled, admission
+    /// behavior is byte-identical to the pre-cache scheduler.
+    prefix: Option<PrefixCache<ChunkState>>,
+    /// the at-most-one in-flight chunked admission
+    chunked: Option<ChunkedAdmission>,
     /// slot count == largest compiled batch bucket
     pub slot_count: usize,
 }
@@ -227,7 +282,56 @@ impl Scheduler {
             samp_dirty: true,
             fused_enabled: true,
             fused_admission: true,
+            prefix: None,
+            chunked: None,
             slot_count,
+        }
+    }
+
+    /// Enable the device-resident prefix cache with a payload byte
+    /// budget. Requires the positioned prefill family in the artifacts
+    /// (the cache splices block-aligned snapshots and prefills only the
+    /// uncached tail); returns false — cache stays off — without it.
+    pub fn enable_prefix_cache(&mut self, budget_bytes: u64) -> bool {
+        match self.engine.chunk_block() {
+            Some(block) => {
+                self.prefix =
+                    Some(PrefixCache::new(block, budget_bytes));
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// The cache's block size when the prefix cache is on (what the
+    /// shard router needs for prefix-affine placement — its directory
+    /// must hash prompt opening blocks exactly like the cache does).
+    pub fn prefix_block(&self) -> Option<usize> {
+        if self.prefix.is_some() {
+            self.engine.chunk_block()
+        } else {
+            None
+        }
+    }
+
+    /// The prompt-length capacity admission should enforce (the
+    /// router's `max_prompt`): the full compiled context when the
+    /// chunked path can serve over-bucket prompts, else the largest
+    /// single-dispatch prefill bucket — beyond which the request must
+    /// be rejected with a typed `invalid_request`, never snapped.
+    pub fn max_prompt_capacity(&self) -> usize {
+        let max_seq = self.engine.config().max_seq;
+        if self.prefix.is_some() && self.engine.can_chunk_prefill() {
+            max_seq
+        } else {
+            self.engine
+                .single_shot_prompt_cap()
+                .unwrap_or(max_seq)
+                .min(max_seq)
         }
     }
 
@@ -249,6 +353,12 @@ impl Scheduler {
         let mut worked = self.process_cancellations(on_event)?;
         worked |= self.run_score(on_event);
         worked |= self.admit_from_queue(on_event)?;
+        // one chunk of the in-flight chunked admission per tick,
+        // BETWEEN admission and decode: a freshly started machine runs
+        // its first chunk immediately, and every later tick interleaves
+        // one chunk with one decode tick (bounded ITL under long-prompt
+        // admission)
+        worked |= self.advance_chunked(on_event)?;
         if self.pool.is_empty() {
             return Ok(worked);
         }
@@ -312,7 +422,15 @@ impl Scheduler {
         }
         let mut worked = false;
         for id in ids {
-            if let Some(slot) = self.pool.slot_of(id) {
+            if self.chunked.as_ref().is_some_and(|c| c.req.id == id) {
+                // mid-chunking cancel: drop the machine, release its
+                // cache ref (the entry itself survives for future hits)
+                let mut ca = self.chunked.take().unwrap();
+                self.release_ref(ca.cache_ref.take());
+                self.engine.metrics.requests_cancelled.inc();
+                on_event(EngineEvent::Done(cancelled_response(&ca.req)));
+                worked = true;
+            } else if let Some(slot) = self.pool.slot_of(id) {
                 self.retire_slot(slot, FinishReason::Cancelled, on_event)?;
                 worked = true;
             } else if let Some(req) = self.router.remove_queued(id) {
@@ -371,7 +489,8 @@ impl Scheduler {
                       on_event: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         let msg = format!("{err:#}");
         for slot in self.pool.occupied_indices() {
-            let entry = self.pool.retire(slot)?;
+            let mut entry = self.pool.retire(slot)?;
+            self.release_ref(entry.cache_ref.take());
             self.cur[slot] = PAD_ID;
             if let Some(state) = self.state.as_mut() {
                 state.pos[slot] = 0;
@@ -411,18 +530,32 @@ impl Scheduler {
 
     /// Pull queue-head requests that match the active mode into free
     /// slots. Returns true if anything was admitted.
+    ///
+    /// With the prefix cache enabled, admission serializes to one
+    /// request per tick so each can be routed individually: prompts
+    /// longer than one cache block whose sampler is fused-eligible go
+    /// through the chunked machine (cache consult + splice + tail
+    /// prefill); short prompts keep the legacy batch path; over-bucket
+    /// prompts that CANNOT chunk (host-path samplers) are rejected with
+    /// a typed `invalid_request` — never silently snapped to a bucket.
+    /// While the machine is in flight no new admissions start (it holds
+    /// the admission gate; free slots can only grow under it).
     fn admit_from_queue(&mut self, on_event: &mut dyn FnMut(EngineEvent))
                         -> Result<bool> {
+        if self.chunked.is_some() {
+            return Ok(false);
+        }
         let free = self.pool.free_indices();
         if free.is_empty() {
             return Ok(false);
         }
+        let take_n = if self.prefix.is_some() { 1 } else { free.len() };
         let reqs = {
             let engine = &self.engine;
             let batch = self.slot_count;
             self.router.take_compatible_with(
                 self.pool.active_mode(),
-                free.len(),
+                take_n,
                 |a, b| engine.modes_batchable(batch, a, b),
             )
         };
@@ -434,8 +567,92 @@ impl Scheduler {
             // so no staleness check is needed here — just adopt the mode
             self.pool.set_mode(reqs[0].mode);
         }
-        self.prefill_into_slots(&reqs, &free[..reqs.len()], on_event)?;
+        if self.prefix.is_some() {
+            let req = reqs.into_iter().next().unwrap();
+            if self.chunk_route(&req) {
+                self.start_chunked(req, on_event)?;
+                return Ok(true);
+            }
+            let cap = self
+                .engine
+                .single_shot_prompt_cap()
+                .unwrap_or(self.engine.config().max_seq);
+            if req.prompt.len() > cap {
+                // over-bucket prompt that cannot ride the chunked path
+                // (host-path sampler): typed rejection at admission
+                self.reject_over_cap(req, cap, on_event);
+                return Ok(true);
+            }
+            self.prefill_into_slots(&[req], &free[..1], on_event)?;
+            return Ok(true);
+        }
+        // cache off: the single-shot dispatch is the only prefill, and
+        // a prompt past its largest bucket must be REJECTED here with a
+        // typed error — never silently snapped to the bucket (the
+        // engine would truncate the prompt) and never allowed through
+        // to fail the whole co-admitted batch at pack time
+        let cap = self
+            .engine
+            .single_shot_prompt_cap()
+            .unwrap_or(self.engine.config().max_seq);
+        let (fit, over): (Vec<_>, Vec<_>) =
+            reqs.into_iter().partition(|r| r.prompt.len() <= cap);
+        for req in over {
+            self.reject_over_cap(req, cap, on_event);
+        }
+        if fit.is_empty() {
+            return Ok(true);
+        }
+        if self.pool.is_empty() {
+            // re-pin the mode from an ADMITTED request (the first taken
+            // request may just have been rejected above)
+            self.pool.set_mode(fit[0].mode);
+        }
+        self.prefill_into_slots(&fit, &free[..fit.len()], on_event)?;
         Ok(true)
+    }
+
+    /// Typed admission rejection for a prompt past the largest
+    /// single-dispatch prefill bucket (and not chunk-prefillable).
+    fn reject_over_cap(&mut self, req: GenRequest, cap: usize,
+                       on_event: &mut dyn FnMut(EngineEvent)) {
+        self.engine.metrics.requests_rejected.inc();
+        on_event(EngineEvent::Error {
+            id: req.id,
+            code: ErrorCode::InvalidRequest,
+            message: format!(
+                "prompt of {} tokens exceeds the largest \
+                 single-dispatch prefill bucket ({cap}) and the \
+                 request is not eligible for chunked prefill",
+                req.prompt.len()
+            ),
+        });
+    }
+
+    /// Should this request admit through the chunked machine? Yes when
+    /// the cache is on, the prompt extends past one block (so a
+    /// block-aligned prefix exists to hit or publish), and the sampler
+    /// can sample on device under BOTH the positioned prefill family's
+    /// cap (the final chunk samples the first token) and the decode
+    /// family's (the slot needs a device-stream mirror).
+    fn chunk_route(&self, req: &GenRequest) -> bool {
+        let Some(cache) = self.prefix.as_ref() else { return false };
+        if req.prompt.len() <= cache.block()
+            || req.prompt.len() > self.engine.config().max_seq
+        {
+            return false;
+        }
+        let decode_ok = self
+            .engine
+            .fused_decode_spec(self.slot_count, None)
+            .and_then(|s| s.sample_topk)
+            .is_some_and(|cap| {
+                crate::sampling::fused_eligible(req.sampler, cap)
+            });
+        let prefill_ok = self.engine.chunked_prefill_cap().is_some_and(
+            |cap| crate::sampling::fused_eligible(req.sampler, cap),
+        );
+        decode_ok && prefill_ok
     }
 
     /// Prefill a batch of newly admitted requests and install each into
@@ -690,6 +907,358 @@ impl Scheduler {
             if let Some(reason) = finished {
                 self.retire_slot(slot, reason, on_event)?;
             }
+        }
+        self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // chunked admission (prefix cache + over-bucket prompts)
+    // ------------------------------------------------------------------
+
+    /// Release a held prefix-cache ref (no-op without a key or cache).
+    fn release_ref(&mut self, key: Option<PrefixKey>) {
+        if let (Some(k), Some(cache)) = (key, self.prefix.as_mut()) {
+            cache.release(k);
+        }
+    }
+
+    /// Start the chunked admission machine for one routed request:
+    /// consult the prefix cache (a hit seeds the chunk state from the
+    /// entry's device-resident tensors and acquires its ref; a miss
+    /// starts from the shared zero templates), then plan the positioned
+    /// chunks covering the uncached tail. The first chunk dispatches on
+    /// this same tick (`advance_chunked` runs right after admission).
+    fn start_chunked(&mut self, req: GenRequest,
+                     on_event: &mut dyn FnMut(EngineEvent))
+                     -> Result<()> {
+        self.engine.metrics.queue_wait.record(req.admitted_at.elapsed());
+        if self.state.is_none() {
+            match self.engine.new_decode_state(self.slot_count) {
+                Ok(s) => self.state = Some(s),
+                Err(e) => {
+                    self.fail_admission(
+                        std::slice::from_ref(&req), &e, on_event);
+                    return Ok(());
+                }
+            }
+        }
+        let m = self.engine.metrics.clone();
+        let hit = self
+            .prefix
+            .as_mut()
+            .unwrap()
+            .acquire(&req.prompt)
+            .map(|h| (h.key, h.payload.clone()));
+        let (state, cache_ref, info) = match hit {
+            Some((key, st)) => {
+                m.prefix_cache_hits.inc();
+                m.prefix_tokens_reused.add(key.prefix_len as u64);
+                // what the hit keeps off the host boundary: the token
+                // bytes of the prefix chunks a cold admission would
+                // have staged (the KV itself never crosses either way)
+                m.prefix_bytes_saved.add(key.prefix_len as u64 * 4);
+                let info = CacheInfo {
+                    prefix_tokens: key.prefix_len,
+                    hit: true,
+                };
+                (st, Some(key), info)
+            }
+            None => {
+                m.prefix_cache_misses.inc();
+                let st = match self.engine.new_chunk_state() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        self.fail_admission(
+                            std::slice::from_ref(&req), &e, on_event);
+                        return Ok(());
+                    }
+                };
+                (st, None, CacheInfo { prefix_tokens: 0, hit: false })
+            }
+        };
+        let plan = match self
+            .engine
+            .plan_chunks(state.filled, req.prompt.len())
+        {
+            Ok(p) => p,
+            Err(e) => {
+                self.release_ref(cache_ref);
+                self.fail_admission(
+                    std::slice::from_ref(&req), &e, on_event);
+                return Ok(());
+            }
+        };
+        // chunk_route guaranteed a fused decode cap for the mirror
+        let Some(cap) = self
+            .engine
+            .fused_decode_spec(self.slot_count, None)
+            .and_then(|s| s.sample_topk)
+        else {
+            self.release_ref(cache_ref);
+            self.fail_admission(
+                std::slice::from_ref(&req),
+                &anyhow::anyhow!("chunked admission without a fused \
+                                  decode cap"),
+                on_event,
+            );
+            return Ok(());
+        };
+        let mirror = DeviceSampler::with_cap(req.sampler, req.seed, cap);
+        self.chunked = Some(ChunkedAdmission {
+            req,
+            state,
+            plan,
+            next: 0,
+            mirror: Some(mirror),
+            cache_ref,
+            info,
+            prefill_ms: 0.0,
+        });
+        Ok(())
+    }
+
+    /// Dispatch ONE positioned chunk of the in-flight chunked
+    /// admission. Intermediate chunks run a discarded greedy dummy
+    /// sampling lane; the final chunk samples the request's first token
+    /// through its mirror stream (one `skip` keeps the mirror in
+    /// lockstep — the dummy lanes never consume the stream). The state
+    /// right before the final chunk is the block-aligned snapshot the
+    /// prefix cache publishes. Byte deltas of each dispatch land in
+    /// `admission_bytes_to_{device,host}` — a warm hit's total is
+    /// bounded by its TAIL, never the whole prompt.
+    fn advance_chunked(&mut self,
+                       on_event: &mut dyn FnMut(EngineEvent))
+                       -> Result<bool> {
+        let Some(mut ca) = self.chunked.take() else {
+            return Ok(false);
+        };
+        let m = self.engine.metrics.clone();
+        let (up0, down0) = (
+            m.host_bytes_to_device.get(),
+            m.host_bytes_to_host.get(),
+        );
+        let t = Instant::now();
+        let len = ca.req.prompt.len();
+        let last = ca.next + 1 == ca.plan.len();
+        let from = ca.state.filled;
+        let valid = if last { len - from } else { ca.plan[ca.next] };
+        let chunk = &ca.req.prompt[from..from + valid];
+        let lane = if last {
+            let mm = ca.mirror.as_ref().unwrap();
+            Some((mm.spec, mm.state()))
+        } else {
+            None
+        };
+        let res = self.engine.prefill_chunk(&mut ca.state, chunk, lane);
+        ca.prefill_ms += t.elapsed().as_secs_f64() * 1e3;
+        m.admission_bytes_to_device
+            .add(m.host_bytes_to_device.get() - up0);
+        m.admission_bytes_to_host
+            .add(m.host_bytes_to_host.get() - down0);
+        match res {
+            Err(e) => {
+                self.release_ref(ca.cache_ref.take());
+                self.fail_admission(
+                    std::slice::from_ref(&ca.req), &e, on_event);
+                Ok(true)
+            }
+            Ok((tok, lp)) => {
+                ca.next += 1;
+                if !last {
+                    if ca.next + 1 == ca.plan.len() {
+                        // at the last block boundary: publish the
+                        // snapshot BEFORE the final chunk extends it
+                        self.publish_prefix(&mut ca);
+                    }
+                    self.chunked = Some(ca);
+                    Ok(true)
+                } else {
+                    // the device sampled this lane's first token — one
+                    // RNG advance — keep the mirror in lockstep
+                    ca.mirror.as_mut().unwrap().skip();
+                    self.finish_chunked(ca, tok, lp, on_event)?;
+                    Ok(true)
+                }
+            }
+        }
+    }
+
+    /// Publish the machine's current block-aligned state as a prefix-
+    /// cache entry (cold admissions and warm hits that extended past
+    /// their seed boundary). A cold admission retains its own snapshot
+    /// so the slot's lifetime pins the entry like a warm hit's ref
+    /// would; a warm one keeps holding its original (shorter) seed ref.
+    fn publish_prefix(&mut self, ca: &mut ChunkedAdmission) {
+        let Some(cache) = self.prefix.as_mut() else { return };
+        let plen = ca.state.filled;
+        let block = cache.block();
+        let Some((_, hash)) = chain_hashes(&ca.req.prompt, block)
+            .into_iter()
+            .find(|&(l, _)| l == plen)
+        else {
+            return;
+        };
+        let key = PrefixKey { prefix_len: plen, hash };
+        if cache.contains(key) {
+            return;
+        }
+        let ev0 = cache.evictions();
+        let inserted = cache.insert(
+            key,
+            ca.req.prompt[..plen].to_vec(),
+            ca.state.clone(),
+            ca.state.payload_bytes(),
+        );
+        let m = &self.engine.metrics;
+        if inserted {
+            m.prefix_cache_inserts.inc();
+            if ca.cache_ref.is_none() && cache.retain(key) {
+                ca.cache_ref = Some(key);
+            }
+        }
+        m.prefix_cache_evictions.add(cache.evictions() - ev0);
+        m.prefix_cache_bytes.set(cache.bytes());
+    }
+
+    /// Final chunk done: derive the selection statistics from the
+    /// running sums, splice the completed KV rows into a free slot via
+    /// the compiled device-to-device splice, and install the slot entry
+    /// exactly like a legacy admission (first token event at index 0,
+    /// TTFT, mirror as stream source of truth). The cache ref moves
+    /// onto the slot entry and is released at retirement.
+    fn finish_chunked(&mut self, mut ca: ChunkedAdmission, t: i32,
+                      lp: f32, on_event: &mut dyn FnMut(EngineEvent))
+                      -> Result<()> {
+        let req = ca.req.clone();
+        let m = self.engine.metrics.clone();
+        let needs = StatNeeds::for_mode(&req.mode);
+        let (up0, down0) = (
+            m.host_bytes_to_device.get(),
+            m.host_bytes_to_host.get(),
+        );
+        let derived = self.engine.chunk_stats(&ca.state, needs);
+        let (stats, xnorms, znorms) = match derived {
+            Ok(v) => v,
+            Err(e) => {
+                self.release_ref(ca.cache_ref.take());
+                self.fail_admission(
+                    std::slice::from_ref(&req), &e, on_event);
+                return Ok(());
+            }
+        };
+        let free = self.pool.free_indices();
+        let Some(&slot) = free.first() else {
+            // the machine holds the admission gate, so free slots can
+            // only grow while it runs — an empty pool here is a bug
+            self.release_ref(ca.cache_ref.take());
+            bail!("chunked admission completed with no free slot");
+        };
+        let splice = self.engine.splice_rows(
+            self.state.as_mut().unwrap(),
+            &ca.state.kcache,
+            &ca.state.vcache,
+            &[ca.state.filled as i32],
+            &[(0, slot)],
+        );
+        m.admission_bytes_to_device
+            .add(m.host_bytes_to_device.get() - up0);
+        m.admission_bytes_to_host
+            .add(m.host_bytes_to_host.get() - down0);
+        if let Err(e) = splice {
+            // the entry survives a failed splice: the ref is released,
+            // no slot was occupied, and the next identical prompt can
+            // still hit it
+            self.release_ref(ca.cache_ref.take());
+            self.fail_admission(std::slice::from_ref(&req), &e, on_event);
+            return Ok(());
+        }
+        if self.pool.is_empty() {
+            self.pool.set_mode(req.mode);
+        }
+        let mut seq = Sequence::new(req.clone());
+        seq.slot = Some(slot);
+        seq.advance(Phase::Prefilling);
+        let mut entry = SlotEntry::new(
+            seq,
+            Sampler::new(req.sampler, req.seed),
+            req.prompt.len(),
+        );
+        entry.prefill_ms = ca.prefill_ms;
+        entry.device_mirror = ca.mirror.take();
+        entry.cache_ref = ca.cache_ref.take();
+        entry.cache_info = Some(ca.info);
+
+        let sel_t = Instant::now();
+        let selected: Result<()> = (|| {
+            match req.mode {
+                Mode::Griffin { keep, strategy } => {
+                    entry.seq.advance(Phase::Selecting);
+                    let stats = stats
+                        .clone()
+                        .context("griffin admission without stats")?;
+                    let keep =
+                        self.engine.bucket_keep(self.slot_count, keep)?;
+                    entry.expert_idx = Some(
+                        self.engine.select(&stats, keep, strategy)?);
+                    entry.stats = Some(stats);
+                    entry.seq.advance(Phase::Decoding);
+                }
+                Mode::Wanda { .. } => {
+                    entry.xnorm = xnorms.clone();
+                    entry.znorm = znorms.clone();
+                    if entry.xnorm.is_none() || entry.znorm.is_none() {
+                        bail!("wanda admission without norms");
+                    }
+                    entry.seq.advance(Phase::Decoding);
+                }
+                Mode::Full | Mode::Magnitude { .. } => {
+                    entry.seq.advance(Phase::Decoding);
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = selected {
+            self.release_ref(entry.cache_ref.take());
+            self.engine.metrics.requests_failed.inc();
+            on_event(EngineEvent::Error {
+                id: req.id,
+                code: ErrorCode::EngineError,
+                message: format!("{e:#}"),
+            });
+            return Ok(());
+        }
+        entry.select_ms = sel_t.elapsed().as_secs_f64() * 1e3;
+
+        entry.seq.generated.push(t);
+        entry.seq.logprobs.push(lp);
+        entry.last_token = t;
+        entry.last_token_at = Instant::now();
+        entry.seq.advance(Phase::Streaming);
+        if let Some(d) = entry.seq.ttft() {
+            self.engine.metrics.ttft.record(d);
+        }
+        self.engine.metrics.tokens_generated.add(1);
+        self.cur[slot] = t;
+        let finished = if req.stop_at_eos && t == EOS_ID {
+            Some(FinishReason::Eos)
+        } else if req.max_new_tokens <= 1 {
+            Some(FinishReason::Length)
+        } else {
+            None
+        };
+        let text = self.engine.tokenizer.decode(&[t]);
+        on_event(EngineEvent::Token {
+            id: req.id,
+            index: 0,
+            token: t,
+            text,
+        });
+        self.pool.assign(slot, entry)?;
+        self.shared.dirty = true;
+        self.samp_dirty = true;
+        if let Some(reason) = finished {
+            self.retire_slot(slot, reason, on_event)?;
         }
         self.engine.metrics.slots_busy.set(self.pool.occupied() as u64);
         Ok(())
@@ -1117,6 +1686,7 @@ impl Scheduler {
         on_event: &mut dyn FnMut(EngineEvent),
     ) -> Result<()> {
         let mut entry = self.pool.retire(slot)?;
+        self.release_ref(entry.cache_ref.take());
         entry.seq.finish(reason);
         self.cur[slot] = PAD_ID;
         self.samp_dirty = true;
@@ -1148,7 +1718,8 @@ impl Scheduler {
 
     fn response_from(&self, entry: SlotEntry) -> Result<GenResponse> {
         let SlotEntry { seq, prefill_ms, select_ms, expert_idx,
-                        spec_proposed, spec_accepted, .. } = entry;
+                        spec_proposed, spec_accepted, cache_info, .. } =
+            entry;
         let decode_s = match (seq.first_token_at, seq.finished_at) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
@@ -1222,6 +1793,7 @@ impl Scheduler {
                 proposed: spec_proposed,
                 accepted: spec_accepted,
             }),
+            cache: cache_info,
             prefill_ms,
             select_ms,
             decode_ms: decode_s * 1e3,

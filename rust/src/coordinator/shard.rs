@@ -16,21 +16,35 @@
 //!    and processes), so a client's requests share one shard's KV/gather
 //!    locality. Affine requests never spill on backpressure (the home
 //!    queue's `queue_full` is the honest answer) and are never moved by
-//!    work stealing. If the home shard is poisoned, affinity is void —
-//!    its engine (and any session locality) is gone — and the request
-//!    places least-loaded instead.
-//! 2. **Least-loaded** — sessionless requests go to the healthy shard
+//!    work stealing. If the home shard is down, the session falls back
+//!    DETERMINISTICALLY to the next healthy shard ring-wise from its
+//!    home index — every request of that session agrees on the same
+//!    successor, so the fallback shard accumulates the session's warm
+//!    state instead of the session scattering least-loaded per admit.
+//! 2. **Prefix affinity** — when the engines run a prefix cache (the
+//!    router is built `with_prefix_block`), a sessionless request whose
+//!    prompt spans at least one full cache block prefers the shard
+//!    recorded in the prefix directory for its first-block hash: the
+//!    shard that most recently admitted a prompt with that opening
+//!    block, and therefore the shard whose device-resident cache can
+//!    splice it. Preference, not pinning — if the directory shard is
+//!    full or shedding the request spills like any sessionless work,
+//!    and the directory is re-pointed at wherever it lands.
+//! 3. **Least-loaded** — sessionless requests go to the healthy shard
 //!    with the smallest load (occupied slots + queue depth), lowest
 //!    index winning ties (deterministic placement, testable). On
 //!    `queue_full` they spill to the next-least-loaded healthy shard;
 //!    only when EVERY healthy queue is full does admission fail, with
 //!    the fleet-wide capacity in the error.
-//! 3. **Work stealing** — after each admission (and on demand via
+//! 4. **Work stealing** — after each admission (and on demand via
 //!    [`ShardRouter::rebalance`]) idle shards steal queued work from the
 //!    back of the deepest queue: only sessionless, cancel-unflagged
-//!    requests move, and a moved request keeps its id and admission
-//!    timestamp — stealing relocates work, it never re-admits it, so a
-//!    request is admitted exactly once fleet-wide.
+//!    requests whose prefix directory entry does NOT map to the victim
+//!    move (stealing a prefix-affine request off the shard holding its
+//!    cached KV would turn a warm hit into a cold prefill), and a moved
+//!    request keeps its id and admission timestamp — stealing relocates
+//!    work, it never re-admits it, so a request is admitted exactly
+//!    once fleet-wide.
 //!
 //! Fault containment boundary: a poisoned shard (engine construction or
 //! serve-loop failure) flips `healthy` off, retires its own queue with
@@ -47,8 +61,11 @@
 //! *down-kept* — snapped to a lower keep fraction, with the client's
 //! original ask recorded in the response's `prune` provenance — and
 //! under heavy pressure admission *sheds* with a retryable `overloaded`
-//! error carrying `retry_after_ms`. Dual enter/exit thresholds give the
-//! dial hysteresis so it cannot flap on a noisy load signal.
+//! error whose `retry_after_ms` scales with the backlog of the shard(s)
+//! that actually refused the request — not the fleet sum, which would
+//! let a busy-but-admitting peer inflate the backoff of a shed that it
+//! took no part in. Dual enter/exit thresholds give the dial hysteresis
+//! so it cannot flap on a noisy load signal.
 //!
 //! The controller stage is PER SHARD: the shared pooled-capacity
 //! utilization term is max'd with each shard's OWN rolling-p99
@@ -59,11 +76,12 @@
 //! only a session-affine request (pinned to its slow home) or a fleet
 //! where EVERY target sheds sees the `overloaded` error.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::coordinator::prefix_cache::first_block_hash;
 use crate::coordinator::router::{AdmitError, Router};
 use crate::coordinator::sequence::{GenRequest, RequestId, ScoreRequest};
 use crate::coordinator::types::Mode;
@@ -76,6 +94,11 @@ const STEAL_MIN_DEPTH: usize = 2;
 /// How many recently-cancelled request ids the router remembers for the
 /// cancel-after-steal closure (see [`ShardRouter::request_cancel`]).
 const CANCEL_RING_CAPACITY: usize = 256;
+
+/// Bound on the prefix directory (first-block hash → shard). Oldest
+/// entries fall out first; a dropped entry only costs a cold prefill on
+/// the next reuse, so a small bound is safe.
+const PREFIX_DIRECTORY_CAPACITY: usize = 1024;
 
 /// One engine shard's admission-side state. The engine thread publishes
 /// its load (`slots_busy`) every serve-loop iteration and its metrics
@@ -265,6 +288,20 @@ pub struct ShardRouter {
     /// drain once per tick); re-flagging from this ring after every
     /// cross-shard move closes that race.
     recent_cancels: Mutex<VecDeque<RequestId>>,
+    /// prefix-cache block size the engines run with (0 = off). Atomic
+    /// because the engines exist only after their shard threads boot:
+    /// the first ready shard publishes the block, flipping placement
+    /// rule 2 on for every admission after it
+    prefix_block: AtomicU64,
+    /// first-block hash → shard that last admitted a prompt opening
+    /// with that block (map + insertion ring for the size bound)
+    prefix_dir: Mutex<PrefixDirectory>,
+}
+
+#[derive(Default)]
+struct PrefixDirectory {
+    map: HashMap<u64, usize>,
+    ring: VecDeque<u64>,
 }
 
 /// FNV-1a, the session-placement hash. Stable across runs, processes,
@@ -294,6 +331,31 @@ impl ShardRouter {
             slo: SloPolicy::default(),
             pressure: Mutex::new(vec![Pressure::Nominal; n_shards]),
             recent_cancels: Mutex::new(VecDeque::new()),
+            prefix_block: AtomicU64::new(0),
+            prefix_dir: Mutex::new(PrefixDirectory::default()),
+        }
+    }
+
+    /// Enable prefix-affine placement (builder style; tests). The
+    /// server publishes the block post-construction with
+    /// [`ShardRouter::set_prefix_block`] once an engine exists.
+    pub fn with_prefix_block(self, block: Option<usize>) -> ShardRouter {
+        self.set_prefix_block(block);
+        self
+    }
+
+    /// Publish the prefix-cache block size the shard engines run with,
+    /// so placement hashes prompt opening blocks exactly the way the
+    /// engine caches do. `None` (or zero) leaves the directory off.
+    pub fn set_prefix_block(&self, block: Option<usize>) {
+        self.prefix_block
+            .store(block.unwrap_or(0) as u64, Ordering::Relaxed);
+    }
+
+    fn prefix_block(&self) -> Option<usize> {
+        match self.prefix_block.load(Ordering::Relaxed) {
+            0 => None,
+            b => Some(b as usize),
         }
     }
 
@@ -400,9 +462,77 @@ impl ShardRouter {
     }
 
     /// Deterministic client backoff hint for a shed admission: scales
-    /// with the fleet backlog, clamped to a sane band.
-    fn retry_after_ms(&self) -> u64 {
-        (50 + 20 * self.queue_depth() as u64).min(2_000)
+    /// with the backlog of the shard(s) that actually refused this
+    /// request, clamped to a sane band. Shed is a per-shard decision,
+    /// so the hint must be too — summing the fleet's queues would let a
+    /// busy-but-admitting peer (whose backlog this client will never
+    /// wait behind) inflate the backoff. The least-backlogged refuser
+    /// bounds the wait: that is the first queue a retry could land in.
+    fn retry_after_ms(&self, refusing: &[usize]) -> u64 {
+        let depth = refusing
+            .iter()
+            .map(|&i| self.shards[i].router.len())
+            .min()
+            .unwrap_or(0);
+        (50 + 20 * depth as u64).min(2_000)
+    }
+
+    /// The first-block hash that keys prefix-affine placement for this
+    /// request, when the directory is on and the prompt is long enough
+    /// to benefit (a cache hit needs a strict prefix, so a prompt of
+    /// one block or less never splices — don't pin it anywhere).
+    fn prefix_hash(&self, req: &GenRequest) -> Option<u64> {
+        let block = self.prefix_block()?;
+        if req.prompt.len() <= block {
+            return None;
+        }
+        first_block_hash(&req.prompt, block)
+    }
+
+    /// Directory shard for a first-block hash, if it is still in
+    /// placement (a poisoned shard's cache died with its engine — the
+    /// stale entry is ignored and re-pointed on the next admission).
+    fn prefix_lookup(&self, hash: u64) -> Option<usize> {
+        self.prefix_dir
+            .lock()
+            .unwrap()
+            .map
+            .get(&hash)
+            .copied()
+            .filter(|&i| self.shards[i].is_healthy())
+    }
+
+    /// Point a first-block hash at the shard that just admitted it.
+    fn prefix_record(&self, hash: u64, shard: usize) {
+        let mut dir = self.prefix_dir.lock().unwrap();
+        if dir.map.insert(hash, shard).is_none() {
+            dir.ring.push_back(hash);
+            if dir.ring.len() > PREFIX_DIRECTORY_CAPACITY {
+                if let Some(old) = dir.ring.pop_front() {
+                    dir.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Whether stealing this request off `shard` would strand it away
+    /// from its cached prefix.
+    fn prefix_pinned_to(&self, req: &GenRequest, shard: usize) -> bool {
+        self.prefix_hash(req).and_then(|h| self.prefix_lookup(h))
+            == Some(shard)
+    }
+
+    /// Deterministic fallback order for a session whose home shard is
+    /// out of placement: healthy shards ring-wise from the home index.
+    /// Every admission of the session computes the same ring, so they
+    /// all land on the same successor (given stable health states) and
+    /// the session's locality re-forms there — instead of scattering
+    /// across the fleet as each admit chases the load snapshot.
+    fn successors(&self, home: usize) -> Vec<usize> {
+        (1..self.shards.len())
+            .map(|k| (home + k) % self.shards.len())
+            .filter(|&i| self.shards[i].is_healthy())
+            .collect()
     }
 
     /// Degrade stage: snap a prunable request's keep fraction down to
@@ -485,6 +615,12 @@ impl ShardRouter {
             if self.shards[home].is_healthy() {
                 return Some(home);
             }
+            return self.successors(home).into_iter().next();
+        }
+        if let Some(i) = self.prefix_hash(req)
+            .and_then(|h| self.prefix_lookup(h))
+        {
+            return Some(i);
         }
         self.healthy_by_load().into_iter().next()
     }
@@ -499,6 +635,13 @@ impl ShardRouter {
         if req.id == 0 {
             req.id = self.fresh_id();
         }
+        // session affinity outranks prefix affinity: a session already
+        // owns a home with its KV locality, the directory only guides
+        // sessionless work toward warm caches
+        let prefix = match &req.session {
+            Some(_) => None,
+            None => self.prefix_hash(&req),
+        };
         let targets: Vec<usize> = match &req.session {
             Some(key) => {
                 let home = self.home_shard(key);
@@ -507,11 +650,24 @@ impl ShardRouter {
                     // backpressure is the honest answer
                     vec![home]
                 } else {
-                    // home engine (and its session locality) is gone
-                    self.healthy_by_load()
+                    // home engine (and its session locality) is gone;
+                    // fall back deterministically so the session
+                    // re-forms on ONE successor (placement rule 1)
+                    self.successors(home)
                 }
             }
-            None => self.healthy_by_load(),
+            None => {
+                let mut order = self.healthy_by_load();
+                if let Some(i) =
+                    prefix.and_then(|h| self.prefix_lookup(h))
+                {
+                    // prefix affinity: try the shard holding the
+                    // cached prefix first, spill least-loaded after
+                    order.retain(|&j| j != i);
+                    order.insert(0, i);
+                }
+                order
+            }
         };
         if targets.is_empty() {
             return Err(AdmitError::NoHealthyShards);
@@ -522,6 +678,7 @@ impl ShardRouter {
         // the way a full queue is — sessionless work spills to a
         // healthy peer, only affine work eats its slow home's refusal
         let util = self.utilization();
+        let mut refusing: Vec<usize> = Vec::new();
         let mut all_shed = true;
         for &i in &targets {
             let shard = &self.shards[i];
@@ -529,7 +686,10 @@ impl ShardRouter {
             match self.eval_pressure_for(i, util) {
                 Pressure::Nominal => {}
                 Pressure::Degrade => downkept = self.downkeep(&mut req),
-                Pressure::Shed => continue,
+                Pressure::Shed => {
+                    refusing.push(i);
+                    continue;
+                }
             }
             all_shed = false;
             match shard.router.admit(req.clone()) {
@@ -550,6 +710,9 @@ impl ShardRouter {
                             m.requests_downkept.inc();
                         }
                     }
+                    if let Some(h) = prefix {
+                        self.prefix_record(h, i);
+                    }
                     self.reflag_if_cancelled(shard, id);
                     self.rebalance();
                     return Ok((id, i));
@@ -560,9 +723,10 @@ impl ShardRouter {
         }
         if all_shed {
             // every shard this request could land on is shedding — only
-            // now is `overloaded` the honest fleet-level answer
+            // now is `overloaded` the honest fleet-level answer, with
+            // the backoff derived from the refusers' own backlogs
             return Err(AdmitError::Overloaded {
-                retry_after_ms: self.retry_after_ms(),
+                retry_after_ms: self.retry_after_ms(&refusing),
             });
         }
         Err(AdmitError::QueueFull { capacity: self.capacity() })
@@ -584,9 +748,11 @@ impl ShardRouter {
         // work-bearing and a shedding shard refuses them like anything
         // else — they just spill past it to a healthy peer first
         let util = self.utilization();
+        let mut refusing: Vec<usize> = Vec::new();
         let mut all_shed = true;
         for &i in &targets {
             if self.eval_pressure_for(i, util) == Pressure::Shed {
+                refusing.push(i);
                 continue;
             }
             all_shed = false;
@@ -598,7 +764,7 @@ impl ShardRouter {
         }
         if all_shed {
             return Err(AdmitError::Overloaded {
-                retry_after_ms: self.retry_after_ms(),
+                retry_after_ms: self.retry_after_ms(&refusing),
             });
         }
         Err(AdmitError::QueueFull { capacity: self.capacity() })
@@ -631,7 +797,9 @@ impl ShardRouter {
     /// One stealing pass (also run after every sessionless admission):
     /// while some healthy shard is fully idle and another healthy
     /// shard's queue is deep, move the deep queue's newest sessionless
-    /// request to the idle shard. A shard whose own latency signal
+    /// request to the idle shard — skipping requests whose prefix
+    /// directory entry maps to the victim (their cached prefix lives
+    /// there; moving them trades a warm splice for a cold prefill). A shard whose own latency signal
     /// reads shed-worthy never steals — placement just routed work
     /// around it, and stealing it back would undo the per-shard SLO
     /// isolation. Also evacuates anything stranded in a poisoned
@@ -671,10 +839,12 @@ impl ShardRouter {
             else {
                 break;
             };
-            let Some(r) =
-                victim.router.steal_newest(|r| r.session.is_none())
-            else {
-                break; // deep queue is all session-affine work
+            let Some(r) = victim.router.steal_newest(|r| {
+                r.session.is_none()
+                    && !self.prefix_pinned_to(r, victim.index)
+            }) else {
+                break; // deep queue is all affine work (session- or
+                       // prefix-pinned to the victim's warm cache)
             };
             let id = r.id;
             thief.router.push_stolen(r);
@@ -1164,6 +1334,137 @@ mod tests {
         assert!(s.is_parked() && !s.is_healthy());
         assert_eq!(sr.healthy_count(), 1);
         assert_eq!(sr.place(&req()), Some(1));
+    }
+
+    #[test]
+    fn affinity_fallback_is_deterministic_under_park() {
+        let sr = ShardRouter::new(4, 64, 128);
+        let home = 1;
+        let key = (0..100)
+            .map(|i| format!("s{i}"))
+            .find(|k| sr.home_shard(k) == home)
+            .unwrap();
+        sr.shard(home).park();
+        // load the ring-wise successor heavier than every other shard:
+        // the fallback must STILL pick it — deterministic next-healthy
+        // by hash, not least-loaded-per-admit (which would scatter the
+        // session across the fleet as the load snapshot drifts)
+        let succ = 2;
+        sr.shard(succ).publish_load(6, 8);
+        for _ in 0..5 {
+            let (_, at) = sr.admit(sreq(&key)).unwrap();
+            assert_eq!(at, succ, "one successor for the whole session");
+        }
+        assert_eq!(sr.shard(succ).router.len(), 5);
+        // the successor dies too: the ring walks on deterministically
+        sr.shard(succ).park();
+        assert_eq!(sr.place(&sreq(&key)), Some(3));
+        let (_, at) = sr.admit(sreq(&key)).unwrap();
+        assert_eq!(at, 3);
+        // home revives: affinity snaps straight back
+        sr.shard(home).revive();
+        let (_, at) = sr.admit(sreq(&key)).unwrap();
+        assert_eq!(at, home);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_refusing_shard_not_fleet() {
+        use crate::metrics::MetricsRegistry;
+        use std::time::Duration;
+        let sr = ShardRouter::new(2, 64, 128);
+        // build a backlog of 4 on shard 0 while shard 1 reads busy
+        sr.shard(1).publish_load(8, 8);
+        for _ in 0..4 {
+            let (_, at) = sr.admit(req()).unwrap();
+            assert_eq!(at, 0);
+        }
+        sr.shard(1).publish_load(0, 8);
+        // both shards breach the TTFT SLO: every admission sheds
+        for s in sr.shards() {
+            let m = Arc::new(MetricsRegistry::default());
+            for _ in 0..64 {
+                m.ttft.record(Duration::from_secs(60));
+            }
+            s.publish_metrics(m);
+        }
+        // sessionless work was refused by BOTH shards; the hint backs
+        // off for the emptiest refuser (shard 1, depth 0), because
+        // that is the first queue a retry could land in — shard 0's
+        // backlog of 4 must not inflate it (pre-fix, the fleet-wide
+        // depth gave 50 + 20*4 = 130 here)
+        match sr.admit(req()).unwrap_err() {
+            AdmitError::Overloaded { retry_after_ms } => {
+                assert_eq!(retry_after_ms, 50);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // an affine request is refused by its home ALONE, so the hint
+        // reflects that one shard's backlog of 4
+        let key = (0..100)
+            .map(|i| format!("s{i}"))
+            .find(|k| sr.home_shard(k) == 0)
+            .unwrap();
+        match sr.admit(sreq(&key)).unwrap_err() {
+            AdmitError::Overloaded { retry_after_ms } => {
+                assert_eq!(retry_after_ms, 50 + 20 * 4);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    fn preq(tokens: Vec<i32>) -> GenRequest {
+        let mut r = GenRequest::greedy(0, tokens, 4, Mode::Full);
+        r.id = 0;
+        r
+    }
+
+    #[test]
+    fn prefix_affine_requests_follow_their_cache_shard() {
+        let sr = ShardRouter::new(2, 64, 128)
+            .with_prefix_block(Some(4));
+        let shared: Vec<i32> = vec![1, 2, 3, 4]; // one full block
+        let mut turn1 = shared.clone();
+        turn1.extend([9, 9, 9]);
+        // cold admission places least-loaded (shard 0) and records the
+        // opening block in the directory
+        let (_, cold) = sr.admit(preq(turn1)).unwrap();
+        assert_eq!(cold, 0);
+        // shard 0 is now busier, but a prompt sharing the opening
+        // block still prefers it — that is where the cached KV lives
+        sr.shard(0).publish_load(3, 4);
+        let mut turn2 = shared.clone();
+        turn2.extend([7, 7, 7, 7, 7]);
+        assert_eq!(sr.place(&preq(turn2.clone())), Some(0));
+        let (_, at) = sr.admit(preq(turn2)).unwrap();
+        assert_eq!(at, 0, "prefix affinity beats least-loaded");
+        assert_eq!(sr.shard(0).router.len(), 2,
+                   "pinned work stays on its cache shard");
+        // a different opening block is not pinned: least-loaded wins
+        let (_, other) = sr.admit(preq(vec![5; 6])).unwrap();
+        assert_eq!(other, 1);
+        // a prompt of exactly one block can never splice a strict
+        // prefix, so it is never pinned either
+        assert_eq!(sr.place(&preq(shared)), Some(1));
+    }
+
+    #[test]
+    fn stealing_skips_prefix_pinned_requests() {
+        let sr = ShardRouter::new(2, 64, 128)
+            .with_prefix_block(Some(4));
+        // pin shard 1 busy so both requests queue on shard 0
+        sr.shard(1).publish_load(8, 8);
+        let (pid, at) = sr.admit(preq(vec![1, 2, 3, 4, 9, 9])).unwrap();
+        assert_eq!(at, 0);
+        let (uid, at) = sr.admit(preq(vec![8, 8])).unwrap();
+        assert_eq!(at, 0);
+        // shard 1 goes idle: the steal takes the unpinned request and
+        // leaves the prefix-pinned one with its cached KV
+        sr.shard(1).publish_load(0, 8);
+        assert_eq!(sr.rebalance(), 1);
+        let moved = sr.shard(1).router.steal_newest(|_| true).unwrap();
+        assert_eq!(moved.id, uid, "short prompt is fair game");
+        let stayed = sr.shard(0).router.steal_newest(|_| true).unwrap();
+        assert_eq!(stayed.id, pid, "pinned request stays put");
     }
 
     #[test]

@@ -24,8 +24,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::prefix_cache::PrefixKey;
 use crate::coordinator::selection::LayerStats;
-use crate::coordinator::types::Mode;
+use crate::coordinator::types::{CacheInfo, Mode};
 use crate::coordinator::sequence::Sequence;
 use crate::sampling::{DeviceSampler, Sampler};
 
@@ -64,6 +65,14 @@ pub struct SlotEntry {
     /// (response provenance + the per-slot acceptance-rate histogram)
     pub spec_proposed: u64,
     pub spec_accepted: u64,
+    /// prefix-cache entry this slot's KV state was seeded from: the
+    /// scheduler holds the entry's ref for the slot's whole lifetime
+    /// (eviction must never drop tensors a live admission chain used)
+    /// and releases it at retirement
+    pub cache_ref: Option<PrefixKey>,
+    /// prefix-cache provenance threaded into the final response's v2
+    /// `cache` object (set by cache-aware chunked admissions)
+    pub cache_info: Option<CacheInfo>,
 }
 
 impl SlotEntry {
@@ -83,6 +92,8 @@ impl SlotEntry {
             select_ms: 0.0,
             spec_proposed: 0,
             spec_accepted: 0,
+            cache_ref: None,
+            cache_info: None,
         }
     }
 

@@ -149,6 +149,20 @@ pub struct SpecInfo {
     pub accepted: u64,
 }
 
+/// Prefix-cache provenance (surfaced as the v2 response `cache`
+/// object): how much of the prompt the admission restored from the
+/// device-resident prefix cache instead of prefilling. Present exactly
+/// when the request was admitted through the cache-aware chunked path
+/// (`hit: false` = cold, the prefix was computed and published);
+/// `None` when the request never consulted the cache.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheInfo {
+    /// prompt tokens restored from a cached prefix (0 on a miss)
+    pub prefix_tokens: usize,
+    /// whether admission hit the cache
+    pub hit: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
@@ -166,6 +180,9 @@ pub struct GenResponse {
     /// speculative-decoding provenance (v2 `speculative` object); None
     /// when the request never opted in
     pub speculative: Option<SpecInfo>,
+    /// prefix-cache provenance (v2 `cache` object); None when the
+    /// request was admitted outside the cache-aware chunked path
+    pub cache: Option<CacheInfo>,
     pub prefill_ms: f64,
     pub select_ms: f64,
     pub decode_ms: f64,

@@ -204,7 +204,33 @@ fn main() -> Result<()> {
                           griffin::experiments::common::available_configs());
                 }
                 let manifest = griffin::config::Manifest::load(&dir)?;
-                let max_prompt = manifest.config.max_seq;
+                // admission prompt cap, mirroring the scheduler's
+                // policy: the full compiled context when the manifest
+                // ships positioned prefills AND the prefix cache is on
+                // (over-bucket prompts ride the chunked path), else the
+                // largest single-dispatch prefill bucket — past which
+                // admission rejects instead of snapping to a bucket
+                let max_seq = manifest.config.max_seq;
+                let single_cap = manifest
+                    .executables
+                    .values()
+                    .filter(|e| {
+                        e.kind == "prefill" || e.kind == "prefill_sample"
+                    })
+                    .filter_map(|e| e.seq)
+                    .max()
+                    .unwrap_or(max_seq)
+                    .min(max_seq);
+                let chunkable = manifest.executables.values().any(|e| {
+                    e.kind == "prefill_sample_positioned"
+                });
+                let cache_on =
+                    griffin::server::prefix_cache_budget().is_some();
+                let max_prompt = if cache_on && chunkable {
+                    max_seq
+                } else {
+                    single_cap
+                };
                 let trained = manifest.trained_weights_file.is_some()
                     && !args.flag("random-weights");
                 let factory: griffin::server::EngineFactory =

@@ -290,6 +290,24 @@ pub struct MetricsRegistry {
     pub spec_acceptance_pct: Histogram,
     /// latency of the verify_b{B}_s{D} full-model dispatch
     pub verify_latency: Histogram,
+    /// prefix cache: admissions whose prompt matched a cached
+    /// block-aligned prefix (the KV rows + flocking statistics were
+    /// spliced from the cache instead of prefilled)
+    pub prefix_cache_hits: Counter,
+    /// cache-consulting admissions that found no usable prefix
+    pub prefix_cache_misses: Counter,
+    /// block-aligned prefix snapshots published into the cache
+    pub prefix_cache_inserts: Counter,
+    /// entries dropped by the byte-budget LRU (never a live-ref entry)
+    pub prefix_cache_evictions: Counter,
+    /// prompt tokens restored from cached prefixes (not prefilled —
+    /// compare against `prompt_tokens`, which counts only real prefill)
+    pub prefix_tokens_reused: Counter,
+    /// prefill FLOP-traffic proxy actually avoided: token bytes of the
+    /// reused prefixes that never crossed the host boundary again
+    pub prefix_bytes_saved: Counter,
+    /// payload bytes currently resident in the prefix cache
+    pub prefix_cache_bytes: Gauge,
     pub slots_busy: Gauge,
     pub slots_total: Gauge,
     pub tokens_generated: Meter,
@@ -342,6 +360,16 @@ impl MetricsRegistry {
         self.draft_tokens_accepted.add(other.draft_tokens_accepted.get());
         self.spec_acceptance_pct.absorb(&other.spec_acceptance_pct);
         self.verify_latency.absorb(&other.verify_latency);
+        self.prefix_cache_hits.add(other.prefix_cache_hits.get());
+        self.prefix_cache_misses.add(other.prefix_cache_misses.get());
+        self.prefix_cache_inserts.add(other.prefix_cache_inserts.get());
+        self.prefix_cache_evictions
+            .add(other.prefix_cache_evictions.get());
+        self.prefix_tokens_reused.add(other.prefix_tokens_reused.get());
+        self.prefix_bytes_saved.add(other.prefix_bytes_saved.get());
+        self.prefix_cache_bytes.set(
+            self.prefix_cache_bytes.get() + other.prefix_cache_bytes.get(),
+        );
         self.slots_busy
             .set(self.slots_busy.get() + other.slots_busy.get());
         self.slots_total
@@ -463,6 +491,30 @@ impl MetricsRegistry {
                     ("verify_latency", hist(&self.verify_latency)),
                 ]),
             ),
+            (
+                "prefix_cache",
+                obj(vec![
+                    ("hits", n(self.prefix_cache_hits.get() as f64)),
+                    ("misses", n(self.prefix_cache_misses.get() as f64)),
+                    ("inserts", n(self.prefix_cache_inserts.get() as f64)),
+                    (
+                        "evictions",
+                        n(self.prefix_cache_evictions.get() as f64),
+                    ),
+                    (
+                        "prefix_tokens_reused",
+                        n(self.prefix_tokens_reused.get() as f64),
+                    ),
+                    (
+                        "bytes_saved",
+                        n(self.prefix_bytes_saved.get() as f64),
+                    ),
+                    (
+                        "resident_bytes",
+                        n(self.prefix_cache_bytes.get() as f64),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -572,6 +624,18 @@ mod tests {
         assert!(spec.get("draft_tokens_accepted").is_some());
         assert!(spec.get("acceptance_pct").unwrap().get("p99_us").is_some());
         assert!(spec.get("verify_latency").is_some());
+        let pc = v.get("prefix_cache").unwrap();
+        for key in [
+            "hits",
+            "misses",
+            "inserts",
+            "evictions",
+            "prefix_tokens_reused",
+            "bytes_saved",
+            "resident_bytes",
+        ] {
+            assert!(pc.get(key).is_some(), "prefix_cache.{key} missing");
+        }
         assert!(v
             .get("throughput")
             .unwrap()
@@ -598,6 +662,10 @@ mod tests {
         b.slots_busy.set(2);
         a.tokens_generated.add(30);
         b.tokens_generated.add(70);
+        a.prefix_cache_hits.add(2);
+        b.prefix_cache_hits.add(3);
+        a.prefix_cache_bytes.set(100);
+        b.prefix_cache_bytes.set(200);
         a.absorb(&b);
         assert_eq!(a.ttft.count(), 5);
         assert_eq!(a.ttft.max_us(), 20_000);
@@ -608,6 +676,9 @@ mod tests {
         assert_eq!(a.requests_completed.get(), 5);
         assert_eq!(a.slots_busy.get(), 3, "gauges sum across shards");
         assert_eq!(a.tokens_generated.total(), 100);
+        assert_eq!(a.prefix_cache_hits.get(), 5);
+        assert_eq!(a.prefix_cache_bytes.get(), 300,
+                   "resident bytes sum like slot gauges");
         // b is read-only under absorb
         assert_eq!(b.ttft.count(), 2);
     }

@@ -45,7 +45,7 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::{
     check_args, dtype_of, Buffer, DeviceTensor, DispatchPlan, HostData,
@@ -279,6 +279,40 @@ pub fn reference_manifest() -> Manifest {
             add(exe(format!("prefill_sample_b{b}_s{s}"), "prefill_sample",
                     Some(b), Some(s), None, Some(CPU_SAMPLE_TOPK), None,
                     inputs, outputs));
+
+            // positioned/chunked admission prefill (prefix-cache tail
+            // fill): B=1 only — the scheduler runs chunked admissions
+            // one request at a time on a b=1 scratch state. Caches come
+            // IN (rows [0, start) resident) and statistics are running
+            // pre-sqrt sums threaded through the chunk chain.
+            if b == 1 {
+                let mut inputs = param_ios();
+                inputs.extend([
+                    io("kcache", &cache_shape(1), "f32"),
+                    io("vcache", &cache_shape(1), "f32"),
+                    io("stats_in", &[l, 1, f], "f32"),
+                    io("xnorms_in", &[l, 1, d], "f32"),
+                    io("znorms_in", &[l, 1, f], "f32"),
+                    io("tokens", &[1, s], "i32"),
+                    io("lengths", &[1], "i32"),
+                    io("start", &[1], "i32"),
+                ]);
+                inputs.extend(sampling_ios(1));
+                let outputs = vec![
+                    io("token", &[1], "i32"),
+                    io("logprob", &[1], "f32"),
+                    io("kcache", &cache_shape(1), "f32"),
+                    io("vcache", &cache_shape(1), "f32"),
+                    io("stats", &[l, 1, f], "f32"),
+                    io("xnorms", &[l, 1, d], "f32"),
+                    io("znorms", &[l, 1, f], "f32"),
+                    io("rng", &[1], "i32"),
+                ];
+                add(exe(format!("prefill_sample_b1_s{s}_p"),
+                        "prefill_sample_positioned", Some(1), Some(s),
+                        None, Some(CPU_SAMPLE_TOPK), None, inputs,
+                        outputs));
+            }
         }
 
         let kv_tail = vec![
@@ -1001,6 +1035,137 @@ fn prefill_body(p: &Params, ff: &FfWeights, tokens: &[i32], lens: &[i32],
     PrefillOutputs { x, kcache, vcache, stats, xnorms, znorms }
 }
 
+struct PositionedOutputs {
+    /// pre-final-norm hidden states of the chunk rows [S, D]
+    x: Vec<f32>,
+    kcache: Vec<f32>,
+    vcache: Vec<f32>,
+    /// running PRE-SQRT statistic sums [L, 1, F] / [L, 1, D] / [L, 1, F]
+    stats: Vec<f32>,
+    xnorms: Vec<f32>,
+    znorms: Vec<f32>,
+}
+
+/// Positioned chunk trunk of `prefill_sample_positioned` (model.py
+/// counterpart): fill rows [start, start+S) of a b=1 cache whose rows
+/// [0, start) are already resident (cached prefix or earlier chunks of
+/// the same admission). RoPE runs at the absolute position start + t
+/// and attention masks kpos <= start + t, so chunk rows attend the
+/// resident prefix plus earlier chunk rows. Statistics are RUNNING
+/// pre-sqrt sums: the incoming accumulators cover rows [0, start) and
+/// the outputs extend them over this chunk's `len` valid rows, in row
+/// order — the caller's final elementwise sqrt therefore reproduces
+/// `prefill_body`'s single-shot statistics bit-for-bit (same addition
+/// sequence, sqrt merely deferred).
+fn prefill_positioned_body(p: &Params, ff: &FfWeights, kcache0: &[f32],
+                           vcache0: &[f32], stats0: &[f32],
+                           xnorms0: &[f32], znorms0: &[f32],
+                           tokens: &[i32], len: usize, start: usize,
+                           s: usize) -> PositionedOutputs {
+    let (d, l_n, f) = (D_MODEL, N_LAYERS, ff.max_width());
+    let mut kcache = kcache0.to_vec();
+    let mut vcache = vcache0.to_vec();
+    let mut stats = stats0.to_vec();
+    let mut xnorms = xnorms0.to_vec();
+    let mut znorms = znorms0.to_vec();
+    let mut x = vec![0f32; s * d];
+    for t in 0..s {
+        let tok = tokens[t].clamp(0, VOCAB as i32 - 1) as usize;
+        x[t * d..(t + 1) * d]
+            .copy_from_slice(&p.tok_emb[tok * d..(tok + 1) * d]);
+    }
+
+    let mut h = vec![0f32; d];
+    let mut q = vec![0f32; d];
+    let mut k = vec![0f32; d];
+    let mut v = vec![0f32; d];
+    let mut attn = vec![0f32; d];
+    let mut head_out = vec![0f32; HEAD_DIM];
+    let mut z = vec![0f32; f];
+    let mut ql = vec![0f32; N_HEADS * s * HEAD_DIM];
+
+    for l in 0..l_n {
+        let ln1 = &p.ln1[l * d..(l + 1) * d];
+        let ln2 = &p.ln2[l * d..(l + 1) * d];
+        let wq = &p.wq[l * d * d..(l + 1) * d * d];
+        let wk = &p.wk[l * d * d..(l + 1) * d * d];
+        let wv = &p.wv[l * d * d..(l + 1) * d * d];
+        let wo = &p.wo[l * d * d..(l + 1) * d * d];
+        // project + rope at ABSOLUTE positions; write K/V straight into
+        // the cache rows (dynamic_update_slice semantics: clamped)
+        for t in 0..s {
+            let xr = &x[t * d..(t + 1) * d];
+            rmsnorm(xr, ln1, &mut h);
+            matvec_t(wq, d, d, &h, &mut q);
+            matvec_t(wk, d, d, &h, &mut k);
+            matvec_t(wv, d, d, &h, &mut v);
+            let wpos = (start + t).min(MAX_SEQ - 1);
+            for hd in 0..N_HEADS {
+                let span = hd * HEAD_DIM..(hd + 1) * HEAD_DIM;
+                rope(&mut q[span.clone()], (start + t) as i32);
+                rope(&mut k[span.clone()], (start + t) as i32);
+                let base = (l * N_HEADS + hd) * MAX_SEQ * HEAD_DIM;
+                let dst = base + wpos * HEAD_DIM;
+                kcache[dst..dst + HEAD_DIM]
+                    .copy_from_slice(&k[span.clone()]);
+                vcache[dst..dst + HEAD_DIM]
+                    .copy_from_slice(&v[span.clone()]);
+                ql[(hd * s + t) * HEAD_DIM..(hd * s + t + 1) * HEAD_DIM]
+                    .copy_from_slice(&q[span]);
+            }
+        }
+        // attend over the resident prefix + this chunk's earlier rows
+        for t in 0..s {
+            let last = (start + t).min(MAX_SEQ - 1);
+            for hd in 0..N_HEADS {
+                let base = (l * N_HEADS + hd) * MAX_SEQ * HEAD_DIM;
+                let qrow = &ql[(hd * s + t) * HEAD_DIM
+                    ..(hd * s + t + 1) * HEAD_DIM];
+                attend_cache(
+                    qrow,
+                    &kcache[base..base + MAX_SEQ * HEAD_DIM],
+                    &vcache[base..base + MAX_SEQ * HEAD_DIM],
+                    last,
+                    &mut head_out,
+                );
+                attn[hd * HEAD_DIM..(hd + 1) * HEAD_DIM]
+                    .copy_from_slice(&head_out);
+            }
+            matvec_t(wo, d, d, &attn, &mut h);
+            let xr = &mut x[t * d..(t + 1) * d];
+            for i in 0..d {
+                xr[i] += h[i];
+            }
+        }
+        // FF + running statistics over this chunk's valid rows (no
+        // sqrt — the accumulators stay pre-sqrt across the chain)
+        let valid = len.max(1).min(s);
+        let st = &mut stats[l * f..(l + 1) * f];
+        let xn = &mut xnorms[l * d..(l + 1) * d];
+        let zn = &mut znorms[l * f..(l + 1) * f];
+        for t in 0..s {
+            let xr = &x[t * d..(t + 1) * d];
+            rmsnorm(xr, ln2, &mut h);
+            ff_activation(ff, l, &h, &mut z);
+            if t < valid {
+                let zn_row = z.iter().map(|a| a * a).sum::<f32>().sqrt();
+                let denom = zn_row.max(1e-8);
+                for j in 0..f {
+                    let rel = z[j] / denom;
+                    st[j] += rel * rel;
+                    zn[j] += z[j] * z[j];
+                }
+                for i in 0..d {
+                    xn[i] += h[i] * h[i];
+                }
+            }
+            let xr = &mut x[t * d..(t + 1) * d];
+            ff_project(ff, l, &z, xr);
+        }
+    }
+    PositionedOutputs { x, kcache, vcache, stats, xnorms, znorms }
+}
+
 /// Final norm + LM head over one hidden row.
 fn lm_head_row(p: &Params, xr: &[f32]) -> Vec<f32> {
     let mut normed = vec![0f32; D_MODEL];
@@ -1084,6 +1249,9 @@ impl CpuSession {
         let a = Args { spec, args };
         match spec.kind.as_str() {
             "prefill" | "prefill_sample" => self.interp_prefill(spec, &a),
+            "prefill_sample_positioned" => {
+                self.interp_prefill_positioned(spec, &a)
+            }
             "decode" | "decode_pruned" | "decode_sample"
             | "decode_pruned_sample" | "decode_pruned_ragged"
             | "decode_pruned_ragged_sample" => {
@@ -1165,6 +1333,46 @@ impl CpuSession {
                 HostData::I32(rng_out),
             ])
         }
+    }
+
+    fn interp_prefill_positioned(&self, spec: &ExecutableSpec, a: &Args)
+                                 -> Result<Vec<HostData>> {
+        let b = spec.batch.context("positioned prefill without batch")?;
+        ensure!(b == 1, "{}: positioned prefill is b=1 only", spec.name);
+        let s = spec.seq.context("positioned prefill without seq")?;
+        let p = Params::from(a)?;
+        let ff = self.full_ff(a)?;
+        let tokens = a.i32("tokens")?;
+        let lens = a.i32("lengths")?;
+        let start = a.i32("start")?[0].max(0) as usize;
+        let len = lens[0].max(0) as usize;
+        let out = prefill_positioned_body(
+            &p, &ff,
+            a.f32("kcache")?, a.f32("vcache")?,
+            a.f32("stats_in")?, a.f32("xnorms_in")?, a.f32("znorms_in")?,
+            tokens, len, start, s,
+        );
+        // sample over the chunk's last valid row (the prompt's final
+        // row when this is the admission chain's final chunk)
+        let temp = a.f32("temp")?;
+        let topk = a.i32("topk")?;
+        let rng = a.i32("rng")?;
+        let last = ((lens[0] - 1).max(0) as usize).min(s - 1);
+        let xr = &out.x[last * D_MODEL..(last + 1) * D_MODEL];
+        let logits = lm_head_row(&p, xr);
+        let mut lanes = LaneScratch::default();
+        let (t, lp, ns) = lanes.lane(&logits, temp[0], topk[0],
+                                     rng[0] as u32);
+        Ok(vec![
+            HostData::I32(vec![t]),
+            HostData::F32(vec![lp]),
+            HostData::F32(out.kcache),
+            HostData::F32(out.vcache),
+            HostData::F32(out.stats),
+            HostData::F32(out.xnorms),
+            HostData::F32(out.znorms),
+            HostData::I32(vec![ns as i32]),
+        ])
     }
 
     fn interp_decode(&self, spec: &ExecutableSpec, a: &Args)
@@ -1694,6 +1902,7 @@ mod tests {
         // the full serving zoo resolves by name
         for name in [
             "prefill_b1_s16", "prefill_b4_s32", "prefill_sample_b2_s16",
+            "prefill_sample_b1_s16_p", "prefill_sample_b1_s32_p",
             "decode_b4", "decode_sample_b1", "decode_pruned_b1_k8",
             "decode_pruned_sample_b4_k16", "splice_b1_b4", "splice_b4_b4",
             "gather_k24", "gather_masked_k16", "verify_b1_s4",
@@ -1993,6 +2202,103 @@ mod tests {
         }
         assert_eq!(vout[1].to_f32().unwrap(), dk.to_f32().unwrap());
         assert_eq!(vout[2].to_f32().unwrap(), dv.to_f32().unwrap());
+    }
+
+    #[test]
+    fn positioned_chunks_match_single_shot_prefill_bitwise() {
+        // Chunking a prompt through prefill_sample_b1_s16_p (16 + 16,
+        // running pre-sqrt stat sums threaded between chunks) must
+        // reproduce the single-shot prefill_sample_b1_s32 dispatch
+        // bit-for-bit: same first token / logprob / rng, same caches,
+        // and sqrt(running sums) == the single-shot sqrt'ed stats —
+        // the property warm-hit and chunked admission rest on.
+        let s = CpuSession::new();
+        let w = reference_weights(0);
+        let m = reference_manifest();
+        let params: Vec<DeviceTensor> = m
+            .param_order
+            .iter()
+            .map(|n| s.upload_tensor(&w[n]).unwrap())
+            .collect();
+        let n = 32usize;
+        let prompt: Vec<i32> =
+            (0..n as i32).map(|i| (i * 37 + 11) % VOCAB as i32).collect();
+
+        // single-shot reference
+        let tokens = s.upload_i32(&[1, n], &prompt).unwrap();
+        let lens = s.upload_i32(&[1], &[n as i32]).unwrap();
+        let temp = s.upload_f32(&[1], &[0.8]).unwrap();
+        let topk = s.upload_i32(&[1], &[8]).unwrap();
+        let rng = s.upload_i32(&[1], &[0x1234_5678]).unwrap();
+        let mut args: Vec<&DeviceTensor> = params.iter().collect();
+        args.extend([&tokens, &lens, &temp, &topk, &rng]);
+        let single = s.run("prefill_sample_b1_s32", &args).unwrap();
+
+        // chunked: 16-token chunks from a zero cache / zero sums
+        let row = N_LAYERS * N_HEADS * MAX_SEQ * HEAD_DIM;
+        let mut kc = s.upload_f32(&cache_shape(1), &vec![0f32; row])
+            .unwrap();
+        let mut vc = s.upload_f32(&cache_shape(1), &vec![0f32; row])
+            .unwrap();
+        let mut st = s
+            .upload_f32(&[N_LAYERS, 1, D_FF], &vec![0f32; N_LAYERS * D_FF])
+            .unwrap();
+        let mut xn = s
+            .upload_f32(&[N_LAYERS, 1, D_MODEL],
+                        &vec![0f32; N_LAYERS * D_MODEL])
+            .unwrap();
+        let mut zn = s
+            .upload_f32(&[N_LAYERS, 1, D_FF], &vec![0f32; N_LAYERS * D_FF])
+            .unwrap();
+        let mut final_out = None;
+        for (ci, chunk) in prompt.chunks(16).enumerate() {
+            let start = ci * 16;
+            let is_final = start + 16 >= n;
+            let ct = s.upload_i32(&[1, 16], chunk).unwrap();
+            let cl = s.upload_i32(&[1], &[chunk.len() as i32]).unwrap();
+            let cs = s.upload_i32(&[1], &[start as i32]).unwrap();
+            // intermediate chunks carry a dummy rng whose token is
+            // discarded; only the final chunk consumes the real state
+            let crng = if is_final {
+                s.upload_i32(&[1], &[0x1234_5678]).unwrap()
+            } else {
+                s.upload_i32(&[1], &[1]).unwrap()
+            };
+            let mut args: Vec<&DeviceTensor> = params.iter().collect();
+            args.extend([&kc, &vc, &st, &xn, &zn, &ct, &cl, &cs,
+                         &temp, &topk, &crng]);
+            let mut out = s.run("prefill_sample_b1_s16_p", &args)
+                .unwrap();
+            let rng_o = out.pop().unwrap();
+            zn = out.pop().unwrap();
+            xn = out.pop().unwrap();
+            st = out.pop().unwrap();
+            vc = out.pop().unwrap();
+            kc = out.pop().unwrap();
+            if is_final {
+                final_out = Some((out[0].to_i32().unwrap(),
+                                  out[1].to_f32().unwrap(),
+                                  rng_o.to_i32().unwrap()));
+            }
+        }
+        let (tok, lp, rng_o) = final_out.unwrap();
+        assert_eq!(tok, single[0].to_i32().unwrap(), "first token");
+        assert_eq!(lp, single[1].to_f32().unwrap(), "logprob");
+        assert_eq!(rng_o, single[7].to_i32().unwrap(), "rng state");
+        assert_eq!(kc.to_f32().unwrap(), single[2].to_f32().unwrap(),
+                   "kcache");
+        assert_eq!(vc.to_f32().unwrap(), single[3].to_f32().unwrap(),
+                   "vcache");
+        // running sums sqrt to the single-shot statistics exactly
+        for (i, (run, want)) in [(&st, &single[4]), (&xn, &single[5]),
+                                 (&zn, &single[6])]
+        .into_iter()
+        .enumerate()
+        {
+            let got: Vec<f32> = run.to_f32().unwrap().iter()
+                .map(|v| v.sqrt()).collect();
+            assert_eq!(got, want.to_f32().unwrap(), "stat stream {i}");
+        }
     }
 
     #[test]

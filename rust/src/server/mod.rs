@@ -171,6 +171,16 @@ fn send(w: &mut TcpStream, line: &str) -> bool {
     w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
 }
 
+/// Prefix-cache byte budget from `GRIFFIN_PREFIX_CACHE` (bytes of
+/// device-resident cached KV per shard; unset, empty, zero, or
+/// unparsable leaves the cache off). Read once per engine start.
+pub fn prefix_cache_budget() -> Option<u64> {
+    std::env::var("GRIFFIN_PREFIX_CACHE")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&b| b > 0)
+}
+
 fn config_line(engine: &Engine) -> String {
     let c = engine.config();
     json::to_string(&obj(vec![
@@ -212,9 +222,40 @@ pub fn run(engine: Engine, bind: &str, queue_capacity: usize) -> Result<()> {
 /// and fleet rollups are the same code as the sharded server.
 pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
                       -> Result<(ServerHandle, Scheduler, Waiters)> {
-    let max_prompt = engine.config().max_seq;
+    shards_listener(engine, bind, queue_capacity, prefix_cache_budget())
+}
+
+/// [`start_listener`] with an explicit prefix-cache budget (`None` =
+/// off), so tests can exercise the cache without touching the process
+/// environment.
+pub fn start_listener_with_cache(
+    engine: Engine, bind: &str, queue_capacity: usize,
+    cache_budget: Option<u64>,
+) -> Result<(ServerHandle, Scheduler, Waiters)> {
+    shards_listener(engine, bind, queue_capacity, cache_budget)
+}
+
+fn shards_listener(
+    engine: Engine, bind: &str, queue_capacity: usize,
+    cache_budget: Option<u64>,
+) -> Result<(ServerHandle, Scheduler, Waiters)> {
+    // admission capacity: the full compiled context when chunked
+    // prefill can serve over-bucket prompts, else the largest
+    // single-dispatch prefill bucket — past which admission rejects
+    // with a typed `invalid_request` instead of silently snapping the
+    // prompt to a bucket (mirrors `Scheduler::max_prompt_capacity`)
+    let cache_on = cache_budget.is_some() && engine.can_chunk_prefill();
+    let max_seq = engine.config().max_seq;
+    let max_prompt = if cache_on {
+        max_seq
+    } else {
+        engine.single_shot_prompt_cap().unwrap_or(max_seq).min(max_seq)
+    };
     let shards =
         Arc::new(ShardRouter::new(1, queue_capacity, max_prompt));
+    if cache_on {
+        shards.set_prefix_block(engine.chunk_block());
+    }
     shards.shard(0).publish_metrics(engine.metrics.clone());
     let config_json = config_line(&engine);
     let stop = Arc::new(AtomicBool::new(false));
@@ -223,7 +264,11 @@ pub fn start_listener(engine: Engine, bind: &str, queue_capacity: usize)
         bind, shards.clone(), waiters.clone(), config_json, stop.clone())?;
     // engine scheduler runs on the CALLER's thread (device state is not
     // Send); it drains shard 0's queue
-    let scheduler = Scheduler::new(engine, shards.shard(0).router.clone());
+    let mut scheduler =
+        Scheduler::new(engine, shards.shard(0).router.clone());
+    if let Some(b) = cache_budget {
+        scheduler.enable_prefix_cache(b);
+    }
     Ok((
         ServerHandle {
             addr, stop, shards, accept_thread: Some(accept_thread),
@@ -309,7 +354,8 @@ pub fn start_sharded(factory: EngineFactory, n_shards: usize, bind: &str,
         Arc::new(ShardRouter::new(n_shards, queue_capacity, max_prompt));
     let stop = Arc::new(AtomicBool::new(false));
     let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
-    let (ready_tx, ready_rx) = channel::<Result<String, String>>();
+    let (ready_tx, ready_rx) =
+        channel::<Result<(String, Option<usize>), String>>();
     let mut shard_threads = Vec::with_capacity(n_shards);
     for i in 0..n_shards {
         let shard = shards.shard(i).clone();
@@ -330,8 +376,13 @@ pub fn start_sharded(factory: EngineFactory, n_shards: usize, bind: &str,
     let mut failures: Vec<String> = Vec::new();
     for _ in 0..n_shards {
         match ready_rx.recv() {
-            Ok(Ok(cfg)) => {
+            Ok(Ok((cfg, pblock))) => {
                 config_json.get_or_insert(cfg);
+                if pblock.is_some() {
+                    // the engines run a prefix cache: turn on
+                    // prefix-affine placement with their block size
+                    shards.set_prefix_block(pblock);
+                }
             }
             Ok(Err(e)) => failures.push(e),
             Err(_) => break,
@@ -393,7 +444,7 @@ fn shard_thread(
     factory: EngineFactory,
     waiters: Waiters,
     stop: Arc<AtomicBool>,
-    ready_tx: Sender<Result<String, String>>,
+    ready_tx: Sender<Result<(String, Option<usize>), String>>,
 ) {
     // fires once, on the FIRST attempt — start_sharded only waits for
     // initial fleet settlement; respawns are invisible to it
@@ -428,6 +479,9 @@ fn shard_thread(
         shard.publish_metrics(engine.metrics.clone());
         let config_json = config_line(&engine);
         let mut sched = Scheduler::new(engine, shard.router.clone());
+        if let Some(b) = prefix_cache_budget() {
+            sched.enable_prefix_cache(b);
+        }
         let slot_count = sched.slot_count as u64;
         if !shard.is_healthy() {
             // respawn: only rejoin placement once the new engine exists
@@ -435,7 +489,7 @@ fn shard_thread(
         }
         shard.publish_load(0, slot_count);
         if let Some(tx) = ready_tx.take() {
-            let _ = tx.send(Ok(config_json));
+            let _ = tx.send(Ok((config_json, sched.prefix_block())));
         }
         // ids this shard currently owns in its slot pool (first token
         // seen, not yet terminal) — admission emits the first token

@@ -14,7 +14,9 @@
 //! in CI. See docs/testing.md for the test-tier map.
 
 use griffin::api::ErrorCode;
-use griffin::coordinator::engine::{Engine, Mode, PrefillLogits, StatNeeds};
+use griffin::coordinator::engine::{
+    CacheInfo, Engine, Mode, PrefillLogits, StatNeeds,
+};
 use griffin::coordinator::router::Router;
 use griffin::coordinator::scheduler::{EngineEvent, Scheduler};
 use griffin::coordinator::selection::{select_experts_ragged, Strategy};
@@ -2567,6 +2569,399 @@ fn server_v2_batched_score_rows_in_order() {
             .unwrap();
         assert_eq!(bad.get("code").unwrap().as_str(),
                    Some("invalid_request"));
+    });
+
+    scheduler
+        .serve(
+            |ev| griffin::server::forward(&waiters, ev),
+            &|| client_thread.is_finished(),
+        )
+        .unwrap();
+    client_thread.join().unwrap();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// device-resident prefix cache: chunked admission, splice reuse,
+// typed over-bucket rejection, ref-pinned eviction, wire provenance
+// ---------------------------------------------------------------------
+
+/// Deterministic synthetic prompt ids (plain byte tokens, never
+/// BOS/EOS/PAD) long enough to cross several cache blocks regardless of
+/// the corpus helper's length.
+fn block_ids(len: usize, salt: i32) -> Vec<i32> {
+    (0..len as i32).map(|i| 5 + (i * 7 + salt).rem_euclid(250)).collect()
+}
+
+fn cache_sched(budget: u64) -> (std::sync::Arc<Router>, Scheduler) {
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(engine(), router.clone());
+    assert!(sched.enable_prefix_cache(budget),
+            "the reference artifacts ship the positioned prefill family");
+    (router, sched)
+}
+
+/// A fused-eligible seeded sampling request (the chunked machine is
+/// fused-only: the final chunk samples the first token on device).
+fn seeded_req(prompt: Vec<i32>, gen: usize, seed: u64, mode: Mode)
+              -> GenRequest {
+    let mut q = GenRequest::greedy(0, prompt, gen, mode);
+    q.sampler = SamplerSpec::TopK { k: 8, temperature: 0.8 };
+    q.seed = seed;
+    q.stop_at_eos = false;
+    q
+}
+
+/// Tick until fully idle, collecting EVERY event (run_until_idle drops
+/// errors); bounded so a stuck machine fails instead of hanging.
+fn drain(router: &Router, sched: &mut Scheduler) -> Vec<EngineEvent> {
+    let mut events = Vec::new();
+    for _ in 0..10_000 {
+        let mut sink = |ev: EngineEvent| events.push(ev);
+        let worked = sched.tick(&mut sink).unwrap();
+        if !worked && router.is_empty() && sched.occupied() == 0 {
+            return events;
+        }
+    }
+    panic!("scheduler never went idle; events so far: {events:?}");
+}
+
+fn done(events: &[EngineEvent], id: u64)
+        -> griffin::coordinator::engine::GenResponse {
+    events
+        .iter()
+        .find_map(|ev| match ev {
+            EngineEvent::Done(r) if r.id == id => Some(r.clone()),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("no Done for {id}: {events:?}"))
+}
+
+#[test]
+fn prefix_cache_streams_identical_cold_chunked_warm() {
+    // The acceptance pin: one seeded request produces the byte-identical
+    // token stream whether it admits single-shot (cache off), through
+    // the cold chunked machine, or as a warm splice + tail hit — and
+    // GRIFFIN selection (derived from the running pre-sqrt sums on the
+    // chunked routes) agrees too.
+    let prompt = block_ids(24, 1); // block 16 + 8-token tail
+    let mode = Mode::griffin(0.5);
+
+    let router_off = std::sync::Arc::new(Router::new(64, 256));
+    let mut off = Scheduler::new(engine(), router_off.clone());
+    let base_id =
+        router_off.admit(seeded_req(prompt.clone(), 8, 7, mode)).unwrap();
+    let base = done(&drain(&router_off, &mut off), base_id);
+    assert_eq!(base.tokens.len(), 8);
+    assert_eq!(base.cache, None,
+               "cache-off responses carry no cache provenance");
+
+    let (router, mut sched) = cache_sched(1 << 20);
+    let m = sched.engine.metrics.clone();
+    let cold_id =
+        router.admit(seeded_req(prompt.clone(), 8, 7, mode)).unwrap();
+    let cold = done(&drain(&router, &mut sched), cold_id);
+    assert_eq!(cold.cache,
+               Some(CacheInfo { prefix_tokens: 0, hit: false }));
+    assert_eq!(m.prefix_cache_misses.get(), 1);
+    assert_eq!(m.prefix_cache_inserts.get(), 1,
+               "the cold admission publishes its block-aligned snapshot");
+
+    let warm_id =
+        router.admit(seeded_req(prompt.clone(), 8, 7, mode)).unwrap();
+    let warm = done(&drain(&router, &mut sched), warm_id);
+    assert_eq!(warm.cache,
+               Some(CacheInfo { prefix_tokens: 16, hit: true }));
+    assert_eq!(m.prefix_cache_hits.get(), 1);
+    assert_eq!(m.prefix_tokens_reused.get(), 16);
+
+    assert_eq!(cold.tokens, base.tokens,
+               "chunked admission must equal the single-shot stream");
+    assert_eq!(warm.tokens, base.tokens,
+               "warm splice + tail must equal the single-shot stream");
+    assert_eq!(cold.logprobs, base.logprobs);
+    assert_eq!(warm.logprobs, base.logprobs);
+    assert_eq!(cold.k_used, base.k_used,
+               "running-sum selection matches single-shot selection");
+    assert_eq!(warm.k_used, base.k_used);
+}
+
+#[test]
+fn warm_hit_admission_bytes_bounded_by_tail() {
+    // A warm hit must not re-stage anything proportional to the cached
+    // prefix: its admission upload is the tail chunk + splice lanes.
+    let (router, mut sched) = cache_sched(1 << 20);
+    let m = sched.engine.metrics.clone();
+    let prompt = block_ids(48, 9); // 3 blocks: published at 32, tail 16
+
+    let up0 = m.admission_bytes_to_device.get();
+    let cold_id =
+        router.admit(seeded_req(prompt.clone(), 4, 11, Mode::Full))
+              .unwrap();
+    let cold = done(&drain(&router, &mut sched), cold_id);
+    let cold_up = m.admission_bytes_to_device.get() - up0;
+    assert_eq!(cold.cache,
+               Some(CacheInfo { prefix_tokens: 0, hit: false }));
+    assert!(cold_up > 0);
+
+    let up1 = m.admission_bytes_to_device.get();
+    let warm_id =
+        router.admit(seeded_req(prompt.clone(), 4, 11, Mode::Full))
+              .unwrap();
+    let warm = done(&drain(&router, &mut sched), warm_id);
+    let warm_up = m.admission_bytes_to_device.get() - up1;
+    assert_eq!(warm.cache,
+               Some(CacheInfo { prefix_tokens: 32, hit: true }));
+    assert_eq!(warm.tokens, cold.tokens);
+
+    // cold staged 3 positioned chunks, the warm hit exactly one (its
+    // tail) — the prefix rows move device-to-device, never re-uploaded
+    assert!(warm_up * 2 <= cold_up,
+            "warm admission uploaded {warm_up} bytes vs cold {cold_up}");
+    let cfg = sched.engine.config().clone();
+    let kv_one = (cfg.n_layers * cfg.n_heads * cfg.max_seq
+        * cfg.head_dim * 4) as u64;
+    assert!(warm_up < kv_one,
+            "warm admission uploaded {warm_up} bytes; one sequence's \
+             KV cache is {kv_one} — the prefix is being re-staged");
+    assert_eq!(m.prefix_bytes_saved.get(), 32 * 4,
+               "saved bytes = the prefix token staging a cold \
+                admission would have uploaded");
+}
+
+#[test]
+fn over_bucket_prompt_rejects_typed_or_chunk_prefills() {
+    // Satellite pin: a prompt past the largest single-dispatch prefill
+    // bucket (32 on the reference config) must never be silently
+    // snapped to the bucket. Without the chunked path it is rejected at
+    // admission with the typed `invalid_request`; with the cache on a
+    // fused-eligible request rides the chunked machine instead, and a
+    // host-path sampler still gets the typed rejection.
+    let prompt = block_ids(40, 2);
+
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(engine(), router.clone());
+    let m = sched.engine.metrics.clone();
+    let id = router
+        .admit(seeded_req(prompt.clone(), 4, 3, Mode::Full))
+        .unwrap();
+    let events = drain(&router, &mut sched);
+    assert_eq!(events.len(), 1, "{events:?}");
+    let EngineEvent::Error { id: eid, code, message } = &events[0] else {
+        panic!("expected a typed rejection, got {:?}", events[0]);
+    };
+    assert_eq!(*eid, id);
+    assert_eq!(*code, ErrorCode::InvalidRequest);
+    assert!(message.contains("32"),
+            "the rejection names the bucket cap: {message}");
+    assert_eq!(m.requests_rejected.get(), 1);
+
+    let (router2, mut sched2) = cache_sched(1 << 20);
+    let served_id = router2
+        .admit(seeded_req(prompt.clone(), 4, 3, Mode::Full))
+        .unwrap();
+    let r = done(&drain(&router2, &mut sched2), served_id);
+    assert_eq!(r.tokens.len(), 4,
+               "the same prompt chunk-prefills once the cache is on");
+    assert_eq!(r.cache, Some(CacheInfo { prefix_tokens: 0, hit: false }));
+
+    // temperature-only sampling is host-path (not fused-eligible), so
+    // it cannot chunk: typed rejection even with the cache enabled
+    let mut q = GenRequest::greedy(0, prompt, 4, Mode::Full);
+    q.sampler = SamplerSpec::Temperature(0.7);
+    q.stop_at_eos = false;
+    let host_id = router2.admit(q).unwrap();
+    let events = drain(&router2, &mut sched2);
+    let EngineEvent::Error { id: eid, code, .. } = &events[0] else {
+        panic!("expected a typed rejection, got {:?}", events[0]);
+    };
+    assert_eq!(*eid, host_id);
+    assert_eq!(*code, ErrorCode::InvalidRequest);
+}
+
+#[test]
+fn splice_fault_mid_hit_releases_ref_and_entry_survives() {
+    // FaultPlan on the chunked machine's device splice, firing on a
+    // warm hit: the failing request drains with a typed engine_error,
+    // its cache ref is released (the entry survives and keeps hitting),
+    // and a co-tenant mid-stream decode is untouched.
+    use griffin::runtime::cpu::{FaultKind, FaultPlan};
+    // splice dispatches: A cold (#1), D cold (#2), B warm (#3 — fires),
+    // C warm (#4)
+    let plan = FaultPlan::new("splice_b1", 3, FaultKind::Error);
+    let e = Engine::from_substrate(
+        Box::new(cpu::FaultySession::new(CpuSession::new(), plan.clone())),
+        false,
+    )
+    .unwrap();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    assert!(sched.enable_prefix_cache(1 << 20));
+    let m = sched.engine.metrics.clone();
+
+    let pa = block_ids(24, 5);
+    let pd = block_ids(20, 6); // different opening block: its own entry
+
+    let a_id = router
+        .admit(seeded_req(pa.clone(), 4, 13, Mode::Full))
+        .unwrap();
+    let a = done(&drain(&router, &mut sched), a_id);
+    assert_eq!(a.tokens.len(), 4);
+
+    // D admits first (cold, long decode) and is mid-stream when B's
+    // warm-hit splice faults; C (identical to A) follows and still hits
+    let d_id = router
+        .admit(seeded_req(pd, 32, 17, Mode::Full))
+        .unwrap();
+    let b_id = router
+        .admit(seeded_req(pa.clone(), 4, 13, Mode::Full))
+        .unwrap();
+    let c_id = router
+        .admit(seeded_req(pa.clone(), 4, 13, Mode::Full))
+        .unwrap();
+    let events = drain(&router, &mut sched);
+
+    assert!(plan.has_fired(), "the injected splice fault fired");
+    let berr = events
+        .iter()
+        .find_map(|ev| match ev {
+            EngineEvent::Error { id, code, message } if *id == b_id => {
+                Some((*code, message.clone()))
+            }
+            _ => None,
+        })
+        .expect("the faulted warm hit drains with an error");
+    assert_eq!(berr.0, ErrorCode::EngineError);
+    assert!(berr.1.contains("injected fault"), "{}", berr.1);
+
+    let d = done(&events, d_id);
+    assert_eq!(d.tokens.len(), 32,
+               "the mid-stream co-tenant is untouched by the fault");
+    let c = done(&events, c_id);
+    assert_eq!(c.tokens, a.tokens,
+               "after the faulted splice the identical prompt still \
+                hits and streams identically");
+    assert_eq!(c.cache, Some(CacheInfo { prefix_tokens: 16, hit: true }));
+    assert_eq!(m.prefix_cache_hits.get(), 2, "B and C both hit");
+    assert_eq!(m.prefix_cache_evictions.get(), 0,
+               "the released ref never turned into an eviction");
+    assert_eq!(sched.occupied(), 0, "no slot leaked");
+}
+
+#[test]
+fn live_slot_ref_pins_prefix_entry_under_pressure() {
+    // Eviction-under-pressure, end to end: while a slot is decoding
+    // from a spliced/published entry (holding its ref), a second cold
+    // admission's publish finds no room — the ref-pinned entry is NEVER
+    // evicted for it — and the entry keeps hitting afterwards.
+    let e = engine();
+    let payload = e.new_chunk_state().unwrap().payload_bytes();
+    let router = std::sync::Arc::new(Router::new(64, 256));
+    let mut sched = Scheduler::new(e, router.clone());
+    // room for exactly one entry
+    assert!(sched.enable_prefix_cache(payload + payload / 2));
+    let m = sched.engine.metrics.clone();
+
+    let pa = block_ids(48, 3);
+    let pb = block_ids(48, 4);
+
+    // A: long decode — its slot holds the cold-published entry's ref
+    let a_id = router
+        .admit(seeded_req(pa.clone(), 24, 5, Mode::Full))
+        .unwrap();
+    let mut events = Vec::new();
+    for _ in 0..100 {
+        if m.prefix_cache_inserts.get() == 1 && sched.occupied() == 1 {
+            break;
+        }
+        let mut sink = |ev: EngineEvent| events.push(ev);
+        sched.tick(&mut sink).unwrap();
+    }
+    assert_eq!(sched.occupied(), 1, "A reached its slot: {events:?}");
+    assert_eq!(m.prefix_cache_bytes.get(), payload);
+
+    // B: completes while A's slot is live; its publish cannot make room
+    let b_id = router
+        .admit(seeded_req(pb, 2, 6, Mode::Full))
+        .unwrap();
+    let mut rest = drain(&router, &mut sched);
+    events.append(&mut rest);
+    assert_eq!(done(&events, b_id).tokens.len(), 2);
+    assert_eq!(done(&events, a_id).tokens.len(), 24);
+    assert_eq!(m.prefix_cache_inserts.get(), 1,
+               "no room for B's snapshot while A's entry is ref-pinned");
+    assert_eq!(m.prefix_cache_evictions.get(), 0,
+               "a referenced entry is never evicted");
+    assert_eq!(m.prefix_cache_bytes.get(), payload);
+
+    // C: A's entry survived the pressure — the identical prompt hits
+    let c_id = router
+        .admit(seeded_req(pa, 2, 7, Mode::Full))
+        .unwrap();
+    let c = done(&drain(&router, &mut sched), c_id);
+    assert_eq!(c.cache, Some(CacheInfo { prefix_tokens: 32, hit: true }));
+    assert_eq!(m.prefix_cache_hits.get(), 1);
+}
+
+#[test]
+fn server_prefix_cache_provenance_and_metrics_over_the_wire() {
+    // The wire view of the tentpole: v2 responses carry the `cache`
+    // provenance object (miss then hit with identical seeded tokens)
+    // and the metrics op surfaces the `prefix_cache` group.
+    let e = engine();
+    let (handle, mut scheduler, waiters) =
+        griffin::server::start_listener_with_cache(
+            e, "127.0.0.1:0", 16, Some(1 << 20))
+        .unwrap();
+    let addr = handle.addr.to_string();
+
+    let client_thread = std::thread::spawn(move || {
+        use griffin::json::{n, obj, s, Value};
+        let mut c = griffin::server::Client::connect(&addr).unwrap();
+        let gen = |c: &mut griffin::server::Client| {
+            c.call(&obj(vec![
+                ("v", n(2.0)),
+                ("op", s("generate")),
+                ("prompt", s("the quiet river joins the deep lake")),
+                ("max_new_tokens", n(4.0)),
+                ("stop_at_eos", Value::Bool(false)),
+                (
+                    "sampling",
+                    obj(vec![
+                        ("temperature", n(0.8)),
+                        ("top_k", n(4.0)),
+                        ("seed", n(7.0)),
+                    ]),
+                ),
+            ]))
+            .unwrap()
+        };
+        let cold = gen(&mut c);
+        let cc = cold.get("cache").expect("v2 carries cache provenance");
+        assert_eq!(cc.get("hit"), Some(&Value::Bool(false)));
+        assert_eq!(cc.get("prefix_tokens").unwrap().as_usize(), Some(0));
+
+        let warm = gen(&mut c);
+        let wc = warm.get("cache").unwrap();
+        assert_eq!(wc.get("hit"), Some(&Value::Bool(true)));
+        assert!(
+            wc.get("prefix_tokens").unwrap().as_usize().unwrap() >= 16,
+            "{warm:?}"
+        );
+        assert_eq!(warm.get("tokens"), cold.get("tokens"),
+                   "seeded streams identical cold vs warm on the wire");
+
+        let met = c
+            .call(&obj(vec![("v", n(2.0)), ("op", s("metrics"))]))
+            .unwrap();
+        let pc = met
+            .get("prefix_cache")
+            .expect("metrics surface the prefix_cache group");
+        assert_eq!(pc.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(pc.get("misses").unwrap().as_usize(), Some(1));
+        assert!(
+            pc.get("resident_bytes").unwrap().as_f64().unwrap() > 0.0
+        );
     });
 
     scheduler
